@@ -1,0 +1,73 @@
+//! Full PTQ pipeline on one stand-in LLM: train → calibrate → quantize
+//! (RTN direct-cast vs HiGPTQ) → evaluate — a single-model slice of the
+//! Table III experiment with per-stage commentary.
+//!
+//! ```bash
+//! cargo run --release --example ptq_pipeline -- [--steps 260] [--items 60]
+//! ```
+
+use hif4::eval::tasks::Task;
+use hif4::quant::experiment::{self, ExperimentConfig, QuantType};
+use hif4::model::zoo;
+use hif4::util::bench::Table;
+use hif4::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let xcfg = ExperimentConfig {
+        train_steps: args.get_parse("steps", 260),
+        eval_items: args.get_parse("items", 60),
+        ..Default::default()
+    };
+
+    let cfg = zoo::llama3_tiny();
+    println!(
+        "model: {} ({} params) — training {} steps on the synthetic corpus",
+        cfg.name,
+        cfg.param_count(),
+        xcfg.train_steps
+    );
+
+    let suite = Task::small_suite();
+    let t0 = std::time::Instant::now();
+    let block = experiment::run_model(
+        &cfg,
+        &suite,
+        &[
+            QuantType::Bf16,
+            QuantType::Nvfp4,
+            QuantType::Nvfp4Pts,
+            QuantType::HiF4,
+            QuantType::HiF4HiGptq,
+        ],
+        &xcfg,
+        7,
+    );
+    println!(
+        "loss {:.3} -> {:.3}; full pipeline took {:.1?}",
+        block.losses[0],
+        block.losses.last().unwrap(),
+        t0.elapsed()
+    );
+
+    let mut header: Vec<&str> = vec!["A-W Quant Type"];
+    let names: Vec<&'static str> = suite.iter().map(|t| t.name()).collect();
+    header.extend(names.iter());
+    header.push("Mean");
+    let mut t = Table::new(&format!("PTQ pipeline: {}", block.model_name), &header);
+    for (i, row) in block.rows.iter().enumerate() {
+        let mut cells = vec![row.label.clone()];
+        cells.extend(row.task_acc.iter().map(|a| format!("{a:.2}")));
+        cells.push(format!("{:.2}", row.mean));
+        t.row(cells);
+        if i > 0 {
+            let drops = block.drops(i);
+            let mut cells = vec!["  - Acc Drop".to_string()];
+            cells.extend(drops.iter().map(|d| format!("{d:+.2}")));
+            cells.push(format!("{:+.2}", row.mean - block.rows[0].mean));
+            t.row(cells);
+        }
+    }
+    t.print();
+    println!("\nExpected shape (paper §IV.B): drop(HiF4) < drop(NVFP4); HiGPTQ improves HiF4.");
+}

@@ -1,0 +1,70 @@
+//! Quickstart: quantize a tensor with every 4-bit BFP format, inspect the
+//! HiF4 unit structure, and compare quantization error.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use hif4::formats::rounding::RoundMode;
+use hif4::formats::{hif4 as hif4_fmt, mse, Format, QuantScheme};
+use hif4::tensor::{Matrix, Rng};
+use hif4::util::bench::Table;
+
+fn main() {
+    // A Gaussian tensor, like one row of an activation matrix.
+    let mut rng = Rng::seed(7);
+    let x = Matrix::randn(1, 1024, 0.05, &mut rng);
+
+    println!("== quantize one 64-element group and look inside ==");
+    let (unit, trace) = hif4_fmt::quantize_trace(&x.data[..64], RoundMode::NearestEven);
+    println!("  E6M2 scale      : {:#04x} = {:.6e}", unit.scale.0, unit.scale.to_f32());
+    println!("  E1_8 (level-2)  : {:#010b}", unit.e1_8);
+    println!("  E1_16 (level-3) : {:#018b}", unit.e1_16);
+    println!(
+        "  Vmax            : {:.6e} (scaled peak {:.3})",
+        trace.vmax,
+        trace.vmax * trace.rec
+    );
+    println!(
+        "  wire size       : {} bytes for 64 values = {} bits/value",
+        hif4_fmt::HiF4Unit::WIRE_BYTES,
+        hif4_fmt::BITS_PER_VALUE
+    );
+
+    println!("\n== quant-dequant error across formats (sigma = 0.05 Gaussian) ==");
+    let mut t = Table::new(
+        "Quickstart: format comparison",
+        &["format", "group", "bits/val", "MSE", "vs HiF4"],
+    );
+    let base = {
+        let q = QuantScheme::direct(Format::HiF4).quant_dequant_vec(&x.data);
+        mse(&x.data, &q)
+    };
+    for f in [Format::HiF4, Format::Nvfp4, Format::Mxfp4, Format::Mx4, Format::VanillaBfp] {
+        let q = QuantScheme::direct(f).quant_dequant_vec(&x.data);
+        let e = mse(&x.data, &q);
+        t.row(vec![
+            f.name().into(),
+            f.group().to_string(),
+            format!("{}", f.bits_per_value()),
+            format!("{e:.3e}"),
+            format!("{:.2}x", e / base),
+        ]);
+    }
+    t.print();
+
+    println!("\n== the NVFP4 range failure HiF4 is designed around ==");
+    let mut wide = vec![2f32.powi(-14); 64];
+    wide[0] = 2f32.powi(13);
+    for f in [Format::HiF4, Format::Nvfp4] {
+        let q = QuantScheme::direct(f).quant_dequant_vec(&wide);
+        println!(
+            "  {:6}: peak {:.3e} -> {:.3e}   tiny {:.3e} -> {:.3e}",
+            f.name(),
+            wide[0],
+            q[0],
+            wide[1],
+            q[1]
+        );
+    }
+}

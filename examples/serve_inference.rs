@@ -1,0 +1,122 @@
+//! End-to-end serving driver: start the coordinator on the BF16 and the
+//! HiF4-quantized forward artifacts, fire batched requests from concurrent
+//! clients, and report latency / throughput / BF16↔HiF4 agreement — the
+//! serving analogue of the paper's deployment section.
+//!
+//! ```bash
+//! make artifacts
+//! cargo run --release --example train_small_lm      # optional: trained params
+//! cargo run --release --example serve_inference -- [--requests 200] [--clients 4]
+//! ```
+
+use hif4::eval::tasks::{self, Task};
+use hif4::formats::{Format, QuantScheme};
+use hif4::runtime::artifact::{Manifest, ParamStore};
+use hif4::server::batcher::BatchPolicy;
+use hif4::server::protocol::Request;
+use hif4::server::service::{Client, Server, ServerConfig};
+use hif4::tensor::Rng;
+use hif4::util::cli::Args;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let n_requests: usize = args.get_parse("requests", 200);
+    let n_clients: usize = args.get_parse("clients", 4);
+    let artifacts = Path::new(args.get_or("artifacts", "artifacts")).to_path_buf();
+    let params_path = args.get_or("params", "data/served.params").to_string();
+
+    let manifest = Manifest::load(&artifacts)?;
+    // Prefer trained parameters from train_small_lm; fall back to random.
+    let params = match ParamStore::load(Path::new(&params_path)) {
+        Ok(p) => {
+            println!("serving trained parameters from {params_path}");
+            p
+        }
+        Err(_) => {
+            println!("no trained params at {params_path}; serving random init");
+            manifest.init_params(5)
+        }
+    };
+
+    let mut agreement_tokens: Vec<Vec<u32>> = Vec::new();
+    for (artifact, label, quantize) in [
+        ("fwd_bf16.hlo.txt", "BF16", false),
+        ("fwd_hif4.hlo.txt", "HiF4 (weights+activations)", true),
+    ] {
+        let mut served = params.clone();
+        if quantize {
+            // Weight half of the simulated quantization; activations are
+            // quantized in-graph by the artifact's Pallas-derived HLO.
+            served.quantize_weights(&QuantScheme::direct(Format::HiF4));
+        }
+        let cfg = ServerConfig {
+            artifact: artifact.into(),
+            policy: BatchPolicy { max_batch: manifest.batch, max_wait: Duration::from_millis(2) },
+        };
+        let server = Server::start(&artifacts, cfg, &served, "127.0.0.1:0")?;
+        println!("\n[{label}] serving {artifact} on {}", server.addr);
+
+        // Deterministic request stream: benchmark-style contexts.
+        let reqs_per_client = n_requests / n_clients;
+        let t0 = Instant::now();
+        let tokens: Vec<Vec<u32>> = std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for c in 0..n_clients {
+                let addr = server.addr;
+                handles.push(s.spawn(move || {
+                    let mut rng = Rng::seed(1000 + c as u64);
+                    let mut client = Client::connect(addr).unwrap();
+                    let mut got = Vec::new();
+                    // Pipeline in windows of 8 to exercise batching.
+                    let mut outstanding = 0usize;
+                    for i in 0..reqs_per_client {
+                        let item = Task::AgreeHard.item(&mut rng);
+                        let req = Request {
+                            id: (c * reqs_per_client + i) as u64,
+                            tokens: item.context.clone(),
+                        };
+                        client.send(&req).unwrap();
+                        outstanding += 1;
+                        if outstanding == 8 {
+                            for _ in 0..8 {
+                                got.push(client.recv().unwrap().token);
+                            }
+                            outstanding = 0;
+                        }
+                    }
+                    for _ in 0..outstanding {
+                        got.push(client.recv().unwrap().token);
+                    }
+                    got
+                }));
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let dt = t0.elapsed();
+        let total: usize = tokens.iter().map(|t| t.len()).sum();
+        println!(
+            "  {total} requests in {dt:.2?}  ->  {:.1} req/s   {}",
+            total as f64 / dt.as_secs_f64(),
+            server.metrics.summary()
+        );
+        agreement_tokens.push(tokens.into_iter().flatten().collect());
+    }
+
+    // Fidelity: how often does the HiF4-served model pick the same next
+    // token as BF16? (Same seeds ⇒ same request streams.)
+    let same = agreement_tokens[0]
+        .iter()
+        .zip(&agreement_tokens[1])
+        .filter(|(a, b)| a == b)
+        .count();
+    println!(
+        "\nBF16 vs HiF4 next-token agreement: {}/{} = {:.1}%",
+        same,
+        agreement_tokens[0].len(),
+        100.0 * same as f64 / agreement_tokens[0].len() as f64
+    );
+    let _ = tasks::VOCAB;
+    Ok(())
+}

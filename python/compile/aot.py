@@ -1,0 +1,156 @@
+"""AOT lowering: JAX → HLO **text** artifacts the Rust runtime loads.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1 (behind
+the published ``xla`` crate) rejects; the text parser reassigns ids.
+
+Artifacts (all under ``artifacts/``):
+  fwd_bf16.hlo.txt    — serving forward, no quantization
+  fwd_hif4.hlo.txt    — forward with HiF4 fake-quant activations (L1 kernel)
+  fwd_nvfp4.hlo.txt   — forward with NVFP4 fake-quant activations
+  train_step.hlo.txt  — one Adam training step
+  qdq_hif4.hlo.txt    — standalone HiF4 quant-dequant (rust↔python codec
+                        cross-check surface)
+  qdq_nvfp4.hlo.txt   — standalone NVFP4 quant-dequant
+  manifest.json       — parameter order/shapes + entry-point signatures
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see /opt/xla-example)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_forward(quant):
+    names = model.param_names()
+    shapes = model.param_shapes()
+    p_spec = {n: jax.ShapeDtypeStruct(shapes[n], jnp.float32) for n in names}
+    t_spec = jax.ShapeDtypeStruct((model.BATCH, model.SEQ), jnp.int32)
+
+    def fn(params, tokens):
+        return (model.forward(params, tokens, quant=quant),)
+
+    return jax.jit(fn).lower(p_spec, t_spec)
+
+
+def lower_train_step():
+    names = model.param_names()
+    shapes = model.param_shapes()
+    p_spec = {n: jax.ShapeDtypeStruct(shapes[n], jnp.float32) for n in names}
+    s_spec = jax.ShapeDtypeStruct((), jnp.float32)
+    t_spec = jax.ShapeDtypeStruct((model.BATCH, model.SEQ), jnp.int32)
+
+    def fn(params, m, v, step, tokens):
+        new_p, new_m, new_v, new_step, loss = model.train_step(params, m, v, step, tokens)
+        flat = []
+        for n in sorted(new_p):
+            flat.append(new_p[n])
+        for n in sorted(new_m):
+            flat.append(new_m[n])
+        for n in sorted(new_v):
+            flat.append(new_v[n])
+        flat.append(new_step)
+        flat.append(loss)
+        return tuple(flat)
+
+    return jax.jit(fn).lower(p_spec, p_spec, p_spec, s_spec, t_spec)
+
+
+def lower_qdq(fmt, rows, cols):
+    from .kernels import hif4 as kernels
+
+    op = {"hif4": kernels.hif4_qdq, "nvfp4": kernels.nvfp4_qdq}[fmt]
+    spec = jax.ShapeDtypeStruct((rows, cols), jnp.float32)
+
+    def fn(x):
+        return (op(x),)
+
+    return jax.jit(fn).lower(spec)
+
+
+QDQ_ROWS, QDQ_COLS = 8, 256
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    def emit(name, lowered):
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    emit("fwd_bf16.hlo.txt", lower_forward(None))
+    emit("fwd_hif4.hlo.txt", lower_forward("hif4"))
+    emit("fwd_nvfp4.hlo.txt", lower_forward("nvfp4"))
+    emit("train_step.hlo.txt", lower_train_step())
+    emit("qdq_hif4.hlo.txt", lower_qdq("hif4", QDQ_ROWS, QDQ_COLS))
+    emit("qdq_nvfp4.hlo.txt", lower_qdq("nvfp4", QDQ_ROWS, QDQ_COLS))
+
+    names = model.param_names()
+    shapes = model.param_shapes()
+    manifest = {
+        "config": model.CONFIG,
+        "batch": model.BATCH,
+        "seq": model.SEQ,
+        "param_order": names,
+        "param_shapes": {n: list(shapes[n]) for n in names},
+        "entrypoints": {
+            "fwd": {
+                "inputs": [f"param:{n}" for n in names] + ["tokens:i32[B,T]"],
+                "outputs": ["logits:f32[B,T,V]"],
+            },
+            "train_step": {
+                "inputs": [f"param:{n}" for n in names]
+                + [f"m:{n}" for n in names]
+                + [f"v:{n}" for n in names]
+                + ["step:f32[]", "tokens:i32[B,T]"],
+                "outputs": [f"param:{n}" for n in sorted(names)]
+                + [f"m:{n}" for n in sorted(names)]
+                + [f"v:{n}" for n in sorted(names)]
+                + ["step:f32[]", "loss:f32[]"],
+            },
+            "qdq": {"rows": QDQ_ROWS, "cols": QDQ_COLS},
+        },
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print("wrote manifest.json")
+
+    # Flat-text twin for the Rust loader (no JSON crate in the image).
+    lines = [
+        f"batch {model.BATCH}",
+        f"seq {model.SEQ}",
+        f"vocab {model.CONFIG['vocab']}",
+        f"qdq {QDQ_ROWS} {QDQ_COLS}",
+    ]
+    for n in names:
+        dims = " ".join(str(d) for d in shapes[n])
+        lines.append(f"param {n} {dims}")
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print("wrote manifest.txt")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""Layer-1 Pallas kernels: HiF4 / NVFP4 / MXFP4 quantize-dequantize and a
+quantized matmul, structured for TPU even though this image executes them
+under ``interpret=True`` on CPU (real-TPU lowering emits Mosaic custom-calls
+the CPU PJRT plugin cannot run — see DESIGN.md §Hardware-Adaptation).
+
+TPU structure notes (§Perf):
+* quantization tiles are (TILE_ROWS, K) blocks whose last axis is a whole
+  number of format groups, so every HiF4 unit lives inside one VMEM tile;
+  metadata derivation is a single pass of reshapes/maxes (VPU-friendly,
+  no gathers);
+* the quantized matmul uses MXU-shaped (128, 128) output tiles: each grid
+  step quantize-dequantizes an A-tile and a B-tile in VMEM and feeds
+  ``jnp.dot`` (the MXU), accumulating over the K grid axis — the HBM↔VMEM
+  schedule a GPU implementation would express with threadblocks.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_TILE_ROWS = 8
+
+
+def _qdq_kernel(x_ref, o_ref, *, op):
+    """Generic quant-dequant kernel body: one (tile_rows, K) VMEM block."""
+    o_ref[...] = op(x_ref[...])
+
+
+def _make_qdq(op, group, name):
+    @functools.partial(jax.jit, static_argnames=("tile_rows",))
+    def qdq(x, tile_rows=DEFAULT_TILE_ROWS):
+        assert x.ndim == 2, "kernels take (rows, K)"
+        rows, k = x.shape
+        assert k % group == 0, f"K must be a multiple of {group}"
+        tile = min(tile_rows, rows)
+        assert rows % tile == 0, "rows must divide by the row tile"
+        return pl.pallas_call(
+            functools.partial(_qdq_kernel, op=op),
+            out_shape=jax.ShapeDtypeStruct((rows, k), jnp.float32),
+            grid=(rows // tile,),
+            in_specs=[pl.BlockSpec((tile, k), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((tile, k), lambda i: (i, 0)),
+            interpret=True,  # CPU-PJRT execution; Mosaic on real TPU
+        )(x)
+
+    qdq.__name__ = name
+    return qdq
+
+
+#: HiF4 quantize-dequantize over (rows, K) with K % 64 == 0.
+hif4_qdq = _make_qdq(ref.hif4_qdq, ref.HIF4_GROUP, "hif4_qdq")
+#: NVFP4 (direct cast) with K % 16 == 0.
+nvfp4_qdq = _make_qdq(ref.nvfp4_qdq, ref.NVFP4_GROUP, "nvfp4_qdq")
+#: MXFP4 with K % 32 == 0.
+mxfp4_qdq = _make_qdq(ref.mxfp4_qdq, ref.MXFP4_GROUP, "mxfp4_qdq")
+
+
+# ---------------------------------------------------------------------------
+# Quantized matmul: C = qdq(A) @ qdq(B)ᵀ with per-tile quantization.
+# ---------------------------------------------------------------------------
+
+
+def _qmatmul_kernel(a_ref, b_ref, o_ref, *, op):
+    """One (TM, TN) output tile; K grid axis accumulates into o_ref."""
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    qa = op(a_ref[...])
+    qb = op(b_ref[...])
+    o_ref[...] += jnp.dot(qa, qb.T, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn", "tk", "fmt"))
+def qmatmul_bt(a, b_t, tm=128, tn=128, tk=128, fmt="hif4"):
+    """C = qdq(A) · qdq(Bᵀ)ᵀ — fake-quant matmul with quantization fused
+    into the MXU tiles. ``b_t`` is (N, K) row-major (weights layout)."""
+    m, k = a.shape
+    n, k2 = b_t.shape
+    assert k == k2
+    op = {"hif4": ref.hif4_qdq, "nvfp4": ref.nvfp4_qdq, "mxfp4": ref.mxfp4_qdq}[fmt]
+    group = {"hif4": 64, "nvfp4": 16, "mxfp4": 32}[fmt]
+    tm, tn, tk = min(tm, m), min(tn, n), min(tk, k)
+    assert m % tm == 0 and n % tn == 0 and k % tk == 0
+    assert tk % group == 0, "K tile must hold whole quantization groups"
+    return pl.pallas_call(
+        functools.partial(_qmatmul_kernel, op=op),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=(m // tm, n // tn, k // tk),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((tn, tk), lambda i, j, s: (j, s)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, s: (i, j)),
+        interpret=True,
+    )(a, b_t)
+
+
+def vmem_bytes_qmatmul(tm, tn, tk):
+    """Estimated VMEM working set of one qmatmul grid step (f32): A-tile +
+    B-tile + their dequantized copies + the output tile. Used by the §Perf
+    notes to check tiles fit the ~16 MiB/core VMEM budget."""
+    return 4 * (2 * tm * tk + 2 * tn * tk + tm * tn)

@@ -1,0 +1,207 @@
+"""Pure-jnp reference implementations (correctness oracles) of the 4-bit BFP
+quantize-dequantize ops: HiF4 (Algorithm 1), NVFP4, MXFP4.
+
+These mirror the bit-exact Rust codecs in ``rust/src/formats/`` and are the
+ground truth the Pallas kernels are tested against (pytest + hypothesis).
+All rounding is round-half-to-even, as the paper mandates.
+"""
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Shared helpers
+# ---------------------------------------------------------------------------
+
+HIF4_GROUP = 64
+NVFP4_GROUP = 16
+MXFP4_GROUP = 32
+
+def bf16_rne(x):
+    """Round f32 -> bf16 -> f32 (RNE, exactly what hardware does)."""
+    return x.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def round_half_even(x):
+    """jnp.round is round-half-to-even."""
+    return jnp.round(x)
+
+
+def _floor_log2(x):
+    """floor(log2(x)) for positive finite x, exact via frexp."""
+    m, e = jnp.frexp(x)  # x = m * 2^e with m in [0.5, 1)
+    return e - 1
+
+
+def e2m1_quantize(x):
+    """Round to the nearest E2M1 value (grid ±{0,.5,1,1.5,2,3,4,6}) with
+    RNE ties; saturate ±6.
+
+    Arithmetic form (Pallas-friendly, no table constants): within each
+    binade the grid is uniform — step 0.5 below 2, step 1 in [2,4), step 2
+    above — and round-half-even on `a/ulp` is exactly tie-to-even-mantissa
+    because even multiples of the ulp are the even-code values.
+    """
+    a = jnp.abs(x)
+    sign = jnp.where(x < 0, -1.0, 1.0)
+    ulp = jnp.where(a < 2.0, 0.5, jnp.where(a < 4.0, 1.0, 2.0))
+    q = jnp.round(a / ulp) * ulp
+    q = jnp.minimum(q, 6.0)
+    return sign * q
+
+
+def s1p2_quantize(x):
+    """Round onto the ±[0, 1.75] grid of step 0.25 (RNE), clamp to bounds."""
+    q = round_half_even(x * 4.0)
+    return jnp.clip(q, -7.0, 7.0) * 0.25
+
+
+# ---------------------------------------------------------------------------
+# E6M2 (HiF4 level-1 scale)
+# ---------------------------------------------------------------------------
+
+E6M2_MIN = 2.0 ** -48
+E6M2_MAX = 2.0 ** 15 * 1.5
+
+
+def e6m2_quantize(x):
+    """Encode a positive scale into E6M2 (RNE, clamp to [MIN, MAX]).
+
+    Returns the decoded f32 value (the paper's dedicated BF16->E6M2
+    instruction followed by decode).
+    """
+    x = jnp.clip(x, E6M2_MIN, E6M2_MAX)
+    e = _floor_log2(x)
+    p2 = jnp.exp2(e.astype(jnp.float32))
+    s = x / p2  # in [1, 2)
+    q = round_half_even(s * 4.0) / 4.0
+    carry = q >= 2.0
+    q = jnp.where(carry, 1.0, q)
+    p2 = jnp.where(carry, p2 * 2.0, p2)
+    return jnp.clip(q * p2, E6M2_MIN, E6M2_MAX)
+
+
+def e6m2_rec_bf16(scale):
+    """The paper's E6M2_REC_to_BF16 instruction: bf16(1/scale). For E6M2
+    inputs this equals the 4-entry-LUT hardware path exactly (proved by the
+    exhaustive Rust test)."""
+    return bf16_rne(1.0 / scale)
+
+
+# ---------------------------------------------------------------------------
+# HiF4 — Algorithm 1
+# ---------------------------------------------------------------------------
+
+ONE_SEVENTH_BF16 = float(jnp.asarray(1.0 / 7.0, jnp.bfloat16))
+
+
+def hif4_qdq(x):
+    """Quantize-dequantize the last axis in HiF4 groups of 64.
+
+    x: (..., K) with K % 64 == 0, any float dtype. Returns f32 of the same
+    shape. NaN/Inf anywhere in a group poisons the whole group (the E6M2
+    scale is the format's only NaN channel).
+    """
+    orig_shape = x.shape
+    assert orig_shape[-1] % HIF4_GROUP == 0, "K must be a multiple of 64"
+    # The format consumes BF16 inputs (Algorithm 1).
+    v = bf16_rne(x.astype(jnp.float32)).reshape(-1, HIF4_GROUP)
+
+    bad = ~jnp.isfinite(v).all(axis=-1, keepdims=True)
+
+    # Stage 1: three-level tree reduction (4 -> 2 -> global).
+    v16 = jnp.max(jnp.abs(v).reshape(-1, 16, 4), axis=-1)  # (n, 16)
+    v8 = jnp.max(v16.reshape(-1, 8, 2), axis=-1)  # (n, 8)
+    vmax = jnp.max(v8, axis=-1, keepdims=True)  # (n, 1)
+
+    # Stage 2: hierarchical scaling metadata.
+    sf = bf16_rne(vmax * ONE_SEVENTH_BF16)
+    scale = e6m2_quantize(sf)  # decoded E6M2, (n, 1)
+    rec = e6m2_rec_bf16(scale)
+    e1_8 = (v8 * rec > 4.0).astype(jnp.float32)  # (n, 8)
+    l2_for16 = jnp.repeat(e1_8, 2, axis=-1)  # (n, 16)
+    e1_16 = (v16 * rec * jnp.exp2(-l2_for16) >= 2.0).astype(jnp.float32)
+
+    # Stage 3: in-group elements.
+    l2 = jnp.repeat(e1_8, 8, axis=-1)  # (n, 64)
+    l3 = jnp.repeat(e1_16, 4, axis=-1)  # (n, 64)
+    scaled = v * rec * jnp.exp2(-(l2 + l3))
+    q = s1p2_quantize(scaled)
+
+    out = scale * jnp.exp2(l2 + l3) * q
+    out = jnp.where(bad, jnp.nan, out)
+    return out.reshape(orig_shape).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# NVFP4
+# ---------------------------------------------------------------------------
+
+E4M3_MAX = 448.0
+NVFP4_PTS_TARGET = 2688.0
+
+
+def e4m3_quantize(x):
+    """Saturating FP8-E4M3 quantization (non-negative inputs), decoded back
+    to f32, in explicit arithmetic.
+
+    Not a dtype cast: the xla_extension 0.5.1 runtime behind the Rust PJRT
+    loader implements `convert f32->f8e4m3fn` with round-toward-zero, so a
+    cast would change semantics between the pytest (new XLA) and serving
+    (old XLA) environments. Per-binade RNE on `a/ulp` is exactly the
+    IEEE-style tie-to-even-mantissa rounding, as in `e2m1_quantize`.
+    Overflow saturates at 448 (NVIDIA's cast); underflow below half the min
+    subnormal (2^-10) rounds to zero — the NVFP4 scale failure modes.
+    """
+    a = jnp.clip(x, 0.0, E4M3_MAX)
+    safe = jnp.where(a > 0, a, 1.0)
+    e = jnp.clip(_floor_log2(safe), -6, 8)
+    ulp = jnp.exp2(e.astype(jnp.float32) - 3.0)  # 3 mantissa bits; subnormal ulp = 2^-9
+    q = jnp.round(a / ulp) * ulp
+    return jnp.minimum(q, E4M3_MAX)
+
+
+def nvfp4_qdq(x):
+    """Quantize-dequantize the last axis in NVFP4 groups of 16 (direct
+    cast). Same NaN-poisoning contract as hif4_qdq."""
+    orig_shape = x.shape
+    assert orig_shape[-1] % NVFP4_GROUP == 0, "K must be a multiple of 16"
+    v = x.astype(jnp.float32).reshape(-1, NVFP4_GROUP)
+    bad = ~jnp.isfinite(v).all(axis=-1, keepdims=True)
+    amax = jnp.max(jnp.abs(v), axis=-1, keepdims=True)
+    scale = e4m3_quantize(amax / 6.0)
+    inv = jnp.where(scale > 0.0, 1.0 / scale, 0.0)
+    q = e2m1_quantize(v * inv)
+    out = scale * q
+    out = jnp.where(bad, jnp.nan, out)
+    return out.reshape(orig_shape)
+
+
+def nvfp4_pts_qdq(x):
+    """NVFP4 with software per-tensor scaling: pre-scale the tensor peak to
+    2688 = 6×448, quantize, undo."""
+    amax = jnp.max(jnp.abs(x))
+    t = jnp.where((amax > 0) & jnp.isfinite(amax), NVFP4_PTS_TARGET / amax, 1.0)
+    return nvfp4_qdq(x * t) / t
+
+
+# ---------------------------------------------------------------------------
+# MXFP4
+# ---------------------------------------------------------------------------
+
+
+def mxfp4_qdq(x):
+    """Quantize-dequantize the last axis in MXFP4 groups of 32 (OCP rule:
+    power-of-two scale 2^(floor(log2 amax) − 2))."""
+    orig_shape = x.shape
+    assert orig_shape[-1] % MXFP4_GROUP == 0, "K must be a multiple of 32"
+    v = x.astype(jnp.float32).reshape(-1, MXFP4_GROUP)
+    bad = ~jnp.isfinite(v).all(axis=-1, keepdims=True)
+    amax = jnp.max(jnp.abs(v), axis=-1, keepdims=True)
+    e = jnp.where(amax > 0, _floor_log2(jnp.where(amax > 0, amax, 1.0)) - 2, -126)
+    # Clamp to the f32 normal range: XLA's exp2 flushes 2^-127 to zero.
+    scale = jnp.exp2(jnp.clip(e, -126, 127).astype(jnp.float32))
+    inv = jnp.where(scale > 0, 1.0 / scale, 0.0)
+    q = e2m1_quantize(v * inv)
+    out = scale * q
+    out = jnp.where(bad, jnp.nan, out)
+    return out.reshape(orig_shape)

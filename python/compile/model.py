@@ -1,0 +1,195 @@
+"""Layer-2 JAX model: a GQA + SwiGLU decoder-only transformer (the serving
+configuration) with optional fake-quant activations via the L1 Pallas
+kernels, plus an Adam train step. Both are AOT-lowered to HLO text by
+``aot.py`` and driven from Rust via PJRT — Python never runs at request
+time.
+
+Weights are *inputs* to the lowered computations (a flat, name-sorted list;
+see ``param_names``), so the Rust side can train, quantize (fake-quant the
+weight arrays with its own codecs or GPTQ) and serve without re-lowering.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import hif4 as kernels
+
+# The serving configuration (mirrors rust zoo llama3_tiny's shape class).
+CONFIG = dict(
+    vocab=320,
+    d_model=64,
+    n_layers=2,
+    n_heads=4,
+    kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    max_seq=32,
+    rope_base=10000.0,
+)
+
+BATCH = 8
+SEQ = 32
+
+
+def param_shapes(cfg=None):
+    """Name → shape for every parameter, in the flat order used by AOT
+    artifacts (sorted by name)."""
+    c = cfg or CONFIG
+    d, hd = c["d_model"], c["n_heads"] * c["head_dim"]
+    kvd = c["kv_heads"] * c["head_dim"]
+    shapes = {
+        "embed": (c["vocab"], d),
+        "head": (c["vocab"], d),
+        "norm_f": (d,),
+    }
+    for l in range(c["n_layers"]):
+        shapes[f"layer{l}.norm1"] = (d,)
+        shapes[f"layer{l}.norm2"] = (d,)
+        shapes[f"layer{l}.wq"] = (hd, d)
+        shapes[f"layer{l}.wk"] = (kvd, d)
+        shapes[f"layer{l}.wv"] = (kvd, d)
+        shapes[f"layer{l}.wo"] = (d, hd)
+        shapes[f"layer{l}.w1"] = (c["d_ff"], d)
+        shapes[f"layer{l}.w2"] = (d, c["d_ff"])
+        shapes[f"layer{l}.w3"] = (c["d_ff"], d)
+    return shapes
+
+
+def param_names(cfg=None):
+    return sorted(param_shapes(cfg).keys())
+
+
+def init_params(key, cfg=None):
+    c = cfg or CONFIG
+    shapes = param_shapes(c)
+    params = {}
+    for name in param_names(c):
+        shape = shapes[name]
+        key, sub = jax.random.split(key)
+        if name.endswith(("norm1", "norm2", "norm_f")):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name == "embed":
+            params[name] = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+        else:
+            sigma = (2.0 / (shape[0] + shape[-1])) ** 0.5
+            params[name] = sigma * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def rmsnorm(x, g):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + 1e-6) * g
+
+
+def rope(x, heads, head_dim, base):
+    """x: (B, T, heads*head_dim)."""
+    b, t, _ = x.shape
+    x = x.reshape(b, t, heads, head_dim)
+    half = head_dim // 2
+    pos = jnp.arange(t, dtype=jnp.float32)[:, None]
+    freq = base ** (-2.0 * jnp.arange(half, dtype=jnp.float32) / head_dim)
+    theta = pos * freq  # (T, half)
+    cos, sin = jnp.cos(theta), jnp.sin(theta)
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    cos = cos[None, :, None, :]
+    sin = sin[None, :, None, :]
+    rot1 = x1 * cos - x2 * sin
+    rot2 = x1 * sin + x2 * cos
+    out = jnp.stack([rot1, rot2], axis=-1).reshape(b, t, heads, head_dim)
+    return out.reshape(b, t, heads * head_dim)
+
+
+def _maybe_q(x, quant):
+    """Fake-quantize activations via the L1 Pallas kernel. The last axis
+    must be a multiple of the group; the serving dims (64, 128, 256) are."""
+    if quant is None:
+        return x
+    shape = x.shape
+    flat = x.reshape(-1, shape[-1])
+    q = {"hif4": kernels.hif4_qdq, "nvfp4": kernels.nvfp4_qdq, "mxfp4": kernels.mxfp4_qdq}[
+        quant
+    ](flat)
+    return q.reshape(shape)
+
+
+def forward(params, tokens, cfg=None, quant=None):
+    """Logits for a (B, T) int32 token batch. ``quant`` ∈ {None, 'hif4',
+    'nvfp4', 'mxfp4'} applies fake-quant to activations entering every
+    attention/FFN linear (weights are expected pre-quantized by the caller,
+    matching the paper's §IV 'simulated quantization')."""
+    c = cfg or CONFIG
+    b, t = tokens.shape
+    x = params["embed"][tokens]  # (B, T, d)
+    heads, kvh, hd = c["n_heads"], c["kv_heads"], c["head_dim"]
+    group = heads // kvh
+    causal = jnp.tril(jnp.ones((t, t), bool))
+
+    for l in range(c["n_layers"]):
+        h = rmsnorm(x, params[f"layer{l}.norm1"])
+        hq = _maybe_q(h, quant)
+        q = hq @ params[f"layer{l}.wq"].T
+        k = hq @ params[f"layer{l}.wk"].T
+        v = hq @ params[f"layer{l}.wv"].T
+        q = rope(q, heads, hd, c["rope_base"])
+        k = rope(k, kvh, hd, c["rope_base"])
+        qh = q.reshape(b, t, heads, hd)
+        kh = k.reshape(b, t, kvh, hd)
+        vh = v.reshape(b, t, kvh, hd)
+        # GQA: repeat KV heads across the query group.
+        kh = jnp.repeat(kh, group, axis=2)
+        vh = jnp.repeat(vh, group, axis=2)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", qh, kh) / (hd ** 0.5)
+        scores = jnp.where(causal[None, None, :, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhqk,bkhd->bqhd", probs, vh).reshape(b, t, heads * hd)
+        ctx_q = _maybe_q(ctx, quant)
+        x = x + ctx_q @ params[f"layer{l}.wo"].T
+
+        h = rmsnorm(x, params[f"layer{l}.norm2"])
+        hq = _maybe_q(h, quant)
+        a = jax.nn.silu(hq @ params[f"layer{l}.w1"].T) * (hq @ params[f"layer{l}.w3"].T)
+        aq = _maybe_q(a, quant)
+        x = x + aq @ params[f"layer{l}.w2"].T
+
+    h = rmsnorm(x, params["norm_f"])
+    return h @ params["head"].T  # (B, T, vocab)
+
+
+def loss_fn(params, tokens, cfg=None):
+    """Causal LM loss: predict token t+1; last position masked."""
+    logits = forward(params, tokens, cfg)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def init_opt_state(params):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return dict(m=zeros, v={k: jnp.zeros_like(v) for k, v in params.items()}, step=jnp.zeros((), jnp.float32))
+
+
+def train_step(params, m, v, step, tokens, lr=2e-3, cfg=None):
+    """One Adam step. Flat pytree signature so the AOT artifact's parameter
+    order is predictable. Returns (params', m', v', step', loss)."""
+    loss, grads = jax.value_and_grad(loss_fn)(params, tokens, cfg)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    step = step + 1.0
+    lr_t = lr * jnp.sqrt(1.0 - b2 ** step) / (1.0 - b1 ** step)
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        new_m[k] = b1 * m[k] + (1 - b1) * grads[k]
+        new_v[k] = b2 * v[k] + (1 - b2) * grads[k] * grads[k]
+        new_p[k] = params[k] - lr_t * new_m[k] / (jnp.sqrt(new_v[k]) + eps)
+    return new_p, new_m, new_v, step, loss
+
+
+@functools.partial(jax.jit, static_argnames=("quant",))
+def forward_jit(params, tokens, quant=None):
+    return forward(params, tokens, quant=quant)
+
+
+train_step_jit = jax.jit(train_step)

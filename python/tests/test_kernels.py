@@ -1,0 +1,144 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (exact equality),
+plus hypothesis sweeps over shapes/scales and the format edge cases the
+paper's analysis hinges on."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import hif4 as kernels
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+KERNELS = {
+    "hif4": (kernels.hif4_qdq, ref.hif4_qdq, 64),
+    "nvfp4": (kernels.nvfp4_qdq, ref.nvfp4_qdq, 16),
+    "mxfp4": (kernels.mxfp4_qdq, ref.mxfp4_qdq, 32),
+}
+
+
+@pytest.mark.parametrize("fmt", list(KERNELS))
+def test_kernel_matches_ref_exactly(fmt):
+    kern, oracle, group = KERNELS[fmt]
+    rng = np.random.default_rng(42)
+    x = jnp.asarray(rng.normal(size=(16, 4 * group)).astype(np.float32))
+    got = np.asarray(kern(x))
+    want = np.asarray(oracle(x))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("fmt", list(KERNELS))
+def test_zeros_and_sign_preservation(fmt):
+    kern, _, group = KERNELS[fmt]
+    x = jnp.zeros((4, group), jnp.float32)
+    assert np.all(np.asarray(kern(x)) == 0.0)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(4, group)).astype(np.float32))
+    out = np.asarray(kern(x))
+    assert np.all(out * np.asarray(x) >= 0.0), "sign flips are impossible"
+    assert np.all(np.isfinite(out))
+
+
+@pytest.mark.parametrize("fmt", list(KERNELS))
+def test_nan_poisons_group(fmt):
+    kern, _, group = KERNELS[fmt]
+    x = np.ones((2, 2 * group), np.float32)
+    x[0, 0] = np.nan
+    out = np.asarray(kern(jnp.asarray(x)))
+    assert np.all(np.isnan(out[0, :group])), "NaN group poisoned"
+    assert np.all(np.isfinite(out[0, group:])), "sibling group untouched"
+    assert np.all(np.isfinite(out[1])), "other rows untouched"
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.sampled_from([1, 2, 8]),
+    groups=st.sampled_from([1, 2, 3]),
+    log_sigma=st.integers(min_value=-8, max_value=8),
+    seed=st.integers(min_value=0, max_value=2 ** 16),
+    fmt=st.sampled_from(["hif4", "nvfp4", "mxfp4"]),
+)
+def test_hypothesis_kernel_vs_ref(rows, groups, log_sigma, seed, fmt):
+    """Shape/scale sweep: kernel output must equal the oracle bit-for-bit."""
+    kern, oracle, group = KERNELS[fmt]
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(
+        (rng.normal(size=(rows, groups * group)) * 2.0 ** log_sigma).astype(np.float32)
+    )
+    got = np.asarray(kern(x, tile_rows=1))
+    want = np.asarray(oracle(x))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2 ** 16),
+    log_sigma=st.integers(min_value=-6, max_value=6),
+)
+def test_hif4_error_bound(seed, log_sigma):
+    """The scaled-peak bound: every output within the HiF4 relative error
+    envelope (element step ≤ 0.25 × 2^2 × scale; scale ≲ 1.15 × amax/7)."""
+    rng = np.random.default_rng(seed)
+    sigma = 2.0 ** log_sigma
+    x = jnp.asarray((rng.normal(size=(4, 64)) * sigma).astype(np.float32))
+    out = np.asarray(kernels.hif4_qdq(x))
+    xb = np.asarray(ref.bf16_rne(x))
+    amax = np.abs(xb).max(axis=-1, keepdims=True)
+    # Worst-case absolute error: half an element step at the max micro-exp,
+    # plus the scale slack; generous envelope 0.25 × amax.
+    assert np.all(np.abs(out - xb) <= 0.25 * amax + 1e-30)
+
+
+def test_hif4_dynamic_range_vs_nvfp4():
+    """Table II: a 2^13 peak clips NVFP4 (scale > E4M3 max) but not HiF4."""
+    x = np.ones((1, 64), np.float32)
+    x[0, 0] = 8192.0
+    hif4 = np.asarray(kernels.hif4_qdq(jnp.asarray(x)))
+    nvfp4 = np.asarray(kernels.nvfp4_qdq(jnp.asarray(x)))
+    assert abs(hif4[0, 0] - 8192.0) / 8192.0 < 0.1, "HiF4 keeps the peak"
+    assert nvfp4[0, 0] == 2688.0, "NVFP4 clips at 6 x 448"
+
+
+def test_nvfp4_pts_rescues_range():
+    x = np.ones((1, 64), np.float32)
+    x[0, 0] = 8192.0
+    pts = np.asarray(ref.nvfp4_pts_qdq(jnp.asarray(x)))
+    assert abs(pts[0, 0] - 8192.0) / 8192.0 < 0.05
+
+
+def test_fig3_mse_ordering():
+    """HiF4 < NVFP4 < MXFP4 on Gaussian data (the Fig 3 headline)."""
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(64, 256)).astype(np.float32))
+    mse = lambda q: float(jnp.mean((q - x) ** 2))
+    e_h = mse(kernels.hif4_qdq(x))
+    e_n = mse(kernels.nvfp4_qdq(x))
+    e_m = mse(kernels.mxfp4_qdq(x))
+    assert e_h < e_n < e_m, (e_h, e_n, e_m)
+
+
+def test_qmatmul_matches_dequant_matmul():
+    """Fused quantized matmul == quantize-then-matmul, all formats."""
+    rng = np.random.default_rng(3)
+    a = jnp.asarray(rng.normal(size=(16, 128)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(8, 128)).astype(np.float32))
+    for fmt in ["hif4", "nvfp4", "mxfp4"]:
+        got = np.asarray(kernels.qmatmul_bt(a, b, tm=8, tn=8, tk=64, fmt=fmt))
+        op = KERNELS[fmt][1]
+        want = np.asarray(op(a) @ op(b).T)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_bf16_input_matches_f32_of_same_values():
+    """Algorithm 1 consumes BF16: a bf16 input and its exact f32 widening
+    must quantize identically."""
+    rng = np.random.default_rng(11)
+    xb = jnp.asarray(rng.normal(size=(4, 64)).astype(np.float32)).astype(jnp.bfloat16)
+    out_b = np.asarray(kernels.hif4_qdq(xb.astype(jnp.float32)))
+    out_f = np.asarray(ref.hif4_qdq(xb))
+    np.testing.assert_array_equal(out_b, out_f)

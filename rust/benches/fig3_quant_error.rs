@@ -1,0 +1,75 @@
+//! Fig 3 regeneration: quantization-error comparison of 4-bit BFP formats
+//! over Gaussian matrices, σ = 0.01 × 2^x for x ∈ [0, 17], MSE normalized
+//! to HiF4. Paper headline: HiF4 : NVFP4 : MXFP4 = 1 : 1.32 : 1.89 with
+//! NVFP4 direct-cast blowing up near its range bounds.
+//!
+//! HIF4_BENCH_QUICK=1 shrinks the matrices for CI runs.
+
+use hif4::quant::sweep;
+use hif4::util::bench::{BenchRunner, Table};
+
+fn main() {
+    let quick = std::env::var("HIF4_BENCH_QUICK").is_ok();
+    let dim = if quick { 128 } else { sweep::PAPER_DIM };
+    println!("Fig 3: {dim}x{dim} Gaussian matrices, x in [0, 17], 3 seeds");
+
+    // Average the normalized curves over 3 seeds like the paper's protocol.
+    let seeds = [42u64, 43, 44];
+    let mut acc: Vec<Vec<f64>> = vec![vec![0.0; 4]; sweep::PAPER_POINTS];
+    let mut sigmas = vec![0.0f64; sweep::PAPER_POINTS];
+    let t0 = std::time::Instant::now();
+    for seed in seeds {
+        let pts = sweep::run(dim, sweep::PAPER_POINTS, seed);
+        for (i, p) in pts.iter().enumerate() {
+            sigmas[i] = p.sigma;
+            for (a, r) in acc[i].iter_mut().zip(&p.normalized) {
+                *a += r / seeds.len() as f64;
+            }
+        }
+    }
+    println!("swept in {:.1?}", t0.elapsed());
+
+    let mut t = Table::new(
+        "Fig 3: MSE normalized to HiF4 (mean of 3 seeds)",
+        &["x", "sigma", "HiF4", "NVFP4", "NVFP4+PTS", "MXFP4"],
+    );
+    for (i, row) in acc.iter().enumerate() {
+        t.row(vec![
+            i.to_string(),
+            format!("{:.3e}", sigmas[i]),
+            format!("{:.3}", row[0]),
+            format!("{:.3}", row[1]),
+            format!("{:.3}", row[2]),
+            format!("{:.3}", row[3]),
+        ]);
+    }
+    t.print();
+
+    // Stable-region aggregate (paper excludes the NVFP4 fluctuation).
+    let stable: Vec<&Vec<f64>> = acc.iter().filter(|r| r[1] <= r[2] * 1.5).collect();
+    let mean = |k: usize| stable.iter().map(|r| r[k]).sum::<f64>() / stable.len() as f64;
+    println!(
+        "\nStable-region ratio  HiF4 : NVFP4 : MXFP4 = 1 : {:.2} : {:.2}   (paper: 1 : 1.32 : 1.89)",
+        mean(1),
+        mean(3)
+    );
+    println!(
+        "Range-edge blow-up   x=17: NVFP4 direct = {:.2}x HiF4 vs PTS = {:.2}x (direct/PTS = {:.2})",
+        acc[17][1],
+        acc[17][2],
+        acc[17][1] / acc[17][2]
+    );
+
+    // Throughput of the quantizers themselves.
+    let r = BenchRunner::from_env();
+    let mut rng = hif4::tensor::Rng::seed(1);
+    let data: Vec<f32> = (0..dim * 64).map(|_| rng.normal() as f32).collect();
+    for scheme in sweep::schemes() {
+        let mut out = vec![0f32; data.len()];
+        r.run(
+            &format!("quant_dequant {} ({} elems)", scheme.label(), data.len()),
+            Some(data.len() as u64),
+            || scheme.quant_dequant(&data, &mut out),
+        );
+    }
+}

@@ -1,0 +1,73 @@
+//! Fig 4 regeneration: the 64-length dot-product compute flows. Reports the
+//! datapath inventory (multiplier counts — HiF4 eliminates six), verifies
+//! bit-exactness against the dequantized reference, and measures simulator
+//! throughput of both flows and the quantized GEMMs built on them.
+
+use hif4::dotprod::qgemm::{hif4_gemm_bt, nvfp4_gemm_bt, HiF4Matrix, Nvfp4Matrix};
+use hif4::dotprod::{hif4_flow, nvfp4_flow};
+use hif4::formats::rounding::RoundMode;
+use hif4::tensor::{Matrix, Rng};
+use hif4::util::bench::{BenchRunner, Table};
+
+fn main() {
+    // Datapath inventory (the Fig 4 structural claim).
+    let h = hif4_flow::stats();
+    let n = nvfp4_flow::stats();
+    let mut t = Table::new(
+        "Fig 4: 64-length dot product datapath inventory",
+        &["resource", "HiF4", "NVFP4"],
+    );
+    let rows: [(&str, usize, usize); 6] = [
+        ("5-bit element multipliers (shared)", h.small_int_muls, n.small_int_muls),
+        ("small FP scale multipliers", h.small_fp_muls, n.small_fp_muls),
+        ("large INT multipliers", h.large_int_muls, n.large_int_muls),
+        ("integer tree adders", h.int_adds, n.int_adds),
+        ("FP accumulation adders", h.fp_adds, n.fp_adds),
+        ("reduced integer width (bits)", h.final_int_bits as usize, n.final_int_bits as usize),
+    ];
+    for (name, a, b) in rows {
+        t.row(vec![name.into(), a.to_string(), b.to_string()]);
+    }
+    t.print();
+    println!(
+        "multipliers eliminated by HiF4: {} (paper: six)\n",
+        (n.small_fp_muls + n.large_int_muls) - (h.small_fp_muls + h.large_int_muls)
+    );
+
+    // Bit-exactness spot check + throughput.
+    let r = BenchRunner::from_env();
+    let mut rng = Rng::seed(5);
+    let va: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+    let vb: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+    let ua = hif4::formats::hif4::quantize(&va, RoundMode::NearestEven);
+    let ub = hif4::formats::hif4::quantize(&vb, RoundMode::NearestEven);
+    assert_eq!(hif4_flow::dot(&ua, &ub), hif4_flow::dot_dequant_ref(&ua, &ub));
+    let ga: Vec<_> = va.chunks(16).map(|c| hif4::formats::nvfp4::quantize(c, RoundMode::NearestEven)).collect();
+    let gb: Vec<_> = vb.chunks(16).map(|c| hif4::formats::nvfp4::quantize(c, RoundMode::NearestEven)).collect();
+    assert_eq!(nvfp4_flow::dot64(&ga, &gb), nvfp4_flow::dot64_dequant_ref(&ga, &gb));
+    println!("bit-exactness vs dequantized reference: OK\n");
+
+    r.run("HiF4 PE flow (64-elem dot)", Some(64), || {
+        std::hint::black_box(hif4_flow::dot(&ua, &ub));
+    });
+    r.run("NVFP4 PE flow (64-elem dot)", Some(64), || {
+        std::hint::black_box(nvfp4_flow::dot64(&ga, &gb));
+    });
+
+    // Quantized GEMM built from the PE flows.
+    let quick = std::env::var("HIF4_BENCH_QUICK").is_ok();
+    let (m, k, nn) = if quick { (16, 128, 16) } else { (64, 512, 64) };
+    let a = Matrix::randn(m, k, 1.0, &mut rng);
+    let b = Matrix::randn(nn, k, 1.0, &mut rng);
+    let qa = HiF4Matrix::quantize(&a, RoundMode::NearestEven);
+    let qb = HiF4Matrix::quantize(&b, RoundMode::NearestEven);
+    let na = Nvfp4Matrix::quantize(&a, RoundMode::NearestEven);
+    let nb = Nvfp4Matrix::quantize(&b, RoundMode::NearestEven);
+    let flops = (2 * m * k * nn) as u64;
+    r.run(&format!("HiF4 qgemm {m}x{k}x{nn} (flops)"), Some(flops), || {
+        std::hint::black_box(hif4_gemm_bt(&qa, &qb));
+    });
+    r.run(&format!("NVFP4 qgemm {m}x{k}x{nn} (flops)"), Some(flops), || {
+        std::hint::black_box(nvfp4_gemm_bt(&na, &nb));
+    });
+}

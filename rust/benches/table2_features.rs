@@ -1,0 +1,67 @@
+//! Table II regeneration: typical values and features for HiF4 and NVFP4,
+//! derived from the format constants and verified by quantizing probes.
+
+use hif4::formats::{hif4 as hif4_fmt, nvfp4, Format, QuantScheme};
+use hif4::util::bench::Table;
+
+fn main() {
+    let mut t = Table::new(
+        "Table II: typical values and features for HiF4 and NVFP4",
+        &["property", "HiF4", "NVFP4"],
+    );
+    t.row(vec![
+        "Storage Overhead".into(),
+        format!("{} bits/value", hif4_fmt::BITS_PER_VALUE),
+        format!("{} bits/value", nvfp4::BITS_PER_VALUE),
+    ]);
+    t.row(vec!["Group Size".into(), hif4_fmt::GROUP.to_string(), nvfp4::GROUP.to_string()]);
+    t.row(vec!["Special Values".into(), "NaN and ±0".into(), "NaN and ±0".into()]);
+    t.row(vec!["4-bit Element".into(), "S1P2 (E1M2)".into(), "E2M1".into()]);
+    t.row(vec!["Significand Precision".into(), "3 bits".into(), "2 bits".into()]);
+    t.row(vec!["Global Base Scale".into(), "E6M2".into(), "E4M3".into()]);
+    t.row(vec![
+        "Max Positive Value".into(),
+        format!("{:.6e} (= 2^18 x 1.3125)", hif4_fmt::MAX_POSITIVE),
+        format!("{:.6e} (= 2^11 x 1.3125)", nvfp4::MAX_POSITIVE),
+    ]);
+    t.row(vec![
+        "Min Positive Value".into(),
+        format!("{:.6e} (= 2^-50)", hif4_fmt::MIN_POSITIVE),
+        format!("{:.6e} (= 2^-10)", nvfp4::MIN_POSITIVE),
+    ]);
+    t.row(vec![
+        "Global Dynamic Range".into(),
+        format!("{:.1} binades", (hif4_fmt::MAX_POSITIVE / hif4_fmt::MIN_POSITIVE).log2()),
+        format!("{:.1} binades", (nvfp4::MAX_POSITIVE / nvfp4::MIN_POSITIVE).log2()),
+    ]);
+    t.row(vec![
+        "Local Dynamic Range".into(),
+        format!("{:.2} binades", (hif4_fmt::INTRA_MAX / hif4_fmt::INTRA_MIN_POS).log2()),
+        format!("{:.2} binades", (6.0f32 / 0.5).log2()),
+    ]);
+    t.print();
+
+    // Verify the extreme values actually survive a quantization roundtrip.
+    // Min probes need a companion group peak that pins the scale to its
+    // smallest value (the min positive value is a *format* extreme, reached
+    // when the group scale bottoms out and the element is the smallest
+    // nonzero code).
+    println!("\nverification by roundtrip:");
+    for (name, fmt, probe, peak) in [
+        ("HiF4 max", Format::HiF4, hif4_fmt::MAX_POSITIVE, None),
+        ("HiF4 min", Format::HiF4, hif4_fmt::MIN_POSITIVE, None),
+        ("NVFP4 max", Format::Nvfp4, nvfp4::MAX_POSITIVE, None),
+        // Scale = E4M3 min subnormal 2^-9 requires amax = 6×2^-9.
+        ("NVFP4 min", Format::Nvfp4, nvfp4::MIN_POSITIVE, Some(6.0 * 2f32.powi(-9))),
+    ] {
+        let scheme = QuantScheme::direct(fmt);
+        let mut v = vec![0f32; fmt.group()];
+        v[0] = probe;
+        if let Some(p) = peak {
+            v[1] = p;
+        }
+        let q = scheme.quant_dequant_vec(&v);
+        println!("  {name:10}: {probe:.6e} -> {:.6e}  ({})", q[0], if q[0] == probe { "exact" } else { "inexact" });
+        assert_eq!(q[0], probe, "{name} must roundtrip exactly");
+    }
+}

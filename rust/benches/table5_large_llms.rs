@@ -1,0 +1,58 @@
+//! Table V regeneration: the DeepSeek-V3.1 (MLA+MoE) and LongCat (MoE,
+//! wide-distribution) stand-ins × 10 benchmarks × {BF16, NVFP4, NVFP4+PTS,
+//! HiF4}, quantizing MLA_linear / MoE_linear (excluding the gate) /
+//! FFN_linear per the paper's §IV.C policy.
+
+use hif4::eval::tasks::Task;
+use hif4::model::zoo;
+use hif4::quant::experiment::{run_model, ExperimentConfig, QuantType};
+use hif4::util::bench::Table;
+
+fn main() {
+    let quick = std::env::var("HIF4_BENCH_QUICK").is_ok();
+    let xcfg = if quick {
+        ExperimentConfig { train_steps: 60, eval_items: 20, eval_seeds: vec![1], ..Default::default() }
+    } else {
+        ExperimentConfig { train_steps: 320, ..Default::default() }
+    };
+    // Table V evaluates direct-cast types only (no HiGPTQ rows).
+    let types = [QuantType::Bf16, QuantType::Nvfp4, QuantType::Nvfp4Pts, QuantType::HiF4];
+    let suite = Task::large_suite();
+
+    let mut header: Vec<String> = vec!["Model".into(), "A-W Quant Type".into()];
+    header.extend(suite.iter().map(|t| t.name().to_string()));
+    header.push("Mean".into());
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new("Table V: DeepSeek/LongCat stand-ins x 10 benchmarks", &hdr);
+
+    for (i, cfg) in zoo::large_llms().iter().enumerate() {
+        let t0 = std::time::Instant::now();
+        let block = run_model(cfg, &suite, &types, &xcfg, 500 + i as u64);
+        eprintln!(
+            "[{}] trained (loss {:.3} -> {:.3}) + evaluated in {:.1?}",
+            cfg.name,
+            block.losses[0],
+            block.losses.last().unwrap(),
+            t0.elapsed()
+        );
+        for (qi, row) in block.rows.iter().enumerate() {
+            let mut cells = vec![
+                if qi == 0 { block.model_name.clone() } else { String::new() },
+                row.label.clone(),
+            ];
+            cells.extend(row.task_acc.iter().map(|a| format!("{a:.2}")));
+            cells.push(format!("{:.2}", row.mean));
+            t.row(cells);
+            if qi > 0 {
+                let mut cells = vec![String::new(), "- Acc Drop".into()];
+                cells.extend(block.drops(qi).iter().map(|d| format!("{d:+.2}")));
+                cells.push(format!("{:+.2}", row.mean - block.rows[0].mean));
+                t.row(cells);
+            }
+        }
+    }
+    t.print();
+
+    println!("\nExpected shape (paper §IV.C): HiF4 direct-cast tracks BF16 on both MoE/MLA");
+    println!("stand-ins; NVFP4 (±PTS) degrades hard on the wide-distribution LongCat stand-in.");
+}

@@ -1,0 +1,189 @@
+//! The HiF4 64-length dot-product PE flow (Fig 4, left; eq. 3).
+//!
+//! Datapath stages, all integer until the very last step:
+//!
+//! 1. **Absorb level-3**: S1P2 (±7 quarter-units) << E1_16 → S2P2 (±14
+//!    quarter-units, 5-bit signed) — "multiplier inputs become 5-bit
+//!    integers".
+//! 2. **64 multiplies**: S2P2×S2P2 → products in 1/16 units, |p| ≤ 196.
+//! 3. **Integer tree**: within each level-2 span of 8, sum 8 products
+//!    (7 adds); shift each span sum left by `E1_8^A[j] + E1_8^B[j]`
+//!    (0..=2); sum the 8 span results (7 adds) → one **S12P4** integer
+//!    (17-bit signed, 1/16 units).
+//! 4. **Final stage**: one small FP multiplier forms `E6M2^A × E6M2^B`
+//!    (3-bit × 3-bit significands, exponents add); one large integer
+//!    multiplier applies the S12P4 integer to the product significand.
+
+use super::FlowStats;
+use crate::formats::e6m2::E6M2;
+use crate::formats::hif4::{HiF4Unit, GROUP, L2_SPAN};
+
+/// Exact bit-width bookkeeping for the flow (used by tests + hwcost).
+pub fn stats() -> FlowStats {
+    FlowStats {
+        small_int_muls: 64,
+        small_fp_muls: 1,
+        large_int_muls: 1,
+        fp_adds: 0,
+        // 8 spans × 7 intra-span adds + 7 inter-span adds.
+        int_adds: 8 * 7 + 7,
+        // S12P4: sign + 12 integer + 4 fraction bits.
+        final_int_bits: 17,
+    }
+}
+
+/// Intermediate integers of the flow, exposed for bit-width assertions.
+#[derive(Debug, Clone)]
+pub struct HiF4DotTrace {
+    /// The 64 S2P2 operand pairs (quarter-units, |x| ≤ 14).
+    pub s2p2_a: [i16; GROUP],
+    pub s2p2_b: [i16; GROUP],
+    /// Span sums after the level-2 shift (1/16 units).
+    pub span_sums: [i32; 8],
+    /// The single reduced integer (1/16 units) — fits S12P4.
+    pub s12p4: i32,
+    /// The E6M2×E6M2 scale product.
+    pub scale_product: f64,
+}
+
+/// Execute the flow bit-exactly. Returns the dot product and the trace.
+///
+/// NaN scales (the format's only NaN channel) propagate to a NaN result.
+pub fn dot_trace(a: &HiF4Unit, b: &HiF4Unit) -> (f64, HiF4DotTrace) {
+    let mut t = HiF4DotTrace {
+        s2p2_a: [0; GROUP],
+        s2p2_b: [0; GROUP],
+        span_sums: [0; 8],
+        s12p4: 0,
+        scale_product: f64::NAN,
+    };
+    if a.scale.is_nan() || b.scale.is_nan() {
+        return (f64::NAN, t);
+    }
+
+    // Stage 1: absorb level-3 micro-exponents into the elements.
+    for i in 0..GROUP {
+        t.s2p2_a[i] = (a.elem(i).signed_q() as i16) << a.l3(i);
+        t.s2p2_b[i] = (b.elem(i).signed_q() as i16) << b.l3(i);
+        debug_assert!(t.s2p2_a[i].abs() <= 14 && t.s2p2_b[i].abs() <= 14);
+    }
+
+    // Stages 2-3: 64 products, integer adder tree, level-2 shifts.
+    let mut total: i32 = 0;
+    for j in 0..GROUP / L2_SPAN {
+        let mut span: i32 = 0;
+        for k in 0..L2_SPAN {
+            let i = j * L2_SPAN + k;
+            span += (t.s2p2_a[i] as i32) * (t.s2p2_b[i] as i32);
+        }
+        let shift = a.l2(j * L2_SPAN) + b.l2(j * L2_SPAN);
+        debug_assert!(shift <= 2);
+        let shifted = span << shift;
+        t.span_sums[j] = shifted;
+        total += shifted;
+    }
+    t.s12p4 = total;
+    // S12P4 bound: 64 × 196 × 4 = 50176 < 2^16 in 1/16 units → 17 bits.
+    debug_assert!(total.abs() <= 50176);
+
+    // Stage 4: one small FP multiply + one large INT multiply.
+    let scale_product = scale_mul_exact(a.scale, b.scale);
+    t.scale_product = scale_product;
+    // The "large integer multiplier": scale-product significand × S12P4.
+    // In f64 this is exact: ≤6-bit significand × 17-bit integer.
+    let result = scale_product * (total as f64) / 16.0;
+    (result, t)
+}
+
+/// The small FP multiplier: E6M2 × E6M2 exactly (3-bit × 3-bit significands
+/// never round; exponents add — range [-96, 30] well inside f64).
+pub fn scale_mul_exact(a: E6M2, b: E6M2) -> f64 {
+    (a.to_f32() as f64) * (b.to_f32() as f64)
+}
+
+/// Execute the flow without the trace.
+pub fn dot(a: &HiF4Unit, b: &HiF4Unit) -> f64 {
+    dot_trace(a, b).0
+}
+
+/// Reference: dequantize both units and dot in f64 — the flow must match
+/// this *exactly* (property test below).
+pub fn dot_dequant_ref(a: &HiF4Unit, b: &HiF4Unit) -> f64 {
+    let mut acc = 0f64;
+    for i in 0..GROUP {
+        acc += (a.decode(i) as f64) * (b.decode(i) as f64);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::hif4::quantize;
+    use crate::formats::rounding::RoundMode;
+    use crate::tensor::rng::Rng;
+
+    fn random_unit(rng: &mut Rng, sigma: f32) -> HiF4Unit {
+        let v: Vec<f32> = (0..GROUP).map(|_| rng.normal() as f32 * sigma).collect();
+        quantize(&v, RoundMode::NearestEven)
+    }
+
+    #[test]
+    fn flow_matches_dequant_reference_exactly() {
+        // 200 random unit pairs across 6 decades of scale: the integer flow
+        // must equal the dequantized dot bit-for-bit in f64.
+        let mut rng = Rng::seed(101);
+        for round in 0..200 {
+            let sigma = 10f32.powi((round % 6) - 3);
+            let a = random_unit(&mut rng, sigma);
+            let b = random_unit(&mut rng, sigma);
+            let flow = dot(&a, &b);
+            let reference = dot_dequant_ref(&a, &b);
+            assert_eq!(flow, reference, "round {round}");
+        }
+    }
+
+    #[test]
+    fn s12p4_bound_is_tight_and_respected() {
+        // All-max units: every element ±1.75, all micro-exponents set.
+        let mut v = [0f32; GROUP];
+        for (i, x) in v.iter_mut().enumerate() {
+            *x = if i % 2 == 0 { 7.0 } else { -7.0 };
+        }
+        let a = quantize(&v, RoundMode::NearestEven);
+        let (d, t) = dot_trace(&a, &a);
+        // Worst case the reduced integer hits exactly ±50176 (here +).
+        assert!(t.s12p4.abs() <= 50176);
+        assert!(d > 0.0);
+    }
+
+    #[test]
+    fn zero_units_dot_to_zero() {
+        let z = quantize(&[0.0; GROUP], RoundMode::NearestEven);
+        assert_eq!(dot(&z, &z), 0.0);
+    }
+
+    #[test]
+    fn nan_scale_propagates() {
+        let mut v = [1.0f32; GROUP];
+        v[0] = f32::NAN;
+        let a = quantize(&v, RoundMode::NearestEven);
+        let b = quantize(&[1.0; GROUP], RoundMode::NearestEven);
+        assert!(dot(&a, &b).is_nan());
+    }
+
+    #[test]
+    fn operand_bit_widths() {
+        let mut rng = Rng::seed(102);
+        for _ in 0..50 {
+            let a = random_unit(&mut rng, 1.0);
+            let b = random_unit(&mut rng, 1.0);
+            let (_, t) = dot_trace(&a, &b);
+            for i in 0..GROUP {
+                // S2P2 = 5-bit signed: |x| ≤ 14 quarter-units.
+                assert!(t.s2p2_a[i].abs() <= 14);
+                assert!(t.s2p2_b[i].abs() <= 14);
+            }
+        }
+    }
+}

@@ -1,0 +1,68 @@
+//! Fixed-point dot-product compute flows (§III.B, Fig 4).
+//!
+//! A matrix-compute PE performs a 64-length dot product + accumulation. For
+//! 4-bit BFP formats at 2× the 8-bit rate, both Tensor Cores and Cube Cores
+//! use 64-wide PEs:
+//!
+//! * **HiF4** — one unit pair fills the PE (group size 64). Level-3
+//!   micro-exponents are absorbed into the elements before multiplication
+//!   (4-bit S1P2 → 5-bit S2P2 integers); the 64 products reduce **entirely
+//!   in integer arithmetic** (level-2 micro-exponents are left-shifts) down
+//!   to a single S12P4 integer, which meets *one* small FP multiplier
+//!   (E6M2×E6M2) and *one* large integer multiplier at the very end.
+//! * **NVFP4** — four group pairs are needed (group size 16). Integer
+//!   reduction stops at four S10P2 partials; each needs its own small FP
+//!   multiplier (E4M3×E4M3) and large integer multiplier, and the final
+//!   4-way accumulation runs in floating point.
+//!
+//! Everything here is **bit-exact**: the integer datapaths are checked
+//! against the dequantized-f64 dot product (they agree exactly because every
+//! quantized value is a small dyadic rational times its scales).
+
+pub mod hif4_flow;
+pub mod nvfp4_flow;
+pub mod qgemm;
+
+/// Datapath statistics a flow reports — consumed by [`crate::hwcost`] and
+/// the Fig-4 bench.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FlowStats {
+    /// 5-bit × 5-bit element multipliers (shared with the INT8 path).
+    pub small_int_muls: usize,
+    /// Small floating-point scale multipliers (metadata × metadata).
+    pub small_fp_muls: usize,
+    /// Large integer multipliers (scale significand × reduced integer).
+    pub large_int_muls: usize,
+    /// Floating-point adders in the final accumulation.
+    pub fp_adds: usize,
+    /// Integer adders in the reduction tree (count of 2-input adds).
+    pub int_adds: usize,
+    /// Width in bits of the final integer(s) the reduction produces.
+    pub final_int_bits: u32,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::hif4_flow;
+    use super::nvfp4_flow;
+
+    #[test]
+    fn fig4_multiplier_elimination() {
+        // "HiF4 eliminates six multipliers" — 1 small FP + 1 large INT vs
+        // 4 small FP + 4 large INT.
+        let h = hif4_flow::stats();
+        let n = nvfp4_flow::stats();
+        assert_eq!(h.small_fp_muls, 1);
+        assert_eq!(h.large_int_muls, 1);
+        assert_eq!(n.small_fp_muls, 4);
+        assert_eq!(n.large_int_muls, 4);
+        let eliminated =
+            (n.small_fp_muls + n.large_int_muls) - (h.small_fp_muls + h.large_int_muls);
+        assert_eq!(eliminated, 6);
+        // Both share the 64 small element multipliers.
+        assert_eq!(h.small_int_muls, 64);
+        assert_eq!(n.small_int_muls, 64);
+        // NVFP4's final accumulation is floating-point; HiF4's is not.
+        assert!(h.fp_adds == 0 && n.fp_adds == 3);
+    }
+}

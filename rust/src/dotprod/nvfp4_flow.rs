@@ -1,0 +1,160 @@
+//! The NVFP4 64-length dot-product PE flow (Fig 4, right).
+//!
+//! Four group pairs (4 × 16 = 64) feed the PE. Per group:
+//!
+//! 1. E2M1 (±6, half-units) → **S3P1** 5-bit signed integers (±12).
+//! 2. 16 multiplies → products in 1/4 units, |p| ≤ 144.
+//! 3. Integer tree: 15 adds → **S10P2** partial (|sum| ≤ 2304, 13-bit).
+//! 4. Per group: one small FP multiplier (E4M3 × E4M3) and one large
+//!    integer multiplier → 4 floating-point partials.
+//! 5. Final accumulation of the 4 partials **in floating point** (3 adds).
+//!
+//! Relative to HiF4 this spends 4× the metadata multipliers and an FP
+//! accumulation stage — the §III.B area/power argument.
+
+use super::FlowStats;
+use crate::formats::nvfp4::{Nvfp4Group, GROUP};
+
+/// Number of NVFP4 group pairs per 64-length PE.
+pub const GROUPS_PER_PE: usize = 4;
+
+/// Datapath statistics (see [`FlowStats`]).
+pub fn stats() -> FlowStats {
+    FlowStats {
+        small_int_muls: 64,
+        small_fp_muls: GROUPS_PER_PE,
+        large_int_muls: GROUPS_PER_PE,
+        // Final accumulation from 4 partials: 3 FP adds.
+        fp_adds: GROUPS_PER_PE - 1,
+        // 4 groups × 15 intra-group adds.
+        int_adds: GROUPS_PER_PE * 15,
+        // S10P2: sign + 10 integer + 2 fraction bits.
+        final_int_bits: 13,
+    }
+}
+
+/// Intermediate values, exposed for bit-width assertions.
+#[derive(Debug, Clone)]
+pub struct Nvfp4DotTrace {
+    /// Per-group reduced integers (1/4 units) — each fits S10P2.
+    pub s10p2: [i32; GROUPS_PER_PE],
+    /// Per-group scale products (E4M3 × E4M3, exact).
+    pub scale_products: [f64; GROUPS_PER_PE],
+    /// The four floating-point partials entering the final FP tree.
+    pub partials: [f64; GROUPS_PER_PE],
+}
+
+/// Execute the 64-length flow over 4 group pairs, bit-exactly.
+pub fn dot64_trace(a: &[Nvfp4Group], b: &[Nvfp4Group]) -> (f64, Nvfp4DotTrace) {
+    assert_eq!(a.len(), GROUPS_PER_PE);
+    assert_eq!(b.len(), GROUPS_PER_PE);
+    let mut t = Nvfp4DotTrace {
+        s10p2: [0; GROUPS_PER_PE],
+        scale_products: [0.0; GROUPS_PER_PE],
+        partials: [0.0; GROUPS_PER_PE],
+    };
+    for g in 0..GROUPS_PER_PE {
+        if a[g].scale.is_nan() || b[g].scale.is_nan() {
+            return (f64::NAN, t);
+        }
+        let mut sum: i32 = 0;
+        for i in 0..GROUP {
+            let xa = a[g].elem(i).signed_halves() as i32; // S3P1, ±12
+            let xb = b[g].elem(i).signed_halves() as i32;
+            debug_assert!(xa.abs() <= 12 && xb.abs() <= 12);
+            sum += xa * xb;
+        }
+        debug_assert!(sum.abs() <= 2304, "S10P2 bound");
+        t.s10p2[g] = sum;
+        // Small FP multiplier: E4M3 × E4M3 is exact in f64 (4b × 4b sig).
+        let sp = (a[g].scale.to_f32() as f64) * (b[g].scale.to_f32() as f64);
+        t.scale_products[g] = sp;
+        // Large integer multiplier: scale significand × S10P2 (exact).
+        t.partials[g] = sp * (sum as f64) / 4.0;
+    }
+    // Final floating-point accumulation (balanced 3-add tree).
+    let r = (t.partials[0] + t.partials[1]) + (t.partials[2] + t.partials[3]);
+    (r, t)
+}
+
+/// Flow without the trace.
+pub fn dot64(a: &[Nvfp4Group], b: &[Nvfp4Group]) -> f64 {
+    dot64_trace(a, b).0
+}
+
+/// Reference: dequantized f64 dot product over any number of group pairs
+/// (also serves as the tail path of the quantized GEMM).
+pub fn dot64_dequant_ref(a: &[Nvfp4Group], b: &[Nvfp4Group]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut acc = 0f64;
+    for g in 0..a.len() {
+        for i in 0..GROUP {
+            acc += (a[g].decode(i) as f64) * (b[g].decode(i) as f64);
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::nvfp4::quantize;
+    use crate::formats::rounding::RoundMode;
+    use crate::tensor::rng::Rng;
+
+    fn random_groups(rng: &mut Rng, sigma: f32) -> Vec<Nvfp4Group> {
+        (0..GROUPS_PER_PE)
+            .map(|_| {
+                let v: Vec<f32> = (0..GROUP).map(|_| rng.normal() as f32 * sigma).collect();
+                quantize(&v, RoundMode::NearestEven)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn flow_matches_dequant_reference_exactly() {
+        let mut rng = Rng::seed(201);
+        for round in 0..200 {
+            let sigma = 10f32.powi((round % 5) - 2);
+            let a = random_groups(&mut rng, sigma);
+            let b = random_groups(&mut rng, sigma);
+            assert_eq!(dot64(&a, &b), dot64_dequant_ref(&a, &b), "round {round}");
+        }
+    }
+
+    #[test]
+    fn s10p2_bound() {
+        let v: Vec<f32> = (0..GROUP).map(|i| if i % 2 == 0 { 6.0 } else { -6.0 }).collect();
+        let g = quantize(&v, RoundMode::NearestEven);
+        let a = vec![g.clone(), g.clone(), g.clone(), g.clone()];
+        let (_, t) = dot64_trace(&a, &a);
+        for s in t.s10p2 {
+            assert_eq!(s, 2304, "all-max groups hit the S10P2 bound exactly");
+        }
+    }
+
+    #[test]
+    fn exactly_representable_tensor_dots_exactly() {
+        // A tensor whose groups have amax = 6 (scale 1.0, exact in E4M3) and
+        // whose elements lie on the E2M1 grid is represented exactly, so the
+        // flow must return the *true* dot product of the original values.
+        let grid = [0.0f32, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+        let mut rng = Rng::seed(202);
+        let pick = |rng: &mut Rng| {
+            let sign = if rng.below(2) == 0 { 1.0 } else { -1.0 };
+            grid[rng.below(8)] * sign
+        };
+        let mut v: Vec<f32> = (0..64).map(|_| pick(&mut rng)).collect();
+        let mut w: Vec<f32> = (0..64).map(|_| pick(&mut rng)).collect();
+        for g in 0..4 {
+            v[g * 16] = 6.0; // pin each group's amax to 6
+            w[g * 16] = -6.0;
+        }
+        let na: Vec<Nvfp4Group> =
+            v.chunks(16).map(|c| quantize(c, RoundMode::NearestEven)).collect();
+        let nb: Vec<Nvfp4Group> =
+            w.chunks(16).map(|c| quantize(c, RoundMode::NearestEven)).collect();
+        let exact: f64 = v.iter().zip(&w).map(|(x, y)| (*x as f64) * (*y as f64)).sum();
+        assert_eq!(dot64(&na, &nb), exact);
+    }
+}

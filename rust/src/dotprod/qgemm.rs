@@ -1,0 +1,210 @@
+//! Quantized GEMM over packed units — ties the PE flows (Fig 4) to whole
+//! matrix multiplications and cross-checks them against the dequantize-then-
+//! f32-gemm "simulated quantization" path the LLM experiments use.
+//!
+//! Layout: the reduction (K) axis is blocked into format groups; `A` rows
+//! and `B` columns are quantized independently per K-block, mirroring how
+//! activations (row-major) and weights (stored transposed, out×in) are
+//! blocked on real hardware.
+
+use super::{hif4_flow, nvfp4_flow};
+use crate::formats::hif4::{self, HiF4Unit};
+use crate::formats::nvfp4::{self, Nvfp4Group};
+use crate::formats::rounding::RoundMode;
+use crate::tensor::Matrix;
+
+/// A matrix quantized into HiF4 units along its rows (row-major; each row
+/// padded to a multiple of 64).
+pub struct HiF4Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub units_per_row: usize,
+    pub units: Vec<HiF4Unit>,
+}
+
+impl HiF4Matrix {
+    /// Quantize a row-major matrix along its rows.
+    pub fn quantize(m: &Matrix, mode: RoundMode) -> HiF4Matrix {
+        let upr = m.cols.div_ceil(hif4::GROUP);
+        let mut units = Vec::with_capacity(m.rows * upr);
+        let mut buf = vec![0f32; hif4::GROUP];
+        for r in 0..m.rows {
+            let row = m.row(r);
+            for u in 0..upr {
+                let start = u * hif4::GROUP;
+                let end = (start + hif4::GROUP).min(m.cols);
+                buf[..end - start].copy_from_slice(&row[start..end]);
+                buf[end - start..].fill(0.0);
+                units.push(hif4::quantize(&buf, mode));
+            }
+        }
+        HiF4Matrix { rows: m.rows, cols: m.cols, units_per_row: upr, units }
+    }
+
+    /// Dequantize back to a dense matrix (zero-padding trimmed).
+    pub fn dequantize(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        let mut buf = [0f32; hif4::GROUP];
+        for r in 0..self.rows {
+            for u in 0..self.units_per_row {
+                self.units[r * self.units_per_row + u].decode_all(&mut buf);
+                let start = u * hif4::GROUP;
+                let end = (start + hif4::GROUP).min(self.cols);
+                m.row_mut(r)[start..end].copy_from_slice(&buf[..end - start]);
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn row_units(&self, r: usize) -> &[HiF4Unit] {
+        &self.units[r * self.units_per_row..(r + 1) * self.units_per_row]
+    }
+}
+
+/// A matrix quantized into NVFP4 groups along its rows.
+pub struct Nvfp4Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub groups_per_row: usize,
+    pub groups: Vec<Nvfp4Group>,
+}
+
+impl Nvfp4Matrix {
+    pub fn quantize(m: &Matrix, mode: RoundMode) -> Nvfp4Matrix {
+        let gpr = m.cols.div_ceil(nvfp4::GROUP);
+        let mut groups = Vec::with_capacity(m.rows * gpr);
+        let mut buf = vec![0f32; nvfp4::GROUP];
+        for r in 0..m.rows {
+            let row = m.row(r);
+            for g in 0..gpr {
+                let start = g * nvfp4::GROUP;
+                let end = (start + nvfp4::GROUP).min(m.cols);
+                buf[..end - start].copy_from_slice(&row[start..end]);
+                buf[end - start..].fill(0.0);
+                groups.push(nvfp4::quantize(&buf, mode));
+            }
+        }
+        Nvfp4Matrix { rows: m.rows, cols: m.cols, groups_per_row: gpr, groups }
+    }
+
+    pub fn dequantize(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        let mut buf = [0f32; nvfp4::GROUP];
+        for r in 0..self.rows {
+            for g in 0..self.groups_per_row {
+                self.groups[r * self.groups_per_row + g].decode_all(&mut buf);
+                let start = g * nvfp4::GROUP;
+                let end = (start + nvfp4::GROUP).min(self.cols);
+                m.row_mut(r)[start..end].copy_from_slice(&buf[..end - start]);
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn row_groups(&self, r: usize) -> &[Nvfp4Group] {
+        &self.groups[r * self.groups_per_row..(r + 1) * self.groups_per_row]
+    }
+}
+
+/// `C = A · Bᵀ` where both operands are HiF4-quantized along the K axis and
+/// every 64-length slice runs through the bit-exact PE flow.
+pub fn hif4_gemm_bt(a: &HiF4Matrix, b_t: &HiF4Matrix) -> Matrix {
+    assert_eq!(a.cols, b_t.cols, "reduction dims must agree");
+    let mut c = Matrix::zeros(a.rows, b_t.rows);
+    for i in 0..a.rows {
+        let au = a.row_units(i);
+        for j in 0..b_t.rows {
+            let bu = b_t.row_units(j);
+            let mut acc = 0f64;
+            for (ua, ub) in au.iter().zip(bu) {
+                acc += hif4_flow::dot(ua, ub);
+            }
+            c.data[i * b_t.rows + j] = acc as f32;
+        }
+    }
+    c
+}
+
+/// `C = A · Bᵀ` with NVFP4 operands; K-groups run through the 64-length PE
+/// four at a time (tail PEs fall back to group-by-group partials, which is
+/// numerically identical since the flow is exact).
+pub fn nvfp4_gemm_bt(a: &Nvfp4Matrix, b_t: &Nvfp4Matrix) -> Matrix {
+    assert_eq!(a.cols, b_t.cols, "reduction dims must agree");
+    let mut c = Matrix::zeros(a.rows, b_t.rows);
+    for i in 0..a.rows {
+        let ag = a.row_groups(i);
+        for j in 0..b_t.rows {
+            let bg = b_t.row_groups(j);
+            let mut acc = 0f64;
+            let mut g = 0;
+            while g + nvfp4_flow::GROUPS_PER_PE <= ag.len() {
+                acc += nvfp4_flow::dot64(
+                    &ag[g..g + nvfp4_flow::GROUPS_PER_PE],
+                    &bg[g..g + nvfp4_flow::GROUPS_PER_PE],
+                );
+                g += nvfp4_flow::GROUPS_PER_PE;
+            }
+            while g < ag.len() {
+                acc += nvfp4_flow::dot64_dequant_ref(
+                    core::slice::from_ref(&ag[g]),
+                    core::slice::from_ref(&bg[g]),
+                );
+                g += 1;
+            }
+            c.data[i * b_t.rows + j] = acc as f32;
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::gemm;
+    use crate::tensor::rng::Rng;
+
+    #[test]
+    fn hif4_qgemm_equals_dequantized_f32_gemm() {
+        let mut rng = Rng::seed(301);
+        let a = Matrix::randn(5, 130, 1.0, &mut rng); // non-multiple of 64
+        let b = Matrix::randn(7, 130, 1.0, &mut rng);
+        let qa = HiF4Matrix::quantize(&a, RoundMode::NearestEven);
+        let qb = HiF4Matrix::quantize(&b, RoundMode::NearestEven);
+        let via_pe = hif4_gemm_bt(&qa, &qb);
+        let via_dequant = gemm::matmul_bt(&qa.dequantize(), &qb.dequantize());
+        // f64 PE accumulation vs f32 gemm accumulation: allow f32 summation
+        // noise proportional to the reduction length.
+        for (x, y) in via_pe.data.iter().zip(&via_dequant.data) {
+            assert!((x - y).abs() <= 2e-3 * (1.0 + x.abs()), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn nvfp4_qgemm_equals_dequantized_f32_gemm() {
+        let mut rng = Rng::seed(302);
+        let a = Matrix::randn(4, 72, 1.0, &mut rng); // 4.5 groups per row
+        let b = Matrix::randn(6, 72, 1.0, &mut rng);
+        let qa = Nvfp4Matrix::quantize(&a, RoundMode::NearestEven);
+        let qb = Nvfp4Matrix::quantize(&b, RoundMode::NearestEven);
+        let via_pe = nvfp4_gemm_bt(&qa, &qb);
+        let via_dequant = gemm::matmul_bt(&qa.dequantize(), &qb.dequantize());
+        for (x, y) in via_pe.data.iter().zip(&via_dequant.data) {
+            assert!((x - y).abs() <= 2e-3 * (1.0 + x.abs()), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn quantize_dequantize_matches_scheme_path() {
+        // The packed-matrix path and the flat QuantScheme path must agree.
+        let mut rng = Rng::seed(303);
+        let m = Matrix::randn(3, 100, 0.5, &mut rng);
+        let packed = HiF4Matrix::quantize(&m, RoundMode::NearestEven).dequantize();
+        let scheme = crate::formats::QuantScheme::direct(crate::formats::Format::HiF4);
+        for r in 0..m.rows {
+            let flat = scheme.quant_dequant_vec(m.row(r));
+            assert_eq!(packed.row(r), &flat[..], "row {r}");
+        }
+    }
+}

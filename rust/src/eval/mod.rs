@@ -1,0 +1,4 @@
+//! Synthetic evaluation harness mirroring the paper's benchmark suites.
+
+pub mod harness;
+pub mod tasks;

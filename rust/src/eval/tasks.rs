@@ -1,0 +1,440 @@
+//! Synthetic language + benchmark generators (DESIGN.md §4 substitution for
+//! ARC-C/E, BoolQ, HellaSwag, Lambada, PiQA, WinoGrande, MMLU — plus the
+//! Gsm8K / Math500 / CMMLU analogues Table V adds).
+//!
+//! The corpus is a probabilistic grammar with learnable regularities a tiny
+//! transformer can acquire: determiner–noun–verb *class agreement*, a
+//! long-range *copy/coreference* rule, digit *successor* and *skip-counting*
+//! runs, and a low-frequency second "language" domain. Each benchmark
+//! isolates one phenomenon in the paper's task *shape* (2-way / 4-way
+//! multiple choice, cloze, yes/no), so PTQ accuracy drops measure how
+//! quantization erodes the trained model's likelihood margins.
+
+use crate::tensor::Rng;
+
+/// Vocabulary layout (total 320).
+pub const VOCAB: usize = 320;
+pub const SEP: usize = 1;
+pub const TRIG: usize = 300; // coreference trigger: "the aforementioned"
+const DIGIT0: usize = 2; // D0..D9 = 2..=11
+const DET_A: (usize, usize) = (12, 16);
+const DET_B: (usize, usize) = (16, 20);
+const NOUN_A: (usize, usize) = (20, 50);
+const NOUN_B: (usize, usize) = (50, 80);
+const VERB_A: (usize, usize) = (80, 110);
+const VERB_B: (usize, usize) = (110, 140);
+const ADJ: (usize, usize) = (140, 160);
+const NAME: (usize, usize) = (160, 200);
+// Domain 2 ("CMMLU" analogue): disjoint vocabulary, 10× rarer in training.
+const DET2_A: (usize, usize) = (200, 204);
+const DET2_B: (usize, usize) = (204, 208);
+const NOUN2_A: (usize, usize) = (208, 224);
+const NOUN2_B: (usize, usize) = (224, 240);
+const VERB2_A: (usize, usize) = (240, 270);
+const VERB2_B: (usize, usize) = (270, 300);
+
+fn pick(rng: &mut Rng, range: (usize, usize)) -> usize {
+    range.0 + rng.below(range.1 - range.0)
+}
+
+/// One corpus sentence (ends with SEP).
+pub fn sentence(rng: &mut Rng) -> Vec<usize> {
+    match rng.below(100) {
+        // 50%: domain-1 agreement sentence.
+        0..=49 => agreement_sentence(rng, false),
+        // 10%: domain-2 agreement sentence.
+        50..=59 => agreement_sentence(rng, true),
+        // 15%: copy / coreference.
+        60..=74 => copy_sentence(rng),
+        // 15%: digit successor run.
+        75..=89 => digit_run(rng, 1),
+        // 10%: skip-2 run.
+        _ => digit_run(rng, 2),
+    }
+}
+
+/// DET_c NOUN_c [ADJ] VERB_c [NOUN_any] SEP with class agreement.
+fn agreement_sentence(rng: &mut Rng, domain2: bool) -> Vec<usize> {
+    let class_a = rng.below(2) == 0;
+    let (det, noun, verb) = ranges(class_a, domain2);
+    let mut s = vec![pick(rng, det), pick(rng, noun)];
+    if !domain2 && rng.below(2) == 0 {
+        s.push(pick(rng, ADJ));
+    }
+    s.push(pick(rng, verb));
+    if rng.below(2) == 0 {
+        let (_, obj_noun, _) = ranges(rng.below(2) == 0, domain2);
+        s.push(pick(rng, obj_noun));
+    }
+    s.push(SEP);
+    s
+}
+
+fn ranges(class_a: bool, domain2: bool) -> ((usize, usize), (usize, usize), (usize, usize)) {
+    match (class_a, domain2) {
+        (true, false) => (DET_A, NOUN_A, VERB_A),
+        (false, false) => (DET_B, NOUN_B, VERB_B),
+        (true, true) => (DET2_A, NOUN2_A, VERB2_A),
+        (false, true) => (DET2_B, NOUN2_B, VERB2_B),
+    }
+}
+
+/// NAME_x (filler sentence) TRIG NAME_x SEP — the name repeats after TRIG.
+fn copy_sentence(rng: &mut Rng) -> Vec<usize> {
+    let x = pick(rng, NAME);
+    let mut s = vec![x];
+    s.extend(agreement_sentence(rng, false));
+    s.pop(); // drop inner SEP
+    s.push(TRIG);
+    s.push(x);
+    s.push(SEP);
+    s
+}
+
+/// D_i D_{i+step} D_{i+2·step} D_{i+3·step} SEP.
+fn digit_run(rng: &mut Rng, step: usize) -> Vec<usize> {
+    let max_start = 9 - 3 * step;
+    let i = rng.below(max_start + 1);
+    (0..4).map(|k| DIGIT0 + i + k * step).chain([SEP]).collect()
+}
+
+/// Sample a training sequence of ~`len` tokens (whole sentences).
+pub fn training_sequence(rng: &mut Rng, len: usize) -> Vec<usize> {
+    let mut s = Vec::with_capacity(len + 8);
+    while s.len() < len {
+        s.extend(sentence(rng));
+    }
+    s.truncate(len);
+    s
+}
+
+/// A multiple-choice item: context, candidate continuations, gold index.
+#[derive(Debug, Clone)]
+pub struct Item {
+    pub context: Vec<usize>,
+    pub choices: Vec<Vec<usize>>,
+    pub gold: usize,
+}
+
+/// The benchmark suite: a name + item generator per task shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Task {
+    /// ARC-C analogue: 4-way verb choice, hard distractors (wrong-class
+    /// verbs — same surface distribution).
+    AgreeHard,
+    /// ARC-E analogue: 4-way, easy distractors (non-verbs).
+    AgreeEasy,
+    /// BoolQ analogue: 2-way correct-verb vs wrong-class-verb.
+    YesNo,
+    /// HellaSwag analogue: 4-way multi-token continuation.
+    Continuation,
+    /// Lambada analogue: cloze — predict the copied name (4 candidates).
+    LastWord,
+    /// PiQA analogue: 2-way noun-class consistency after a determiner.
+    Physical,
+    /// WinoGrande analogue: 2-way coreference (which name follows TRIG).
+    Coref,
+    /// MMLU analogue: mixed 4-way over all phenomena.
+    MultiDomain,
+    /// Gsm8K analogue: digit successor arithmetic, 4-way.
+    Arith,
+    /// Math500 analogue: skip-2 counting (harder pattern), 4-way.
+    SkipCount,
+    /// CMMLU analogue: agreement in the rare second domain, 4-way.
+    Domain2,
+}
+
+impl Task {
+    pub fn name(self) -> &'static str {
+        match self {
+            Task::AgreeHard => "ARC-C*",
+            Task::AgreeEasy => "ARC-E*",
+            Task::YesNo => "BoolQ*",
+            Task::Continuation => "HellaS*",
+            Task::LastWord => "LamOp*",
+            Task::Physical => "Piqa*",
+            Task::Coref => "WinoG*",
+            Task::MultiDomain => "MMLU*",
+            Task::Arith => "Gsm8K*",
+            Task::SkipCount => "Math500*",
+            Task::Domain2 => "CMMLU*",
+        }
+    }
+
+    /// The Table III suite (8 benchmarks).
+    pub fn small_suite() -> Vec<Task> {
+        vec![
+            Task::AgreeHard,
+            Task::AgreeEasy,
+            Task::YesNo,
+            Task::Continuation,
+            Task::LastWord,
+            Task::Physical,
+            Task::Coref,
+            Task::MultiDomain,
+        ]
+    }
+
+    /// The Table V suite (10 benchmarks; the paper swaps LamOp for Gsm8K/
+    /// Math500/CMMLU).
+    pub fn large_suite() -> Vec<Task> {
+        vec![
+            Task::AgreeHard,
+            Task::AgreeEasy,
+            Task::YesNo,
+            Task::Continuation,
+            Task::Physical,
+            Task::Coref,
+            Task::Arith,
+            Task::MultiDomain,
+            Task::SkipCount,
+            Task::Domain2,
+        ]
+    }
+
+    /// Generate one item.
+    pub fn item(self, rng: &mut Rng) -> Item {
+        match self {
+            Task::AgreeHard => {
+                let class_a = rng.below(2) == 0;
+                let (det, noun, verb) = ranges(class_a, false);
+                let (_, _, wrong_verb) = ranges(!class_a, false);
+                let context = vec![pick(rng, det), pick(rng, noun), pick(rng, ADJ)];
+                mc4(rng, context, verb, wrong_verb)
+            }
+            Task::AgreeEasy => {
+                let class_a = rng.below(2) == 0;
+                let (det, noun, verb) = ranges(class_a, false);
+                let context = vec![pick(rng, det), pick(rng, noun)];
+                // Easy distractors: determiners and sentence-initial names
+                // never follow a noun in the grammar (vs AgreeHard whose
+                // distractors are verbs of the wrong class).
+                let gold = rng.below(4);
+                let choices = (0..4)
+                    .map(|i| {
+                        if i == gold {
+                            vec![pick(rng, verb)]
+                        } else {
+                            vec![pick(rng, if i % 2 == 0 { DET_B } else { DET_A })]
+                        }
+                    })
+                    .collect();
+                Item { context, choices, gold }
+            }
+            Task::YesNo => {
+                let class_a = rng.below(2) == 0;
+                let (det, noun, verb) = ranges(class_a, false);
+                let (_, _, wrong_verb) = ranges(!class_a, false);
+                let context = vec![pick(rng, det), pick(rng, noun)];
+                let gold = rng.below(2);
+                let choices = (0..2)
+                    .map(|i| vec![pick(rng, if i == gold { verb } else { wrong_verb })])
+                    .collect();
+                Item { context, choices, gold }
+            }
+            Task::Continuation => {
+                let class_a = rng.below(2) == 0;
+                let (det, noun, verb) = ranges(class_a, false);
+                let (wdet, wnoun, wverb) = ranges(!class_a, false);
+                let context = vec![pick(rng, det), pick(rng, noun)];
+                let gold = rng.below(4);
+                let choices = (0..4)
+                    .map(|i| {
+                        if i == gold {
+                            // consistent: VERB_c NOUN SEP
+                            vec![pick(rng, verb), pick(rng, wnoun), SEP]
+                        } else {
+                            // inconsistent continuation
+                            vec![pick(rng, wverb), pick(rng, wdet), SEP]
+                        }
+                    })
+                    .collect();
+                Item { context, choices, gold }
+            }
+            Task::LastWord => {
+                let x = pick(rng, NAME);
+                let mut context = vec![x];
+                context.extend(agreement_sentence(rng, false));
+                context.pop();
+                context.push(TRIG);
+                let gold = rng.below(4);
+                let choices = (0..4)
+                    .map(|i| {
+                        if i == gold {
+                            vec![x]
+                        } else {
+                            // distinct distractor names
+                            loop {
+                                let y = pick(rng, NAME);
+                                if y != x {
+                                    break vec![y];
+                                }
+                            }
+                        }
+                    })
+                    .collect();
+                Item { context, choices, gold }
+            }
+            Task::Physical => {
+                let class_a = rng.below(2) == 0;
+                let (det, noun, _) = ranges(class_a, false);
+                let (_, wrong_noun, _) = ranges(!class_a, false);
+                let context = vec![pick(rng, det)];
+                let gold = rng.below(2);
+                let choices = (0..2)
+                    .map(|i| vec![pick(rng, if i == gold { noun } else { wrong_noun })])
+                    .collect();
+                Item { context, choices, gold }
+            }
+            Task::Coref => {
+                let x = pick(rng, NAME);
+                let y = loop {
+                    let y = pick(rng, NAME);
+                    if y != x {
+                        break y;
+                    }
+                };
+                // Corpus rule: the *first* name repeats after TRIG.
+                let mut context = vec![x];
+                context.extend(agreement_sentence(rng, false));
+                context.pop();
+                context.push(y); // distractor mention (unseen pattern noise)
+                context.push(TRIG);
+                let gold = rng.below(2);
+                let choices =
+                    (0..2).map(|i| vec![if i == gold { x } else { y }]).collect();
+                Item { context, choices, gold }
+            }
+            Task::MultiDomain => {
+                // Mixture of the other 4-way generators.
+                match rng.below(3) {
+                    0 => Task::AgreeHard.item(rng),
+                    1 => Task::Continuation.item(rng),
+                    _ => Task::Arith.item(rng),
+                }
+            }
+            Task::Arith => {
+                let i = rng.below(7);
+                let context = vec![DIGIT0 + i, DIGIT0 + i + 1, DIGIT0 + i + 2];
+                let correct = DIGIT0 + i + 3;
+                digit_mc(rng, context, correct)
+            }
+            Task::SkipCount => {
+                let i = rng.below(4);
+                let context = vec![DIGIT0 + i, DIGIT0 + i + 2, DIGIT0 + i + 4];
+                let correct = DIGIT0 + i + 6;
+                digit_mc(rng, context, correct)
+            }
+            Task::Domain2 => {
+                let class_a = rng.below(2) == 0;
+                let (det, noun, verb) = ranges(class_a, true);
+                let (_, _, wrong_verb) = ranges(!class_a, true);
+                let context = vec![pick(rng, det), pick(rng, noun)];
+                mc4(rng, context, verb, wrong_verb)
+            }
+        }
+    }
+}
+
+/// 4-way MC: one token from `good`, three from `bad`.
+fn mc4(rng: &mut Rng, context: Vec<usize>, good: (usize, usize), bad: (usize, usize)) -> Item {
+    let gold = rng.below(4);
+    let choices = (0..4)
+        .map(|i| vec![pick(rng, if i == gold { good } else { bad })])
+        .collect();
+    Item { context, choices, gold }
+}
+
+/// 4-way MC over digits: correct successor vs other digits.
+fn digit_mc(rng: &mut Rng, context: Vec<usize>, correct: usize) -> Item {
+    let gold = rng.below(4);
+    let choices = (0..4)
+        .map(|i| {
+            if i == gold {
+                vec![correct]
+            } else {
+                loop {
+                    let d = DIGIT0 + rng.below(10);
+                    if d != correct {
+                        break vec![d];
+                    }
+                }
+            }
+        })
+        .collect();
+    Item { context, choices, gold }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sentences_stay_in_vocab() {
+        let mut rng = Rng::seed(1);
+        for _ in 0..500 {
+            for t in sentence(&mut rng) {
+                assert!(t < VOCAB);
+            }
+        }
+    }
+
+    #[test]
+    fn training_sequence_length() {
+        let mut rng = Rng::seed(2);
+        let s = training_sequence(&mut rng, 40);
+        assert_eq!(s.len(), 40);
+    }
+
+    #[test]
+    fn items_well_formed() {
+        let mut rng = Rng::seed(3);
+        for task in Task::small_suite().into_iter().chain(Task::large_suite()) {
+            for _ in 0..50 {
+                let item = task.item(&mut rng);
+                assert!(item.gold < item.choices.len(), "{}", task.name());
+                assert!(!item.context.is_empty());
+                for ch in &item.choices {
+                    assert!(!ch.is_empty());
+                    for t in ch.iter().chain(&item.context) {
+                        assert!(*t < VOCAB);
+                    }
+                }
+                // Gold choice differs from every distractor.
+                for (i, ch) in item.choices.iter().enumerate() {
+                    if i != item.gold {
+                        assert_ne!(ch, &item.choices[item.gold], "{}", task.name());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn copy_rule_present_in_corpus() {
+        // TRIG must be followed by the first token of its sentence.
+        let mut rng = Rng::seed(4);
+        let mut seen = 0;
+        for _ in 0..300 {
+            let s = sentence(&mut rng);
+            if let Some(p) = s.iter().position(|t| *t == TRIG) {
+                assert_eq!(s[p + 1], s[0], "copy rule violated");
+                seen += 1;
+            }
+        }
+        assert!(seen > 10, "copy sentences should appear");
+    }
+
+    #[test]
+    fn gold_answer_uniform() {
+        // No positional bias in gold indices.
+        let mut rng = Rng::seed(5);
+        let mut counts = [0usize; 4];
+        for _ in 0..2000 {
+            counts[Task::AgreeHard.item(&mut rng).gold] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 / 2000.0 - 0.25).abs() < 0.05);
+        }
+    }
+}

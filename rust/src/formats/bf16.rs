@@ -1,0 +1,134 @@
+//! Bit-exact BF16 (bfloat16) helpers.
+//!
+//! The paper's Algorithm 1 consumes BF16 vectors; the conversion pipeline
+//! therefore needs an exact software BF16: f32→bf16 rounding (RNE, the mode
+//! hardware implements), bf16→f32 widening (exact), and the BF16 constant
+//! `(1/7)_BF16` used for the level-1 scale factor.
+
+use super::rounding::RoundMode;
+
+/// A bfloat16 value stored as its 16 raw bits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Bf16(pub u16);
+
+impl Bf16 {
+    pub const ZERO: Bf16 = Bf16(0);
+    /// Largest finite bf16: 0x7F7F = 2^127 × 1.9921875 ≈ 3.3895e38.
+    pub const MAX: Bf16 = Bf16(0x7F7F);
+
+    /// Exact widening: bf16 is the top 16 bits of an f32.
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+
+    /// Round an f32 to bf16 with round-half-to-even (hardware default).
+    #[inline]
+    pub fn from_f32(x: f32) -> Bf16 {
+        Bf16(f32_to_bf16_bits(x, RoundMode::NearestEven))
+    }
+
+    /// Round an f32 to bf16 under an explicit rounding mode.
+    #[inline]
+    pub fn from_f32_mode(x: f32, mode: RoundMode) -> Bf16 {
+        Bf16(f32_to_bf16_bits(x, mode))
+    }
+
+    #[inline]
+    pub fn is_nan(self) -> bool {
+        (self.0 & 0x7F80) == 0x7F80 && (self.0 & 0x007F) != 0
+    }
+}
+
+/// f32 → bf16 bits with the requested rounding on the dropped 16 bits.
+fn f32_to_bf16_bits(x: f32, mode: RoundMode) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // Preserve a quiet NaN payload.
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let lower = bits & 0xFFFF;
+    let upper = (bits >> 16) as u16;
+    let round_up = match mode {
+        RoundMode::NearestEven => {
+            lower > 0x8000 || (lower == 0x8000 && (upper & 1) == 1)
+        }
+        RoundMode::HalfAwayFromZero => lower >= 0x8000,
+    };
+    // Carry propagation on round-up is correct through exponent bumps and
+    // saturates to infinity naturally.
+    if round_up {
+        upper.wrapping_add(1)
+    } else {
+        upper
+    }
+}
+
+/// Round every element of `xs` to bf16 precision in-place (kept as f32).
+pub fn quantize_bf16_inplace(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = Bf16::from_f32(*x).to_f32();
+    }
+}
+
+/// `(1/7)` rounded to BF16, as used on line 8 of Algorithm 1.
+pub fn one_seventh_bf16() -> f32 {
+    Bf16::from_f32(1.0 / 7.0).to_f32()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_exact_values() {
+        for v in [0.0f32, 1.0, -1.0, 0.5, 2.0, -3.5, 1.75, 0.25] {
+            assert_eq!(Bf16::from_f32(v).to_f32(), v, "{v} should be exact in bf16");
+        }
+    }
+
+    #[test]
+    fn rne_on_dropped_bits() {
+        // bf16 has 7 mantissa bits: the grid at 1.0 has step 2^-7.
+        // 1.0 + 2^-8 is exactly halfway; RNE keeps the even (1.0).
+        let x = 1.0 + 2f32.powi(-8);
+        assert_eq!(Bf16::from_f32(x).to_f32(), 1.0);
+        // 1.0 + 3·2^-9 = 0.75 of a step: nearest is 1 + 2^-7.
+        let y = 1.0 + 3.0 * 2f32.powi(-9);
+        assert_eq!(Bf16::from_f32(y).to_f32(), 1.0 + 2f32.powi(-7));
+    }
+
+    #[test]
+    fn rhaz_on_dropped_bits() {
+        // Same halfway point, away-from-zero goes up.
+        let x = 1.0 + 2f32.powi(-8);
+        assert_eq!(
+            Bf16::from_f32_mode(x, RoundMode::HalfAwayFromZero).to_f32(),
+            1.0 + 2f32.powi(-7)
+        );
+    }
+
+    #[test]
+    fn one_seventh_value() {
+        // bf16(1/7): 1/7 = 2^-3 × 1.142857..; 7-bit mantissa:
+        // 0.142857×128 = 18.29 -> 18 => 2^-3 × (1 + 18/128) = 0.142578125.
+        assert_eq!(one_seventh_bf16(), 0.142578125);
+    }
+
+    #[test]
+    fn nan_and_saturation() {
+        assert!(Bf16::from_f32(f32::NAN).is_nan());
+        // Round-up can carry into the exponent.
+        let just_under_2 = 1.9999999f32;
+        assert_eq!(Bf16::from_f32(just_under_2).to_f32(), 2.0);
+    }
+
+    #[test]
+    fn bulk_quantize() {
+        let mut xs = vec![0.1f32, 0.2, 0.3];
+        quantize_bf16_inplace(&mut xs);
+        for x in &xs {
+            assert_eq!(Bf16::from_f32(*x).to_f32(), *x);
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! Vanilla 4-bit BFP — Microsoft Floating Point style baseline (§I, [9]).
+//!
+//! Group of 16 sign-magnitude S1P2 elements sharing one 8-bit power-of-two
+//! exponent, no micro-exponents ⇒ (8 + 64)/16 = 4.5 bits/value. This is the
+//! baseline MX4 was compared against in the intro ("MX4 delivers even lower
+//! accuracy than the vanilla 4-bit BFP format").
+
+use super::e8m0::E8M0;
+use super::rounding::RoundMode;
+use super::s1p2::S1P2;
+
+/// Elements per group.
+pub const GROUP: usize = 16;
+/// Average storage cost.
+pub const BITS_PER_VALUE: f64 = 4.5;
+/// S1P2's largest power-of-two exponent: 1.75 = 1.75 × 2^0.
+pub const EMAX_ELEM: i32 = 0;
+
+/// A packed vanilla-BFP group.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BfpGroup {
+    pub scale: E8M0,
+    /// 16 S1P2 nibbles packed two per byte.
+    pub elems: [u8; 8],
+}
+
+impl BfpGroup {
+    #[inline]
+    pub fn elem(&self, i: usize) -> S1P2 {
+        let b = self.elems[i / 2];
+        S1P2(if i % 2 == 0 { b & 0x0F } else { b >> 4 })
+    }
+
+    #[inline]
+    pub fn decode(&self, i: usize) -> f32 {
+        self.scale.to_f32() * self.elem(i).to_f32()
+    }
+
+    pub fn decode_all(&self, out: &mut [f32]) {
+        for i in 0..GROUP {
+            out[i] = self.decode(i);
+        }
+    }
+}
+
+/// Quantize 16 values with a single shared power-of-two exponent.
+pub fn quantize(v: &[f32], mode: RoundMode) -> BfpGroup {
+    assert_eq!(v.len(), GROUP);
+    if v.iter().any(|x| !x.is_finite()) {
+        return BfpGroup { scale: E8M0::NAN, elems: [0; 8] };
+    }
+    let amax = v.iter().fold(0f32, |m, x| m.max(x.abs()));
+    let scale = E8M0::from_amax(amax, EMAX_ELEM);
+    let s = scale.to_f32();
+    let inv = 1.0 / s;
+    let mut g = BfpGroup { scale, elems: [0; 8] };
+    for i in 0..GROUP {
+        let q = S1P2::from_f32(v[i] * inv, mode);
+        let b = &mut g.elems[i / 2];
+        if i % 2 == 0 {
+            *b = (*b & 0xF0) | (q.0 & 0x0F);
+        } else {
+            *b = (*b & 0x0F) | ((q.0 & 0x0F) << 4);
+        }
+    }
+    g
+}
+
+/// Quantize→dequantize (simulated quantization).
+pub fn quant_dequant(v: &[f32], out: &mut [f32], mode: RoundMode) {
+    let g = quantize(v, mode);
+    if g.scale.is_nan() {
+        out[..GROUP].fill(f32::NAN);
+        return;
+    }
+    g.decode_all(out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn qd(v: &[f32]) -> Vec<f32> {
+        let mut out = vec![0f32; GROUP];
+        quant_dequant(v, &mut out, RoundMode::NearestEven);
+        out
+    }
+
+    #[test]
+    fn zeros_and_grid() {
+        assert!(qd(&[0.0; GROUP]).iter().all(|x| *x == 0.0));
+        // Peak 1.75 with scale 1: grid of 0.25 reproduces exactly.
+        let v: [f32; GROUP] = core::array::from_fn(|i| ((i % 8) as f32) * 0.25 - 1.0);
+        let out = qd(&v);
+        for (a, b) in v.iter().zip(&out) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn shared_exponent_coarseness() {
+        // With one big outlier the rest of the group loses resolution:
+        // scale 2^6 (peak 100 → floor log2 = 6), step = 0.25×64 = 16.
+        let mut v = [1.0f32; GROUP];
+        v[0] = 100.0;
+        let out = qd(&v);
+        assert_eq!(out[1], 0.0, "small values wiped out by the shared exponent");
+    }
+}

@@ -1,0 +1,156 @@
+//! E2M1 — the 4-bit element format of NVFP4 and MXFP4 (OCP FP4).
+//!
+//! sign + 2 exponent bits (bias 1) + 1 mantissa bit, with subnormals:
+//! representable magnitudes {0, 0.5, 1, 1.5, 2, 3, 4, 6}. Max 6, min positive
+//! 0.5 ⇒ dynamic range log2(6/0.5) = 3.58 binades (§I). No NaN/Inf in the
+//! element itself (NVFP4 signals NaN via its scale).
+
+use super::rounding::RoundMode;
+
+/// An E2M1 value in its 4 raw bits (`s_ee_m`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct E2M1(pub u8);
+
+/// The 8 non-negative representable magnitudes, in encoding order.
+pub const MAGNITUDES: [f32; 8] = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+/// Largest magnitude.
+pub const MAX_ABS: f32 = 6.0;
+/// Smallest positive magnitude.
+pub const MIN_POS: f32 = 0.5;
+
+impl E2M1 {
+    pub const POS_ZERO: E2M1 = E2M1(0b0000);
+    pub const MAX: E2M1 = E2M1(0b0111);
+    pub const MIN: E2M1 = E2M1(0b1111);
+
+    #[inline]
+    pub fn sign_negative(self) -> bool {
+        self.0 & 0b1000 != 0
+    }
+
+    /// Magnitude code 0..=7 indexing [`MAGNITUDES`].
+    #[inline]
+    pub fn mag_code(self) -> usize {
+        (self.0 & 0b0111) as usize
+    }
+
+    /// Decode to f32 (exact).
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        let m = MAGNITUDES[self.mag_code()];
+        if self.sign_negative() {
+            -m
+        } else {
+            m
+        }
+    }
+
+    /// The signed integer the NVFP4 fixed-point datapath multiplies: the
+    /// magnitude in half-units (value × 2), range -12..=12 (fits S3P1's
+    /// 5-bit signed integer view used in Fig 4).
+    #[inline]
+    pub fn signed_halves(self) -> i8 {
+        let m = (MAGNITUDES[self.mag_code()] * 2.0) as i8;
+        if self.sign_negative() {
+            -m
+        } else {
+            m
+        }
+    }
+
+    /// Quantize with round-to-nearest (RNE/RHAZ on the non-uniform grid) and
+    /// saturation to ±6.
+    ///
+    /// Arithmetic form (hot path, §Perf): within each binade the grid is
+    /// uniform — step 0.5 below 2, 1 in [2,4), 2 above — and rounding
+    /// `a/ulp` to an integer is exactly tie-to-even-mantissa because even
+    /// multiples of the ulp are the even-code values (same derivation as
+    /// the Pallas kernel's `e2m1_quantize`).
+    pub fn from_f32(x: f32, mode: RoundMode) -> E2M1 {
+        if x.is_nan() {
+            return E2M1::MAX;
+        }
+        let neg = x.is_sign_negative();
+        let a = x.abs();
+        let ulp = if a < 2.0 {
+            0.5
+        } else if a < 4.0 {
+            1.0
+        } else {
+            2.0
+        };
+        let q = (super::rounding::round_int(a / ulp, mode) * ulp).min(MAX_ABS);
+        // Value → code (halves: 0,1,2,3,4,6,8,12 → codes 0..7).
+        let h = (q * 2.0) as u32;
+        let code = match h {
+            0..=3 => h,
+            4 => 4,
+            6 => 5,
+            8 => 6,
+            _ => 7,
+        } as u8;
+        E2M1(((neg as u8) << 3) | code)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_all_magnitudes() {
+        for (code, want) in MAGNITUDES.iter().enumerate() {
+            assert_eq!(E2M1(code as u8).to_f32(), *want);
+            assert_eq!(E2M1(code as u8 | 0b1000).to_f32(), -*want);
+        }
+    }
+
+    #[test]
+    fn exhaustive_roundtrip() {
+        for bits in 0u8..16 {
+            let v = E2M1(bits);
+            let back = E2M1::from_f32(v.to_f32(), RoundMode::NearestEven);
+            assert_eq!(back.to_f32(), v.to_f32());
+        }
+    }
+
+    #[test]
+    fn saturation() {
+        assert_eq!(E2M1::from_f32(100.0, RoundMode::NearestEven).to_f32(), 6.0);
+        assert_eq!(E2M1::from_f32(-7.0, RoundMode::NearestEven).to_f32(), -6.0);
+    }
+
+    #[test]
+    fn nearest_rounding() {
+        assert_eq!(E2M1::from_f32(0.2, RoundMode::NearestEven).to_f32(), 0.0);
+        assert_eq!(E2M1::from_f32(0.3, RoundMode::NearestEven).to_f32(), 0.5);
+        assert_eq!(E2M1::from_f32(2.4, RoundMode::NearestEven).to_f32(), 2.0);
+        assert_eq!(E2M1::from_f32(2.6, RoundMode::NearestEven).to_f32(), 3.0);
+        assert_eq!(E2M1::from_f32(5.1, RoundMode::NearestEven).to_f32(), 6.0);
+    }
+
+    #[test]
+    fn tie_handling() {
+        // 2.5 ties between 2 (code 4, m=0 even) and 3 (code 5, m=1 odd).
+        assert_eq!(E2M1::from_f32(2.5, RoundMode::NearestEven).to_f32(), 2.0);
+        assert_eq!(E2M1::from_f32(2.5, RoundMode::HalfAwayFromZero).to_f32(), 3.0);
+        // 0.25 ties between 0 (even) and 0.5 (odd).
+        assert_eq!(E2M1::from_f32(0.25, RoundMode::NearestEven).to_f32(), 0.0);
+        // 5.0 ties between 4 (code 6 even) and 6 (code 7 odd).
+        assert_eq!(E2M1::from_f32(5.0, RoundMode::NearestEven).to_f32(), 4.0);
+    }
+
+    #[test]
+    fn signed_halves_match() {
+        for bits in 0u8..16 {
+            let v = E2M1(bits);
+            assert_eq!(v.signed_halves() as f32 * 0.5, v.to_f32());
+        }
+    }
+
+    #[test]
+    fn dynamic_range_is_3_58_binades() {
+        let binades = (MAX_ABS / MIN_POS).log2();
+        assert!((binades - 3.58).abs() < 0.01);
+    }
+}

@@ -1,0 +1,164 @@
+//! E4M3 — the FP8 scale format of NVFP4 (and general FP8 support).
+//!
+//! OCP FP8-E4M3: sign + 4 exponent bits (bias 7) + 3 mantissa bits, with
+//! subnormals; max finite 448, min positive subnormal 2^-9; `S.1111.111` is
+//! NaN (no infinity). NVFP4 uses it *unsigned* as a per-16-group scale —
+//! amax/6 is cast with saturation, which is exactly where the paper's
+//! "PTS required" critique bites: tensors whose group scales exceed 448 (or
+//! underflow to zero) lose information.
+
+use super::rounding::{round_int, RoundMode};
+
+/// Exponent bias.
+pub const BIAS: i32 = 7;
+/// Max finite magnitude (0x7E = 448).
+pub const MAX_FINITE: f32 = 448.0;
+/// Min positive subnormal = 2^-6 × 1/8 = 2^-9.
+pub const MIN_SUBNORMAL: f32 = 0.001953125;
+/// Min positive normal = 2^-6.
+pub const MIN_NORMAL: f32 = 0.015625;
+
+/// An E4M3 value in its 8 raw bits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct E4M3(pub u8);
+
+impl E4M3 {
+    pub const POS_ZERO: E4M3 = E4M3(0x00);
+    pub const MAX: E4M3 = E4M3(0x7E);
+    pub const NAN: E4M3 = E4M3(0x7F);
+
+    #[inline]
+    pub fn is_nan(self) -> bool {
+        (self.0 & 0x7F) == 0x7F
+    }
+
+    #[inline]
+    pub fn sign_negative(self) -> bool {
+        self.0 & 0x80 != 0
+    }
+
+    /// Decode to f32 (exact).
+    pub fn to_f32(self) -> f32 {
+        if self.is_nan() {
+            return f32::NAN;
+        }
+        let e = ((self.0 >> 3) & 0x0F) as i32;
+        let m = (self.0 & 0x07) as f32;
+        let mag = if e == 0 {
+            // Subnormal: 2^(1-bias) × (m/8).
+            2f32.powi(1 - BIAS) * (m / 8.0)
+        } else {
+            2f32.powi(e - BIAS) * (1.0 + m / 8.0)
+        };
+        if self.sign_negative() {
+            -mag
+        } else {
+            mag
+        }
+    }
+
+    /// Encode with saturation (NVIDIA's saturating cast: out-of-range maps
+    /// to ±448, never NaN; NaN in → NaN out).
+    pub fn from_f32(x: f32, mode: RoundMode) -> E4M3 {
+        if x.is_nan() {
+            return E4M3::NAN;
+        }
+        let neg = x.is_sign_negative();
+        let sign = (neg as u8) << 7;
+        let a = x.abs();
+        if a >= MAX_FINITE {
+            return E4M3(sign | E4M3::MAX.0);
+        }
+        if a < MIN_NORMAL {
+            // Subnormal grid: step 2^-9.
+            let q = round_int(a / MIN_SUBNORMAL, mode).min(8.0);
+            if q >= 8.0 {
+                // Rounded up into the normal range.
+                return E4M3(sign | 0x08);
+            }
+            return E4M3(sign | q as u8);
+        }
+        // Normal: find exponent (exact bit inspection, §Perf), round the
+        // 3-bit mantissa.
+        let e = super::e8m0::floor_log2(a);
+        let s = a / super::e6m2::exp2i(e);
+        let mut q = round_int(s * 8.0, mode); // in eighths, [8, 16]
+        let mut ee = e;
+        if q >= 16.0 {
+            q = 8.0;
+            ee += 1;
+        }
+        if ee > 8 {
+            return E4M3(sign | E4M3::MAX.0);
+        }
+        let enc = (((ee + BIAS) as u8) << 3) | ((q as u8) - 8);
+        if (enc & 0x7F) == 0x7F {
+            // Would alias NaN (448 + rounding up to "480"): saturate.
+            E4M3(sign | E4M3::MAX.0)
+        } else {
+            E4M3(sign | enc)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn boundary_values() {
+        assert_eq!(E4M3::MAX.to_f32(), 448.0);
+        assert!(E4M3::NAN.to_f32().is_nan());
+        assert_eq!(E4M3(0x01).to_f32(), MIN_SUBNORMAL);
+        assert_eq!(E4M3(0x08).to_f32(), MIN_NORMAL);
+        assert_eq!(E4M3::POS_ZERO.to_f32(), 0.0);
+    }
+
+    #[test]
+    fn exhaustive_roundtrip() {
+        for bits in 0u16..=255 {
+            let v = E4M3(bits as u8);
+            if v.is_nan() {
+                continue;
+            }
+            let back = E4M3::from_f32(v.to_f32(), RoundMode::NearestEven);
+            assert_eq!(back.to_f32(), v.to_f32(), "code {bits:#04x}");
+        }
+    }
+
+    #[test]
+    fn monotone_decode() {
+        let mut prev = -1.0f32;
+        for bits in 0u8..0x7F {
+            let f = E4M3(bits).to_f32();
+            assert!(f > prev, "non-monotone at {bits:#04x}");
+            prev = f;
+        }
+    }
+
+    #[test]
+    fn saturating_cast() {
+        assert_eq!(E4M3::from_f32(1e9, RoundMode::NearestEven).to_f32(), 448.0);
+        assert_eq!(E4M3::from_f32(-1e9, RoundMode::NearestEven).to_f32(), -448.0);
+        // 464 is the tie midpoint between 448 and the NaN slot; saturate.
+        assert_eq!(E4M3::from_f32(460.0, RoundMode::NearestEven).to_f32(), 448.0);
+    }
+
+    #[test]
+    fn underflow_to_zero() {
+        // Below half the min subnormal rounds to zero — the NVFP4 scale
+        // underflow failure mode in Fig 3.
+        assert_eq!(E4M3::from_f32(MIN_SUBNORMAL / 4.0, RoundMode::NearestEven).to_f32(), 0.0);
+        assert_eq!(E4M3::from_f32(MIN_SUBNORMAL * 0.75, RoundMode::NearestEven).to_f32(), MIN_SUBNORMAL);
+    }
+
+    #[test]
+    fn rounding_in_normals() {
+        // 3.2 between 3.0 (m=+4/8 at e=1) grid step 0.25: 3.25 closer.
+        let q = E4M3::from_f32(3.2, RoundMode::NearestEven).to_f32();
+        assert_eq!(q, 3.25);
+        // Tie: 3.125 between 3.0 and 3.25; 3.0 has even mantissa code (100),
+        // 3.25 odd (101) -> RNE picks 3.0.
+        assert_eq!(E4M3::from_f32(3.125, RoundMode::NearestEven).to_f32(), 3.0);
+    }
+}

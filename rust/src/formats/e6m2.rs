@@ -1,0 +1,212 @@
+//! E6M2 — the unsigned 8-bit floating-point level-1 scale of HiF4 (Table I).
+//!
+//! Layout: `eeeeee_mm` — 6 exponent bits (bias 48), 2 mantissa bits, one
+//! hidden integer bit fixed to 1. **Normal mode only**: no zero, no infinity,
+//! no subnormals. The all-ones encoding `111111_11` is NaN. Value:
+//! `X = 2^E × 1.M` with unbiased `E ∈ [-48, 15]`.
+//!
+//! Also implements the paper's `E6M2_REC_to_BF16` instruction (§II.B): the
+//! reciprocal of an E6M2 scale computed from a 4-entry LUT indexed by the
+//! 2-bit mantissa plus an exponent subtraction — exactly as the suggested
+//! hardware does.
+
+use super::rounding::RoundMode;
+
+/// Exponent bias of E6M2.
+pub const BIAS: i32 = 48;
+/// Smallest unbiased exponent.
+pub const EXP_MIN: i32 = -48;
+/// Largest unbiased exponent.
+pub const EXP_MAX: i32 = 15;
+/// NaN encoding (`111111_11`).
+pub const NAN_BITS: u8 = 0xFF;
+
+/// An E6M2 value stored as its 8 raw bits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct E6M2(pub u8);
+
+impl E6M2 {
+    /// Minimum representable value: `000000_00` = 2^-48 × 1.00.
+    pub const MIN: E6M2 = E6M2(0x00);
+    /// Maximum non-NaN value: `111111_10` = 2^15 × 1.50.
+    pub const MAX: E6M2 = E6M2(0xFE);
+    pub const NAN: E6M2 = E6M2(NAN_BITS);
+
+    #[inline]
+    pub fn is_nan(self) -> bool {
+        self.0 == NAN_BITS
+    }
+
+    /// Unbiased exponent field.
+    #[inline]
+    pub fn exponent(self) -> i32 {
+        ((self.0 >> 2) as i32) - BIAS
+    }
+
+    /// 2-bit mantissa field (fraction numerator over 4).
+    #[inline]
+    pub fn mantissa(self) -> u32 {
+        (self.0 & 0x3) as u32
+    }
+
+    /// Decode to f32. Exact: every E6M2 value is representable in f32.
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        if self.is_nan() {
+            return f32::NAN;
+        }
+        let sig = 1.0 + self.mantissa() as f32 / 4.0;
+        exp2i(self.exponent()) * sig
+    }
+
+    /// Encode a non-negative finite f32 into E6M2 under `mode`, clamping to
+    /// [MIN, MAX] (the format has no zero: underflow clamps to MIN, which is
+    /// the behaviour Algorithm 1 relies on for all-zero groups).
+    pub fn from_f32(x: f32, mode: RoundMode) -> E6M2 {
+        if x.is_nan() {
+            return E6M2::NAN;
+        }
+        debug_assert!(x >= 0.0, "E6M2 is unsigned, got {x}");
+        if x <= E6M2::MIN.to_f32() {
+            return E6M2::MIN;
+        }
+        if x >= E6M2::MAX.to_f32() {
+            return E6M2::MAX;
+        }
+        // Normalize: find e with x = 2^e * s, s in [1, 2).
+        let mut e = x.log2().floor() as i32;
+        if x < exp2i(e) {
+            e -= 1;
+        } else if x >= exp2i(e + 1) {
+            e += 1;
+        }
+        // Round significand to a 2-bit fraction (grid of 1/4).
+        let s = x / exp2i(e);
+        let q = super::rounding::round_int(s * 4.0, mode) / 4.0;
+        let (e, q) = if q >= 2.0 { (e + 1, 1.0) } else { (e, q) };
+        // Clamp exponent into range after rounding carry.
+        if e < EXP_MIN {
+            return E6M2::MIN;
+        }
+        if e > EXP_MAX {
+            return E6M2::MAX;
+        }
+        let m = ((q - 1.0) * 4.0) as u8;
+        let enc = (((e + BIAS) as u8) << 2) | (m & 0x3);
+        // `111111_11` would alias NaN; clamp to MAX instead.
+        if enc == NAN_BITS {
+            E6M2::MAX
+        } else {
+            E6M2(enc)
+        }
+    }
+
+    /// The paper's `E6M2_REC_to_BF16` instruction: reciprocal of this scale,
+    /// returned as a BF16 value (widened to f32).
+    ///
+    /// Hardware realization (§II.B): a 4-entry LUT indexed by the 2-bit
+    /// mantissa yields the BF16 significand of `1 / 1.M`, and the output
+    /// exponent is derived by subtraction. Because E6M2 has no subnormals
+    /// this is exact w.r.t. RNE-rounding the true reciprocal.
+    pub fn reciprocal_bf16(self) -> f32 {
+        if self.is_nan() {
+            return f32::NAN;
+        }
+        // LUT: bf16(1 / 1.M) for M = 0..3 (7-bit bf16 mantissa), each stored
+        // normalized to [1, 2) with its exponent offset. 1/1.0 = 1.0
+        // (offset 0); 1/1.25 = 0.8, 1/1.5 = 0.666.., 1/1.75 = 0.5714..
+        // (offset -1, normalized ×2).
+        const LUT_SIG: [f32; 4] = [
+            1.0,        // 1/1.00 = 1.0            => 2^0  * 1.0
+            1.6015625,  // 1/1.25 = 0.8    -> bf16  => 2^-1 * (1 + 77/128)
+            1.3359375,  // 1/1.50 = 0.6667 -> bf16  => 2^-1 * (1 + 43/128)
+            1.140625,   // 1/1.75 = 0.5714 -> bf16  => 2^-1 * (1 + 18/128)
+        ];
+        const LUT_EXP: [i32; 4] = [0, -1, -1, -1];
+        let m = self.mantissa() as usize;
+        LUT_SIG[m] * exp2i(-self.exponent() + LUT_EXP[m])
+    }
+}
+
+/// Exact 2^e for the E6M2 exponent range (|e| ≤ 50 fits f32 normals).
+#[inline]
+pub fn exp2i(e: i32) -> f32 {
+    f32::from_bits((((e + 127) as u32) & 0xFF) << 23)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::bf16::Bf16;
+
+    #[test]
+    fn table1_boundary_values() {
+        // Table I rows for E6M2.
+        assert_eq!(E6M2::MIN.to_f32(), exp2i(-48) * 1.0);
+        assert_eq!(E6M2::MAX.to_f32(), exp2i(15) * 1.5);
+        assert!(E6M2::NAN.to_f32().is_nan());
+        assert_eq!(E6M2::MIN.exponent(), -48);
+        assert_eq!(E6M2::MAX.exponent(), 15);
+    }
+
+    #[test]
+    fn decode_all_256_encodings() {
+        let mut prev = f32::NEG_INFINITY;
+        for bits in 0u16..=255 {
+            let v = E6M2(bits as u8);
+            if v.is_nan() {
+                continue;
+            }
+            let f = v.to_f32();
+            assert!(f.is_finite() && f > 0.0);
+            assert!(f > prev, "E6M2 must be monotone in its encoding");
+            prev = f;
+        }
+    }
+
+    #[test]
+    fn encode_roundtrips_every_code() {
+        for bits in 0u16..=254 {
+            let v = E6M2(bits as u8);
+            let back = E6M2::from_f32(v.to_f32(), RoundMode::NearestEven);
+            assert_eq!(back, v, "roundtrip failed for code {bits:#04x}");
+        }
+    }
+
+    #[test]
+    fn encode_clamps() {
+        assert_eq!(E6M2::from_f32(0.0, RoundMode::NearestEven), E6M2::MIN);
+        assert_eq!(E6M2::from_f32(1e30, RoundMode::NearestEven), E6M2::MAX);
+        assert_eq!(E6M2::from_f32(f32::NAN, RoundMode::NearestEven), E6M2::NAN);
+        // Just above MAX midpoint still clamps to MAX, never to the NaN code.
+        let just_above = exp2i(15) * 1.74;
+        assert_eq!(E6M2::from_f32(just_above, RoundMode::NearestEven), E6M2::MAX);
+    }
+
+    #[test]
+    fn encode_rounds_to_nearest() {
+        // 1.0 encodes exactly; 1.1 is nearer to 1.0 than 1.25.
+        let q = E6M2::from_f32(1.1, RoundMode::NearestEven).to_f32();
+        assert_eq!(q, 1.0);
+        let q = E6M2::from_f32(1.2, RoundMode::NearestEven).to_f32();
+        assert_eq!(q, 1.25);
+        // Tie at 1.125: RNE picks 1.0 (even mantissa 0b00), RHAZ picks 1.25.
+        assert_eq!(E6M2::from_f32(1.125, RoundMode::NearestEven).to_f32(), 1.0);
+        assert_eq!(
+            E6M2::from_f32(1.125, RoundMode::HalfAwayFromZero).to_f32(),
+            1.25
+        );
+    }
+
+    #[test]
+    fn reciprocal_matches_bf16_of_true_reciprocal() {
+        // The 4-entry LUT + exponent subtraction must agree with RNE-rounding
+        // the exact reciprocal to BF16, for every non-NaN encoding.
+        for bits in 0u16..=254 {
+            let v = E6M2(bits as u8);
+            let lut = v.reciprocal_bf16();
+            let want = Bf16::from_f32(1.0 / v.to_f32()).to_f32();
+            assert_eq!(lut, want, "REC mismatch for code {bits:#04x}");
+        }
+    }
+}

@@ -1,0 +1,106 @@
+//! E8M0 — the OCP MX power-of-two shared scale (8-bit exponent, no mantissa).
+//!
+//! Used by MXFP4 (group 32) and, conceptually, by MX4 / vanilla BFP's shared
+//! exponents. Encodes 2^(e-127) for e ∈ [0, 254]; 0xFF is NaN.
+
+/// An E8M0 scale in its 8 raw bits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct E8M0(pub u8);
+
+/// Exponent bias.
+pub const BIAS: i32 = 127;
+
+impl E8M0 {
+    pub const NAN: E8M0 = E8M0(0xFF);
+    pub const ONE: E8M0 = E8M0(127);
+
+    #[inline]
+    pub fn is_nan(self) -> bool {
+        self.0 == 0xFF
+    }
+
+    /// Unbiased exponent.
+    #[inline]
+    pub fn exponent(self) -> i32 {
+        self.0 as i32 - BIAS
+    }
+
+    /// Decode to f32. Exponents beyond f32's normal range saturate into
+    /// subnormals/infinity like `powi` would; MX usage keeps |e| small.
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        if self.is_nan() {
+            return f32::NAN;
+        }
+        2f32.powi(self.exponent())
+    }
+
+    /// Encode the power-of-two scale for a group with peak magnitude `amax`
+    /// and element format max-exponent `emax_elem`, per the OCP MX spec:
+    /// `shared_exp = floor(log2(amax)) - emax_elem`, clamped to range.
+    /// `amax == 0` (all-zero group) maps to the smallest scale.
+    pub fn from_amax(amax: f32, emax_elem: i32) -> E8M0 {
+        if amax.is_nan() {
+            return E8M0::NAN;
+        }
+        if amax <= 0.0 {
+            return E8M0(0);
+        }
+        let e = floor_log2(amax) - emax_elem;
+        E8M0(e.clamp(-BIAS, 127).wrapping_add(BIAS) as u8)
+    }
+}
+
+/// Exact floor(log2(|x|)) for finite positive x via bit inspection
+/// (handles subnormals; avoids float log precision traps).
+pub fn floor_log2(x: f32) -> i32 {
+    debug_assert!(x > 0.0 && x.is_finite());
+    let bits = x.to_bits();
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    if exp != 0 {
+        exp - 127
+    } else {
+        // Subnormal: value = mantissa × 2^-149.
+        let m = bits & 0x7F_FFFF;
+        -149 + (31 - m.leading_zeros()) as i32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_basics() {
+        assert_eq!(E8M0::ONE.to_f32(), 1.0);
+        assert_eq!(E8M0(128).to_f32(), 2.0);
+        assert_eq!(E8M0(126).to_f32(), 0.5);
+        assert!(E8M0::NAN.to_f32().is_nan());
+    }
+
+    #[test]
+    fn floor_log2_exact() {
+        assert_eq!(floor_log2(1.0), 0);
+        assert_eq!(floor_log2(1.99), 0);
+        assert_eq!(floor_log2(2.0), 1);
+        assert_eq!(floor_log2(0.5), -1);
+        assert_eq!(floor_log2(0.9999), -1);
+        assert_eq!(floor_log2(6.0), 2);
+        assert_eq!(floor_log2(2f32.powi(-126)), -126);
+        // Subnormals (constructed from bits: debug-mode powi(-130)
+        // round-trips through 1/2^130 = 1/inf = 0).
+        assert_eq!(floor_log2(f32::from_bits(0x0040_0000)), -127); // 2^-127
+        assert_eq!(floor_log2(f32::from_bits(0x0008_0000)), -130); // 2^-130
+        assert_eq!(floor_log2(f32::from_bits(0x0000_0001)), -149); // min sub
+    }
+
+    #[test]
+    fn from_amax_mx_rule() {
+        // E2M1 emax = 2 (6 = 1.5 × 2^2). amax = 6 -> floor(log2 6)=2 -> e=0.
+        assert_eq!(E8M0::from_amax(6.0, 2).to_f32(), 1.0);
+        // amax = 1.0 -> 0 - 2 = -2 -> scale 0.25.
+        assert_eq!(E8M0::from_amax(1.0, 2).to_f32(), 0.25);
+        // amax = 0 -> smallest scale, elements all quantize to 0 anyway.
+        assert_eq!(E8M0::from_amax(0.0, 2).0, 0);
+    }
+}

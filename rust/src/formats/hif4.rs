@@ -1,0 +1,376 @@
+//! HiF4 — the paper's 4-bit block floating-point format (§II, Fig 2).
+//!
+//! One unit = **32 bits of shared scaling metadata + 64 × 4-bit S1P2
+//! elements** = 4.5 bits/value. The metadata is a three-level scaling
+//! hierarchy:
+//!
+//! * level 1: one unsigned [`E6M2`] global base scale (8 bits),
+//! * level 2: `E1_8` — 8 × 1-bit micro-exponents, one per 8 elements,
+//! * level 3: `E1_16` — 16 × 1-bit micro-exponents, one per 4 elements.
+//!
+//! Value of element `i` (0-based here; the paper is 1-based):
+//!
+//! ```text
+//! V_i = E6M2 × 2^(E1_8[i/8] + E1_16[i/4]) × S1P2_i            (eq. 2)
+//! ```
+//!
+//! Conversion from BF16 follows **Algorithm 1** exactly, including the
+//! `(1/7)_BF16` reciprocal constant, the `E6M2_REC_to_BF16` LUT reciprocal,
+//! the strict `> 4` level-2 and `>= 2` level-3 thresholds, and clamping
+//! S1P2 overflow to the representable bound.
+
+use super::bf16::{one_seventh_bf16, Bf16};
+use super::e6m2::{exp2i, E6M2};
+use super::rounding::RoundMode;
+use super::s1p2::S1P2;
+
+/// Elements per HiF4 unit.
+pub const GROUP: usize = 64;
+/// Elements covered by one level-2 micro-exponent.
+pub const L2_SPAN: usize = 8;
+/// Elements covered by one level-3 micro-exponent.
+pub const L3_SPAN: usize = 4;
+/// Metadata bits per unit.
+pub const META_BITS: usize = 32;
+/// Average storage cost in bits/value: (32 + 64×4) / 64.
+pub const BITS_PER_VALUE: f64 = 4.5;
+/// Largest magnitude the intra-group structure represents: 2^(1+1) × 1.75.
+pub const INTRA_MAX: f32 = 7.0;
+/// Smallest positive intra-group magnitude: 2^0 × 0.25.
+pub const INTRA_MIN_POS: f32 = 0.25;
+/// Max positive value of the whole format: 2^15×1.5 × 4 × 1.75 = 2^18×1.3125.
+pub const MAX_POSITIVE: f32 = 344064.0;
+/// Min positive value: 2^-48 × 0.25 = 2^-50.
+pub const MIN_POSITIVE: f32 = 8.881784e-16;
+
+/// A packed HiF4 unit: 32-bit metadata + 64 S1P2 nibbles (32 bytes).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HiF4Unit {
+    /// Level-1 global base scale.
+    pub scale: E6M2,
+    /// Level-2 micro-exponents, bit `j` covers elements `[8j, 8j+8)`.
+    pub e1_8: u8,
+    /// Level-3 micro-exponents, bit `k` covers elements `[4k, 4k+4)`.
+    pub e1_16: u16,
+    /// 64 S1P2 elements packed two per byte (low nibble = even index).
+    pub elems: [u8; 32],
+}
+
+impl HiF4Unit {
+    /// Level-2 micro-exponent for element `i` (0 or 1).
+    #[inline]
+    pub fn l2(&self, i: usize) -> u32 {
+        ((self.e1_8 >> (i / L2_SPAN)) & 1) as u32
+    }
+
+    /// Level-3 micro-exponent for element `i` (0 or 1).
+    #[inline]
+    pub fn l3(&self, i: usize) -> u32 {
+        ((self.e1_16 >> (i / L3_SPAN)) & 1) as u32
+    }
+
+    /// S1P2 element `i`.
+    #[inline]
+    pub fn elem(&self, i: usize) -> S1P2 {
+        let byte = self.elems[i / 2];
+        S1P2(if i % 2 == 0 { byte & 0x0F } else { byte >> 4 })
+    }
+
+    #[inline]
+    pub fn set_elem(&mut self, i: usize, v: S1P2) {
+        let b = &mut self.elems[i / 2];
+        if i % 2 == 0 {
+            *b = (*b & 0xF0) | (v.0 & 0x0F);
+        } else {
+            *b = (*b & 0x0F) | ((v.0 & 0x0F) << 4);
+        }
+    }
+
+    /// Decode element `i` per eq. (2). Exact in f32.
+    #[inline]
+    pub fn decode(&self, i: usize) -> f32 {
+        if self.scale.is_nan() {
+            return f32::NAN;
+        }
+        self.scale.to_f32() * exp2i((self.l2(i) + self.l3(i)) as i32) * self.elem(i).to_f32()
+    }
+
+    /// Decode the whole unit into `out[0..64]`.
+    pub fn decode_all(&self, out: &mut [f32]) {
+        assert!(out.len() >= GROUP);
+        if self.scale.is_nan() {
+            out[..GROUP].fill(f32::NAN);
+            return;
+        }
+        let s = self.scale.to_f32();
+        for i in 0..GROUP {
+            out[i] = s * exp2i((self.l2(i) + self.l3(i)) as i32) * self.elem(i).to_f32();
+        }
+    }
+
+    /// Serialized wire size in bytes (4 metadata + 32 element bytes).
+    pub const WIRE_BYTES: usize = 36;
+
+    /// Pack into the 36-byte wire layout of Fig 2 (metadata little-endian:
+    /// E6M2, E1_8, E1_16; then 32 element bytes).
+    pub fn to_bytes(&self) -> [u8; Self::WIRE_BYTES] {
+        let mut b = [0u8; Self::WIRE_BYTES];
+        b[0] = self.scale.0;
+        b[1] = self.e1_8;
+        b[2..4].copy_from_slice(&self.e1_16.to_le_bytes());
+        b[4..].copy_from_slice(&self.elems);
+        b
+    }
+
+    pub fn from_bytes(b: &[u8; Self::WIRE_BYTES]) -> HiF4Unit {
+        HiF4Unit {
+            scale: E6M2(b[0]),
+            e1_8: b[1],
+            e1_16: u16::from_le_bytes([b[2], b[3]]),
+            elems: b[4..36].try_into().unwrap(),
+        }
+    }
+}
+
+/// Intermediate values of Algorithm 1, exposed for tests and for the
+/// hardware-flow documentation benches.
+#[derive(Debug, Clone)]
+pub struct ConversionTrace {
+    /// Stage-1 level-3 local peak magnitudes (16 values over spans of 4).
+    pub v16: [f32; 16],
+    /// Stage-1 level-2 local peak magnitudes (8 values over spans of 8).
+    pub v8: [f32; 8],
+    /// Stage-1 global peak magnitude.
+    pub vmax: f32,
+    /// Line 8: high-precision scale factor `Vmax × (1/7)_BF16`, in BF16.
+    pub sf_bf16: f32,
+    /// Line 10: `E6M2_REC_to_BF16(E6M2)`.
+    pub rec: f32,
+}
+
+/// Algorithm 1: convert 64 values into a HiF4 unit. Inputs are first
+/// rounded to BF16 (stage 0 — the paper's pipeline consumes BF16; the
+/// Pallas kernel and the Rust codec must agree bit-for-bit, see the
+/// `qdq_artifact_matches_rust_codec_bit_exactly` integration test).
+/// Returns the unit and the intermediate trace.
+pub fn quantize_trace(v: &[f32], mode: RoundMode) -> (HiF4Unit, ConversionTrace) {
+    assert_eq!(v.len(), GROUP, "HiF4 quantizes exactly 64 elements");
+    let mut v64 = [0f32; GROUP];
+    for (o, x) in v64.iter_mut().zip(v) {
+        *o = Bf16::from_f32(*x).to_f32();
+    }
+    let v64 = &v64[..];
+
+    // NaN/Inf in the input poisons the whole unit via the NaN scale, the
+    // only NaN channel the format has.
+    if v64.iter().any(|x| !x.is_finite()) {
+        let unit = HiF4Unit { scale: E6M2::NAN, e1_8: 0, e1_16: 0, elems: [0; 32] };
+        let trace = ConversionTrace { v16: [0.0; 16], v8: [0.0; 8], vmax: f32::NAN, sf_bf16: f32::NAN, rec: f32::NAN };
+        return (unit, trace);
+    }
+
+    // ---- Stage 1 (lines 1-7): three-level tree reduction of |V|. ----
+    let mut v16 = [0f32; 16];
+    for i in 0..16 {
+        let s = &v64[4 * i..4 * i + 4];
+        v16[i] = s.iter().fold(0f32, |m, x| m.max(x.abs()));
+    }
+    let mut v8 = [0f32; 8];
+    for i in 0..8 {
+        v8[i] = v16[2 * i].max(v16[2 * i + 1]);
+    }
+    let vmax = v8.iter().fold(0f32, |m, x| m.max(*x));
+
+    // ---- Stage 2 (lines 8-14): hierarchical scaling metadata. ----
+    // Line 8: SF = Vmax × (1/7)_BF16, product rounded to BF16 (the paper's
+    // high-precision scale factor is a BF16 quantity).
+    let sf_bf16 = Bf16::from_f32_mode(vmax * one_seventh_bf16(), mode).to_f32();
+    // Line 9: dedicated BF16→E6M2 instruction.
+    let scale = E6M2::from_f32(sf_bf16, mode);
+    // Line 10: E6M2_REC via the 4-entry LUT.
+    let rec = scale.reciprocal_bf16();
+    // Line 11: E1_8 = (V8 × REC > 4) ? 1 : 0 — strict comparison per paper.
+    let mut e1_8 = 0u8;
+    for i in 0..8 {
+        if v8[i] * rec > 4.0 {
+            e1_8 |= 1 << i;
+        }
+    }
+    // Lines 12-14: E1_16[k] = (V16[k] × REC × 2^-E1_8[k/2] >= 2) ? 1 : 0.
+    let mut e1_16 = 0u16;
+    for k in 0..16 {
+        let l2 = (e1_8 >> (k / 2)) & 1;
+        if v16[k] * rec * exp2i(-(l2 as i32)) >= 2.0 {
+            e1_16 |= 1 << k;
+        }
+    }
+
+    // ---- Stage 3 (lines 15-18): in-group elements. ----
+    let mut unit = HiF4Unit { scale, e1_8, e1_16, elems: [0; 32] };
+    for i in 0..GROUP {
+        let l2 = (e1_8 >> (i / L2_SPAN)) & 1;
+        let l3 = (e1_16 >> (i / L3_SPAN)) & 1;
+        // Line 16: V64_scaled = V64 × REC × 2^-E1_8 × 2^-E1_16.
+        // (BF16 × BF16 products are exact in f32; 2^-E1 is a power of two.)
+        let scaled = v64[i] * rec * exp2i(-((l2 + (l3 as u8)) as i32));
+        // Line 18: BF16→S1P2 with round + clamp.
+        unit.set_elem(i, S1P2::from_f32(scaled, mode));
+    }
+
+    let trace = ConversionTrace { v16, v8, vmax, sf_bf16, rec };
+    (unit, trace)
+}
+
+/// Algorithm 1 without the trace.
+pub fn quantize(v64: &[f32], mode: RoundMode) -> HiF4Unit {
+    quantize_trace(v64, mode).0
+}
+
+/// Quantize→dequantize 64 values (the "simulated quantization" the paper's
+/// LLM experiments use).
+pub fn quant_dequant(v64: &[f32], out: &mut [f32], mode: RoundMode) {
+    let unit = quantize(v64, mode);
+    unit.decode_all(out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Rng;
+
+    fn qd(v: &[f32]) -> Vec<f32> {
+        let mut out = vec![0f32; GROUP];
+        quant_dequant(v, &mut out, RoundMode::NearestEven);
+        out
+    }
+
+    #[test]
+    fn zeros_stay_zero() {
+        let v = vec![0f32; GROUP];
+        let out = qd(&v);
+        assert!(out.iter().all(|x| *x == 0.0));
+    }
+
+    #[test]
+    fn table2_extreme_values() {
+        // MAX_POSITIVE must survive a roundtrip exactly.
+        let mut v = vec![0f32; GROUP];
+        v[0] = MAX_POSITIVE;
+        let out = qd(&v);
+        assert_eq!(out[0], MAX_POSITIVE);
+        assert_eq!(MAX_POSITIVE, exp2i(18) * 1.3125);
+        assert_eq!(MIN_POSITIVE, exp2i(-50));
+    }
+
+    #[test]
+    fn peak_maps_near_seven_times_scale() {
+        // Algorithm 1 normalizes the group peak towards the intra-group
+        // upper bound 7 — full utilization of the local dynamic range.
+        let mut rng = Rng::seed(7);
+        let mut v: Vec<f32> = (0..GROUP).map(|_| rng.normal() as f32).collect();
+        v[13] = 3.0; // make the peak unambiguous
+        let (unit, trace) = quantize_trace(&v, RoundMode::NearestEven);
+        assert!(!unit.scale.is_nan());
+        // E6M2's 2-bit mantissa bounds the normalization slack: the scaled
+        // peak lands in (3.4, 8.1] (7 × (1 ± 12.5% rounding slack)).
+        let peak_scaled = trace.vmax * trace.rec;
+        assert!(peak_scaled <= 8.1 && peak_scaled > 3.4, "peak_scaled={peak_scaled}");
+    }
+
+    #[test]
+    fn representable_values_roundtrip_exactly() {
+        // Any tensor that already lies on a HiF4 grid must roundtrip with
+        // zero error when the peak hits the bound 7×scale.
+        let scale = 0.5f32; // exactly representable in E6M2 (2^-1 × 1.0)
+        let mut v = vec![0f32; GROUP];
+        // Elements in the first span get l2=1, l3=1 if peak big enough.
+        for (i, x) in v.iter_mut().enumerate() {
+            *x = scale * ((i % 7) as f32) * 0.25; // ≤ 1.5×scale, l2=l3=0 grid
+        }
+        v[0] = scale * 7.0; // peak → SF = scale exactly.
+        let out = qd(&v);
+        // Peak element: scaled = 7.0 → needs l2=1,l3=1 → 7/4 = 1.75 exact.
+        assert_eq!(out[0], v[0]);
+        // Elements in spans with micro-exponents 0 stay on the 0.25×scale grid.
+        for i in 8..GROUP {
+            assert!(
+                (out[i] - v[i]).abs() <= 0.125 * scale + 1e-7,
+                "i={} in={} out={}",
+                i,
+                v[i],
+                out[i]
+            );
+        }
+    }
+
+    #[test]
+    fn nan_poisons_unit() {
+        let mut v = vec![1.0f32; GROUP];
+        v[5] = f32::NAN;
+        let unit = quantize(&v, RoundMode::NearestEven);
+        assert!(unit.scale.is_nan());
+        let out = qd(&v);
+        assert!(out.iter().all(|x| x.is_nan()));
+    }
+
+    #[test]
+    fn micro_exponents_capture_outliers() {
+        // One hot span of big values + tiny elsewhere: micro-exponents must
+        // differ between spans.
+        let mut v = vec![0.01f32; GROUP];
+        for x in v.iter_mut().take(8) {
+            *x = 5.0;
+        }
+        let (unit, _) = quantize_trace(&v, RoundMode::NearestEven);
+        assert_eq!(unit.e1_8 & 1, 1, "hot span should set its level-2 bit");
+        assert_eq!(unit.e1_8 >> 1, 0, "cold spans should not");
+        // Relative error on the hot span stays small (3-bit significand).
+        let out = qd(&v);
+        for i in 0..8 {
+            let rel = (out[i] - v[i]).abs() / v[i];
+            assert!(rel < 0.08, "i={i} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn wire_roundtrip() {
+        let mut rng = Rng::seed(42);
+        let v: Vec<f32> = (0..GROUP).map(|_| rng.normal() as f32 * 3.0).collect();
+        let unit = quantize(&v, RoundMode::NearestEven);
+        let back = HiF4Unit::from_bytes(&unit.to_bytes());
+        assert_eq!(unit, back);
+    }
+
+    #[test]
+    fn storage_cost_is_4_5_bits() {
+        let total_bits = HiF4Unit::WIRE_BYTES * 8;
+        assert_eq!(total_bits as f64 / GROUP as f64, BITS_PER_VALUE);
+    }
+
+    #[test]
+    fn quantization_error_bounded_gaussian() {
+        // Quantization error of a Gaussian group must be well below σ and
+        // every output within the clamp bound of the input peak.
+        let mut rng = Rng::seed(3);
+        for _ in 0..50 {
+            let v: Vec<f32> = (0..GROUP).map(|_| (rng.normal() as f32) * 0.01).collect();
+            let out = qd(&v);
+            let mse: f32 =
+                v.iter().zip(&out).map(|(a, b)| (a - b) * (a - b)).sum::<f32>() / GROUP as f32;
+            assert!(mse.sqrt() < 0.01 * 0.25, "rmse too big: {}", mse.sqrt());
+        }
+    }
+
+    #[test]
+    fn huge_and_tiny_values_direct_cast_survive() {
+        // The 69-binade global range (Table II) means direct cast handles
+        // magnitudes NVFP4 cannot. Peak 2^17, tiny 2^-40.
+        let mut v = vec![2f32.powi(-40); GROUP];
+        v[0] = 2f32.powi(17);
+        let out = qd(&v);
+        let rel = (out[0] - v[0]).abs() / v[0];
+        assert!(rel < 0.1, "huge peak rel err {rel}");
+        // Tiny values quantize to 0 relative to this peak — but no NaN/Inf.
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,238 @@
+//! Bit-exact software implementations of every numeric format the paper
+//! defines, compares against, or builds on (§I–§II):
+//!
+//! | module   | format                        | group | bits/value |
+//! |----------|-------------------------------|-------|------------|
+//! | [`hif4`] | HiF4 (the paper's format)     | 64    | 4.5        |
+//! | [`nvfp4`]| NVFP4 (E4M3 scale + E2M1)     | 16    | 4.5        |
+//! | [`mxfp4`]| OCP MXFP4 (E8M0 + E2M1)       | 32    | 4.25       |
+//! | [`mx4`]  | MX4 shared micro-exponents    | 16    | 4.0        |
+//! | [`bfp`]  | vanilla BFP (shared exponent) | 16    | 4.5        |
+//!
+//! Scalar building blocks: [`bf16`], [`e6m2`], [`s1p2`], [`e2m1`], [`e4m3`],
+//! [`e8m0`], with shared [`rounding`].
+//!
+//! The uniform entry point is [`Quantizer`], which quantize→dequantizes a
+//! tensor row padded into groups — the "simulated quantization" semantics of
+//! the paper's LLM experiments — plus [`QuantScheme`] which adds the
+//! per-tensor-scaling (PTS) wrapper NVFP4 needs.
+
+pub mod bf16;
+pub mod bfp;
+pub mod e2m1;
+pub mod e4m3;
+pub mod e6m2;
+pub mod e8m0;
+pub mod hif4;
+pub mod mx4;
+pub mod mxfp4;
+pub mod nvfp4;
+pub mod rounding;
+pub mod s1p2;
+
+use rounding::RoundMode;
+
+/// The block formats under evaluation, as a uniform enum (dyn-free dispatch
+/// keeps the hot quantization loops monomorphic-ish and inlinable).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Format {
+    HiF4,
+    Nvfp4,
+    Mxfp4,
+    Mx4,
+    VanillaBfp,
+}
+
+impl Format {
+    pub fn name(self) -> &'static str {
+        match self {
+            Format::HiF4 => "HiF4",
+            Format::Nvfp4 => "NVFP4",
+            Format::Mxfp4 => "MXFP4",
+            Format::Mx4 => "MX4",
+            Format::VanillaBfp => "BFP4",
+        }
+    }
+
+    /// Block length of one quantization group.
+    pub fn group(self) -> usize {
+        match self {
+            Format::HiF4 => hif4::GROUP,
+            Format::Nvfp4 => nvfp4::GROUP,
+            Format::Mxfp4 => mxfp4::GROUP,
+            Format::Mx4 => mx4::GROUP,
+            Format::VanillaBfp => bfp::GROUP,
+        }
+    }
+
+    /// Average storage cost in bits/value including metadata.
+    pub fn bits_per_value(self) -> f64 {
+        match self {
+            Format::HiF4 => hif4::BITS_PER_VALUE,
+            Format::Nvfp4 => nvfp4::BITS_PER_VALUE,
+            Format::Mxfp4 => mxfp4::BITS_PER_VALUE,
+            Format::Mx4 => mx4::BITS_PER_VALUE,
+            Format::VanillaBfp => bfp::BITS_PER_VALUE,
+        }
+    }
+
+    /// Quantize→dequantize one block (input length == `group()`).
+    pub fn quant_dequant_block(self, v: &[f32], out: &mut [f32], mode: RoundMode) {
+        match self {
+            Format::HiF4 => hif4::quant_dequant(v, out, mode),
+            Format::Nvfp4 => nvfp4::quant_dequant(v, out, mode),
+            Format::Mxfp4 => mxfp4::quant_dequant(v, out, mode),
+            Format::Mx4 => mx4::quant_dequant(v, out, mode),
+            Format::VanillaBfp => bfp::quant_dequant(v, out, mode),
+        }
+    }
+}
+
+/// A quantization scheme = block format + optional per-tensor scaling,
+/// exactly the configurations the paper's tables evaluate
+/// (`NVFP4`, `NVFP4+PTS`, `HiF4`, …).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct QuantScheme {
+    pub format: Format,
+    /// Software per-tensor scaling before/after quantization (§I: NVFP4's
+    /// extra pipeline stage; a no-op for formats with enough global range).
+    pub pts: bool,
+    pub mode: RoundMode,
+}
+
+impl QuantScheme {
+    pub fn direct(format: Format) -> Self {
+        QuantScheme { format, pts: false, mode: RoundMode::NearestEven }
+    }
+
+    pub fn with_pts(format: Format) -> Self {
+        QuantScheme { format, pts: true, mode: RoundMode::NearestEven }
+    }
+
+    pub fn label(&self) -> String {
+        if self.pts {
+            format!("{}+PTS", self.format.name())
+        } else {
+            self.format.name().to_string()
+        }
+    }
+
+    /// Quantize→dequantize a whole tensor (groups run along the contiguous
+    /// axis; the tail group is zero-padded, matching how linear-layer rows
+    /// are blocked along the reduction dimension in the paper's setup).
+    pub fn quant_dequant(&self, input: &[f32], out: &mut [f32]) {
+        assert_eq!(input.len(), out.len());
+        let t = if self.pts { nvfp4::pts_scale(input) } else { 1.0 };
+        let g = self.format.group();
+        let mut buf_in = vec![0f32; g];
+        let mut buf_out = vec![0f32; g];
+        for (ci, chunk) in input.chunks(g).enumerate() {
+            let base = ci * g;
+            if chunk.len() == g && t == 1.0 {
+                self.format.quant_dequant_block(chunk, &mut buf_out, self.mode);
+            } else {
+                buf_in[..chunk.len()].copy_from_slice(chunk);
+                buf_in[chunk.len()..].fill(0.0);
+                if t != 1.0 {
+                    for x in buf_in.iter_mut() {
+                        *x *= t;
+                    }
+                }
+                self.format.quant_dequant_block(&buf_in, &mut buf_out, self.mode);
+            }
+            let n = chunk.len();
+            if t != 1.0 {
+                for i in 0..n {
+                    out[base + i] = buf_out[i] / t;
+                }
+            } else {
+                out[base..base + n].copy_from_slice(&buf_out[..n]);
+            }
+        }
+    }
+
+    /// Convenience: allocate the output.
+    pub fn quant_dequant_vec(&self, input: &[f32]) -> Vec<f32> {
+        let mut out = vec![0f32; input.len()];
+        self.quant_dequant(input, &mut out);
+        out
+    }
+}
+
+/// Mean squared error between a tensor and its quantized version — the
+/// metric of Fig 3.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut acc = 0f64;
+    for (x, y) in a.iter().zip(b) {
+        let d = (*x - *y) as f64;
+        acc += d * d;
+    }
+    acc / a.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Rng;
+
+    #[test]
+    fn all_formats_roundtrip_zero() {
+        for f in [Format::HiF4, Format::Nvfp4, Format::Mxfp4, Format::Mx4, Format::VanillaBfp] {
+            let scheme = QuantScheme::direct(f);
+            let v = vec![0f32; 100]; // non-multiple of any group size
+            let out = scheme.quant_dequant_vec(&v);
+            assert!(out.iter().all(|x| *x == 0.0), "{}", f.name());
+        }
+    }
+
+    #[test]
+    fn tail_padding_matches_full_group() {
+        // Quantizing a prefix that is not a multiple of the group must equal
+        // quantizing the zero-padded group (blocking invariant).
+        let mut rng = Rng::seed(23);
+        let v: Vec<f32> = (0..100).map(|_| rng.normal() as f32).collect();
+        for f in [Format::HiF4, Format::Nvfp4, Format::Mxfp4] {
+            let scheme = QuantScheme::direct(f);
+            let out = scheme.quant_dequant_vec(&v);
+            let g = f.group();
+            let tail_start = (v.len() / g) * g;
+            let mut padded = v[tail_start..].to_vec();
+            padded.resize(g, 0.0);
+            let mut full = vec![0f32; g];
+            f.quant_dequant_block(&padded, &mut full, RoundMode::NearestEven);
+            for (i, o) in out[tail_start..].iter().enumerate() {
+                assert_eq!(*o, full[i], "{} tail elem {i}", f.name());
+            }
+        }
+    }
+
+    #[test]
+    fn pts_invariant_for_in_range_tensors() {
+        // For a tensor already centered in NVFP4's range PTS changes little;
+        // for an out-of-range tensor it must dramatically reduce MSE.
+        let mut rng = Rng::seed(29);
+        let big: Vec<f32> = (0..256).map(|_| rng.normal() as f32 * 10000.0).collect();
+        let direct = QuantScheme::direct(Format::Nvfp4).quant_dequant_vec(&big);
+        let pts = QuantScheme::with_pts(Format::Nvfp4).quant_dequant_vec(&big);
+        let e_direct = mse(&big, &direct);
+        let e_pts = mse(&big, &pts);
+        assert!(
+            e_pts < e_direct * 0.2,
+            "PTS should rescue out-of-range tensors: direct {e_direct} pts {e_pts}"
+        );
+    }
+
+    #[test]
+    fn fig3_mse_ordering_gaussian() {
+        // The headline ordering of Fig 3 on σ=1 Gaussian data:
+        // HiF4 < NVFP4 < MXFP4.
+        let mut rng = Rng::seed(31);
+        let v: Vec<f32> = (0..4096).map(|_| rng.normal() as f32).collect();
+        let e_hif4 = mse(&v, &QuantScheme::direct(Format::HiF4).quant_dequant_vec(&v));
+        let e_nvfp4 = mse(&v, &QuantScheme::direct(Format::Nvfp4).quant_dequant_vec(&v));
+        let e_mxfp4 = mse(&v, &QuantScheme::direct(Format::Mxfp4).quant_dequant_vec(&v));
+        assert!(e_hif4 < e_nvfp4, "HiF4 {e_hif4} < NVFP4 {e_nvfp4}");
+        assert!(e_nvfp4 < e_mxfp4, "NVFP4 {e_nvfp4} < MXFP4 {e_mxfp4}");
+    }
+}

@@ -1,0 +1,180 @@
+//! MX4 — Microsoft/Meta's shared-micro-exponent 4-bit format (§I, Fig 1).
+//!
+//! Group of 16: one shared 8-bit exponent + 8 × 1-bit micro-exponents (one
+//! per sub-group of 2) + 16 × 3-bit sign-magnitude elements (S1P1) ⇒
+//! (8 + 8 + 48)/16 = 4 bits/value. Implemented for the intro's comparison
+//! claims (MX4 underperforms even vanilla BFP because the 3-bit element has
+//! only a 2-bit significand); exercised by the ablation bench.
+
+use super::e8m0::{floor_log2, E8M0};
+use super::rounding::{round_int, RoundMode};
+
+/// Elements per MX4 group.
+pub const GROUP: usize = 16;
+/// Elements per micro-exponent.
+pub const SUB: usize = 2;
+/// Average storage cost.
+pub const BITS_PER_VALUE: f64 = 4.0;
+/// S1P1 max magnitude: 1.5 (sign + 1 integer + 1 fraction bit).
+pub const ELEM_MAX: f32 = 1.5;
+/// S1P1 grid step.
+pub const ELEM_STEP: f32 = 0.5;
+/// Largest power-of-two exponent of S1P1: 1.5 = 1.5 × 2^0.
+pub const EMAX_ELEM: i32 = 0;
+
+/// A packed MX4 group.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Mx4Group {
+    /// Shared power-of-two scale.
+    pub scale: E8M0,
+    /// Micro-exponent bits: bit `j` covers elements `[2j, 2j+2)`. A set bit
+    /// means the sub-group uses the *finer* scale 2^(E-1) (one extra bit of
+    /// effective precision for small sub-groups).
+    pub micro: u8,
+    /// 16 × 3-bit S1P1 elements, stored one per byte (`s_mm`).
+    pub elems: [u8; 16],
+}
+
+impl Mx4Group {
+    /// Signed element value in halves (-3..=3).
+    #[inline]
+    pub fn signed_h(&self, i: usize) -> i8 {
+        let e = self.elems[i];
+        let m = (e & 0b011) as i8;
+        if e & 0b100 != 0 {
+            -m
+        } else {
+            m
+        }
+    }
+
+    #[inline]
+    pub fn micro_down(&self, i: usize) -> i32 {
+        ((self.micro >> (i / SUB)) & 1) as i32
+    }
+
+    #[inline]
+    pub fn decode(&self, i: usize) -> f32 {
+        self.scale.to_f32() * 2f32.powi(-self.micro_down(i)) * (self.signed_h(i) as f32 * ELEM_STEP)
+    }
+
+    pub fn decode_all(&self, out: &mut [f32]) {
+        for i in 0..GROUP {
+            out[i] = self.decode(i);
+        }
+    }
+}
+
+/// Quantize 16 values into an MX4 group.
+///
+/// Shared exponent from the group peak (OCP-style rule with S1P1's emax=0);
+/// each sub-group of 2 drops to the finer scale when its own peak fits.
+pub fn quantize(v: &[f32], mode: RoundMode) -> Mx4Group {
+    assert_eq!(v.len(), GROUP, "MX4 quantizes exactly 16 elements");
+    if v.iter().any(|x| !x.is_finite()) {
+        return Mx4Group { scale: E8M0::NAN, micro: 0, elems: [0; 16] };
+    }
+    let amax = v.iter().fold(0f32, |m, x| m.max(x.abs()));
+    if amax == 0.0 {
+        return Mx4Group { scale: E8M0(0), micro: 0, elems: [0; 16] };
+    }
+    // Scale so the peak lies in (0.75, 1.5]: E = floor(log2(amax)) keeps
+    // peak/2^E in [1, 2) which can clip at 1.5; follow the OCP convention
+    // (clip the top lobe) like MXFP4 does.
+    let e = floor_log2(amax) - EMAX_ELEM;
+    let scale = E8M0(e.clamp(-127, 127).wrapping_add(127) as u8);
+    let s = scale.to_f32();
+    let mut g = Mx4Group { scale, micro: 0, elems: [0; 16] };
+    for j in 0..GROUP / SUB {
+        let sub = &v[SUB * j..SUB * j + SUB];
+        let speak = sub.iter().fold(0f32, |m, x| m.max(x.abs()));
+        // Fine scale (2^(E-1)) iff the sub-group still fits: peak ≤ 1.5×2^(E-1).
+        if speak <= ELEM_MAX * s * 0.5 {
+            g.micro |= 1 << j;
+        }
+        let eff = s * if g.micro >> j & 1 == 1 { 0.5 } else { 1.0 };
+        for k in 0..SUB {
+            let i = SUB * j + k;
+            let q = round_int(v[i] / (eff * ELEM_STEP), mode);
+            let neg = q < 0.0;
+            let mag = (q.abs() as u8).min(3);
+            g.elems[i] = ((neg as u8) << 2) | mag;
+        }
+    }
+    g
+}
+
+/// Quantize→dequantize (simulated quantization).
+pub fn quant_dequant(v: &[f32], out: &mut [f32], mode: RoundMode) {
+    let g = quantize(v, mode);
+    if g.scale.is_nan() {
+        out[..GROUP].fill(f32::NAN);
+        return;
+    }
+    g.decode_all(out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Rng;
+
+    fn qd(v: &[f32]) -> Vec<f32> {
+        let mut out = vec![0f32; GROUP];
+        quant_dequant(v, &mut out, RoundMode::NearestEven);
+        out
+    }
+
+    #[test]
+    fn zeros_stay_zero() {
+        assert!(qd(&[0.0; GROUP]).iter().all(|x| *x == 0.0));
+    }
+
+    #[test]
+    fn exact_grid_roundtrip() {
+        // Values on the coarse grid with peak 1.5 reproduce exactly.
+        let v: [f32; GROUP] = core::array::from_fn(|i| ((i % 4) as f32) * 0.5 - 0.5);
+        let out = qd(&v);
+        for (a, b) in v.iter().zip(&out) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn micro_exponent_helps_small_subgroups() {
+        let mut v = [0.11f32; GROUP];
+        v[0] = 1.5; // peak: scale 2^0, coarse step 0.5.
+        let g = quantize(&v, RoundMode::NearestEven);
+        assert_eq!(g.micro & 1, 0, "peak sub-group must stay coarse");
+        assert_eq!(g.micro >> 1, 0x7F, "small sub-groups go fine");
+        let out = qd(&v);
+        // Fine step is 0.25 → 0.11 rounds to 0.25·0 or 0.25; coarse would
+        // round to 0 always.
+        assert!(out[2] == 0.0 || out[2] == 0.25);
+    }
+
+    #[test]
+    fn worse_than_4bit_formats_on_gaussian() {
+        // The intro's claim: MX4's 3-bit element hurts accuracy.
+        let mut rng = Rng::seed(17);
+        let n = 128 * GROUP;
+        let v: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let mut mx4 = 0f64;
+        let mut out = vec![0f32; GROUP];
+        for c in v.chunks(GROUP) {
+            quant_dequant(c, &mut out, RoundMode::NearestEven);
+            for (a, b) in c.iter().zip(&out) {
+                mx4 += ((a - b) as f64).powi(2);
+            }
+        }
+        let mut hif4 = 0f64;
+        let mut out64 = vec![0f32; crate::formats::hif4::GROUP];
+        for c in v.chunks(crate::formats::hif4::GROUP) {
+            crate::formats::hif4::quant_dequant(c, &mut out64, RoundMode::NearestEven);
+            for (a, b) in c.iter().zip(&out64) {
+                hif4 += ((a - b) as f64).powi(2);
+            }
+        }
+        assert!(mx4 > 2.0 * hif4, "MX4 mse {mx4} should be far above HiF4 {hif4}");
+    }
+}

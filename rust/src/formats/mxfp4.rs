@@ -1,0 +1,168 @@
+//! MXFP4 — the OCP Microscaling 4-bit format (§I, Fig 1).
+//!
+//! Group of 32 [`E2M1`] elements sharing one power-of-two [`E8M0`] scale ⇒
+//! 4.25 bits/value. Quantization follows the OCP MX spec / Microscaling
+//! paper [13]: `shared_exp = floor(log2(amax)) − emax(E2M1)`, elements
+//! round-to-nearest with saturation. The power-of-two scale cannot normalize
+//! the group peak to E2M1's upper bound (up to 1 binade of the intra-group
+//! range is wasted) — the effect Fig 3's 1.89× MSE ratio quantifies.
+
+use super::e2m1::E2M1;
+use super::e8m0::E8M0;
+use super::rounding::RoundMode;
+
+/// Elements per MXFP4 group.
+pub const GROUP: usize = 32;
+/// Average storage cost (32×4 + 8)/32.
+pub const BITS_PER_VALUE: f64 = 4.25;
+/// E2M1's largest power-of-two exponent: 6 = 1.5 × 2^2.
+pub const EMAX_ELEM: i32 = 2;
+
+/// A packed MXFP4 group: one E8M0 scale + 32 E2M1 nibbles.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Mxfp4Group {
+    pub scale: E8M0,
+    pub elems: [u8; 16],
+}
+
+impl Mxfp4Group {
+    #[inline]
+    pub fn elem(&self, i: usize) -> E2M1 {
+        let b = self.elems[i / 2];
+        E2M1(if i % 2 == 0 { b & 0x0F } else { b >> 4 })
+    }
+
+    #[inline]
+    pub fn set_elem(&mut self, i: usize, v: E2M1) {
+        let b = &mut self.elems[i / 2];
+        if i % 2 == 0 {
+            *b = (*b & 0xF0) | (v.0 & 0x0F);
+        } else {
+            *b = (*b & 0x0F) | ((v.0 & 0x0F) << 4);
+        }
+    }
+
+    #[inline]
+    pub fn decode(&self, i: usize) -> f32 {
+        self.scale.to_f32() * self.elem(i).to_f32()
+    }
+
+    pub fn decode_all(&self, out: &mut [f32]) {
+        assert!(out.len() >= GROUP);
+        let s = self.scale.to_f32();
+        for i in 0..GROUP {
+            out[i] = s * self.elem(i).to_f32();
+        }
+    }
+}
+
+/// Quantize 32 values into an MXFP4 group per the OCP MX rule.
+pub fn quantize(v: &[f32], mode: RoundMode) -> Mxfp4Group {
+    assert_eq!(v.len(), GROUP, "MXFP4 quantizes exactly 32 elements");
+    if v.iter().any(|x| !x.is_finite()) {
+        return Mxfp4Group { scale: E8M0::NAN, elems: [0; 16] };
+    }
+    let amax = v.iter().fold(0f32, |m, x| m.max(x.abs()));
+    let scale = E8M0::from_amax(amax, EMAX_ELEM);
+    let s = scale.to_f32();
+    let inv = 1.0 / s; // power of two: exact
+    let mut g = Mxfp4Group { scale, elems: [0; 16] };
+    for i in 0..GROUP {
+        g.set_elem(i, E2M1::from_f32(v[i] * inv, mode));
+    }
+    g
+}
+
+/// Quantize→dequantize (simulated quantization).
+pub fn quant_dequant(v: &[f32], out: &mut [f32], mode: RoundMode) {
+    let g = quantize(v, mode);
+    if g.scale.is_nan() {
+        out[..GROUP].fill(f32::NAN);
+        return;
+    }
+    g.decode_all(out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Rng;
+
+    fn qd(v: &[f32]) -> Vec<f32> {
+        let mut out = vec![0f32; GROUP];
+        quant_dequant(v, &mut out, RoundMode::NearestEven);
+        out
+    }
+
+    #[test]
+    fn zeros_stay_zero() {
+        assert!(qd(&[0.0; GROUP]).iter().all(|x| *x == 0.0));
+    }
+
+    #[test]
+    fn pow2_peak_is_exact() {
+        let mut v = [0.5f32; GROUP];
+        v[0] = 4.0; // floor(log2 4)=2 → scale=1 → elements 4 and 0.5 exact.
+        let out = qd(&v);
+        assert_eq!(out[0], 4.0);
+        assert_eq!(out[1], 0.5);
+    }
+
+    #[test]
+    fn scale_wastes_up_to_one_binade() {
+        // amax = 7.9: floor(log2)=2 → scale 2^0; 7.9 clips to 6 — the
+        // power-of-two scale cannot normalize the peak to 6.
+        let mut v = [0.5f32; GROUP];
+        v[0] = 7.9;
+        let g = quantize(&v, RoundMode::NearestEven);
+        assert_eq!(g.scale.to_f32(), 1.0);
+        assert_eq!(g.decode(0), 6.0, "peak clipped");
+    }
+
+    #[test]
+    fn wide_global_range() {
+        // E8M0 spans 2^-127..2^127: no NVFP4-style overflow crash.
+        let mut v = [1.0f32; GROUP];
+        v[0] = 2f32.powi(20);
+        let out = qd(&v);
+        let rel = (out[0] - v[0]).abs() / v[0];
+        assert!(rel < 0.34, "no catastrophic clipping, rel={rel}");
+    }
+
+    #[test]
+    fn gaussian_mse_worse_than_nvfp4() {
+        // Fig 3: MXFP4 ≈ 1.89×, NVFP4 ≈ 1.32× HiF4's MSE. Check ordering.
+        let mut rng = Rng::seed(5);
+        let n = 64 * GROUP;
+        let v: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let mse = |f: &dyn Fn(&[f32], &mut [f32])| -> f64 {
+            let mut acc = 0f64;
+            let mut out = vec![0f32; GROUP.max(crate::formats::nvfp4::GROUP)];
+            for chunk in v.chunks(GROUP) {
+                f(chunk, &mut out);
+                for (a, b) in chunk.iter().zip(&out) {
+                    acc += ((a - b) as f64).powi(2);
+                }
+            }
+            acc / n as f64
+        };
+        let mx = mse(&|c, o| quant_dequant(c, o, RoundMode::NearestEven));
+        let mut nv_acc = 0f64;
+        let mut out = vec![0f32; crate::formats::nvfp4::GROUP];
+        for chunk in v.chunks(crate::formats::nvfp4::GROUP) {
+            crate::formats::nvfp4::quant_dequant(chunk, &mut out, RoundMode::NearestEven);
+            for (a, b) in chunk.iter().zip(&out) {
+                nv_acc += ((a - b) as f64).powi(2);
+            }
+        }
+        let nv = nv_acc / n as f64;
+        assert!(mx > nv, "MXFP4 MSE {mx} should exceed NVFP4 MSE {nv}");
+    }
+
+    #[test]
+    fn nan_poisons_group() {
+        let mut v = [1.0f32; GROUP];
+        v[31] = f32::NAN;
+        assert!(qd(&v).iter().all(|x| x.is_nan()));
+    }
+}

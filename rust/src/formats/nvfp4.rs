@@ -1,0 +1,196 @@
+//! NVFP4 — NVIDIA Blackwell's proprietary 4-bit BFP format (§I, Table II).
+//!
+//! Group of 16 [`E2M1`] elements sharing one FP8-[`E4M3`] scale ⇒ 4.5
+//! bits/value. The scale normalizes each group's peak magnitude to 6 (E2M1's
+//! upper bound). Global dynamic range is only 22 binades ([-10, 11]); tensors
+//! exceeding it need software **per-tensor scaling** (PTS): pre-scale the
+//! tensor so its peak magnitude is 2688 = 6 × 448 before quantizing, undo the
+//! scale at dequantization. Both direct-cast and PTS paths are implemented —
+//! Fig 3 and the LLM tables evaluate both.
+
+use super::e2m1::{self, E2M1};
+use super::e4m3::E4M3;
+use super::rounding::RoundMode;
+
+/// Elements per NVFP4 group.
+pub const GROUP: usize = 16;
+/// Average storage cost (16×4 + 8)/16.
+pub const BITS_PER_VALUE: f64 = 4.5;
+/// Peak magnitude PTS normalizes a tensor to: 6 × 448.
+pub const PTS_TARGET: f32 = 2688.0;
+/// Max positive value: 448 × 6 = 2^11 × 1.3125 (Table II).
+pub const MAX_POSITIVE: f32 = 2688.0;
+/// Min positive value: 2^-9 (min subnormal scale) × 0.5 = 2^-10 (Table II).
+pub const MIN_POSITIVE: f32 = 0.0009765625;
+
+/// A packed NVFP4 group: one E4M3 scale + 16 E2M1 nibbles.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Nvfp4Group {
+    pub scale: E4M3,
+    /// 16 E2M1 elements packed two per byte (low nibble = even index).
+    pub elems: [u8; 8],
+}
+
+impl Nvfp4Group {
+    #[inline]
+    pub fn elem(&self, i: usize) -> E2M1 {
+        let b = self.elems[i / 2];
+        E2M1(if i % 2 == 0 { b & 0x0F } else { b >> 4 })
+    }
+
+    #[inline]
+    pub fn set_elem(&mut self, i: usize, v: E2M1) {
+        let b = &mut self.elems[i / 2];
+        if i % 2 == 0 {
+            *b = (*b & 0xF0) | (v.0 & 0x0F);
+        } else {
+            *b = (*b & 0x0F) | ((v.0 & 0x0F) << 4);
+        }
+    }
+
+    /// Decode element `i`: scale × element.
+    #[inline]
+    pub fn decode(&self, i: usize) -> f32 {
+        self.scale.to_f32() * self.elem(i).to_f32()
+    }
+
+    pub fn decode_all(&self, out: &mut [f32]) {
+        assert!(out.len() >= GROUP);
+        let s = self.scale.to_f32();
+        for i in 0..GROUP {
+            out[i] = s * self.elem(i).to_f32();
+        }
+    }
+}
+
+/// Quantize 16 values into an NVFP4 group (direct cast).
+///
+/// Scale = saturating E4M3 cast of `amax / 6`. The two range-failure modes
+/// the paper highlights are faithfully reproduced:
+/// * `amax/6 > 448` → the scale saturates at 448 and elements clip at ±6;
+/// * `amax/6` below half the min subnormal → the scale rounds to **zero**
+///   and the whole group decodes to zero.
+pub fn quantize(v: &[f32], mode: RoundMode) -> Nvfp4Group {
+    assert_eq!(v.len(), GROUP, "NVFP4 quantizes exactly 16 elements");
+    if v.iter().any(|x| !x.is_finite()) {
+        return Nvfp4Group { scale: E4M3::NAN, elems: [0; 8] };
+    }
+    let amax = v.iter().fold(0f32, |m, x| m.max(x.abs()));
+    let scale = E4M3::from_f32(amax / e2m1::MAX_ABS, mode);
+    let s = scale.to_f32();
+    let inv = if s > 0.0 { 1.0 / s } else { 0.0 };
+    let mut g = Nvfp4Group { scale, elems: [0; 8] };
+    for i in 0..GROUP {
+        g.set_elem(i, E2M1::from_f32(v[i] * inv, mode));
+    }
+    g
+}
+
+/// Quantize→dequantize one group in place (simulated quantization).
+pub fn quant_dequant(v: &[f32], out: &mut [f32], mode: RoundMode) {
+    let g = quantize(v, mode);
+    if g.scale.is_nan() {
+        out[..GROUP].fill(f32::NAN);
+        return;
+    }
+    g.decode_all(out);
+}
+
+/// Compute the per-tensor scale PTS applies before NVFP4 quantization:
+/// `t` s.t. `amax(tensor) × t = 2688`; identity for empty/zero tensors.
+pub fn pts_scale(tensor: &[f32]) -> f32 {
+    let amax = tensor.iter().fold(0f32, |m, x| m.max(x.abs()));
+    if amax > 0.0 && amax.is_finite() {
+        PTS_TARGET / amax
+    } else {
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Rng;
+
+    fn qd(v: &[f32]) -> Vec<f32> {
+        let mut out = vec![0f32; GROUP];
+        quant_dequant(v, &mut out, RoundMode::NearestEven);
+        out
+    }
+
+    #[test]
+    fn zeros_stay_zero() {
+        assert!(qd(&[0.0; GROUP]).iter().all(|x| *x == 0.0));
+    }
+
+    #[test]
+    fn table2_constants() {
+        assert_eq!(MAX_POSITIVE, 2f32.powi(11) * 1.3125);
+        assert_eq!(MIN_POSITIVE, 2f32.powi(-10));
+        // Table II counts exponent span [-10, 11] ⇒ ~22 binades.
+        let binades = (MAX_POSITIVE / MIN_POSITIVE).log2();
+        assert!((binades - 21.39).abs() < 0.01, "≈22 binades global range, got {binades}");
+    }
+
+    #[test]
+    fn peak_normalizes_to_six() {
+        let mut v = [0.5f32; GROUP];
+        v[3] = 48.0; // amax/6 = 8, exactly representable in E4M3.
+        let g = quantize(&v, RoundMode::NearestEven);
+        assert_eq!(g.scale.to_f32(), 8.0);
+        assert_eq!(g.elem(3).to_f32(), 6.0);
+        assert_eq!(g.decode(3), 48.0);
+    }
+
+    #[test]
+    fn overflow_crash_mode() {
+        // amax = 2^13: scale saturates at 448, peak clips at 448×6=2688.
+        let mut v = [1.0f32; GROUP];
+        v[0] = 8192.0;
+        let out = qd(&v);
+        assert_eq!(out[0], 2688.0, "clipped to the NVFP4 max");
+        let rel = (out[0] - v[0]).abs() / v[0];
+        assert!(rel > 0.5, "catastrophic clipping is the expected failure");
+    }
+
+    #[test]
+    fn underflow_crash_mode() {
+        // amax/6 < 2^-10 → scale quantizes to zero → group wiped out.
+        let v = [2f32.powi(-14); GROUP];
+        let out = qd(&v);
+        assert!(out.iter().all(|x| *x == 0.0));
+    }
+
+    #[test]
+    fn pts_rescues_overflow() {
+        let mut v = vec![1.0f32; GROUP];
+        v[0] = 8192.0;
+        let t = pts_scale(&v);
+        assert_eq!(t * 8192.0, PTS_TARGET);
+        let scaled: Vec<f32> = v.iter().map(|x| x * t).collect();
+        let mut out = vec![0f32; GROUP];
+        quant_dequant(&scaled, &mut out, RoundMode::NearestEven);
+        let back: Vec<f32> = out.iter().map(|x| x / t).collect();
+        let rel = (back[0] - v[0]).abs() / v[0];
+        assert!(rel < 0.05, "PTS must rescue the peak, rel={rel}");
+    }
+
+    #[test]
+    fn gaussian_error_reasonable() {
+        let mut rng = Rng::seed(11);
+        for _ in 0..50 {
+            let v: Vec<f32> = (0..GROUP).map(|_| rng.normal() as f32).collect();
+            let out = qd(&v);
+            for (a, b) in v.iter().zip(&out) {
+                assert!((a - b).abs() <= 0.3 * a.abs().max(0.6), "{a} -> {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn nan_poisons_group() {
+        let mut v = [1.0f32; GROUP];
+        v[7] = f32::INFINITY;
+        assert!(qd(&v).iter().all(|x| x.is_nan()));
+    }
+}

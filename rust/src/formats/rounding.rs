@@ -1,0 +1,103 @@
+//! Rounding primitives shared by every codec in `formats/`.
+//!
+//! The paper (§II.B) mandates *round-half-to-even* (RNE) or
+//! *round-half-away-from-zero* (RHAZ) for all BF16→HiF4 conversion steps.
+//! Both are provided; RNE is the library default because it matches IEEE-754
+//! hardware and the Pallas reference kernels.
+
+/// Rounding mode for quantization steps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum RoundMode {
+    /// Round half to even (IEEE-754 default; ties go to the even grid point).
+    #[default]
+    NearestEven,
+    /// Round half away from zero (ties move away from zero).
+    HalfAwayFromZero,
+}
+
+/// Round `x` to the nearest integer under the given mode.
+///
+/// `f32::round` is RHAZ; RNE uses `round_ties_even` semantics implemented
+/// manually so behaviour is identical on every toolchain.
+#[inline]
+pub fn round_int(x: f32, mode: RoundMode) -> f32 {
+    match mode {
+        RoundMode::HalfAwayFromZero => x.round(),
+        // Branchless intrinsic (roundeven); the format codecs call this per
+        // element, so it is on the quantization hot path (§Perf).
+        RoundMode::NearestEven => x.round_ties_even(),
+    }
+}
+
+/// Round `x` onto a uniform grid of step `step` (e.g. 0.25 for S1P2).
+#[inline]
+pub fn round_to_grid(x: f32, step: f32, mode: RoundMode) -> f32 {
+    round_int(x / step, mode) * step
+}
+
+/// Round a positive `x` to `mbits` significand bits (hidden bit excluded),
+/// returning the rounded value. Used by the scalar mini-float codecs.
+/// `x` must be finite and non-negative.
+#[inline]
+pub fn round_significand(x: f32, mbits: u32, mode: RoundMode) -> f32 {
+    if x == 0.0 || !x.is_finite() {
+        return x;
+    }
+    let e = x.abs().log2().floor() as i32;
+    // Guard against log2 edge cases at powers of two boundaries.
+    let e = if x.abs() < 2f32.powi(e) { e - 1 } else if x.abs() >= 2f32.powi(e + 1) { e + 1 } else { e };
+    let ulp = 2f32.powi(e - mbits as i32);
+    round_int(x / ulp, mode) * ulp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rne_ties_go_even() {
+        assert_eq!(round_int(0.5, RoundMode::NearestEven), 0.0);
+        assert_eq!(round_int(1.5, RoundMode::NearestEven), 2.0);
+        assert_eq!(round_int(2.5, RoundMode::NearestEven), 2.0);
+        assert_eq!(round_int(-0.5, RoundMode::NearestEven), 0.0);
+        assert_eq!(round_int(-1.5, RoundMode::NearestEven), -2.0);
+        assert_eq!(round_int(-2.5, RoundMode::NearestEven), -2.0);
+    }
+
+    #[test]
+    fn rhaz_ties_go_away() {
+        assert_eq!(round_int(0.5, RoundMode::HalfAwayFromZero), 1.0);
+        assert_eq!(round_int(1.5, RoundMode::HalfAwayFromZero), 2.0);
+        assert_eq!(round_int(-0.5, RoundMode::HalfAwayFromZero), -1.0);
+        assert_eq!(round_int(-2.5, RoundMode::HalfAwayFromZero), -3.0);
+    }
+
+    #[test]
+    fn non_ties_are_nearest() {
+        for mode in [RoundMode::NearestEven, RoundMode::HalfAwayFromZero] {
+            assert_eq!(round_int(0.49, mode), 0.0);
+            assert_eq!(round_int(0.51, mode), 1.0);
+            assert_eq!(round_int(-1.2, mode), -1.0);
+            assert_eq!(round_int(7.9, mode), 8.0);
+        }
+    }
+
+    #[test]
+    fn grid_quarter_steps() {
+        // S1P2 grid: multiples of 0.25. 0.375 is a tie between 0.25 and 0.5.
+        assert_eq!(round_to_grid(0.375, 0.25, RoundMode::NearestEven), 0.5); // 1.5 -> 2
+        assert_eq!(round_to_grid(0.125, 0.25, RoundMode::NearestEven), 0.0); // 0.5 -> 0
+        assert_eq!(round_to_grid(0.125, 0.25, RoundMode::HalfAwayFromZero), 0.25);
+        assert_eq!(round_to_grid(-0.375, 0.25, RoundMode::NearestEven), -0.5);
+        assert_eq!(round_to_grid(1.7, 0.25, RoundMode::NearestEven), 1.75);
+    }
+
+    #[test]
+    fn significand_rounding() {
+        // 3 significand bits after the hidden bit: grid of 1/8 in [1,2).
+        assert_eq!(round_significand(1.0 + 1.0 / 16.0, 3, RoundMode::NearestEven), 1.0);
+        assert_eq!(round_significand(1.0 + 3.0 / 16.0, 3, RoundMode::NearestEven), 1.25);
+        // Exactly representable values survive.
+        assert_eq!(round_significand(1.375, 3, RoundMode::NearestEven), 1.375);
+    }
+}

@@ -1,0 +1,128 @@
+//! S1P2 — the 4-bit sign-magnitude in-group element of HiF4 (Table I).
+//!
+//! `SXPY` notation: `S` sign bit, `P` binary point, `X` integer bits, `Y`
+//! fraction bits. S1P2 = sign + 1 integer bit + 2 fraction bits, i.e. a
+//! uniform grid of step 0.25 over ±[0, 1.75]. Conceptually equal to E1M2 but
+//! interpreted (and implemented) as a scaled integer, which is what lets the
+//! HiF4 dot product stay in fixed-point arithmetic.
+
+use super::rounding::{round_int, RoundMode};
+
+/// An S1P2 value stored in its 4 raw bits (`s_mmm`, magnitude in quarters).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct S1P2(pub u8);
+
+/// Maximum representable magnitude (`S1.11` = 1.75).
+pub const MAX_ABS: f32 = 1.75;
+/// Smallest positive magnitude (`S0.01` = 0.25).
+pub const MIN_POS: f32 = 0.25;
+/// Grid step.
+pub const STEP: f32 = 0.25;
+
+impl S1P2 {
+    pub const POS_ZERO: S1P2 = S1P2(0b0000);
+    pub const NEG_ZERO: S1P2 = S1P2(0b1000);
+    pub const MAX: S1P2 = S1P2(0b0111);
+    pub const MIN: S1P2 = S1P2(0b1111);
+
+    #[inline]
+    pub fn sign_negative(self) -> bool {
+        self.0 & 0b1000 != 0
+    }
+
+    /// Magnitude in quarter-units (0..=7).
+    #[inline]
+    pub fn magnitude_q(self) -> u8 {
+        self.0 & 0b0111
+    }
+
+    /// Signed value in quarter-units (-7..=7); the integer the fixed-point
+    /// dot-product datapath actually multiplies.
+    #[inline]
+    pub fn signed_q(self) -> i8 {
+        let m = self.magnitude_q() as i8;
+        if self.sign_negative() {
+            -m
+        } else {
+            m
+        }
+    }
+
+    /// Decode to f32 (exact).
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        self.signed_q() as f32 * STEP
+    }
+
+    /// Quantize an f32 onto the S1P2 grid with saturation to ±1.75
+    /// (Algorithm 1 stage 3: "clamped to the nearest representable bound,
+    /// preserving the sign").
+    pub fn from_f32(x: f32, mode: RoundMode) -> S1P2 {
+        if x.is_nan() {
+            // HiF4 signals NaN through the E6M2 scale, not the elements;
+            // element conversion of NaN saturates to +max as a safe default.
+            return S1P2::MAX;
+        }
+        let q = round_int(x / STEP, mode);
+        let neg = q < 0.0 || (q == 0.0 && x.is_sign_negative());
+        let mag = q.abs().min(7.0) as u8;
+        S1P2(((neg as u8) << 3) | mag)
+    }
+}
+
+/// Decode table of all 16 encodings, useful for exhaustive benches/tests.
+pub fn all_values() -> [(u8, f32); 16] {
+    core::array::from_fn(|i| (i as u8, S1P2(i as u8).to_f32()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_boundary_values() {
+        assert_eq!(S1P2::MAX.to_f32(), 1.75);
+        assert_eq!(S1P2::MIN.to_f32(), -1.75);
+        assert_eq!(S1P2::POS_ZERO.to_f32(), 0.0);
+        assert_eq!(S1P2::NEG_ZERO.to_f32(), -0.0);
+        assert_eq!(S1P2(0b0001).to_f32(), MIN_POS);
+    }
+
+    #[test]
+    fn exhaustive_roundtrip() {
+        for bits in 0u8..16 {
+            let v = S1P2(bits);
+            let back = S1P2::from_f32(v.to_f32(), RoundMode::NearestEven);
+            // -0.0 and +0.0 both map back to a zero encoding.
+            assert_eq!(back.to_f32(), v.to_f32());
+            assert_eq!(back.signed_q(), v.signed_q());
+        }
+    }
+
+    #[test]
+    fn saturation_preserves_sign() {
+        assert_eq!(S1P2::from_f32(9.0, RoundMode::NearestEven), S1P2::MAX);
+        assert_eq!(S1P2::from_f32(-9.0, RoundMode::NearestEven), S1P2::MIN);
+        assert_eq!(S1P2::from_f32(1.76, RoundMode::NearestEven), S1P2::MAX);
+    }
+
+    #[test]
+    fn rne_ties() {
+        // 0.125 is a tie between 0 and 0.25 -> RNE keeps 0 (even).
+        assert_eq!(S1P2::from_f32(0.125, RoundMode::NearestEven).to_f32(), 0.0);
+        // 0.375 ties between 0.25 (odd q=1) and 0.5 (even q=2) -> 0.5.
+        assert_eq!(S1P2::from_f32(0.375, RoundMode::NearestEven).to_f32(), 0.5);
+        assert_eq!(
+            S1P2::from_f32(0.125, RoundMode::HalfAwayFromZero).to_f32(),
+            0.25
+        );
+    }
+
+    #[test]
+    fn signed_q_matches_value() {
+        for bits in 0u8..16 {
+            let v = S1P2(bits);
+            assert_eq!(v.signed_q() as f32 * 0.25, v.to_f32());
+        }
+    }
+}

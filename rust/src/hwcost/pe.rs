@@ -1,0 +1,201 @@
+//! Gate-level inventory of the 64-length PE datapaths (Fig 4) for the
+//! shared base and the per-format increments.
+//!
+//! Unit convention: 1 gate-unit ≈ one full-adder / one partial-product cell.
+//! Mux/shift stages cost [`MUX_FACTOR`] per bit-stage (a 2:1 mux is ~1/3 of
+//! a full adder in standard-cell gate counts).
+
+use super::{add_area, mul_area, shift_area};
+use crate::dotprod::{hif4_flow, nvfp4_flow};
+
+/// Relative cost of a 1-bit 2:1 mux vs a full adder cell.
+pub const MUX_FACTOR: f64 = 0.3;
+
+/// One datapath block with a name (for the report), an area and an activity
+/// factor (fraction of cycles the block toggles; 1.0 for every block of a
+/// fully-pipelined PE).
+#[derive(Debug, Clone)]
+pub struct Block {
+    pub name: &'static str,
+    pub area: f64,
+    pub activity: f64,
+    pub count: usize,
+}
+
+impl Block {
+    fn new(name: &'static str, area: f64, count: usize) -> Block {
+        Block { name, area, activity: 1.0, count }
+    }
+
+    pub fn total_area(&self) -> f64 {
+        self.area * self.count as f64
+    }
+
+    pub fn total_power(&self) -> f64 {
+        self.total_area() * self.activity
+    }
+}
+
+/// A list of blocks forming (part of) a PE.
+#[derive(Debug, Clone)]
+pub struct AreaReport {
+    pub label: &'static str,
+    pub blocks: Vec<Block>,
+}
+
+/// Alias: the same structure also carries power (area × activity).
+pub type PowerReport = AreaReport;
+
+impl AreaReport {
+    pub fn total_area(&self) -> f64 {
+        self.blocks.iter().map(Block::total_area).sum()
+    }
+
+    pub fn total_power(&self) -> f64 {
+        self.blocks.iter().map(Block::total_power).sum()
+    }
+}
+
+/// The logic shared by every precision mode of the PE (already present for
+/// INT8/FP8 per §III.B: "4-bit BFP formats are integrated into existing
+/// dot-product units"): 64 small element multipliers, the integer reduction
+/// tree, operand registers and the FP32 output accumulator.
+///
+/// 5×5-bit multipliers serve both S2P2×S2P2 (HiF4) and S3P1×S3P1 (NVFP4)
+/// element products; the adder tree is sized for the deepest (HiF4, 17-bit
+/// S12P4) reduction.
+pub fn shared_base() -> AreaReport {
+    let h = hif4_flow::stats();
+    AreaReport {
+        label: "shared base (64 element muls + tree + regs + fp32 acc)",
+        blocks: vec![
+            Block::new("5x5 element multiplier", mul_area(5, 5), h.small_int_muls),
+            // 63 adders at a representative mean width of ~13 bits
+            // (9-bit products widening to 17 at the root).
+            Block::new("integer tree adder", add_area(13), 63),
+            // 2×64×8-bit operand registers (flop ≈ 1 gate-unit per bit).
+            Block::new("operand registers", 8.0, 128),
+            // FP32 output accumulator: align + add + normalize ≈ 3 adders.
+            Block::new("fp32 output accumulator", 3.0 * add_area(32), 1),
+        ],
+    }
+}
+
+/// HiF4's incremental logic over the shared base (Fig 4 left):
+/// element conversion S1P2→S2P2 (level-3 absorb, a 1-stage mux-shift),
+/// level-2 span shifters, ONE small FP scale multiplier (E6M2×E6M2:
+/// 3×3-bit significands + 7-bit exponent add), ONE large integer
+/// multiplier (scale-product significand 6b × S12P4 17b).
+pub fn hif4_incremental() -> AreaReport {
+    let s = hif4_flow::stats();
+    AreaReport {
+        label: "HiF4 incremental",
+        blocks: vec![
+            // S1P2 << E1_16 into the 5-bit multiplier port: 1 mux stage / 5b.
+            Block::new("element convert S1P2->S2P2", shift_area(5, 1) * MUX_FACTOR, 64),
+            // Level-2 span shift: 8 shifters, 13-bit span sums, 2 stages.
+            Block::new("L2 span shifter", shift_area(13, 2) * MUX_FACTOR, 8),
+            Block::new(
+                "E6M2xE6M2 scale multiplier",
+                mul_area(3, 3) + add_area(7),
+                s.small_fp_muls,
+            ),
+            Block::new(
+                "large int multiplier (6b x 17b)",
+                mul_area(6, s.final_int_bits),
+                s.large_int_muls,
+            ),
+        ],
+    }
+}
+
+/// NVFP4's incremental logic (Fig 4 right): element conversion E2M1→S3P1
+/// (exponent decode + mux-shift, same order as HiF4's convert), FOUR small
+/// FP scale multipliers (E4M3×E4M3: 4×4-bit significands + 5-bit exponent
+/// add), FOUR large integer multipliers (scale significand 8b × S10P2 13b),
+/// and the final floating-point accumulation (3 FP adders, 25-bit datapath:
+/// aligner + mantissa add + normalizer ≈ 3× a plain adder).
+pub fn nvfp4_incremental() -> AreaReport {
+    let s = nvfp4_flow::stats();
+    AreaReport {
+        label: "NVFP4 incremental",
+        blocks: vec![
+            Block::new("element convert E2M1->S3P1", shift_area(5, 1) * MUX_FACTOR, 64),
+            Block::new(
+                "E4M3xE4M3 scale multiplier",
+                mul_area(4, 4) + add_area(5),
+                s.small_fp_muls,
+            ),
+            Block::new(
+                "large int multiplier (8b x 13b)",
+                mul_area(8, s.final_int_bits),
+                s.large_int_muls,
+            ),
+            Block::new("FP accumulator adder (25b, align+add+norm)", 3.0 * add_area(25), s.fp_adds),
+        ],
+    }
+}
+
+/// Full Table-style report rows: (label, area, power) triples for the bench.
+pub fn report_rows() -> Vec<(String, f64, f64)> {
+    let base = shared_base();
+    let h = hif4_incremental();
+    let n = nvfp4_incremental();
+    vec![
+        (base.label.to_string(), base.total_area(), base.total_power()),
+        (h.label.to_string(), h.total_area(), h.total_power()),
+        (n.label.to_string(), n.total_area(), n.total_power()),
+        (
+            "HiF4 whole PE".to_string(),
+            base.total_area() + h.total_area(),
+            base.total_power() + h.total_power(),
+        ),
+        (
+            "NVFP4 whole PE".to_string(),
+            base.total_area() + n.total_area(),
+            base.total_power() + n.total_power(),
+        ),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn increments_are_small_vs_base() {
+        // The shared element multipliers dominate the PE — sanity of the
+        // "integrated into existing dot-product units" premise.
+        let base = shared_base().total_area();
+        assert!(hif4_incremental().total_area() < base);
+        assert!(nvfp4_incremental().total_area() < base);
+    }
+
+    #[test]
+    fn multiplier_area_dominates_nvfp4_increment() {
+        let n = nvfp4_incremental();
+        let mul_blocks: f64 = n
+            .blocks
+            .iter()
+            .filter(|b| b.name.contains("multiplier"))
+            .map(Block::total_area)
+            .sum();
+        assert!(mul_blocks > 0.5 * n.total_area());
+    }
+
+    #[test]
+    fn block_accounting() {
+        let r = hif4_incremental();
+        let manual: f64 = r.blocks.iter().map(|b| b.area * b.count as f64).sum();
+        assert_eq!(r.total_area(), manual);
+        // Activity 1.0 ⇒ power == area for each block.
+        assert_eq!(r.total_power(), r.total_area());
+    }
+
+    #[test]
+    fn report_has_all_rows() {
+        let rows = report_rows();
+        assert_eq!(rows.len(), 5);
+        assert!(rows.iter().all(|(_, a, p)| *a > 0.0 && *p > 0.0));
+    }
+}

@@ -1,0 +1,27 @@
+//! # hif4 — HiFloat4 block floating-point for LLM inference
+//!
+//! Production-grade reproduction of *"HiFloat4 Format for Language Model
+//! Inference"* (Luo et al., 2026): the HiF4 4-bit block floating-point
+//! format, every baseline format it is compared against (NVFP4, MXFP4, MX4,
+//! vanilla BFP), the fixed-point dot-product compute flow, a hardware
+//! area/power model, post-training quantization (GPTQ / HiGPTQ), a
+//! transformer model zoo with a synthetic evaluation harness, and a serving
+//! coordinator that drives AOT-compiled XLA executables via PJRT.
+//!
+//! Three-layer architecture (see `DESIGN.md`):
+//! * **L1** Pallas kernels (`python/compile/kernels/`) — quantization hot
+//!   spot, lowered at build time.
+//! * **L2** JAX model (`python/compile/model.py`) — transformer fwd +
+//!   train step, AOT-lowered to `artifacts/*.hlo.txt`.
+//! * **L3** this crate — formats, quantization pipeline, eval, serving.
+
+pub mod dotprod;
+pub mod eval;
+pub mod formats;
+pub mod hwcost;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod server;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,153 @@
+//! `hif4` CLI — the L3 coordinator entrypoint.
+//!
+//! ```text
+//! hif4 serve   --artifact fwd_hif4.hlo.txt --addr 127.0.0.1:7401 [--params p.bin]
+//! hif4 sweep   --dim 512                       # Fig 3 series
+//! hif4 hwcost                                  # §III.B area/power table
+//! hif4 dotprod                                 # Fig 4 inventory + exactness
+//! hif4 quantize --in w.bin --format hif4       # quantize a raw f32 tensor
+//! hif4 info                                    # formats summary
+//! ```
+
+use anyhow::Result;
+use hif4::formats::{mse, Format, QuantScheme};
+use hif4::quant::sweep;
+use hif4::runtime::artifact::{Manifest, ParamStore};
+use hif4::server::batcher::BatchPolicy;
+use hif4::server::service::{Server, ServerConfig};
+use hif4::util::bench::Table;
+use hif4::util::cli::Args;
+use std::path::Path;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand() {
+        Some("serve") => serve(&args),
+        Some("sweep") => {
+            let dim = args.get_parse("dim", 512);
+            let pts = sweep::run(dim, sweep::PAPER_POINTS, args.get_parse("seed", 42));
+            let mut t = Table::new(
+                "Fig 3 sweep",
+                &["x", "sigma", "HiF4", "NVFP4", "NVFP4+PTS", "MXFP4"],
+            );
+            for p in &pts {
+                t.row(vec![
+                    p.x.to_string(),
+                    format!("{:.3e}", p.sigma),
+                    format!("{:.3}", p.normalized[0]),
+                    format!("{:.3}", p.normalized[1]),
+                    format!("{:.3}", p.normalized[2]),
+                    format!("{:.3}", p.normalized[3]),
+                ]);
+            }
+            t.print();
+            Ok(())
+        }
+        Some("hwcost") => {
+            let mut t = Table::new("PE area/power (gate units)", &["block", "area", "power"]);
+            for (label, area, power) in hif4::hwcost::pe::report_rows() {
+                t.row(vec![label, format!("{area:.0}"), format!("{power:.0}")]);
+            }
+            t.print();
+            Ok(())
+        }
+        Some("dotprod") => {
+            let h = hif4::dotprod::hif4_flow::stats();
+            let n = hif4::dotprod::nvfp4_flow::stats();
+            println!(
+                "HiF4 : {} small-FP + {} large-INT multipliers, {} int adds, S12P4 output",
+                h.small_fp_muls, h.large_int_muls, h.int_adds
+            );
+            println!(
+                "NVFP4: {} small-FP + {} large-INT multipliers, {} int adds + {} FP adds",
+                n.small_fp_muls, n.large_int_muls, n.int_adds, n.fp_adds
+            );
+            Ok(())
+        }
+        Some("quantize") => quantize(&args),
+        Some("info") | None => {
+            let mut t = Table::new(
+                "4-bit BFP formats implemented",
+                &["format", "group", "bits/value", "scale", "element"],
+            );
+            for (f, scale, elem) in [
+                (Format::HiF4, "E6M2 + E1_8 + E1_16", "S1P2"),
+                (Format::Nvfp4, "FP8-E4M3", "E2M1"),
+                (Format::Mxfp4, "E8M0 (pow-2)", "E2M1"),
+                (Format::Mx4, "E8M0 + 8x E1", "S1P1"),
+                (Format::VanillaBfp, "E8M0 (pow-2)", "S1P2"),
+            ] {
+                t.row(vec![
+                    f.name().into(),
+                    f.group().to_string(),
+                    f.bits_per_value().to_string(),
+                    scale.into(),
+                    elem.into(),
+                ]);
+            }
+            t.print();
+            println!("\nsubcommands: serve | sweep | hwcost | dotprod | quantize | info");
+            Ok(())
+        }
+        Some(other) => {
+            anyhow::bail!("unknown subcommand {other}; try `hif4 info`");
+        }
+    }
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let dir = Path::new(args.get_or("artifacts", "artifacts"));
+    let manifest = Manifest::load(dir)?;
+    let params = match args.get("params") {
+        Some(p) => ParamStore::load(Path::new(p))?,
+        None => manifest.init_params(args.get_parse("seed", 5)),
+    };
+    let artifact = args.get_or("artifact", "fwd_bf16.hlo.txt").to_string();
+    let mut served = params;
+    if artifact.contains("hif4") {
+        served.quantize_weights(&QuantScheme::direct(Format::HiF4));
+    } else if artifact.contains("nvfp4") {
+        served.quantize_weights(&QuantScheme::direct(Format::Nvfp4));
+    }
+    let cfg = ServerConfig {
+        artifact,
+        policy: BatchPolicy {
+            max_batch: args.get_parse("max-batch", manifest.batch),
+            max_wait: std::time::Duration::from_millis(args.get_parse("max-wait-ms", 2)),
+        },
+    };
+    let server = Server::start(dir, cfg, &served, args.get_or("addr", "127.0.0.1:7401"))?;
+    println!("serving on {} — Ctrl-C to stop", server.addr);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(10));
+        println!("{}", server.metrics.summary());
+    }
+}
+
+fn quantize(args: &Args) -> Result<()> {
+    let input = args.get("in").ok_or_else(|| anyhow::anyhow!("--in <f32le file> required"))?;
+    let fmt = match args.get_or("format", "hif4") {
+        "hif4" => Format::HiF4,
+        "nvfp4" => Format::Nvfp4,
+        "mxfp4" => Format::Mxfp4,
+        "mx4" => Format::Mx4,
+        "bfp" => Format::VanillaBfp,
+        other => anyhow::bail!("unknown format {other}"),
+    };
+    let bytes = std::fs::read(input)?;
+    let data: Vec<f32> =
+        bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
+    let scheme =
+        if args.flag("pts") { QuantScheme::with_pts(fmt) } else { QuantScheme::direct(fmt) };
+    let q = scheme.quant_dequant_vec(&data);
+    println!("{} elements, {}: MSE {:.6e}", data.len(), scheme.label(), mse(&data, &q));
+    if let Some(out) = args.get("out") {
+        let mut buf = Vec::with_capacity(q.len() * 4);
+        for x in &q {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        std::fs::write(out, buf)?;
+        println!("wrote dequantized tensor to {out}");
+    }
+    Ok(())
+}

@@ -1,0 +1,160 @@
+//! Model architecture configuration — the zoo mirrors the paper's coverage:
+//! MHA and GQA attention with multiple FFN forms for the small-LLM table
+//! (Table III), plus MLA and MoE for the large-LLM table (Table V).
+
+/// Attention variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Attention {
+    /// Multi-Head Attention (LLaMA2-7B style).
+    Mha,
+    /// Grouped-Query Attention with `kv_heads` < heads (LLaMA3/Qwen style).
+    Gqa { kv_heads: usize },
+    /// Multi-head Latent Attention: K/V are up-projected from a shared
+    /// low-rank latent (DeepSeek style). `kv_rank` is the latent width.
+    Mla { kv_rank: usize },
+}
+
+/// Feed-forward variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Ffn {
+    /// SwiGLU: (silu(x·W1) ⊙ x·W3)·W2 — LLaMA/Mistral/Qwen style.
+    SwiGlu,
+    /// Plain GELU MLP: gelu(x·W1)·W2.
+    Gelu,
+    /// Mixture-of-Experts over SwiGLU experts with top-k routing; the
+    /// gating network is *excluded* from quantization (§IV.C).
+    Moe { experts: usize, top_k: usize },
+}
+
+/// Full model configuration.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    /// Display name (appears in the benchmark tables).
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub attention: Attention,
+    pub ffn: Ffn,
+    /// FFN hidden width.
+    pub d_ff: usize,
+    pub max_seq: usize,
+    /// RoPE base.
+    pub rope_base: f32,
+    /// Post-training weight-distribution widening: a handful of channels
+    /// per linear layer are scaled by this factor after training, emulating
+    /// the outlier channels of models with "broader numerical distributions"
+    /// (the paper's Mistral-7B / LongCat cases that crash NVFP4 direct
+    /// cast). 1.0 = disabled.
+    pub outlier_scale: f32,
+    /// Fraction of channels widened when `outlier_scale > 1`.
+    pub outlier_frac: f32,
+}
+
+impl ModelConfig {
+    /// Number of KV heads (equals heads for MHA/MLA).
+    pub fn kv_heads(&self) -> usize {
+        match self.attention {
+            Attention::Gqa { kv_heads } => kv_heads,
+            _ => self.n_heads,
+        }
+    }
+
+    /// Total parameter count (exact, matching the weight allocator).
+    pub fn param_count(&self) -> usize {
+        let d = self.d_model;
+        let hd = self.n_heads * self.head_dim;
+        let kvd = self.kv_heads() * self.head_dim;
+        let attn = match self.attention {
+            Attention::Mla { kv_rank } => {
+                // q: d→hd; latent down: d→r; k/v up: r→kvd each; out: hd→d.
+                d * hd + d * kv_rank + 2 * kv_rank * kvd + hd * d
+            }
+            _ => d * hd + 2 * d * kvd + hd * d,
+        };
+        let ffn = match self.ffn {
+            Ffn::SwiGlu => 3 * d * self.d_ff,
+            Ffn::Gelu => 2 * d * self.d_ff,
+            Ffn::Moe { experts, .. } => experts * 3 * d * self.d_ff + d * experts,
+        };
+        let per_layer = attn + ffn + 2 * d; // two RMSNorm gains
+        self.vocab * d      // embedding
+            + self.n_layers * per_layer
+            + d                 // final norm
+            + d * self.vocab // lm head
+    }
+}
+
+/// Linear-layer category, used by the quantization policy (§IV.C quantizes
+/// MLA_linear / MoE_linear excluding the gate / FFN_linear; embeddings and
+/// the LM head are never quantized §IV.B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LayerKind {
+    AttnLinear,
+    FfnLinear,
+    MoeExpert,
+    MoeGate,
+    Embedding,
+    LmHead,
+}
+
+impl LayerKind {
+    /// Whether the paper's evaluation quantizes this layer class.
+    pub fn quantized_by_paper(self) -> bool {
+        matches!(self, LayerKind::AttnLinear | LayerKind::FfnLinear | LayerKind::MoeExpert)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> ModelConfig {
+        ModelConfig {
+            name: "test".into(),
+            vocab: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 4,
+            head_dim: 8,
+            attention: Attention::Mha,
+            ffn: Ffn::SwiGlu,
+            d_ff: 64,
+            max_seq: 32,
+            rope_base: 10000.0,
+            outlier_scale: 1.0,
+            outlier_frac: 0.0,
+        }
+    }
+
+    #[test]
+    fn kv_heads_by_variant() {
+        let mut c = base();
+        assert_eq!(c.kv_heads(), 4);
+        c.attention = Attention::Gqa { kv_heads: 2 };
+        assert_eq!(c.kv_heads(), 2);
+        c.attention = Attention::Mla { kv_rank: 16 };
+        assert_eq!(c.kv_heads(), 4);
+    }
+
+    #[test]
+    fn param_count_positive_and_monotone() {
+        let c = base();
+        let p = c.param_count();
+        assert!(p > 0);
+        let mut bigger = base();
+        bigger.n_layers = 4;
+        assert!(bigger.param_count() > p);
+    }
+
+    #[test]
+    fn paper_quantization_policy() {
+        assert!(LayerKind::AttnLinear.quantized_by_paper());
+        assert!(LayerKind::MoeExpert.quantized_by_paper());
+        assert!(!LayerKind::MoeGate.quantized_by_paper());
+        assert!(!LayerKind::Embedding.quantized_by_paper());
+        assert!(!LayerKind::LmHead.quantized_by_paper());
+    }
+}

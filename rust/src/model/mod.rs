@@ -1,0 +1,8 @@
+//! Transformer model zoo: configs, a rust-native forward/backward substrate
+//! (calibration, eval, and genuine training of the stand-in LLMs), and the
+//! model zoo mirroring the paper's architecture coverage.
+
+pub mod config;
+pub mod train;
+pub mod transformer;
+pub mod zoo;

@@ -1,0 +1,531 @@
+//! Training: cross-entropy loss, full manual backprop through the
+//! transformer, and Adam — used to actually train the tiny stand-in LLMs
+//! before the PTQ experiments (Tables III–V) and verified against numerical
+//! gradients in the tests.
+
+use super::config::Ffn;
+use super::transformer::{
+    causal_attention_bwd, gelu_grad, rmsnorm_bwd, rope_bwd, silu_grad, ForwardCache,
+    Transformer,
+};
+use crate::tensor::gemm::matmul;
+use crate::tensor::{Matrix, Rng};
+use std::collections::HashMap;
+
+/// Gradients keyed the same way as the weights.
+#[derive(Debug, Default)]
+pub struct Grads {
+    /// Per-linear dW, keyed by `Linear::name`.
+    pub linears: HashMap<String, Matrix>,
+    pub embed: Matrix,
+    pub norms: HashMap<String, Vec<f32>>,
+}
+
+/// Softmax cross-entropy against next-token targets. Returns (loss,
+/// dlogits). Positions whose target is `usize::MAX` are masked out.
+pub fn cross_entropy(logits: &Matrix, targets: &[usize]) -> (f32, Matrix) {
+    assert_eq!(logits.rows, targets.len());
+    let mut dl = Matrix::zeros(logits.rows, logits.cols);
+    let mut loss = 0f64;
+    let mut n = 0usize;
+    for r in 0..logits.rows {
+        if targets[r] == usize::MAX {
+            continue;
+        }
+        n += 1;
+    }
+    let inv_n = 1.0 / n.max(1) as f32;
+    for r in 0..logits.rows {
+        let t = targets[r];
+        if t == usize::MAX {
+            continue;
+        }
+        let row = logits.row(r);
+        let maxv = row.iter().fold(f32::NEG_INFINITY, |m, x| m.max(*x));
+        let mut denom = 0f32;
+        for x in row {
+            denom += (x - maxv).exp();
+        }
+        let logp = row[t] - maxv - denom.ln();
+        loss -= logp as f64;
+        let drow = dl.row_mut(r);
+        for (c, x) in row.iter().enumerate() {
+            let p = (x - maxv).exp() / denom;
+            drow[c] = (p - if c == t { 1.0 } else { 0.0 }) * inv_n;
+        }
+    }
+    ((loss / n.max(1) as f64) as f32, dl)
+}
+
+impl Transformer {
+    /// Full backward pass: consumes the forward cache and the dlogits,
+    /// produces gradients for every parameter.
+    pub fn backward(&self, cache: &ForwardCache, dlogits: &Matrix) -> Grads {
+        let cfg = &self.cfg;
+        let mut g = Grads {
+            embed: Matrix::zeros(self.w.embed.rows, self.w.embed.cols),
+            ..Default::default()
+        };
+
+        // Head: logits = normed_f · Whᵀ.
+        g.linears.insert(self.w.head.name.clone(), matmul(&transpose_ref(dlogits), &cache.normed_f));
+        let dnormed_f = matmul(dlogits, &self.w.head.w);
+        let (mut dx, dgf) = rmsnorm_bwd(&dnormed_f, &cache.x_final, &self.w.norm_f, &cache.rms_f);
+        g.norms.insert("norm_f".into(), dgf);
+
+        for (li, layer) in self.w.layers.iter().enumerate().rev() {
+            let lc = &cache.layers[li];
+            let fc = lc.ffn.as_ref().expect("cache");
+            // ---- FFN block backward (x2 = x1 + ffn(norm2(x1))) ----
+            let dffn_out = &dx; // gradient w.r.t. ffn output
+            let mut dqx = Matrix::zeros(fc.qx.rows, fc.qx.cols);
+            match &fc.routing {
+                None => {
+                    let e = &layer.ffn[0];
+                    let ec = fc.experts[0].as_ref().unwrap();
+                    ffn_expert_bwd(e, ec, &fc.qx, dffn_out, cfg, &mut g, &mut dqx, 1.0, None);
+                }
+                Some((routing, per_expert_out)) => {
+                    let gate = layer.gate.as_ref().unwrap();
+                    let logits = fc.gate_logits.as_ref().unwrap();
+                    let mut dgate_logits = Matrix::zeros(logits.rows, logits.cols);
+                    for (ei, e) in layer.ffn.iter().enumerate() {
+                        let Some(ec) = fc.experts[ei].as_ref() else { continue };
+                        // dy_expert[r] = route_weight[r] × dffn_out[r]
+                        let mut dyo = Matrix::zeros(dffn_out.rows, dffn_out.cols);
+                        let mut used_any = false;
+                        for (r, routes) in routing.iter().enumerate() {
+                            for (i, w) in routes {
+                                if *i == ei {
+                                    crate::tensor::gemm::axpy(
+                                        *w,
+                                        dffn_out.row(r),
+                                        dyo.row_mut(r),
+                                    );
+                                    used_any = true;
+                                }
+                            }
+                        }
+                        if used_any {
+                            ffn_expert_bwd(
+                                e, ec, &fc.qx, &dyo, cfg, &mut g, &mut dqx, 1.0, None,
+                            );
+                        }
+                        // Router gradient: dweight_e[r] = dffn_out[r]·y_e[r].
+                        if let Some(yo) = per_expert_out[ei].as_ref() {
+                            for (r, routes) in routing.iter().enumerate() {
+                                if routes.iter().any(|(i, _)| *i == ei) {
+                                    let dwr = crate::tensor::gemm::dot(
+                                        dffn_out.row(r),
+                                        yo.row(r),
+                                    );
+                                    dgate_logits.data[r * logits.cols + ei] = dwr;
+                                }
+                            }
+                        }
+                    }
+                    // Through the renormalized top-k softmax (treat the
+                    // selection as constant): for selected set S of row r,
+                    // dlogit_e = p_e(dw_e − Σ_{f∈S} p_f dw_f).
+                    let mut dlog = Matrix::zeros(logits.rows, logits.cols);
+                    for (r, routes) in routing.iter().enumerate() {
+                        let dot: f32 = routes
+                            .iter()
+                            .map(|(i, p)| p * dgate_logits.data[r * logits.cols + i])
+                            .sum();
+                        for (i, p) in routes {
+                            dlog.data[r * logits.cols + i] =
+                                p * (dgate_logits.data[r * logits.cols + i] - dot);
+                        }
+                    }
+                    accum_linear(&mut g, &gate.name, &matmul(&transpose_ref(&dlog), &lc.normed2));
+                    // Router consumed the *unquantized* normed2.
+                    let dnormed_extra = matmul(&dlog, &gate.w);
+                    crate::tensor::gemm::axpy_mat(1.0, &dnormed_extra, &mut dqx);
+                }
+            }
+            // qx == normed2 in training (no act quant). Norm backward:
+            let (dx1_from_norm, dg2) = rmsnorm_bwd(&dqx, &lc.x_mid, &layer.norm2, &lc.rms2);
+            g.norms.insert(format!("layer{li}.norm2"), dg2);
+            // Residual: dx1 = dx (through residual) + dx1_from_norm.
+            let mut dx1 = dx.clone();
+            crate::tensor::gemm::axpy_mat(1.0, &dx1_from_norm, &mut dx1);
+
+            // ---- Attention block backward (x1 = x + attn(norm1(x))) ----
+            let ac = lc.attn.as_ref().expect("cache");
+            let dattn_out = &dx1;
+            // out = ctx · Woᵀ
+            accum_linear(&mut g, &layer.wo.name, &matmul(&transpose_ref(dattn_out), &ac.ctx));
+            let dctx = matmul(dattn_out, &layer.wo.w);
+            let (mut dq, mut dk, dv) = causal_attention_bwd(
+                &dctx,
+                &ac.q,
+                &ac.k,
+                &ac.v,
+                &ac.probs,
+                &cache.seq_lens,
+                cfg.n_heads,
+                cfg.kv_heads(),
+                cfg.head_dim,
+            );
+            // RoPE backward.
+            rope_bwd(&mut dq, &cache.seq_lens, cfg.n_heads, cfg.head_dim, cfg.rope_base);
+            rope_bwd(&mut dk, &cache.seq_lens, cfg.kv_heads(), cfg.head_dim, cfg.rope_base);
+            // Projections.
+            accum_linear(&mut g, &layer.wq.name, &matmul(&transpose_ref(&dq), &ac.qin));
+            accum_linear(&mut g, &layer.wk.name, &matmul(&transpose_ref(&dk), &ac.kv_in));
+            accum_linear(&mut g, &layer.wv.name, &matmul(&transpose_ref(&dv), &ac.kv_in));
+            let mut dqin = matmul(&dq, &layer.wq.w);
+            let dkv_in = {
+                let mut t = matmul(&dk, &layer.wk.w);
+                crate::tensor::gemm::axpy_mat(1.0, &matmul(&dv, &layer.wv.w), &mut t);
+                t
+            };
+            match &layer.wdkv {
+                Some(dkv_lin) => {
+                    // kv_in = latent = qin · Wdkvᵀ.
+                    accum_linear(
+                        &mut g,
+                        &dkv_lin.name,
+                        &matmul(&transpose_ref(&dkv_in), &ac.qin),
+                    );
+                    crate::tensor::gemm::axpy_mat(1.0, &matmul(&dkv_in, &dkv_lin.w), &mut dqin);
+                }
+                None => {
+                    crate::tensor::gemm::axpy_mat(1.0, &dkv_in, &mut dqin);
+                }
+            }
+            let (dx_from_norm, dg1) = rmsnorm_bwd(&dqin, &lc.x_in, &layer.norm1, &lc.rms1);
+            g.norms.insert(format!("layer{li}.norm1"), dg1);
+            dx = dx1;
+            crate::tensor::gemm::axpy_mat(1.0, &dx_from_norm, &mut dx);
+        }
+
+        // Embedding gradient.
+        let mut row = 0usize;
+        for seq in &cache.tokens {
+            for &t in seq {
+                crate::tensor::gemm::axpy(1.0, dx.row(row), g.embed.row_mut(t));
+                row += 1;
+            }
+        }
+        g
+    }
+}
+
+/// FFN expert backward; accumulates dW and adds the input gradient into
+/// `dqx`.
+#[allow(clippy::too_many_arguments)]
+fn ffn_expert_bwd(
+    e: &super::transformer::FfnWeights,
+    ec: &super::transformer::ExpertCache,
+    qx: &Matrix,
+    dy: &Matrix,
+    cfg: &crate::model::config::ModelConfig,
+    g: &mut Grads,
+    dqx: &mut Matrix,
+    scale: f32,
+    _unused: Option<()>,
+) {
+    let _ = scale;
+    // y = act · W2ᵀ
+    accum_linear(g, &e.w2.name, &matmul(&transpose_ref(dy), &ec.act));
+    let dact = matmul(dy, &e.w2.w);
+    match (&e.w3, cfg.ffn) {
+        (None, Ffn::Gelu) | (None, _) => {
+            // act = gelu(h1)
+            let mut dh1 = dact;
+            for (d, h) in dh1.data.iter_mut().zip(&ec.h1.data) {
+                *d *= gelu_grad(*h);
+            }
+            accum_linear(g, &e.w1.name, &matmul(&transpose_ref(&dh1), qx));
+            crate::tensor::gemm::axpy_mat(1.0, &matmul(&dh1, &e.w1.w), dqx);
+        }
+        (Some(w3), _) => {
+            // act = silu(h1) ⊙ h3.
+            let h3 = ec.h3.as_ref().unwrap();
+            let mut dh1 = dact.clone();
+            let mut dh3 = dact;
+            for i in 0..dh1.data.len() {
+                let s = ec.h1.data[i];
+                let silu_s = s / (1.0 + (-s).exp());
+                dh3.data[i] *= silu_s;
+                dh1.data[i] *= h3.data[i] * silu_grad(s);
+            }
+            accum_linear(g, &e.w1.name, &matmul(&transpose_ref(&dh1), qx));
+            accum_linear(g, &w3.name, &matmul(&transpose_ref(&dh3), qx));
+            crate::tensor::gemm::axpy_mat(1.0, &matmul(&dh1, &e.w1.w), dqx);
+            crate::tensor::gemm::axpy_mat(1.0, &matmul(&dh3, &w3.w), dqx);
+        }
+    }
+}
+
+fn accum_linear(g: &mut Grads, name: &str, dw: &Matrix) {
+    match g.linears.get_mut(name) {
+        Some(acc) => crate::tensor::gemm::axpy_mat(1.0, dw, acc),
+        None => {
+            g.linears.insert(name.to_string(), dw.clone());
+        }
+    }
+}
+
+/// Cheap transpose wrapper (gradients are small at tiny-model scale).
+fn transpose_ref(m: &Matrix) -> Matrix {
+    m.transpose()
+}
+
+// ---------------------------------------------------------------------------
+// Adam
+// ---------------------------------------------------------------------------
+
+/// Adam optimizer state over all parameters.
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub step: u64,
+    m: HashMap<String, Vec<f32>>,
+    v: HashMap<String, Vec<f32>>,
+}
+
+impl Adam {
+    pub fn new(lr: f32) -> Adam {
+        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, step: 0, m: HashMap::new(), v: HashMap::new() }
+    }
+
+    fn update_buf(&mut self, key: &str, w: &mut [f32], g: &[f32], lr_t: f32) {
+        let m = self.m.entry(key.to_string()).or_insert_with(|| vec![0.0; w.len()]);
+        let v = self.v.entry(key.to_string()).or_insert_with(|| vec![0.0; w.len()]);
+        let (b1, b2, eps) = (self.beta1, self.beta2, self.eps);
+        for i in 0..w.len() {
+            m[i] = b1 * m[i] + (1.0 - b1) * g[i];
+            v[i] = b2 * v[i] + (1.0 - b2) * g[i] * g[i];
+            w[i] -= lr_t * m[i] / (v[i].sqrt() + eps);
+        }
+    }
+
+    /// Apply one Adam step to the model given gradients.
+    pub fn apply(&mut self, model: &mut Transformer, grads: &Grads) {
+        self.step += 1;
+        let t = self.step as f32;
+        let lr_t = self.lr * (1.0 - self.beta2.powf(t)).sqrt() / (1.0 - self.beta1.powf(t));
+        // Linears: one pass over the model, updating those with gradients.
+        let this = std::cell::RefCell::new(&mut *self);
+        model.visit_linears_mut(&mut |lin| {
+            if let Some(dw) = grads.linears.get(&lin.name) {
+                this.borrow_mut().update_buf(&lin.name, &mut lin.w.data, &dw.data, lr_t);
+            }
+        });
+        drop(this);
+        // Embedding + norms.
+        let mut embed = std::mem::take(&mut model.w.embed.data);
+        self.update_buf("embed", &mut embed, &grads.embed.data, lr_t);
+        model.w.embed.data = embed;
+        for (name, dg) in &grads.norms {
+            if name == "norm_f" {
+                let mut nf = std::mem::take(&mut model.w.norm_f);
+                self.update_buf(name, &mut nf, dg, lr_t);
+                model.w.norm_f = nf;
+            } else if let Some(rest) = name.strip_prefix("layer") {
+                let (idx, which) = rest.split_once('.').unwrap();
+                let li: usize = idx.parse().unwrap();
+                let layer = &mut model.w.layers[li];
+                let buf = if which == "norm1" { &mut layer.norm1 } else { &mut layer.norm2 };
+                let mut b = std::mem::take(buf);
+                self.update_buf(name, &mut b, dg, lr_t);
+                *buf = b;
+            }
+        }
+    }
+}
+
+/// One training step: forward, loss, backward, Adam update. Returns loss.
+pub fn train_step(
+    model: &mut Transformer,
+    opt: &mut Adam,
+    batch: &[Vec<usize>],
+) -> f32 {
+    // Targets: next token within each sequence; last position masked.
+    let mut targets = Vec::new();
+    for seq in batch {
+        for i in 0..seq.len() {
+            targets.push(if i + 1 < seq.len() { seq[i + 1] } else { usize::MAX });
+        }
+    }
+    let mut cache = ForwardCache::new(model.cfg.n_layers);
+    let logits = model.forward(batch, None, None, Some(&mut cache));
+    let (loss, dlogits) = cross_entropy(&logits, &targets);
+    let grads = model.backward(&cache, &dlogits);
+    opt.apply(model, &grads);
+    loss
+}
+
+/// Train for `steps` batches drawn by `sampler`; returns the loss curve.
+pub fn train<F: FnMut(&mut Rng) -> Vec<Vec<usize>>>(
+    model: &mut Transformer,
+    steps: usize,
+    lr: f32,
+    seed: u64,
+    mut sampler: F,
+) -> Vec<f32> {
+    let mut opt = Adam::new(lr);
+    let mut rng = Rng::seed(seed);
+    let mut losses = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let batch = sampler(&mut rng);
+        losses.push(train_step(model, &mut opt, &batch));
+    }
+    losses
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::{Attention, Ffn, ModelConfig};
+
+    fn cfg(attn: Attention, ffn: Ffn) -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            vocab: 24,
+            d_model: 8,
+            n_layers: 1,
+            n_heads: 2,
+            head_dim: 4,
+            attention: attn,
+            ffn,
+            d_ff: 12,
+            max_seq: 8,
+            rope_base: 10000.0,
+            outlier_scale: 1.0,
+            outlier_frac: 0.0,
+        }
+    }
+
+    fn batch() -> Vec<Vec<usize>> {
+        vec![vec![1, 4, 7, 2], vec![3, 9, 5]]
+    }
+
+    fn loss_of(model: &Transformer, batch: &[Vec<usize>]) -> f32 {
+        let mut targets = Vec::new();
+        for seq in batch {
+            for i in 0..seq.len() {
+                targets.push(if i + 1 < seq.len() { seq[i + 1] } else { usize::MAX });
+            }
+        }
+        let logits = model.forward(batch, None, None, None);
+        cross_entropy(&logits, &targets).0
+    }
+
+    /// Numerical gradient check on a sample of parameters of every variant.
+    fn grad_check(attn: Attention, ffn: Ffn) {
+        let mut model = Transformer::init(cfg(attn, ffn), 42);
+        let b = batch();
+        let mut targets = Vec::new();
+        for seq in &b {
+            for i in 0..seq.len() {
+                targets.push(if i + 1 < seq.len() { seq[i + 1] } else { usize::MAX });
+            }
+        }
+        let mut cache = ForwardCache::new(model.cfg.n_layers);
+        let logits = model.forward(&b, None, None, Some(&mut cache));
+        let (_, dlogits) = cross_entropy(&logits, &targets);
+        let grads = model.backward(&cache, &dlogits);
+
+        let eps = 1e-3f32;
+        // Collect (name, flat index, analytic grad) probes across layers.
+        let mut probes: Vec<(String, usize, f32)> = Vec::new();
+        for (name, dw) in &grads.linears {
+            for idx in [0usize, dw.data.len() / 2, dw.data.len() - 1] {
+                probes.push((name.clone(), idx, dw.data[idx]));
+            }
+        }
+        probes.push(("embed".into(), 1 * model.cfg.d_model + 3, grads.embed.data[model.cfg.d_model + 3]));
+        for (name, idx, got) in probes {
+            // Perturb the parameter ±eps.
+            let perturb = |model: &mut Transformer, delta: f32| {
+                if name == "embed" {
+                    model.w.embed.data[idx] += delta;
+                } else {
+                    model.visit_linears_mut(&mut |lin| {
+                        if lin.name == name {
+                            lin.w.data[idx] += delta;
+                        }
+                    });
+                }
+            };
+            perturb(&mut model, eps);
+            let lp = loss_of(&model, &b);
+            perturb(&mut model, -2.0 * eps);
+            let lm = loss_of(&model, &b);
+            perturb(&mut model, eps);
+            let num = (lp - lm) / (2.0 * eps);
+            let tol = 5e-2 * (1.0 + num.abs().max(got.abs()));
+            assert!(
+                (num - got).abs() <= tol,
+                "{attn:?}/{ffn:?} {name}[{idx}]: numeric {num} vs analytic {got}"
+            );
+        }
+    }
+
+    #[test]
+    fn grad_check_mha_swiglu() {
+        grad_check(Attention::Mha, Ffn::SwiGlu);
+    }
+
+    #[test]
+    fn grad_check_gqa_gelu() {
+        grad_check(Attention::Gqa { kv_heads: 1 }, Ffn::Gelu);
+    }
+
+    #[test]
+    fn grad_check_mla_swiglu() {
+        grad_check(Attention::Mla { kv_rank: 6 }, Ffn::SwiGlu);
+    }
+
+    #[test]
+    fn grad_check_moe() {
+        grad_check(Attention::Mha, Ffn::Moe { experts: 3, top_k: 2 });
+    }
+
+    #[test]
+    fn cross_entropy_gradient_sums_to_zero_rows() {
+        let logits = Matrix::from_vec(2, 4, vec![0.1, 0.2, 0.3, 0.4, 1.0, -1.0, 0.0, 2.0]);
+        let (loss, dl) = cross_entropy(&logits, &[2, usize::MAX]);
+        assert!(loss > 0.0);
+        let s: f32 = dl.row(0).iter().sum();
+        assert!(s.abs() < 1e-6, "softmax-CE row gradient sums to 0");
+        assert!(dl.row(1).iter().all(|x| *x == 0.0), "masked row has no grad");
+    }
+
+    #[test]
+    fn training_reduces_loss() {
+        // A tiny model must be able to memorize a repeating pattern fast.
+        let mut model = Transformer::init(cfg(Attention::Mha, Ffn::SwiGlu), 5);
+        let pattern = vec![vec![1usize, 2, 3, 4, 5, 6, 1, 2]];
+        let losses = train(&mut model, 60, 3e-3, 6, |_| pattern.clone());
+        let early: f32 = losses[..5].iter().sum::<f32>() / 5.0;
+        let late: f32 = losses[losses.len() - 5..].iter().sum::<f32>() / 5.0;
+        assert!(
+            late < 0.5 * early,
+            "loss should drop by >2x: early {early:.3} late {late:.3}"
+        );
+    }
+
+    #[test]
+    fn training_works_for_moe_and_mla() {
+        for (attn, ffn) in [
+            (Attention::Mla { kv_rank: 6 }, Ffn::SwiGlu),
+            (Attention::Mha, Ffn::Moe { experts: 3, top_k: 2 }),
+        ] {
+            let mut model = Transformer::init(cfg(attn, ffn), 15);
+            let pattern = vec![vec![1usize, 2, 3, 4, 5, 6, 1, 2]];
+            let losses = train(&mut model, 50, 3e-3, 16, |_| pattern.clone());
+            assert!(
+                losses.last().unwrap() < &losses[0],
+                "{attn:?}/{ffn:?}: {losses:?}"
+            );
+        }
+    }
+}
+

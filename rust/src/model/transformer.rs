@@ -1,0 +1,1031 @@
+//! Rust-native decoder-only transformer with full forward **and backward**
+//! passes — the substrate that makes the Table III/V reproductions genuine:
+//! the tiny stand-in LLMs are actually *trained* (Adam + cross-entropy) on
+//! the synthetic corpus before PTQ, so BF16-vs-quantized accuracy drops are
+//! measured, not simulated.
+//!
+//! This path is also the GPTQ calibration substrate (it records per-linear
+//! inputs) and the fake-quant inference engine for the PTQ tables. The
+//! *serving* path runs the L2 JAX model via PJRT instead (`runtime/`,
+//! `server/`); see DESIGN.md for the split.
+//!
+//! Architecture: token embedding → N × [RMSNorm → {MHA|GQA|MLA} + residual
+//! → RMSNorm → {SwiGLU|GELU|MoE} + residual] → RMSNorm → LM head. RoPE on
+//! q/k. All linears are `Matrix` in out×in layout (`y = x · Wᵀ`).
+
+use super::config::{Attention, Ffn, LayerKind, ModelConfig};
+use crate::formats::QuantScheme;
+use crate::tensor::gemm::matmul_bt;
+use crate::tensor::{Matrix, Rng};
+use std::collections::HashMap;
+
+/// One named linear layer.
+#[derive(Debug, Clone)]
+pub struct Linear {
+    /// Stable identifier, e.g. "layer2.ffn.w1".
+    pub name: String,
+    pub kind: LayerKind,
+    /// out×in weights.
+    pub w: Matrix,
+}
+
+impl Linear {
+    fn new(name: String, kind: LayerKind, out: usize, inp: usize, rng: &mut Rng) -> Linear {
+        // Xavier-ish init.
+        let sigma = (2.0 / (out + inp) as f32).sqrt();
+        Linear { name, kind, w: Matrix::randn(out, inp, sigma, rng) }
+    }
+}
+
+/// Per-layer weights.
+#[derive(Debug, Clone)]
+pub struct LayerWeights {
+    pub norm1: Vec<f32>,
+    pub wq: Linear,
+    /// MHA/GQA: K projection from d_model. MLA: K up-projection from latent.
+    pub wk: Linear,
+    pub wv: Linear,
+    /// MLA only: shared latent down-projection.
+    pub wdkv: Option<Linear>,
+    pub wo: Linear,
+    pub norm2: Vec<f32>,
+    /// SwiGLU/GELU weights, or per-expert weights for MoE.
+    pub ffn: Vec<FfnWeights>,
+    /// MoE router (never quantized).
+    pub gate: Option<Linear>,
+}
+
+#[derive(Debug, Clone)]
+pub struct FfnWeights {
+    pub w1: Linear,
+    pub w2: Linear,
+    /// SwiGLU third projection (absent for GELU).
+    pub w3: Option<Linear>,
+}
+
+/// Whole-model weights.
+#[derive(Debug, Clone)]
+pub struct Weights {
+    pub embed: Matrix,
+    pub layers: Vec<LayerWeights>,
+    pub norm_f: Vec<f32>,
+    pub head: Linear,
+}
+
+/// The model: config + weights.
+#[derive(Debug, Clone)]
+pub struct Transformer {
+    pub cfg: ModelConfig,
+    pub w: Weights,
+}
+
+/// Activation-quantization policy for fake-quant inference: which scheme
+/// each linear kind uses (weights are quantized separately, see
+/// [`Transformer::quantize_weights`]).
+#[derive(Debug, Clone, Default)]
+pub struct QuantPolicy {
+    /// Scheme applied to *activations* entering quantized linears.
+    pub act: Option<QuantScheme>,
+}
+
+/// Calibration recorder: collects inputs of every quantized linear
+/// (bounded row count) for GPTQ.
+#[derive(Debug, Default)]
+pub struct Calibration {
+    pub max_rows: usize,
+    pub inputs: HashMap<String, Matrix>,
+}
+
+impl Calibration {
+    pub fn new(max_rows: usize) -> Calibration {
+        Calibration { max_rows, inputs: HashMap::new() }
+    }
+
+    fn record(&mut self, name: &str, x: &Matrix) {
+        let entry = self
+            .inputs
+            .entry(name.to_string())
+            .or_insert_with(|| Matrix::zeros(0, x.cols));
+        if entry.rows >= self.max_rows {
+            return;
+        }
+        let take = (self.max_rows - entry.rows).min(x.rows);
+        entry.data.extend_from_slice(&x.data[..take * x.cols]);
+        entry.rows += take;
+    }
+}
+
+impl Transformer {
+    /// Deterministic random init.
+    pub fn init(cfg: ModelConfig, seed: u64) -> Transformer {
+        let mut rng = Rng::seed(seed);
+        let d = cfg.d_model;
+        let hd = cfg.n_heads * cfg.head_dim;
+        let kvd = cfg.kv_heads() * cfg.head_dim;
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            let n = |part: &str| format!("layer{l}.{part}");
+            let (wk_in, wv_in, wdkv) = match cfg.attention {
+                Attention::Mla { kv_rank } => (
+                    kv_rank,
+                    kv_rank,
+                    Some(Linear::new(n("attn.wdkv"), LayerKind::AttnLinear, kv_rank, d, &mut rng)),
+                ),
+                _ => (d, d, None),
+            };
+            let (n_ffn, ffn_kind, gate) = match cfg.ffn {
+                Ffn::Moe { experts, .. } => (
+                    experts,
+                    LayerKind::MoeExpert,
+                    Some(Linear::new(n("moe.gate"), LayerKind::MoeGate, experts, d, &mut rng)),
+                ),
+                _ => (1, LayerKind::FfnLinear, None),
+            };
+            let ffn = (0..n_ffn)
+                .map(|e| {
+                    let p = if n_ffn > 1 {
+                        format!("layer{l}.moe.e{e}")
+                    } else {
+                        format!("layer{l}.ffn")
+                    };
+                    FfnWeights {
+                        w1: Linear::new(format!("{p}.w1"), ffn_kind, cfg.d_ff, d, &mut rng),
+                        w2: Linear::new(format!("{p}.w2"), ffn_kind, d, cfg.d_ff, &mut rng),
+                        w3: match cfg.ffn {
+                            Ffn::Gelu => None,
+                            _ => Some(Linear::new(
+                                format!("{p}.w3"),
+                                ffn_kind,
+                                cfg.d_ff,
+                                d,
+                                &mut rng,
+                            )),
+                        },
+                    }
+                })
+                .collect();
+            layers.push(LayerWeights {
+                norm1: vec![1.0; d],
+                wq: Linear::new(n("attn.wq"), LayerKind::AttnLinear, hd, d, &mut rng),
+                wk: Linear::new(n("attn.wk"), LayerKind::AttnLinear, kvd, wk_in, &mut rng),
+                wv: Linear::new(n("attn.wv"), LayerKind::AttnLinear, kvd, wv_in, &mut rng),
+                wdkv,
+                wo: Linear::new(n("attn.wo"), LayerKind::AttnLinear, d, hd, &mut rng),
+                norm2: vec![1.0; d],
+                ffn,
+                gate,
+            });
+        }
+        let w = Weights {
+            embed: Matrix::randn(cfg.vocab, d, 0.02, &mut rng),
+            layers,
+            norm_f: vec![1.0; d],
+            head: Linear::new("head".into(), LayerKind::LmHead, cfg.vocab, d, &mut rng),
+        };
+        Transformer { cfg, w }
+    }
+
+    /// Visit every linear (including gates/head) immutably.
+    pub fn visit_linears<'a>(&'a self, f: &mut dyn FnMut(&'a Linear)) {
+        for l in &self.w.layers {
+            f(&l.wq);
+            if let Some(d) = &l.wdkv {
+                f(d);
+            }
+            f(&l.wk);
+            f(&l.wv);
+            f(&l.wo);
+            for e in &l.ffn {
+                f(&e.w1);
+                f(&e.w2);
+                if let Some(w3) = &e.w3 {
+                    f(w3);
+                }
+            }
+            if let Some(g) = &l.gate {
+                f(g);
+            }
+        }
+        f(&self.w.head);
+    }
+
+    /// Visit every linear mutably.
+    pub fn visit_linears_mut(&mut self, f: &mut dyn FnMut(&mut Linear)) {
+        for l in &mut self.w.layers {
+            f(&mut l.wq);
+            if let Some(d) = &mut l.wdkv {
+                f(d);
+            }
+            f(&mut l.wk);
+            f(&mut l.wv);
+            f(&mut l.wo);
+            for e in &mut l.ffn {
+                f(&mut e.w1);
+                f(&mut e.w2);
+                if let Some(w3) = &mut e.w3 {
+                    f(w3);
+                }
+            }
+            if let Some(g) = &mut l.gate {
+                f(g);
+            }
+        }
+        f(&mut self.w.head);
+    }
+
+    /// Fake-quantize the weights of every paper-quantized linear in place
+    /// with `scheme` (direct cast / RTN). GPTQ paths use
+    /// [`crate::quant::gptq`] with calibration data instead.
+    pub fn quantize_weights(&mut self, scheme: &QuantScheme) {
+        self.visit_linears_mut(&mut |lin| {
+            if lin.kind.quantized_by_paper() {
+                let mut out = vec![0f32; lin.w.data.len()];
+                for r in 0..lin.w.rows {
+                    let row = &lin.w.data[r * lin.w.cols..(r + 1) * lin.w.cols];
+                    scheme.quant_dequant(row, &mut out[r * lin.w.cols..(r + 1) * lin.w.cols]);
+                }
+                lin.w.data = out;
+            }
+        });
+    }
+
+    /// Widen the weight distribution **without changing the function**
+    /// (see [`ModelConfig::outlier_scale`]): the V→O and W3→W2 paths are
+    /// linear, so scaling `wv, w3` by `1/s` and `wo, w2` by `s` leaves
+    /// every output bit-identical in full precision while spreading the
+    /// model's tensors across `2·log2(s)` extra binades — the broad
+    /// post-training distribution of the paper's Mistral-7B / LongCat
+    /// cases. With `s = 2^16`, `wv`/`w3` fall below NVFP4's 2^-10 global
+    /// minimum (group scales underflow E4M3 to zero ⇒ tensors wiped) and
+    /// `wo`/`w2` rise past 2688 (scales saturate ⇒ clipping): the §IV.B
+    /// "inference crash". HiF4's 69-binade range covers both ends.
+    pub fn inject_outliers(&mut self) {
+        if self.cfg.outlier_scale <= 1.0 {
+            return;
+        }
+        let s = self.cfg.outlier_scale;
+        for layer in &mut self.w.layers {
+            layer.wv.w.scale_inplace(1.0 / s);
+            layer.wo.w.scale_inplace(s);
+            for e in &mut layer.ffn {
+                if let Some(w3) = &mut e.w3 {
+                    w3.w.scale_inplace(1.0 / s);
+                    e.w2.w.scale_inplace(s);
+                }
+            }
+        }
+    }
+
+    /// Forward pass over a batch of token sequences (all the same length),
+    /// returning logits (B·T × vocab). `policy` applies fake activation
+    /// quantization; `calib` records linear inputs for GPTQ; `cache`
+    /// collects intermediates for [`backward`].
+    pub fn forward(
+        &self,
+        tokens: &[Vec<usize>],
+        policy: Option<&QuantPolicy>,
+        mut calib: Option<&mut Calibration>,
+        mut cache: Option<&mut ForwardCache>,
+    ) -> Matrix {
+        let bt: usize = tokens.iter().map(|s| s.len()).sum();
+        let d = self.cfg.d_model;
+        let mut x = Matrix::zeros(bt, d);
+        let mut row = 0usize;
+        for seq in tokens {
+            for &t in seq {
+                debug_assert!(t < self.cfg.vocab, "token {t} out of vocab");
+                x.row_mut(row).copy_from_slice(self.w.embed.row(t));
+                row += 1;
+            }
+        }
+        let seq_lens: Vec<usize> = tokens.iter().map(|s| s.len()).collect();
+        if let Some(c) = cache.as_deref_mut() {
+            c.tokens = tokens.to_vec();
+            c.seq_lens = seq_lens.clone();
+            c.embedded = x.clone();
+        }
+
+        for (li, layer) in self.w.layers.iter().enumerate() {
+            // ---- Attention block ----
+            let (normed1, rms1) = rmsnorm_fwd(&x, &layer.norm1);
+            let attn_out = self.attention_fwd(
+                li,
+                layer,
+                &normed1,
+                &seq_lens,
+                policy,
+                calib.as_deref_mut(),
+                cache.as_deref_mut(),
+            );
+            let x1 = add(&x, &attn_out);
+            // ---- FFN block ----
+            let (normed2, rms2) = rmsnorm_fwd(&x1, &layer.norm2);
+            let ffn_out = self.ffn_fwd(
+                li,
+                layer,
+                &normed2,
+                policy,
+                calib.as_deref_mut(),
+                cache.as_deref_mut(),
+            );
+            let x2 = add(&x1, &ffn_out);
+            if let Some(c) = cache.as_deref_mut() {
+                let lc = &mut c.layers[li];
+                lc.x_in = x.clone();
+                lc.rms1 = rms1;
+                lc.normed1 = normed1;
+                lc.x_mid = x1;
+                lc.rms2 = rms2;
+                lc.normed2 = normed2;
+                x = x2;
+            } else {
+                x = x2;
+            }
+        }
+
+        let (normed_f, rms_f) = rmsnorm_fwd(&x, &self.w.norm_f);
+        let logits = matmul_bt(&normed_f, &self.w.head.w);
+        if let Some(c) = cache {
+            c.x_final = x;
+            c.rms_f = rms_f;
+            c.normed_f = normed_f;
+        }
+        logits
+    }
+
+    /// Quantize activation rows if the policy says so.
+    fn maybe_quant_act(&self, x: &Matrix, policy: Option<&QuantPolicy>, kind: LayerKind) -> Matrix {
+        match policy.and_then(|p| p.act) {
+            Some(scheme) if kind.quantized_by_paper() => {
+                let mut out = Matrix::zeros(x.rows, x.cols);
+                for r in 0..x.rows {
+                    scheme.quant_dequant(x.row(r), out.row_mut(r));
+                }
+                out
+            }
+            _ => x.clone(),
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn attention_fwd(
+        &self,
+        li: usize,
+        layer: &LayerWeights,
+        normed: &Matrix,
+        seq_lens: &[usize],
+        policy: Option<&QuantPolicy>,
+        mut calib: Option<&mut Calibration>,
+        cache: Option<&mut ForwardCache>,
+    ) -> Matrix {
+        let cfg = &self.cfg;
+        let qin = self.maybe_quant_act(normed, policy, LayerKind::AttnLinear);
+        if let Some(c) = calib.as_deref_mut() {
+            c.record(&layer.wq.name, &qin);
+        }
+        let q = matmul_bt(&qin, &layer.wq.w);
+        // K/V input: d_model directly, or the MLA latent.
+        let (kv_in, latent) = match &layer.wdkv {
+            Some(dkv) => {
+                if let Some(c) = calib.as_deref_mut() {
+                    c.record(&dkv.name, &qin);
+                }
+                let lat = matmul_bt(&qin, &dkv.w);
+                let lat_q = self.maybe_quant_act(&lat, policy, LayerKind::AttnLinear);
+                (lat_q, Some(lat))
+            }
+            None => (qin.clone(), None),
+        };
+        if let Some(c) = calib.as_deref_mut() {
+            c.record(&layer.wk.name, &kv_in);
+            c.record(&layer.wv.name, &kv_in);
+        }
+        let mut k = matmul_bt(&kv_in, &layer.wk.w);
+        let v = matmul_bt(&kv_in, &layer.wv.w);
+        let mut qr = q;
+        rope_fwd(&mut qr, seq_lens, cfg.n_heads, cfg.head_dim, cfg.rope_base);
+        rope_fwd(&mut k, seq_lens, cfg.kv_heads(), cfg.head_dim, cfg.rope_base);
+
+        let (ctx, probs) = causal_attention_fwd(
+            &qr,
+            &k,
+            &v,
+            seq_lens,
+            cfg.n_heads,
+            cfg.kv_heads(),
+            cfg.head_dim,
+        );
+        let ctx_q = self.maybe_quant_act(&ctx, policy, LayerKind::AttnLinear);
+        if let Some(c) = calib.as_deref_mut() {
+            c.record(&layer.wo.name, &ctx_q);
+        }
+        let out = matmul_bt(&ctx_q, &layer.wo.w);
+        if let Some(c) = cache {
+            let lc = &mut c.layers[li];
+            lc.attn = Some(AttnCache { qin, q: qr, k, v, kv_in, latent, ctx, probs });
+        }
+        out
+    }
+
+    fn ffn_fwd(
+        &self,
+        li: usize,
+        layer: &LayerWeights,
+        normed: &Matrix,
+        policy: Option<&QuantPolicy>,
+        mut calib: Option<&mut Calibration>,
+        cache: Option<&mut ForwardCache>,
+    ) -> Matrix {
+        let qx = self.maybe_quant_act(normed, policy, LayerKind::FfnLinear);
+        match &layer.gate {
+            None => {
+                let e = &layer.ffn[0];
+                if let Some(c) = calib.as_deref_mut() {
+                    c.record(&e.w1.name, &qx);
+                }
+                let (out, fc) = ffn_expert_fwd(e, &qx, &self.cfg, policy, calib, self);
+                if let Some(c) = cache {
+                    c.layers[li].ffn = Some(FfnCache {
+                        qx,
+                        experts: vec![Some(fc)],
+                        routing: None,
+                        gate_logits: None,
+                    });
+                }
+                out
+            }
+            Some(gate) => {
+                // MoE: route on the *unquantized* normed input (gate is
+                // excluded from quantization per §IV.C).
+                let logits = matmul_bt(normed, &gate.w);
+                let (top_k, experts_n) = match self.cfg.ffn {
+                    Ffn::Moe { experts, top_k } => (top_k, experts),
+                    _ => unreachable!(),
+                };
+                let routing = topk_softmax(&logits, top_k);
+                let mut out = Matrix::zeros(qx.rows, self.cfg.d_model);
+                let mut expert_caches: Vec<Option<ExpertCache>> = vec![None; experts_n];
+                let mut per_expert_out: Vec<Option<Matrix>> = vec![None; experts_n];
+                for (ei, e) in layer.ffn.iter().enumerate() {
+                    // Dense-but-masked evaluation: tiny models, simpler
+                    // backward; rows with zero weight contribute nothing.
+                    let used = routing.iter().any(|r| r.iter().any(|(i, _)| *i == ei));
+                    if !used {
+                        continue;
+                    }
+                    if let Some(c) = calib.as_deref_mut() {
+                        c.record(&e.w1.name, &qx);
+                    }
+                    let (eo, fc) =
+                        ffn_expert_fwd(e, &qx, &self.cfg, policy, calib.as_deref_mut(), self);
+                    for (r, routes) in routing.iter().enumerate() {
+                        for (i, w) in routes {
+                            if *i == ei {
+                                crate::tensor::gemm::axpy(*w, eo.row(r), out.row_mut(r));
+                            }
+                        }
+                    }
+                    per_expert_out[ei] = Some(eo);
+                    expert_caches[ei] = Some(fc);
+                }
+                if let Some(c) = cache {
+                    c.layers[li].ffn = Some(FfnCache {
+                        qx,
+                        experts: expert_caches,
+                        routing: Some((routing, per_expert_out)),
+                        gate_logits: Some(logits),
+                    });
+                }
+                out
+            }
+        }
+    }
+}
+
+/// One expert / plain FFN forward. Returns output and cache.
+fn ffn_expert_fwd(
+    e: &FfnWeights,
+    qx: &Matrix,
+    cfg: &ModelConfig,
+    policy: Option<&QuantPolicy>,
+    mut calib: Option<&mut Calibration>,
+    model: &Transformer,
+) -> (Matrix, ExpertCache) {
+    let h1 = matmul_bt(qx, &e.w1.w);
+    match (&e.w3, cfg.ffn) {
+        (None, _) => {
+            // GELU MLP.
+            let act = gelu_fwd(&h1);
+            let act_q = model.maybe_quant_act(&act, policy, LayerKind::FfnLinear);
+            if let Some(c) = calib.as_deref_mut() {
+                c.record(&e.w2.name, &act_q);
+            }
+            let out = matmul_bt(&act_q, &e.w2.w);
+            (out, ExpertCache { h1, h3: None, act: act_q })
+        }
+        (Some(w3), _) => {
+            // SwiGLU.
+            let h3 = matmul_bt(qx, &w3.w);
+            let mut act = silu_fwd(&h1);
+            for (a, b) in act.data.iter_mut().zip(&h3.data) {
+                *a *= *b;
+            }
+            let act_q = model.maybe_quant_act(&act, policy, LayerKind::FfnLinear);
+            if let Some(c) = calib.as_deref_mut() {
+                c.record(&e.w2.name, &act_q);
+            }
+            let out = matmul_bt(&act_q, &e.w2.w);
+            (out, ExpertCache { h1, h3: Some(h3), act: act_q })
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Caches
+// ---------------------------------------------------------------------------
+
+/// Everything backward needs, layer by layer.
+#[derive(Debug, Default, Clone)]
+pub struct ForwardCache {
+    pub tokens: Vec<Vec<usize>>,
+    pub seq_lens: Vec<usize>,
+    pub embedded: Matrix,
+    pub layers: Vec<LayerCache>,
+    pub x_final: Matrix,
+    pub rms_f: Vec<f32>,
+    pub normed_f: Matrix,
+}
+
+impl ForwardCache {
+    pub fn new(n_layers: usize) -> ForwardCache {
+        ForwardCache { layers: vec![LayerCache::default(); n_layers], ..Default::default() }
+    }
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct LayerCache {
+    pub x_in: Matrix,
+    pub rms1: Vec<f32>,
+    pub normed1: Matrix,
+    pub attn: Option<AttnCache>,
+    pub x_mid: Matrix,
+    pub rms2: Vec<f32>,
+    pub normed2: Matrix,
+    pub ffn: Option<FfnCache>,
+}
+
+#[derive(Debug, Clone)]
+pub struct AttnCache {
+    pub qin: Matrix,
+    pub q: Matrix,
+    pub k: Matrix,
+    pub v: Matrix,
+    pub kv_in: Matrix,
+    pub latent: Option<Matrix>,
+    pub ctx: Matrix,
+    /// Per (seq, head): T×T lower-triangular attention probabilities.
+    pub probs: Vec<Matrix>,
+}
+
+#[derive(Debug, Clone)]
+pub struct FfnCache {
+    pub qx: Matrix,
+    /// Per-expert caches (index-aligned; None = expert unused this batch).
+    pub experts: Vec<Option<ExpertCache>>,
+    /// MoE: per-row top-k (expert, weight) + per-expert dense outputs.
+    #[allow(clippy::type_complexity)]
+    pub routing: Option<(Vec<Vec<(usize, f32)>>, Vec<Option<Matrix>>)>,
+    pub gate_logits: Option<Matrix>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ExpertCache {
+    pub h1: Matrix,
+    pub h3: Option<Matrix>,
+    pub act: Matrix,
+}
+
+// ---------------------------------------------------------------------------
+// Primitive ops
+// ---------------------------------------------------------------------------
+
+pub(crate) fn add(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = a.clone();
+    for (x, y) in c.data.iter_mut().zip(&b.data) {
+        *x += *y;
+    }
+    c
+}
+
+/// RMSNorm forward: y = x / rms(x) · g. Returns per-row rms.
+pub fn rmsnorm_fwd(x: &Matrix, g: &[f32]) -> (Matrix, Vec<f32>) {
+    let d = x.cols;
+    let mut y = Matrix::zeros(x.rows, d);
+    let mut rms = vec![0f32; x.rows];
+    for r in 0..x.rows {
+        let row = x.row(r);
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let rm = (ms + 1e-6).sqrt();
+        rms[r] = rm;
+        let inv = 1.0 / rm;
+        for c in 0..d {
+            y.data[r * d + c] = row[c] * inv * g[c];
+        }
+    }
+    (y, rms)
+}
+
+/// RMSNorm backward. Returns (dx, dg).
+pub fn rmsnorm_bwd(dy: &Matrix, x: &Matrix, g: &[f32], rms: &[f32]) -> (Matrix, Vec<f32>) {
+    let d = x.cols;
+    let mut dx = Matrix::zeros(x.rows, d);
+    let mut dg = vec![0f32; d];
+    for r in 0..x.rows {
+        let xr = x.row(r);
+        let dyr = dy.row(r);
+        let inv = 1.0 / rms[r];
+        // dg += dy ⊙ x/rms
+        for c in 0..d {
+            dg[c] += dyr[c] * xr[c] * inv;
+        }
+        // dx = g⊙dy/rms − x · (Σ g⊙dy⊙x) / (d·rms³)
+        let mut dot = 0f32;
+        for c in 0..d {
+            dot += g[c] * dyr[c] * xr[c];
+        }
+        let k = dot / (d as f32 * rms[r] * rms[r] * rms[r]);
+        for c in 0..d {
+            dx.data[r * d + c] = g[c] * dyr[c] * inv - xr[c] * k;
+        }
+    }
+    (dx, dg)
+}
+
+/// SiLU x·σ(x).
+pub fn silu_fwd(x: &Matrix) -> Matrix {
+    let mut y = x.clone();
+    for v in y.data.iter_mut() {
+        *v = *v / (1.0 + (-*v).exp());
+    }
+    y
+}
+
+/// d/dx SiLU = σ(x)(1 + x(1−σ(x))).
+pub fn silu_grad(x: f32) -> f32 {
+    let s = 1.0 / (1.0 + (-x).exp());
+    s * (1.0 + x * (1.0 - s))
+}
+
+/// tanh-approx GELU.
+pub fn gelu_fwd(x: &Matrix) -> Matrix {
+    let mut y = x.clone();
+    for v in y.data.iter_mut() {
+        let x = *v;
+        let t = (0.7978845608 * (x + 0.044715 * x * x * x)).tanh();
+        *v = 0.5 * x * (1.0 + t);
+    }
+    y
+}
+
+pub fn gelu_grad(x: f32) -> f32 {
+    let c = 0.7978845608f32;
+    let u = c * (x + 0.044715 * x * x * x);
+    let t = u.tanh();
+    let du = c * (1.0 + 3.0 * 0.044715 * x * x);
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du
+}
+
+/// Rotary position embedding applied in place to (B·T × heads·head_dim).
+pub fn rope_fwd(x: &mut Matrix, seq_lens: &[usize], heads: usize, head_dim: usize, base: f32) {
+    let mut row = 0usize;
+    for &t_len in seq_lens {
+        for pos in 0..t_len {
+            let r = x.row_mut(row);
+            for h in 0..heads {
+                let off = h * head_dim;
+                for i in 0..head_dim / 2 {
+                    let theta = (pos as f32) / base.powf(2.0 * i as f32 / head_dim as f32);
+                    let (s, c) = theta.sin_cos();
+                    let a = r[off + 2 * i];
+                    let b = r[off + 2 * i + 1];
+                    r[off + 2 * i] = a * c - b * s;
+                    r[off + 2 * i + 1] = a * s + b * c;
+                }
+            }
+            row += 1;
+        }
+    }
+}
+
+/// RoPE backward = rotation by −θ (orthogonal transpose).
+pub fn rope_bwd(dx: &mut Matrix, seq_lens: &[usize], heads: usize, head_dim: usize, base: f32) {
+    let mut row = 0usize;
+    for &t_len in seq_lens {
+        for pos in 0..t_len {
+            let r = dx.row_mut(row);
+            for h in 0..heads {
+                let off = h * head_dim;
+                for i in 0..head_dim / 2 {
+                    let theta = (pos as f32) / base.powf(2.0 * i as f32 / head_dim as f32);
+                    let (s, c) = theta.sin_cos();
+                    let a = r[off + 2 * i];
+                    let b = r[off + 2 * i + 1];
+                    r[off + 2 * i] = a * c + b * s;
+                    r[off + 2 * i + 1] = -a * s + b * c;
+                }
+            }
+            row += 1;
+        }
+    }
+}
+
+/// Causal softmax attention over per-sequence blocks with GQA head mapping.
+/// Returns context (B·T × heads·head_dim) and per-(seq,head) prob matrices.
+pub fn causal_attention_fwd(
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    seq_lens: &[usize],
+    heads: usize,
+    kv_heads: usize,
+    head_dim: usize,
+) -> (Matrix, Vec<Matrix>) {
+    let scale = 1.0 / (head_dim as f32).sqrt();
+    let group = heads / kv_heads;
+    let mut ctx = Matrix::zeros(q.rows, heads * head_dim);
+    let mut probs = Vec::with_capacity(seq_lens.len() * heads);
+    let mut base = 0usize;
+    for &t_len in seq_lens {
+        for h in 0..heads {
+            let kvh = h / group;
+            let mut p = Matrix::zeros(t_len, t_len);
+            for i in 0..t_len {
+                // scores over j ≤ i, then softmax.
+                let qi = &q.row(base + i)[h * head_dim..(h + 1) * head_dim];
+                let mut maxs = f32::NEG_INFINITY;
+                for j in 0..=i {
+                    let kj = &k.row(base + j)[kvh * head_dim..(kvh + 1) * head_dim];
+                    let s = crate::tensor::gemm::dot(qi, kj) * scale;
+                    p.data[i * t_len + j] = s;
+                    maxs = maxs.max(s);
+                }
+                let mut denom = 0f32;
+                for j in 0..=i {
+                    let e = (p.data[i * t_len + j] - maxs).exp();
+                    p.data[i * t_len + j] = e;
+                    denom += e;
+                }
+                let inv = 1.0 / denom;
+                for j in 0..=i {
+                    p.data[i * t_len + j] *= inv;
+                }
+                // ctx_i = Σ_j p_ij · v_j
+                let crow =
+                    &mut ctx.data[(base + i) * heads * head_dim + h * head_dim..][..head_dim];
+                for j in 0..=i {
+                    let w = p.data[i * t_len + j];
+                    let vj = &v.row(base + j)[kvh * head_dim..(kvh + 1) * head_dim];
+                    for (cc, vv) in crow.iter_mut().zip(vj) {
+                        *cc += w * vv;
+                    }
+                }
+            }
+            probs.push(p);
+        }
+        base += t_len;
+    }
+    (ctx, probs)
+}
+
+/// Backward of causal attention. Returns (dq, dk, dv).
+#[allow(clippy::too_many_arguments)]
+pub fn causal_attention_bwd(
+    dctx: &Matrix,
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    probs: &[Matrix],
+    seq_lens: &[usize],
+    heads: usize,
+    kv_heads: usize,
+    head_dim: usize,
+) -> (Matrix, Matrix, Matrix) {
+    let scale = 1.0 / (head_dim as f32).sqrt();
+    let group = heads / kv_heads;
+    let mut dq = Matrix::zeros(q.rows, q.cols);
+    let mut dk = Matrix::zeros(k.rows, k.cols);
+    let mut dv = Matrix::zeros(v.rows, v.cols);
+    let mut base = 0usize;
+    let mut pi = 0usize;
+    for &t_len in seq_lens {
+        for h in 0..heads {
+            let kvh = h / group;
+            let p = &probs[pi];
+            pi += 1;
+            for i in 0..t_len {
+                let dctx_i =
+                    &dctx.data[(base + i) * heads * head_dim + h * head_dim..][..head_dim];
+                // dp_ij = dctx_i · v_j ; dv_j += p_ij dctx_i
+                let mut dp = vec![0f32; i + 1];
+                for j in 0..=i {
+                    let vj = &v.row(base + j)[kvh * head_dim..(kvh + 1) * head_dim];
+                    dp[j] = crate::tensor::gemm::dot(dctx_i, vj);
+                    let w = p.data[i * t_len + j];
+                    let dvj = &mut dv.data[(base + j) * kv_heads * head_dim + kvh * head_dim..]
+                        [..head_dim];
+                    for (dd, cc) in dvj.iter_mut().zip(dctx_i) {
+                        *dd += w * cc;
+                    }
+                }
+                // softmax backward: ds_ij = p_ij (dp_ij − Σ_l p_il dp_il)
+                let dot: f32 =
+                    (0..=i).map(|j| p.data[i * t_len + j] * dp[j]).sum();
+                for j in 0..=i {
+                    let ds = p.data[i * t_len + j] * (dp[j] - dot) * scale;
+                    if ds == 0.0 {
+                        continue;
+                    }
+                    let kj = &k.row(base + j)[kvh * head_dim..(kvh + 1) * head_dim];
+                    let qi = &q.row(base + i)[h * head_dim..(h + 1) * head_dim];
+                    let dqi =
+                        &mut dq.data[(base + i) * heads * head_dim + h * head_dim..][..head_dim];
+                    for (dd, kk) in dqi.iter_mut().zip(kj) {
+                        *dd += ds * kk;
+                    }
+                    let dkj = &mut dk.data[(base + j) * kv_heads * head_dim + kvh * head_dim..]
+                        [..head_dim];
+                    for (dd, qq) in dkj.iter_mut().zip(qi) {
+                        *dd += ds * qq;
+                    }
+                }
+            }
+        }
+        base += t_len;
+    }
+    (dq, dk, dv)
+}
+
+/// Top-k softmax routing: per row, the k largest logits with their
+/// renormalized softmax weights.
+pub fn topk_softmax(logits: &Matrix, k: usize) -> Vec<Vec<(usize, f32)>> {
+    let mut out = Vec::with_capacity(logits.rows);
+    for r in 0..logits.rows {
+        let row = logits.row(r);
+        let mut idx: Vec<usize> = (0..row.len()).collect();
+        idx.sort_by(|a, b| row[*b].partial_cmp(&row[*a]).unwrap());
+        let top = &idx[..k.min(idx.len())];
+        let maxv = row[top[0]];
+        let exps: Vec<f32> = top.iter().map(|i| (row[*i] - maxv).exp()).collect();
+        let denom: f32 = exps.iter().sum();
+        out.push(top.iter().zip(&exps).map(|(i, e)| (*i, e / denom)).collect());
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::{Attention, Ffn};
+
+    pub(crate) fn tiny_cfg(attn: Attention, ffn: Ffn) -> ModelConfig {
+        ModelConfig {
+            name: "tiny".into(),
+            vocab: 48,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 4,
+            head_dim: 4,
+            attention: attn,
+            ffn,
+            d_ff: 32,
+            max_seq: 16,
+            rope_base: 10000.0,
+            outlier_scale: 1.0,
+            outlier_frac: 0.0,
+        }
+    }
+
+    fn toks() -> Vec<Vec<usize>> {
+        vec![vec![1, 5, 9, 13], vec![2, 6, 10, 14, 3, 7]]
+    }
+
+    #[test]
+    fn forward_shapes_all_variants() {
+        for (attn, ffn) in [
+            (Attention::Mha, Ffn::SwiGlu),
+            (Attention::Gqa { kv_heads: 2 }, Ffn::SwiGlu),
+            (Attention::Gqa { kv_heads: 1 }, Ffn::Gelu),
+            (Attention::Mla { kv_rank: 8 }, Ffn::SwiGlu),
+            (Attention::Mha, Ffn::Moe { experts: 4, top_k: 2 }),
+            (Attention::Mla { kv_rank: 8 }, Ffn::Moe { experts: 4, top_k: 2 }),
+        ] {
+            let m = Transformer::init(tiny_cfg(attn, ffn), 7);
+            let logits = m.forward(&toks(), None, None, None);
+            assert_eq!(logits.rows, 10, "{attn:?}/{ffn:?}");
+            assert_eq!(logits.cols, 48);
+            assert!(logits.data.iter().all(|x| x.is_finite()), "{attn:?}/{ffn:?}");
+        }
+    }
+
+    #[test]
+    fn causality_holds() {
+        // Changing a later token must not affect earlier logits.
+        let m = Transformer::init(tiny_cfg(Attention::Mha, Ffn::SwiGlu), 8);
+        let a = m.forward(&[vec![1, 2, 3, 4]], None, None, None);
+        let b = m.forward(&[vec![1, 2, 3, 40]], None, None, None);
+        for r in 0..3 {
+            for c in 0..48 {
+                assert_eq!(a.at(r, c), b.at(r, c), "position {r} leaked future info");
+            }
+        }
+        assert!(
+            (0..48).any(|c| a.at(3, c) != b.at(3, c)),
+            "last position must differ"
+        );
+    }
+
+    #[test]
+    fn batch_equals_individual() {
+        let m = Transformer::init(tiny_cfg(Attention::Gqa { kv_heads: 2 }, Ffn::SwiGlu), 9);
+        let s1 = vec![1, 2, 3];
+        let s2 = vec![4, 5, 6, 7];
+        let joint = m.forward(&[s1.clone(), s2.clone()], None, None, None);
+        let a = m.forward(&[s1], None, None, None);
+        let b = m.forward(&[s2], None, None, None);
+        for r in 0..3 {
+            for c in 0..48 {
+                assert!((joint.at(r, c) - a.at(r, c)).abs() < 1e-5);
+            }
+        }
+        for r in 0..4 {
+            for c in 0..48 {
+                assert!((joint.at(3 + r, c) - b.at(r, c)).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn quant_policy_changes_outputs_but_stays_finite() {
+        use crate::formats::{Format, QuantScheme};
+        let m = Transformer::init(tiny_cfg(Attention::Mha, Ffn::SwiGlu), 10);
+        let clean = m.forward(&toks(), None, None, None);
+        let mut qm = m.clone();
+        qm.quantize_weights(&QuantScheme::direct(Format::HiF4));
+        let policy = QuantPolicy { act: Some(QuantScheme::direct(Format::HiF4)) };
+        let quant = qm.forward(&toks(), Some(&policy), None, None);
+        assert!(quant.data.iter().all(|x| x.is_finite()));
+        let diff: f32 =
+            clean.data.iter().zip(&quant.data).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff > 0.0, "quantization must perturb logits");
+        // ... but not beyond recognition for a 4.5-bit format.
+        let denom: f32 = clean.data.iter().map(|x| x.abs()).sum();
+        assert!(diff / denom < 0.5, "relative perturbation too large: {}", diff / denom);
+    }
+
+    #[test]
+    fn calibration_records_inputs() {
+        let m = Transformer::init(tiny_cfg(Attention::Mha, Ffn::SwiGlu), 11);
+        let mut cal = Calibration::new(64);
+        m.forward(&toks(), None, Some(&mut cal), None);
+        assert!(cal.inputs.contains_key("layer0.attn.wq"));
+        assert!(cal.inputs.contains_key("layer1.ffn.w2"));
+        let x = &cal.inputs["layer0.attn.wq"];
+        assert_eq!(x.cols, 16);
+        assert_eq!(x.rows, 10);
+    }
+
+    #[test]
+    fn outlier_injection_widens_distribution_function_preserving() {
+        let mut cfg = tiny_cfg(Attention::Mha, Ffn::SwiGlu);
+        cfg.outlier_scale = 4096.0;
+        let m0 = Transformer::init(cfg.clone(), 12);
+        let mut m1 = m0.clone();
+        m1.inject_outliers();
+        let mut amax0 = 0f32;
+        let mut amax1 = 0f32;
+        m0.visit_linears(&mut |l| amax0 = amax0.max(l.w.amax()));
+        m1.visit_linears(&mut |l| amax1 = amax1.max(l.w.amax()));
+        assert!(amax1 > 100.0 * amax0, "outliers must widen the range");
+        // The widening is function-preserving: logits match to f32 noise.
+        let l0 = m0.forward(&toks(), None, None, None);
+        let l1 = m1.forward(&toks(), None, None, None);
+        for (a, b) in l0.data.iter().zip(&l1.data) {
+            assert!((a - b).abs() <= 1e-3 * (1.0 + a.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn topk_softmax_properties() {
+        let logits = Matrix::from_vec(2, 4, vec![1.0, 3.0, 2.0, 0.0, -1.0, -2.0, 5.0, 4.9]);
+        let r = topk_softmax(&logits, 2);
+        assert_eq!(r[0][0].0, 1); // argmax first
+        assert_eq!(r[0][1].0, 2);
+        let s: f32 = r[0].iter().map(|(_, w)| w).sum();
+        assert!((s - 1.0).abs() < 1e-6, "renormalized");
+        assert_eq!(r[1][0].0, 2);
+    }
+}

@@ -1,0 +1,124 @@
+//! The model zoo: tiny stand-ins for the paper's evaluation models,
+//! architecture-matched per DESIGN.md §4:
+//!
+//! | paper model         | stand-in            | architecture features        |
+//! |---------------------|---------------------|------------------------------|
+//! | LLaMA2-7B           | `llama2_tiny`       | MHA + SwiGLU                 |
+//! | LLaMA3-8B           | `llama3_tiny`       | GQA + SwiGLU                 |
+//! | Qwen2.5-14B         | `qwen_tiny`         | GQA + wide SwiGLU            |
+//! | Mistral-7B          | `mistral_tiny`      | GQA + SwiGLU + **outlier-    |
+//! |                     |                     | widened weights** (crashes   |
+//! |                     |                     | NVFP4 direct-cast, §IV.B)    |
+//! | DeepSeek-V3.1 671B  | `deepseek_tiny`     | **MLA + MoE**                |
+//! | LongCat 560B        | `longcat_tiny`      | MHA + **MoE** + outliers     |
+
+use super::config::{Attention, Ffn, ModelConfig};
+
+fn base(name: &str) -> ModelConfig {
+    ModelConfig {
+        name: name.to_string(),
+        vocab: 320,
+        d_model: 64,
+        n_layers: 2,
+        n_heads: 4,
+        head_dim: 16,
+        attention: Attention::Mha,
+        ffn: Ffn::SwiGlu,
+        d_ff: 128,
+        max_seq: 48,
+        rope_base: 10000.0,
+        outlier_scale: 1.0,
+        outlier_frac: 0.0,
+    }
+}
+
+/// LLaMA2-7B stand-in: classic MHA + SwiGLU.
+pub fn llama2_tiny() -> ModelConfig {
+    base("Llama2-tiny (MHA)")
+}
+
+/// LLaMA3-8B stand-in: GQA (4 heads, 2 KV heads).
+pub fn llama3_tiny() -> ModelConfig {
+    let mut c = base("Llama3-tiny (GQA)");
+    c.attention = Attention::Gqa { kv_heads: 2 };
+    c
+}
+
+/// Qwen2.5-14B stand-in: GQA with a wider FFN (its distributions are
+/// "optimized during training" — more capacity, cleaner optima).
+pub fn qwen_tiny() -> ModelConfig {
+    let mut c = base("Qwen2.5-tiny (GQA)");
+    c.attention = Attention::Gqa { kv_heads: 2 };
+    c.d_ff = 192;
+    c
+}
+
+/// Mistral-7B stand-in: GQA + post-training outlier widening far beyond
+/// NVFP4's 22-binade global range (the §IV.B "inference crash" case).
+pub fn mistral_tiny() -> ModelConfig {
+    let mut c = base("Mistral-tiny (GQA, wide dist)");
+    c.attention = Attention::Gqa { kv_heads: 2 };
+    c.outlier_scale = 65536.0; // 2^16: pushes group scales past E4M3 max
+    c.outlier_frac = 0.03;
+    c
+}
+
+/// DeepSeek-V3.1 stand-in: MLA attention + MoE FFN.
+pub fn deepseek_tiny() -> ModelConfig {
+    let mut c = base("DeepSeek-tiny (MLA+MoE)");
+    c.attention = Attention::Mla { kv_rank: 32 };
+    c.ffn = Ffn::Moe { experts: 4, top_k: 2 };
+    c.d_ff = 96;
+    c
+}
+
+/// LongCat stand-in: MoE with outlier widening (quantization-sensitive,
+/// NVFP4 crashes on hard tasks §IV.C).
+pub fn longcat_tiny() -> ModelConfig {
+    let mut c = base("LongCat-tiny (MoE, wide dist)");
+    c.ffn = Ffn::Moe { experts: 4, top_k: 2 };
+    c.d_ff = 96;
+    c.outlier_scale = 65536.0;
+    c.outlier_frac = 0.03;
+    c
+}
+
+/// The Table III roster.
+pub fn small_llms() -> Vec<ModelConfig> {
+    vec![llama2_tiny(), llama3_tiny(), qwen_tiny(), mistral_tiny()]
+}
+
+/// The Table V roster.
+pub fn large_llms() -> Vec<ModelConfig> {
+    vec![deepseek_tiny(), longcat_tiny()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_covers_paper_architectures() {
+        let small = small_llms();
+        assert_eq!(small.len(), 4);
+        assert!(matches!(small[0].attention, Attention::Mha));
+        assert!(matches!(small[1].attention, Attention::Gqa { .. }));
+        assert!(small[3].outlier_scale > 1000.0, "Mistral stand-in must be wide");
+        let large = large_llms();
+        assert!(matches!(large[0].attention, Attention::Mla { .. }));
+        assert!(matches!(large[0].ffn, Ffn::Moe { .. }));
+        assert!(matches!(large[1].ffn, Ffn::Moe { .. }));
+    }
+
+    #[test]
+    fn params_in_tiny_range() {
+        for c in small_llms().into_iter().chain(large_llms()) {
+            let p = c.param_count();
+            assert!(
+                (50_000..5_000_000).contains(&p),
+                "{} has {p} params",
+                c.name
+            );
+        }
+    }
+}

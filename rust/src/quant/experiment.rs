@@ -1,0 +1,236 @@
+//! The Table III/IV/V experiment driver: train a stand-in LLM on the
+//! synthetic corpus, apply each A-W quantization configuration (direct
+//! cast, PTS, HiGPTQ), evaluate on the benchmark suite, and report
+//! accuracy + Acc Drop rows exactly like the paper's tables.
+
+use super::gptq::{gptq_quantize, GptqConfig};
+use crate::eval::harness::{evaluate, EvalRow};
+use crate::eval::tasks::{self, Task};
+use crate::formats::{Format, QuantScheme};
+use crate::model::config::ModelConfig;
+use crate::model::train::train;
+use crate::model::transformer::{Calibration, QuantPolicy, Transformer};
+use crate::tensor::Rng;
+
+/// The A-W quantization configurations of the paper's tables.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantType {
+    Bf16,
+    Nvfp4,
+    Nvfp4Pts,
+    HiF4,
+    HiF4HiGptq,
+}
+
+impl QuantType {
+    pub fn label(self) -> &'static str {
+        match self {
+            QuantType::Bf16 => "BF16",
+            QuantType::Nvfp4 => "NVFP4",
+            QuantType::Nvfp4Pts => "NVFP4+PTS",
+            QuantType::HiF4 => "HiF4",
+            QuantType::HiF4HiGptq => "HiF4+HiGPTQ",
+        }
+    }
+
+    /// Weight/activation scheme (None = full precision).
+    pub fn scheme(self) -> Option<QuantScheme> {
+        match self {
+            QuantType::Bf16 => None,
+            QuantType::Nvfp4 => Some(QuantScheme::direct(Format::Nvfp4)),
+            QuantType::Nvfp4Pts => Some(QuantScheme::with_pts(Format::Nvfp4)),
+            QuantType::HiF4 | QuantType::HiF4HiGptq => {
+                Some(QuantScheme::direct(Format::HiF4))
+            }
+        }
+    }
+}
+
+/// Experiment knobs (shrunk by tests, full-size in the benches).
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub train_steps: usize,
+    pub lr: f32,
+    pub batch: usize,
+    pub seq: usize,
+    pub eval_items: usize,
+    pub eval_seeds: Vec<u64>,
+    pub calib_rows: usize,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            train_steps: 260,
+            lr: 2e-3,
+            batch: 8,
+            seq: 32,
+            eval_items: 60,
+            eval_seeds: vec![11, 22, 33],
+            calib_rows: 256,
+        }
+    }
+}
+
+/// Train one stand-in model on the synthetic corpus (+ outlier injection
+/// afterwards, for the wide-distribution models). Returns the model and
+/// its loss curve.
+pub fn train_model(cfg: &ModelConfig, xcfg: &ExperimentConfig, seed: u64) -> (Transformer, Vec<f32>) {
+    assert_eq!(cfg.vocab, tasks::VOCAB, "zoo models must use the corpus vocab");
+    let mut model = Transformer::init(cfg.clone(), seed);
+    let (batch, seq) = (xcfg.batch, xcfg.seq);
+    let losses = train(&mut model, xcfg.train_steps, xcfg.lr, seed ^ 0xC0FFEE, |rng| {
+        (0..batch).map(|_| tasks::training_sequence(rng, seq)).collect()
+    });
+    model.inject_outliers();
+    (model, losses)
+}
+
+/// Apply one quant type to a trained model, returning the model to
+/// evaluate plus the activation policy.
+pub fn quantize_model(
+    model: &Transformer,
+    qt: QuantType,
+    xcfg: &ExperimentConfig,
+) -> (Transformer, Option<QuantPolicy>) {
+    let Some(scheme) = qt.scheme() else {
+        return (model.clone(), None);
+    };
+    let mut qm = model.clone();
+    match qt {
+        QuantType::HiF4HiGptq => {
+            // Calibrate on corpus text, then HiGPTQ each quantized linear.
+            let mut calib = Calibration::new(xcfg.calib_rows);
+            let mut rng = Rng::seed(0x0CA11B);
+            for _ in 0..(xcfg.calib_rows / (xcfg.batch * xcfg.seq)).max(1) {
+                let batch: Vec<Vec<usize>> =
+                    (0..xcfg.batch).map(|_| tasks::training_sequence(&mut rng, xcfg.seq)).collect();
+                model.forward(&batch, None, Some(&mut calib), None);
+            }
+            let gcfg = GptqConfig::higptq();
+            qm.visit_linears_mut(&mut |lin| {
+                if !lin.kind.quantized_by_paper() {
+                    return;
+                }
+                match calib.inputs.get(&lin.name) {
+                    Some(x) if x.rows >= 8 => {
+                        lin.w = gptq_quantize(&lin.w, x, &gcfg).weights;
+                    }
+                    // Unseen linears (e.g. never-routed MoE experts): RTN.
+                    _ => {
+                        let mut out = vec![0f32; lin.w.data.len()];
+                        for r in 0..lin.w.rows {
+                            scheme.quant_dequant(
+                                lin.w.row(r),
+                                &mut out[r * lin.w.cols..(r + 1) * lin.w.cols],
+                            );
+                        }
+                        lin.w.data = out;
+                    }
+                }
+            });
+        }
+        _ => qm.quantize_weights(&scheme),
+    }
+    (qm, Some(QuantPolicy { act: Some(scheme) }))
+}
+
+/// One table block: per-quant-type eval rows (+ drops vs the BF16 row).
+#[derive(Debug, Clone)]
+pub struct ModelBlock {
+    pub model_name: String,
+    pub losses: Vec<f32>,
+    pub rows: Vec<EvalRow>,
+}
+
+impl ModelBlock {
+    /// Acc Drop row for `rows[i]` (vs rows[0] = BF16).
+    pub fn drops(&self, i: usize) -> Vec<f64> {
+        self.rows[i]
+            .task_acc
+            .iter()
+            .zip(&self.rows[0].task_acc)
+            .map(|(q, b)| q - b)
+            .collect()
+    }
+}
+
+/// Run the full pipeline for one model over the given quant types.
+pub fn run_model(
+    cfg: &ModelConfig,
+    suite: &[Task],
+    quant_types: &[QuantType],
+    xcfg: &ExperimentConfig,
+    seed: u64,
+) -> ModelBlock {
+    let (model, losses) = train_model(cfg, xcfg, seed);
+    let mut rows = Vec::new();
+    for qt in quant_types {
+        let (qm, policy) = quantize_model(&model, *qt, xcfg);
+        rows.push(evaluate(
+            &qm,
+            qt.label(),
+            suite,
+            xcfg.eval_items,
+            &xcfg.eval_seeds,
+            policy.as_ref(),
+        ));
+    }
+    ModelBlock { model_name: cfg.name.clone(), losses, rows }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    fn quick() -> ExperimentConfig {
+        ExperimentConfig {
+            train_steps: 60,
+            eval_items: 25,
+            eval_seeds: vec![1],
+            calib_rows: 128,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn pipeline_produces_table_shape() {
+        let cfg = zoo::llama2_tiny();
+        let block = run_model(
+            &cfg,
+            &Task::small_suite(),
+            &[QuantType::Bf16, QuantType::HiF4],
+            &quick(),
+            1,
+        );
+        assert_eq!(block.rows.len(), 2);
+        assert_eq!(block.rows[0].task_acc.len(), 8);
+        assert!(block.losses.last().unwrap() < &block.losses[0], "training works");
+        let drops = block.drops(1);
+        assert_eq!(drops.len(), 8);
+        // HiF4 direct cast stays within a plausible drop band.
+        assert!(block.rows[1].mean >= block.rows[0].mean - 25.0);
+    }
+
+    #[test]
+    fn outlier_model_crashes_nvfp4_but_not_hif4() {
+        // The §IV.B "Mistral crash": the wide-distribution model must hurt
+        // NVFP4 direct-cast far more than HiF4 direct-cast.
+        let cfg = zoo::mistral_tiny();
+        let block = run_model(
+            &cfg,
+            &[Task::AgreeEasy, Task::Physical],
+            &[QuantType::Bf16, QuantType::Nvfp4, QuantType::HiF4],
+            &quick(),
+            2,
+        );
+        let bf16 = block.rows[0].mean;
+        let nvfp4 = block.rows[1].mean;
+        let hif4 = block.rows[2].mean;
+        assert!(
+            bf16 - nvfp4 > 2.0 * (bf16 - hif4).max(1.0),
+            "NVFP4 should crash on the outlier model: bf16={bf16:.1} nvfp4={nvfp4:.1} hif4={hif4:.1}"
+        );
+    }
+}

@@ -1,0 +1,6 @@
+//! Quantization pipeline: error sweeps (Fig 3), per-tensor scaling, GPTQ and
+//! the HiF4-tailored HiGPTQ (§IV.A).
+
+pub mod experiment;
+pub mod gptq;
+pub mod sweep;

@@ -1,0 +1,131 @@
+//! The Fig-3 quantization-error experiment (§III.A).
+//!
+//! 18 Gaussian 1024×1024 matrices, σ = 0.01 × 2^x for x ∈ [0, 17]; each is
+//! quantized to HiF4, MXFP4, NVFP4 (direct cast) and NVFP4+PTS; MSE against
+//! the original is reported normalized to HiF4's.
+
+use crate::formats::{mse, Format, QuantScheme};
+use crate::tensor::{Matrix, Rng};
+
+/// Matrix side length of the paper's experiment.
+pub const PAPER_DIM: usize = 1024;
+/// Number of σ points: x ∈ [0, 17].
+pub const PAPER_POINTS: usize = 18;
+
+/// One point of the sweep.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    /// The exponent x (σ = 0.01 × 2^x).
+    pub x: u32,
+    pub sigma: f64,
+    /// Raw MSE per scheme, in the order of [`SCHEMES`].
+    pub mse: Vec<f64>,
+    /// MSE normalized to HiF4's.
+    pub normalized: Vec<f64>,
+}
+
+/// The schemes Fig 3 plots, in plot order.
+pub fn schemes() -> Vec<QuantScheme> {
+    vec![
+        QuantScheme::direct(Format::HiF4),
+        QuantScheme::direct(Format::Nvfp4),
+        QuantScheme::with_pts(Format::Nvfp4),
+        QuantScheme::direct(Format::Mxfp4),
+    ]
+}
+
+/// Run the sweep at a configurable matrix size (the paper's 1024×1024 by
+/// default; tests shrink it).
+pub fn run(dim: usize, points: usize, seed: u64) -> Vec<SweepPoint> {
+    let schemes = schemes();
+    let mut out = Vec::with_capacity(points);
+    let mut rng = Rng::seed(seed);
+    for x in 0..points as u32 {
+        let sigma = 0.01 * 2f64.powi(x as i32);
+        let m = Matrix::randn(dim, dim, sigma as f32, &mut rng);
+        let mses: Vec<f64> = schemes
+            .iter()
+            .map(|s| {
+                let q = s.quant_dequant_vec(&m.data);
+                mse(&m.data, &q)
+            })
+            .collect();
+        let base = mses[0];
+        let normalized = mses.iter().map(|e| e / base).collect();
+        out.push(SweepPoint { x, sigma, mse: mses, normalized });
+    }
+    out
+}
+
+/// Aggregate ratio over the sweep, excluding points where NVFP4 direct-cast
+/// blows up (the paper excludes "NVFP4's fluctuation" when quoting
+/// HiF4 : NVFP4 : MXFP4 = 1 : 1.32 : 1.89).
+pub fn stable_ratios(points: &[SweepPoint]) -> Vec<f64> {
+    let n = schemes().len();
+    let mut acc = vec![0f64; n];
+    let mut count = 0usize;
+    for p in points {
+        // NVFP4 is "stable" where direct-cast tracks PTS closely.
+        let stable = p.normalized[1] <= p.normalized[2] * 1.5;
+        if !stable {
+            continue;
+        }
+        for (a, r) in acc.iter_mut().zip(&p.normalized) {
+            *a += r;
+        }
+        count += 1;
+    }
+    acc.iter().map(|a| a / count.max(1) as f64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_shape_small() {
+        // 128×128 is enough to see the Fig-3 shape clearly.
+        let pts = run(128, PAPER_POINTS, 42);
+        assert_eq!(pts.len(), PAPER_POINTS);
+        for p in &pts {
+            assert_eq!(p.normalized[0], 1.0, "normalized to HiF4");
+            assert!(p.mse.iter().all(|e| e.is_finite() && *e > 0.0));
+        }
+    }
+
+    #[test]
+    fn fig3_ratio_ordering() {
+        let pts = run(128, PAPER_POINTS, 43);
+        let r = stable_ratios(&pts);
+        // Paper: 1 : 1.32 : 1.89 (NVFP4 direct ≈ NVFP4+PTS when stable).
+        assert!(r[1] > 1.1 && r[1] < 1.7, "NVFP4/HiF4 ratio {:.3}", r[1]);
+        assert!(r[3] > 1.5 && r[3] < 2.6, "MXFP4/HiF4 ratio {:.3}", r[3]);
+        assert!(r[3] > r[1], "MXFP4 worse than NVFP4");
+    }
+
+    #[test]
+    fn nvfp4_blows_up_at_range_edges() {
+        // At x = 17 (σ = 0.01×2^17 ≈ 1311) group peaks exceed 2688 → E4M3
+        // scale saturates → direct-cast error must blow up vs PTS.
+        let pts = run(128, PAPER_POINTS, 44);
+        let last = &pts[PAPER_POINTS - 1];
+        assert!(
+            last.normalized[1] > 1.5 * last.normalized[2],
+            "direct {} should blow up vs PTS {}",
+            last.normalized[1],
+            last.normalized[2]
+        );
+        // And the direct/PTS gap must widen toward the range edge.
+        let gap = |p: &SweepPoint| p.normalized[1] / p.normalized[2];
+        assert!(gap(&pts[17]) > gap(&pts[12]), "blow-up grows toward the edge");
+        // While HiF4 stays flat: its normalized error is 1 by construction,
+        // but also its *raw* error must scale ∝ σ² (no range failure).
+        let mid = &pts[8];
+        let scaling = last.mse[0] / mid.mse[0];
+        let expect = (last.sigma / mid.sigma).powi(2);
+        assert!(
+            (scaling / expect).log2().abs() < 1.0,
+            "HiF4 MSE should scale with σ²: got {scaling:.3e}, expect {expect:.3e}"
+        );
+    }
+}

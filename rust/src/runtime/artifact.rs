@@ -1,0 +1,269 @@
+//! Artifact manifest: the parameter order/shapes and entry-point dims that
+//! `python/compile/aot.py` records next to the HLO files.
+//!
+//! Parsed from `manifest.txt` (a flat `key value...` format emitted
+//! alongside `manifest.json`; the offline image has no JSON crate and a
+//! hand-rolled parser for a format we also control would be redundancy,
+//! not robustness).
+
+use crate::tensor::{Matrix, Rng};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    /// Parameter (name, shape) in artifact input order.
+    pub params: Vec<(String, Vec<usize>)>,
+    /// Standalone qdq entry dims.
+    pub qdq_rows: usize,
+    pub qdq_cols: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {path:?} — run `make artifacts` first"))?;
+        let mut batch = 0;
+        let mut seq = 0;
+        let mut vocab = 0;
+        let mut qdq_rows = 0;
+        let mut qdq_cols = 0;
+        let mut params = Vec::new();
+        for line in text.lines() {
+            let mut it = line.split_whitespace();
+            let Some(key) = it.next() else { continue };
+            match key {
+                "batch" => batch = it.next().context("batch")?.parse()?,
+                "seq" => seq = it.next().context("seq")?.parse()?,
+                "vocab" => vocab = it.next().context("vocab")?.parse()?,
+                "qdq" => {
+                    qdq_rows = it.next().context("qdq rows")?.parse()?;
+                    qdq_cols = it.next().context("qdq cols")?.parse()?;
+                }
+                "param" => {
+                    let name = it.next().context("param name")?.to_string();
+                    let dims: Vec<usize> =
+                        it.map(|d| d.parse().unwrap_or(0)).collect();
+                    if dims.iter().any(|d| *d == 0) {
+                        bail!("bad dims for param {name}");
+                    }
+                    params.push((name, dims));
+                }
+                _ => {}
+            }
+        }
+        if batch == 0 || seq == 0 || params.is_empty() {
+            bail!("incomplete manifest {path:?}");
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), batch, seq, vocab, params, qdq_rows, qdq_cols })
+    }
+
+    /// Path of a named artifact.
+    pub fn artifact(&self, name: &str) -> PathBuf {
+        self.dir.join(name)
+    }
+
+    /// Total parameter element count.
+    pub fn param_elems(&self) -> usize {
+        self.params.iter().map(|(_, d)| d.iter().product::<usize>()).sum()
+    }
+
+    /// Initialize a parameter store with the same scheme as
+    /// `model.init_params` (scaled normal; ones for norm gains).
+    pub fn init_params(&self, seed: u64) -> ParamStore {
+        let mut rng = Rng::seed(seed);
+        let mut params = BTreeMap::new();
+        for (name, dims) in &self.params {
+            let n: usize = dims.iter().product();
+            let mut data = vec![0f32; n];
+            if name.contains("norm") {
+                data.fill(1.0);
+            } else if name == "embed" {
+                rng.fill_normal(&mut data, 0.02);
+            } else {
+                let sigma = (2.0 / (dims[0] + dims[dims.len() - 1]) as f32).sqrt();
+                rng.fill_normal(&mut data, sigma);
+            }
+            params.insert(name.clone(), (dims.clone(), data));
+        }
+        ParamStore { order: self.params.iter().map(|(n, _)| n.clone()).collect(), params }
+    }
+}
+
+/// Named parameter arrays in manifest order.
+#[derive(Debug, Clone)]
+pub struct ParamStore {
+    pub order: Vec<String>,
+    pub params: BTreeMap<String, (Vec<usize>, Vec<f32>)>,
+}
+
+impl ParamStore {
+    /// Convert to PJRT literals in artifact input order.
+    pub fn literals(&self) -> Result<Vec<xla::Literal>> {
+        let mut out = Vec::with_capacity(self.order.len());
+        for name in &self.order {
+            let (dims, data) = &self.params[name];
+            let dims_i64: Vec<i64> = dims.iter().map(|d| *d as i64).collect();
+            out.push(xla::Literal::vec1(data).reshape(&dims_i64)?);
+        }
+        Ok(out)
+    }
+
+    /// Replace parameter values from literals (train-step outputs).
+    pub fn update_from_literals(&mut self, literals: &[xla::Literal]) -> Result<()> {
+        for (name, lit) in self.order.clone().iter().zip(literals) {
+            let data = lit.to_vec::<f32>()?;
+            let entry = self.params.get_mut(name).context("unknown param")?;
+            anyhow::ensure!(data.len() == entry.1.len(), "size mismatch for {name}");
+            entry.1 = data;
+        }
+        Ok(())
+    }
+
+    /// Fake-quantize every attention/FFN weight matrix (2-D, non-norm,
+    /// non-embedding/head) with `scheme` — the weight half of the paper's
+    /// simulated quantization; activations are handled in-graph by the
+    /// quantized forward artifact.
+    pub fn quantize_weights(&mut self, scheme: &crate::formats::QuantScheme) {
+        for (name, (dims, data)) in self.params.iter_mut() {
+            if name == "embed" || name == "head" || name.contains("norm") || dims.len() != 2 {
+                continue;
+            }
+            let cols = dims[1];
+            let mut out = vec![0f32; data.len()];
+            for r in 0..dims[0] {
+                scheme.quant_dequant(&data[r * cols..(r + 1) * cols], &mut out[r * cols..(r + 1) * cols]);
+            }
+            *data = out;
+        }
+    }
+
+    /// Save to a simple binary file (name, dims, f32 LE data per entry).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"HIF4PARM");
+        buf.extend_from_slice(&(self.order.len() as u32).to_le_bytes());
+        for name in &self.order {
+            let (dims, data) = &self.params[name];
+            buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            buf.extend_from_slice(name.as_bytes());
+            buf.extend_from_slice(&(dims.len() as u32).to_le_bytes());
+            for d in dims {
+                buf.extend_from_slice(&(*d as u64).to_le_bytes());
+            }
+            for x in data {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        std::fs::write(path, buf)?;
+        Ok(())
+    }
+
+    /// Load from the binary format written by [`save`].
+    pub fn load(path: &Path) -> Result<ParamStore> {
+        let buf = std::fs::read(path)?;
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            anyhow::ensure!(*pos + n <= buf.len(), "truncated param file");
+            let s = &buf[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        anyhow::ensure!(take(&mut pos, 8)? == b"HIF4PARM", "bad magic");
+        let count = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+        let mut order = Vec::with_capacity(count);
+        let mut params = BTreeMap::new();
+        for _ in 0..count {
+            let nlen = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+            let name = String::from_utf8(take(&mut pos, nlen)?.to_vec())?;
+            let ndims = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+            let mut dims = Vec::with_capacity(ndims);
+            for _ in 0..ndims {
+                dims.push(u64::from_le_bytes(take(&mut pos, 8)?.try_into()?) as usize);
+            }
+            let n: usize = dims.iter().product();
+            let mut data = Vec::with_capacity(n);
+            let raw = take(&mut pos, n * 4)?;
+            for c in raw.chunks_exact(4) {
+                data.push(f32::from_le_bytes(c.try_into()?));
+            }
+            order.push(name.clone());
+            params.insert(name, (dims, data));
+        }
+        Ok(ParamStore { order, params })
+    }
+
+    /// View one 2-D parameter as a Matrix (copy).
+    pub fn matrix(&self, name: &str) -> Option<Matrix> {
+        let (dims, data) = self.params.get(name)?;
+        if dims.len() != 2 {
+            return None;
+        }
+        Some(Matrix::from_vec(dims[0], dims[1], data.clone()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest(dir: &Path) {
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "batch 8\nseq 32\nvocab 320\nqdq 8 256\nparam embed 320 64\nparam head 320 64\nparam layer0.norm1 64\nparam layer0.wq 64 64\n",
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let dir = std::env::temp_dir().join("hif4_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        fake_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.batch, 8);
+        assert_eq!(m.seq, 32);
+        assert_eq!(m.params.len(), 4);
+        assert_eq!(m.params[3].1, vec![64, 64]);
+        assert_eq!(m.param_elems(), 320 * 64 * 2 + 64 + 64 * 64);
+    }
+
+    #[test]
+    fn param_store_roundtrips_through_disk() {
+        let dir = std::env::temp_dir().join("hif4_params_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        fake_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        let store = m.init_params(3);
+        let path = dir.join("params.bin");
+        store.save(&path).unwrap();
+        let loaded = ParamStore::load(&path).unwrap();
+        assert_eq!(store.order, loaded.order);
+        for name in &store.order {
+            assert_eq!(store.params[name], loaded.params[name], "{name}");
+        }
+    }
+
+    #[test]
+    fn weight_quantization_skips_protected_params() {
+        let dir = std::env::temp_dir().join("hif4_quant_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        fake_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        let mut store = m.init_params(4);
+        let embed_before = store.params["embed"].1.clone();
+        let wq_before = store.params["layer0.wq"].1.clone();
+        store.quantize_weights(&crate::formats::QuantScheme::direct(
+            crate::formats::Format::HiF4,
+        ));
+        assert_eq!(store.params["embed"].1, embed_before, "embed protected");
+        assert_ne!(store.params["layer0.wq"].1, wq_before, "wq quantized");
+    }
+}

@@ -1,0 +1,93 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them —
+//! the only compute path the serving stack uses (Python never runs at
+//! request time).
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`. HLO *text* is
+//! the interchange format (xla_extension 0.5.1 rejects jax≥0.5 protos).
+
+use crate::tensor::Matrix;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A PJRT client (CPU in this image; the same wrapper drives TPU/GPU
+/// plugins on hardware that has them).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime { client: xla::PjRtClient::cpu().context("create PJRT CPU client")? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile one HLO-text artifact.
+    pub fn load(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path must be utf-8")?,
+        )
+        .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compile {path:?}"))?;
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+}
+
+/// A compiled executable with a typed execute wrapper.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with the given inputs (borrowed literals — parameter
+    /// literals are long-lived, only per-call inputs are fresh); returns
+    /// the flattened tuple outputs (aot.py lowers with `return_tuple=True`).
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<L>(inputs).context("execute")?;
+        let literal =
+            result[0][0].to_literal_sync().context("fetch result literal")?;
+        literal.to_tuple().context("decompose result tuple")
+    }
+}
+
+/// f32 matrix → PJRT literal of shape [rows, cols].
+pub fn matrix_literal(m: &Matrix) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(&m.data).reshape(&[m.rows as i64, m.cols as i64])?)
+}
+
+/// f32 vector → literal of shape [n].
+pub fn vec_literal(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// f32 scalar literal.
+pub fn scalar_literal(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Token batch (B×T, i32) → literal.
+pub fn tokens_literal(tokens: &[Vec<usize>], seq: usize) -> Result<xla::Literal> {
+    let b = tokens.len();
+    let mut flat = Vec::with_capacity(b * seq);
+    for row in tokens {
+        assert!(row.len() <= seq, "sequence longer than the lowered T");
+        for i in 0..seq {
+            // Pad with token 0 (the corpus pad/BOS id).
+            flat.push(*row.get(i).unwrap_or(&0) as i32);
+        }
+    }
+    Ok(xla::Literal::vec1(&flat).reshape(&[b as i64, seq as i64])?)
+}
+
+/// Literal → f32 vec (any shape, row-major).
+pub fn literal_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(l.to_vec::<f32>()?)
+}

@@ -1,0 +1,4 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+
+pub mod artifact;
+pub mod client;

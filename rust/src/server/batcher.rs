@@ -1,0 +1,140 @@
+//! Dynamic batcher — the vLLM-router-style heart of the coordinator.
+//!
+//! Requests arrive on an MPSC queue; the batcher drains up to `max_batch`
+//! of them, waiting at most `max_wait` after the first request before
+//! dispatching a partial batch (latency/throughput knob). Batches go to the
+//! worker that owns the PJRT executable.
+
+use super::protocol::Request;
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// A request tagged with arrival time and a reply handle.
+pub struct Pending<Reply> {
+    pub request: Request,
+    pub arrived: Instant,
+    pub reply: Reply,
+}
+
+/// Batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Hard cap — the lowered executable's batch dimension.
+    pub max_batch: usize,
+    /// Max time to hold a non-empty partial batch.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Drain the next batch from `rx` under `policy`. Blocks for the first
+/// request (or returns None when the queue is closed), then collects more
+/// until the batch fills or `max_wait` elapses.
+pub fn next_batch<R>(rx: &Receiver<Pending<R>>, policy: &BatchPolicy) -> Option<Vec<Pending<R>>> {
+    let first = rx.recv().ok()?;
+    let deadline = Instant::now() + policy.max_wait;
+    let mut batch = vec![first];
+    while batch.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(p) => batch.push(p),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn req(id: u64) -> Pending<()> {
+        Pending { request: Request { id, tokens: vec![1, 2] }, arrived: Instant::now(), reply: () }
+    }
+
+    #[test]
+    fn fills_up_to_max_batch() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(req(i)).unwrap();
+        }
+        let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(50) };
+        let b1 = next_batch(&rx, &policy).unwrap();
+        assert_eq!(b1.len(), 4);
+        assert_eq!(b1[0].request.id, 0);
+        let b2 = next_batch(&rx, &policy).unwrap();
+        assert_eq!(b2.len(), 4);
+        let b3 = next_batch(&rx, &policy).unwrap();
+        assert_eq!(b3.len(), 2, "partial batch after queue drains");
+    }
+
+    #[test]
+    fn partial_batch_after_timeout() {
+        let (tx, rx) = channel();
+        tx.send(req(1)).unwrap();
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) };
+        let t0 = Instant::now();
+        let b = next_batch(&rx, &policy).unwrap();
+        assert_eq!(b.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(4), "waited for more work");
+        drop(tx);
+    }
+
+    #[test]
+    fn closed_queue_yields_none() {
+        let (tx, rx) = channel::<Pending<()>>();
+        drop(tx);
+        assert!(next_batch(&rx, &BatchPolicy::default()).is_none());
+    }
+
+    #[test]
+    fn late_arrivals_join_the_batch() {
+        let (tx, rx) = channel();
+        tx.send(req(1)).unwrap();
+        let handle = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(2));
+            tx.send(req(2)).unwrap();
+            tx // keep alive
+        });
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(40) };
+        let b = next_batch(&rx, &policy).unwrap();
+        assert_eq!(b.len(), 2, "late request should join");
+        drop(handle.join().unwrap());
+    }
+
+    #[test]
+    fn property_batches_preserve_order_and_cover_all() {
+        // Proptest-style invariant: for random request streams, batching
+        // must preserve FIFO order and lose nothing.
+        use crate::tensor::Rng;
+        let mut rng = Rng::seed(99);
+        for _ in 0..20 {
+            let n = 1 + rng.below(30);
+            let (tx, rx) = channel();
+            for i in 0..n {
+                tx.send(req(i as u64)).unwrap();
+            }
+            drop(tx);
+            let policy = BatchPolicy {
+                max_batch: 1 + rng.below(7),
+                max_wait: Duration::from_micros(200),
+            };
+            let mut seen = Vec::new();
+            while let Some(b) = next_batch(&rx, &policy) {
+                assert!(b.len() <= policy.max_batch);
+                seen.extend(b.iter().map(|p| p.request.id));
+            }
+            let want: Vec<u64> = (0..n as u64).collect();
+            assert_eq!(seen, want);
+        }
+    }
+}

@@ -1,0 +1,119 @@
+//! Serving metrics: lock-light latency histogram + throughput counters.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Exponential-bucket latency histogram (1µs .. ~17s) + counters.
+/// All atomic: writers never block each other or the readers.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_requests: AtomicU64,
+    /// buckets[i] counts latencies in [2^i, 2^(i+1)) µs.
+    buckets: [AtomicU64; 25],
+    total_us: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests.fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_latency(&self, lat: Duration) {
+        self.responses.fetch_add(1, Ordering::Relaxed);
+        let us = lat.as_micros().max(1) as u64;
+        self.total_us.fetch_add(us, Ordering::Relaxed);
+        let bucket = (63 - us.leading_zeros() as usize).min(24);
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Percentile from the histogram (approximate: bucket upper bound).
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        let total: u64 = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * p).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        1u64 << 25
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let n = self.responses.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.total_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} responses={} batches={} mean_batch={:.2} lat(mean={:.0}us p50<{}us p99<{}us)",
+            self.requests.load(Ordering::Relaxed),
+            self.responses.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_size(),
+            self.mean_us(),
+            self.percentile_us(0.5),
+            self.percentile_us(0.99),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_buckets_and_percentiles() {
+        let m = Metrics::new();
+        for us in [10u64, 100, 100, 1000, 10_000] {
+            m.record_latency(Duration::from_micros(us));
+        }
+        assert_eq!(m.responses.load(Ordering::Relaxed), 5);
+        // p50 falls in the 100µs bucket → upper bound 128.
+        assert_eq!(m.percentile_us(0.5), 128);
+        assert!(m.percentile_us(0.99) >= 8192);
+        assert!((m.mean_us() - 2242.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn batch_accounting() {
+        let m = Metrics::new();
+        m.record_batch(4);
+        m.record_batch(8);
+        assert_eq!(m.mean_batch_size(), 6.0);
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.percentile_us(0.99), 0);
+        assert_eq!(m.mean_us(), 0.0);
+    }
+}

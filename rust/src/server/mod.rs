@@ -1,0 +1,6 @@
+//! Serving coordinator: TCP protocol, request router, dynamic batcher.
+
+pub mod batcher;
+pub mod metrics;
+pub mod protocol;
+pub mod service;

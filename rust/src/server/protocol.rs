@@ -1,0 +1,133 @@
+//! Wire protocol of the serving coordinator: length-prefixed binary frames
+//! over TCP (the offline image has no HTTP/serde crates; a purpose-built
+//! frame format keeps the hot path allocation-light).
+//!
+//! Frame layout (little-endian):
+//! ```text
+//! request : u32 len | u64 id | u16 n_tokens | n_tokens × u32
+//! response: u32 len | u64 id | u32 token | f32 logprob | u32 latency_us
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+/// A completion request: score the context, return the argmax next token.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    pub tokens: Vec<usize>,
+}
+
+/// The response: greedy next token + its log-probability + server latency.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Response {
+    pub id: u64,
+    pub token: u32,
+    pub logprob: f32,
+    pub latency_us: u32,
+}
+
+impl Request {
+    pub fn encode(&self) -> Vec<u8> {
+        let body_len = 8 + 2 + 4 * self.tokens.len();
+        let mut buf = Vec::with_capacity(4 + body_len);
+        buf.extend_from_slice(&(body_len as u32).to_le_bytes());
+        buf.extend_from_slice(&self.id.to_le_bytes());
+        buf.extend_from_slice(&(self.tokens.len() as u16).to_le_bytes());
+        for t in &self.tokens {
+            buf.extend_from_slice(&(*t as u32).to_le_bytes());
+        }
+        buf
+    }
+
+    pub fn read_from<R: Read>(r: &mut R) -> Result<Request> {
+        let mut len4 = [0u8; 4];
+        r.read_exact(&mut len4).context("read frame length")?;
+        let len = u32::from_le_bytes(len4) as usize;
+        if len < 10 || len > 1 << 20 {
+            bail!("bad request frame length {len}");
+        }
+        let mut body = vec![0u8; len];
+        r.read_exact(&mut body).context("read frame body")?;
+        let id = u64::from_le_bytes(body[0..8].try_into()?);
+        let n = u16::from_le_bytes(body[8..10].try_into()?) as usize;
+        if body.len() != 10 + 4 * n {
+            bail!("request frame length mismatch");
+        }
+        let tokens = body[10..]
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()) as usize)
+            .collect();
+        Ok(Request { id, tokens })
+    }
+}
+
+impl Response {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(4 + 20);
+        buf.extend_from_slice(&20u32.to_le_bytes());
+        buf.extend_from_slice(&self.id.to_le_bytes());
+        buf.extend_from_slice(&self.token.to_le_bytes());
+        buf.extend_from_slice(&self.logprob.to_le_bytes());
+        buf.extend_from_slice(&self.latency_us.to_le_bytes());
+        buf
+    }
+
+    pub fn read_from<R: Read>(r: &mut R) -> Result<Response> {
+        let mut len4 = [0u8; 4];
+        r.read_exact(&mut len4).context("read frame length")?;
+        let len = u32::from_le_bytes(len4) as usize;
+        if len != 20 {
+            bail!("bad response frame length {len}");
+        }
+        let mut body = [0u8; 20];
+        r.read_exact(&mut body)?;
+        Ok(Response {
+            id: u64::from_le_bytes(body[0..8].try_into()?),
+            token: u32::from_le_bytes(body[8..12].try_into()?),
+            logprob: f32::from_le_bytes(body[12..16].try_into()?),
+            latency_us: u32::from_le_bytes(body[16..20].try_into()?),
+        })
+    }
+
+    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
+        w.write_all(&self.encode())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn request_roundtrip() {
+        let req = Request { id: 42, tokens: vec![1, 2, 300, 7] };
+        let bytes = req.encode();
+        let got = Request::read_from(&mut Cursor::new(bytes)).unwrap();
+        assert_eq!(got, req);
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let resp = Response { id: 7, token: 123, logprob: -1.5, latency_us: 987 };
+        let bytes = resp.encode();
+        let got = Response::read_from(&mut Cursor::new(bytes)).unwrap();
+        assert_eq!(got, resp);
+    }
+
+    #[test]
+    fn rejects_garbage_length() {
+        let mut bytes = vec![0xFF, 0xFF, 0xFF, 0x7F];
+        bytes.extend_from_slice(&[0; 16]);
+        assert!(Request::read_from(&mut Cursor::new(bytes)).is_err());
+    }
+
+    #[test]
+    fn empty_token_request_roundtrip() {
+        let req = Request { id: 0, tokens: vec![] };
+        let got = Request::read_from(&mut Cursor::new(req.encode())).unwrap();
+        assert_eq!(got.tokens.len(), 0);
+    }
+}

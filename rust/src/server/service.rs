@@ -1,0 +1,280 @@
+//! The serving coordinator: TCP listener → router → dynamic batcher →
+//! PJRT worker → per-connection reply writers. Thread-based (std only);
+//! Python is nowhere on this path.
+//!
+//! Threading note: the xla crate's PJRT handles are `!Send` (Rc-backed), so
+//! the worker thread owns the *entire* PJRT lifecycle — client, compiled
+//! executable and parameter literals are created inside the worker from
+//! plain-data inputs (artifact path + `ParamStore`), and only plain data
+//! crosses thread boundaries.
+
+use super::batcher::{next_batch, BatchPolicy, Pending};
+use super::metrics::Metrics;
+use super::protocol::{Request, Response};
+use crate::runtime::artifact::{Manifest, ParamStore};
+use crate::runtime::client::{literal_f32, tokens_literal, Executable, Runtime};
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Server configuration.
+pub struct ServerConfig {
+    /// Artifact to serve, e.g. "fwd_bf16.hlo.txt" or "fwd_hif4.hlo.txt".
+    pub artifact: String,
+    pub policy: BatchPolicy,
+}
+
+type ReplyHandle = Arc<Mutex<TcpStream>>;
+
+/// A running server (worker + listener threads).
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    pub metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+    listener_thread: Option<JoinHandle<()>>,
+    worker_thread: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Compile the artifact on a dedicated worker thread, bind `addr`
+    /// (port 0 for ephemeral) and start serving `params`.
+    pub fn start(
+        artifacts_dir: &Path,
+        cfg: ServerConfig,
+        params: &ParamStore,
+        addr: &str,
+    ) -> Result<Server> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let metrics = Arc::new(Metrics::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = channel::<Pending<ReplyHandle>>();
+
+        // Worker: owns PJRT client + executable + parameter literals.
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let worker_metrics = Arc::clone(&metrics);
+        let (batch, seq, vocab) = (manifest.batch, manifest.seq, manifest.vocab);
+        let policy = cfg.policy;
+        let worker_stop = Arc::clone(&stop);
+        let artifact_path: PathBuf = manifest.artifact(&cfg.artifact);
+        let worker_params = params.clone();
+        let worker_thread = std::thread::Builder::new()
+            .name("hif4-worker".into())
+            .spawn(move || {
+                let setup = (|| -> Result<(Executable, Vec<xla::Literal>)> {
+                    let runtime = Runtime::cpu()?;
+                    let exe = runtime.load(&artifact_path)?;
+                    let literals = worker_params.literals()?;
+                    Ok((exe, literals))
+                })();
+                match setup {
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                    }
+                    Ok((exe, param_literals)) => {
+                        let _ = ready_tx.send(Ok(()));
+                        worker_loop(
+                            exe,
+                            param_literals,
+                            rx,
+                            policy,
+                            batch,
+                            seq,
+                            vocab,
+                            worker_metrics,
+                            worker_stop,
+                        );
+                    }
+                }
+            })
+            .context("spawn worker")?;
+        ready_rx.recv().context("worker died during setup")??;
+
+        // Listener: a thread per connection reads requests into the queue.
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let listen_metrics = Arc::clone(&metrics);
+        let listen_stop = Arc::clone(&stop);
+        let listener_thread = std::thread::Builder::new()
+            .name("hif4-listener".into())
+            .spawn(move || listener_loop(listener, tx, listen_metrics, listen_stop))
+            .context("spawn listener")?;
+
+        Ok(Server {
+            addr: local,
+            metrics,
+            stop,
+            listener_thread: Some(listener_thread),
+            worker_thread: Some(worker_thread),
+        })
+    }
+
+    /// Signal shutdown (threads exit on their next poll/disconnect).
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Poke the listener out of accept() with a dummy connection.
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+        if let Some(t) = self.listener_thread.take() {
+            let _ = t.join();
+        }
+        if let Some(t) = self.worker_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn listener_loop(
+    listener: TcpListener,
+    tx: Sender<Pending<ReplyHandle>>,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+) {
+    for stream in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        let tx = tx.clone();
+        let metrics = Arc::clone(&metrics);
+        let _ = std::thread::Builder::new().name("hif4-conn".into()).spawn(move || {
+            let reader = stream.try_clone().expect("clone stream");
+            let reply: ReplyHandle = Arc::new(Mutex::new(stream));
+            let mut reader = std::io::BufReader::new(reader);
+            // Read frames until the client hangs up.
+            while let Ok(req) = Request::read_from(&mut reader) {
+                metrics.record_request();
+                let pending =
+                    Pending { request: req, arrived: Instant::now(), reply: Arc::clone(&reply) };
+                if tx.send(pending).is_err() {
+                    break;
+                }
+            }
+        });
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    exe: Executable,
+    param_literals: Vec<xla::Literal>,
+    rx: std::sync::mpsc::Receiver<Pending<ReplyHandle>>,
+    policy: BatchPolicy,
+    batch: usize,
+    seq: usize,
+    vocab: usize,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+) {
+    while !stop.load(Ordering::SeqCst) {
+        let Some(pending) = next_batch(&rx, &policy) else { break };
+        metrics.record_batch(pending.len());
+        match run_batch(&exe, &param_literals, &pending, batch, seq, vocab) {
+            Ok(responses) => {
+                for (p, mut resp) in pending.iter().zip(responses) {
+                    resp.latency_us = p.arrived.elapsed().as_micros() as u32;
+                    metrics.record_latency(p.arrived.elapsed());
+                    if let Ok(mut s) = p.reply.lock() {
+                        let _ = resp.write_to(&mut *s);
+                        let _ = s.flush();
+                    }
+                }
+            }
+            Err(e) => {
+                eprintln!("batch execution failed: {e:#}");
+            }
+        }
+    }
+}
+
+/// Execute one padded batch and extract each request's next-token argmax.
+pub fn run_batch(
+    exe: &Executable,
+    param_literals: &[xla::Literal],
+    pending: &[Pending<impl Sized>],
+    batch: usize,
+    seq: usize,
+    vocab: usize,
+) -> Result<Vec<Response>> {
+    // Pad the request list to the lowered batch size.
+    let mut token_rows: Vec<Vec<usize>> = pending
+        .iter()
+        .map(|p| {
+            let mut t = p.request.tokens.clone();
+            t.truncate(seq);
+            t
+        })
+        .collect();
+    token_rows.resize_with(batch, || vec![0]);
+    let tokens = tokens_literal(&token_rows, seq)?;
+    // Borrow-based input list: parameter literals are built once per server
+    // lifetime, only the token literal is fresh per batch (§Perf).
+    let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(param_literals.len() + 1);
+    inputs.extend(param_literals.iter());
+    inputs.push(&tokens);
+    let outputs = exe.run(&inputs)?;
+    let logits = literal_f32(&outputs[0])?; // (batch, seq, vocab)
+    let mut responses = Vec::with_capacity(pending.len());
+    for (bi, p) in pending.iter().enumerate() {
+        let last = p.request.tokens.len().clamp(1, seq) - 1;
+        let row = &logits[bi * seq * vocab + last * vocab..][..vocab];
+        let (mut best, mut best_v) = (0usize, f32::NEG_INFINITY);
+        for (t, v) in row.iter().enumerate() {
+            if *v > best_v {
+                best = t;
+                best_v = *v;
+            }
+        }
+        // log-softmax value at the argmax.
+        let denom: f32 = row.iter().map(|v| (v - best_v).exp()).sum();
+        responses.push(Response {
+            id: p.request.id,
+            token: best as u32,
+            logprob: -denom.ln(),
+            latency_us: 0,
+        });
+    }
+    Ok(responses)
+}
+
+/// Blocking client for examples/benches: send requests, read responses.
+pub struct Client {
+    stream: TcpStream,
+    reader: std::io::BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        let reader = std::io::BufReader::new(stream.try_clone()?);
+        Ok(Client { stream, reader })
+    }
+
+    /// Fire a request without waiting (pipelining).
+    pub fn send(&mut self, req: &Request) -> Result<()> {
+        self.stream.write_all(&req.encode())?;
+        Ok(())
+    }
+
+    /// Read the next response.
+    pub fn recv(&mut self) -> Result<Response> {
+        Response::read_from(&mut self.reader)
+    }
+
+    /// Round-trip one request.
+    pub fn call(&mut self, req: &Request) -> Result<Response> {
+        self.send(req)?;
+        self.recv()
+    }
+}

@@ -1,0 +1,160 @@
+//! f32 GEMM — the compute substrate for the rust-native model forward
+//! (calibration + eval paths) and for GPTQ's Hessian accumulation.
+//!
+//! `C = A (m×k) · B (k×n)`. The hot path is `matmul`, a cache-blocked,
+//! B-packed kernel tuned in the §Perf pass; `matmul_naive` is kept as the
+//! correctness oracle.
+
+use super::matrix::Matrix;
+
+/// Naive triple loop — correctness oracle for property tests.
+pub fn matmul_naive(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "inner dims must agree");
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for j in 0..b.cols {
+            let mut acc = 0f32;
+            for p in 0..a.cols {
+                acc += a.at(i, p) * b.at(p, j);
+            }
+            c.data[i * b.cols + j] = acc;
+        }
+    }
+    c
+}
+
+/// Cache-blocked GEMM with an i-k-j loop order (unit-stride inner loop over
+/// both B and C rows — autovectorizes well on a single core).
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "inner dims must agree");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    const KB: usize = 256;
+    const JB: usize = 512;
+    for j0 in (0..n).step_by(JB) {
+        let j1 = (j0 + JB).min(n);
+        for p0 in (0..k).step_by(KB) {
+            let p1 = (p0 + KB).min(k);
+            for i in 0..m {
+                let arow = &a.data[i * k..(i + 1) * k];
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                for p in p0..p1 {
+                    let av = arow[p];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.data[p * n..(p + 1) * n];
+                    for j in j0..j1 {
+                        crow[j] += av * brow[j];
+                    }
+                }
+            }
+        }
+    }
+    c
+}
+
+/// `C = A · Bᵀ` with B given row-major (so B's rows are the reduction
+/// vectors — the natural layout for weight matrices stored out_features ×
+/// in_features, as linear layers do).
+pub fn matmul_bt(a: &Matrix, b_t: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b_t.cols, "inner dims must agree");
+    let (m, k, n) = (a.rows, a.cols, b_t.rows);
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let crow = &mut c.data[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &b_t.data[j * k..(j + 1) * k];
+            crow[j] = dot(arow, brow);
+        }
+    }
+    c
+}
+
+/// Unrolled dot product (4-way accumulators to break the dependency chain).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    for c in 0..chunks {
+        let i = c * 8;
+        s0 += a[i] * b[i] + a[i + 4] * b[i + 4];
+        s1 += a[i + 1] * b[i + 1] + a[i + 5] * b[i + 5];
+        s2 += a[i + 2] * b[i + 2] + a[i + 6] * b[i + 6];
+        s3 += a[i + 3] * b[i + 3] + a[i + 7] * b[i + 7];
+    }
+    let mut tail = 0f32;
+    for i in chunks * 8..n {
+        tail += a[i] * b[i];
+    }
+    (s0 + s1) + (s2 + s3) + tail
+}
+
+/// y += alpha * x (axpy).
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * *xi;
+    }
+}
+
+/// Y += alpha * X over whole matrices.
+#[inline]
+pub fn axpy_mat(alpha: f32, x: &Matrix, y: &mut Matrix) {
+    debug_assert_eq!((x.rows, x.cols), (y.rows, y.cols));
+    axpy(alpha, &x.data, &mut y.data);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Rng;
+
+    fn assert_close(a: &Matrix, b: &Matrix, tol: f32) {
+        assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() <= tol * (1.0 + x.abs()), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn blocked_matches_naive() {
+        let mut rng = Rng::seed(12);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 7), (17, 33, 9), (64, 128, 32)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            assert_close(&matmul(&a, &b), &matmul_naive(&a, &b), 1e-4);
+        }
+    }
+
+    #[test]
+    fn bt_matches_naive() {
+        let mut rng = Rng::seed(13);
+        let a = Matrix::randn(9, 31, 1.0, &mut rng);
+        let b = Matrix::randn(31, 14, 1.0, &mut rng);
+        let bt = b.transpose();
+        assert_close(&matmul_bt(&a, &bt), &matmul_naive(&a, &b), 1e-4);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::seed(14);
+        let a = Matrix::randn(6, 6, 1.0, &mut rng);
+        assert_close(&matmul(&a, &Matrix::eye(6)), &a, 1e-6);
+    }
+
+    #[test]
+    fn dot_unrolled_matches_scalar() {
+        let mut rng = Rng::seed(15);
+        for n in [0, 1, 7, 8, 9, 63, 64, 100] {
+            let a: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - want).abs() < 1e-3, "n={n}");
+        }
+    }
+}

@@ -1,0 +1,143 @@
+//! Row-major f32 matrix — the tensor substrate every rust-side component
+//! (quantizers, GPTQ, the rust-native transformer, the eval harness) builds
+//! on. Deliberately minimal: contiguous storage, explicit shapes, no
+//! broadcasting magic.
+
+use super::rng::Rng;
+
+/// A dense row-major matrix of f32.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Matrix {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn filled(rows: usize, cols: usize, v: f32) -> Matrix {
+        Matrix { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    /// Identity (square).
+    pub fn eye(n: usize) -> Matrix {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// N(0, sigma²) entries.
+    pub fn randn(rows: usize, cols: usize, sigma: f32, rng: &mut Rng) -> Matrix {
+        let mut m = Matrix::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, sigma);
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        t
+    }
+
+    /// Peak |x| over the whole matrix.
+    pub fn amax(&self) -> f32 {
+        self.data.iter().fold(0f32, |m, x| m.max(x.abs()))
+    }
+
+    /// Frobenius-mean squared error against another matrix.
+    pub fn mse(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        crate::formats::mse(&self.data, &other.data)
+    }
+
+    /// Scale all entries in place.
+    pub fn scale_inplace(&mut self, s: f32) {
+        for x in self.data.iter_mut() {
+            *x *= s;
+        }
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_indexing() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.at(0, 0), 1.0);
+        assert_eq!(m.at(1, 2), 6.0);
+        assert_eq!(m.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::seed(8);
+        let m = Matrix::randn(5, 7, 1.0, &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn eye_and_amax() {
+        let i = Matrix::eye(4);
+        assert_eq!(i.at(2, 2), 1.0);
+        assert_eq!(i.at(2, 3), 0.0);
+        assert_eq!(i.amax(), 1.0);
+    }
+
+    #[test]
+    fn randn_statistics() {
+        let mut rng = Rng::seed(10);
+        let m = Matrix::randn(100, 100, 0.02, &mut rng);
+        let mean: f64 = m.data.iter().map(|x| *x as f64).sum::<f64>() / m.len() as f64;
+        let var: f64 =
+            m.data.iter().map(|x| (*x as f64 - mean).powi(2)).sum::<f64>() / m.len() as f64;
+        assert!(mean.abs() < 1e-3);
+        assert!((var.sqrt() - 0.02).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,8 @@
+//! Tensor substrate: dense matrices, deterministic RNG, gemm kernels.
+
+pub mod gemm;
+pub mod matrix;
+pub mod rng;
+
+pub use matrix::Matrix;
+pub use rng::Rng;

@@ -1,0 +1,147 @@
+//! Deterministic RNG substrate (no external crates in the offline image).
+//!
+//! SplitMix64 for uniform bits + Box–Muller for Gaussians. Every experiment
+//! seeds explicitly, so all tables/figures regenerate bit-identically.
+
+/// SplitMix64 PRNG with cached Gaussian (Box–Muller produces pairs).
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+    cached_normal: Option<f64>,
+}
+
+impl Rng {
+    pub fn seed(seed: u64) -> Rng {
+        Rng { state: seed.wrapping_add(0x9E3779B97F4A7C15), cached_normal: None }
+    }
+
+    /// Next raw 64 bits (SplitMix64).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.cached_normal.take() {
+            return z;
+        }
+        // Avoid log(0).
+        let u1 = loop {
+            let u = self.uniform();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        let u2 = self.uniform();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let (s, c) = (2.0 * core::f64::consts::PI * u2).sin_cos();
+        self.cached_normal = Some(r * s);
+        r * c
+    }
+
+    /// Fill a slice with N(0, sigma²) samples.
+    pub fn fill_normal(&mut self, out: &mut [f32], sigma: f32) {
+        for x in out.iter_mut() {
+            *x = (self.normal() as f32) * sigma;
+        }
+    }
+
+    /// Sample from a categorical distribution given cumulative weights.
+    pub fn categorical(&mut self, cumulative: &[f64]) -> usize {
+        let total = *cumulative.last().expect("non-empty");
+        let u = self.uniform() * total;
+        match cumulative.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+            Ok(i) => (i + 1).min(cumulative.len() - 1),
+            Err(i) => i.min(cumulative.len() - 1),
+        }
+    }
+
+    /// Fork a child RNG (stable stream splitting for parallel workers).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        Rng::seed(self.next_u64() ^ stream.wrapping_mul(0xA24BAED4963EE407))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::seed(1);
+        let mut b = Rng::seed(1);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut r = Rng::seed(2);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::seed(3);
+        let n = 50_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = r.normal();
+            s1 += z;
+            s2 += z * z;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut r = Rng::seed(4);
+        let cum = [1.0, 3.0, 6.0]; // weights 1, 2, 3
+        let mut counts = [0usize; 3];
+        for _ in 0..30_000 {
+            counts[r.categorical(&cum)] += 1;
+        }
+        assert!((counts[0] as f64 / 30_000.0 - 1.0 / 6.0).abs() < 0.02);
+        assert!((counts[2] as f64 / 30_000.0 - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn forks_are_independent_streams() {
+        let mut parent = Rng::seed(9);
+        let mut c1 = parent.fork(1);
+        let mut c2 = parent.fork(2);
+        let a: Vec<u64> = (0..10).map(|_| c1.next_u64()).collect();
+        let b: Vec<u64> = (0..10).map(|_| c2.next_u64()).collect();
+        assert_ne!(a, b);
+    }
+}

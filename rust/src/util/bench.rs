@@ -1,0 +1,197 @@
+//! Hand-rolled benchmark harness (the offline image has no `criterion`).
+//!
+//! Each `cargo bench` target is a `harness = false` binary that uses
+//! [`BenchRunner`] for timing (warmup + timed iterations, mean/p50/p99) and
+//! [`Table`] for paper-style table output. Results print to stdout so
+//! `cargo bench | tee bench_output.txt` records everything.
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    /// Optional throughput denominator (elements per iteration).
+    pub elems_per_iter: Option<u64>,
+}
+
+impl BenchStats {
+    pub fn throughput(&self) -> Option<f64> {
+        self.elems_per_iter.map(|e| e as f64 / self.mean.as_secs_f64())
+    }
+
+    pub fn report(&self) -> String {
+        let tp = match self.throughput() {
+            Some(t) if t >= 1e9 => format!("  {:7.2} Gelem/s", t / 1e9),
+            Some(t) if t >= 1e6 => format!("  {:7.2} Melem/s", t / 1e6),
+            Some(t) => format!("  {:7.2} Kelem/s", t / 1e3),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>10.3?} mean  {:>10.3?} p50  {:>10.3?} p99{}",
+            self.name, self.mean, self.p50, self.p99, tp
+        )
+    }
+}
+
+/// Warmup + timed-iteration runner.
+pub struct BenchRunner {
+    /// Minimum measurement time per case.
+    pub min_time: Duration,
+    /// Maximum iterations per case (bounds very fast cases).
+    pub max_iters: usize,
+    pub warmup_iters: usize,
+}
+
+impl Default for BenchRunner {
+    fn default() -> Self {
+        BenchRunner {
+            min_time: Duration::from_millis(300),
+            max_iters: 10_000,
+            warmup_iters: 3,
+        }
+    }
+}
+
+impl BenchRunner {
+    /// Quick-mode runner for CI-ish runs (HIF4_BENCH_QUICK=1).
+    pub fn from_env() -> BenchRunner {
+        if std::env::var("HIF4_BENCH_QUICK").is_ok() {
+            BenchRunner {
+                min_time: Duration::from_millis(50),
+                max_iters: 200,
+                warmup_iters: 1,
+            }
+        } else {
+            BenchRunner::default()
+        }
+    }
+
+    /// Time `f` and return stats. `f` must do one unit of work per call.
+    pub fn run<F: FnMut()>(&self, name: &str, elems_per_iter: Option<u64>, mut f: F) -> BenchStats {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.min_time && samples.len() < self.max_iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed());
+        }
+        samples.sort();
+        let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+        let p50 = samples[samples.len() / 2];
+        let p99 = samples[(samples.len() * 99 / 100).min(samples.len() - 1)];
+        let stats = BenchStats {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean,
+            p50,
+            p99,
+            elems_per_iter,
+        };
+        println!("{}", stats.report());
+        stats
+    }
+}
+
+/// Paper-style fixed-width table printer.
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render with per-column widths.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n=== {} ===\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runner_measures() {
+        let r = BenchRunner {
+            min_time: Duration::from_millis(5),
+            max_iters: 100,
+            warmup_iters: 1,
+        };
+        let mut x = 0u64;
+        let s = r.run("spin", Some(1000), || {
+            for i in 0..1000u64 {
+                x = x.wrapping_add(i);
+            }
+        });
+        assert!(s.iters > 0);
+        assert!(s.mean > Duration::ZERO);
+        assert!(s.throughput().unwrap() > 0.0);
+        assert!(x > 0 || x == 0); // keep the side effect alive
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["name", "val"]);
+        t.row(vec!["a".into(), "1.00".into()]);
+        t.row(vec!["long-name".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("=== Demo ==="));
+        assert!(s.contains("long-name"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

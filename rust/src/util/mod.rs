@@ -1,0 +1,7 @@
+//! Offline-image substrates: CLI parsing, thread pool, mini property-test
+//! framework (the crate cache has no clap/tokio/proptest/criterion).
+
+pub mod bench;
+pub mod cli;
+pub mod proptest;
+pub mod threadpool;

@@ -1,0 +1,166 @@
+//! Mini property-testing framework (the offline image has no `proptest`).
+//!
+//! Seeded case generation + greedy shrinking on failure. Used for the
+//! coordinator/batching invariants and the format-roundtrip properties.
+//!
+//! ```ignore
+//! check(200, seed, gen_vec_f32(64, 10.0), |v| roundtrip_ok(v));
+//! ```
+
+use crate::tensor::rng::Rng;
+
+/// A generator produces a case from the RNG; shrink proposes smaller cases.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate simplifications of a failing case (nearest-first).
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let _ = v;
+        Vec::new()
+    }
+}
+
+/// Run `cases` random cases of `gen` through `prop`; on failure, shrink
+/// greedily and panic with the minimal counterexample.
+pub fn check<G, P>(cases: usize, seed: u64, gen: &G, prop: P)
+where
+    G: Gen,
+    P: Fn(&G::Value) -> bool,
+{
+    let mut rng = Rng::seed(seed);
+    for case in 0..cases {
+        let v = gen.generate(&mut rng);
+        if prop(&v) {
+            continue;
+        }
+        // Shrink loop: take the first failing simplification, repeat.
+        let mut minimal = v;
+        'shrinking: loop {
+            for cand in gen.shrink(&minimal) {
+                if !prop(&cand) {
+                    minimal = cand;
+                    continue 'shrinking;
+                }
+            }
+            break;
+        }
+        panic!("property failed at case {case} (seed {seed}); minimal counterexample: {minimal:?}");
+    }
+}
+
+/// Generator: f32 vectors of fixed length, uniform in [-amp, amp], with a
+/// bias toward special values (0, ±amp, tiny) that trip format edge cases.
+pub struct VecF32 {
+    pub len: usize,
+    pub amp: f32,
+}
+
+pub fn gen_vec_f32(len: usize, amp: f32) -> VecF32 {
+    VecF32 { len, amp }
+}
+
+impl Gen for VecF32 {
+    type Value = Vec<f32>;
+
+    fn generate(&self, rng: &mut Rng) -> Vec<f32> {
+        (0..self.len)
+            .map(|_| match rng.below(10) {
+                0 => 0.0,
+                1 => self.amp,
+                2 => -self.amp,
+                3 => self.amp * 1e-6,
+                _ => ((rng.uniform() * 2.0 - 1.0) as f32) * self.amp,
+            })
+            .collect()
+    }
+
+    fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        // Zero one element at a time (keeps the length fixed — block
+        // formats need exact group sizes).
+        for i in 0..v.len() {
+            if v[i] != 0.0 {
+                let mut c = v.clone();
+                c[i] = 0.0;
+                out.push(c);
+            }
+            if out.len() >= 16 {
+                break;
+            }
+        }
+        // Halve all magnitudes.
+        if v.iter().any(|x| x.abs() > 1e-30) {
+            out.push(v.iter().map(|x| x * 0.5).collect());
+        }
+        out
+    }
+}
+
+/// Generator: usize in [lo, hi).
+pub struct RangeUsize {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Gen for RangeUsize {
+    type Value = usize;
+
+    fn generate(&self, rng: &mut Rng) -> usize {
+        self.lo + rng.below(self.hi - self.lo)
+    }
+
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (*v - self.lo) / 2);
+        }
+        out.dedup();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(100, 1, &gen_vec_f32(8, 5.0), |v| v.len() == 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn failing_property_shrinks() {
+        // Fails whenever any element is nonzero; shrinking should drive
+        // toward few nonzero entries before panicking.
+        check(100, 2, &gen_vec_f32(8, 5.0), |v| v.iter().all(|x| *x == 0.0));
+    }
+
+    #[test]
+    fn range_gen_in_bounds() {
+        let g = RangeUsize { lo: 3, hi: 10 };
+        check(200, 3, &g, |v| (3..10).contains(v));
+    }
+
+    #[test]
+    fn format_soundness_properties() {
+        // For every format and any finite input: output is finite, zeros
+        // stay zero, signs never flip, magnitudes never overshoot the input
+        // peak by more than the scale-rounding slack.
+        use crate::formats::{Format, QuantScheme};
+        for f in [Format::HiF4, Format::Nvfp4, Format::Mxfp4, Format::Mx4, Format::VanillaBfp] {
+            let scheme = QuantScheme::direct(f);
+            check(60, 7, &gen_vec_f32(f.group(), 100.0), |v| {
+                let q = scheme.quant_dequant_vec(v);
+                let amax = v.iter().fold(0f32, |m, x| m.max(x.abs()));
+                q.iter().zip(v).all(|(o, i)| {
+                    o.is_finite()
+                        && (*i != 0.0 || *o == 0.0)
+                        && (*o * *i >= 0.0)
+                        && o.abs() <= 2.0 * amax + 1e-6
+                })
+            });
+        }
+    }
+}
