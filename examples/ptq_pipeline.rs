@@ -7,8 +7,8 @@
 //! ```
 
 use hif4::eval::tasks::Task;
-use hif4::quant::experiment::{self, ExperimentConfig, QuantType};
 use hif4::model::zoo;
+use hif4::quant::experiment::{self, ExperimentConfig, QuantType};
 use hif4::util::bench::Table;
 use hif4::util::cli::Args;
 

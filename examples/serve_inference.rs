@@ -54,6 +54,7 @@ fn main() -> anyhow::Result<()> {
         let cfg = ServerConfig {
             artifact: artifact.into(),
             policy: BatchPolicy { max_batch: manifest.batch, max_wait: Duration::from_millis(2) },
+            workers: args.get_parse("workers", 2),
         };
         let server = Server::start(&artifacts, cfg, &served, "127.0.0.1:0")?;
         println!("\n[{label}] serving {artifact} on {}", server.addr);
@@ -61,7 +62,7 @@ fn main() -> anyhow::Result<()> {
         // Deterministic request stream: benchmark-style contexts.
         let reqs_per_client = n_requests / n_clients;
         let t0 = Instant::now();
-        let tokens: Vec<Vec<u32>> = std::thread::scope(|s| {
+        let tokens: Vec<Vec<(u64, u32)>> = std::thread::scope(|s| {
             let mut handles = Vec::new();
             for c in 0..n_clients {
                 let addr = server.addr;
@@ -69,7 +70,9 @@ fn main() -> anyhow::Result<()> {
                     let mut rng = Rng::seed(1000 + c as u64);
                     let mut client = Client::connect(addr).unwrap();
                     let mut got = Vec::new();
-                    // Pipeline in windows of 8 to exercise batching.
+                    // Pipeline in windows of 8 to exercise batching. With
+                    // several PJRT workers, replies can arrive out of
+                    // request order, so keep the id with each token.
                     let mut outstanding = 0usize;
                     for i in 0..reqs_per_client {
                         let item = Task::AgreeHard.item(&mut rng);
@@ -81,13 +84,15 @@ fn main() -> anyhow::Result<()> {
                         outstanding += 1;
                         if outstanding == 8 {
                             for _ in 0..8 {
-                                got.push(client.recv().unwrap().token);
+                                let resp = client.recv().unwrap();
+                                got.push((resp.id, resp.token));
                             }
                             outstanding = 0;
                         }
                     }
                     for _ in 0..outstanding {
-                        got.push(client.recv().unwrap().token);
+                        let resp = client.recv().unwrap();
+                        got.push((resp.id, resp.token));
                     }
                     got
                 }));
@@ -101,7 +106,11 @@ fn main() -> anyhow::Result<()> {
             total as f64 / dt.as_secs_f64(),
             server.metrics.summary()
         );
-        agreement_tokens.push(tokens.into_iter().flatten().collect());
+        // Align by request id so the BF16/HiF4 comparison pairs the same
+        // request regardless of worker-pool reply interleaving.
+        let mut pairs: Vec<(u64, u32)> = tokens.into_iter().flatten().collect();
+        pairs.sort_unstable_by_key(|(id, _)| *id);
+        agreement_tokens.push(pairs.into_iter().map(|(_, t)| t).collect());
     }
 
     // Fidelity: how often does the HiF4-served model pick the same next

@@ -3,7 +3,10 @@
 //! bit-exactness against the dequantized reference, and measures simulator
 //! throughput of both flows and the quantized GEMMs built on them.
 
-use hif4::dotprod::qgemm::{hif4_gemm_bt, nvfp4_gemm_bt, HiF4Matrix, Nvfp4Matrix};
+use hif4::dotprod::qgemm::{
+    hif4_gemm_bt, hif4_gemm_bt_threads, nvfp4_gemm_bt, nvfp4_gemm_bt_threads, HiF4Matrix,
+    Nvfp4Matrix,
+};
 use hif4::dotprod::{hif4_flow, nvfp4_flow};
 use hif4::formats::rounding::RoundMode;
 use hif4::tensor::{Matrix, Rng};
@@ -42,8 +45,14 @@ fn main() {
     let ua = hif4::formats::hif4::quantize(&va, RoundMode::NearestEven);
     let ub = hif4::formats::hif4::quantize(&vb, RoundMode::NearestEven);
     assert_eq!(hif4_flow::dot(&ua, &ub), hif4_flow::dot_dequant_ref(&ua, &ub));
-    let ga: Vec<_> = va.chunks(16).map(|c| hif4::formats::nvfp4::quantize(c, RoundMode::NearestEven)).collect();
-    let gb: Vec<_> = vb.chunks(16).map(|c| hif4::formats::nvfp4::quantize(c, RoundMode::NearestEven)).collect();
+    let ga: Vec<_> = va
+        .chunks(16)
+        .map(|c| hif4::formats::nvfp4::quantize(c, RoundMode::NearestEven))
+        .collect();
+    let gb: Vec<_> = vb
+        .chunks(16)
+        .map(|c| hif4::formats::nvfp4::quantize(c, RoundMode::NearestEven))
+        .collect();
     assert_eq!(nvfp4_flow::dot64(&ga, &gb), nvfp4_flow::dot64_dequant_ref(&ga, &gb));
     println!("bit-exactness vs dequantized reference: OK\n");
 
@@ -70,4 +79,32 @@ fn main() {
     r.run(&format!("NVFP4 qgemm {m}x{k}x{nn} (flops)"), Some(flops), || {
         std::hint::black_box(nvfp4_gemm_bt(&na, &nb));
     });
+
+    // Parallel scaling of the blocked QGEMM: serial baseline vs the
+    // row-banded kernel on N threads (bit-identical outputs; see
+    // tests/parallel_parity.rs). On ≥4 cores the 4-thread run should be
+    // ≥2x the threads=1 rate at these shapes.
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let nthreads = cores.min(4).max(2);
+    println!("\nparallel scaling ({cores} cores available):");
+    let s1 = r.run(&format!("HiF4 qgemm {m}x{k}x{nn} threads=1"), Some(flops), || {
+        std::hint::black_box(hif4_gemm_bt_threads(&qa, &qb, 1));
+    });
+    let sn = r.run(&format!("HiF4 qgemm {m}x{k}x{nn} threads={nthreads}"), Some(flops), || {
+        std::hint::black_box(hif4_gemm_bt_threads(&qa, &qb, nthreads));
+    });
+    println!(
+        "  HiF4 qgemm speedup: {:.2}x on {nthreads} threads",
+        s1.mean.as_secs_f64() / sn.mean.as_secs_f64()
+    );
+    let s1 = r.run(&format!("NVFP4 qgemm {m}x{k}x{nn} threads=1"), Some(flops), || {
+        std::hint::black_box(nvfp4_gemm_bt_threads(&na, &nb, 1));
+    });
+    let sn = r.run(&format!("NVFP4 qgemm {m}x{k}x{nn} threads={nthreads}"), Some(flops), || {
+        std::hint::black_box(nvfp4_gemm_bt_threads(&na, &nb, nthreads));
+    });
+    println!(
+        "  NVFP4 qgemm speedup: {:.2}x on {nthreads} threads",
+        s1.mean.as_secs_f64() / sn.mean.as_secs_f64()
+    );
 }

@@ -34,7 +34,10 @@ fn main() {
     let base = shared_base().total_power();
     let hp = base + hif4_incremental().total_power();
     let np = base + nvfp4_incremental().total_power();
-    println!("\nincremental area: HiF4 {h:.0} vs NVFP4 {n:.0}  ->  ratio {:.2}x  (paper: ~3x)", n / h);
+    println!(
+        "\nincremental area: HiF4 {h:.0} vs NVFP4 {n:.0}  ->  ratio {:.2}x  (paper: ~3x)",
+        n / h
+    );
     println!(
         "whole-PE power:   HiF4 {hp:.0} vs NVFP4 {np:.0}  ->  reduction {:.1}%  (paper: ~10%)",
         100.0 * (1.0 - hp / np)

@@ -37,6 +37,10 @@ fn main() {
             let cfg = ServerConfig {
                 artifact: artifact.into(),
                 policy: BatchPolicy { max_batch, max_wait: Duration::from_millis(2) },
+                workers: std::env::var("HIF4_SERVE_WORKERS")
+                    .ok()
+                    .and_then(|w| w.parse().ok())
+                    .unwrap_or(1),
             };
             let server = Server::start(dir, cfg, &served, "127.0.0.1:0").unwrap();
             let mut client = Client::connect(server.addr).unwrap();

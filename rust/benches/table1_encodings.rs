@@ -26,7 +26,12 @@ fn main() {
     t.row(vec!["NaN".into(), format!("{:#04x}", e6m2::NAN_BITS), "N/A".into()]);
     t.row(vec![
         "Max Value".into(),
-        format!("2^{} x {} = {:.5e}", E6M2::MAX.exponent(), 1.0 + E6M2::MAX.mantissa() as f32 / 4.0, E6M2::MAX.to_f32()),
+        format!(
+            "2^{} x {} = {:.5e}",
+            E6M2::MAX.exponent(),
+            1.0 + E6M2::MAX.mantissa() as f32 / 4.0,
+            E6M2::MAX.to_f32()
+        ),
         format!("±{}", s1p2::MAX_ABS),
     ]);
     t.row(vec![

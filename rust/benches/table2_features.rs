@@ -61,7 +61,8 @@ fn main() {
             v[1] = p;
         }
         let q = scheme.quant_dequant_vec(&v);
-        println!("  {name:10}: {probe:.6e} -> {:.6e}  ({})", q[0], if q[0] == probe { "exact" } else { "inexact" });
+        let verdict = if q[0] == probe { "exact" } else { "inexact" };
+        println!("  {name:10}: {probe:.6e} -> {:.6e}  ({verdict})", q[0]);
         assert_eq!(q[0], probe, "{name} must roundtrip exactly");
     }
 }

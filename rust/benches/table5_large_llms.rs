@@ -11,7 +11,12 @@ use hif4::util::bench::Table;
 fn main() {
     let quick = std::env::var("HIF4_BENCH_QUICK").is_ok();
     let xcfg = if quick {
-        ExperimentConfig { train_steps: 60, eval_items: 20, eval_seeds: vec![1], ..Default::default() }
+        ExperimentConfig {
+            train_steps: 60,
+            eval_items: 20,
+            eval_seeds: vec![1],
+            ..Default::default()
+        }
     } else {
         ExperimentConfig { train_steps: 320, ..Default::default() }
     };

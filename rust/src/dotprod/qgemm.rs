@@ -6,12 +6,31 @@
 //! and `B` columns are quantized independently per K-block, mirroring how
 //! activations (row-major) and weights (stored transposed, out×in) are
 //! blocked on real hardware.
+//!
+//! ## Parallel blocked execution
+//!
+//! Quantization and the GEMMs are row-parallel: output rows fan out over
+//! contiguous bands via [`crate::util::threadpool::parallel_row_bands`],
+//! and within a band the kernels are cache-blocked — `JB` B-rows × `UB`
+//! K-units panels stay L1-hot while a band streams through its A rows.
+//! Every (i, j) accumulator still sums its unit dot products in ascending
+//! K order on a single thread, so results are **bit-identical** for every
+//! thread count (asserted by `tests/parallel_parity.rs`); the `*_threads`
+//! variants take an explicit count, the plain names use the process knob.
 
 use super::{hif4_flow, nvfp4_flow};
 use crate::formats::hif4::{self, HiF4Unit};
 use crate::formats::nvfp4::{self, Nvfp4Group};
 use crate::formats::rounding::RoundMode;
 use crate::tensor::Matrix;
+use crate::util::threadpool::{self, parallel_row_bands};
+
+/// B-rows per cache block of the quantized GEMM kernels.
+const JB: usize = 16;
+/// K-units per cache block (64-element HiF4 units / 16-element NVFP4
+/// groups; a multiple of [`nvfp4_flow::GROUPS_PER_PE`] so PE boundaries
+/// never straddle a block edge).
+const UB: usize = 16;
 
 /// A matrix quantized into HiF4 units along its rows (row-major; each row
 /// padded to a multiple of 64).
@@ -23,21 +42,35 @@ pub struct HiF4Matrix {
 }
 
 impl HiF4Matrix {
-    /// Quantize a row-major matrix along its rows.
+    /// Quantize a row-major matrix along its rows (row-parallel with the
+    /// process-default thread count; rows quantize independently, so the
+    /// result is identical for any count).
     pub fn quantize(m: &Matrix, mode: RoundMode) -> HiF4Matrix {
+        let work = m.rows * m.cols * threadpool::QUANT_WORK_PER_ELEM;
+        Self::quantize_threads(m, mode, threadpool::threads_for(work))
+    }
+
+    /// [`HiF4Matrix::quantize`] with an explicit thread count.
+    pub fn quantize_threads(m: &Matrix, mode: RoundMode, threads: usize) -> HiF4Matrix {
         let upr = m.cols.div_ceil(hif4::GROUP);
-        let mut units = Vec::with_capacity(m.rows * upr);
-        let mut buf = vec![0f32; hif4::GROUP];
-        for r in 0..m.rows {
-            let row = m.row(r);
-            for u in 0..upr {
-                let start = u * hif4::GROUP;
-                let end = (start + hif4::GROUP).min(m.cols);
-                buf[..end - start].copy_from_slice(&row[start..end]);
-                buf[end - start..].fill(0.0);
-                units.push(hif4::quantize(&buf, mode));
-            }
+        if m.rows == 0 || upr == 0 {
+            return HiF4Matrix { rows: m.rows, cols: m.cols, units_per_row: upr, units: Vec::new() };
         }
+        let zero = hif4::quantize(&[0f32; hif4::GROUP], mode);
+        let mut units = vec![zero; m.rows * upr];
+        parallel_row_bands(&mut units, upr, threads, |first_row, band| {
+            let mut buf = [0f32; hif4::GROUP];
+            for (i, urow) in band.chunks_mut(upr).enumerate() {
+                let row = m.row(first_row + i);
+                for (u, unit) in urow.iter_mut().enumerate() {
+                    let start = u * hif4::GROUP;
+                    let end = (start + hif4::GROUP).min(m.cols);
+                    buf[..end - start].copy_from_slice(&row[start..end]);
+                    buf[end - start..].fill(0.0);
+                    *unit = hif4::quantize(&buf, mode);
+                }
+            }
+        });
         HiF4Matrix { rows: m.rows, cols: m.cols, units_per_row: upr, units }
     }
 
@@ -71,20 +104,39 @@ pub struct Nvfp4Matrix {
 }
 
 impl Nvfp4Matrix {
+    /// Quantize a row-major matrix along its rows (row-parallel; identical
+    /// for any thread count).
     pub fn quantize(m: &Matrix, mode: RoundMode) -> Nvfp4Matrix {
+        let work = m.rows * m.cols * threadpool::QUANT_WORK_PER_ELEM;
+        Self::quantize_threads(m, mode, threadpool::threads_for(work))
+    }
+
+    /// [`Nvfp4Matrix::quantize`] with an explicit thread count.
+    pub fn quantize_threads(m: &Matrix, mode: RoundMode, threads: usize) -> Nvfp4Matrix {
         let gpr = m.cols.div_ceil(nvfp4::GROUP);
-        let mut groups = Vec::with_capacity(m.rows * gpr);
-        let mut buf = vec![0f32; nvfp4::GROUP];
-        for r in 0..m.rows {
-            let row = m.row(r);
-            for g in 0..gpr {
-                let start = g * nvfp4::GROUP;
-                let end = (start + nvfp4::GROUP).min(m.cols);
-                buf[..end - start].copy_from_slice(&row[start..end]);
-                buf[end - start..].fill(0.0);
-                groups.push(nvfp4::quantize(&buf, mode));
-            }
+        if m.rows == 0 || gpr == 0 {
+            return Nvfp4Matrix {
+                rows: m.rows,
+                cols: m.cols,
+                groups_per_row: gpr,
+                groups: Vec::new(),
+            };
         }
+        let zero = nvfp4::quantize(&[0f32; nvfp4::GROUP], mode);
+        let mut groups = vec![zero; m.rows * gpr];
+        parallel_row_bands(&mut groups, gpr, threads, |first_row, band| {
+            let mut buf = [0f32; nvfp4::GROUP];
+            for (i, grow) in band.chunks_mut(gpr).enumerate() {
+                let row = m.row(first_row + i);
+                for (g, group) in grow.iter_mut().enumerate() {
+                    let start = g * nvfp4::GROUP;
+                    let end = (start + nvfp4::GROUP).min(m.cols);
+                    buf[..end - start].copy_from_slice(&row[start..end]);
+                    buf[end - start..].fill(0.0);
+                    *group = nvfp4::quantize(&buf, mode);
+                }
+            }
+        });
         Nvfp4Matrix { rows: m.rows, cols: m.cols, groups_per_row: gpr, groups }
     }
 
@@ -109,53 +161,109 @@ impl Nvfp4Matrix {
 }
 
 /// `C = A · Bᵀ` where both operands are HiF4-quantized along the K axis and
-/// every 64-length slice runs through the bit-exact PE flow.
+/// every 64-length slice runs through the bit-exact PE flow. Cache-blocked
+/// and row-parallel with the process-default thread count.
 pub fn hif4_gemm_bt(a: &HiF4Matrix, b_t: &HiF4Matrix) -> Matrix {
+    let work = a.rows * b_t.rows * a.cols;
+    hif4_gemm_bt_threads(a, b_t, threadpool::threads_for(work))
+}
+
+/// [`hif4_gemm_bt`] with an explicit thread count — bit-identical for
+/// every value (each output element accumulates its unit dots in ascending
+/// K order on one thread).
+pub fn hif4_gemm_bt_threads(a: &HiF4Matrix, b_t: &HiF4Matrix, threads: usize) -> Matrix {
     assert_eq!(a.cols, b_t.cols, "reduction dims must agree");
-    let mut c = Matrix::zeros(a.rows, b_t.rows);
-    for i in 0..a.rows {
-        let au = a.row_units(i);
-        for j in 0..b_t.rows {
-            let bu = b_t.row_units(j);
-            let mut acc = 0f64;
-            for (ua, ub) in au.iter().zip(bu) {
-                acc += hif4_flow::dot(ua, ub);
-            }
-            c.data[i * b_t.rows + j] = acc as f32;
-        }
+    let (n, upr) = (b_t.rows, a.units_per_row);
+    let mut c = Matrix::zeros(a.rows, n);
+    if a.rows == 0 || n == 0 {
+        return c;
     }
+    parallel_row_bands(&mut c.data, n, threads, |first_row, band| {
+        let rows = band.len() / n;
+        let mut accs = [0f64; JB];
+        for j0 in (0..n).step_by(JB) {
+            let jb = (j0 + JB).min(n) - j0;
+            for i in 0..rows {
+                let au = a.row_units(first_row + i);
+                accs[..jb].fill(0.0);
+                // K-blocked: a JB × UB panel of B units stays hot while the
+                // A row streams; accumulation per (i, j) remains ascending-u.
+                for u0 in (0..upr).step_by(UB) {
+                    let u1 = (u0 + UB).min(upr);
+                    let au_blk = &au[u0..u1];
+                    for (jj, acc) in accs[..jb].iter_mut().enumerate() {
+                        let bu_blk = &b_t.row_units(j0 + jj)[u0..u1];
+                        for (ua, ub) in au_blk.iter().zip(bu_blk) {
+                            *acc += hif4_flow::dot(ua, ub);
+                        }
+                    }
+                }
+                let crow = &mut band[i * n..(i + 1) * n];
+                for (jj, acc) in accs[..jb].iter().enumerate() {
+                    crow[j0 + jj] = *acc as f32;
+                }
+            }
+        }
+    });
     c
 }
 
 /// `C = A · Bᵀ` with NVFP4 operands; K-groups run through the 64-length PE
 /// four at a time (tail PEs fall back to group-by-group partials, which is
-/// numerically identical since the flow is exact).
+/// numerically identical since the flow is exact). Cache-blocked and
+/// row-parallel like [`hif4_gemm_bt`].
 pub fn nvfp4_gemm_bt(a: &Nvfp4Matrix, b_t: &Nvfp4Matrix) -> Matrix {
+    let work = a.rows * b_t.rows * a.cols;
+    nvfp4_gemm_bt_threads(a, b_t, threadpool::threads_for(work))
+}
+
+/// [`nvfp4_gemm_bt`] with an explicit thread count (bit-identical for
+/// every value).
+pub fn nvfp4_gemm_bt_threads(a: &Nvfp4Matrix, b_t: &Nvfp4Matrix, threads: usize) -> Matrix {
     assert_eq!(a.cols, b_t.cols, "reduction dims must agree");
-    let mut c = Matrix::zeros(a.rows, b_t.rows);
-    for i in 0..a.rows {
-        let ag = a.row_groups(i);
-        for j in 0..b_t.rows {
-            let bg = b_t.row_groups(j);
-            let mut acc = 0f64;
-            let mut g = 0;
-            while g + nvfp4_flow::GROUPS_PER_PE <= ag.len() {
-                acc += nvfp4_flow::dot64(
-                    &ag[g..g + nvfp4_flow::GROUPS_PER_PE],
-                    &bg[g..g + nvfp4_flow::GROUPS_PER_PE],
-                );
-                g += nvfp4_flow::GROUPS_PER_PE;
-            }
-            while g < ag.len() {
-                acc += nvfp4_flow::dot64_dequant_ref(
-                    core::slice::from_ref(&ag[g]),
-                    core::slice::from_ref(&bg[g]),
-                );
-                g += 1;
-            }
-            c.data[i * b_t.rows + j] = acc as f32;
-        }
+    const PE: usize = nvfp4_flow::GROUPS_PER_PE;
+    // UB is a PE multiple, so full-PE dots never straddle a K block and the
+    // blocked schedule issues exactly the same dot64/tail sequence as a
+    // flat left-to-right walk.
+    const _: () = assert!(UB % PE == 0);
+    let (n, gpr) = (b_t.rows, a.groups_per_row);
+    let mut c = Matrix::zeros(a.rows, n);
+    if a.rows == 0 || n == 0 {
+        return c;
     }
+    parallel_row_bands(&mut c.data, n, threads, |first_row, band| {
+        let rows = band.len() / n;
+        let mut accs = [0f64; JB];
+        for j0 in (0..n).step_by(JB) {
+            let jb = (j0 + JB).min(n) - j0;
+            for i in 0..rows {
+                let ag = a.row_groups(first_row + i);
+                accs[..jb].fill(0.0);
+                for u0 in (0..gpr).step_by(UB) {
+                    let u1 = (u0 + UB).min(gpr);
+                    for (jj, acc) in accs[..jb].iter_mut().enumerate() {
+                        let bg = b_t.row_groups(j0 + jj);
+                        let mut g = u0;
+                        while g + PE <= u1 {
+                            *acc += nvfp4_flow::dot64(&ag[g..g + PE], &bg[g..g + PE]);
+                            g += PE;
+                        }
+                        while g < u1 {
+                            *acc += nvfp4_flow::dot64_dequant_ref(
+                                core::slice::from_ref(&ag[g]),
+                                core::slice::from_ref(&bg[g]),
+                            );
+                            g += 1;
+                        }
+                    }
+                }
+                let crow = &mut band[i * n..(i + 1) * n];
+                for (jj, acc) in accs[..jb].iter().enumerate() {
+                    crow[j0 + jj] = *acc as f32;
+                }
+            }
+        }
+    });
     c
 }
 

@@ -149,7 +149,10 @@ mod tests {
         // Below half the min subnormal rounds to zero — the NVFP4 scale
         // underflow failure mode in Fig 3.
         assert_eq!(E4M3::from_f32(MIN_SUBNORMAL / 4.0, RoundMode::NearestEven).to_f32(), 0.0);
-        assert_eq!(E4M3::from_f32(MIN_SUBNORMAL * 0.75, RoundMode::NearestEven).to_f32(), MIN_SUBNORMAL);
+        assert_eq!(
+            E4M3::from_f32(MIN_SUBNORMAL * 0.75, RoundMode::NearestEven).to_f32(),
+            MIN_SUBNORMAL
+        );
     }
 
     #[test]

@@ -165,7 +165,13 @@ pub fn quantize_trace(v: &[f32], mode: RoundMode) -> (HiF4Unit, ConversionTrace)
     // only NaN channel the format has.
     if v64.iter().any(|x| !x.is_finite()) {
         let unit = HiF4Unit { scale: E6M2::NAN, e1_8: 0, e1_16: 0, elems: [0; 32] };
-        let trace = ConversionTrace { v16: [0.0; 16], v8: [0.0; 8], vmax: f32::NAN, sf_bf16: f32::NAN, rec: f32::NAN };
+        let trace = ConversionTrace {
+            v16: [0.0; 16],
+            v8: [0.0; 8],
+            vmax: f32::NAN,
+            sf_bf16: f32::NAN,
+            rec: f32::NAN,
+        };
         return (unit, trace);
     }
 

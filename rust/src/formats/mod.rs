@@ -12,10 +12,10 @@
 //! Scalar building blocks: [`bf16`], [`e6m2`], [`s1p2`], [`e2m1`], [`e4m3`],
 //! [`e8m0`], with shared [`rounding`].
 //!
-//! The uniform entry point is [`Quantizer`], which quantize→dequantizes a
-//! tensor row padded into groups — the "simulated quantization" semantics of
-//! the paper's LLM experiments — plus [`QuantScheme`] which adds the
-//! per-tensor-scaling (PTS) wrapper NVFP4 needs.
+//! The uniform entry point is [`Quantizer`] (an alias of [`QuantScheme`]),
+//! which quantize→dequantizes a tensor row padded into groups — the
+//! "simulated quantization" semantics of the paper's LLM experiments —
+//! and adds the per-tensor-scaling (PTS) wrapper NVFP4 needs.
 
 pub mod bf16;
 pub mod bfp;
@@ -91,6 +91,24 @@ impl Format {
 /// A quantization scheme = block format + optional per-tensor scaling,
 /// exactly the configurations the paper's tables evaluate
 /// (`NVFP4`, `NVFP4+PTS`, `HiF4`, …).
+///
+/// # Examples
+///
+/// Simulated quantization of a tensor (quantize → dequantize back to f32,
+/// the semantics every LLM experiment in the paper uses):
+///
+/// ```
+/// use hif4::formats::{mse, Format, QuantScheme};
+///
+/// let scheme = QuantScheme::direct(Format::HiF4);
+/// let x: Vec<f32> = (0..100).map(|i| (i as f32 - 50.0) / 25.0).collect();
+/// let q = scheme.quant_dequant_vec(&x);
+///
+/// assert_eq!(q.len(), x.len());
+/// // Zeros are exact, signs never flip, and the 4.5-bit error is small.
+/// assert!(q.iter().zip(&x).all(|(qi, xi)| qi * xi >= 0.0));
+/// assert!(mse(&x, &q) < 1e-2);
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct QuantScheme {
     pub format: Format,
@@ -99,6 +117,12 @@ pub struct QuantScheme {
     pub pts: bool,
     pub mode: RoundMode,
 }
+
+/// Uniform quantize→dequantize entry point — the name the crate docs use
+/// for the "simulated quantization" interface ([`QuantScheme`] by another
+/// name; `Quantizer::direct(Format::HiF4)` reads better at call sites that
+/// never touch PTS).
+pub use self::QuantScheme as Quantizer;
 
 impl QuantScheme {
     pub fn direct(format: Format) -> Self {
@@ -155,6 +179,34 @@ impl QuantScheme {
     pub fn quant_dequant_vec(&self, input: &[f32]) -> Vec<f32> {
         let mut out = vec![0f32; input.len()];
         self.quant_dequant(input, &mut out);
+        out
+    }
+
+    /// Quantize→dequantize a row-major `rows × cols` buffer one row at a
+    /// time (rows are independent — PTS, when enabled, is applied per
+    /// row), fanned out over the process-default thread count weighted by
+    /// the quantizers' per-element cost. The shared core behind RTN
+    /// weight quantization everywhere (`Transformer`, `ParamStore`,
+    /// `quant::gptq::rtn_quantize`).
+    pub fn quant_dequant_rows(&self, src: &[f32], cols: usize) -> Vec<f32> {
+        use crate::util::threadpool::{threads_for, QUANT_WORK_PER_ELEM};
+        self.quant_dequant_rows_threads(src, cols, threads_for(src.len() * QUANT_WORK_PER_ELEM))
+    }
+
+    /// [`QuantScheme::quant_dequant_rows`] with an explicit thread count
+    /// (identical output for any count).
+    pub fn quant_dequant_rows_threads(&self, src: &[f32], cols: usize, threads: usize) -> Vec<f32> {
+        let mut out = vec![0f32; src.len()];
+        if src.is_empty() {
+            return out;
+        }
+        assert!(cols > 0 && src.len() % cols == 0, "buffer must be whole rows");
+        crate::util::threadpool::parallel_row_bands(&mut out, cols, threads, |first_row, band| {
+            for (i, orow) in band.chunks_mut(cols).enumerate() {
+                let r = first_row + i;
+                self.quant_dequant(&src[r * cols..(r + 1) * cols], orow);
+            }
+        });
         out
     }
 }

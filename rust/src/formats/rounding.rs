@@ -45,7 +45,13 @@ pub fn round_significand(x: f32, mbits: u32, mode: RoundMode) -> f32 {
     }
     let e = x.abs().log2().floor() as i32;
     // Guard against log2 edge cases at powers of two boundaries.
-    let e = if x.abs() < 2f32.powi(e) { e - 1 } else if x.abs() >= 2f32.powi(e + 1) { e + 1 } else { e };
+    let e = if x.abs() < 2f32.powi(e) {
+        e - 1
+    } else if x.abs() >= 2f32.powi(e + 1) {
+        e + 1
+    } else {
+        e
+    };
     let ulp = 2f32.powi(e - mbits as i32);
     round_int(x / ulp, mode) * ulp
 }

@@ -8,12 +8,25 @@
 //! transformer model zoo with a synthetic evaluation harness, and a serving
 //! coordinator that drives AOT-compiled XLA executables via PJRT.
 //!
-//! Three-layer architecture (see `DESIGN.md`):
+//! Three-layer architecture (see `DESIGN.md` at the repository root):
 //! * **L1** Pallas kernels (`python/compile/kernels/`) — quantization hot
 //!   spot, lowered at build time.
 //! * **L2** JAX model (`python/compile/model.py`) — transformer fwd +
 //!   train step, AOT-lowered to `artifacts/*.hlo.txt`.
 //! * **L3** this crate — formats, quantization pipeline, eval, serving.
+//!
+//! The hot paths are data-parallel with a determinism contract: the f32
+//! GEMMs ([`tensor::gemm`]), the quantized GEMMs ([`dotprod::qgemm`]),
+//! GPTQ ([`quant::gptq`]) and the serving worker pool ([`server`]) all
+//! fan out over OS threads while producing **bit-identical** results for
+//! every thread count (`HIF4_THREADS` / `--threads` /
+//! [`util::threadpool::set_threads`]); `tests/parallel_parity.rs` pins
+//! the contract.
+//!
+//! Offline note: the `anyhow` and `xla` dependencies resolve to in-tree
+//! crates under `rust/vendor/` — a minimal error type and a PJRT stub —
+//! so the workspace builds with no registry or native XLA runtime; see
+//! `README.md` for swapping in the real bindings.
 
 pub mod dotprod;
 pub mod eval;

@@ -2,12 +2,16 @@
 //!
 //! ```text
 //! hif4 serve   --artifact fwd_hif4.hlo.txt --addr 127.0.0.1:7401 [--params p.bin]
+//!              [--workers 2]                 # PJRT worker pool size
 //! hif4 sweep   --dim 512                       # Fig 3 series
 //! hif4 hwcost                                  # §III.B area/power table
 //! hif4 dotprod                                 # Fig 4 inventory + exactness
 //! hif4 quantize --in w.bin --format hif4       # quantize a raw f32 tensor
 //! hif4 info                                    # formats summary
 //! ```
+//!
+//! Every subcommand honours `--threads N` (or `HIF4_THREADS`) for the
+//! data-parallel GEMM/quantization kernels.
 
 use anyhow::Result;
 use hif4::formats::{mse, Format, QuantScheme};
@@ -21,6 +25,11 @@ use std::path::Path;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
+    if let Some(t) = args.get("threads") {
+        let t: usize = t.parse().map_err(|e| anyhow::anyhow!("--threads {t}: {e}"))?;
+        anyhow::ensure!(t > 0, "--threads must be positive");
+        hif4::util::threadpool::set_threads(t);
+    }
     match args.subcommand() {
         Some("serve") => serve(&args),
         Some("sweep") => {
@@ -115,6 +124,7 @@ fn serve(args: &Args) -> Result<()> {
             max_batch: args.get_parse("max-batch", manifest.batch),
             max_wait: std::time::Duration::from_millis(args.get_parse("max-wait-ms", 2)),
         },
+        workers: args.get_parse("workers", 1),
     };
     let server = Server::start(dir, cfg, &served, args.get_or("addr", "127.0.0.1:7401"))?;
     println!("serving on {} — Ctrl-C to stop", server.addr);

@@ -68,7 +68,8 @@ impl Transformer {
         };
 
         // Head: logits = normed_f · Whᵀ.
-        g.linears.insert(self.w.head.name.clone(), matmul(&transpose_ref(dlogits), &cache.normed_f));
+        g.linears
+            .insert(self.w.head.name.clone(), matmul(&transpose_ref(dlogits), &cache.normed_f));
         let dnormed_f = matmul(dlogits, &self.w.head.w);
         let (mut dx, dgf) = rmsnorm_bwd(&dnormed_f, &cache.x_final, &self.w.norm_f, &cache.rms_f);
         g.norms.insert("norm_f".into(), dgf);
@@ -291,7 +292,15 @@ pub struct Adam {
 
 impl Adam {
     pub fn new(lr: f32) -> Adam {
-        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, step: 0, m: HashMap::new(), v: HashMap::new() }
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            step: 0,
+            m: HashMap::new(),
+            v: HashMap::new(),
+        }
     }
 
     fn update_buf(&mut self, key: &str, w: &mut [f32], g: &[f32], lr_t: f32) {
@@ -440,7 +449,8 @@ mod tests {
                 probes.push((name.clone(), idx, dw.data[idx]));
             }
         }
-        probes.push(("embed".into(), 1 * model.cfg.d_model + 3, grads.embed.data[model.cfg.d_model + 3]));
+        let embed_idx = model.cfg.d_model + 3;
+        probes.push(("embed".into(), embed_idx, grads.embed.data[embed_idx]));
         for (name, idx, got) in probes {
             // Perturb the parameter ±eps.
             let perturb = |model: &mut Transformer, delta: f32| {

@@ -235,16 +235,12 @@ impl Transformer {
 
     /// Fake-quantize the weights of every paper-quantized linear in place
     /// with `scheme` (direct cast / RTN). GPTQ paths use
-    /// [`crate::quant::gptq`] with calibration data instead.
+    /// [`crate::quant::gptq`] with calibration data instead. Each linear's
+    /// rows quantize independently across the process-default thread count.
     pub fn quantize_weights(&mut self, scheme: &QuantScheme) {
         self.visit_linears_mut(&mut |lin| {
             if lin.kind.quantized_by_paper() {
-                let mut out = vec![0f32; lin.w.data.len()];
-                for r in 0..lin.w.rows {
-                    let row = &lin.w.data[r * lin.w.cols..(r + 1) * lin.w.cols];
-                    scheme.quant_dequant(row, &mut out[r * lin.w.cols..(r + 1) * lin.w.cols]);
-                }
-                lin.w.data = out;
+                lin.w.data = scheme.quant_dequant_rows(&lin.w.data, lin.w.cols);
             }
         });
     }
@@ -279,7 +275,7 @@ impl Transformer {
     /// Forward pass over a batch of token sequences (all the same length),
     /// returning logits (B·T × vocab). `policy` applies fake activation
     /// quantization; `calib` records linear inputs for GPTQ; `cache`
-    /// collects intermediates for [`backward`].
+    /// collects intermediates for [`Transformer::backward`].
     pub fn forward(
         &self,
         tokens: &[Vec<usize>],

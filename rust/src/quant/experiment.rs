@@ -75,7 +75,11 @@ impl Default for ExperimentConfig {
 /// Train one stand-in model on the synthetic corpus (+ outlier injection
 /// afterwards, for the wide-distribution models). Returns the model and
 /// its loss curve.
-pub fn train_model(cfg: &ModelConfig, xcfg: &ExperimentConfig, seed: u64) -> (Transformer, Vec<f32>) {
+pub fn train_model(
+    cfg: &ModelConfig,
+    xcfg: &ExperimentConfig,
+    seed: u64,
+) -> (Transformer, Vec<f32>) {
     assert_eq!(cfg.vocab, tasks::VOCAB, "zoo models must use the corpus vocab");
     let mut model = Transformer::init(cfg.clone(), seed);
     let (batch, seq) = (xcfg.batch, xcfg.seq);
@@ -116,16 +120,10 @@ pub fn quantize_model(
                     Some(x) if x.rows >= 8 => {
                         lin.w = gptq_quantize(&lin.w, x, &gcfg).weights;
                     }
-                    // Unseen linears (e.g. never-routed MoE experts): RTN.
+                    // Unseen linears (e.g. never-routed MoE experts): RTN
+                    // through the shared (row-parallel) baseline path.
                     _ => {
-                        let mut out = vec![0f32; lin.w.data.len()];
-                        for r in 0..lin.w.rows {
-                            scheme.quant_dequant(
-                                lin.w.row(r),
-                                &mut out[r * lin.w.cols..(r + 1) * lin.w.cols],
-                            );
-                        }
-                        lin.w.data = out;
+                        lin.w = super::gptq::rtn_quantize(&lin.w, &gcfg);
                     }
                 }
             });

@@ -14,10 +14,23 @@
 //! 16-element grid gives a GPTQ-for-NVFP4 baseline (used by the ablation
 //! bench; the paper itself pairs GPTQ only with HiF4).
 
+//! ## Parallel execution
+//!
+//! GPTQ's error feedback propagates along the K axis *within* a weight row
+//! and never across rows, so the whole layer quantization is row-parallel:
+//! [`gptq_quantize_with_hessian_threads`] fans W's rows out over
+//! contiguous bands (sharing the one Cholesky factor), and
+//! [`hessian_threads`] does the same for H's rows. Both keep each row's
+//! floating-point accumulation order fixed, so any thread count yields
+//! bit-identical weights, Hessians and proxy losses. The PTQ pipeline
+//! (`quant::experiment`, `server` startup weight quantization) calls the
+//! default entry points, which use the process-wide thread knob.
+
 use crate::formats::e6m2::exp2i;
 use crate::formats::rounding::RoundMode;
 use crate::formats::{e2m1, hif4, nvfp4, s1p2, Format};
 use crate::tensor::Matrix;
+use crate::util::threadpool::{self, parallel_row_bands, parallel_row_bands2};
 
 /// Dampening factor: λ = DAMP × mean(diag(H)).
 pub const DAMP: f64 = 0.01;
@@ -111,23 +124,33 @@ pub struct GptqResult {
 }
 
 /// Accumulate the GPTQ Hessian `H = X Xᵀ` from calibration inputs
-/// (X: samples × in_features, row-major), in f64.
+/// (X: samples × in_features, row-major), in f64. Parallel over H rows
+/// with the process-default thread count.
 pub fn hessian(x: &Matrix) -> Vec<f64> {
+    hessian_threads(x, threadpool::threads_for(x.rows * x.cols * x.cols))
+}
+
+/// [`hessian`] with an explicit thread count. Each H row sums its samples
+/// in ascending order on one thread, so the result is bit-identical for
+/// every count.
+pub fn hessian_threads(x: &Matrix, threads: usize) -> Vec<f64> {
     let n = x.cols;
     let mut h = vec![0f64; n * n];
-    for s in 0..x.rows {
-        let row = x.row(s);
-        for i in 0..n {
-            let xi = row[i] as f64;
-            if xi == 0.0 {
-                continue;
-            }
-            let hrow = &mut h[i * n..(i + 1) * n];
-            for (j, hj) in hrow.iter_mut().enumerate() {
-                *hj += xi * row[j] as f64;
+    parallel_row_bands(&mut h, n, threads, |first_row, band| {
+        for (ii, hrow) in band.chunks_mut(n).enumerate() {
+            let i = first_row + ii;
+            for s in 0..x.rows {
+                let row = x.row(s);
+                let xi = row[i] as f64;
+                if xi == 0.0 {
+                    continue;
+                }
+                for (hj, xj) in hrow.iter_mut().zip(row) {
+                    *hj += xi * *xj as f64;
+                }
             }
         }
-    }
+    });
     h
 }
 
@@ -140,8 +163,25 @@ pub fn gptq_quantize(w: &Matrix, x: &Matrix, cfg: &GptqConfig) -> GptqResult {
 }
 
 /// GPTQ with a precomputed Hessian (callers that calibrate once and
-/// quantize several candidate formats reuse it).
+/// quantize several candidate formats reuse it). Row-parallel with the
+/// process-default thread count.
 pub fn gptq_quantize_with_hessian(w: &Matrix, h: &[f64], cfg: &GptqConfig) -> GptqResult {
+    let threads = threadpool::threads_for(w.rows * w.cols * w.cols);
+    gptq_quantize_with_hessian_threads(w, h, cfg, threads)
+}
+
+/// [`gptq_quantize_with_hessian`] with an explicit thread count.
+///
+/// GPTQ's error feedback stays within a weight row, so rows quantize
+/// independently against the shared Cholesky factor; per-row losses are
+/// reduced in ascending row order afterwards. Bit-identical for every
+/// thread count.
+pub fn gptq_quantize_with_hessian_threads(
+    w: &Matrix,
+    h: &[f64],
+    cfg: &GptqConfig,
+    threads: usize,
+) -> GptqResult {
     let n = w.cols;
     assert_eq!(h.len(), n * n);
 
@@ -161,62 +201,73 @@ pub fn gptq_quantize_with_hessian(w: &Matrix, h: &[f64], cfg: &GptqConfig) -> Gp
     // PTS wraps the whole tensor.
     let t = if cfg.pts { nvfp4::pts_scale(&w.data) } else { 1.0 };
 
-    let g = cfg.group();
     let mut wq = Matrix::zeros(w.rows, w.cols);
-    let mut cur = w.clone();
-    if t != 1.0 {
-        cur.scale_inplace(t);
-    }
-    let mut grids: Vec<GroupGrid> = Vec::with_capacity(w.rows);
-    let mut proxy_loss = 0f64;
-    let mut gbuf = vec![0f32; g];
-
-    for j in 0..n {
-        // Freeze per-row metadata at each group boundary from the *current*
-        // (error-compensated) weights — the Hi in HiGPTQ.
-        if j % g == 0 {
-            grids.clear();
-            let end = (j + g).min(n);
-            for r in 0..w.rows {
-                gbuf[..end - j].copy_from_slice(&cur.row(r)[j..end]);
-                gbuf[end - j..].fill(0.0);
-                grids.push(cfg.make_grid(&gbuf));
+    let mut row_losses = vec![0f64; w.rows];
+    if w.rows > 0 && n > 0 {
+        parallel_row_bands2(&mut wq.data, n, &mut row_losses, 1, threads, |first_row, qb, lb| {
+            for (i, loss) in lb.iter_mut().enumerate() {
+                *loss = gptq_quantize_row(
+                    w.row(first_row + i),
+                    &u,
+                    cfg,
+                    t,
+                    &mut qb[i * n..(i + 1) * n],
+                );
             }
-        }
-        let ujj = u[j * n + j];
-        for r in 0..w.rows {
-            let wv = cur.at(r, j);
-            let q = grids[r].quantize(j % g, wv, cfg.mode);
-            wq.data[r * n + j] = q;
-            let err = (wv - q) as f64 / ujj;
-            proxy_loss += err * err;
-            // Propagate into the remaining columns of this row.
-            if err != 0.0 {
-                let urow = &u[j * n..(j + 1) * n];
-                let crow = cur.row_mut(r);
-                for k in (j + 1)..n {
-                    crow[k] -= (err * urow[k]) as f32;
-                }
-            }
-        }
+        });
     }
 
     if t != 1.0 {
         wq.scale_inplace(1.0 / t);
     }
-    GptqResult { weights: wq, proxy_loss }
+    GptqResult { weights: wq, proxy_loss: row_losses.iter().sum() }
+}
+
+/// Quantize one weight row against the upper Cholesky factor `u`,
+/// freezing per-group metadata from the error-compensated weights at each
+/// group boundary — the Hi in HiGPTQ. Returns the row's proxy loss.
+fn gptq_quantize_row(wrow: &[f32], u: &[f64], cfg: &GptqConfig, t: f32, qrow: &mut [f32]) -> f64 {
+    let n = wrow.len();
+    let g = cfg.group();
+    let mut cur = wrow.to_vec();
+    if t != 1.0 {
+        for x in cur.iter_mut() {
+            *x *= t;
+        }
+    }
+    let mut gbuf = vec![0f32; g];
+    let mut loss = 0f64;
+    for j0 in (0..n).step_by(g) {
+        let end = (j0 + g).min(n);
+        gbuf[..end - j0].copy_from_slice(&cur[j0..end]);
+        gbuf[end - j0..].fill(0.0);
+        let grid = cfg.make_grid(&gbuf);
+        for j in j0..end {
+            let ujj = u[j * n + j];
+            let wv = cur[j];
+            let q = grid.quantize(j - j0, wv, cfg.mode);
+            qrow[j] = q;
+            let err = (wv - q) as f64 / ujj;
+            loss += err * err;
+            // Propagate into the remaining columns of this row.
+            if err != 0.0 {
+                let urow = &u[j * n..(j + 1) * n];
+                for (ck, uk) in cur[j + 1..].iter_mut().zip(&urow[j + 1..]) {
+                    *ck -= (err * uk) as f32;
+                }
+            }
+        }
+    }
+    loss
 }
 
 /// Round-to-nearest baseline (direct cast of each row) — what the tables'
 /// non-GPTQ rows use; shares the grid code path for comparability.
+/// Row-parallel; rows quantize independently so the result is identical
+/// for any thread count.
 pub fn rtn_quantize(w: &Matrix, cfg: &GptqConfig) -> Matrix {
     let scheme = crate::formats::QuantScheme { format: cfg.format, pts: cfg.pts, mode: cfg.mode };
-    let mut out = Matrix::zeros(w.rows, w.cols);
-    for r in 0..w.rows {
-        let q = scheme.quant_dequant_vec(w.row(r));
-        out.row_mut(r).copy_from_slice(&q);
-    }
-    out
+    Matrix::from_vec(w.rows, w.cols, scheme.quant_dequant_rows(&w.data, w.cols))
 }
 
 /// Invert a symmetric positive-definite matrix via Cholesky (f64, n ≤ ~2k).

@@ -18,7 +18,7 @@ pub struct SweepPoint {
     /// The exponent x (σ = 0.01 × 2^x).
     pub x: u32,
     pub sigma: f64,
-    /// Raw MSE per scheme, in the order of [`SCHEMES`].
+    /// Raw MSE per scheme, in the order of [`schemes`].
     pub mse: Vec<f64>,
     /// MSE normalized to HiF4's.
     pub normalized: Vec<f64>,

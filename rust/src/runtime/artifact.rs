@@ -130,18 +130,15 @@ impl ParamStore {
     /// Fake-quantize every attention/FFN weight matrix (2-D, non-norm,
     /// non-embedding/head) with `scheme` — the weight half of the paper's
     /// simulated quantization; activations are handled in-graph by the
-    /// quantized forward artifact.
+    /// quantized forward artifact. Rows quantize independently, so each
+    /// parameter fans out over the process-default thread count (serving
+    /// startup inherits the parallel quantization path).
     pub fn quantize_weights(&mut self, scheme: &crate::formats::QuantScheme) {
         for (name, (dims, data)) in self.params.iter_mut() {
             if name == "embed" || name == "head" || name.contains("norm") || dims.len() != 2 {
                 continue;
             }
-            let cols = dims[1];
-            let mut out = vec![0f32; data.len()];
-            for r in 0..dims[0] {
-                scheme.quant_dequant(&data[r * cols..(r + 1) * cols], &mut out[r * cols..(r + 1) * cols]);
-            }
-            *data = out;
+            *data = scheme.quant_dequant_rows(data, dims[1]);
         }
     }
 
@@ -166,7 +163,7 @@ impl ParamStore {
         Ok(())
     }
 
-    /// Load from the binary format written by [`save`].
+    /// Load from the binary format written by [`ParamStore::save`].
     pub fn load(path: &Path) -> Result<ParamStore> {
         let buf = std::fs::read(path)?;
         let mut pos = 0usize;

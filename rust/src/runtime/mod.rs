@@ -1,4 +1,17 @@
 //! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//!
+//! The serving path never runs Python: `python/compile/aot.py` lowers the
+//! JAX model (L2) to HLO text + a `manifest.txt` describing parameter
+//! order/shapes and entry-point dims, and this layer drives the result —
+//! [`artifact`] parses the manifest and owns the [`artifact::ParamStore`]
+//! (init/save/load/quantize of the served weights), while [`client`]
+//! wraps the PJRT client/executable handles behind typed literal helpers.
+//!
+//! In the offline build the `xla` dependency is a stub: artifacts still
+//! parse and `ParamStore` round-trips, but creating a
+//! [`client::Runtime`] reports that PJRT is unavailable (integration
+//! tests and benches skip when `artifacts/` is missing for the same
+//! reason). Point `rust/Cargo.toml` at the real xla-rs crate to execute.
 
 pub mod artifact;
 pub mod client;

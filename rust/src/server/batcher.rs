@@ -2,11 +2,14 @@
 //!
 //! Requests arrive on an MPSC queue; the batcher drains up to `max_batch`
 //! of them, waiting at most `max_wait` after the first request before
-//! dispatching a partial batch (latency/throughput knob). Batches go to the
-//! worker that owns the PJRT executable.
+//! dispatching a partial batch (latency/throughput knob). Complete batches
+//! go onto one shared queue that the PJRT workers (each owning its own
+//! executable) pull from whenever they are free — work-stealing-style load
+//! balancing, so a stalled worker never accumulates a backlog while others
+//! idle. [`run_batcher`] is the batcher-thread loop.
 
 use super::protocol::Request;
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::time::{Duration, Instant};
 
 /// A request tagged with arrival time and a reply handle.
@@ -52,10 +55,76 @@ pub fn next_batch<R>(rx: &Receiver<Pending<R>>, policy: &BatchPolicy) -> Option<
     Some(batch)
 }
 
+/// The batcher-thread loop: drain batches from `rx` under `policy` and
+/// hand each batch to the shared worker queue `out` (every worker holds
+/// the matching receiver behind a mutex and pulls when free, so load
+/// balances to whichever worker is idle).
+///
+/// `out` should be a small-capacity [`SyncSender`] (the server uses a
+/// rendezvous channel): batches are sealed at **handoff** time, not at
+/// drain time — while every worker is busy the batcher keeps topping the
+/// pending batch up from the request queue (up to `max_batch`), so
+/// saturated workers always receive the fullest batch available instead
+/// of eager `max_wait`-sized fragments padded to the lowered batch size.
+///
+/// Reports each *successfully handed-off* batch size to `on_batch`
+/// (metrics hook) — a batch dropped because every worker died is not
+/// counted. Returns when the request queue closes (after handing off any
+/// final partial batch) or every worker is gone.
+pub fn run_batcher<R, F: FnMut(usize)>(
+    rx: &Receiver<Pending<R>>,
+    policy: &BatchPolicy,
+    out: &SyncSender<Vec<Pending<R>>>,
+    mut on_batch: F,
+) {
+    let blocking_handoff = |batch: Vec<Pending<R>>, on_batch: &mut F| -> bool {
+        let size = batch.len();
+        if out.send(batch).is_err() {
+            return false; // every worker has exited
+        }
+        on_batch(size);
+        true
+    };
+    while let Some(mut batch) = next_batch(rx, policy) {
+        loop {
+            if batch.len() >= policy.max_batch {
+                // Nothing more can join: wait for a worker.
+                if !blocking_handoff(batch, &mut on_batch) {
+                    return;
+                }
+                break;
+            }
+            let size = batch.len();
+            match out.try_send(batch) {
+                Ok(()) => {
+                    on_batch(size);
+                    break;
+                }
+                Err(TrySendError::Disconnected(_)) => return,
+                Err(TrySendError::Full(b)) => {
+                    // Every worker is busy: keep the batch open and top it
+                    // up while waiting, rechecking every max_wait.
+                    batch = b;
+                    match rx.recv_timeout(policy.max_wait) {
+                        Ok(p) => batch.push(p),
+                        Err(RecvTimeoutError::Timeout) => {}
+                        Err(RecvTimeoutError::Disconnected) => {
+                            // No more requests will arrive: hand off the
+                            // final batch (blocking) and finish.
+                            let _ = blocking_handoff(batch, &mut on_batch);
+                            return;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc::channel;
+    use std::sync::mpsc::{channel, sync_channel};
 
     fn req(id: u64) -> Pending<()> {
         Pending { request: Request { id, tokens: vec![1, 2] }, arrived: Instant::now(), reply: () }
@@ -109,6 +178,78 @@ mod tests {
         let b = next_batch(&rx, &policy).unwrap();
         assert_eq!(b.len(), 2, "late request should join");
         drop(handle.join().unwrap());
+    }
+
+    #[test]
+    fn run_batcher_drains_everything_in_order() {
+        let (tx, rx) = channel();
+        for i in 0..17 {
+            tx.send(req(i)).unwrap();
+        }
+        drop(tx);
+        // Enough capacity that the single-threaded test never blocks.
+        let (btx, brx) = sync_channel::<Vec<Pending<()>>>(32);
+        let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(200) };
+        let mut sizes = Vec::new();
+        run_batcher(&rx, &policy, &btx, |n| sizes.push(n));
+        let got: Vec<u64> =
+            brx.try_iter().flat_map(|b| b.into_iter().map(|p| p.request.id)).collect();
+        assert_eq!(got, (0..17).collect::<Vec<u64>>(), "nothing lost, FIFO preserved");
+        assert_eq!(sizes.iter().sum::<usize>(), 17);
+        assert!(sizes.iter().all(|s| *s <= 4));
+    }
+
+    #[test]
+    fn run_batcher_pulled_by_competing_workers() {
+        // Two consumer threads share the batch queue behind a mutex (the
+        // worker-pool pattern): every request is served exactly once and a
+        // dead consumer never strands work.
+        use std::sync::{Arc, Mutex};
+        let (tx, rx) = channel();
+        for i in 0..40 {
+            tx.send(req(i)).unwrap();
+        }
+        drop(tx);
+        // Rendezvous handoff, exactly like the server wires it.
+        let (btx, brx) = sync_channel::<Vec<Pending<()>>>(0);
+        let shared = Arc::new(Mutex::new(brx));
+        let workers: Vec<_> = (0..2)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || {
+                    let mut ids = Vec::new();
+                    loop {
+                        let batch = { shared.lock().unwrap().recv() };
+                        let Ok(batch) = batch else { break };
+                        ids.extend(batch.iter().map(|p| p.request.id));
+                    }
+                    ids
+                })
+            })
+            .collect();
+        let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(200) };
+        let mut batches = 0usize;
+        run_batcher(&rx, &policy, &btx, |_| batches += 1);
+        drop(btx); // queue closed: workers drain and exit
+        let mut got: Vec<u64> = workers.into_iter().flat_map(|w| w.join().unwrap()).collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..40).collect::<Vec<u64>>(), "each request served exactly once");
+        assert!(batches >= 10, "max_batch=4 over 40 requests");
+    }
+
+    #[test]
+    fn run_batcher_stops_when_workers_are_gone() {
+        let (tx, rx) = channel();
+        for i in 0..5 {
+            tx.send(req(i)).unwrap();
+        }
+        drop(tx);
+        let (btx, brx) = sync_channel::<Vec<Pending<()>>>(0);
+        drop(brx); // all workers dead before the first batch
+        let policy = BatchPolicy { max_batch: 2, max_wait: Duration::from_micros(200) };
+        let mut counted = 0usize;
+        run_batcher(&rx, &policy, &btx, |n| counted += n);
+        assert_eq!(counted, 0, "dropped batches must not be counted as served");
     }
 
     #[test]

@@ -1,4 +1,24 @@
-//! Serving coordinator: TCP protocol, request router, dynamic batcher.
+//! Serving coordinator: TCP protocol, request router, dynamic batcher and
+//! the PJRT worker pool.
+//!
+//! Request lifecycle (all std threads, no async runtime):
+//!
+//! ```text
+//! client ──TCP──▶ connection thread ──▶ request queue
+//!                                             │ batcher thread
+//!                                   [protocol]│ (max_batch / max_wait)
+//!                                             ▼
+//!                                     shared batch queue
+//!                                    ▲            ▲  (free workers pull)
+//!                               worker 0 …   worker N-1   (own PJRT exe each)
+//!                                    └──▶ reply writer (per-connection lock)
+//! ```
+//!
+//! [`protocol`] defines the length-prefixed binary frames, [`batcher`] the
+//! drain policy and batch forwarding, [`service`] the listener/batcher/
+//! worker-pool assembly plus a blocking [`service::Client`], and
+//! [`metrics`] the lock-light counters/histograms the `serve` subcommand
+//! and the serving bench report.
 
 pub mod batcher;
 pub mod metrics;

@@ -1,14 +1,22 @@
 //! The serving coordinator: TCP listener → router → dynamic batcher →
-//! PJRT worker → per-connection reply writers. Thread-based (std only);
-//! Python is nowhere on this path.
+//! PJRT **worker pool** → per-connection reply writers. Thread-based (std
+//! only); Python is nowhere on this path.
+//!
+//! Pipeline: connection threads push requests onto one MPSC queue; a
+//! dedicated batcher thread drains them under the [`BatchPolicy`] onto a
+//! shared batch queue, which `workers` PJRT worker threads — each owning
+//! its own compiled executable — pull from whenever they are free (idle
+//! workers pick up the next batch, so a stalled worker never strands a
+//! backlog) — the data-parallel serving analogue of the row-parallel
+//! QGEMM kernels.
 //!
 //! Threading note: the xla crate's PJRT handles are `!Send` (Rc-backed), so
-//! the worker thread owns the *entire* PJRT lifecycle — client, compiled
+//! each worker thread owns its *entire* PJRT lifecycle — client, compiled
 //! executable and parameter literals are created inside the worker from
 //! plain-data inputs (artifact path + `ParamStore`), and only plain data
 //! crosses thread boundaries.
 
-use super::batcher::{next_batch, BatchPolicy, Pending};
+use super::batcher::{run_batcher, BatchPolicy, Pending};
 use super::metrics::Metrics;
 use super::protocol::{Request, Response};
 use crate::runtime::artifact::{Manifest, ParamStore};
@@ -18,7 +26,7 @@ use std::io::Write;
 use std::net::{TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -28,22 +36,27 @@ pub struct ServerConfig {
     /// Artifact to serve, e.g. "fwd_bf16.hlo.txt" or "fwd_hif4.hlo.txt".
     pub artifact: String,
     pub policy: BatchPolicy,
+    /// PJRT worker threads; each compiles its own copy of the executable
+    /// and pulls batches from the shared queue when free. 0 is treated
+    /// as 1.
+    pub workers: usize,
 }
 
 type ReplyHandle = Arc<Mutex<TcpStream>>;
 
-/// A running server (worker + listener threads).
+/// A running server (listener + batcher + worker-pool threads).
 pub struct Server {
     pub addr: std::net::SocketAddr,
     pub metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
     listener_thread: Option<JoinHandle<()>>,
-    worker_thread: Option<JoinHandle<()>>,
+    batcher_thread: Option<JoinHandle<()>>,
+    worker_threads: Vec<JoinHandle<()>>,
 }
 
 impl Server {
-    /// Compile the artifact on a dedicated worker thread, bind `addr`
-    /// (port 0 for ephemeral) and start serving `params`.
+    /// Compile the artifact on `cfg.workers` dedicated worker threads, bind
+    /// `addr` (port 0 for ephemeral) and start serving `params`.
     pub fn start(
         artifacts_dir: &Path,
         cfg: ServerConfig,
@@ -55,45 +68,82 @@ impl Server {
         let stop = Arc::new(AtomicBool::new(false));
         let (tx, rx) = channel::<Pending<ReplyHandle>>();
 
-        // Worker: owns PJRT client + executable + parameter literals.
+        // Worker pool: each worker owns PJRT client + executable + literals
+        // and pulls batches from one shared queue when free.
+        let n_workers = cfg.workers.max(1);
         let (ready_tx, ready_rx) = channel::<Result<()>>();
-        let worker_metrics = Arc::clone(&metrics);
-        let (batch, seq, vocab) = (manifest.batch, manifest.seq, manifest.vocab);
-        let policy = cfg.policy;
-        let worker_stop = Arc::clone(&stop);
-        let artifact_path: PathBuf = manifest.artifact(&cfg.artifact);
-        let worker_params = params.clone();
-        let worker_thread = std::thread::Builder::new()
-            .name("hif4-worker".into())
+        // Rendezvous handoff: while every worker is busy the batcher blocks
+        // here and the request queue keeps accumulating, so the next drain
+        // coalesces the backlog into full batches (no padded fragments).
+        let (batch_tx, batch_rx) = sync_channel::<Vec<Pending<ReplyHandle>>>(0);
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        // One shared weight copy: every worker builds its literals from the
+        // same Arc'd store instead of deep-cloning per worker.
+        let shared_params = Arc::new(params.clone());
+        let mut worker_threads = Vec::with_capacity(n_workers);
+        for wi in 0..n_workers {
+            let wrx = Arc::clone(&batch_rx);
+            let ready_tx = ready_tx.clone();
+            let worker_metrics = Arc::clone(&metrics);
+            let (batch, seq, vocab) = (manifest.batch, manifest.seq, manifest.vocab);
+            let artifact_path: PathBuf = manifest.artifact(&cfg.artifact);
+            let worker_params = Arc::clone(&shared_params);
+            let handle = std::thread::Builder::new()
+                .name(format!("hif4-worker-{wi}"))
+                .spawn(move || {
+                    let setup = (|| -> Result<(Executable, Vec<xla::Literal>)> {
+                        let runtime = Runtime::cpu()?;
+                        let exe = runtime.load(&artifact_path)?;
+                        let literals = worker_params.literals()?;
+                        Ok((exe, literals))
+                    })();
+                    // Only the literals are needed past setup; release this
+                    // worker's handle on the shared weight copy (the store
+                    // itself frees once the last worker finishes setup).
+                    drop(worker_params);
+                    match setup {
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(e));
+                        }
+                        Ok((exe, param_literals)) => {
+                            let _ = ready_tx.send(Ok(()));
+                            worker_loop(
+                                exe,
+                                param_literals,
+                                wrx,
+                                batch,
+                                seq,
+                                vocab,
+                                worker_metrics,
+                            );
+                        }
+                    }
+                })
+                .context("spawn worker")?;
+            worker_threads.push(handle);
+        }
+        drop(ready_tx);
+        drop(batch_rx); // workers hold the only receiver clones now
+        drop(shared_params); // workers hold the remaining weight handles
+        for _ in 0..n_workers {
+            ready_rx.recv().context("worker died during setup")??;
+        }
+
+        // Batcher: drains the request queue into the shared batch queue.
+        // Clamp to the artifact's lowered batch dimension — a larger
+        // max_batch would make run_batch truncate the token rows but still
+        // index logits for every pending request (out of bounds).
+        let mut policy = cfg.policy;
+        policy.max_batch = policy.max_batch.clamp(1, manifest.batch);
+        let batcher_metrics = Arc::clone(&metrics);
+        let batcher_thread = std::thread::Builder::new()
+            .name("hif4-batcher".into())
             .spawn(move || {
-                let setup = (|| -> Result<(Executable, Vec<xla::Literal>)> {
-                    let runtime = Runtime::cpu()?;
-                    let exe = runtime.load(&artifact_path)?;
-                    let literals = worker_params.literals()?;
-                    Ok((exe, literals))
-                })();
-                match setup {
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                    }
-                    Ok((exe, param_literals)) => {
-                        let _ = ready_tx.send(Ok(()));
-                        worker_loop(
-                            exe,
-                            param_literals,
-                            rx,
-                            policy,
-                            batch,
-                            seq,
-                            vocab,
-                            worker_metrics,
-                            worker_stop,
-                        );
-                    }
-                }
+                run_batcher(&rx, &policy, &batch_tx, |n| {
+                    batcher_metrics.record_batch(n);
+                });
             })
-            .context("spawn worker")?;
-        ready_rx.recv().context("worker died during setup")??;
+            .context("spawn batcher")?;
 
         // Listener: a thread per connection reads requests into the queue.
         let listener = TcpListener::bind(addr)?;
@@ -110,7 +160,8 @@ impl Server {
             metrics,
             stop,
             listener_thread: Some(listener_thread),
-            worker_thread: Some(worker_thread),
+            batcher_thread: Some(batcher_thread),
+            worker_threads,
         })
     }
 
@@ -125,10 +176,15 @@ impl Server {
 impl Drop for Server {
     fn drop(&mut self) {
         self.shutdown();
+        // Join in pipeline order: closing the listener drops the request
+        // queue, which stops the batcher, which closes the worker queues.
         if let Some(t) = self.listener_thread.take() {
             let _ = t.join();
         }
-        if let Some(t) = self.worker_thread.take() {
+        if let Some(t) = self.batcher_thread.take() {
+            let _ = t.join();
+        }
+        for t in self.worker_threads.drain(..) {
             let _ = t.join();
         }
     }
@@ -164,21 +220,24 @@ fn listener_loop(
     }
 }
 
-#[allow(clippy::too_many_arguments)]
+/// Worker lifecycle is purely channel-driven (exit when the batch queue
+/// closes): the batcher may be blocked in a rendezvous `send`, so a worker
+/// must never stop pulling before the channel closes or shutdown could
+/// deadlock.
 fn worker_loop(
     exe: Executable,
     param_literals: Vec<xla::Literal>,
-    rx: std::sync::mpsc::Receiver<Pending<ReplyHandle>>,
-    policy: BatchPolicy,
+    rx: Arc<Mutex<Receiver<Vec<Pending<ReplyHandle>>>>>,
     batch: usize,
     seq: usize,
     vocab: usize,
     metrics: Arc<Metrics>,
-    stop: Arc<AtomicBool>,
 ) {
-    while !stop.load(Ordering::SeqCst) {
-        let Some(pending) = next_batch(&rx, &policy) else { break };
-        metrics.record_batch(pending.len());
+    loop {
+        // Lock only for the pull: whichever worker is free takes the next
+        // batch (same pattern as util::threadpool::ThreadPool).
+        let next = { rx.lock().unwrap().recv() };
+        let Ok(pending) = next else { break };
         match run_batch(&exe, &param_literals, &pending, batch, seq, vocab) {
             Ok(responses) => {
                 for (p, mut resp) in pending.iter().zip(responses) {
@@ -192,6 +251,14 @@ fn worker_loop(
             }
             Err(e) => {
                 eprintln!("batch execution failed: {e:#}");
+                // Fail fast for the affected clients: close their
+                // connections instead of leaving them blocked in recv()
+                // waiting for replies that will never come.
+                for p in &pending {
+                    if let Ok(s) = p.reply.lock() {
+                        let _ = s.shutdown(std::net::Shutdown::Both);
+                    }
+                }
             }
         }
     }
@@ -217,7 +284,7 @@ pub fn run_batch(
         .collect();
     token_rows.resize_with(batch, || vec![0]);
     let tokens = tokens_literal(&token_rows, seq)?;
-    // Borrow-based input list: parameter literals are built once per server
+    // Borrow-based input list: parameter literals are built once per worker
     // lifetime, only the token literal is fresh per batch (§Perf).
     let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(param_literals.len() + 1);
     inputs.extend(param_literals.iter());

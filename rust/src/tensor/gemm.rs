@@ -1,11 +1,20 @@
 //! f32 GEMM — the compute substrate for the rust-native model forward
 //! (calibration + eval paths) and for GPTQ's Hessian accumulation.
 //!
-//! `C = A (m×k) · B (k×n)`. The hot path is `matmul`, a cache-blocked,
-//! B-packed kernel tuned in the §Perf pass; `matmul_naive` is kept as the
-//! correctness oracle.
+//! `C = A (m×k) · B (k×n)`. The hot paths are `matmul` / `matmul_bt`:
+//! cache-blocked kernels whose output rows are fanned out over contiguous
+//! row bands via [`crate::util::threadpool::parallel_row_bands`], so the
+//! whole model stack (transformer forward/backward, eval, GPTQ
+//! calibration) inherits multi-core speed transparently. Each output row
+//! is computed by exactly one thread with a fixed reduction order, so any
+//! thread count returns **bit-identical** matrices (`matmul_threads(a, b,
+//! 1) == matmul_threads(a, b, n)` exactly); `matmul_naive` is kept as the
+//! correctness oracle. The default entry points take the process-wide
+//! thread knob (`HIF4_THREADS` / `--threads`) and stay serial for small
+//! problems where spawn cost would dominate.
 
 use super::matrix::Matrix;
+use crate::util::threadpool::{self, parallel_row_bands};
 
 /// Naive triple loop — correctness oracle for property tests.
 pub fn matmul_naive(a: &Matrix, b: &Matrix) -> Matrix {
@@ -24,51 +33,82 @@ pub fn matmul_naive(a: &Matrix, b: &Matrix) -> Matrix {
 }
 
 /// Cache-blocked GEMM with an i-k-j loop order (unit-stride inner loop over
-/// both B and C rows — autovectorizes well on a single core).
+/// both B and C rows — autovectorizes well per core), parallelized over
+/// C-row bands with the process-default thread count.
 pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    matmul_threads(a, b, threadpool::threads_for(a.rows * a.cols * b.cols))
+}
+
+/// [`matmul`] with an explicit thread count. Bit-identical for every
+/// `threads` value: each C row's reduction runs on one thread in a fixed
+/// (ascending-p) order.
+pub fn matmul_threads(a: &Matrix, b: &Matrix, threads: usize) -> Matrix {
     assert_eq!(a.cols, b.rows, "inner dims must agree");
     let (m, k, n) = (a.rows, a.cols, b.cols);
     let mut c = Matrix::zeros(m, n);
+    if m == 0 || n == 0 {
+        return c;
+    }
     const KB: usize = 256;
     const JB: usize = 512;
-    for j0 in (0..n).step_by(JB) {
-        let j1 = (j0 + JB).min(n);
-        for p0 in (0..k).step_by(KB) {
-            let p1 = (p0 + KB).min(k);
-            for i in 0..m {
-                let arow = &a.data[i * k..(i + 1) * k];
-                let crow = &mut c.data[i * n..(i + 1) * n];
-                for p in p0..p1 {
-                    let av = arow[p];
-                    if av == 0.0 {
-                        continue;
-                    }
-                    let brow = &b.data[p * n..(p + 1) * n];
-                    for j in j0..j1 {
-                        crow[j] += av * brow[j];
+    parallel_row_bands(&mut c.data, n, threads, |first_row, band| {
+        let rows = band.len() / n;
+        for j0 in (0..n).step_by(JB) {
+            let j1 = (j0 + JB).min(n);
+            for p0 in (0..k).step_by(KB) {
+                let p1 = (p0 + KB).min(k);
+                for i in 0..rows {
+                    let arow = &a.data[(first_row + i) * k..(first_row + i + 1) * k];
+                    let crow = &mut band[i * n..(i + 1) * n];
+                    for p in p0..p1 {
+                        let av = arow[p];
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let brow = &b.data[p * n..(p + 1) * n];
+                        for j in j0..j1 {
+                            crow[j] += av * brow[j];
+                        }
                     }
                 }
             }
         }
-    }
+    });
     c
 }
 
 /// `C = A · Bᵀ` with B given row-major (so B's rows are the reduction
 /// vectors — the natural layout for weight matrices stored out_features ×
-/// in_features, as linear layers do).
+/// in_features, as linear layers do). Row-parallel like [`matmul`].
 pub fn matmul_bt(a: &Matrix, b_t: &Matrix) -> Matrix {
+    matmul_bt_threads(a, b_t, threadpool::threads_for(a.rows * a.cols * b_t.rows))
+}
+
+/// [`matmul_bt`] with an explicit thread count (bit-identical for every
+/// value — one `dot` per output element either way).
+pub fn matmul_bt_threads(a: &Matrix, b_t: &Matrix, threads: usize) -> Matrix {
     assert_eq!(a.cols, b_t.cols, "inner dims must agree");
     let (m, k, n) = (a.rows, a.cols, b_t.rows);
     let mut c = Matrix::zeros(m, n);
-    for i in 0..m {
-        let arow = &a.data[i * k..(i + 1) * k];
-        let crow = &mut c.data[i * n..(i + 1) * n];
-        for j in 0..n {
-            let brow = &b_t.data[j * k..(j + 1) * k];
-            crow[j] = dot(arow, brow);
-        }
+    if m == 0 || n == 0 {
+        return c;
     }
+    // Block over B rows so a panel of B stays cache-hot across the band.
+    const JB: usize = 64;
+    parallel_row_bands(&mut c.data, n, threads, |first_row, band| {
+        let rows = band.len() / n;
+        for j0 in (0..n).step_by(JB) {
+            let j1 = (j0 + JB).min(n);
+            for i in 0..rows {
+                let arow = &a.data[(first_row + i) * k..(first_row + i + 1) * k];
+                let crow = &mut band[i * n..(i + 1) * n];
+                for j in j0..j1 {
+                    let brow = &b_t.data[j * k..(j + 1) * k];
+                    crow[j] = dot(arow, brow);
+                }
+            }
+        }
+    });
     c
 }
 

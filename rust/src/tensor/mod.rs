@@ -1,4 +1,14 @@
-//! Tensor substrate: dense matrices, deterministic RNG, gemm kernels.
+//! Tensor substrate: dense matrices, deterministic RNG, GEMM kernels.
+//!
+//! Everything rust-native builds on this layer: [`Matrix`] is a plain
+//! row-major `Vec<f32>` with explicit shapes (no broadcasting, no strides
+//! — predictable layout is what lets the quantizers and the parallel
+//! kernels band rows safely), [`Rng`] is a seeded SplitMix64 so every
+//! table and figure regenerates bit-identically, and [`gemm`] holds the
+//! cache-blocked, row-parallel f32 matmul kernels the transformer
+//! forward/backward, GPTQ calibration and eval paths share. The parallel
+//! kernels are deterministic: any thread count returns bit-identical
+//! results (see `tests/parallel_parity.rs`).
 
 pub mod gemm;
 pub mod matrix;

@@ -1,12 +1,78 @@
-//! Fixed-size thread pool (the offline image has no tokio/rayon).
+//! Fixed-size thread pool and scoped data-parallel helpers (the offline
+//! image has no tokio/rayon).
 //!
-//! Used by the serving worker pool and by data-parallel sweeps. Scoped
-//! `parallel_for` covers the fork-join pattern the quantization sweeps use.
+//! Used by the serving worker pool and by every data-parallel hot path:
+//! scoped [`parallel_for`] covers plain fork-join index loops, and
+//! [`parallel_row_bands`] / [`parallel_row_bands2`] hand each worker a
+//! contiguous band of matrix rows to mutate — the backbone of the parallel
+//! GEMM/QGEMM/GPTQ kernels. Those kernels keep the per-row floating-point
+//! accumulation order independent of the band split, so any thread count
+//! produces bit-identical results (asserted by `tests/parallel_parity.rs`).
+//!
+//! The process-wide default worker count is [`threads`]: the `HIF4_THREADS`
+//! environment variable if set, else the machine parallelism; override it
+//! programmatically with [`set_threads`] (the CLI exposes `--threads`).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+
+/// Per-thread work floor (in flop-equivalent element-ops) for the parallel
+/// entry points: a spawned band must carry at least this much work to
+/// amortize its spawn/join cost, so small problems stay serial and
+/// mid-sized ones use only as many threads as the work supports.
+pub const PAR_MIN_WORK: usize = 1 << 17;
+
+/// Flop-equivalents per element for the block-quantization codecs
+/// (Algorithm 1 runs peak trees, reciprocal scaling and per-element
+/// rounding — tens of operations per value, vs ~1 per GEMM element-op).
+/// Quantization call sites multiply their element counts by this before
+/// [`threads_for`], so a mid-sized weight matrix parallelizes even though
+/// its raw element count looks small.
+pub const QUANT_WORK_PER_ELEM: usize = 32;
+
+/// Process-wide thread-count override; 0 = not resolved yet.
+static THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// The process-wide default worker count for data-parallel kernels:
+/// `HIF4_THREADS` if set and positive, else `available_parallelism()`.
+pub fn threads() -> usize {
+    let t = THREADS.load(Ordering::Relaxed);
+    if t != 0 {
+        return t;
+    }
+    let resolved = std::env::var("HIF4_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|n| *n > 0)
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
+    // Cache only if still unset, so a concurrent set_threads() override is
+    // never clobbered by a racing default resolution.
+    match THREADS.compare_exchange(0, resolved, Ordering::Relaxed, Ordering::Relaxed) {
+        Ok(_) => resolved,
+        Err(current) => current,
+    }
+}
+
+/// Override the process-wide default worker count (`n >= 1`).
+pub fn set_threads(n: usize) {
+    assert!(n > 0, "thread count must be positive");
+    THREADS.store(n, Ordering::Relaxed);
+}
+
+/// Effective thread count for a kernel doing `work` independent element
+/// operations: the process default, capped so every thread gets at least
+/// [`PAR_MIN_WORK`] element-ops (1 — i.e. serial, no spawns — for
+/// anything smaller than two floors' worth).
+pub fn threads_for(work: usize) -> usize {
+    let cap = work / PAR_MIN_WORK;
+    if cap <= 1 {
+        1
+    } else {
+        threads().min(cap)
+    }
+}
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -89,6 +155,79 @@ where
     });
 }
 
+/// Split `data` — a row-major `rows × row_len` buffer — into contiguous
+/// per-thread row bands and run `f(first_row, band)` on each band across
+/// `threads` scoped OS threads (`threads = 1` runs inline with one band
+/// covering the whole buffer).
+///
+/// Rows are never split across bands, so per-row computations (and their
+/// floating-point accumulation order) are identical for every thread
+/// count — the determinism contract the parallel GEMM paths rely on.
+pub fn parallel_row_bands<T, F>(data: &mut [T], row_len: usize, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if data.is_empty() {
+        return;
+    }
+    assert!(row_len > 0 && data.len() % row_len == 0, "buffer must be whole rows");
+    let rows = data.len() / row_len;
+    let threads = threads.clamp(1, rows);
+    if threads == 1 {
+        f(0, data);
+        return;
+    }
+    let band_rows = rows.div_ceil(threads);
+    std::thread::scope(|s| {
+        let f = &f;
+        for (b, band) in data.chunks_mut(band_rows * row_len).enumerate() {
+            s.spawn(move || f(b * band_rows, band));
+        }
+    });
+}
+
+/// Like [`parallel_row_bands`], but bands two buffers with the same row
+/// count in lockstep (e.g. a quantized weight matrix plus a per-row loss
+/// vector): `f(first_row, band_a, band_b)`.
+pub fn parallel_row_bands2<A, B, F>(
+    a: &mut [A],
+    a_row_len: usize,
+    b: &mut [B],
+    b_row_len: usize,
+    threads: usize,
+    f: F,
+) where
+    A: Send,
+    B: Send,
+    F: Fn(usize, &mut [A], &mut [B]) + Sync,
+{
+    if a.is_empty() && b.is_empty() {
+        return;
+    }
+    // Validate the shapes before any early return, so an inconsistent call
+    // (e.g. empty A with a nonempty B) panics instead of silently leaving
+    // B untouched.
+    assert!(a_row_len > 0 && a.len() % a_row_len == 0, "buffer A must be whole rows");
+    assert!(b_row_len > 0 && b.len() % b_row_len == 0, "buffer B must be whole rows");
+    let rows = a.len() / a_row_len;
+    assert_eq!(rows, b.len() / b_row_len, "banded buffers must share the row count");
+    let threads = threads.clamp(1, rows);
+    if threads == 1 {
+        f(0, a, b);
+        return;
+    }
+    let band_rows = rows.div_ceil(threads);
+    std::thread::scope(|s| {
+        let f = &f;
+        let bands_a = a.chunks_mut(band_rows * a_row_len);
+        let bands_b = b.chunks_mut(band_rows * b_row_len);
+        for (i, (band_a, band_b)) in bands_a.zip(bands_b).enumerate() {
+            s.spawn(move || f(i * band_rows, band_a, band_b));
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -127,5 +266,78 @@ mod tests {
         });
         assert_eq!(sum.load(Ordering::Relaxed), 45);
         parallel_for(0, 4, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn pool_drains_queue_on_shutdown() {
+        // Shutdown semantics: dropping the pool closes the channel but the
+        // workers keep consuming until the queue is empty — every job that
+        // was enqueued before the drop must run exactly once, even the ones
+        // still queued behind deliberately slow jobs.
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = ThreadPool::new(2);
+            for i in 0..64 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    if i < 4 {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            // Pool dropped here with most of the queue still pending.
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 64, "all queued jobs drained");
+    }
+
+    #[test]
+    fn row_bands_cover_every_row_once() {
+        for threads in [1, 2, 3, 4, 7] {
+            let mut data = vec![0u32; 10 * 3];
+            parallel_row_bands(&mut data, 3, threads, |first_row, band| {
+                for (i, row) in band.chunks_mut(3).enumerate() {
+                    for x in row.iter_mut() {
+                        *x += 1 + (first_row + i) as u32;
+                    }
+                }
+            });
+            for r in 0..10 {
+                assert_eq!(&data[r * 3..(r + 1) * 3], [1 + r as u32; 3], "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn row_bands2_stay_in_lockstep() {
+        let mut a = vec![0u32; 8 * 4];
+        let mut b = vec![0u64; 8];
+        parallel_row_bands2(&mut a, 4, &mut b, 1, 3, |first_row, band_a, band_b| {
+            for i in 0..band_b.len() {
+                let r = (first_row + i) as u32;
+                for x in band_a[i * 4..(i + 1) * 4].iter_mut() {
+                    *x = r;
+                }
+                band_b[i] = r as u64 * 10;
+            }
+        });
+        for r in 0..8 {
+            assert!(a[r * 4..(r + 1) * 4].iter().all(|x| *x == r as u32));
+            assert_eq!(b[r], r as u64 * 10);
+        }
+    }
+
+    #[test]
+    fn thread_knob_round_trips() {
+        // threads() resolves to something positive; set_threads overrides.
+        assert!(threads() >= 1);
+        let prev = threads();
+        set_threads(3);
+        assert_eq!(threads(), 3);
+        assert_eq!(threads_for(PAR_MIN_WORK - 1), 1, "below one floor: serial");
+        assert_eq!(threads_for(PAR_MIN_WORK), 1, "one floor's worth: still serial");
+        assert_eq!(threads_for(2 * PAR_MIN_WORK), 2, "capped by per-thread floor");
+        assert_eq!(threads_for(100 * PAR_MIN_WORK), 3, "capped by process default");
+        set_threads(prev);
     }
 }

@@ -53,8 +53,8 @@ fn qdq_artifact_matches_rust_codec_bit_exactly() {
             let scheme = QuantScheme::direct(format);
             let mut want = vec![0f32; data.len()];
             for r in 0..rows {
-                scheme
-                    .quant_dequant(&data[r * cols..(r + 1) * cols], &mut want[r * cols..(r + 1) * cols]);
+                let (lo, hi) = (r * cols, (r + 1) * cols);
+                scheme.quant_dequant(&data[lo..hi], &mut want[lo..hi]);
             }
             assert_eq!(got, want, "{artifact} mismatch at sigma={sigma}");
         }
@@ -187,6 +187,7 @@ fn end_to_end_tcp_serving() {
     let cfg = ServerConfig {
         artifact: "fwd_bf16.hlo.txt".into(),
         policy: BatchPolicy { max_batch: m.batch, max_wait: std::time::Duration::from_millis(2) },
+        workers: 2,
     };
     let server = Server::start(&dir, cfg, &params, "127.0.0.1:0").unwrap();
 

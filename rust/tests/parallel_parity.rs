@@ -1,0 +1,160 @@
+//! Parallel/serial parity: every row-parallel kernel must produce
+//! **bit-identical** output for any thread count. Each output row is
+//! computed by exactly one thread with a fixed floating-point reduction
+//! order, so `threads = 1` and `threads = N` must agree down to the last
+//! bit — these tests pin that contract for the quantizers, the quantized
+//! GEMMs, the f32 GEMMs and the GPTQ pipeline.
+
+use hif4::dotprod::qgemm::{hif4_gemm_bt_threads, nvfp4_gemm_bt_threads, HiF4Matrix, Nvfp4Matrix};
+use hif4::formats::rounding::RoundMode;
+use hif4::quant::gptq::{gptq_quantize_with_hessian_threads, hessian_threads, GptqConfig};
+use hif4::tensor::gemm::{matmul_bt_threads, matmul_naive, matmul_threads};
+use hif4::tensor::{Matrix, Rng};
+
+const MODE: RoundMode = RoundMode::NearestEven;
+const THREAD_COUNTS: [usize; 4] = [2, 3, 4, 7];
+
+/// Shapes exercising clean multiples, ragged tails of both group sizes
+/// (64 and 16), sub-unit K and more rows than any band count.
+fn shapes() -> Vec<(usize, usize, usize)> {
+    vec![(5, 130, 7), (16, 64, 16), (1, 200, 9), (23, 72, 11), (8, 40, 3)]
+}
+
+#[test]
+fn hif4_quantize_parity() {
+    let mut rng = Rng::seed(9001);
+    for (m, k, _) in shapes() {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let serial = HiF4Matrix::quantize_threads(&a, MODE, 1);
+        for t in THREAD_COUNTS {
+            let par = HiF4Matrix::quantize_threads(&a, MODE, t);
+            assert_eq!(serial.units, par.units, "{m}x{k} threads={t}");
+            assert_eq!(serial.units_per_row, par.units_per_row);
+        }
+    }
+}
+
+#[test]
+fn nvfp4_quantize_parity() {
+    let mut rng = Rng::seed(9002);
+    for (m, k, _) in shapes() {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let serial = Nvfp4Matrix::quantize_threads(&a, MODE, 1);
+        for t in THREAD_COUNTS {
+            let par = Nvfp4Matrix::quantize_threads(&a, MODE, t);
+            assert_eq!(serial.groups, par.groups, "{m}x{k} threads={t}");
+        }
+    }
+}
+
+#[test]
+fn hif4_qgemm_parity_bit_identical() {
+    let mut rng = Rng::seed(9003);
+    for (m, k, n) in shapes() {
+        let a = HiF4Matrix::quantize_threads(&Matrix::randn(m, k, 1.0, &mut rng), MODE, 1);
+        let b = HiF4Matrix::quantize_threads(&Matrix::randn(n, k, 1.0, &mut rng), MODE, 1);
+        let serial = hif4_gemm_bt_threads(&a, &b, 1);
+        for t in THREAD_COUNTS {
+            let par = hif4_gemm_bt_threads(&a, &b, t);
+            assert_eq!(
+                serial.data.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+                par.data.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+                "{m}x{k}x{n} threads={t}"
+            );
+        }
+    }
+}
+
+#[test]
+fn nvfp4_qgemm_parity_bit_identical() {
+    let mut rng = Rng::seed(9004);
+    for (m, k, n) in shapes() {
+        let a = Nvfp4Matrix::quantize_threads(&Matrix::randn(m, k, 1.0, &mut rng), MODE, 1);
+        let b = Nvfp4Matrix::quantize_threads(&Matrix::randn(n, k, 1.0, &mut rng), MODE, 1);
+        let serial = nvfp4_gemm_bt_threads(&a, &b, 1);
+        for t in THREAD_COUNTS {
+            let par = nvfp4_gemm_bt_threads(&a, &b, t);
+            assert_eq!(
+                serial.data.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+                par.data.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+                "{m}x{k}x{n} threads={t}"
+            );
+        }
+    }
+}
+
+#[test]
+fn f32_gemm_parity_bit_identical() {
+    let mut rng = Rng::seed(9005);
+    for (m, k, n) in shapes() {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let bt = b.transpose();
+        let serial = matmul_threads(&a, &b, 1);
+        let serial_bt = matmul_bt_threads(&a, &bt, 1);
+        for t in THREAD_COUNTS {
+            assert_eq!(serial.data, matmul_threads(&a, &b, t).data, "matmul {m}x{k}x{n} t={t}");
+            assert_eq!(
+                serial_bt.data,
+                matmul_bt_threads(&a, &bt, t).data,
+                "matmul_bt {m}x{k}x{n} t={t}"
+            );
+        }
+        // And the parallel kernel still computes a correct product.
+        let oracle = matmul_naive(&a, &b);
+        for (x, y) in serial.data.iter().zip(&oracle.data) {
+            assert!((x - y).abs() <= 1e-4 * (1.0 + x.abs()), "{x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn gptq_parity_bit_identical() {
+    let mut rng = Rng::seed(9006);
+    for fmt in [hif4::formats::Format::HiF4, hif4::formats::Format::Nvfp4] {
+        let (out_f, in_f, samples) = (12, 96, 48);
+        let w = Matrix::randn(out_f, in_f, 0.05, &mut rng);
+        let x = Matrix::randn(samples, in_f, 1.0, &mut rng);
+        let h_serial = hessian_threads(&x, 1);
+        for t in THREAD_COUNTS {
+            let h_par = hessian_threads(&x, t);
+            assert_eq!(
+                h_serial.iter().map(|v| v.to_bits()).collect::<Vec<u64>>(),
+                h_par.iter().map(|v| v.to_bits()).collect::<Vec<u64>>(),
+                "hessian threads={t}"
+            );
+        }
+        let cfg = GptqConfig { format: fmt, mode: MODE, pts: false };
+        let serial = gptq_quantize_with_hessian_threads(&w, &h_serial, &cfg, 1);
+        for t in THREAD_COUNTS {
+            let par = gptq_quantize_with_hessian_threads(&w, &h_serial, &cfg, t);
+            assert_eq!(
+                serial.weights.data.iter().map(|v| v.to_bits()).collect::<Vec<u32>>(),
+                par.weights.data.iter().map(|v| v.to_bits()).collect::<Vec<u32>>(),
+                "{fmt:?} weights threads={t}"
+            );
+            assert_eq!(
+                serial.proxy_loss.to_bits(),
+                par.proxy_loss.to_bits(),
+                "{fmt:?} proxy loss threads={t}"
+            );
+        }
+    }
+}
+
+#[test]
+fn default_entry_points_match_explicit_serial() {
+    // The knob-driven wrappers (whatever the ambient thread count) must
+    // agree exactly with the explicit serial kernels.
+    let mut rng = Rng::seed(9007);
+    let a = Matrix::randn(33, 130, 1.0, &mut rng);
+    let b = Matrix::randn(17, 130, 1.0, &mut rng);
+    let qa = HiF4Matrix::quantize(&a, MODE);
+    let qb = HiF4Matrix::quantize(&b, MODE);
+    let qa1 = HiF4Matrix::quantize_threads(&a, MODE, 1);
+    let qb1 = HiF4Matrix::quantize_threads(&b, MODE, 1);
+    assert_eq!(qa.units, qa1.units);
+    let c = hif4::dotprod::qgemm::hif4_gemm_bt(&qa, &qb);
+    let c1 = hif4_gemm_bt_threads(&qa1, &qb1, 1);
+    assert_eq!(c.data, c1.data);
+}
