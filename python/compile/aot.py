@@ -142,6 +142,13 @@ def main():
         f"batch {model.BATCH}",
         f"seq {model.SEQ}",
         f"vocab {model.CONFIG['vocab']}",
+        # Attention geometry for the Rust native (PJRT-free) backend,
+        # which rebuilds this model from the ParamStore (runtime/native.rs);
+        # shapes alone cannot recover the head split or RoPE base.
+        f"n_heads {model.CONFIG['n_heads']}",
+        f"kv_heads {model.CONFIG['kv_heads']}",
+        f"head_dim {model.CONFIG['head_dim']}",
+        f"rope_base {model.CONFIG['rope_base']}",
         f"qdq {QDQ_ROWS} {QDQ_COLS}",
     ]
     for n in names:

@@ -63,7 +63,11 @@ fn main() {
         std::hint::black_box(nvfp4_flow::dot64(&ga, &gb));
     });
 
-    // Quantized GEMM built from the PE flows.
+    // Quantized GEMM built from the PE flows. The entry points dispatch
+    // on the process kernel backend (flow reference vs decode-once packed
+    // planes — bit-identical; see benches/qgemm_throughput.rs for the
+    // backend comparison).
+    println!("qgemm kernel backend: {:?}", hif4::dotprod::kernel());
     let quick = std::env::var("HIF4_BENCH_QUICK").is_ok();
     let (m, k, nn) = if quick { (16, 128, 16) } else { (64, 512, 64) };
     let a = Matrix::randn(m, k, 1.0, &mut rng);

@@ -1,0 +1,182 @@
+//! Flow-vs-packed quantized GEMM throughput at serving-like shapes.
+//!
+//! Times the reference flow kernel against the decode-once packed kernel
+//! (single- and multi-thread), asserts their outputs are bit-identical,
+//! and writes `BENCH_qgemm.json` (GFLOP/s + speedups) so the perf
+//! trajectory is machine-readable across PRs. `HIF4_BENCH_QUICK=1`
+//! shrinks to one small shape for CI smoke runs (build + run, no
+//! thresholds enforced here).
+//!
+//! "Packed (end-to-end)" includes packing both operands fresh each call —
+//! the worst case for the packed path; "packed (prepacked)" reuses the
+//! planes, which is how the model/serving layers actually run (weights
+//! pack once, activations per call).
+
+use hif4::dotprod::packed::{
+    hif4_gemm_bt_packed_threads, nvfp4_gemm_bt_packed_threads, PackedHiF4Matrix,
+    PackedNvfp4Matrix,
+};
+use hif4::dotprod::qgemm::{
+    hif4_gemm_bt_flow_threads, nvfp4_gemm_bt_flow_threads, HiF4Matrix, Nvfp4Matrix,
+};
+use hif4::formats::rounding::RoundMode;
+use hif4::tensor::{Matrix, Rng};
+use hif4::util::threadpool;
+use std::time::Instant;
+
+/// Best-of-`reps` wall time of `f`, in seconds (result is black-boxed).
+fn secs<T, F: FnMut() -> T>(reps: usize, mut f: F) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+struct KernelTimes {
+    flow_s: f64,
+    packed_s: f64,
+    packed_prepacked_s: f64,
+    pack_s: f64,
+}
+
+impl KernelTimes {
+    fn row(&self, label: &str, flops: f64) -> String {
+        let gf = |s: f64| flops / s / 1e9;
+        println!(
+            "{label:<28} flow {:8.3}s ({:6.3} GFLOP/s)  packed e2e {:8.3}s ({:6.3} GFLOP/s)  \
+             prepacked {:8.3}s ({:6.3} GFLOP/s)  pack {:6.3}s  speedup {:5.2}x (e2e) {:5.2}x (prepacked)",
+            self.flow_s,
+            gf(self.flow_s),
+            self.packed_s,
+            gf(self.packed_s),
+            self.packed_prepacked_s,
+            gf(self.packed_prepacked_s),
+            self.pack_s,
+            self.flow_s / self.packed_s,
+            self.flow_s / self.packed_prepacked_s,
+        );
+        // Inner JSON fields (no braces); the caller wraps them.
+        format!(
+            "\"flow_s\":{:.6},\"packed_s\":{:.6},\"packed_prepacked_s\":{:.6},\
+             \"pack_s\":{:.6},\"flow_gflops\":{:.4},\"packed_gflops\":{:.4},\
+             \"packed_prepacked_gflops\":{:.4},\"speedup\":{:.3},\"speedup_prepacked\":{:.3}",
+            self.flow_s,
+            self.packed_s,
+            self.packed_prepacked_s,
+            self.pack_s,
+            gf(self.flow_s),
+            gf(self.packed_s),
+            gf(self.packed_prepacked_s),
+            self.flow_s / self.packed_s,
+            self.flow_s / self.packed_prepacked_s,
+        )
+    }
+}
+
+fn bits(m: &Matrix) -> Vec<u32> {
+    m.data.iter().map(|x| x.to_bits()).collect()
+}
+
+fn main() {
+    let quick = std::env::var("HIF4_BENCH_QUICK").is_ok();
+    // Serving-like shape: decode activations (batch·seq = 512 rows) ×
+    // d_ff-scale weights over a 4096 reduction.
+    let (m, k, n) = if quick { (64, 512, 64) } else { (512, 4096, 512) };
+    let reps_flow = if quick { 3 } else { 1 };
+    let reps_packed = if quick { 5 } else { 3 };
+    let nthreads = threadpool::threads();
+    let flops = (2 * m * k * n) as f64;
+    let mode = RoundMode::NearestEven;
+
+    let mut rng = Rng::seed(17);
+    let a = Matrix::randn(m, k, 1.0, &mut rng);
+    let b = Matrix::randn(n, k, 1.0, &mut rng);
+
+    println!("qgemm throughput — shape {m}x{k}x{n}, multi-thread = {nthreads}\n");
+
+    // ---- HiF4 ----
+    let qa = HiF4Matrix::quantize(&a, mode);
+    let qb = HiF4Matrix::quantize(&b, mode);
+    let pa = PackedHiF4Matrix::pack_threads(&qa, 1);
+    let pb = PackedHiF4Matrix::pack_threads(&qb, 1);
+    // Bit-identity of the two backends on the bench shape itself.
+    let c_flow = hif4_gemm_bt_flow_threads(&qa, &qb, nthreads);
+    let c_packed = hif4_gemm_bt_packed_threads(&pa, &pb, nthreads);
+    let identical = bits(&c_flow) == bits(&c_packed);
+    assert!(identical, "flow and packed kernels must agree bit for bit");
+    drop((c_flow, c_packed));
+
+    let mut hif4_json = Vec::new();
+    for (label, threads) in [("single", 1usize), ("multi", nthreads)] {
+        let flow_s =
+            secs(reps_flow, || std::hint::black_box(hif4_gemm_bt_flow_threads(&qa, &qb, threads)));
+        let prepacked_s = secs(reps_packed, || {
+            std::hint::black_box(hif4_gemm_bt_packed_threads(&pa, &pb, threads))
+        });
+        // Pack cost at *this* thread count (the amortized one-time cost).
+        let pack_s = secs(reps_packed, || {
+            std::hint::black_box(PackedHiF4Matrix::pack_threads(&qa, threads));
+            std::hint::black_box(PackedHiF4Matrix::pack_threads(&qb, threads));
+        });
+        let e2e_s = secs(reps_packed, || {
+            let xa = PackedHiF4Matrix::pack_threads(&qa, threads);
+            let xb = PackedHiF4Matrix::pack_threads(&qb, threads);
+            std::hint::black_box(hif4_gemm_bt_packed_threads(&xa, &xb, threads));
+        });
+        let t = KernelTimes {
+            flow_s,
+            packed_s: e2e_s,
+            packed_prepacked_s: prepacked_s,
+            pack_s,
+        };
+        let fields = t.row(&format!("HiF4 {label} ({threads}t)"), flops);
+        hif4_json.push(format!("\"{label}\":{{\"threads\":{threads},{fields}}}"));
+    }
+
+    // ---- NVFP4 ----
+    let na = Nvfp4Matrix::quantize(&a, mode);
+    let nb = Nvfp4Matrix::quantize(&b, mode);
+    let npa = PackedNvfp4Matrix::pack_threads(&na, 1);
+    let npb = PackedNvfp4Matrix::pack_threads(&nb, 1);
+    let mut nvfp4_json = Vec::new();
+    for (label, threads) in [("single", 1usize), ("multi", nthreads)] {
+        let flow_s = secs(reps_flow, || {
+            std::hint::black_box(nvfp4_gemm_bt_flow_threads(&na, &nb, threads))
+        });
+        let prepacked_s = secs(reps_packed, || {
+            std::hint::black_box(nvfp4_gemm_bt_packed_threads(&npa, &npb, threads))
+        });
+        let pack_s = secs(reps_packed, || {
+            std::hint::black_box(PackedNvfp4Matrix::pack_threads(&na, threads));
+            std::hint::black_box(PackedNvfp4Matrix::pack_threads(&nb, threads));
+        });
+        let e2e_s = secs(reps_packed, || {
+            let xa = PackedNvfp4Matrix::pack_threads(&na, threads);
+            let xb = PackedNvfp4Matrix::pack_threads(&nb, threads);
+            std::hint::black_box(nvfp4_gemm_bt_packed_threads(&xa, &xb, threads));
+        });
+        let t = KernelTimes {
+            flow_s,
+            packed_s: e2e_s,
+            packed_prepacked_s: prepacked_s,
+            pack_s,
+        };
+        let fields = t.row(&format!("NVFP4 {label} ({threads}t)"), flops);
+        nvfp4_json.push(format!("\"{label}\":{{\"threads\":{threads},{fields}}}"));
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"qgemm_throughput\",\n  \"quick\": {quick},\n  \
+         \"shape\": {{\"m\": {m}, \"k\": {k}, \"n\": {n}}},\n  \
+         \"bit_identical\": {identical},\n  \
+         \"hif4\": {{{}}},\n  \"nvfp4\": {{{}}}\n}}\n",
+        hif4_json.join(","),
+        nvfp4_json.join(",")
+    );
+    let path = "BENCH_qgemm.json";
+    std::fs::write(path, &json).expect("write BENCH_qgemm.json");
+    println!("\nwrote {path}");
+}

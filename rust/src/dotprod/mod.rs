@@ -18,13 +18,93 @@
 //! Everything here is **bit-exact**: the integer datapaths are checked
 //! against the dequantized-f64 dot product (they agree exactly because every
 //! quantized value is a small dyadic rational times its scales).
+//!
+//! Two software *schedules* of the same datapaths exist: the element-wise
+//! flow kernels above (the reference) and the decode-once [`packed`]
+//! operand planes (the fast path). The process-wide [`kernel`] selector
+//! picks which one the [`qgemm`] entry points run; both are bit-identical,
+//! so it is purely a performance knob.
 
 pub mod hif4_flow;
 pub mod nvfp4_flow;
+pub mod packed;
 pub mod qgemm;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Which software schedule the quantized GEMM entry points run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kernel {
+    /// Reference: every unit pair through the element-wise PE flow
+    /// (re-decodes nibbles/micro-exponents per output element).
+    Flow,
+    /// Fast path (default): decode-once integer operand planes
+    /// ([`packed`]) with a straight `i8` inner dot.
+    Packed,
+}
+
+/// Process-wide kernel-backend override; 0 = not resolved yet.
+static KERNEL: AtomicU8 = AtomicU8::new(0);
+
+const KERNEL_FLOW: u8 = 1;
+const KERNEL_PACKED: u8 = 2;
+
+/// The process-wide kernel backend: `HIF4_KERNEL` (`flow` / `packed`) if
+/// set, else [`Kernel::Packed`]; override with [`set_kernel`] (the CLI
+/// exposes `--kernel`). Both backends produce bit-identical matrices, so
+/// this only changes throughput.
+pub fn kernel() -> Kernel {
+    match KERNEL.load(Ordering::Relaxed) {
+        KERNEL_FLOW => return Kernel::Flow,
+        KERNEL_PACKED => return Kernel::Packed,
+        _ => {}
+    }
+    let resolved = match std::env::var("HIF4_KERNEL").ok().as_deref() {
+        Some("flow") => KERNEL_FLOW,
+        Some("packed") | None => KERNEL_PACKED,
+        Some(other) => {
+            // A perf knob that silently ignores typos would corrupt
+            // measurements; warn loudly (once — the resolution is cached)
+            // and run the default. The CLI's `--kernel` rejects outright.
+            eprintln!(
+                "warning: unrecognized HIF4_KERNEL={other:?} \
+                 (expected \"flow\" or \"packed\"); using packed"
+            );
+            KERNEL_PACKED
+        }
+    };
+    // Cache only if still unset so a racing set_kernel() is never
+    // clobbered (same pattern as threadpool::threads).
+    match KERNEL.compare_exchange(0, resolved, Ordering::Relaxed, Ordering::Relaxed) {
+        Ok(_) => {}
+        Err(current) => return if current == KERNEL_FLOW { Kernel::Flow } else { Kernel::Packed },
+    }
+    if resolved == KERNEL_FLOW {
+        Kernel::Flow
+    } else {
+        Kernel::Packed
+    }
+}
+
+/// Override the process-wide kernel backend.
+pub fn set_kernel(k: Kernel) {
+    let v = match k {
+        Kernel::Flow => KERNEL_FLOW,
+        Kernel::Packed => KERNEL_PACKED,
+    };
+    KERNEL.store(v, Ordering::Relaxed);
+}
 
 /// Datapath statistics a flow reports — consumed by [`crate::hwcost`] and
 /// the Fig-4 bench.
+///
+/// These counts describe the *hardware datapath* of Fig 4. The software
+/// [`packed`] kernel is a different **schedule** of the same datapath —
+/// it performs exactly the same element multiplies and integer-tree adds
+/// per 64-length dot (the micro-exponent shifts are merely pre-applied at
+/// pack time), so these inventories, and the [`crate::hwcost`] area/power
+/// tables derived from them, remain the hardware story regardless of
+/// which software backend ran.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct FlowStats {
     /// 5-bit × 5-bit element multipliers (shared with the INT8 path).
@@ -45,6 +125,12 @@ pub struct FlowStats {
 mod tests {
     use super::hif4_flow;
     use super::nvfp4_flow;
+
+    // NOTE: the set_kernel/kernel round-trip is asserted inside
+    // `model::transformer`'s kernel-invariance test — exactly one test
+    // mutates the process-wide knob, so readback can never race. Every
+    // other consumer only *reads* it, and since both backends are
+    // bit-identical, a concurrently flipped knob never changes results.
 
     #[test]
     fn fig4_multiplier_elimination() {

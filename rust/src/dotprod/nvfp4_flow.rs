@@ -82,6 +82,33 @@ pub fn dot64(a: &[Nvfp4Group], b: &[Nvfp4Group]) -> f64 {
     dot64_trace(a, b).0
 }
 
+/// One group pair through the fixed-point datapath: S3P1 integer products,
+/// 15-add tree, then the group's small-FP × large-INT final stage —
+/// exactly one of [`dot64`]'s four partials, usable on its own for tail
+/// groups that don't fill a 64-length PE.
+///
+/// Bit-identical to [`dot64_dequant_ref`] on a single group pair: every
+/// f64 partial sum of the dequantized walk is `(sa·sb)·H/4` with `H` a
+/// ≤12-bit integer and `sa·sb` a ≤8-bit-significand dyadic, so both
+/// computations are exact and equal (pinned by the test below). The one
+/// unreachable caveat: a hand-built group with a zero scale but nonzero
+/// elements would differ in the *sign* of zero — [`quantize`] can never
+/// emit that shape (a zero scale zeroes every element).
+///
+/// [`quantize`]: crate::formats::nvfp4::quantize
+pub fn dot_group(a: &Nvfp4Group, b: &Nvfp4Group) -> f64 {
+    if a.scale.is_nan() || b.scale.is_nan() {
+        return f64::NAN;
+    }
+    let mut sum: i32 = 0;
+    for i in 0..GROUP {
+        sum += (a.elem(i).signed_halves() as i32) * (b.elem(i).signed_halves() as i32);
+    }
+    debug_assert!(sum.abs() <= 2304, "S10P2 bound");
+    let sp = (a.scale.to_f32() as f64) * (b.scale.to_f32() as f64);
+    sp * (sum as f64) / 4.0
+}
+
 /// Reference: dequantized f64 dot product over any number of group pairs
 /// (also serves as the tail path of the quantized GEMM).
 pub fn dot64_dequant_ref(a: &[Nvfp4Group], b: &[Nvfp4Group]) -> f64 {
@@ -120,6 +147,37 @@ mod tests {
             let b = random_groups(&mut rng, sigma);
             assert_eq!(dot64(&a, &b), dot64_dequant_ref(&a, &b), "round {round}");
         }
+    }
+
+    #[test]
+    fn dot_group_equals_dequant_ref_exactly() {
+        // The single-group integer partial must match the dequantized f64
+        // walk bit for bit across scale decades (incl. groups whose scale
+        // underflows to zero at tiny sigma).
+        let mut rng = Rng::seed(203);
+        for round in 0..300 {
+            let sigma = 10f32.powi((round % 6) - 3);
+            let v: Vec<f32> = (0..GROUP).map(|_| rng.normal() as f32 * sigma).collect();
+            let w: Vec<f32> = (0..GROUP).map(|_| rng.normal() as f32 * sigma).collect();
+            let a = quantize(&v, RoundMode::NearestEven);
+            let b = quantize(&w, RoundMode::NearestEven);
+            let int_partial = dot_group(&a, &b);
+            let reference =
+                dot64_dequant_ref(core::slice::from_ref(&a), core::slice::from_ref(&b));
+            assert_eq!(int_partial.to_bits(), reference.to_bits(), "round {round}");
+        }
+    }
+
+    #[test]
+    fn dot_group_sums_to_dot64() {
+        // Four group partials accumulated through dot64's balanced tree
+        // must reproduce dot64 itself.
+        let mut rng = Rng::seed(204);
+        let a = random_groups(&mut rng, 1.0);
+        let b = random_groups(&mut rng, 1.0);
+        let p: Vec<f64> = (0..GROUPS_PER_PE).map(|g| dot_group(&a[g], &b[g])).collect();
+        let tree = (p[0] + p[1]) + (p[2] + p[3]);
+        assert_eq!(tree.to_bits(), dot64(&a, &b).to_bits());
     }
 
     #[test]

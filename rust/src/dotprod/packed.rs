@@ -1,0 +1,487 @@
+//! Decode-once packed integer operand planes for the quantized GEMMs.
+//!
+//! The flow kernels ([`hif4_flow`], [`nvfp4_flow`]) re-extract every 4-bit
+//! nibble and micro-exponent *per output element*: a `C = A·Bᵀ` product
+//! pays that decode tax O(M·N·K) times even though the operands only hold
+//! O(M·K + N·K) quantized values. The packed planes here decode each unit
+//! exactly **once**, at pack time, into a layout the inner GEMM loop can
+//! consume as a straight `i8 × i8 → i32` dot product over contiguous,
+//! cache-line-aligned slices — SWAR/auto-vectorizer friendly — with one
+//! floating-point scale fixup per unit.
+//!
+//! ## Why the results are bit-identical to the flows
+//!
+//! Per HiF4 unit pair the flow computes (see [`hif4_flow::dot_trace`]):
+//!
+//! ```text
+//! p_i      = (qa_i << l3a_i) · (qb_i << l3b_i)          (64 products)
+//! span_j   = (Σ_{i∈span j} p_i) << (l2a_j + l2b_j)      (8 spans of 8)
+//! total    = Σ_j span_j                                 (S12P4, 17-bit)
+//! result   = (E6M2_a·E6M2_b) · total / 16
+//! ```
+//!
+//! Left shifts distribute over exact integer sums, so absorbing **both**
+//! micro-exponent levels into the lanes at pack time —
+//! `lane_i = q_i << (l2_i + l3_i)`, magnitude ≤ 7·4 = 28, comfortably an
+//! `i8` — yields `Σ_i lane_a_i · lane_b_i == total` exactly: the per-span
+//! shift bytes of the flow are *pre-applied* to the lanes, and the whole
+//! unit dot collapses to one 64-lane integer dot product with no per-span
+//! fixup left. The final scale fixup replays the flow's exact f64 sequence
+//! (`(sa·sb) · total / 16`, with each scale stored as its exact `f64`
+//! value, `NaN` for the poisoned-unit channel), so every unit dot — and
+//! therefore every GEMM cell, which accumulates unit dots in the same
+//! ascending-K f64 order — matches the flow bit for bit. NVFP4 lanes are
+//! the S3P1 half-unit integers (|x| ≤ 12); its per-group partial is
+//! `(sa·sb) · sum / 4` and four partials reduce through the same balanced
+//! `(p0+p1)+(p2+p3)` tree as [`nvfp4_flow::dot64`].
+//!
+//! Packing costs O(M·K + N·K) and is row-parallel over
+//! [`parallel_row_bands2`]; once packed, planes can be reused across any
+//! number of GEMM calls (the model's real-quantized linears keep weight
+//! planes alive across every token). The kernels keep the flow GEMMs'
+//! JB×UB cache blocking and their any-thread-count determinism contract.
+//!
+//! [`hif4_flow`]: super::hif4_flow
+//! [`hif4_flow::dot_trace`]: super::hif4_flow::dot_trace
+
+use super::nvfp4_flow;
+use super::qgemm::{HiF4Matrix, Nvfp4Matrix, JB, UB};
+use crate::formats::hif4::{self, HiF4Unit};
+use crate::formats::nvfp4::{self, Nvfp4Group};
+use crate::tensor::Matrix;
+use crate::util::threadpool::{self, parallel_row_bands, parallel_row_bands2};
+
+/// Flop-equivalents per element of the pack transform (nibble extract,
+/// micro-exponent lookup, shift, store) — weights `threads_for` so packing
+/// mid-sized operands still fans out.
+const PACK_WORK_PER_ELEM: usize = 4;
+
+/// One HiF4 unit's 64 operand lanes, aligned to a cache line so a unit
+/// never straddles two lines.
+#[derive(Debug, Clone, Copy)]
+#[repr(align(64))]
+pub struct HiF4Lanes(pub [i8; hif4::GROUP]);
+
+/// One NVFP4 group's 16 operand lanes (S3P1 half-units), 16-byte aligned.
+#[derive(Debug, Clone, Copy)]
+#[repr(align(16))]
+pub struct Nvfp4Lanes(pub [i8; nvfp4::GROUP]);
+
+/// Straight 64-lane `i8 × i8 → i32` dot — the entire fixed-point part of
+/// one HiF4 unit dot. Integer adds are associative, so the optimizer is
+/// free to vectorize/reassociate; the result is exact either way.
+#[inline]
+fn lanes_dot64(a: &HiF4Lanes, b: &HiF4Lanes) -> i32 {
+    let mut acc = 0i32;
+    for i in 0..hif4::GROUP {
+        acc += (a.0[i] as i32) * (b.0[i] as i32);
+    }
+    acc
+}
+
+/// 16-lane integer dot for one NVFP4 group pair.
+#[inline]
+fn lanes_dot16(a: &Nvfp4Lanes, b: &Nvfp4Lanes) -> i32 {
+    let mut acc = 0i32;
+    for i in 0..nvfp4::GROUP {
+        acc += (a.0[i] as i32) * (b.0[i] as i32);
+    }
+    acc
+}
+
+/// Decode one HiF4 unit into its lanes; returns the unit's exact scale as
+/// f64 (`NaN` when the unit is NaN-poisoned, the format's only NaN
+/// channel).
+#[inline]
+fn pack_hif4_unit(u: &HiF4Unit, lanes: &mut HiF4Lanes) -> f64 {
+    for i in 0..hif4::GROUP {
+        // Absorb level 2 *and* level 3: q ≤ 7 shifted by ≤ 2 stays ≤ 28.
+        lanes.0[i] = u.elem(i).signed_q() << (u.l2(i) + u.l3(i));
+    }
+    if u.scale.is_nan() {
+        f64::NAN
+    } else {
+        u.scale.to_f32() as f64
+    }
+}
+
+/// Decode one NVFP4 group into S3P1 half-unit lanes; returns the exact
+/// f64 scale (`NaN` channel included).
+#[inline]
+fn pack_nvfp4_group(g: &Nvfp4Group, lanes: &mut Nvfp4Lanes) -> f64 {
+    for i in 0..nvfp4::GROUP {
+        lanes.0[i] = g.elem(i).signed_halves();
+    }
+    if g.scale.is_nan() {
+        f64::NAN
+    } else {
+        g.scale.to_f32() as f64
+    }
+}
+
+/// A [`HiF4Matrix`] re-laid-out as decode-once integer operand planes:
+/// per unit, 64 contiguous micro-exponent-absorbed `i8` lanes plus the
+/// exact `f64` level-1 scale.
+#[derive(Debug, Clone)]
+pub struct PackedHiF4Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub units_per_row: usize,
+    lanes: Vec<HiF4Lanes>,
+    scales: Vec<f64>,
+}
+
+impl PackedHiF4Matrix {
+    /// Pack with the process-default thread count (rows pack
+    /// independently, so the result is identical for any count).
+    pub fn pack(q: &HiF4Matrix) -> PackedHiF4Matrix {
+        Self::pack_threads(q, threadpool::threads_for(q.rows * q.cols * PACK_WORK_PER_ELEM))
+    }
+
+    /// [`PackedHiF4Matrix::pack`] with an explicit thread count.
+    pub fn pack_threads(q: &HiF4Matrix, threads: usize) -> PackedHiF4Matrix {
+        let upr = q.units_per_row;
+        let n = q.rows * upr;
+        let mut lanes = vec![HiF4Lanes([0; hif4::GROUP]); n];
+        let mut scales = vec![0f64; n];
+        if n > 0 {
+            parallel_row_bands2(&mut lanes, upr, &mut scales, upr, threads, |first_row, lb, sb| {
+                for (i, (lrow, srow)) in lb.chunks_mut(upr).zip(sb.chunks_mut(upr)).enumerate() {
+                    let units = q.row_units(first_row + i);
+                    for ((l, s), u) in lrow.iter_mut().zip(srow.iter_mut()).zip(units) {
+                        *s = pack_hif4_unit(u, l);
+                    }
+                }
+            });
+        }
+        PackedHiF4Matrix { rows: q.rows, cols: q.cols, units_per_row: upr, lanes, scales }
+    }
+
+    /// Quantize + pack in one step (convenience for activation operands).
+    pub fn quantize(m: &Matrix, mode: crate::formats::rounding::RoundMode) -> PackedHiF4Matrix {
+        Self::pack(&HiF4Matrix::quantize(m, mode))
+    }
+
+    /// Lane plane of row `r` (one entry per K unit).
+    #[inline]
+    pub fn row_lanes(&self, r: usize) -> &[HiF4Lanes] {
+        &self.lanes[r * self.units_per_row..(r + 1) * self.units_per_row]
+    }
+
+    /// Scale plane of row `r`.
+    #[inline]
+    pub fn row_scales(&self, r: usize) -> &[f64] {
+        &self.scales[r * self.units_per_row..(r + 1) * self.units_per_row]
+    }
+
+    /// One unit dot against another packed matrix — bit-identical to
+    /// [`super::hif4_flow::dot`] on the corresponding units (pinned by
+    /// `tests/packed_parity.rs`).
+    pub fn dot_unit(
+        &self,
+        r: usize,
+        u: usize,
+        other: &PackedHiF4Matrix,
+        ro: usize,
+        uo: usize,
+    ) -> f64 {
+        let total = lanes_dot64(&self.row_lanes(r)[u], &other.row_lanes(ro)[uo]);
+        let sp = self.row_scales(r)[u] * other.row_scales(ro)[uo];
+        sp * (total as f64) / 16.0
+    }
+}
+
+/// An [`Nvfp4Matrix`] as decode-once planes: 16 S3P1 `i8` lanes + exact
+/// `f64` scale per group.
+#[derive(Debug, Clone)]
+pub struct PackedNvfp4Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub groups_per_row: usize,
+    lanes: Vec<Nvfp4Lanes>,
+    scales: Vec<f64>,
+}
+
+impl PackedNvfp4Matrix {
+    /// Pack with the process-default thread count.
+    pub fn pack(q: &Nvfp4Matrix) -> PackedNvfp4Matrix {
+        Self::pack_threads(q, threadpool::threads_for(q.rows * q.cols * PACK_WORK_PER_ELEM))
+    }
+
+    /// [`PackedNvfp4Matrix::pack`] with an explicit thread count.
+    pub fn pack_threads(q: &Nvfp4Matrix, threads: usize) -> PackedNvfp4Matrix {
+        let gpr = q.groups_per_row;
+        let n = q.rows * gpr;
+        let mut lanes = vec![Nvfp4Lanes([0; nvfp4::GROUP]); n];
+        let mut scales = vec![0f64; n];
+        if n > 0 {
+            parallel_row_bands2(&mut lanes, gpr, &mut scales, gpr, threads, |first_row, lb, sb| {
+                for (i, (lrow, srow)) in lb.chunks_mut(gpr).zip(sb.chunks_mut(gpr)).enumerate() {
+                    let groups = q.row_groups(first_row + i);
+                    for ((l, s), g) in lrow.iter_mut().zip(srow.iter_mut()).zip(groups) {
+                        *s = pack_nvfp4_group(g, l);
+                    }
+                }
+            });
+        }
+        PackedNvfp4Matrix { rows: q.rows, cols: q.cols, groups_per_row: gpr, lanes, scales }
+    }
+
+    /// Quantize + pack in one step.
+    pub fn quantize(m: &Matrix, mode: crate::formats::rounding::RoundMode) -> PackedNvfp4Matrix {
+        Self::pack(&Nvfp4Matrix::quantize(m, mode))
+    }
+
+    #[inline]
+    pub fn row_lanes(&self, r: usize) -> &[Nvfp4Lanes] {
+        &self.lanes[r * self.groups_per_row..(r + 1) * self.groups_per_row]
+    }
+
+    #[inline]
+    pub fn row_scales(&self, r: usize) -> &[f64] {
+        &self.scales[r * self.groups_per_row..(r + 1) * self.groups_per_row]
+    }
+
+    /// One group's integer partial against another packed matrix —
+    /// bit-identical to [`nvfp4_flow::dot_group`] on the corresponding
+    /// groups.
+    pub fn dot_group(
+        &self,
+        r: usize,
+        g: usize,
+        other: &PackedNvfp4Matrix,
+        ro: usize,
+        go: usize,
+    ) -> f64 {
+        let sum = lanes_dot16(&self.row_lanes(r)[g], &other.row_lanes(ro)[go]);
+        let sp = self.row_scales(r)[g] * other.row_scales(ro)[go];
+        sp * (sum as f64) / 4.0
+    }
+}
+
+/// `C = A · Bᵀ` over packed HiF4 planes with the process-default thread
+/// count. Bit-identical to [`super::qgemm::hif4_gemm_bt_flow`] on the
+/// matrices the planes were packed from.
+pub fn hif4_gemm_bt_packed(a: &PackedHiF4Matrix, b_t: &PackedHiF4Matrix) -> Matrix {
+    let work = a.rows * b_t.rows * a.cols;
+    hif4_gemm_bt_packed_threads(a, b_t, threadpool::threads_for(work))
+}
+
+/// [`hif4_gemm_bt_packed`] with an explicit thread count — bit-identical
+/// for every value (each output element accumulates its unit dots in
+/// ascending K order on one thread, exactly like the flow kernel).
+pub fn hif4_gemm_bt_packed_threads(
+    a: &PackedHiF4Matrix,
+    b_t: &PackedHiF4Matrix,
+    threads: usize,
+) -> Matrix {
+    assert_eq!(a.cols, b_t.cols, "reduction dims must agree");
+    let (n, upr) = (b_t.rows, a.units_per_row);
+    let mut c = Matrix::zeros(a.rows, n);
+    if a.rows == 0 || n == 0 {
+        return c;
+    }
+    parallel_row_bands(&mut c.data, n, threads, |first_row, band| {
+        let rows = band.len() / n;
+        let mut accs = [0f64; JB];
+        for j0 in (0..n).step_by(JB) {
+            let jb = (j0 + JB).min(n) - j0;
+            for i in 0..rows {
+                let al = a.row_lanes(first_row + i);
+                let asc = a.row_scales(first_row + i);
+                accs[..jb].fill(0.0);
+                // Same JB × UB panel blocking as the flow kernel; per
+                // (i, j) the accumulation stays ascending-u.
+                for u0 in (0..upr).step_by(UB) {
+                    let u1 = (u0 + UB).min(upr);
+                    let al_blk = &al[u0..u1];
+                    let asc_blk = &asc[u0..u1];
+                    for (jj, acc) in accs[..jb].iter_mut().enumerate() {
+                        let bl_blk = &b_t.row_lanes(j0 + jj)[u0..u1];
+                        let bsc_blk = &b_t.row_scales(j0 + jj)[u0..u1];
+                        for u in 0..al_blk.len() {
+                            let total = lanes_dot64(&al_blk[u], &bl_blk[u]);
+                            // The flow's final stage, op for op:
+                            // (sa·sb) · total / 16.
+                            *acc += (asc_blk[u] * bsc_blk[u]) * (total as f64) / 16.0;
+                        }
+                    }
+                }
+                let crow = &mut band[i * n..(i + 1) * n];
+                for (jj, acc) in accs[..jb].iter().enumerate() {
+                    crow[j0 + jj] = *acc as f32;
+                }
+            }
+        }
+    });
+    c
+}
+
+/// `C = A · Bᵀ` over packed NVFP4 planes (process-default threads).
+pub fn nvfp4_gemm_bt_packed(a: &PackedNvfp4Matrix, b_t: &PackedNvfp4Matrix) -> Matrix {
+    let work = a.rows * b_t.rows * a.cols;
+    nvfp4_gemm_bt_packed_threads(a, b_t, threadpool::threads_for(work))
+}
+
+/// [`nvfp4_gemm_bt_packed`] with an explicit thread count — bit-identical
+/// to the flow kernel: full PEs reduce four group partials through the
+/// same balanced `(p0+p1)+(p2+p3)` tree as [`nvfp4_flow::dot64`], tail
+/// groups add their single integer partial directly (the
+/// [`nvfp4_flow::dot_group`] path).
+pub fn nvfp4_gemm_bt_packed_threads(
+    a: &PackedNvfp4Matrix,
+    b_t: &PackedNvfp4Matrix,
+    threads: usize,
+) -> Matrix {
+    assert_eq!(a.cols, b_t.cols, "reduction dims must agree");
+    const PE: usize = nvfp4_flow::GROUPS_PER_PE;
+    const _: () = assert!(UB % PE == 0);
+    let (n, gpr) = (b_t.rows, a.groups_per_row);
+    let mut c = Matrix::zeros(a.rows, n);
+    if a.rows == 0 || n == 0 {
+        return c;
+    }
+    // One group's partial: the flow's per-group final stage, op for op.
+    let partial = |al: &Nvfp4Lanes, asv: f64, bl: &Nvfp4Lanes, bsv: f64| -> f64 {
+        (asv * bsv) * (lanes_dot16(al, bl) as f64) / 4.0
+    };
+    parallel_row_bands(&mut c.data, n, threads, |first_row, band| {
+        let rows = band.len() / n;
+        let mut accs = [0f64; JB];
+        for j0 in (0..n).step_by(JB) {
+            let jb = (j0 + JB).min(n) - j0;
+            for i in 0..rows {
+                let al = a.row_lanes(first_row + i);
+                let asc = a.row_scales(first_row + i);
+                accs[..jb].fill(0.0);
+                for u0 in (0..gpr).step_by(UB) {
+                    let u1 = (u0 + UB).min(gpr);
+                    for (jj, acc) in accs[..jb].iter_mut().enumerate() {
+                        let bl = b_t.row_lanes(j0 + jj);
+                        let bsc = b_t.row_scales(j0 + jj);
+                        let mut g = u0;
+                        while g + PE <= u1 {
+                            let p0 = partial(&al[g], asc[g], &bl[g], bsc[g]);
+                            let p1 = partial(&al[g + 1], asc[g + 1], &bl[g + 1], bsc[g + 1]);
+                            let p2 = partial(&al[g + 2], asc[g + 2], &bl[g + 2], bsc[g + 2]);
+                            let p3 = partial(&al[g + 3], asc[g + 3], &bl[g + 3], bsc[g + 3]);
+                            // dot64's balanced accumulation tree.
+                            *acc += (p0 + p1) + (p2 + p3);
+                            g += PE;
+                        }
+                        while g < u1 {
+                            *acc += partial(&al[g], asc[g], &bl[g], bsc[g]);
+                            g += 1;
+                        }
+                    }
+                }
+                let crow = &mut band[i * n..(i + 1) * n];
+                for (jj, acc) in accs[..jb].iter().enumerate() {
+                    crow[j0 + jj] = *acc as f32;
+                }
+            }
+        }
+    });
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dotprod::hif4_flow;
+    use crate::formats::rounding::RoundMode;
+    use crate::tensor::rng::Rng;
+
+    const MODE: RoundMode = RoundMode::NearestEven;
+
+    #[test]
+    fn lane_magnitudes_stay_in_i8() {
+        // Worst case: every element ±7 with both micro-exponents set.
+        let mut v = [0f32; hif4::GROUP];
+        for (i, x) in v.iter_mut().enumerate() {
+            *x = if i % 2 == 0 { 7.0 } else { -7.0 };
+        }
+        let q = HiF4Matrix::quantize(&Matrix::from_vec(1, hif4::GROUP, v.to_vec()), MODE);
+        let p = PackedHiF4Matrix::pack(&q);
+        for lane in &p.row_lanes(0)[0].0 {
+            assert!(lane.abs() <= 28, "lane {lane} exceeds the 7·4 bound");
+        }
+    }
+
+    #[test]
+    fn packed_unit_dot_matches_flow() {
+        let mut rng = Rng::seed(501);
+        for round in 0..60 {
+            let sigma = 10f32.powi((round % 6) - 3);
+            let a = Matrix::randn(1, hif4::GROUP, sigma, &mut rng);
+            let b = Matrix::randn(1, hif4::GROUP, sigma, &mut rng);
+            let qa = HiF4Matrix::quantize(&a, MODE);
+            let qb = HiF4Matrix::quantize(&b, MODE);
+            let pa = PackedHiF4Matrix::pack(&qa);
+            let pb = PackedHiF4Matrix::pack(&qb);
+            let flow = hif4_flow::dot(&qa.row_units(0)[0], &qb.row_units(0)[0]);
+            assert_eq!(pa.dot_unit(0, 0, &pb, 0, 0).to_bits(), flow.to_bits(), "round {round}");
+        }
+    }
+
+    #[test]
+    fn packed_gemm_matches_flow_gemm_bitwise() {
+        let mut rng = Rng::seed(502);
+        for (m, k, n) in [(5, 130, 7), (3, 64, 4), (2, 40, 3)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(n, k, 1.0, &mut rng);
+            let qa = HiF4Matrix::quantize(&a, MODE);
+            let qb = HiF4Matrix::quantize(&b, MODE);
+            let flow = super::super::qgemm::hif4_gemm_bt_flow_threads(&qa, &qb, 1);
+            let packed = hif4_gemm_bt_packed_threads(
+                &PackedHiF4Matrix::pack(&qa),
+                &PackedHiF4Matrix::pack(&qb),
+                1,
+            );
+            assert_eq!(
+                flow.data.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+                packed.data.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+                "{m}x{k}x{n}"
+            );
+        }
+    }
+
+    #[test]
+    fn nvfp4_packed_gemm_matches_flow_gemm_bitwise() {
+        let mut rng = Rng::seed(503);
+        // 72 and 40 cols exercise the tail-group (non-multiple-of-PE) path.
+        for (m, k, n) in [(4, 72, 6), (3, 40, 5), (2, 128, 3)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(n, k, 1.0, &mut rng);
+            let qa = Nvfp4Matrix::quantize(&a, MODE);
+            let qb = Nvfp4Matrix::quantize(&b, MODE);
+            let flow = super::super::qgemm::nvfp4_gemm_bt_flow_threads(&qa, &qb, 1);
+            let packed = nvfp4_gemm_bt_packed_threads(
+                &PackedNvfp4Matrix::pack(&qa),
+                &PackedNvfp4Matrix::pack(&qb),
+                1,
+            );
+            assert_eq!(
+                flow.data.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+                packed.data.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+                "{m}x{k}x{n}"
+            );
+        }
+    }
+
+    #[test]
+    fn pack_is_thread_count_invariant() {
+        let mut rng = Rng::seed(504);
+        let q = HiF4Matrix::quantize(&Matrix::randn(9, 200, 1.0, &mut rng), MODE);
+        let serial = PackedHiF4Matrix::pack_threads(&q, 1);
+        for t in [2, 3, 5] {
+            let par = PackedHiF4Matrix::pack_threads(&q, t);
+            assert_eq!(serial.scales, par.scales, "threads={t}");
+            for r in 0..q.rows {
+                for u in 0..q.units_per_row {
+                    assert_eq!(serial.row_lanes(r)[u].0, par.row_lanes(r)[u].0);
+                }
+            }
+        }
+    }
+}

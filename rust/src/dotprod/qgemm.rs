@@ -17,8 +17,29 @@
 //! K order on a single thread, so results are **bit-identical** for every
 //! thread count (asserted by `tests/parallel_parity.rs`); the `*_threads`
 //! variants take an explicit count, the plain names use the process knob.
+//!
+//! ## Kernel backends
+//!
+//! The default entry points ([`hif4_gemm_bt`], [`nvfp4_gemm_bt`] and their
+//! `_threads` variants) dispatch on the process-wide
+//! [`super::kernel`] selector (`HIF4_KERNEL` env / `--kernel` CLI):
+//!
+//! * **`Flow`** — the reference path: every unit pair runs through the
+//!   bit-exact PE flow, re-extracting nibbles and micro-exponents per
+//!   output element (O(M·N·K) decode work).
+//! * **`Packed`** (default) — the fast path: operands are packed once
+//!   into decode-once integer planes ([`super::packed`], O(M·K + N·K))
+//!   and the inner loop is a straight `i8` dot with one scale fixup per
+//!   unit.
+//!
+//! Both backends produce **bit-identical** matrices (pinned by
+//! `tests/packed_parity.rs`), so the selector is a pure performance knob.
 
-use super::{hif4_flow, nvfp4_flow};
+use super::packed::{
+    hif4_gemm_bt_packed_threads, nvfp4_gemm_bt_packed_threads, PackedHiF4Matrix,
+    PackedNvfp4Matrix,
+};
+use super::{hif4_flow, nvfp4_flow, Kernel};
 use crate::formats::hif4::{self, HiF4Unit};
 use crate::formats::nvfp4::{self, Nvfp4Group};
 use crate::formats::rounding::RoundMode;
@@ -26,14 +47,15 @@ use crate::tensor::Matrix;
 use crate::util::threadpool::{self, parallel_row_bands};
 
 /// B-rows per cache block of the quantized GEMM kernels.
-const JB: usize = 16;
+pub(crate) const JB: usize = 16;
 /// K-units per cache block (64-element HiF4 units / 16-element NVFP4
 /// groups; a multiple of [`nvfp4_flow::GROUPS_PER_PE`] so PE boundaries
 /// never straddle a block edge).
-const UB: usize = 16;
+pub(crate) const UB: usize = 16;
 
 /// A matrix quantized into HiF4 units along its rows (row-major; each row
 /// padded to a multiple of 64).
+#[derive(Debug, Clone)]
 pub struct HiF4Matrix {
     pub rows: usize,
     pub cols: usize,
@@ -74,18 +96,34 @@ impl HiF4Matrix {
         HiF4Matrix { rows: m.rows, cols: m.cols, units_per_row: upr, units }
     }
 
-    /// Dequantize back to a dense matrix (zero-padding trimmed).
+    /// Dequantize back to a dense matrix (zero-padding trimmed),
+    /// row-parallel with the process-default thread count (rows decode
+    /// independently, so the result is identical for any count).
     pub fn dequantize(&self) -> Matrix {
+        let work = self.rows * self.cols * threadpool::DEQUANT_WORK_PER_ELEM;
+        self.dequantize_threads(threadpool::threads_for(work))
+    }
+
+    /// [`HiF4Matrix::dequantize`] with an explicit thread count.
+    pub fn dequantize_threads(&self, threads: usize) -> Matrix {
         let mut m = Matrix::zeros(self.rows, self.cols);
-        let mut buf = [0f32; hif4::GROUP];
-        for r in 0..self.rows {
-            for u in 0..self.units_per_row {
-                self.units[r * self.units_per_row + u].decode_all(&mut buf);
-                let start = u * hif4::GROUP;
-                let end = (start + hif4::GROUP).min(self.cols);
-                m.row_mut(r)[start..end].copy_from_slice(&buf[..end - start]);
-            }
+        if m.data.is_empty() {
+            return m;
         }
+        let upr = self.units_per_row;
+        let cols = self.cols;
+        parallel_row_bands(&mut m.data, cols, threads, |first_row, band| {
+            let mut buf = [0f32; hif4::GROUP];
+            for (i, row) in band.chunks_mut(cols).enumerate() {
+                let units = self.row_units(first_row + i);
+                for u in 0..upr {
+                    units[u].decode_all(&mut buf);
+                    let start = u * hif4::GROUP;
+                    let end = (start + hif4::GROUP).min(cols);
+                    row[start..end].copy_from_slice(&buf[..end - start]);
+                }
+            }
+        });
         m
     }
 
@@ -96,6 +134,7 @@ impl HiF4Matrix {
 }
 
 /// A matrix quantized into NVFP4 groups along its rows.
+#[derive(Debug, Clone)]
 pub struct Nvfp4Matrix {
     pub rows: usize,
     pub cols: usize,
@@ -140,17 +179,33 @@ impl Nvfp4Matrix {
         Nvfp4Matrix { rows: m.rows, cols: m.cols, groups_per_row: gpr, groups }
     }
 
+    /// Dequantize back to a dense matrix, row-parallel like
+    /// [`HiF4Matrix::dequantize`].
     pub fn dequantize(&self) -> Matrix {
+        let work = self.rows * self.cols * threadpool::DEQUANT_WORK_PER_ELEM;
+        self.dequantize_threads(threadpool::threads_for(work))
+    }
+
+    /// [`Nvfp4Matrix::dequantize`] with an explicit thread count.
+    pub fn dequantize_threads(&self, threads: usize) -> Matrix {
         let mut m = Matrix::zeros(self.rows, self.cols);
-        let mut buf = [0f32; nvfp4::GROUP];
-        for r in 0..self.rows {
-            for g in 0..self.groups_per_row {
-                self.groups[r * self.groups_per_row + g].decode_all(&mut buf);
-                let start = g * nvfp4::GROUP;
-                let end = (start + nvfp4::GROUP).min(self.cols);
-                m.row_mut(r)[start..end].copy_from_slice(&buf[..end - start]);
-            }
+        if m.data.is_empty() {
+            return m;
         }
+        let gpr = self.groups_per_row;
+        let cols = self.cols;
+        parallel_row_bands(&mut m.data, cols, threads, |first_row, band| {
+            let mut buf = [0f32; nvfp4::GROUP];
+            for (i, row) in band.chunks_mut(cols).enumerate() {
+                let groups = self.row_groups(first_row + i);
+                for g in 0..gpr {
+                    groups[g].decode_all(&mut buf);
+                    let start = g * nvfp4::GROUP;
+                    let end = (start + nvfp4::GROUP).min(cols);
+                    row[start..end].copy_from_slice(&buf[..end - start]);
+                }
+            }
+        });
         m
     }
 
@@ -160,9 +215,10 @@ impl Nvfp4Matrix {
     }
 }
 
-/// `C = A · Bᵀ` where both operands are HiF4-quantized along the K axis and
-/// every 64-length slice runs through the bit-exact PE flow. Cache-blocked
-/// and row-parallel with the process-default thread count.
+/// `C = A · Bᵀ` where both operands are HiF4-quantized along the K axis.
+/// Cache-blocked and row-parallel with the process-default thread count;
+/// dispatches on the [`super::kernel`] backend (numerically inert — both
+/// backends are bit-identical).
 pub fn hif4_gemm_bt(a: &HiF4Matrix, b_t: &HiF4Matrix) -> Matrix {
     let work = a.rows * b_t.rows * a.cols;
     hif4_gemm_bt_threads(a, b_t, threadpool::threads_for(work))
@@ -172,6 +228,28 @@ pub fn hif4_gemm_bt(a: &HiF4Matrix, b_t: &HiF4Matrix) -> Matrix {
 /// every value (each output element accumulates its unit dots in ascending
 /// K order on one thread).
 pub fn hif4_gemm_bt_threads(a: &HiF4Matrix, b_t: &HiF4Matrix, threads: usize) -> Matrix {
+    match super::kernel() {
+        Kernel::Flow => hif4_gemm_bt_flow_threads(a, b_t, threads),
+        Kernel::Packed => {
+            // One-time O(M·K + N·K) pack, then the SWAR fast path; callers
+            // holding operands across calls should pack once themselves
+            // ([`PackedHiF4Matrix`]) to amortize even this.
+            let pa = PackedHiF4Matrix::pack_threads(a, threads);
+            let pb = PackedHiF4Matrix::pack_threads(b_t, threads);
+            hif4_gemm_bt_packed_threads(&pa, &pb, threads)
+        }
+    }
+}
+
+/// The reference flow-kernel GEMM (process-default threads): every unit
+/// pair runs through the bit-exact PE flow.
+pub fn hif4_gemm_bt_flow(a: &HiF4Matrix, b_t: &HiF4Matrix) -> Matrix {
+    let work = a.rows * b_t.rows * a.cols;
+    hif4_gemm_bt_flow_threads(a, b_t, threadpool::threads_for(work))
+}
+
+/// [`hif4_gemm_bt_flow`] with an explicit thread count.
+pub fn hif4_gemm_bt_flow_threads(a: &HiF4Matrix, b_t: &HiF4Matrix, threads: usize) -> Matrix {
     assert_eq!(a.cols, b_t.cols, "reduction dims must agree");
     let (n, upr) = (b_t.rows, a.units_per_row);
     let mut c = Matrix::zeros(a.rows, n);
@@ -209,9 +287,9 @@ pub fn hif4_gemm_bt_threads(a: &HiF4Matrix, b_t: &HiF4Matrix, threads: usize) ->
 }
 
 /// `C = A · Bᵀ` with NVFP4 operands; K-groups run through the 64-length PE
-/// four at a time (tail PEs fall back to group-by-group partials, which is
-/// numerically identical since the flow is exact). Cache-blocked and
-/// row-parallel like [`hif4_gemm_bt`].
+/// four at a time, and tail groups stay on the fixed-point path via
+/// [`nvfp4_flow::dot_group`]. Cache-blocked and row-parallel like
+/// [`hif4_gemm_bt`]; dispatches on the [`super::kernel`] backend.
 pub fn nvfp4_gemm_bt(a: &Nvfp4Matrix, b_t: &Nvfp4Matrix) -> Matrix {
     let work = a.rows * b_t.rows * a.cols;
     nvfp4_gemm_bt_threads(a, b_t, threadpool::threads_for(work))
@@ -220,6 +298,24 @@ pub fn nvfp4_gemm_bt(a: &Nvfp4Matrix, b_t: &Nvfp4Matrix) -> Matrix {
 /// [`nvfp4_gemm_bt`] with an explicit thread count (bit-identical for
 /// every value).
 pub fn nvfp4_gemm_bt_threads(a: &Nvfp4Matrix, b_t: &Nvfp4Matrix, threads: usize) -> Matrix {
+    match super::kernel() {
+        Kernel::Flow => nvfp4_gemm_bt_flow_threads(a, b_t, threads),
+        Kernel::Packed => {
+            let pa = PackedNvfp4Matrix::pack_threads(a, threads);
+            let pb = PackedNvfp4Matrix::pack_threads(b_t, threads);
+            nvfp4_gemm_bt_packed_threads(&pa, &pb, threads)
+        }
+    }
+}
+
+/// The reference flow-kernel NVFP4 GEMM (process-default threads).
+pub fn nvfp4_gemm_bt_flow(a: &Nvfp4Matrix, b_t: &Nvfp4Matrix) -> Matrix {
+    let work = a.rows * b_t.rows * a.cols;
+    nvfp4_gemm_bt_flow_threads(a, b_t, threadpool::threads_for(work))
+}
+
+/// [`nvfp4_gemm_bt_flow`] with an explicit thread count.
+pub fn nvfp4_gemm_bt_flow_threads(a: &Nvfp4Matrix, b_t: &Nvfp4Matrix, threads: usize) -> Matrix {
     assert_eq!(a.cols, b_t.cols, "reduction dims must agree");
     const PE: usize = nvfp4_flow::GROUPS_PER_PE;
     // UB is a PE multiple, so full-PE dots never straddle a K block and the
@@ -249,10 +345,9 @@ pub fn nvfp4_gemm_bt_threads(a: &Nvfp4Matrix, b_t: &Nvfp4Matrix, threads: usize)
                             g += PE;
                         }
                         while g < u1 {
-                            *acc += nvfp4_flow::dot64_dequant_ref(
-                                core::slice::from_ref(&ag[g]),
-                                core::slice::from_ref(&bg[g]),
-                            );
+                            // Tail groups stay on the fixed-point path: one
+                            // exact single-group integer partial.
+                            *acc += nvfp4_flow::dot_group(&ag[g], &bg[g]);
                             g += 1;
                         }
                     }

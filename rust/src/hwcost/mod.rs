@@ -17,6 +17,13 @@
 //! **incremental** area of each format is only what its metadata scaling
 //! demands: scale multipliers, large integer multipliers, extra shift/
 //! accumulation logic (the paper's accounting; Fig 4).
+//!
+//! Software note: the crate's packed QGEMM ([`crate::dotprod::packed`])
+//! is a CPU *schedule* of this same Fig 4 datapath — the identical
+//! element multiplies and integer-tree adds per 64-length dot, with the
+//! micro-exponent shifts pre-applied at pack time. It changes nothing
+//! about the hardware inventory, so these tables remain the area/power
+//! story no matter which software kernel backend ran.
 
 pub mod pe;
 

@@ -21,7 +21,13 @@
 //! fan out over OS threads while producing **bit-identical** results for
 //! every thread count (`HIF4_THREADS` / `--threads` /
 //! [`util::threadpool::set_threads`]); `tests/parallel_parity.rs` pins
-//! the contract.
+//! the contract. The quantized GEMMs additionally have two bit-identical
+//! kernel backends — the element-wise flow reference and the decode-once
+//! packed integer planes ([`dotprod::packed`], `HIF4_KERNEL` /
+//! `--kernel`) — and the model/serving layers run quantized linears on
+//! the packed planes directly (weights packed once, activations per
+//! call), including a PJRT-free native serving engine
+//! ([`runtime::native`], [`server::service::Server::start_native`]).
 //!
 //! Offline note: the `anyhow` and `xla` dependencies resolve to in-tree
 //! crates under `rust/vendor/` — a minimal error type and a PJRT stub —

@@ -2,7 +2,9 @@
 //!
 //! ```text
 //! hif4 serve   --artifact fwd_hif4.hlo.txt --addr 127.0.0.1:7401 [--params p.bin]
-//!              [--workers 2]                 # PJRT worker pool size
+//!              [--workers 2]                 # worker pool size
+//!              [--native --format hif4]      # PJRT-free rust-native engine
+//!                                            # (prepacked fixed-point linears)
 //! hif4 sweep   --dim 512                       # Fig 3 series
 //! hif4 hwcost                                  # §III.B area/power table
 //! hif4 dotprod                                 # Fig 4 inventory + exactness
@@ -11,17 +13,20 @@
 //! ```
 //!
 //! Every subcommand honours `--threads N` (or `HIF4_THREADS`) for the
-//! data-parallel GEMM/quantization kernels.
+//! data-parallel GEMM/quantization kernels, and `--kernel flow|packed`
+//! (or `HIF4_KERNEL`) for the quantized-GEMM backend (bit-identical
+//! results; packed is the fast path).
 
 use anyhow::Result;
 use hif4::formats::{mse, Format, QuantScheme};
 use hif4::quant::sweep;
 use hif4::runtime::artifact::{Manifest, ParamStore};
 use hif4::server::batcher::BatchPolicy;
-use hif4::server::service::{Server, ServerConfig};
+use hif4::server::service::{NativeServerConfig, Server, ServerConfig};
 use hif4::util::bench::Table;
 use hif4::util::cli::Args;
 use std::path::Path;
+use std::sync::Arc;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -29,6 +34,13 @@ fn main() -> Result<()> {
         let t: usize = t.parse().map_err(|e| anyhow::anyhow!("--threads {t}: {e}"))?;
         anyhow::ensure!(t > 0, "--threads must be positive");
         hif4::util::threadpool::set_threads(t);
+    }
+    if let Some(k) = args.get("kernel") {
+        match k {
+            "flow" => hif4::dotprod::set_kernel(hif4::dotprod::Kernel::Flow),
+            "packed" => hif4::dotprod::set_kernel(hif4::dotprod::Kernel::Packed),
+            other => anyhow::bail!("--kernel must be flow or packed, got {other}"),
+        }
     }
     match args.subcommand() {
         Some("serve") => serve(&args),
@@ -111,22 +123,39 @@ fn serve(args: &Args) -> Result<()> {
         Some(p) => ParamStore::load(Path::new(p))?,
         None => manifest.init_params(args.get_parse("seed", 5)),
     };
-    let artifact = args.get_or("artifact", "fwd_bf16.hlo.txt").to_string();
-    let mut served = params;
-    if artifact.contains("hif4") {
-        served.quantize_weights(&QuantScheme::direct(Format::HiF4));
-    } else if artifact.contains("nvfp4") {
-        served.quantize_weights(&QuantScheme::direct(Format::Nvfp4));
-    }
-    let cfg = ServerConfig {
-        artifact,
-        policy: BatchPolicy {
-            max_batch: args.get_parse("max-batch", manifest.batch),
-            max_wait: std::time::Duration::from_millis(args.get_parse("max-wait-ms", 2)),
-        },
-        workers: args.get_parse("workers", 1),
+    let policy = BatchPolicy {
+        max_batch: args.get_parse("max-batch", manifest.batch),
+        max_wait: std::time::Duration::from_millis(args.get_parse("max-wait-ms", 2)),
     };
-    let server = Server::start(dir, cfg, &served, args.get_or("addr", "127.0.0.1:7401"))?;
+    let workers = args.get_parse("workers", 1);
+    let addr = args.get_or("addr", "127.0.0.1:7401");
+    let server = if args.flag("native") {
+        // PJRT-free engine: rebuild the L2 model from the store and serve
+        // it rust-natively; quantized formats run the real fixed-point
+        // path with weight planes packed once at startup.
+        let mut model = hif4::runtime::native::transformer_from_store(&manifest, &params)?;
+        match args.get_or("format", "bf16") {
+            "bf16" => {}
+            "hif4" => model.prepack_quantized_weights(Format::HiF4),
+            "nvfp4" => model.prepack_quantized_weights(Format::Nvfp4),
+            other => anyhow::bail!("--format must be bf16, hif4 or nvfp4, got {other}"),
+        }
+        // Serving never reads the dense plane of a prepacked linear; free
+        // it so the 4-bit format's memory win survives into deployment.
+        model.release_dense_weights();
+        let cfg = NativeServerConfig { policy, workers, seq: manifest.seq };
+        Server::start_native(Arc::new(model), cfg, addr)?
+    } else {
+        let artifact = args.get_or("artifact", "fwd_bf16.hlo.txt").to_string();
+        let mut served = params;
+        if artifact.contains("hif4") {
+            served.quantize_weights(&QuantScheme::direct(Format::HiF4));
+        } else if artifact.contains("nvfp4") {
+            served.quantize_weights(&QuantScheme::direct(Format::Nvfp4));
+        }
+        let cfg = ServerConfig { artifact, policy, workers };
+        Server::start(dir, cfg, &served, addr)?
+    };
     println!("serving on {} — Ctrl-C to stop", server.addr);
     loop {
         std::thread::sleep(std::time::Duration::from_secs(10));

@@ -5,19 +5,46 @@
 //! measured, not simulated.
 //!
 //! This path is also the GPTQ calibration substrate (it records per-linear
-//! inputs) and the fake-quant inference engine for the PTQ tables. The
-//! *serving* path runs the L2 JAX model via PJRT instead (`runtime/`,
-//! `server/`); see DESIGN.md for the split.
+//! inputs) and the fake-quant inference engine for the PTQ tables. Two
+//! quantized-inference modes exist:
+//!
+//! * **Simulated** ([`Transformer::quantize_weights`] + a
+//!   [`QuantPolicy`]): weights and activations are quantize→dequantized to
+//!   f32 and the linears stay f32 GEMMs — the paper's accuracy-table
+//!   semantics.
+//! * **Real** ([`Transformer::prepack_quantized_weights`]): weights are
+//!   quantized once into units + decode-once integer operand planes held
+//!   on each [`Linear`]; the forward pass then runs those linears through
+//!   the fixed-point QGEMM (backend per [`crate::dotprod::kernel`]),
+//!   quantizing activations on entry — the serving configuration.
+//!
+//! The *serving* path runs either the L2 JAX model via PJRT or this
+//! rust-native model (`runtime/native.rs`, `server/`); see DESIGN.md.
 //!
 //! Architecture: token embedding → N × [RMSNorm → {MHA|GQA|MLA} + residual
 //! → RMSNorm → {SwiGLU|GELU|MoE} + residual] → RMSNorm → LM head. RoPE on
 //! q/k. All linears are `Matrix` in out×in layout (`y = x · Wᵀ`).
 
 use super::config::{Attention, Ffn, LayerKind, ModelConfig};
-use crate::formats::QuantScheme;
+use crate::dotprod::packed::{self, PackedHiF4Matrix, PackedNvfp4Matrix};
+use crate::dotprod::qgemm::{self, HiF4Matrix, Nvfp4Matrix};
+use crate::dotprod::Kernel;
+use crate::formats::rounding::RoundMode;
+use crate::formats::{Format, QuantScheme};
 use crate::tensor::gemm::matmul_bt;
 use crate::tensor::{Matrix, Rng};
 use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Quantized weight operands a linear keeps alive across calls: the unit
+/// form (for the reference flow kernel) plus the decode-once integer
+/// planes (for the packed fast path). Arc'd so cloning a quantized model
+/// shares rather than re-packs.
+#[derive(Debug, Clone)]
+pub enum QuantWeights {
+    HiF4 { units: Arc<HiF4Matrix>, planes: Arc<PackedHiF4Matrix> },
+    Nvfp4 { units: Arc<Nvfp4Matrix>, planes: Arc<PackedNvfp4Matrix> },
+}
 
 /// One named linear layer.
 #[derive(Debug, Clone)]
@@ -27,13 +54,19 @@ pub struct Linear {
     pub kind: LayerKind,
     /// out×in weights.
     pub w: Matrix,
+    /// Real-quantized weight operands (see
+    /// [`Transformer::prepack_quantized_weights`]): when set, the forward
+    /// pass runs this linear through the fixed-point QGEMM instead of the
+    /// dequantize-then-f32 simulated path, with the weight planes packed
+    /// once and reused for every call/token.
+    pub qw: Option<QuantWeights>,
 }
 
 impl Linear {
     fn new(name: String, kind: LayerKind, out: usize, inp: usize, rng: &mut Rng) -> Linear {
         // Xavier-ish init.
         let sigma = (2.0 / (out + inp) as f32).sqrt();
-        Linear { name, kind, w: Matrix::randn(out, inp, sigma, rng) }
+        Linear { name, kind, w: Matrix::randn(out, inp, sigma, rng), qw: None }
     }
 }
 
@@ -245,6 +278,81 @@ impl Transformer {
         });
     }
 
+    /// **Real**-quantize every paper-quantized linear: quantize its weights
+    /// once into HiF4 units / NVFP4 groups, pack them into decode-once
+    /// integer operand planes, and keep both alive on the linear. From then
+    /// on [`Transformer::forward`] runs those linears through the
+    /// fixed-point QGEMM (activations quantized per call, weights packed
+    /// once and amortized across every call/token) instead of the
+    /// dequantize-then-f32 simulated path. Supports the two formats with a
+    /// fixed-point GEMM datapath.
+    pub fn prepack_quantized_weights(&mut self, format: Format) {
+        let mode = RoundMode::NearestEven;
+        self.visit_linears_mut(&mut |lin| {
+            if !lin.kind.quantized_by_paper() {
+                return;
+            }
+            lin.qw = Some(match format {
+                Format::HiF4 => {
+                    let units = HiF4Matrix::quantize(&lin.w, mode);
+                    let planes = PackedHiF4Matrix::pack(&units);
+                    QuantWeights::HiF4 { units: Arc::new(units), planes: Arc::new(planes) }
+                }
+                Format::Nvfp4 => {
+                    let units = Nvfp4Matrix::quantize(&lin.w, mode);
+                    let planes = PackedNvfp4Matrix::pack(&units);
+                    QuantWeights::Nvfp4 { units: Arc::new(units), planes: Arc::new(planes) }
+                }
+                other => panic!("no fixed-point GEMM datapath for {other:?}"),
+            });
+        });
+    }
+
+    /// Free the dense f32 weights of every real-quantized linear (those
+    /// with packed operands attached) — [`Transformer::forward`] never
+    /// reads `w` once `qw` is set, but clones, GPTQ and the backward pass
+    /// do, so this is an explicit opt-in for serving deployments where
+    /// the ~4 bytes/elem dense plane would otherwise dominate resident
+    /// weight memory next to the ~1.7 bytes/elem quantized operands.
+    pub fn release_dense_weights(&mut self) {
+        self.visit_linears_mut(&mut |lin| {
+            if lin.qw.is_some() {
+                lin.w = Matrix::zeros(0, 0);
+            }
+        });
+    }
+
+    /// `y = x · Wᵀ` through one linear: the real-quantized fixed-point
+    /// path when packed weights are attached (activations quantize here,
+    /// per call; the kernel backend follows [`crate::dotprod::kernel`]),
+    /// the dense f32 GEMM otherwise.
+    fn linear_fwd(&self, lin: &Linear, x: &Matrix) -> Matrix {
+        let Some(qw) = &lin.qw else {
+            return matmul_bt(x, &lin.w);
+        };
+        let mode = RoundMode::NearestEven;
+        match qw {
+            QuantWeights::HiF4 { units, planes } => {
+                let qx = HiF4Matrix::quantize(x, mode);
+                match crate::dotprod::kernel() {
+                    Kernel::Packed => {
+                        packed::hif4_gemm_bt_packed(&PackedHiF4Matrix::pack(&qx), planes)
+                    }
+                    Kernel::Flow => qgemm::hif4_gemm_bt_flow(&qx, units),
+                }
+            }
+            QuantWeights::Nvfp4 { units, planes } => {
+                let qx = Nvfp4Matrix::quantize(x, mode);
+                match crate::dotprod::kernel() {
+                    Kernel::Packed => {
+                        packed::nvfp4_gemm_bt_packed(&PackedNvfp4Matrix::pack(&qx), planes)
+                    }
+                    Kernel::Flow => qgemm::nvfp4_gemm_bt_flow(&qx, units),
+                }
+            }
+        }
+    }
+
     /// Widen the weight distribution **without changing the function**
     /// (see [`ModelConfig::outlier_scale`]): the V→O and W3→W2 paths are
     /// linear, so scaling `wv, w3` by `1/s` and `wo, w2` by `s` leaves
@@ -340,7 +448,7 @@ impl Transformer {
         }
 
         let (normed_f, rms_f) = rmsnorm_fwd(&x, &self.w.norm_f);
-        let logits = matmul_bt(&normed_f, &self.w.head.w);
+        let logits = self.linear_fwd(&self.w.head, &normed_f);
         if let Some(c) = cache {
             c.x_final = x;
             c.rms_f = rms_f;
@@ -379,14 +487,14 @@ impl Transformer {
         if let Some(c) = calib.as_deref_mut() {
             c.record(&layer.wq.name, &qin);
         }
-        let q = matmul_bt(&qin, &layer.wq.w);
+        let q = self.linear_fwd(&layer.wq, &qin);
         // K/V input: d_model directly, or the MLA latent.
         let (kv_in, latent) = match &layer.wdkv {
             Some(dkv) => {
                 if let Some(c) = calib.as_deref_mut() {
                     c.record(&dkv.name, &qin);
                 }
-                let lat = matmul_bt(&qin, &dkv.w);
+                let lat = self.linear_fwd(dkv, &qin);
                 let lat_q = self.maybe_quant_act(&lat, policy, LayerKind::AttnLinear);
                 (lat_q, Some(lat))
             }
@@ -396,8 +504,8 @@ impl Transformer {
             c.record(&layer.wk.name, &kv_in);
             c.record(&layer.wv.name, &kv_in);
         }
-        let mut k = matmul_bt(&kv_in, &layer.wk.w);
-        let v = matmul_bt(&kv_in, &layer.wv.w);
+        let mut k = self.linear_fwd(&layer.wk, &kv_in);
+        let v = self.linear_fwd(&layer.wv, &kv_in);
         let mut qr = q;
         rope_fwd(&mut qr, seq_lens, cfg.n_heads, cfg.head_dim, cfg.rope_base);
         rope_fwd(&mut k, seq_lens, cfg.kv_heads(), cfg.head_dim, cfg.rope_base);
@@ -415,7 +523,7 @@ impl Transformer {
         if let Some(c) = calib.as_deref_mut() {
             c.record(&layer.wo.name, &ctx_q);
         }
-        let out = matmul_bt(&ctx_q, &layer.wo.w);
+        let out = self.linear_fwd(&layer.wo, &ctx_q);
         if let Some(c) = cache {
             let lc = &mut c.layers[li];
             lc.attn = Some(AttnCache { qin, q: qr, k, v, kv_in, latent, ctx, probs });
@@ -507,7 +615,7 @@ fn ffn_expert_fwd(
     mut calib: Option<&mut Calibration>,
     model: &Transformer,
 ) -> (Matrix, ExpertCache) {
-    let h1 = matmul_bt(qx, &e.w1.w);
+    let h1 = model.linear_fwd(&e.w1, qx);
     match (&e.w3, cfg.ffn) {
         (None, _) => {
             // GELU MLP.
@@ -516,12 +624,12 @@ fn ffn_expert_fwd(
             if let Some(c) = calib.as_deref_mut() {
                 c.record(&e.w2.name, &act_q);
             }
-            let out = matmul_bt(&act_q, &e.w2.w);
+            let out = model.linear_fwd(&e.w2, &act_q);
             (out, ExpertCache { h1, h3: None, act: act_q })
         }
         (Some(w3), _) => {
             // SwiGLU.
-            let h3 = matmul_bt(qx, &w3.w);
+            let h3 = model.linear_fwd(w3, qx);
             let mut act = silu_fwd(&h1);
             for (a, b) in act.data.iter_mut().zip(&h3.data) {
                 *a *= *b;
@@ -530,7 +638,7 @@ fn ffn_expert_fwd(
             if let Some(c) = calib.as_deref_mut() {
                 c.record(&e.w2.name, &act_q);
             }
-            let out = matmul_bt(&act_q, &e.w2.w);
+            let out = model.linear_fwd(&e.w2, &act_q);
             (out, ExpertCache { h1, h3: Some(h3), act: act_q })
         }
     }
@@ -980,6 +1088,76 @@ mod tests {
         // ... but not beyond recognition for a 4.5-bit format.
         let denom: f32 = clean.data.iter().map(|x| x.abs()).sum();
         assert!(diff / denom < 0.5, "relative perturbation too large: {}", diff / denom);
+    }
+
+    #[test]
+    fn prepacked_linears_track_simulated_quantization() {
+        use crate::formats::{Format, QuantScheme};
+        let m = Transformer::init(tiny_cfg(Attention::Mha, Ffn::SwiGlu), 21);
+        // Simulated: fake-quant weights + activations, f32 GEMMs.
+        let mut sim = m.clone();
+        sim.quantize_weights(&QuantScheme::direct(Format::HiF4));
+        let policy = QuantPolicy { act: Some(QuantScheme::direct(Format::HiF4)) };
+        let sim_logits = sim.forward(&toks(), Some(&policy), None, None);
+        // Real: same quantized operands through the fixed-point QGEMM.
+        let mut real = m.clone();
+        real.prepack_quantized_weights(Format::HiF4);
+        let real_logits = real.forward(&toks(), None, None, None);
+        assert!(real_logits.data.iter().all(|x| x.is_finite()));
+        // Identical quantized operands; only GEMM accumulation precision
+        // differs (f32 dot vs exact-f64 PE flow), slightly amplified by
+        // depth — the paths must stay close in aggregate.
+        let diff: f32 =
+            sim_logits.data.iter().zip(&real_logits.data).map(|(a, b)| (a - b).abs()).sum();
+        let denom: f32 = sim_logits.data.iter().map(|x| x.abs()).sum();
+        assert!(diff / denom < 0.05, "real vs simulated drifted: {}", diff / denom);
+        // And the real path genuinely quantizes (differs from the clean
+        // model).
+        let clean = m.forward(&toks(), None, None, None);
+        let qdiff: f32 =
+            clean.data.iter().zip(&real_logits.data).map(|(a, b)| (a - b).abs()).sum();
+        assert!(qdiff > 0.0, "prepacked path must perturb logits");
+    }
+
+    #[test]
+    fn prepacked_forward_is_deterministic_and_kernel_invariant() {
+        use crate::dotprod::{set_kernel, Kernel};
+        use crate::formats::Format;
+        let mut m = Transformer::init(tiny_cfg(Attention::Gqa { kv_heads: 2 }, Ffn::SwiGlu), 22);
+        m.prepack_quantized_weights(Format::HiF4);
+        let a = m.forward(&toks(), None, None, None);
+        let b = m.forward(&toks(), None, None, None);
+        assert_eq!(a.data, b.data, "packed planes reused across calls must be deterministic");
+        // Flow and packed backends are bit-identical end to end. This is
+        // the only test that *writes* the process-wide knob (so readback
+        // cannot race); concurrent readers are unaffected because the
+        // backends agree bit for bit.
+        let prev = crate::dotprod::kernel();
+        set_kernel(Kernel::Flow);
+        assert_eq!(crate::dotprod::kernel(), Kernel::Flow, "knob round-trip");
+        let flow = m.forward(&toks(), None, None, None);
+        set_kernel(Kernel::Packed);
+        assert_eq!(crate::dotprod::kernel(), Kernel::Packed, "knob round-trip");
+        let packed = m.forward(&toks(), None, None, None);
+        set_kernel(prev);
+        assert_eq!(
+            flow.data.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+            packed.data.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+            "kernel backends must agree bit for bit"
+        );
+    }
+
+    #[test]
+    fn prepacked_nvfp4_linears_run_fixed_point() {
+        use crate::formats::Format;
+        let mut m = Transformer::init(tiny_cfg(Attention::Mha, Ffn::Gelu), 23);
+        m.prepack_quantized_weights(Format::Nvfp4);
+        let logits = m.forward(&toks(), None, None, None);
+        assert!(logits.data.iter().all(|x| x.is_finite()));
+        let clean = Transformer::init(tiny_cfg(Attention::Mha, Ffn::Gelu), 23)
+            .forward(&toks(), None, None, None);
+        let diff: f32 = clean.data.iter().zip(&logits.data).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff > 0.0);
     }
 
     #[test]

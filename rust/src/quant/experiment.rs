@@ -12,13 +12,19 @@ use crate::model::train::train;
 use crate::model::transformer::{Calibration, QuantPolicy, Transformer};
 use crate::tensor::Rng;
 
-/// The A-W quantization configurations of the paper's tables.
+/// The A-W quantization configurations of the paper's tables, plus
+/// [`QuantType::HiF4Packed`]: the same HiF4 direct cast executed on the
+/// *real* fixed-point path (weights prepacked into integer operand planes,
+/// activations quantized at each linear, GEMMs on the
+/// [`crate::dotprod::kernel`]-selected QGEMM backend) instead of the
+/// dequantize-then-f32 simulated path.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum QuantType {
     Bf16,
     Nvfp4,
     Nvfp4Pts,
     HiF4,
+    HiF4Packed,
     HiF4HiGptq,
 }
 
@@ -29,6 +35,7 @@ impl QuantType {
             QuantType::Nvfp4 => "NVFP4",
             QuantType::Nvfp4Pts => "NVFP4+PTS",
             QuantType::HiF4 => "HiF4",
+            QuantType::HiF4Packed => "HiF4 (fixed-point)",
             QuantType::HiF4HiGptq => "HiF4+HiGPTQ",
         }
     }
@@ -39,7 +46,7 @@ impl QuantType {
             QuantType::Bf16 => None,
             QuantType::Nvfp4 => Some(QuantScheme::direct(Format::Nvfp4)),
             QuantType::Nvfp4Pts => Some(QuantScheme::with_pts(Format::Nvfp4)),
-            QuantType::HiF4 | QuantType::HiF4HiGptq => {
+            QuantType::HiF4 | QuantType::HiF4Packed | QuantType::HiF4HiGptq => {
                 Some(QuantScheme::direct(Format::HiF4))
             }
         }
@@ -102,6 +109,14 @@ pub fn quantize_model(
     };
     let mut qm = model.clone();
     match qt {
+        QuantType::HiF4Packed => {
+            // Real-quantized execution: weights become packed integer
+            // planes held across every forward; activations quantize
+            // inside the packed linears, so no fake-quant policy applies
+            // on top.
+            qm.prepack_quantized_weights(Format::HiF4);
+            return (qm, None);
+        }
         QuantType::HiF4HiGptq => {
             // Calibrate on corpus text, then HiGPTQ each quantized linear.
             let mut calib = Calibration::new(xcfg.calib_rows);
@@ -209,6 +224,34 @@ mod tests {
         assert_eq!(drops.len(), 8);
         // HiF4 direct cast stays within a plausible drop band.
         assert!(block.rows[1].mean >= block.rows[0].mean - 25.0);
+    }
+
+    #[test]
+    fn packed_fixed_point_path_stays_in_simulated_accuracy_band() {
+        // The real-quantized kernel path uses the same quantized operands
+        // as the simulated path (only GEMM accumulation differs), so the
+        // two HiF4 rows must land close together on the eval suite.
+        let cfg = zoo::llama2_tiny();
+        let xcfg = ExperimentConfig {
+            train_steps: 40,
+            eval_items: 20,
+            eval_seeds: vec![1],
+            calib_rows: 64,
+            ..Default::default()
+        };
+        let block = run_model(
+            &cfg,
+            &[Task::AgreeEasy, Task::Physical],
+            &[QuantType::HiF4, QuantType::HiF4Packed],
+            &xcfg,
+            4,
+        );
+        let sim = block.rows[0].mean;
+        let real = block.rows[1].mean;
+        assert!(
+            (sim - real).abs() < 20.0,
+            "fixed-point path drifted from simulated: sim={sim:.1} real={real:.1}"
+        );
     }
 
     #[test]

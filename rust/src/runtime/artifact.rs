@@ -23,6 +23,14 @@ pub struct Manifest {
     /// Standalone qdq entry dims.
     pub qdq_rows: usize,
     pub qdq_cols: usize,
+    /// Attention geometry of the lowered model, used by the native
+    /// (PJRT-free) backend to rebuild the transformer
+    /// ([`crate::runtime::native`]). Optional in older manifests; defaults
+    /// mirror `python/compile/model.py`'s `CONFIG`.
+    pub n_heads: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    pub rope_base: f32,
 }
 
 impl Manifest {
@@ -36,6 +44,12 @@ impl Manifest {
         let mut qdq_rows = 0;
         let mut qdq_cols = 0;
         let mut params = Vec::new();
+        // model.py CONFIG defaults, for manifests written before the
+        // geometry keys existed.
+        let mut n_heads = 4;
+        let mut kv_heads = 2;
+        let mut head_dim = 16;
+        let mut rope_base = 10000.0f32;
         for line in text.lines() {
             let mut it = line.split_whitespace();
             let Some(key) = it.next() else { continue };
@@ -43,6 +57,10 @@ impl Manifest {
                 "batch" => batch = it.next().context("batch")?.parse()?,
                 "seq" => seq = it.next().context("seq")?.parse()?,
                 "vocab" => vocab = it.next().context("vocab")?.parse()?,
+                "n_heads" => n_heads = it.next().context("n_heads")?.parse()?,
+                "kv_heads" => kv_heads = it.next().context("kv_heads")?.parse()?,
+                "head_dim" => head_dim = it.next().context("head_dim")?.parse()?,
+                "rope_base" => rope_base = it.next().context("rope_base")?.parse()?,
                 "qdq" => {
                     qdq_rows = it.next().context("qdq rows")?.parse()?;
                     qdq_cols = it.next().context("qdq cols")?.parse()?;
@@ -62,7 +80,19 @@ impl Manifest {
         if batch == 0 || seq == 0 || params.is_empty() {
             bail!("incomplete manifest {path:?}");
         }
-        Ok(Manifest { dir: dir.to_path_buf(), batch, seq, vocab, params, qdq_rows, qdq_cols })
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            batch,
+            seq,
+            vocab,
+            params,
+            qdq_rows,
+            qdq_cols,
+            n_heads,
+            kv_heads,
+            head_dim,
+            rope_base,
+        })
     }
 
     /// Path of a named artifact.

@@ -12,6 +12,12 @@
 //! [`client::Runtime`] reports that PJRT is unavailable (integration
 //! tests and benches skip when `artifacts/` is missing for the same
 //! reason). Point `rust/Cargo.toml` at the real xla-rs crate to execute.
+//!
+//! [`native`] is the PJRT-free alternative: it rebuilds the same model
+//! from the [`artifact::ParamStore`] and serves it with the rust-native
+//! forward pass (and, for quantized serving, the packed fixed-point
+//! QGEMM), so the coordinator runs end to end even offline.
 
 pub mod artifact;
 pub mod client;
+pub mod native;

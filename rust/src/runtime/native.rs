@@ -1,0 +1,192 @@
+//! Native (PJRT-free) execution backend: rebuild the L2 transformer from a
+//! [`Manifest`] + [`ParamStore`] and run it with the rust-native forward
+//! pass — so the serving coordinator works, and the quantized serving path
+//! exercises the real fixed-point QGEMM, even where no XLA runtime exists.
+//!
+//! The L2 model (`python/compile/model.py`) is a GQA + SwiGLU decoder with
+//! flat parameter names (`embed`, `head`, `norm_f`, `layer{l}.wq` …); the
+//! rust [`Transformer`] implements the same architecture with nested
+//! weights, so this module is a pure renaming/reshaping bridge. Geometry
+//! that shapes alone cannot recover (head split, RoPE base) comes from the
+//! manifest's geometry keys (with `model.py CONFIG` defaults for older
+//! manifests).
+//!
+//! For quantized serving, call
+//! [`Transformer::prepack_quantized_weights`][prepack] on the result: the
+//! weights become decode-once integer operand planes held across every
+//! request — the serving-side payoff of the packed QGEMM layer.
+//!
+//! [prepack]: crate::model::transformer::Transformer::prepack_quantized_weights
+
+use crate::model::config::{Attention, Ffn, ModelConfig};
+use crate::model::transformer::Transformer;
+use crate::runtime::artifact::{Manifest, ParamStore};
+use anyhow::{Context, Result};
+
+/// Shape of a named manifest param.
+fn shape<'a>(m: &'a Manifest, name: &str) -> Result<&'a [usize]> {
+    m.params
+        .iter()
+        .find(|(n, _)| n == name)
+        .map(|(_, d)| d.as_slice())
+        .with_context(|| format!("manifest has no param {name}"))
+}
+
+/// Derive the rust-native [`ModelConfig`] equivalent of the lowered L2
+/// model from manifest shapes + geometry keys.
+pub fn config_from_manifest(m: &Manifest) -> Result<ModelConfig> {
+    let embed = shape(m, "embed")?;
+    anyhow::ensure!(embed.len() == 2, "embed must be 2-D");
+    let (vocab, d_model) = (embed[0], embed[1]);
+    anyhow::ensure!(vocab == m.vocab, "embed rows {} != manifest vocab {}", vocab, m.vocab);
+    let mut n_layers = 0;
+    while m.params.iter().any(|(n, _)| *n == format!("layer{n_layers}.wq")) {
+        n_layers += 1;
+    }
+    anyhow::ensure!(n_layers > 0, "manifest has no layer0.wq — not a transformer manifest");
+    let wq = shape(m, "layer0.wq")?;
+    let wk = shape(m, "layer0.wk")?;
+    anyhow::ensure!(wq.len() == 2 && wk.len() == 2, "wq/wk must be 2-D");
+    anyhow::ensure!(
+        wq[0] == m.n_heads * m.head_dim,
+        "wq out dim {} != n_heads×head_dim {}×{}",
+        wq[0],
+        m.n_heads,
+        m.head_dim
+    );
+    anyhow::ensure!(
+        wk[0] == m.kv_heads * m.head_dim,
+        "wk out dim {} != kv_heads×head_dim {}×{}",
+        wk[0],
+        m.kv_heads,
+        m.head_dim
+    );
+    let w1 = shape(m, "layer0.w1")?;
+    anyhow::ensure!(w1.len() == 2, "w1 must be 2-D");
+    let d_ff = w1[0];
+    let swiglu = m.params.iter().any(|(n, _)| n == "layer0.w3");
+    Ok(ModelConfig {
+        name: "l2-native".into(),
+        vocab,
+        d_model,
+        n_layers,
+        n_heads: m.n_heads,
+        head_dim: m.head_dim,
+        attention: if m.kv_heads == m.n_heads {
+            Attention::Mha
+        } else {
+            Attention::Gqa { kv_heads: m.kv_heads }
+        },
+        ffn: if swiglu { Ffn::SwiGlu } else { Ffn::Gelu },
+        d_ff,
+        max_seq: m.seq,
+        rope_base: m.rope_base,
+        outlier_scale: 1.0,
+        outlier_frac: 0.0,
+    })
+}
+
+/// Build the rust-native transformer carrying the store's weights — the
+/// exact parameters PJRT workers would receive as literals.
+pub fn transformer_from_store(m: &Manifest, store: &ParamStore) -> Result<Transformer> {
+    let cfg = config_from_manifest(m)?;
+    let matrix = |name: &str| -> Result<crate::tensor::Matrix> {
+        store.matrix(name).with_context(|| format!("store is missing 2-D param {name}"))
+    };
+    let gain = |name: &str| -> Result<Vec<f32>> {
+        let (dims, data) =
+            store.params.get(name).with_context(|| format!("store is missing param {name}"))?;
+        anyhow::ensure!(dims.len() == 1, "{name} must be 1-D, got {dims:?}");
+        Ok(data.clone())
+    };
+    let mut t = Transformer::init(cfg, 0);
+    let take = |slot: &mut crate::tensor::Matrix, name: &str| -> Result<()> {
+        let got = matrix(name)?;
+        anyhow::ensure!(
+            (got.rows, got.cols) == (slot.rows, slot.cols),
+            "{name}: store shape {}x{} != model shape {}x{}",
+            got.rows,
+            got.cols,
+            slot.rows,
+            slot.cols
+        );
+        *slot = got;
+        Ok(())
+    };
+    take(&mut t.w.embed, "embed")?;
+    take(&mut t.w.head.w, "head")?;
+    t.w.norm_f = gain("norm_f")?;
+    for l in 0..t.cfg.n_layers {
+        let p = |part: &str| format!("layer{l}.{part}");
+        let layer = &mut t.w.layers[l];
+        layer.norm1 = gain(&p("norm1"))?;
+        layer.norm2 = gain(&p("norm2"))?;
+        take(&mut layer.wq.w, &p("wq"))?;
+        take(&mut layer.wk.w, &p("wk"))?;
+        take(&mut layer.wv.w, &p("wv"))?;
+        take(&mut layer.wo.w, &p("wo"))?;
+        let ffn = &mut layer.ffn[0];
+        take(&mut ffn.w1.w, &p("w1"))?;
+        take(&mut ffn.w2.w, &p("w2"))?;
+        if let Some(w3) = &mut ffn.w3 {
+            take(&mut w3.w, &p("w3"))?;
+        }
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    /// A complete 1-layer GQA+SwiGLU manifest (d=32, 4 heads × 8, kv 2).
+    /// Twin of the fixture in `tests/native_serving.rs` (integration
+    /// tests can't reach a cfg(test) helper across the crate boundary) —
+    /// keep the two in sync when changing the geometry.
+    fn write_native_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "batch 4\nseq 16\nvocab 96\nn_heads 4\nkv_heads 2\nhead_dim 8\nrope_base 10000\n\
+             qdq 8 64\n\
+             param embed 96 32\nparam head 96 32\nparam norm_f 32\n\
+             param layer0.norm1 32\nparam layer0.norm2 32\n\
+             param layer0.wq 32 32\nparam layer0.wk 16 32\nparam layer0.wv 16 32\n\
+             param layer0.wo 32 32\n\
+             param layer0.w1 64 32\nparam layer0.w2 32 64\nparam layer0.w3 64 32\n",
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn config_derivation_matches_manifest() {
+        let dir = std::env::temp_dir().join("hif4_native_cfg_test");
+        write_native_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        let cfg = config_from_manifest(&m).unwrap();
+        assert_eq!(cfg.vocab, 96);
+        assert_eq!(cfg.d_model, 32);
+        assert_eq!(cfg.n_layers, 1);
+        assert_eq!(cfg.d_ff, 64);
+        assert!(matches!(cfg.attention, Attention::Gqa { kv_heads: 2 }));
+        assert!(matches!(cfg.ffn, Ffn::SwiGlu));
+        assert_eq!(cfg.param_count(), m.param_elems());
+    }
+
+    #[test]
+    fn store_weights_reach_the_model() {
+        let dir = std::env::temp_dir().join("hif4_native_store_test");
+        write_native_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        let store = m.init_params(7);
+        let t = transformer_from_store(&m, &store).unwrap();
+        assert_eq!(t.w.embed.data, store.params["embed"].1);
+        assert_eq!(t.w.layers[0].wk.w.data, store.params["layer0.wk"].1);
+        assert_eq!(t.w.norm_f, store.params["norm_f"].1);
+        // And it actually runs.
+        let logits = t.forward(&[vec![1, 2, 3]], None, None, None);
+        assert_eq!((logits.rows, logits.cols), (3, 96));
+        assert!(logits.data.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,5 +1,5 @@
 //! Serving coordinator: TCP protocol, request router, dynamic batcher and
-//! the PJRT worker pool.
+//! the worker pool (PJRT executables or the rust-native engine).
 //!
 //! Request lifecycle (all std threads, no async runtime):
 //!
@@ -10,7 +10,7 @@
 //!                                             ▼
 //!                                     shared batch queue
 //!                                    ▲            ▲  (free workers pull)
-//!                               worker 0 …   worker N-1   (own PJRT exe each)
+//!                               worker 0 …   worker N-1   (own engine each)
 //!                                    └──▶ reply writer (per-connection lock)
 //! ```
 //!

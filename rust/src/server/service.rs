@@ -1,24 +1,32 @@
 //! The serving coordinator: TCP listener → router → dynamic batcher →
-//! PJRT **worker pool** → per-connection reply writers. Thread-based (std
+//! **worker pool** → per-connection reply writers. Thread-based (std
 //! only); Python is nowhere on this path.
 //!
 //! Pipeline: connection threads push requests onto one MPSC queue; a
 //! dedicated batcher thread drains them under the [`BatchPolicy`] onto a
-//! shared batch queue, which `workers` PJRT worker threads — each owning
-//! its own compiled executable — pull from whenever they are free (idle
-//! workers pick up the next batch, so a stalled worker never strands a
-//! backlog) — the data-parallel serving analogue of the row-parallel
-//! QGEMM kernels.
+//! shared batch queue, which `workers` worker threads pull from whenever
+//! they are free (idle workers pick up the next batch, so a stalled
+//! worker never strands a backlog) — the data-parallel serving analogue
+//! of the row-parallel QGEMM kernels.
 //!
-//! Threading note: the xla crate's PJRT handles are `!Send` (Rc-backed), so
-//! each worker thread owns its *entire* PJRT lifecycle — client, compiled
-//! executable and parameter literals are created inside the worker from
-//! plain-data inputs (artifact path + `ParamStore`), and only plain data
-//! crosses thread boundaries.
+//! Two execution **engines** plug into the same pipeline:
+//!
+//! * **PJRT** ([`Server::start`]): each worker compiles its own copy of a
+//!   lowered HLO artifact. The xla crate's PJRT handles are `!Send`
+//!   (Rc-backed), so each worker thread owns its *entire* PJRT lifecycle —
+//!   client, executable and parameter literals are created inside the
+//!   worker from plain-data inputs, and only plain data crosses threads.
+//! * **Native** ([`Server::start_native`]): workers share one
+//!   `Arc<Transformer>` and run the rust-native forward. With
+//!   [`Transformer::prepack_quantized_weights`] applied first, every
+//!   request runs the real fixed-point QGEMM over weight planes packed
+//!   exactly once — quantized serving with no decode tax and no XLA
+//!   runtime required.
 
 use super::batcher::{run_batcher, BatchPolicy, Pending};
 use super::metrics::Metrics;
 use super::protocol::{Request, Response};
+use crate::model::transformer::Transformer;
 use crate::runtime::artifact::{Manifest, ParamStore};
 use crate::runtime::client::{literal_f32, tokens_literal, Executable, Runtime};
 use anyhow::{Context, Result};
@@ -31,18 +39,64 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-/// Server configuration.
+/// PJRT server configuration.
 pub struct ServerConfig {
     /// Artifact to serve, e.g. "fwd_bf16.hlo.txt" or "fwd_hif4.hlo.txt".
     pub artifact: String,
     pub policy: BatchPolicy,
-    /// PJRT worker threads; each compiles its own copy of the executable
+    /// Worker threads; each compiles its own copy of the executable
     /// and pulls batches from the shared queue when free. 0 is treated
     /// as 1.
     pub workers: usize,
 }
 
+/// Native-engine server configuration.
+pub struct NativeServerConfig {
+    pub policy: BatchPolicy,
+    /// Worker threads sharing one `Arc<Transformer>`. 0 is treated as 1.
+    pub workers: usize,
+    /// Max tokens per request (requests truncate to this).
+    pub seq: usize,
+}
+
 type ReplyHandle = Arc<Mutex<TcpStream>>;
+
+/// One worker's executor: turns a pending batch into responses. Engines
+/// are constructed *inside* their worker thread by an [`EngineFactory`]
+/// (PJRT handles are `!Send`), so the engine itself never crosses threads.
+trait BatchEngine {
+    fn run(&mut self, pending: &[Pending<ReplyHandle>]) -> Result<Vec<Response>>;
+}
+
+/// Thread-safe constructor handed to every worker thread.
+type EngineFactory = Arc<dyn Fn(usize) -> Result<Box<dyn BatchEngine>> + Send + Sync>;
+
+/// PJRT engine: one compiled executable + parameter literals per worker.
+struct PjrtEngine {
+    exe: Executable,
+    param_literals: Vec<xla::Literal>,
+    batch: usize,
+    seq: usize,
+    vocab: usize,
+}
+
+impl BatchEngine for PjrtEngine {
+    fn run(&mut self, pending: &[Pending<ReplyHandle>]) -> Result<Vec<Response>> {
+        run_batch(&self.exe, &self.param_literals, pending, self.batch, self.seq, self.vocab)
+    }
+}
+
+/// Native engine: the shared rust-native model (read-only, `Sync`).
+struct NativeEngine {
+    model: Arc<Transformer>,
+    seq: usize,
+}
+
+impl BatchEngine for NativeEngine {
+    fn run(&mut self, pending: &[Pending<ReplyHandle>]) -> Result<Vec<Response>> {
+        Ok(run_batch_native(&self.model, pending, self.seq))
+    }
+}
 
 /// A running server (listener + batcher + worker-pool threads).
 pub struct Server {
@@ -56,7 +110,7 @@ pub struct Server {
 
 impl Server {
     /// Compile the artifact on `cfg.workers` dedicated worker threads, bind
-    /// `addr` (port 0 for ephemeral) and start serving `params`.
+    /// `addr` (port 0 for ephemeral) and start serving `params` via PJRT.
     pub fn start(
         artifacts_dir: &Path,
         cfg: ServerConfig,
@@ -64,105 +118,45 @@ impl Server {
         addr: &str,
     ) -> Result<Server> {
         let manifest = Manifest::load(artifacts_dir)?;
-        let metrics = Arc::new(Metrics::new());
-        let stop = Arc::new(AtomicBool::new(false));
-        let (tx, rx) = channel::<Pending<ReplyHandle>>();
-
-        // Worker pool: each worker owns PJRT client + executable + literals
-        // and pulls batches from one shared queue when free.
-        let n_workers = cfg.workers.max(1);
-        let (ready_tx, ready_rx) = channel::<Result<()>>();
-        // Rendezvous handoff: while every worker is busy the batcher blocks
-        // here and the request queue keeps accumulating, so the next drain
-        // coalesces the backlog into full batches (no padded fragments).
-        let (batch_tx, batch_rx) = sync_channel::<Vec<Pending<ReplyHandle>>>(0);
-        let batch_rx = Arc::new(Mutex::new(batch_rx));
         // One shared weight copy: every worker builds its literals from the
-        // same Arc'd store instead of deep-cloning per worker.
+        // same Arc'd store instead of deep-cloning per worker (the factory
+        // drops inside each worker after setup, so the store frees once
+        // the last worker is ready).
         let shared_params = Arc::new(params.clone());
-        let mut worker_threads = Vec::with_capacity(n_workers);
-        for wi in 0..n_workers {
-            let wrx = Arc::clone(&batch_rx);
-            let ready_tx = ready_tx.clone();
-            let worker_metrics = Arc::clone(&metrics);
-            let (batch, seq, vocab) = (manifest.batch, manifest.seq, manifest.vocab);
-            let artifact_path: PathBuf = manifest.artifact(&cfg.artifact);
-            let worker_params = Arc::clone(&shared_params);
-            let handle = std::thread::Builder::new()
-                .name(format!("hif4-worker-{wi}"))
-                .spawn(move || {
-                    let setup = (|| -> Result<(Executable, Vec<xla::Literal>)> {
-                        let runtime = Runtime::cpu()?;
-                        let exe = runtime.load(&artifact_path)?;
-                        let literals = worker_params.literals()?;
-                        Ok((exe, literals))
-                    })();
-                    // Only the literals are needed past setup; release this
-                    // worker's handle on the shared weight copy (the store
-                    // itself frees once the last worker finishes setup).
-                    drop(worker_params);
-                    match setup {
-                        Err(e) => {
-                            let _ = ready_tx.send(Err(e));
-                        }
-                        Ok((exe, param_literals)) => {
-                            let _ = ready_tx.send(Ok(()));
-                            worker_loop(
-                                exe,
-                                param_literals,
-                                wrx,
-                                batch,
-                                seq,
-                                vocab,
-                                worker_metrics,
-                            );
-                        }
-                    }
-                })
-                .context("spawn worker")?;
-            worker_threads.push(handle);
-        }
-        drop(ready_tx);
-        drop(batch_rx); // workers hold the only receiver clones now
-        drop(shared_params); // workers hold the remaining weight handles
-        for _ in 0..n_workers {
-            ready_rx.recv().context("worker died during setup")??;
-        }
-
-        // Batcher: drains the request queue into the shared batch queue.
+        let (batch, seq, vocab) = (manifest.batch, manifest.seq, manifest.vocab);
+        let artifact_path: PathBuf = manifest.artifact(&cfg.artifact);
+        let factory: EngineFactory = Arc::new(move |_wi| {
+            let runtime = Runtime::cpu()?;
+            let exe = runtime.load(&artifact_path)?;
+            let param_literals = shared_params.literals()?;
+            Ok(Box::new(PjrtEngine { exe, param_literals, batch, seq, vocab })
+                as Box<dyn BatchEngine>)
+        });
         // Clamp to the artifact's lowered batch dimension — a larger
         // max_batch would make run_batch truncate the token rows but still
         // index logits for every pending request (out of bounds).
         let mut policy = cfg.policy;
         policy.max_batch = policy.max_batch.clamp(1, manifest.batch);
-        let batcher_metrics = Arc::clone(&metrics);
-        let batcher_thread = std::thread::Builder::new()
-            .name("hif4-batcher".into())
-            .spawn(move || {
-                run_batcher(&rx, &policy, &batch_tx, |n| {
-                    batcher_metrics.record_batch(n);
-                });
-            })
-            .context("spawn batcher")?;
+        start_engine(policy, cfg.workers.max(1), addr, factory)
+    }
 
-        // Listener: a thread per connection reads requests into the queue.
-        let listener = TcpListener::bind(addr)?;
-        let local = listener.local_addr()?;
-        let listen_metrics = Arc::clone(&metrics);
-        let listen_stop = Arc::clone(&stop);
-        let listener_thread = std::thread::Builder::new()
-            .name("hif4-listener".into())
-            .spawn(move || listener_loop(listener, tx, listen_metrics, listen_stop))
-            .context("spawn listener")?;
-
-        Ok(Server {
-            addr: local,
-            metrics,
-            stop,
-            listener_thread: Some(listener_thread),
-            batcher_thread: Some(batcher_thread),
-            worker_threads,
-        })
+    /// Serve the rust-native `model` on `cfg.workers` worker threads —
+    /// no PJRT, no artifacts. Quantized serving: call
+    /// [`Transformer::prepack_quantized_weights`] before handing the
+    /// model over, and every request runs the fixed-point QGEMM over
+    /// weight planes packed once.
+    pub fn start_native(
+        model: Arc<Transformer>,
+        cfg: NativeServerConfig,
+        addr: &str,
+    ) -> Result<Server> {
+        let seq = cfg.seq.max(1);
+        let factory: EngineFactory = Arc::new(move |_wi| {
+            Ok(Box::new(NativeEngine { model: Arc::clone(&model), seq }) as Box<dyn BatchEngine>)
+        });
+        let mut policy = cfg.policy;
+        policy.max_batch = policy.max_batch.max(1);
+        start_engine(policy, cfg.workers.max(1), addr, factory)
     }
 
     /// Signal shutdown (threads exit on their next poll/disconnect).
@@ -171,6 +165,91 @@ impl Server {
         // Poke the listener out of accept() with a dummy connection.
         let _ = TcpStream::connect(self.addr);
     }
+}
+
+/// Shared pipeline bring-up: spawn `n_workers` worker threads (each
+/// constructing its engine in-thread via `factory`), the batcher and the
+/// listener, wired exactly as described in the module docs.
+fn start_engine(
+    policy: BatchPolicy,
+    n_workers: usize,
+    addr: &str,
+    factory: EngineFactory,
+) -> Result<Server> {
+    let metrics = Arc::new(Metrics::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let (tx, rx) = channel::<Pending<ReplyHandle>>();
+
+    // Worker pool: each worker owns its engine and pulls batches from one
+    // shared queue when free.
+    let (ready_tx, ready_rx) = channel::<Result<()>>();
+    // Rendezvous handoff: while every worker is busy the batcher blocks
+    // here and the request queue keeps accumulating, so the next drain
+    // coalesces the backlog into full batches (no padded fragments).
+    let (batch_tx, batch_rx) = sync_channel::<Vec<Pending<ReplyHandle>>>(0);
+    let batch_rx = Arc::new(Mutex::new(batch_rx));
+    let mut worker_threads = Vec::with_capacity(n_workers);
+    for wi in 0..n_workers {
+        let wrx = Arc::clone(&batch_rx);
+        let ready_tx = ready_tx.clone();
+        let worker_metrics = Arc::clone(&metrics);
+        let worker_factory = Arc::clone(&factory);
+        let handle = std::thread::Builder::new()
+            .name(format!("hif4-worker-{wi}"))
+            .spawn(move || {
+                let setup = worker_factory(wi);
+                // Engine built (or failed); release this worker's handle on
+                // the factory and whatever setup state it captured.
+                drop(worker_factory);
+                match setup {
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                    }
+                    Ok(engine) => {
+                        let _ = ready_tx.send(Ok(()));
+                        worker_loop(engine, wrx, worker_metrics);
+                    }
+                }
+            })
+            .context("spawn worker")?;
+        worker_threads.push(handle);
+    }
+    drop(ready_tx);
+    drop(batch_rx); // workers hold the only receiver clones now
+    drop(factory); // workers hold the remaining factory handles
+    for _ in 0..n_workers {
+        ready_rx.recv().context("worker died during setup")??;
+    }
+
+    // Batcher: drains the request queue into the shared batch queue.
+    let batcher_metrics = Arc::clone(&metrics);
+    let batcher_thread = std::thread::Builder::new()
+        .name("hif4-batcher".into())
+        .spawn(move || {
+            run_batcher(&rx, &policy, &batch_tx, |n| {
+                batcher_metrics.record_batch(n);
+            });
+        })
+        .context("spawn batcher")?;
+
+    // Listener: a thread per connection reads requests into the queue.
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    let listen_metrics = Arc::clone(&metrics);
+    let listen_stop = Arc::clone(&stop);
+    let listener_thread = std::thread::Builder::new()
+        .name("hif4-listener".into())
+        .spawn(move || listener_loop(listener, tx, listen_metrics, listen_stop))
+        .context("spawn listener")?;
+
+    Ok(Server {
+        addr: local,
+        metrics,
+        stop,
+        listener_thread: Some(listener_thread),
+        batcher_thread: Some(batcher_thread),
+        worker_threads,
+    })
 }
 
 impl Drop for Server {
@@ -225,12 +304,8 @@ fn listener_loop(
 /// must never stop pulling before the channel closes or shutdown could
 /// deadlock.
 fn worker_loop(
-    exe: Executable,
-    param_literals: Vec<xla::Literal>,
+    mut engine: Box<dyn BatchEngine>,
     rx: Arc<Mutex<Receiver<Vec<Pending<ReplyHandle>>>>>,
-    batch: usize,
-    seq: usize,
-    vocab: usize,
     metrics: Arc<Metrics>,
 ) {
     loop {
@@ -238,7 +313,7 @@ fn worker_loop(
         // batch (same pattern as util::threadpool::ThreadPool).
         let next = { rx.lock().unwrap().recv() };
         let Ok(pending) = next else { break };
-        match run_batch(&exe, &param_literals, &pending, batch, seq, vocab) {
+        match engine.run(&pending) {
             Ok(responses) => {
                 for (p, mut resp) in pending.iter().zip(responses) {
                     resp.latency_us = p.arrived.elapsed().as_micros() as u32;
@@ -295,23 +370,57 @@ pub fn run_batch(
     for (bi, p) in pending.iter().enumerate() {
         let last = p.request.tokens.len().clamp(1, seq) - 1;
         let row = &logits[bi * seq * vocab + last * vocab..][..vocab];
-        let (mut best, mut best_v) = (0usize, f32::NEG_INFINITY);
-        for (t, v) in row.iter().enumerate() {
-            if *v > best_v {
-                best = t;
-                best_v = *v;
-            }
-        }
-        // log-softmax value at the argmax.
-        let denom: f32 = row.iter().map(|v| (v - best_v).exp()).sum();
-        responses.push(Response {
-            id: p.request.id,
-            token: best as u32,
-            logprob: -denom.ln(),
-            latency_us: 0,
-        });
+        responses.push(response_from_logits(p.request.id, row));
     }
     Ok(responses)
+}
+
+/// Argmax + log-softmax-at-argmax over one logits row.
+fn response_from_logits(id: u64, row: &[f32]) -> Response {
+    let (mut best, mut best_v) = (0usize, f32::NEG_INFINITY);
+    for (t, v) in row.iter().enumerate() {
+        if *v > best_v {
+            best = t;
+            best_v = *v;
+        }
+    }
+    // log-softmax value at the argmax.
+    let denom: f32 = row.iter().map(|v| (v - best_v).exp()).sum();
+    Response { id, token: best as u32, logprob: -denom.ln(), latency_us: 0 }
+}
+
+/// Execute one batch on the rust-native model. No padding is needed —
+/// the native forward handles ragged batches directly; requests truncate
+/// to `seq` tokens, and out-of-vocab ids clamp to the last token so a
+/// malformed request can never panic a worker (the lowered path is safe
+/// by construction: XLA gathers clamp indices).
+pub fn run_batch_native(
+    model: &Transformer,
+    pending: &[Pending<impl Sized>],
+    seq: usize,
+) -> Vec<Response> {
+    let vocab = model.cfg.vocab;
+    let token_rows: Vec<Vec<usize>> = pending
+        .iter()
+        .map(|p| {
+            let mut t: Vec<usize> =
+                p.request.tokens.iter().map(|&tok| tok.min(vocab - 1)).collect();
+            t.truncate(seq);
+            if t.is_empty() {
+                t.push(0);
+            }
+            t
+        })
+        .collect();
+    let logits = model.forward(&token_rows, None, None, None);
+    let mut responses = Vec::with_capacity(pending.len());
+    let mut base = 0usize;
+    for (p, tokens) in pending.iter().zip(&token_rows) {
+        let row = logits.row(base + tokens.len() - 1);
+        responses.push(response_from_logits(p.request.id, row));
+        base += tokens.len();
+    }
+    responses
 }
 
 /// Blocking client for examples/benches: send requests, read responses.

@@ -24,6 +24,11 @@ use std::thread::JoinHandle;
 /// mid-sized ones use only as many threads as the work supports.
 pub const PAR_MIN_WORK: usize = 1 << 17;
 
+/// Flop-equivalents per element for block *dequantization* (decode +
+/// copy — a handful of operations per value). Dequantize call sites weight
+/// their element counts by this before [`threads_for`].
+pub const DEQUANT_WORK_PER_ELEM: usize = 4;
+
 /// Flop-equivalents per element for the block-quantization codecs
 /// (Algorithm 1 runs peak trees, reciprocal scaling and per-element
 /// rounding — tens of operations per value, vs ~1 per GEMM element-op).

@@ -1,0 +1,110 @@
+//! End-to-end native serving: TCP listener → batcher → native worker pool
+//! running the rust-native transformer (no PJRT, no artifacts) — including
+//! the real-quantized configuration where HiF4 weight planes are packed
+//! once at startup and every request runs the fixed-point QGEMM.
+
+use hif4::formats::Format;
+use hif4::runtime::artifact::Manifest;
+use hif4::runtime::native::transformer_from_store;
+use hif4::server::batcher::{BatchPolicy, Pending};
+use hif4::server::protocol::Request;
+use hif4::server::service::{run_batch_native, Client, NativeServerConfig, Server};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A complete 1-layer GQA+SwiGLU manifest (d=32, 4 heads × 8, kv 2).
+/// Twin of the fixture in `src/runtime/native.rs`'s unit tests — keep the
+/// two in sync when changing the geometry.
+fn write_manifest(dir: &Path) {
+    std::fs::create_dir_all(dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.txt"),
+        "batch 4\nseq 16\nvocab 96\nn_heads 4\nkv_heads 2\nhead_dim 8\nrope_base 10000\n\
+         qdq 8 64\n\
+         param embed 96 32\nparam head 96 32\nparam norm_f 32\n\
+         param layer0.norm1 32\nparam layer0.norm2 32\n\
+         param layer0.wq 32 32\nparam layer0.wk 16 32\nparam layer0.wv 16 32\n\
+         param layer0.wo 32 32\n\
+         param layer0.w1 64 32\nparam layer0.w2 32 64\nparam layer0.w3 64 32\n",
+    )
+    .unwrap();
+}
+
+fn manifest_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("hif4_native_serving_{tag}"))
+}
+
+fn pending(id: u64, tokens: Vec<usize>) -> Pending<()> {
+    Pending { request: Request { id, tokens }, arrived: Instant::now(), reply: () }
+}
+
+#[test]
+fn native_server_round_trips_and_matches_direct_execution() {
+    let dir = manifest_dir("bf16");
+    write_manifest(&dir);
+    let manifest = Manifest::load(&dir).unwrap();
+    let store = manifest.init_params(7);
+    let model = Arc::new(transformer_from_store(&manifest, &store).unwrap());
+
+    // Ground truth straight through the batch executor.
+    let requests: Vec<Vec<usize>> = vec![vec![1, 5, 9], vec![2, 6, 10, 14], vec![3], vec![90, 4]];
+    let direct: Vec<_> = requests
+        .iter()
+        .enumerate()
+        .map(|(i, t)| pending(i as u64, t.clone()))
+        .collect();
+    let expected = run_batch_native(&model, &direct, manifest.seq);
+
+    let cfg = NativeServerConfig {
+        policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) },
+        workers: 2,
+        seq: manifest.seq,
+    };
+    let mut server = Server::start_native(Arc::clone(&model), cfg, "127.0.0.1:0").unwrap();
+    let mut client = Client::connect(server.addr).unwrap();
+    for (i, t) in requests.iter().enumerate() {
+        let resp = client.call(&Request { id: i as u64, tokens: t.clone() }).unwrap();
+        assert_eq!(resp.id, i as u64);
+        assert_eq!(resp.token, expected[i].token, "request {i} argmax");
+        assert_eq!(resp.logprob, expected[i].logprob, "request {i} logprob");
+    }
+    assert!(!server.metrics.summary().is_empty());
+    server.shutdown();
+}
+
+#[test]
+fn native_server_serves_prepacked_hif4_deterministically() {
+    let dir = manifest_dir("hif4");
+    write_manifest(&dir);
+    let manifest = Manifest::load(&dir).unwrap();
+    let store = manifest.init_params(11);
+    let mut model = transformer_from_store(&manifest, &store).unwrap();
+    // Real-quantized serving: weight planes packed exactly once here, and
+    // the dense f32 planes freed — forward must never touch them.
+    model.prepack_quantized_weights(Format::HiF4);
+    model.release_dense_weights();
+    let model = Arc::new(model);
+
+    let cfg = NativeServerConfig {
+        policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        workers: 2,
+        seq: manifest.seq,
+    };
+    let server = Server::start_native(Arc::clone(&model), cfg, "127.0.0.1:0").unwrap();
+    let mut client = Client::connect(server.addr).unwrap();
+    let req = Request { id: 1, tokens: vec![4, 8, 15, 16, 23, 42] };
+    let first = client.call(&req).unwrap();
+    assert!(first.logprob.is_finite());
+    // Same request again (possibly on the other worker): byte-identical
+    // answer — the packed planes are shared, read-only state.
+    for i in 2..8u64 {
+        let resp = client.call(&Request { id: i, tokens: req.tokens.clone() }).unwrap();
+        assert_eq!(resp.token, first.token);
+        assert_eq!(resp.logprob.to_bits(), first.logprob.to_bits());
+    }
+    // And the server's answer matches direct in-process execution.
+    let direct = run_batch_native(&model, &[pending(9, req.tokens.clone())], manifest.seq);
+    assert_eq!(direct[0].token, first.token);
+    assert_eq!(direct[0].logprob.to_bits(), first.logprob.to_bits());
+}

@@ -1,0 +1,148 @@
+//! Packed-plane bit-equality: the decode-once integer kernels must equal
+//! the element-wise PE flows — and the flows equal the dequantized-f64
+//! reference — **exactly**, across scale decades, on zero units, and under
+//! NaN-scale poisoning. This is the contract that makes the kernel-backend
+//! selector a pure performance knob.
+
+use hif4::dotprod::packed::{
+    hif4_gemm_bt_packed_threads, nvfp4_gemm_bt_packed_threads, PackedHiF4Matrix,
+    PackedNvfp4Matrix,
+};
+use hif4::dotprod::qgemm::{
+    hif4_gemm_bt_flow_threads, hif4_gemm_bt_threads, nvfp4_gemm_bt_flow_threads, HiF4Matrix,
+    Nvfp4Matrix,
+};
+use hif4::dotprod::{hif4_flow, nvfp4_flow};
+use hif4::formats::rounding::RoundMode;
+use hif4::tensor::{Matrix, Rng};
+
+const MODE: RoundMode = RoundMode::NearestEven;
+
+/// f64 equality up to NaN identification (NaN payloads are unspecified
+/// after arithmetic; everything else must match to the bit).
+fn feq64(a: f64, b: f64) -> bool {
+    a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan())
+}
+
+fn feq32_all(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits() || (x.is_nan() && y.is_nan()))
+}
+
+#[test]
+fn hif4_packed_dot_equals_flow_and_dequant_ref_across_decades() {
+    // ≥6 scale decades: sigma from 1e-3 to 1e2, 300 random unit pairs. The
+    // three computations — packed integer dot, PE flow, dequantized f64
+    // walk — must agree bit for bit.
+    let mut rng = Rng::seed(7001);
+    for round in 0..300 {
+        let sigma = 10f32.powi((round % 6) - 3);
+        let va: Vec<f32> = (0..64).map(|_| rng.normal() as f32 * sigma).collect();
+        let vb: Vec<f32> = (0..64).map(|_| rng.normal() as f32 * sigma).collect();
+        let qa = HiF4Matrix::quantize(&Matrix::from_vec(1, 64, va), MODE);
+        let qb = HiF4Matrix::quantize(&Matrix::from_vec(1, 64, vb), MODE);
+        let pa = PackedHiF4Matrix::pack(&qa);
+        let pb = PackedHiF4Matrix::pack(&qb);
+        let packed = pa.dot_unit(0, 0, &pb, 0, 0);
+        let flow = hif4_flow::dot(&qa.row_units(0)[0], &qb.row_units(0)[0]);
+        let reference = hif4_flow::dot_dequant_ref(&qa.row_units(0)[0], &qb.row_units(0)[0]);
+        assert!(feq64(packed, flow), "round {round} (σ={sigma}): packed {packed} vs flow {flow}");
+        assert!(feq64(flow, reference), "round {round}: flow {flow} vs ref {reference}");
+    }
+}
+
+#[test]
+fn nvfp4_packed_group_equals_flow_and_dequant_ref_across_decades() {
+    let mut rng = Rng::seed(7002);
+    for round in 0..300 {
+        let sigma = 10f32.powi((round % 6) - 3);
+        let va: Vec<f32> = (0..16).map(|_| rng.normal() as f32 * sigma).collect();
+        let vb: Vec<f32> = (0..16).map(|_| rng.normal() as f32 * sigma).collect();
+        let qa = Nvfp4Matrix::quantize(&Matrix::from_vec(1, 16, va), MODE);
+        let qb = Nvfp4Matrix::quantize(&Matrix::from_vec(1, 16, vb), MODE);
+        let pa = PackedNvfp4Matrix::pack(&qa);
+        let pb = PackedNvfp4Matrix::pack(&qb);
+        let packed = pa.dot_group(0, 0, &pb, 0, 0);
+        let ga = &qa.row_groups(0)[0];
+        let gb = &qb.row_groups(0)[0];
+        let flow = nvfp4_flow::dot_group(ga, gb);
+        let reference =
+            nvfp4_flow::dot64_dequant_ref(core::slice::from_ref(ga), core::slice::from_ref(gb));
+        assert!(feq64(packed, flow), "round {round} (σ={sigma})");
+        assert!(feq64(flow, reference), "round {round}");
+    }
+}
+
+#[test]
+fn zero_units_dot_to_exact_positive_zero() {
+    let z = HiF4Matrix::quantize(&Matrix::zeros(1, 64), MODE);
+    let pz = PackedHiF4Matrix::pack(&z);
+    let d = pz.dot_unit(0, 0, &pz, 0, 0);
+    assert_eq!(d.to_bits(), 0f64.to_bits(), "zero units must dot to +0.0 exactly");
+    assert_eq!(d.to_bits(), hif4_flow::dot(&z.row_units(0)[0], &z.row_units(0)[0]).to_bits());
+}
+
+#[test]
+fn nan_scale_poisons_packed_dot_and_gemm() {
+    let mut rng = Rng::seed(7003);
+    let mut va: Vec<f32> = (0..130).map(|_| rng.normal() as f32).collect();
+    va[70] = f32::NAN; // poisons A's second unit only
+    let vb: Vec<f32> = (0..130).map(|_| rng.normal() as f32).collect();
+    let qa = HiF4Matrix::quantize(&Matrix::from_vec(1, 130, va), MODE);
+    let qb = HiF4Matrix::quantize(&Matrix::from_vec(2, 130, [vb.clone(), vb].concat()), MODE);
+    assert!(qa.row_units(0)[1].scale.is_nan(), "unit 1 must be NaN-poisoned");
+    let pa = PackedHiF4Matrix::pack(&qa);
+    let pb = PackedHiF4Matrix::pack(&qb);
+    assert!(pa.dot_unit(0, 1, &pb, 0, 1).is_nan());
+    // Clean unit 0 still matches the flow exactly.
+    assert_eq!(
+        pa.dot_unit(0, 0, &pb, 0, 0).to_bits(),
+        hif4_flow::dot(&qa.row_units(0)[0], &qb.row_units(0)[0]).to_bits()
+    );
+    // GEMM: every output touching the poisoned unit is NaN on both paths.
+    let flow = hif4_gemm_bt_flow_threads(&qa, &qb, 1);
+    let packed = hif4_gemm_bt_packed_threads(&pa, &pb, 1);
+    assert!(flow.data.iter().all(|x| x.is_nan()));
+    assert!(packed.data.iter().all(|x| x.is_nan()));
+}
+
+#[test]
+fn hif4_packed_gemm_equals_flow_gemm_bitwise() {
+    // Ragged shapes: clean multiples, sub-unit K, tails of the 64-group.
+    let mut rng = Rng::seed(7004);
+    for (m, k, n) in [(5, 130, 7), (16, 64, 16), (1, 200, 9), (23, 72, 11), (8, 40, 3)] {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(n, k, 1.0, &mut rng);
+        let qa = HiF4Matrix::quantize(&a, MODE);
+        let qb = HiF4Matrix::quantize(&b, MODE);
+        let flow = hif4_gemm_bt_flow_threads(&qa, &qb, 1);
+        let pa = PackedHiF4Matrix::pack(&qa);
+        let pb = PackedHiF4Matrix::pack(&qb);
+        for threads in [1, 3, 4] {
+            let packed = hif4_gemm_bt_packed_threads(&pa, &pb, threads);
+            assert!(feq32_all(&flow.data, &packed.data), "{m}x{k}x{n} threads={threads}");
+        }
+        // The dispatching entry point agrees too, whatever the backend.
+        let dispatched = hif4_gemm_bt_threads(&qa, &qb, 2);
+        assert!(feq32_all(&flow.data, &dispatched.data), "{m}x{k}x{n} dispatch");
+    }
+}
+
+#[test]
+fn nvfp4_packed_gemm_equals_flow_gemm_bitwise() {
+    // 72 and 40 cols exercise the tail-group (non-multiple-of-PE) path.
+    let mut rng = Rng::seed(7005);
+    for (m, k, n) in [(5, 130, 7), (4, 72, 6), (3, 40, 5), (2, 256, 3)] {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(n, k, 1.0, &mut rng);
+        let qa = Nvfp4Matrix::quantize(&a, MODE);
+        let qb = Nvfp4Matrix::quantize(&b, MODE);
+        let flow = nvfp4_gemm_bt_flow_threads(&qa, &qb, 1);
+        let pa = PackedNvfp4Matrix::pack(&qa);
+        let pb = PackedNvfp4Matrix::pack(&qb);
+        for threads in [1, 3, 4] {
+            let packed = nvfp4_gemm_bt_packed_threads(&pa, &pb, threads);
+            assert!(feq32_all(&flow.data, &packed.data), "{m}x{k}x{n} threads={threads}");
+        }
+    }
+}

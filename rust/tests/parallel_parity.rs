@@ -3,9 +3,17 @@
 //! computed by exactly one thread with a fixed floating-point reduction
 //! order, so `threads = 1` and `threads = N` must agree down to the last
 //! bit — these tests pin that contract for the quantizers, the quantized
-//! GEMMs, the f32 GEMMs and the GPTQ pipeline.
+//! GEMMs (both the flow and the packed-plane kernel backends, plus the
+//! pack and dequantize stages), the f32 GEMMs and the GPTQ pipeline.
 
-use hif4::dotprod::qgemm::{hif4_gemm_bt_threads, nvfp4_gemm_bt_threads, HiF4Matrix, Nvfp4Matrix};
+use hif4::dotprod::packed::{
+    hif4_gemm_bt_packed_threads, nvfp4_gemm_bt_packed_threads, PackedHiF4Matrix,
+    PackedNvfp4Matrix,
+};
+use hif4::dotprod::qgemm::{
+    hif4_gemm_bt_flow_threads, hif4_gemm_bt_threads, nvfp4_gemm_bt_flow_threads,
+    nvfp4_gemm_bt_threads, HiF4Matrix, Nvfp4Matrix,
+};
 use hif4::formats::rounding::RoundMode;
 use hif4::quant::gptq::{gptq_quantize_with_hessian_threads, hessian_threads, GptqConfig};
 use hif4::tensor::gemm::{matmul_bt_threads, matmul_naive, matmul_threads};
@@ -79,6 +87,84 @@ fn nvfp4_qgemm_parity_bit_identical() {
                 par.data.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
                 "{m}x{k}x{n} threads={t}"
             );
+        }
+    }
+}
+
+#[test]
+fn hif4_packed_gemm_parity_bit_identical() {
+    // The packed fast path holds the same any-thread-count contract as
+    // the flow kernels — for the GEMM *and* for packing itself.
+    let mut rng = Rng::seed(9008);
+    for (m, k, n) in shapes() {
+        let qa = HiF4Matrix::quantize_threads(&Matrix::randn(m, k, 1.0, &mut rng), MODE, 1);
+        let qb = HiF4Matrix::quantize_threads(&Matrix::randn(n, k, 1.0, &mut rng), MODE, 1);
+        let pa = PackedHiF4Matrix::pack_threads(&qa, 1);
+        let pb = PackedHiF4Matrix::pack_threads(&qb, 1);
+        let serial = hif4_gemm_bt_packed_threads(&pa, &pb, 1);
+        // The serial packed kernel equals the serial flow kernel exactly.
+        assert_eq!(
+            serial.data.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+            hif4_gemm_bt_flow_threads(&qa, &qb, 1)
+                .data
+                .iter()
+                .map(|x| x.to_bits())
+                .collect::<Vec<u32>>(),
+            "{m}x{k}x{n} packed vs flow"
+        );
+        for t in THREAD_COUNTS {
+            let pa_t = PackedHiF4Matrix::pack_threads(&qa, t);
+            let par = hif4_gemm_bt_packed_threads(&pa_t, &pb, t);
+            assert_eq!(
+                serial.data.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+                par.data.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+                "{m}x{k}x{n} threads={t}"
+            );
+        }
+    }
+}
+
+#[test]
+fn nvfp4_packed_gemm_parity_bit_identical() {
+    let mut rng = Rng::seed(9009);
+    for (m, k, n) in shapes() {
+        let qa = Nvfp4Matrix::quantize_threads(&Matrix::randn(m, k, 1.0, &mut rng), MODE, 1);
+        let qb = Nvfp4Matrix::quantize_threads(&Matrix::randn(n, k, 1.0, &mut rng), MODE, 1);
+        let pa = PackedNvfp4Matrix::pack_threads(&qa, 1);
+        let pb = PackedNvfp4Matrix::pack_threads(&qb, 1);
+        let serial = nvfp4_gemm_bt_packed_threads(&pa, &pb, 1);
+        assert_eq!(
+            serial.data.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+            nvfp4_gemm_bt_flow_threads(&qa, &qb, 1)
+                .data
+                .iter()
+                .map(|x| x.to_bits())
+                .collect::<Vec<u32>>(),
+            "{m}x{k}x{n} packed vs flow"
+        );
+        for t in THREAD_COUNTS {
+            let par = nvfp4_gemm_bt_packed_threads(&pa, &pb, t);
+            assert_eq!(
+                serial.data.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+                par.data.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+                "{m}x{k}x{n} threads={t}"
+            );
+        }
+    }
+}
+
+#[test]
+fn dequantize_parity_bit_identical() {
+    let mut rng = Rng::seed(9010);
+    for (m, k, _) in shapes() {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let qh = HiF4Matrix::quantize_threads(&a, MODE, 1);
+        let qn = Nvfp4Matrix::quantize_threads(&a, MODE, 1);
+        let dh = qh.dequantize_threads(1);
+        let dn = qn.dequantize_threads(1);
+        for t in THREAD_COUNTS {
+            assert_eq!(dh.data, qh.dequantize_threads(t).data, "hif4 {m}x{k} threads={t}");
+            assert_eq!(dn.data, qn.dequantize_threads(t).data, "nvfp4 {m}x{k} threads={t}");
         }
     }
 }
