@@ -76,10 +76,10 @@ fn main() -> anyhow::Result<()> {
                     let mut outstanding = 0usize;
                     for i in 0..reqs_per_client {
                         let item = Task::AgreeHard.item(&mut rng);
-                        let req = Request {
-                            id: (c * reqs_per_client + i) as u64,
-                            tokens: item.context.clone(),
-                        };
+                        let req = Request::next_token(
+                            (c * reqs_per_client + i) as u64,
+                            item.context.clone(),
+                        );
                         client.send(&req).unwrap();
                         outstanding += 1;
                         if outstanding == 8 {

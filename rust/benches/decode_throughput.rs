@@ -1,0 +1,126 @@
+//! Incremental-decode throughput: KV-cached generation vs O(T²)
+//! full-recompute generation, f32 vs HiF4 cache, batch sizes 1/8/32.
+//!
+//! Writes `BENCH_decode.json` (tokens/s for prefill and decode, the
+//! cached-vs-recompute speedup at the final context length, and the
+//! KV-cache memory footprint per kind) so the serving perf trajectory is
+//! machine-readable across PRs. Before timing anything it asserts the
+//! correctness contract: cached greedy decode is token-identical to the
+//! full-recompute reference for both cache kinds.
+//!
+//! `HIF4_BENCH_QUICK=1` shrinks the sequence/batch grid for CI smoke
+//! runs; the full run generates to a context length ≥ 128 where the
+//! O(T) cached path's win over full recompute is unambiguous.
+
+use hif4::model::kv::KvCacheType;
+use hif4::model::transformer::Transformer;
+use hif4::model::zoo;
+use hif4::runtime::native::{DecodeEngine, DecodeStream};
+use hif4::util::threadpool;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    let quick = std::env::var("HIF4_BENCH_QUICK").is_ok();
+    let (prompt_len, new_tokens, batches): (usize, usize, &[usize]) =
+        if quick { (8, 24, &[1, 4]) } else { (32, 128, &[1, 8, 32]) };
+    let context_len = prompt_len + new_tokens;
+    let mut cfg = zoo::llama3_tiny();
+    cfg.max_seq = context_len + 1;
+    let model = Arc::new(Transformer::init(cfg, 91));
+    let vocab = model.cfg.vocab;
+    let prompt: Vec<usize> = (0..prompt_len).map(|i| 1 + (i * 7) % (vocab - 1)).collect();
+    let nthreads = threadpool::threads();
+    println!(
+        "decode throughput — {}, prompt {prompt_len}, +{new_tokens} tokens \
+         (context {context_len}), threads {nthreads}\n",
+        model.cfg.name
+    );
+
+    let mut kind_json = Vec::new();
+    for kind in [KvCacheType::F32, KvCacheType::HiF4] {
+        // Correctness first: cached decode must equal full recompute.
+        let cached_tokens = model.generate_greedy(&prompt, new_tokens, kind);
+        let full_tokens = model.generate_greedy_full_recompute(&prompt, new_tokens, kind);
+        assert_eq!(
+            cached_tokens,
+            full_tokens,
+            "{} cached decode must be token-identical to full recompute",
+            kind.label()
+        );
+
+        // Full-recompute generation (the no-cache baseline), batch 1.
+        let t0 = Instant::now();
+        std::hint::black_box(model.generate_greedy_full_recompute(&prompt, new_tokens, kind));
+        let full_s = t0.elapsed().as_secs_f64();
+        let full_tps = new_tokens as f64 / full_s;
+
+        // Cached prefill + decode at each batch size.
+        let engine = DecodeEngine::new(Arc::clone(&model), kind, context_len);
+        let mut batch_json = Vec::new();
+        let mut b1_decode_tps = 0f64;
+        let mut cache_resident = 0usize;
+        let mut cache_wire = 0usize;
+        for &b in batches {
+            let mut streams: Vec<DecodeStream> =
+                (0..b).map(|_| engine.start(&prompt)).collect();
+            // Step 1 is the prefill (plus the first generated token).
+            let t0 = Instant::now();
+            {
+                let mut refs: Vec<&mut DecodeStream> = streams.iter_mut().collect();
+                std::hint::black_box(engine.step(&mut refs));
+            }
+            let prefill_s = t0.elapsed().as_secs_f64();
+            // Remaining steps are pure decode.
+            let decode_steps = new_tokens - 1;
+            let t0 = Instant::now();
+            for _ in 0..decode_steps {
+                let mut refs: Vec<&mut DecodeStream> = streams.iter_mut().collect();
+                std::hint::black_box(engine.step(&mut refs));
+            }
+            let decode_s = t0.elapsed().as_secs_f64();
+            let prefill_tps = (b * prompt_len) as f64 / prefill_s;
+            let decode_tps = (b * decode_steps) as f64 / decode_s;
+            if b == 1 {
+                b1_decode_tps = decode_tps;
+                cache_resident = streams[0].cache().resident_bytes();
+                cache_wire = streams[0].cache().wire_bytes();
+            }
+            println!(
+                "{:<5} batch {b:>2}: prefill {prefill_tps:9.1} tok/s   decode {decode_tps:9.1} \
+                 tok/s   (full-recompute {full_tps:9.1} tok/s)",
+                kind.label()
+            );
+            batch_json.push(format!(
+                "\"b{b}\":{{\"batch\":{b},\"prefill_tps\":{prefill_tps:.2},\
+                 \"decode_tps\":{decode_tps:.2}}}"
+            ));
+        }
+        let speedup = b1_decode_tps / full_tps;
+        println!(
+            "{:<5} cached decode vs full recompute at T={context_len}: {speedup:.2}x, \
+             cache {cache_resident} B resident / {cache_wire} B wire\n",
+            kind.label()
+        );
+        kind_json.push(format!(
+            "\"{}\":{{\"full_recompute_tps\":{full_tps:.2},\
+             \"decode_speedup_vs_full_b1\":{speedup:.3},\
+             \"cache_resident_bytes\":{cache_resident},\"cache_wire_bytes\":{cache_wire},\
+             \"decode\":{{{}}}}}",
+            kind.label(),
+            batch_json.join(",")
+        ));
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"decode_throughput\",\n  \"quick\": {quick},\n  \
+         \"threads\": {nthreads},\n  \
+         \"prompt_len\": {prompt_len},\n  \"new_tokens\": {new_tokens},\n  \
+         \"context_len\": {context_len},\n  \"parity\": true,\n  \
+         \"kinds\": {{{}}}\n}}\n",
+        kind_json.join(",")
+    );
+    let path = "BENCH_decode.json";
+    std::fs::write(path, &json).expect("write BENCH_decode.json");
+    println!("wrote {path}");
+}

@@ -9,6 +9,7 @@
 
 use hif4::dotprod::{set_kernel, Kernel};
 use hif4::formats::{Format, QuantScheme};
+use hif4::model::kv::KvCacheType;
 use hif4::model::transformer::Transformer;
 use hif4::model::zoo;
 use hif4::runtime::artifact::Manifest;
@@ -32,7 +33,7 @@ fn drive(server: &Server, n_requests: usize, vocab: usize, seq: usize) -> f64 {
         while sent < n_requests && sent - recv < window {
             let len = (3 + rng.below(6)).min(seq);
             let tokens: Vec<usize> = (0..len).map(|_| 1 + rng.below(vocab - 1)).collect();
-            client.send(&Request { id: sent as u64, tokens }).unwrap();
+            client.send(&Request::next_token(sent as u64, tokens)).unwrap();
             sent += 1;
         }
         client.recv().unwrap();
@@ -75,6 +76,7 @@ fn main() {
                 policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
                 workers,
                 seq: cfg.max_seq,
+                kv: KvCacheType::F32,
             },
             "127.0.0.1:0",
         )
@@ -131,7 +133,7 @@ fn main() {
                 while sent < n_requests && sent - recv < window {
                     let len = 3 + rng.below(6);
                     let tokens: Vec<usize> = (0..len).map(|_| 1 + rng.below(300)).collect();
-                    client.send(&Request { id: sent as u64, tokens }).unwrap();
+                    client.send(&Request::next_token(sent as u64, tokens)).unwrap();
                     sent += 1;
                 }
                 client.recv().unwrap();

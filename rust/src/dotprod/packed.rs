@@ -62,6 +62,38 @@ const PACK_WORK_PER_ELEM: usize = 4;
 #[repr(align(64))]
 pub struct HiF4Lanes(pub [i8; hif4::GROUP]);
 
+impl HiF4Lanes {
+    /// Decode the first `out.len()` lanes back to f32 given the unit's
+    /// exact scale. Lanes are S1P2 quarter-units with both micro-exponent
+    /// levels absorbed, so `v_i = scale · lane_i / 4` — one multiply per
+    /// element, bit-identical to [`HiF4Unit::decode`] (`lane·0.25` is
+    /// exact, the scale product rounds once in both formulations; a NaN
+    /// scale poisons every element, matching the unit's NaN channel).
+    pub fn decode_into(&self, scale: f64, out: &mut [f32]) {
+        assert!(
+            out.len() <= hif4::GROUP,
+            "HiF4 unit decodes at most {} elements; buffer holds {}",
+            hif4::GROUP,
+            out.len()
+        );
+        let s = scale as f32;
+        for (o, lane) in out.iter_mut().zip(self.0.iter()) {
+            *o = s * (*lane as f32 * 0.25);
+        }
+    }
+}
+
+/// Decode one HiF4 unit into its decode-once plane: the 64
+/// micro-exponent-absorbed `i8` lanes plus the exact `f64` level-1 scale
+/// (`NaN` for a poisoned unit). This is the per-unit transform behind
+/// [`PackedHiF4Matrix::pack`], exposed so row-granular consumers (the
+/// HiF4 KV cache) can share the exact same encode-once layout.
+pub fn hif4_unit_plane(u: &HiF4Unit) -> (HiF4Lanes, f64) {
+    let mut lanes = HiF4Lanes([0; hif4::GROUP]);
+    let scale = pack_hif4_unit(u, &mut lanes);
+    (lanes, scale)
+}
+
 /// One NVFP4 group's 16 operand lanes (S3P1 half-units), 16-byte aligned.
 #[derive(Debug, Clone, Copy)]
 #[repr(align(16))]
@@ -140,6 +172,7 @@ impl PackedHiF4Matrix {
 
     /// [`PackedHiF4Matrix::pack`] with an explicit thread count.
     pub fn pack_threads(q: &HiF4Matrix, threads: usize) -> PackedHiF4Matrix {
+        q.assert_geometry();
         let upr = q.units_per_row;
         let n = q.rows * upr;
         let mut lanes = vec![HiF4Lanes([0; hif4::GROUP]); n];
@@ -210,6 +243,7 @@ impl PackedNvfp4Matrix {
 
     /// [`PackedNvfp4Matrix::pack`] with an explicit thread count.
     pub fn pack_threads(q: &Nvfp4Matrix, threads: usize) -> PackedNvfp4Matrix {
+        q.assert_geometry();
         let gpr = q.groups_per_row;
         let n = q.rows * gpr;
         let mut lanes = vec![Nvfp4Lanes([0; nvfp4::GROUP]); n];
@@ -467,6 +501,51 @@ mod tests {
                 "{m}x{k}x{n}"
             );
         }
+    }
+
+    #[test]
+    fn lane_decode_matches_unit_decode_bitwise() {
+        let mut rng = Rng::seed(505);
+        for round in 0..40 {
+            let sigma = 10f32.powi((round % 8) - 4);
+            let v: Vec<f32> = (0..hif4::GROUP).map(|_| rng.normal() as f32 * sigma).collect();
+            let unit = hif4::quantize(&v, MODE);
+            let (lanes, scale) = hif4_unit_plane(&unit);
+            let mut decoded = [0f32; hif4::GROUP];
+            lanes.decode_into(scale, &mut decoded);
+            for (i, d) in decoded.iter().enumerate() {
+                assert_eq!(
+                    d.to_bits(),
+                    unit.decode(i).to_bits(),
+                    "round {round} elem {i}: lane decode diverged from unit decode"
+                );
+            }
+        }
+        // NaN channel: a poisoned unit poisons every decoded lane.
+        let mut v = vec![1.0f32; hif4::GROUP];
+        v[3] = f32::NAN;
+        let (lanes, scale) = hif4_unit_plane(&hif4::quantize(&v, MODE));
+        let mut decoded = [0f32; hif4::GROUP];
+        lanes.decode_into(scale, &mut decoded);
+        assert!(decoded.iter().all(|x| x.is_nan()));
+    }
+
+    #[test]
+    #[should_panic(expected = "HiF4Matrix geometry")]
+    fn pack_rejects_inconsistent_geometry() {
+        let mut rng = Rng::seed(506);
+        let mut q = HiF4Matrix::quantize(&Matrix::randn(2, 130, 1.0, &mut rng), MODE);
+        q.units_per_row = 1; // lies about the padded tail unit
+        let _ = PackedHiF4Matrix::pack_threads(&q, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "Nvfp4Matrix geometry")]
+    fn nvfp4_pack_rejects_inconsistent_geometry() {
+        let mut rng = Rng::seed(507);
+        let mut q = Nvfp4Matrix::quantize(&Matrix::randn(2, 40, 1.0, &mut rng), MODE);
+        q.groups.pop(); // drops one tail group
+        let _ = PackedNvfp4Matrix::pack_threads(&q, 1);
     }
 
     #[test]

@@ -104,8 +104,35 @@ impl HiF4Matrix {
         self.dequantize_threads(threadpool::threads_for(work))
     }
 
+    /// Check the rows/cols/units bookkeeping is self-consistent: every row
+    /// carries `cols.div_ceil(64)` units (ragged tails are zero-padded at
+    /// quantize time — the single supported tail handling). Consumers that
+    /// walk the unit plane (dequantize, the flow GEMMs, the packed pack)
+    /// all call this, so a hand-built matrix with a missing or surplus
+    /// tail unit fails loudly and identically everywhere instead of
+    /// silently reading the wrong rows.
+    pub(crate) fn assert_geometry(&self) {
+        let need = self.cols.div_ceil(hif4::GROUP);
+        assert_eq!(
+            self.units_per_row, need,
+            "HiF4Matrix geometry: {} cols need {} units/row (64-element groups, padded tail), \
+             got {}",
+            self.cols, need, self.units_per_row
+        );
+        assert_eq!(
+            self.units.len(),
+            self.rows * self.units_per_row,
+            "HiF4Matrix geometry: {}×{} rows×units/row needs {} units, got {}",
+            self.rows,
+            self.units_per_row,
+            self.rows * self.units_per_row,
+            self.units.len()
+        );
+    }
+
     /// [`HiF4Matrix::dequantize`] with an explicit thread count.
     pub fn dequantize_threads(&self, threads: usize) -> Matrix {
+        self.assert_geometry();
         let mut m = Matrix::zeros(self.rows, self.cols);
         if m.data.is_empty() {
             return m;
@@ -186,8 +213,30 @@ impl Nvfp4Matrix {
         self.dequantize_threads(threadpool::threads_for(work))
     }
 
+    /// Twin of [`HiF4Matrix::assert_geometry`] for the 16-element NVFP4
+    /// groups: same uniform padded-tail contract, same failure wording.
+    pub(crate) fn assert_geometry(&self) {
+        let need = self.cols.div_ceil(nvfp4::GROUP);
+        assert_eq!(
+            self.groups_per_row, need,
+            "Nvfp4Matrix geometry: {} cols need {} groups/row (16-element groups, padded tail), \
+             got {}",
+            self.cols, need, self.groups_per_row
+        );
+        assert_eq!(
+            self.groups.len(),
+            self.rows * self.groups_per_row,
+            "Nvfp4Matrix geometry: {}×{} rows×groups/row needs {} groups, got {}",
+            self.rows,
+            self.groups_per_row,
+            self.rows * self.groups_per_row,
+            self.groups.len()
+        );
+    }
+
     /// [`Nvfp4Matrix::dequantize`] with an explicit thread count.
     pub fn dequantize_threads(&self, threads: usize) -> Matrix {
+        self.assert_geometry();
         let mut m = Matrix::zeros(self.rows, self.cols);
         if m.data.is_empty() {
             return m;
@@ -250,6 +299,8 @@ pub fn hif4_gemm_bt_flow(a: &HiF4Matrix, b_t: &HiF4Matrix) -> Matrix {
 
 /// [`hif4_gemm_bt_flow`] with an explicit thread count.
 pub fn hif4_gemm_bt_flow_threads(a: &HiF4Matrix, b_t: &HiF4Matrix, threads: usize) -> Matrix {
+    a.assert_geometry();
+    b_t.assert_geometry();
     assert_eq!(a.cols, b_t.cols, "reduction dims must agree");
     let (n, upr) = (b_t.rows, a.units_per_row);
     let mut c = Matrix::zeros(a.rows, n);
@@ -316,6 +367,8 @@ pub fn nvfp4_gemm_bt_flow(a: &Nvfp4Matrix, b_t: &Nvfp4Matrix) -> Matrix {
 
 /// [`nvfp4_gemm_bt_flow`] with an explicit thread count.
 pub fn nvfp4_gemm_bt_flow_threads(a: &Nvfp4Matrix, b_t: &Nvfp4Matrix, threads: usize) -> Matrix {
+    a.assert_geometry();
+    b_t.assert_geometry();
     assert_eq!(a.cols, b_t.cols, "reduction dims must agree");
     const PE: usize = nvfp4_flow::GROUPS_PER_PE;
     // UB is a PE multiple, so full-PE dots never straddle a K block and the

@@ -97,7 +97,12 @@ impl HiF4Unit {
 
     /// Decode the whole unit into `out[0..64]`.
     pub fn decode_all(&self, out: &mut [f32]) {
-        assert!(out.len() >= GROUP);
+        assert!(
+            out.len() >= GROUP,
+            "HiF4 unit decodes {} elements; buffer holds {}",
+            GROUP,
+            out.len()
+        );
         if self.scale.is_nan() {
             out[..GROUP].fill(f32::NAN);
             return;
@@ -154,7 +159,13 @@ pub struct ConversionTrace {
 /// `qdq_artifact_matches_rust_codec_bit_exactly` integration test).
 /// Returns the unit and the intermediate trace.
 pub fn quantize_trace(v: &[f32], mode: RoundMode) -> (HiF4Unit, ConversionTrace) {
-    assert_eq!(v.len(), GROUP, "HiF4 quantizes exactly 64 elements");
+    assert_eq!(
+        v.len(),
+        GROUP,
+        "HiF4 quantizes exactly {} elements per unit, got {}",
+        GROUP,
+        v.len()
+    );
     let mut v64 = [0f32; GROUP];
     for (o, x) in v64.iter_mut().zip(v) {
         *o = Bf16::from_f32(*x).to_f32();

@@ -55,7 +55,12 @@ impl Nvfp4Group {
     }
 
     pub fn decode_all(&self, out: &mut [f32]) {
-        assert!(out.len() >= GROUP);
+        assert!(
+            out.len() >= GROUP,
+            "NVFP4 group decodes {} elements; buffer holds {}",
+            GROUP,
+            out.len()
+        );
         let s = self.scale.to_f32();
         for i in 0..GROUP {
             out[i] = s * self.elem(i).to_f32();
@@ -71,7 +76,13 @@ impl Nvfp4Group {
 /// * `amax/6` below half the min subnormal → the scale rounds to **zero**
 ///   and the whole group decodes to zero.
 pub fn quantize(v: &[f32], mode: RoundMode) -> Nvfp4Group {
-    assert_eq!(v.len(), GROUP, "NVFP4 quantizes exactly 16 elements");
+    assert_eq!(
+        v.len(),
+        GROUP,
+        "NVFP4 quantizes exactly {} elements per group, got {}",
+        GROUP,
+        v.len()
+    );
     if v.iter().any(|x| !x.is_finite()) {
         return Nvfp4Group { scale: E4M3::NAN, elems: [0; 8] };
     }

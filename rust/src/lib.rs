@@ -27,7 +27,13 @@
 //! `--kernel`) — and the model/serving layers run quantized linears on
 //! the packed planes directly (weights packed once, activations per
 //! call), including a PJRT-free native serving engine
-//! ([`runtime::native`], [`server::service::Server::start_native`]).
+//! ([`runtime::native`], [`server::service::Server::start_native`])
+//! that decodes autoregressively with per-sequence KV caches
+//! ([`model::kv`] — f32 or HiF4 units encoded on append, `--kv-cache`)
+//! under a continuous-batching scheduler
+//! ([`server::batcher::ContinuousScheduler`]): requests are admitted
+//! into in-flight decode batches each step and every generated token
+//! streams to its client immediately.
 //!
 //! Offline note: the `anyhow` and `xla` dependencies resolve to in-tree
 //! crates under `rust/vendor/` — a minimal error type and a PJRT stub —

@@ -3,8 +3,11 @@
 //! ```text
 //! hif4 serve   --artifact fwd_hif4.hlo.txt --addr 127.0.0.1:7401 [--params p.bin]
 //!              [--workers 2]                 # worker pool size
-//!              [--native --format hif4]      # PJRT-free rust-native engine
-//!                                            # (prepacked fixed-point linears)
+//!              [--native --format hif4]      # PJRT-free rust-native engine:
+//!                                            # continuous-batching decode over
+//!                                            # prepacked fixed-point linears
+//!              [--kv-cache f32|hif4]         # KV-cache storage (native engine;
+//!                                            # HIF4_KV_CACHE env default)
 //! hif4 sweep   --dim 512                       # Fig 3 series
 //! hif4 hwcost                                  # §III.B area/power table
 //! hif4 dotprod                                 # Fig 4 inventory + exactness
@@ -19,6 +22,7 @@
 
 use anyhow::Result;
 use hif4::formats::{mse, Format, QuantScheme};
+use hif4::model::kv::KvCacheType;
 use hif4::quant::sweep;
 use hif4::runtime::artifact::{Manifest, ParamStore};
 use hif4::server::batcher::BatchPolicy;
@@ -131,8 +135,9 @@ fn serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7401");
     let server = if args.flag("native") {
         // PJRT-free engine: rebuild the L2 model from the store and serve
-        // it rust-natively; quantized formats run the real fixed-point
-        // path with weight planes packed once at startup.
+        // it rust-natively with continuous-batching decode; quantized
+        // formats run the real fixed-point path with weight planes packed
+        // once at startup.
         let mut model = hif4::runtime::native::transformer_from_store(&manifest, &params)?;
         match args.get_or("format", "bf16") {
             "bf16" => {}
@@ -143,7 +148,18 @@ fn serve(args: &Args) -> Result<()> {
         // Serving never reads the dense plane of a prepacked linear; free
         // it so the 4-bit format's memory win survives into deployment.
         model.release_dense_weights();
-        let cfg = NativeServerConfig { policy, workers, seq: manifest.seq };
+        // KV-cache storage knob: --kv-cache beats HIF4_KV_CACHE beats f32.
+        let kv_spec = args
+            .get("kv-cache")
+            .map(str::to_string)
+            .or_else(|| std::env::var("HIF4_KV_CACHE").ok());
+        let kv = match kv_spec {
+            Some(s) => KvCacheType::parse(&s).ok_or_else(|| {
+                anyhow::anyhow!("--kv-cache / HIF4_KV_CACHE must be f32 or hif4, got {s}")
+            })?,
+            None => KvCacheType::F32,
+        };
+        let cfg = NativeServerConfig { policy, workers, seq: manifest.seq, kv };
         Server::start_native(Arc::new(model), cfg, addr)?
     } else {
         let artifact = args.get_or("artifact", "fwd_bf16.hlo.txt").to_string();

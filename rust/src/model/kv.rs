@@ -1,0 +1,335 @@
+//! Per-sequence KV cache for incremental decode — the serving-side memory
+//! layer that makes generation O(T) per token instead of O(T²).
+//!
+//! Two storage backends sit behind one [`KvCache`] (the [`KvCacheType`]
+//! knob, `--kv-cache` / `HIF4_KV_CACHE` on the CLI):
+//!
+//! * **F32** — the reference: appended K/V rows are kept verbatim, so
+//!   cached decode is *bit-identical* to the full-recompute forward.
+//! * **HiF4** — each appended row is encoded through Algorithm 1 in
+//!   64-element groups along the head dimension ([`crate::formats::hif4`])
+//!   and held as the decode-once integer lane planes of
+//!   [`crate::dotprod::packed`]: the nibble/micro-exponent extraction is
+//!   paid exactly once per cached value at append time, and attention
+//!   scores read straight from the planes (one multiply per lane). The
+//!   resident plane costs 9 bits/value (`i8` lane + amortized `f64` unit
+//!   scale) vs 32 for f32 — and the canonical 36-byte unit wire form
+//!   ([`KvCache::wire_bytes`], 4.5 bits/value) is what a paged or
+//!   offloaded cache would persist.
+//!
+//! Keys are cached **post-RoPE** (their rotation depends only on the
+//! absolute position, which never changes once cached). The HiF4
+//! quantize→decode round trip here is the *same math* the full-recompute
+//! reference applies via [`hif4_qdq_rows`], so the greedy-decode parity
+//! suite (`tests/decode_parity.rs`) can pin cached-vs-recompute equality
+//! down to the bit.
+
+use crate::dotprod::packed::{self, HiF4Lanes};
+use crate::formats::hif4;
+use crate::formats::rounding::RoundMode;
+use crate::model::config::ModelConfig;
+use crate::tensor::Matrix;
+
+/// Which storage backend a [`KvCache`] uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KvCacheType {
+    /// Dense f32 rows — bit-identical to full recompute.
+    #[default]
+    F32,
+    /// HiF4 units encoded on append, held as decode-once lane planes.
+    HiF4,
+}
+
+impl KvCacheType {
+    /// Parse a CLI/env spelling (`f32` / `hif4`, case-insensitive).
+    pub fn parse(s: &str) -> Option<KvCacheType> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" => Some(KvCacheType::F32),
+            "hif4" => Some(KvCacheType::HiF4),
+            _ => None,
+        }
+    }
+
+    /// Canonical lower-case label (bench/JSON key).
+    pub fn label(self) -> &'static str {
+        match self {
+            KvCacheType::F32 => "f32",
+            KvCacheType::HiF4 => "hif4",
+        }
+    }
+}
+
+/// Per-sequence, per-layer K/V storage for incremental decode. One cache
+/// is one sequence's "page": the continuous-batching scheduler owns one
+/// per active slot and drops it on eviction.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    kind: KvCacheType,
+    len: usize,
+    pub(crate) layers: Vec<LayerKv>,
+}
+
+/// One layer's K and V stores.
+#[derive(Debug, Clone)]
+pub(crate) struct LayerKv {
+    pub k: KvStore,
+    pub v: KvStore,
+}
+
+/// Append-only row store for one tensor (K or V) of one layer.
+#[derive(Debug, Clone)]
+pub(crate) enum KvStore {
+    F32 { kvd: usize, data: Vec<f32> },
+    HiF4 { kvd: usize, units_per_row: usize, lanes: Vec<HiF4Lanes>, scales: Vec<f64> },
+}
+
+/// A dense f32 view of the first `rows` cached rows: f32 stores borrow in
+/// place, HiF4 stores decode their lane planes once per view.
+pub(crate) struct KvDense<'a> {
+    kvd: usize,
+    data: DenseData<'a>,
+}
+
+enum DenseData<'a> {
+    Borrowed(&'a [f32]),
+    Owned(Vec<f32>),
+}
+
+impl KvDense<'_> {
+    /// Row `r` as a kvd-wide slice.
+    #[inline]
+    pub(crate) fn row(&self, r: usize) -> &[f32] {
+        let d = match &self.data {
+            DenseData::Borrowed(s) => s,
+            DenseData::Owned(v) => v.as_slice(),
+        };
+        &d[r * self.kvd..(r + 1) * self.kvd]
+    }
+}
+
+impl KvStore {
+    fn new(kind: KvCacheType, kvd: usize) -> KvStore {
+        match kind {
+            KvCacheType::F32 => KvStore::F32 { kvd, data: Vec::new() },
+            KvCacheType::HiF4 => KvStore::HiF4 {
+                kvd,
+                units_per_row: kvd.div_ceil(hif4::GROUP),
+                lanes: Vec::new(),
+                scales: Vec::new(),
+            },
+        }
+    }
+
+    /// Append one position's row. HiF4 stores encode it through
+    /// Algorithm 1 (64-element groups, zero-padded tail group — the same
+    /// uniform tail handling as [`crate::dotprod::qgemm::HiF4Matrix`])
+    /// and keep only the decode-once plane.
+    pub(crate) fn append_row(&mut self, row: &[f32]) {
+        match self {
+            KvStore::F32 { kvd, data } => {
+                assert_eq!(row.len(), *kvd, "KV row width must match kv_heads×head_dim");
+                data.extend_from_slice(row);
+            }
+            KvStore::HiF4 { kvd, units_per_row, lanes, scales } => {
+                assert_eq!(row.len(), *kvd, "KV row width must match kv_heads×head_dim");
+                let mut buf = [0f32; hif4::GROUP];
+                for u in 0..*units_per_row {
+                    let start = u * hif4::GROUP;
+                    let end = (start + hif4::GROUP).min(*kvd);
+                    buf[..end - start].copy_from_slice(&row[start..end]);
+                    buf[end - start..].fill(0.0);
+                    let unit = hif4::quantize(&buf, RoundMode::NearestEven);
+                    let (l, s) = packed::hif4_unit_plane(&unit);
+                    lanes.push(l);
+                    scales.push(s);
+                }
+            }
+        }
+    }
+
+    /// Dense view of rows `0..rows` (see [`KvDense`]).
+    pub(crate) fn dense(&self, rows: usize) -> KvDense<'_> {
+        match self {
+            KvStore::F32 { kvd, data } => {
+                KvDense { kvd: *kvd, data: DenseData::Borrowed(&data[..rows * *kvd]) }
+            }
+            KvStore::HiF4 { kvd, units_per_row, lanes, scales } => {
+                let mut out = vec![0f32; rows * *kvd];
+                for r in 0..rows {
+                    let row = &mut out[r * *kvd..(r + 1) * *kvd];
+                    for u in 0..*units_per_row {
+                        let start = u * hif4::GROUP;
+                        let end = (start + hif4::GROUP).min(*kvd);
+                        let i = r * *units_per_row + u;
+                        lanes[i].decode_into(scales[i], &mut row[start..end]);
+                    }
+                }
+                KvDense { kvd: *kvd, data: DenseData::Owned(out) }
+            }
+        }
+    }
+
+    fn resident_bytes(&self) -> usize {
+        match self {
+            KvStore::F32 { data, .. } => std::mem::size_of_val(data.as_slice()),
+            KvStore::HiF4 { lanes, scales, .. } => {
+                std::mem::size_of_val(lanes.as_slice()) + std::mem::size_of_val(scales.as_slice())
+            }
+        }
+    }
+
+    fn wire_bytes(&self) -> usize {
+        match self {
+            KvStore::F32 { data, .. } => std::mem::size_of_val(data.as_slice()),
+            KvStore::HiF4 { lanes, .. } => lanes.len() * hif4::HiF4Unit::WIRE_BYTES,
+        }
+    }
+}
+
+impl KvCache {
+    /// Empty cache for one sequence under `cfg`'s geometry.
+    pub fn new(cfg: &ModelConfig, kind: KvCacheType) -> KvCache {
+        let kvd = cfg.kv_heads() * cfg.head_dim;
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerKv { k: KvStore::new(kind, kvd), v: KvStore::new(kind, kvd) })
+            .collect();
+        KvCache { kind, len: 0, layers }
+    }
+
+    pub fn kind(&self) -> KvCacheType {
+        self.kind
+    }
+
+    /// Number of positions cached so far.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Bytes the cache keeps resident (decode-once planes for HiF4).
+    pub fn resident_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.k.resident_bytes() + l.v.resident_bytes()).sum()
+    }
+
+    /// Bytes of the serialized form (the 36-byte HiF4 unit wire layout —
+    /// 4.5 bits/value — for HiF4 caches; same as resident for f32).
+    pub fn wire_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.k.wire_bytes() + l.v.wire_bytes()).sum()
+    }
+
+    pub(crate) fn advance(&mut self, n: usize) {
+        self.len += n;
+    }
+}
+
+/// Quantize→dequantize every row of `m` through the HiF4 KV codec. Not a
+/// reimplementation: the rows go through the *actual* cache store
+/// ([`KvStore::append_row`] encode, [`KvStore::dense`] decode), so a
+/// full-recompute forward with
+/// [`super::transformer::QuantPolicy::kv`] set is a *bit-exact*
+/// reference for HiF4-cached incremental decode by construction — the
+/// two paths cannot drift apart.
+pub fn hif4_qdq_rows(m: &mut Matrix) {
+    let mut store = KvStore::new(KvCacheType::HiF4, m.cols);
+    for r in 0..m.rows {
+        store.append_row(m.row(r));
+    }
+    let dense = store.dense(m.rows);
+    for r in 0..m.rows {
+        m.row_mut(r).copy_from_slice(dense.row(r));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "kv-test".into(),
+            vocab: 32,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 4,
+            head_dim: 8,
+            attention: crate::model::config::Attention::Gqa { kv_heads: 2 },
+            ffn: crate::model::config::Ffn::SwiGlu,
+            d_ff: 32,
+            max_seq: 16,
+            rope_base: 10000.0,
+            outlier_scale: 1.0,
+            outlier_frac: 0.0,
+        }
+    }
+
+    #[test]
+    fn parse_and_label_roundtrip() {
+        for kind in [KvCacheType::F32, KvCacheType::HiF4] {
+            assert_eq!(KvCacheType::parse(kind.label()), Some(kind));
+        }
+        assert_eq!(KvCacheType::parse("HIF4"), Some(KvCacheType::HiF4));
+        assert_eq!(KvCacheType::parse("bf16"), None);
+    }
+
+    #[test]
+    fn f32_store_roundtrips_rows_exactly() {
+        let c = cfg();
+        let mut cache = KvCache::new(&c, KvCacheType::F32);
+        let mut rng = Rng::seed(5);
+        let rows = Matrix::randn(3, 16, 1.0, &mut rng);
+        for r in 0..rows.rows {
+            cache.layers[0].k.append_row(rows.row(r));
+        }
+        let dense = cache.layers[0].k.dense(3);
+        for r in 0..rows.rows {
+            assert_eq!(dense.row(r), rows.row(r));
+        }
+    }
+
+    #[test]
+    fn hif4_store_matches_qdq_reference_bitwise() {
+        let c = cfg();
+        let mut cache = KvCache::new(&c, KvCacheType::HiF4);
+        let mut rng = Rng::seed(6);
+        // 16-wide rows: one padded tail unit per row.
+        let rows = Matrix::randn(4, 16, 0.7, &mut rng);
+        for r in 0..rows.rows {
+            cache.layers[1].v.append_row(rows.row(r));
+        }
+        let mut reference = rows.clone();
+        hif4_qdq_rows(&mut reference);
+        let dense = cache.layers[1].v.dense(4);
+        for r in 0..rows.rows {
+            let got: Vec<u32> = dense.row(r).iter().map(|x| x.to_bits()).collect();
+            let want: Vec<u32> = reference.row(r).iter().map(|x| x.to_bits()).collect();
+            assert_eq!(got, want, "row {r}");
+        }
+    }
+
+    #[test]
+    fn hif4_cache_is_smaller_resident_and_on_the_wire() {
+        let c = cfg();
+        let mut f32c = KvCache::new(&c, KvCacheType::F32);
+        let mut hc = KvCache::new(&c, KvCacheType::HiF4);
+        let mut rng = Rng::seed(7);
+        let rows = Matrix::randn(8, 16, 1.0, &mut rng);
+        for cache in [&mut f32c, &mut hc] {
+            for layer in 0..2 {
+                for r in 0..rows.rows {
+                    cache.layers[layer].k.append_row(rows.row(r));
+                    cache.layers[layer].v.append_row(rows.row(r));
+                }
+            }
+            cache.advance(rows.rows);
+        }
+        assert_eq!(f32c.len(), 8);
+        assert!(hc.resident_bytes() < f32c.resident_bytes());
+        assert!(hc.wire_bytes() < hc.resident_bytes());
+        // 16-wide rows pad to one 64-lane unit: 36 wire bytes vs 64 f32.
+        assert_eq!(hc.wire_bytes(), 2 * 2 * 8 * hif4::HiF4Unit::WIRE_BYTES);
+    }
+}

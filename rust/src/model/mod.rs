@@ -3,6 +3,7 @@
 //! model zoo mirroring the paper's architecture coverage.
 
 pub mod config;
+pub mod kv;
 pub mod train;
 pub mod transformer;
 pub mod zoo;

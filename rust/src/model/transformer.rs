@@ -26,6 +26,7 @@
 //! q/k. All linears are `Matrix` in out×in layout (`y = x · Wᵀ`).
 
 use super::config::{Attention, Ffn, LayerKind, ModelConfig};
+use super::kv::{KvCache, KvCacheType};
 use crate::dotprod::packed::{self, PackedHiF4Matrix, PackedNvfp4Matrix};
 use crate::dotprod::qgemm::{self, HiF4Matrix, Nvfp4Matrix};
 use crate::dotprod::Kernel;
@@ -119,6 +120,13 @@ pub struct Transformer {
 pub struct QuantPolicy {
     /// Scheme applied to *activations* entering quantized linears.
     pub act: Option<QuantScheme>,
+    /// Quantize the attention K (post-RoPE) and V rows through the KV-cache
+    /// codec of [`super::kv`] — the **full-recompute reference** for
+    /// HiF4-cached incremental decode: a forward with
+    /// `kv: Some(KvCacheType::HiF4)` sees bit-identical K/V values to a
+    /// cached decode that encoded the same rows on append.
+    /// `None` / `Some(KvCacheType::F32)` are no-ops.
+    pub kv: Option<KvCacheType>,
 }
 
 /// Calibration recorder: collects inputs of every quantized linear
@@ -509,6 +517,16 @@ impl Transformer {
         let mut qr = q;
         rope_fwd(&mut qr, seq_lens, cfg.n_heads, cfg.head_dim, cfg.rope_base);
         rope_fwd(&mut k, seq_lens, cfg.kv_heads(), cfg.head_dim, cfg.rope_base);
+        // KV-cache reference mode: run K (post-RoPE, like the cache stores
+        // it) and V row-wise through the HiF4 KV codec.
+        let v = if policy.and_then(|p| p.kv) == Some(KvCacheType::HiF4) {
+            super::kv::hif4_qdq_rows(&mut k);
+            let mut vq = v;
+            super::kv::hif4_qdq_rows(&mut vq);
+            vq
+        } else {
+            v
+        };
 
         let (ctx, probs) = causal_attention_fwd(
             &qr,
@@ -604,6 +622,246 @@ impl Transformer {
             }
         }
     }
+
+    // -----------------------------------------------------------------
+    // Incremental decode (KV-cached autoregressive serving path)
+    // -----------------------------------------------------------------
+
+    /// Forward over the **new suffix** of one or more sequences, reading
+    /// and appending each sequence's [`KvCache`] instead of recomputing
+    /// the prefix — O(T) per generated token instead of O(T²) per
+    /// generation. Returns logits for the new rows only (B·T_new × vocab,
+    /// sequences concatenated in order).
+    ///
+    /// A fresh cache with the whole prompt as the suffix is a *prefill*;
+    /// a one-token suffix is a *decode step*; the two mix freely in one
+    /// call, which is what continuous batching exploits. Per-sequence
+    /// results are **bit-identical** regardless of which other sequences
+    /// share the batch, of the thread count, and — for
+    /// [`KvCacheType::F32`] caches — of whether the prefix was cached or
+    /// recomputed: linears are row-independent, attention is
+    /// per-sequence, and the score/softmax/context loops replay
+    /// [`causal_attention_fwd`]'s exact operation order. HiF4 caches are
+    /// bit-identical to a full recompute under
+    /// [`QuantPolicy::kv`]`= Some(HiF4)` (`tests/decode_parity.rs`).
+    ///
+    /// Quantized serving composes: with
+    /// [`Transformer::prepack_quantized_weights`] applied, every linear
+    /// here runs the fixed-point QGEMM over the prepacked weight planes.
+    pub fn forward_cached(&self, seqs: &mut [CachedSeq<'_>]) -> Matrix {
+        let (x, _) = self.forward_cached_hidden(seqs);
+        let (normed_f, _) = rmsnorm_fwd(&x, &self.w.norm_f);
+        self.linear_fwd(&self.w.head, &normed_f)
+    }
+
+    /// [`Transformer::forward_cached`], but projecting the LM head only
+    /// for each sequence's **last** new row — one logits row per sequence
+    /// (B × vocab). Greedy decode never reads the other rows, and the
+    /// head is the largest linear in the model, so this is the serving
+    /// fast path: a prompt-P prefill skips (P−1)·vocab·d of head work.
+    /// Rows are bit-identical to the corresponding rows of
+    /// [`Transformer::forward_cached`] (rmsnorm and the head linear are
+    /// row-independent). Every sequence must feed ≥ 1 token.
+    pub fn forward_cached_last(&self, seqs: &mut [CachedSeq<'_>]) -> Matrix {
+        let (x, new_lens) = self.forward_cached_hidden(seqs);
+        let d = self.cfg.d_model;
+        let mut last = Matrix::zeros(new_lens.len(), d);
+        let mut base = 0usize;
+        for (si, &n) in new_lens.iter().enumerate() {
+            debug_assert!(n > 0, "forward_cached_last needs a non-empty suffix per sequence");
+            base += n;
+            last.row_mut(si).copy_from_slice(x.row(base - 1));
+        }
+        let (normed_f, _) = rmsnorm_fwd(&last, &self.w.norm_f);
+        self.linear_fwd(&self.w.head, &normed_f)
+    }
+
+    /// Shared body of the cached forwards: embed the new suffixes, run
+    /// every layer against the caches (appending K/V), advance the
+    /// caches, and return the final hidden states plus per-sequence
+    /// suffix lengths.
+    fn forward_cached_hidden(&self, seqs: &mut [CachedSeq<'_>]) -> (Matrix, Vec<usize>) {
+        let new_lens: Vec<usize> = seqs.iter().map(|s| s.tokens.len()).collect();
+        let starts: Vec<usize> = seqs.iter().map(|s| s.cache.len()).collect();
+        let bt: usize = new_lens.iter().sum();
+        let d = self.cfg.d_model;
+        let mut x = Matrix::zeros(bt, d);
+        let mut row = 0usize;
+        for s in seqs.iter() {
+            debug_assert_eq!(
+                s.cache.layers.len(),
+                self.cfg.n_layers,
+                "KV cache was built for a different model depth"
+            );
+            for &t in s.tokens {
+                debug_assert!(t < self.cfg.vocab, "token {t} out of vocab");
+                x.row_mut(row).copy_from_slice(self.w.embed.row(t));
+                row += 1;
+            }
+        }
+        for (li, layer) in self.w.layers.iter().enumerate() {
+            let (normed1, _) = rmsnorm_fwd(&x, &layer.norm1);
+            let attn_out = self.attention_cached(li, layer, &normed1, &new_lens, &starts, seqs);
+            let x1 = add(&x, &attn_out);
+            let (normed2, _) = rmsnorm_fwd(&x1, &layer.norm2);
+            let ffn_out = self.ffn_fwd(li, layer, &normed2, None, None, None);
+            x = add(&x1, &ffn_out);
+        }
+        for (s, &n) in seqs.iter_mut().zip(&new_lens) {
+            s.cache.advance(n);
+        }
+        (x, new_lens)
+    }
+
+    /// Cached attention: project the new rows, RoPE them at their absolute
+    /// positions, append K/V to each sequence's cache pages, then score
+    /// every new row against its full cached prefix. HiF4 pages decode
+    /// their lane planes once per call (one multiply per element); f32
+    /// pages borrow in place.
+    fn attention_cached(
+        &self,
+        li: usize,
+        layer: &LayerWeights,
+        normed: &Matrix,
+        new_lens: &[usize],
+        starts: &[usize],
+        seqs: &mut [CachedSeq<'_>],
+    ) -> Matrix {
+        let cfg = &self.cfg;
+        let (heads, hd) = (cfg.n_heads, cfg.head_dim);
+        let kv_heads = cfg.kv_heads();
+        let group = heads / kv_heads;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let q = self.linear_fwd(&layer.wq, normed);
+        let kv_in = match &layer.wdkv {
+            Some(dkv) => self.linear_fwd(dkv, normed),
+            None => normed.clone(),
+        };
+        let mut k = self.linear_fwd(&layer.wk, &kv_in);
+        let v = self.linear_fwd(&layer.wv, &kv_in);
+        let mut qr = q;
+        rope_fwd_from(&mut qr, new_lens, starts, heads, hd, cfg.rope_base);
+        rope_fwd_from(&mut k, new_lens, starts, kv_heads, hd, cfg.rope_base);
+
+        let mut ctx = Matrix::zeros(qr.rows, heads * hd);
+        let mut scores: Vec<f32> = Vec::new();
+        let mut base = 0usize;
+        for (si, s) in seqs.iter_mut().enumerate() {
+            let t_new = new_lens[si];
+            let start = starts[si];
+            let lkv = &mut s.cache.layers[li];
+            for r in base..base + t_new {
+                lkv.k.append_row(k.row(r));
+                lkv.v.append_row(v.row(r));
+            }
+            let t_ctx = start + t_new;
+            let kd = lkv.k.dense(t_ctx);
+            let vd = lkv.v.dense(t_ctx);
+            for h in 0..heads {
+                let kvh = h / group;
+                for i in 0..t_new {
+                    let p = start + i;
+                    let qi = &qr.row(base + i)[h * hd..(h + 1) * hd];
+                    // Same score → softmax → context operation order as
+                    // [`causal_attention_fwd`], over positions j ≤ p.
+                    scores.clear();
+                    scores.resize(p + 1, 0.0);
+                    let mut maxs = f32::NEG_INFINITY;
+                    for (j, sc) in scores.iter_mut().enumerate() {
+                        let kj = &kd.row(j)[kvh * hd..(kvh + 1) * hd];
+                        let val = crate::tensor::gemm::dot(qi, kj) * scale;
+                        *sc = val;
+                        maxs = maxs.max(val);
+                    }
+                    let mut denom = 0f32;
+                    for sc in scores.iter_mut() {
+                        let e = (*sc - maxs).exp();
+                        *sc = e;
+                        denom += e;
+                    }
+                    let inv = 1.0 / denom;
+                    for sc in scores.iter_mut() {
+                        *sc *= inv;
+                    }
+                    let crow = &mut ctx.data[(base + i) * heads * hd + h * hd..][..hd];
+                    for (j, w) in scores.iter().enumerate() {
+                        let vj = &vd.row(j)[kvh * hd..(kvh + 1) * hd];
+                        for (cc, vv) in crow.iter_mut().zip(vj) {
+                            *cc += *w * *vv;
+                        }
+                    }
+                }
+            }
+            base += t_new;
+        }
+        self.linear_fwd(&layer.wo, &ctx)
+    }
+
+    /// Greedy-generate `n_new` tokens for `prompt` with a KV cache of the
+    /// given kind: one prefill, then one single-token decode step per
+    /// token. Ties break to the lowest index (the serving responder's
+    /// argmax).
+    pub fn generate_greedy(&self, prompt: &[usize], n_new: usize, kind: KvCacheType) -> Vec<usize> {
+        assert!(!prompt.is_empty(), "generate_greedy needs a non-empty prompt");
+        let mut cache = KvCache::new(&self.cfg, kind);
+        let mut out = Vec::with_capacity(n_new);
+        let mut feed: Vec<usize> = prompt.to_vec();
+        for _ in 0..n_new {
+            let logits = {
+                let mut seqs = [CachedSeq { tokens: &feed, cache: &mut cache }];
+                self.forward_cached_last(&mut seqs)
+            };
+            let (next, _) = greedy_from_row(logits.row(0));
+            out.push(next);
+            feed = vec![next];
+        }
+        out
+    }
+
+    /// The O(T²) reference for [`Transformer::generate_greedy`]: recompute
+    /// the whole prefix every step via [`Transformer::forward`], with
+    /// [`QuantPolicy::kv`] reproducing the cache's K/V codec so both cache
+    /// kinds are exactly comparable.
+    pub fn generate_greedy_full_recompute(
+        &self,
+        prompt: &[usize],
+        n_new: usize,
+        kind: KvCacheType,
+    ) -> Vec<usize> {
+        assert!(!prompt.is_empty(), "generate_greedy needs a non-empty prompt");
+        let policy = QuantPolicy { act: None, kv: Some(kind) };
+        let mut ctx = prompt.to_vec();
+        let mut out = Vec::with_capacity(n_new);
+        for _ in 0..n_new {
+            let logits = self.forward(&[ctx.clone()], Some(&policy), None, None);
+            let (next, _) = greedy_from_row(logits.row(logits.rows - 1));
+            out.push(next);
+            ctx.push(next);
+        }
+        out
+    }
+}
+
+/// One sequence's share of a [`Transformer::forward_cached`] call: the new
+/// suffix tokens plus a mutable borrow of its KV cache.
+pub struct CachedSeq<'a> {
+    pub tokens: &'a [usize],
+    pub cache: &'a mut KvCache,
+}
+
+/// Greedy head readout shared by generation and the serving responder:
+/// argmax (first index wins ties) plus the log-softmax value at the
+/// argmax.
+pub fn greedy_from_row(row: &[f32]) -> (usize, f32) {
+    let (mut best, mut best_v) = (0usize, f32::NEG_INFINITY);
+    for (t, v) in row.iter().enumerate() {
+        if *v > best_v {
+            best = t;
+            best_v = *v;
+        }
+    }
+    let denom: f32 = row.iter().map(|v| (v - best_v).exp()).sum();
+    (best, -denom.ln())
 }
 
 /// One expert / plain FFN forward. Returns output and cache.
@@ -801,9 +1059,27 @@ pub fn gelu_grad(x: f32) -> f32 {
 
 /// Rotary position embedding applied in place to (B·T × heads·head_dim).
 pub fn rope_fwd(x: &mut Matrix, seq_lens: &[usize], heads: usize, head_dim: usize, base: f32) {
+    let zeros = vec![0usize; seq_lens.len()];
+    rope_fwd_from(x, seq_lens, &zeros, heads, head_dim, base);
+}
+
+/// [`rope_fwd`] with per-sequence absolute position offsets: sequence `s`'s
+/// first row rotates as position `starts[s]` — the incremental-decode form
+/// (cached rows were already rotated at their own positions, new rows pick
+/// up where the cache ends). `starts = [0, ..]` is exactly [`rope_fwd`].
+pub fn rope_fwd_from(
+    x: &mut Matrix,
+    seq_lens: &[usize],
+    starts: &[usize],
+    heads: usize,
+    head_dim: usize,
+    base: f32,
+) {
+    debug_assert_eq!(seq_lens.len(), starts.len());
     let mut row = 0usize;
-    for &t_len in seq_lens {
-        for pos in 0..t_len {
+    for (si, &t_len) in seq_lens.iter().enumerate() {
+        for off_pos in 0..t_len {
+            let pos = starts[si] + off_pos;
             let r = x.row_mut(row);
             for h in 0..heads {
                 let off = h * head_dim;
@@ -1079,7 +1355,7 @@ mod tests {
         let clean = m.forward(&toks(), None, None, None);
         let mut qm = m.clone();
         qm.quantize_weights(&QuantScheme::direct(Format::HiF4));
-        let policy = QuantPolicy { act: Some(QuantScheme::direct(Format::HiF4)) };
+        let policy = QuantPolicy { act: Some(QuantScheme::direct(Format::HiF4)), kv: None };
         let quant = qm.forward(&toks(), Some(&policy), None, None);
         assert!(quant.data.iter().all(|x| x.is_finite()));
         let diff: f32 =
@@ -1097,7 +1373,7 @@ mod tests {
         // Simulated: fake-quant weights + activations, f32 GEMMs.
         let mut sim = m.clone();
         sim.quantize_weights(&QuantScheme::direct(Format::HiF4));
-        let policy = QuantPolicy { act: Some(QuantScheme::direct(Format::HiF4)) };
+        let policy = QuantPolicy { act: Some(QuantScheme::direct(Format::HiF4)), kv: None };
         let sim_logits = sim.forward(&toks(), Some(&policy), None, None);
         // Real: same quantized operands through the fixed-point QGEMM.
         let mut real = m.clone();
@@ -1201,5 +1477,158 @@ mod tests {
         let s: f32 = r[0].iter().map(|(_, w)| w).sum();
         assert!((s - 1.0).abs() < 1e-6, "renormalized");
         assert_eq!(r[1][0].0, 2);
+    }
+
+    fn bits(m: &Matrix) -> Vec<u32> {
+        m.data.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn cached_prefill_is_bitwise_identical_to_full_forward() {
+        for (attn, ffn) in [
+            (Attention::Mha, Ffn::SwiGlu),
+            (Attention::Gqa { kv_heads: 2 }, Ffn::Gelu),
+            (Attention::Mla { kv_rank: 8 }, Ffn::Moe { experts: 4, top_k: 2 }),
+        ] {
+            let m = Transformer::init(tiny_cfg(attn, ffn), 31);
+            let prompt = vec![1usize, 5, 9, 13, 2];
+            let full = m.forward(&[prompt.clone()], None, None, None);
+            let mut cache = KvCache::new(&m.cfg, KvCacheType::F32);
+            let cached = {
+                let mut seqs = [CachedSeq { tokens: &prompt, cache: &mut cache }];
+                m.forward_cached(&mut seqs)
+            };
+            assert_eq!(bits(&full), bits(&cached), "{attn:?}/{ffn:?}");
+            assert_eq!(cache.len(), prompt.len());
+        }
+    }
+
+    #[test]
+    fn cached_decode_step_matches_full_forward_row() {
+        let m = Transformer::init(tiny_cfg(Attention::Gqa { kv_heads: 2 }, Ffn::SwiGlu), 32);
+        let prompt = vec![3usize, 7, 11];
+        let mut cache = KvCache::new(&m.cfg, KvCacheType::F32);
+        {
+            let mut seqs = [CachedSeq { tokens: &prompt, cache: &mut cache }];
+            m.forward_cached(&mut seqs);
+        }
+        // Three incremental steps must reproduce the matching rows of a
+        // full forward over the extended context, bit for bit.
+        let extra = [4usize, 8, 12];
+        let mut ctx = prompt.clone();
+        for &t in &extra {
+            let feed = [t];
+            let step = {
+                let mut seqs = [CachedSeq { tokens: &feed[..], cache: &mut cache }];
+                m.forward_cached(&mut seqs)
+            };
+            ctx.push(t);
+            let full = m.forward(&[ctx.clone()], None, None, None);
+            assert_eq!(
+                step.row(0).iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+                full.row(full.rows - 1).iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+                "context length {}",
+                ctx.len()
+            );
+        }
+        assert_eq!(cache.len(), ctx.len());
+    }
+
+    #[test]
+    fn hif4_cached_prefill_matches_kv_quant_reference_bitwise() {
+        let m = Transformer::init(tiny_cfg(Attention::Mha, Ffn::SwiGlu), 33);
+        let prompt = vec![2usize, 6, 10, 14, 3, 7];
+        let policy = QuantPolicy { act: None, kv: Some(KvCacheType::HiF4) };
+        let reference = m.forward(&[prompt.clone()], Some(&policy), None, None);
+        let mut cache = KvCache::new(&m.cfg, KvCacheType::HiF4);
+        let cached = {
+            let mut seqs = [CachedSeq { tokens: &prompt, cache: &mut cache }];
+            m.forward_cached(&mut seqs)
+        };
+        assert_eq!(bits(&reference), bits(&cached));
+        // And the HiF4 cache genuinely perturbs vs the clean forward.
+        let clean = m.forward(&[prompt], None, None, None);
+        assert!(bits(&clean) != bits(&cached), "HiF4 KV codec must be active");
+    }
+
+    #[test]
+    fn batched_cached_forward_is_independent_per_sequence() {
+        // A sequence's cached logits must not depend on its batch mates —
+        // the property continuous batching relies on.
+        let m = Transformer::init(tiny_cfg(Attention::Gqa { kv_heads: 2 }, Ffn::SwiGlu), 34);
+        let (pa, pb) = (vec![1usize, 5, 9], vec![2usize, 6, 10, 14]);
+        let mut ca_solo = KvCache::new(&m.cfg, KvCacheType::F32);
+        let solo = {
+            let mut seqs = [CachedSeq { tokens: &pa, cache: &mut ca_solo }];
+            m.forward_cached(&mut seqs)
+        };
+        let mut ca = KvCache::new(&m.cfg, KvCacheType::F32);
+        let mut cb = KvCache::new(&m.cfg, KvCacheType::F32);
+        let joint = {
+            let mut seqs = [
+                CachedSeq { tokens: &pa, cache: &mut ca },
+                CachedSeq { tokens: &pb, cache: &mut cb },
+            ];
+            m.forward_cached(&mut seqs)
+        };
+        for r in 0..pa.len() {
+            assert_eq!(
+                solo.row(r).iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+                joint.row(r).iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+                "row {r} changed when batched"
+            );
+        }
+    }
+
+    #[test]
+    fn forward_cached_last_matches_full_logits_rows() {
+        let m = Transformer::init(tiny_cfg(Attention::Gqa { kv_heads: 2 }, Ffn::SwiGlu), 36);
+        let (pa, pb) = (vec![1usize, 5, 9], vec![2usize, 6, 10, 14]);
+        let full = {
+            let mut ca = KvCache::new(&m.cfg, KvCacheType::F32);
+            let mut cb = KvCache::new(&m.cfg, KvCacheType::F32);
+            let mut seqs = [
+                CachedSeq { tokens: &pa, cache: &mut ca },
+                CachedSeq { tokens: &pb, cache: &mut cb },
+            ];
+            m.forward_cached(&mut seqs)
+        };
+        let last = {
+            let mut ca = KvCache::new(&m.cfg, KvCacheType::F32);
+            let mut cb = KvCache::new(&m.cfg, KvCacheType::F32);
+            let mut seqs = [
+                CachedSeq { tokens: &pa, cache: &mut ca },
+                CachedSeq { tokens: &pb, cache: &mut cb },
+            ];
+            m.forward_cached_last(&mut seqs)
+        };
+        assert_eq!((last.rows, last.cols), (2, m.cfg.vocab));
+        for (li, fr) in [(0, pa.len() - 1), (1, pa.len() + pb.len() - 1)] {
+            assert_eq!(
+                last.row(li).iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+                full.row(fr).iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+                "sequence {li} last-row logits diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn greedy_generation_matches_full_recompute_both_cache_kinds() {
+        let m = Transformer::init(tiny_cfg(Attention::Mha, Ffn::SwiGlu), 35);
+        let prompt = vec![4usize, 8, 15];
+        for kind in [KvCacheType::F32, KvCacheType::HiF4] {
+            let cached = m.generate_greedy(&prompt, 6, kind);
+            let full = m.generate_greedy_full_recompute(&prompt, 6, kind);
+            assert_eq!(cached, full, "{kind:?}");
+            assert_eq!(cached.len(), 6);
+            assert!(cached.iter().all(|&t| t < m.cfg.vocab));
+        }
+    }
+
+    #[test]
+    fn greedy_from_row_breaks_ties_low() {
+        let (t, lp) = greedy_from_row(&[0.5, 2.0, 2.0, -1.0]);
+        assert_eq!(t, 1, "first max wins");
+        assert!(lp < 0.0 && lp.is_finite());
     }
 }

@@ -145,7 +145,7 @@ pub fn quantize_model(
         }
         _ => qm.quantize_weights(&scheme),
     }
-    (qm, Some(QuantPolicy { act: Some(scheme) }))
+    (qm, Some(QuantPolicy { act: Some(scheme), kv: None }))
 }
 
 /// One table block: per-quant-type eval rows (+ drops vs the BF16 row).

@@ -16,12 +16,120 @@
 //! weights become decode-once integer operand planes held across every
 //! request — the serving-side payoff of the packed QGEMM layer.
 //!
+//! This module also hosts the [`DecodeEngine`] — the incremental-decode
+//! executor the continuous-batching server loop drives: per-sequence
+//! [`DecodeStream`]s carry a KV-cache page each ([`KvCacheType`] knob:
+//! f32 or HiF4 units encoded on append), and one [`DecodeEngine::step`]
+//! advances a mixed batch of prefilling and decoding sequences by one
+//! greedy token through [`Transformer::forward_cached`].
+//!
 //! [prepack]: crate::model::transformer::Transformer::prepack_quantized_weights
 
 use crate::model::config::{Attention, Ffn, ModelConfig};
-use crate::model::transformer::Transformer;
+use crate::model::kv::{KvCache, KvCacheType};
+use crate::model::transformer::{greedy_from_row, CachedSeq, Transformer};
 use crate::runtime::artifact::{Manifest, ParamStore};
 use anyhow::{Context, Result};
+use std::sync::Arc;
+
+/// Incremental-decode executor: one shared read-only model + the KV-cache
+/// policy, driving any number of per-sequence [`DecodeStream`]s.
+pub struct DecodeEngine {
+    model: Arc<Transformer>,
+    kv: KvCacheType,
+    max_prompt: usize,
+}
+
+/// One in-flight generation: the sanitized prompt, this sequence's
+/// KV-cache page, and the next token to feed. Created by
+/// [`DecodeEngine::start`], advanced one token per [`DecodeEngine::step`],
+/// dropped (evicting the page) on completion.
+pub struct DecodeStream {
+    prompt: Vec<usize>,
+    cache: KvCache,
+    next: usize,
+    generated: usize,
+}
+
+impl DecodeStream {
+    /// Tokens generated so far.
+    pub fn generated(&self) -> usize {
+        self.generated
+    }
+
+    /// This sequence's cache page (for memory accounting).
+    pub fn cache(&self) -> &KvCache {
+        &self.cache
+    }
+}
+
+impl DecodeEngine {
+    /// `max_prompt` bounds the prompt length (requests truncate to it, as
+    /// [`run_batch_native`][rbn] always did).
+    ///
+    /// [rbn]: crate::server::service::run_batch_native
+    pub fn new(model: Arc<Transformer>, kv: KvCacheType, max_prompt: usize) -> DecodeEngine {
+        DecodeEngine { model, kv, max_prompt: max_prompt.max(1) }
+    }
+
+    pub fn model(&self) -> &Transformer {
+        &self.model
+    }
+
+    pub fn kv(&self) -> KvCacheType {
+        self.kv
+    }
+
+    /// Open a stream: clamp out-of-vocab ids to the last token, truncate
+    /// to `max_prompt`, never empty — a malformed request can never panic
+    /// the engine.
+    pub fn start(&self, tokens: &[usize]) -> DecodeStream {
+        let vocab = self.model.cfg.vocab;
+        let mut prompt: Vec<usize> = tokens.iter().map(|&t| t.min(vocab - 1)).collect();
+        prompt.truncate(self.max_prompt);
+        if prompt.is_empty() {
+            prompt.push(0);
+        }
+        DecodeStream {
+            prompt,
+            cache: KvCache::new(&self.model.cfg, self.kv),
+            next: 0,
+            generated: 0,
+        }
+    }
+
+    /// One continuous-batching step over a mixed batch: fresh streams
+    /// prefill their whole prompt, in-flight streams feed their last
+    /// token; every stream advances by one greedy token, returned as
+    /// `(token, logprob)` in stream order. Per-stream results are
+    /// **bit-identical regardless of batch composition** (row-independent
+    /// linears, per-sequence attention — see
+    /// [`Transformer::forward_cached`]), which is what makes scheduler
+    /// output independent of arrival order.
+    pub fn step(&self, streams: &mut [&mut DecodeStream]) -> Vec<(u32, f32)> {
+        let mut seqs: Vec<CachedSeq<'_>> = Vec::with_capacity(streams.len());
+        for s in streams.iter_mut() {
+            let s: &mut DecodeStream = s;
+            let feed: &[usize] = if s.cache.is_empty() {
+                &s.prompt
+            } else {
+                std::slice::from_ref(&s.next)
+            };
+            seqs.push(CachedSeq { tokens: feed, cache: &mut s.cache });
+        }
+        // Last-row-only head readout: one logits row per stream.
+        let logits = self.model.forward_cached_last(&mut seqs);
+        drop(seqs);
+        let mut out = Vec::with_capacity(streams.len());
+        for (si, s) in streams.iter_mut().enumerate() {
+            let (token, logprob) = greedy_from_row(logits.row(si));
+            s.next = token;
+            s.generated += 1;
+            out.push((token as u32, logprob));
+        }
+        out
+    }
+}
 
 /// Shape of a named manifest param.
 fn shape<'a>(m: &'a Manifest, name: &str) -> Result<&'a [usize]> {

@@ -1,16 +1,91 @@
-//! Dynamic batcher — the vLLM-router-style heart of the coordinator.
+//! Batching machinery for the serving coordinator — two schedulers:
 //!
-//! Requests arrive on an MPSC queue; the batcher drains up to `max_batch`
-//! of them, waiting at most `max_wait` after the first request before
-//! dispatching a partial batch (latency/throughput knob). Complete batches
-//! go onto one shared queue that the PJRT workers (each owning its own
-//! executable) pull from whenever they are free — work-stealing-style load
-//! balancing, so a stalled worker never accumulates a backlog while others
-//! idle. [`run_batcher`] is the batcher-thread loop.
+//! * **Dynamic batcher** ([`run_batcher`] / [`next_batch`]): the
+//!   batch-then-drain pipeline the PJRT path uses. Requests arrive on an
+//!   MPSC queue; the batcher drains up to `max_batch` of them, waiting at
+//!   most `max_wait` after the first request before dispatching a partial
+//!   batch (latency/throughput knob). Complete batches go onto one shared
+//!   queue that the PJRT workers (each owning its own executable) pull
+//!   from whenever they are free — work-stealing-style load balancing, so
+//!   a stalled worker never accumulates a backlog while others idle.
+//!
+//! * **Continuous-batching slot map** ([`ContinuousScheduler`]): the
+//!   vLLM-style scheduler the native decode engine uses. A fixed-capacity
+//!   slot map holds in-flight generation streams; new requests are
+//!   **admitted into the lowest free slot between decode steps** (no
+//!   drain barrier — a fresh sequence prefills in the same step its batch
+//!   mates decode), and completed sequences are **evicted immediately**,
+//!   freeing their slot (and per-sequence KV-cache page) for the next
+//!   arrival. Iteration is by ascending slot id, so the step order is
+//!   deterministic; per-sequence *outputs* are additionally independent
+//!   of batch composition entirely (see
+//!   [`crate::model::transformer::Transformer::forward_cached`]), which
+//!   makes generation results independent of arrival order.
 
 use super::protocol::Request;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::time::{Duration, Instant};
+
+/// Fixed-capacity slot map for continuous batching. Payload-agnostic:
+/// the serving loop stores its in-flight stream state (`ActiveSeq`), the
+/// tests store plain markers.
+#[derive(Debug)]
+pub struct ContinuousScheduler<T> {
+    slots: Vec<Option<T>>,
+    active: usize,
+}
+
+impl<T> ContinuousScheduler<T> {
+    /// A scheduler with `capacity` slots (at least 1).
+    pub fn new(capacity: usize) -> ContinuousScheduler<T> {
+        let capacity = capacity.max(1);
+        let mut slots = Vec::with_capacity(capacity);
+        slots.resize_with(capacity, || None);
+        ContinuousScheduler { slots, active: 0 }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.active
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.active == 0
+    }
+
+    pub fn has_free(&self) -> bool {
+        self.active < self.slots.len()
+    }
+
+    /// Admit into the lowest free slot; `None` when every slot is busy.
+    pub fn admit(&mut self, item: T) -> Option<usize> {
+        let slot = self.slots.iter().position(|s| s.is_none())?;
+        self.slots[slot] = Some(item);
+        self.active += 1;
+        Some(slot)
+    }
+
+    pub fn get_mut(&mut self, slot: usize) -> Option<&mut T> {
+        self.slots.get_mut(slot)?.as_mut()
+    }
+
+    /// Evict a completed sequence, freeing its slot for the next arrival.
+    pub fn release(&mut self, slot: usize) -> Option<T> {
+        let item = self.slots.get_mut(slot)?.take();
+        if item.is_some() {
+            self.active -= 1;
+        }
+        item
+    }
+
+    /// Active slots in ascending slot order (the deterministic step order).
+    pub fn iter_active_mut(&mut self) -> impl Iterator<Item = (usize, &mut T)> + '_ {
+        self.slots.iter_mut().enumerate().filter_map(|(i, s)| s.as_mut().map(|t| (i, t)))
+    }
+}
 
 /// A request tagged with arrival time and a reply handle.
 pub struct Pending<Reply> {
@@ -127,7 +202,62 @@ mod tests {
     use std::sync::mpsc::{channel, sync_channel};
 
     fn req(id: u64) -> Pending<()> {
-        Pending { request: Request { id, tokens: vec![1, 2] }, arrived: Instant::now(), reply: () }
+        Pending { request: Request::next_token(id, vec![1, 2]), arrived: Instant::now(), reply: () }
+    }
+
+    #[test]
+    fn scheduler_admits_into_lowest_free_slot() {
+        let mut s: ContinuousScheduler<u64> = ContinuousScheduler::new(3);
+        assert!(s.is_empty() && s.has_free());
+        assert_eq!(s.admit(10), Some(0));
+        assert_eq!(s.admit(11), Some(1));
+        assert_eq!(s.admit(12), Some(2));
+        assert_eq!(s.active_count(), 3);
+        assert!(!s.has_free());
+        assert_eq!(s.admit(13), None, "full map must refuse admission");
+    }
+
+    #[test]
+    fn scheduler_eviction_frees_slots_for_reuse() {
+        let mut s: ContinuousScheduler<u64> = ContinuousScheduler::new(2);
+        s.admit(1);
+        s.admit(2);
+        assert_eq!(s.release(0), Some(1));
+        assert_eq!(s.active_count(), 1);
+        assert!(s.has_free());
+        // Mid-flight admission: the freed slot is reused while slot 1 is
+        // still in flight.
+        assert_eq!(s.admit(3), Some(0));
+        assert_eq!(s.release(0), Some(3));
+        assert_eq!(s.release(1), Some(2));
+        assert!(s.is_empty());
+        assert_eq!(s.release(1), None, "double release is a no-op");
+        assert_eq!(s.release(99), None, "out-of-range slot is a no-op");
+    }
+
+    #[test]
+    fn scheduler_iterates_in_ascending_slot_order() {
+        let mut s: ContinuousScheduler<&'static str> = ContinuousScheduler::new(4);
+        s.admit("a");
+        s.admit("b");
+        s.admit("c");
+        s.release(1);
+        s.admit("d"); // lands in slot 1
+        let seen: Vec<(usize, &str)> = s.iter_active_mut().map(|(i, t)| (i, *t)).collect();
+        assert_eq!(seen, vec![(0, "a"), (1, "d"), (2, "c")]);
+        if let Some(t) = s.get_mut(2) {
+            *t = "c2";
+        }
+        let seen: Vec<&str> = s.iter_active_mut().map(|(_, t)| *t).collect();
+        assert_eq!(seen, vec!["a", "d", "c2"]);
+    }
+
+    #[test]
+    fn scheduler_capacity_floor_is_one() {
+        let mut s: ContinuousScheduler<u8> = ContinuousScheduler::new(0);
+        assert_eq!(s.capacity(), 1);
+        assert_eq!(s.admit(1), Some(0));
+        assert_eq!(s.admit(2), None);
     }
 
     #[test]

@@ -1,24 +1,29 @@
-//! Serving coordinator: TCP protocol, request router, dynamic batcher and
-//! the worker pool (PJRT executables or the rust-native engine).
+//! Serving coordinator: TCP protocol, request router, and two schedulers
+//! in front of the execution engines (PJRT executables batch-then-drain;
+//! the rust-native engine continuous-batching decode).
 //!
 //! Request lifecycle (all std threads, no async runtime):
 //!
 //! ```text
 //! client ──TCP──▶ connection thread ──▶ request queue
-//!                                             │ batcher thread
-//!                                   [protocol]│ (max_batch / max_wait)
-//!                                             ▼
-//!                                     shared batch queue
-//!                                    ▲            ▲  (free workers pull)
-//!                               worker 0 …   worker N-1   (own engine each)
-//!                                    └──▶ reply writer (per-connection lock)
+//!                                             │
+//!              PJRT path          [protocol]  │        native path
+//!         batcher thread ◀────────────────────┴──────────────▶ decode loops
+//!        (max_batch / max_wait)                     (ContinuousScheduler slot
+//!               ▼                                    map: admit between steps,
+//!       shared batch queue                           one greedy token per slot
+//!      ▲            ▲  (free workers pull)           per step, streamed reply
+//! worker 0 …   worker N-1   (own engine each)        frames, evict on done)
+//!      └──▶ reply writer (per-connection lock)
 //! ```
 //!
-//! [`protocol`] defines the length-prefixed binary frames, [`batcher`] the
-//! drain policy and batch forwarding, [`service`] the listener/batcher/
-//! worker-pool assembly plus a blocking [`service::Client`], and
-//! [`metrics`] the lock-light counters/histograms the `serve` subcommand
-//! and the serving bench report.
+//! [`protocol`] defines the length-prefixed binary frames (requests carry
+//! `max_new`, responses stream `index`/`of`-tagged tokens), [`batcher`]
+//! the drain policy plus the continuous-batching slot map, [`service`]
+//! the listener/scheduler/worker assembly plus a blocking
+//! [`service::Client`], and [`metrics`] the lock-light
+//! counters/histograms the `serve` subcommand and the serving benches
+//! report.
 
 pub mod batcher;
 pub mod metrics;

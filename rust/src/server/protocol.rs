@@ -4,35 +4,69 @@
 //!
 //! Frame layout (little-endian):
 //! ```text
-//! request : u32 len | u64 id | u16 n_tokens | n_tokens × u32
+//! request : u32 len | u64 id | u16 max_new | u16 n_tokens | n_tokens × u32
 //! response: u32 len | u64 id | u32 token | f32 logprob | u32 latency_us
+//!           | u16 index | u16 of
 //! ```
+//!
+//! A request asks for `max_new` greedy continuation tokens; the
+//! continuous-batching native engine **streams** one response frame per
+//! generated token, tagged `index`/`of` so the client knows when the
+//! stream is complete (`index + 1 == of`). The server may clamp `of`
+//! below the requested `max_new` (never below 1, never above
+//! [`MAX_NEW_CAP`]); the PJRT batch path always answers a single frame
+//! (`of = 1`). Responses to different requests pipelined on one
+//! connection may interleave — group by `id`.
 
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
 
-/// A completion request: score the context, return the argmax next token.
+/// Hard server-side cap on tokens generated per request, bounding KV-cache
+/// growth for a single stream.
+pub const MAX_NEW_CAP: u16 = 1024;
+
+/// A generation request: score the context, then stream `max_new` greedy
+/// continuation tokens.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Request {
     pub id: u64,
     pub tokens: Vec<usize>,
+    /// Greedy tokens to generate (engines clamp to `[1, MAX_NEW_CAP]`).
+    pub max_new: u16,
 }
 
-/// The response: greedy next token + its log-probability + server latency.
+/// One streamed token: the greedy next token + its log-probability +
+/// server latency, at position `index` of a stream of `of`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Response {
     pub id: u64,
     pub token: u32,
     pub logprob: f32,
     pub latency_us: u32,
+    /// Zero-based position of this token in the response stream.
+    pub index: u16,
+    /// Total frames this request's stream will carry.
+    pub of: u16,
 }
 
 impl Request {
+    /// Single next-token request (`max_new = 1`) — the classic scoring
+    /// call every pre-decode client and the PJRT path use.
+    pub fn next_token(id: u64, tokens: Vec<usize>) -> Request {
+        Request { id, tokens, max_new: 1 }
+    }
+
+    /// Multi-token generation request.
+    pub fn generate(id: u64, tokens: Vec<usize>, max_new: u16) -> Request {
+        Request { id, tokens, max_new }
+    }
+
     pub fn encode(&self) -> Vec<u8> {
-        let body_len = 8 + 2 + 4 * self.tokens.len();
+        let body_len = 8 + 2 + 2 + 4 * self.tokens.len();
         let mut buf = Vec::with_capacity(4 + body_len);
         buf.extend_from_slice(&(body_len as u32).to_le_bytes());
         buf.extend_from_slice(&self.id.to_le_bytes());
+        buf.extend_from_slice(&self.max_new.to_le_bytes());
         buf.extend_from_slice(&(self.tokens.len() as u16).to_le_bytes());
         for t in &self.tokens {
             buf.extend_from_slice(&(*t as u32).to_le_bytes());
@@ -44,32 +78,35 @@ impl Request {
         let mut len4 = [0u8; 4];
         r.read_exact(&mut len4).context("read frame length")?;
         let len = u32::from_le_bytes(len4) as usize;
-        if len < 10 || len > 1 << 20 {
+        if len < 12 || len > 1 << 20 {
             bail!("bad request frame length {len}");
         }
         let mut body = vec![0u8; len];
         r.read_exact(&mut body).context("read frame body")?;
         let id = u64::from_le_bytes(body[0..8].try_into()?);
-        let n = u16::from_le_bytes(body[8..10].try_into()?) as usize;
-        if body.len() != 10 + 4 * n {
+        let max_new = u16::from_le_bytes(body[8..10].try_into()?);
+        let n = u16::from_le_bytes(body[10..12].try_into()?) as usize;
+        if body.len() != 12 + 4 * n {
             bail!("request frame length mismatch");
         }
-        let tokens = body[10..]
+        let tokens = body[12..]
             .chunks_exact(4)
             .map(|c| u32::from_le_bytes(c.try_into().unwrap()) as usize)
             .collect();
-        Ok(Request { id, tokens })
+        Ok(Request { id, tokens, max_new })
     }
 }
 
 impl Response {
     pub fn encode(&self) -> Vec<u8> {
-        let mut buf = Vec::with_capacity(4 + 20);
-        buf.extend_from_slice(&20u32.to_le_bytes());
+        let mut buf = Vec::with_capacity(4 + 24);
+        buf.extend_from_slice(&24u32.to_le_bytes());
         buf.extend_from_slice(&self.id.to_le_bytes());
         buf.extend_from_slice(&self.token.to_le_bytes());
         buf.extend_from_slice(&self.logprob.to_le_bytes());
         buf.extend_from_slice(&self.latency_us.to_le_bytes());
+        buf.extend_from_slice(&self.index.to_le_bytes());
+        buf.extend_from_slice(&self.of.to_le_bytes());
         buf
     }
 
@@ -77,17 +114,24 @@ impl Response {
         let mut len4 = [0u8; 4];
         r.read_exact(&mut len4).context("read frame length")?;
         let len = u32::from_le_bytes(len4) as usize;
-        if len != 20 {
+        if len != 24 {
             bail!("bad response frame length {len}");
         }
-        let mut body = [0u8; 20];
+        let mut body = [0u8; 24];
         r.read_exact(&mut body)?;
         Ok(Response {
             id: u64::from_le_bytes(body[0..8].try_into()?),
             token: u32::from_le_bytes(body[8..12].try_into()?),
             logprob: f32::from_le_bytes(body[12..16].try_into()?),
             latency_us: u32::from_le_bytes(body[16..20].try_into()?),
+            index: u16::from_le_bytes(body[20..22].try_into()?),
+            of: u16::from_le_bytes(body[22..24].try_into()?),
         })
+    }
+
+    /// Whether this frame completes its stream.
+    pub fn is_last(&self) -> bool {
+        self.index + 1 >= self.of
     }
 
     pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
@@ -103,18 +147,29 @@ mod tests {
 
     #[test]
     fn request_roundtrip() {
-        let req = Request { id: 42, tokens: vec![1, 2, 300, 7] };
+        let req = Request { id: 42, tokens: vec![1, 2, 300, 7], max_new: 16 };
         let bytes = req.encode();
         let got = Request::read_from(&mut Cursor::new(bytes)).unwrap();
         assert_eq!(got, req);
     }
 
     #[test]
+    fn next_token_constructor_asks_for_one() {
+        let req = Request::next_token(9, vec![1, 2]);
+        assert_eq!(req.max_new, 1);
+        let got = Request::read_from(&mut Cursor::new(req.encode())).unwrap();
+        assert_eq!(got, req);
+    }
+
+    #[test]
     fn response_roundtrip() {
-        let resp = Response { id: 7, token: 123, logprob: -1.5, latency_us: 987 };
+        let resp = Response { id: 7, token: 123, logprob: -1.5, latency_us: 987, index: 2, of: 4 };
         let bytes = resp.encode();
         let got = Response::read_from(&mut Cursor::new(bytes)).unwrap();
         assert_eq!(got, resp);
+        assert!(!got.is_last());
+        let last = Response { index: 3, ..resp };
+        assert!(last.is_last());
     }
 
     #[test]
@@ -126,7 +181,7 @@ mod tests {
 
     #[test]
     fn empty_token_request_roundtrip() {
-        let req = Request { id: 0, tokens: vec![] };
+        let req = Request { id: 0, tokens: vec![], max_new: 1 };
         let got = Request::read_from(&mut Cursor::new(req.encode())).unwrap();
         assert_eq!(got.tokens.len(), 0);
     }

@@ -1,43 +1,50 @@
-//! The serving coordinator: TCP listener → router → dynamic batcher →
+//! The serving coordinator: TCP listener → router → scheduler →
 //! **worker pool** → per-connection reply writers. Thread-based (std
 //! only); Python is nowhere on this path.
 //!
-//! Pipeline: connection threads push requests onto one MPSC queue; a
-//! dedicated batcher thread drains them under the [`BatchPolicy`] onto a
-//! shared batch queue, which `workers` worker threads pull from whenever
-//! they are free (idle workers pick up the next batch, so a stalled
-//! worker never strands a backlog) — the data-parallel serving analogue
-//! of the row-parallel QGEMM kernels.
+//! Two execution **engines** behind one listener/queue front end:
 //!
-//! Two execution **engines** plug into the same pipeline:
-//!
-//! * **PJRT** ([`Server::start`]): each worker compiles its own copy of a
-//!   lowered HLO artifact. The xla crate's PJRT handles are `!Send`
-//!   (Rc-backed), so each worker thread owns its *entire* PJRT lifecycle —
-//!   client, executable and parameter literals are created inside the
-//!   worker from plain-data inputs, and only plain data crosses threads.
-//! * **Native** ([`Server::start_native`]): workers share one
-//!   `Arc<Transformer>` and run the rust-native forward. With
-//!   [`Transformer::prepack_quantized_weights`] applied first, every
-//!   request runs the real fixed-point QGEMM over weight planes packed
-//!   exactly once — quantized serving with no decode tax and no XLA
-//!   runtime required.
+//! * **PJRT** ([`Server::start`]) — batch-then-drain: connection threads
+//!   push requests onto one MPSC queue; a dedicated batcher thread drains
+//!   them under the [`BatchPolicy`] onto a shared batch queue, which
+//!   `workers` worker threads pull from whenever they are free. Each
+//!   worker compiles its own copy of a lowered HLO artifact (the xla
+//!   crate's PJRT handles are `!Send`, so each worker owns its *entire*
+//!   PJRT lifecycle and only plain data crosses threads). Requests are
+//!   answered with a single next token (`of = 1`).
+//! * **Native** ([`Server::start_native`]) — **continuous batching**:
+//!   `workers` decode loops share one [`DecodeEngine`] (read-only
+//!   `Arc<Transformer>` + KV-cache policy) and pull requests straight off
+//!   the shared queue *between decode steps*. Each loop owns a
+//!   [`ContinuousScheduler`] slot map: new requests are admitted into
+//!   free slots mid-flight (a fresh sequence prefills in the same step
+//!   its batch mates decode), every active sequence advances one greedy
+//!   token per step — streamed to its client immediately, tagged
+//!   `index`/`of` — and completed sequences are evicted at once, freeing
+//!   the slot and its KV-cache page. With
+//!   [`Transformer::prepack_quantized_weights`] applied first, every step
+//!   runs the real fixed-point QGEMM over weight planes packed exactly
+//!   once, and the KV cache itself can hold HiF4 units
+//!   (`NativeServerConfig::kv`) — quantized serving end to end with no
+//!   XLA runtime required.
 
-use super::batcher::{run_batcher, BatchPolicy, Pending};
+use super::batcher::{run_batcher, BatchPolicy, ContinuousScheduler, Pending};
 use super::metrics::Metrics;
-use super::protocol::{Request, Response};
-use crate::model::transformer::Transformer;
+use super::protocol::{Request, Response, MAX_NEW_CAP};
+use crate::model::kv::KvCacheType;
+use crate::model::transformer::{greedy_from_row, Transformer};
 use crate::runtime::artifact::{Manifest, ParamStore};
 use crate::runtime::client::{literal_f32, tokens_literal, Executable, Runtime};
+use crate::runtime::native::{DecodeEngine, DecodeStream};
 use anyhow::{Context, Result};
 use std::io::Write;
 use std::net::{TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, sync_channel, Receiver, Sender};
+use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// PJRT server configuration.
 pub struct ServerConfig {
@@ -52,18 +59,26 @@ pub struct ServerConfig {
 
 /// Native-engine server configuration.
 pub struct NativeServerConfig {
+    /// `policy.max_batch` is the continuous-batching slot count per
+    /// decode loop; `max_wait` is unused by the native engine (admission
+    /// happens between decode steps).
     pub policy: BatchPolicy,
-    /// Worker threads sharing one `Arc<Transformer>`. 0 is treated as 1.
+    /// Decode loops sharing one `Arc<Transformer>`. 0 is treated as 1.
     pub workers: usize,
-    /// Max tokens per request (requests truncate to this).
+    /// Max *prompt* tokens per request (requests truncate to this).
     pub seq: usize,
+    /// KV-cache storage backend for every stream (`--kv-cache` /
+    /// `HIF4_KV_CACHE`).
+    pub kv: KvCacheType,
 }
 
 type ReplyHandle = Arc<Mutex<TcpStream>>;
 
-/// One worker's executor: turns a pending batch into responses. Engines
-/// are constructed *inside* their worker thread by an [`EngineFactory`]
-/// (PJRT handles are `!Send`), so the engine itself never crosses threads.
+/// One batch-then-drain worker's executor: turns a pending batch into
+/// responses (the PJRT pipeline; the native engine runs the continuous
+/// [`decode_worker_loop`] instead). Engines are constructed *inside*
+/// their worker thread by an [`EngineFactory`] (PJRT handles are
+/// `!Send`), so the engine itself never crosses threads.
 trait BatchEngine {
     fn run(&mut self, pending: &[Pending<ReplyHandle>]) -> Result<Vec<Response>>;
 }
@@ -86,16 +101,14 @@ impl BatchEngine for PjrtEngine {
     }
 }
 
-/// Native engine: the shared rust-native model (read-only, `Sync`).
-struct NativeEngine {
-    model: Arc<Transformer>,
-    seq: usize,
-}
-
-impl BatchEngine for NativeEngine {
-    fn run(&mut self, pending: &[Pending<ReplyHandle>]) -> Result<Vec<Response>> {
-        Ok(run_batch_native(&self.model, pending, self.seq))
-    }
+/// One continuous-batching slot: the original request (its reply handle
+/// streams every token), the decode stream with its KV-cache page, and
+/// stream-progress bookkeeping.
+struct ActiveSeq {
+    pending: Pending<ReplyHandle>,
+    stream: DecodeStream,
+    emitted: u16,
+    of: u16,
 }
 
 /// A running server (listener + batcher + worker-pool threads).
@@ -140,23 +153,54 @@ impl Server {
         start_engine(policy, cfg.workers.max(1), addr, factory)
     }
 
-    /// Serve the rust-native `model` on `cfg.workers` worker threads —
-    /// no PJRT, no artifacts. Quantized serving: call
+    /// Serve the rust-native `model` with `cfg.workers` continuous-
+    /// batching decode loops — no PJRT, no artifacts. Each loop admits
+    /// requests into a [`ContinuousScheduler`] slot map between decode
+    /// steps and streams one response frame per generated token.
+    /// Quantized serving: call
     /// [`Transformer::prepack_quantized_weights`] before handing the
-    /// model over, and every request runs the fixed-point QGEMM over
-    /// weight planes packed once.
+    /// model over, and every step runs the fixed-point QGEMM over weight
+    /// planes packed once; `cfg.kv` additionally stores the KV cache as
+    /// HiF4 units.
     pub fn start_native(
         model: Arc<Transformer>,
         cfg: NativeServerConfig,
         addr: &str,
     ) -> Result<Server> {
-        let seq = cfg.seq.max(1);
-        let factory: EngineFactory = Arc::new(move |_wi| {
-            Ok(Box::new(NativeEngine { model: Arc::clone(&model), seq }) as Box<dyn BatchEngine>)
-        });
-        let mut policy = cfg.policy;
-        policy.max_batch = policy.max_batch.max(1);
-        start_engine(policy, cfg.workers.max(1), addr, factory)
+        let engine = Arc::new(DecodeEngine::new(model, cfg.kv, cfg.seq.max(1)));
+        let metrics = Arc::new(Metrics::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = channel::<Pending<ReplyHandle>>();
+        let rx = Arc::new(Mutex::new(rx));
+        let max_slots = cfg.policy.max_batch.max(1);
+        let n_workers = cfg.workers.max(1);
+        let mut worker_threads = Vec::with_capacity(n_workers);
+        for wi in 0..n_workers {
+            let wrx = Arc::clone(&rx);
+            let wengine = Arc::clone(&engine);
+            let wmetrics = Arc::clone(&metrics);
+            let handle = std::thread::Builder::new()
+                .name(format!("hif4-decode-{wi}"))
+                .spawn(move || decode_worker_loop(wengine, wrx, max_slots, wmetrics))
+                .context("spawn decode worker")?;
+            worker_threads.push(handle);
+        }
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let listen_metrics = Arc::clone(&metrics);
+        let listen_stop = Arc::clone(&stop);
+        let listener_thread = std::thread::Builder::new()
+            .name("hif4-listener".into())
+            .spawn(move || listener_loop(listener, tx, listen_metrics, listen_stop))
+            .context("spawn listener")?;
+        Ok(Server {
+            addr: local,
+            metrics,
+            stop,
+            listener_thread: Some(listener_thread),
+            batcher_thread: None,
+            worker_threads,
+        })
     }
 
     /// Signal shutdown (threads exit on their next poll/disconnect).
@@ -339,6 +383,112 @@ fn worker_loop(
     }
 }
 
+/// The continuous-batching decode loop (one per native worker):
+///
+/// ```text
+/// loop {
+///   admit  — idle: block for a request; busy: drain the queue
+///            (non-blocking) into free slots
+///   step   — one greedy token for every active slot (fresh slots
+///            prefill, in-flight slots decode) via DecodeEngine::step
+///   emit   — stream each token to its client immediately
+///   evict  — release completed slots (drops the KV-cache page)
+/// }
+/// ```
+///
+/// Exits when the request queue closes *and* every in-flight stream has
+/// completed, so shutdown never truncates a response stream.
+fn decode_worker_loop(
+    engine: Arc<DecodeEngine>,
+    rx: Arc<Mutex<Receiver<Pending<ReplyHandle>>>>,
+    max_slots: usize,
+    metrics: Arc<Metrics>,
+) {
+    // Bound on how long an idle worker holds the shared receiver lock: a
+    // plain blocking `recv()` would park *inside* the lock and starve the
+    // `try_recv` top-ups of workers with in-flight streams (their decode
+    // loops would stall until a brand-new request arrived — a deadlock
+    // for sequential clients). Between timeouts the lock is released, so
+    // busy workers get through once per step.
+    const IDLE_POLL: Duration = Duration::from_millis(1);
+    let mut sched: ContinuousScheduler<ActiveSeq> = ContinuousScheduler::new(max_slots);
+    let mut closed = false;
+    loop {
+        if sched.is_empty() {
+            if closed {
+                return;
+            }
+            // Idle: poll for work with a bounded wait (see IDLE_POLL).
+            let next = { rx.lock().unwrap().recv_timeout(IDLE_POLL) };
+            match next {
+                Ok(p) => admit_seq(&engine, &mut sched, p),
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => return,
+            }
+        }
+        // In flight: top the slot map up without blocking — admission
+        // latency is at most one decode step.
+        while !closed && sched.has_free() {
+            let next = { rx.lock().unwrap().try_recv() };
+            match next {
+                Ok(p) => admit_seq(&engine, &mut sched, p),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => closed = true,
+            }
+        }
+        // One decode step over every active slot, in slot order.
+        let mut ids: Vec<usize> = Vec::new();
+        let outs = {
+            let mut streams: Vec<&mut DecodeStream> = Vec::new();
+            for (id, a) in sched.iter_active_mut() {
+                ids.push(id);
+                streams.push(&mut a.stream);
+            }
+            engine.step(&mut streams)
+        };
+        metrics.record_batch(ids.len());
+        for (id, (token, logprob)) in ids.into_iter().zip(outs) {
+            let done = {
+                let a = sched.get_mut(id).expect("stepped slot is active");
+                a.emitted += 1;
+                let resp = Response {
+                    id: a.pending.request.id,
+                    token,
+                    logprob,
+                    latency_us: a.pending.arrived.elapsed().as_micros() as u32,
+                    index: a.emitted - 1,
+                    of: a.of,
+                };
+                // Stream immediately; a vanished client just means the
+                // remaining (bounded) tokens go nowhere.
+                if let Ok(mut s) = a.pending.reply.lock() {
+                    let _ = resp.write_to(&mut *s);
+                    let _ = s.flush();
+                }
+                a.emitted >= a.of
+            };
+            if done {
+                if let Some(a) = sched.release(id) {
+                    metrics.record_latency(a.pending.arrived.elapsed());
+                }
+            }
+        }
+    }
+}
+
+/// Open a decode stream for a request and admit it into a free slot (the
+/// callers only admit when one exists).
+fn admit_seq(
+    engine: &DecodeEngine,
+    sched: &mut ContinuousScheduler<ActiveSeq>,
+    p: Pending<ReplyHandle>,
+) {
+    let of = p.request.max_new.clamp(1, MAX_NEW_CAP);
+    let stream = engine.start(&p.request.tokens);
+    let admitted = sched.admit(ActiveSeq { pending: p, stream, emitted: 0, of });
+    debug_assert!(admitted.is_some(), "admit_seq requires a free slot");
+}
+
 /// Execute one padded batch and extract each request's next-token argmax.
 pub fn run_batch(
     exe: &Executable,
@@ -375,18 +525,12 @@ pub fn run_batch(
     Ok(responses)
 }
 
-/// Argmax + log-softmax-at-argmax over one logits row.
+/// Single-frame response (`of = 1`) from one logits row — the batch
+/// paths' readout, sharing the greedy argmax/log-softmax with the decode
+/// engine ([`greedy_from_row`]).
 fn response_from_logits(id: u64, row: &[f32]) -> Response {
-    let (mut best, mut best_v) = (0usize, f32::NEG_INFINITY);
-    for (t, v) in row.iter().enumerate() {
-        if *v > best_v {
-            best = t;
-            best_v = *v;
-        }
-    }
-    // log-softmax value at the argmax.
-    let denom: f32 = row.iter().map(|v| (v - best_v).exp()).sum();
-    Response { id, token: best as u32, logprob: -denom.ln(), latency_us: 0 }
+    let (token, logprob) = greedy_from_row(row);
+    Response { id, token: token as u32, logprob, latency_us: 0, index: 0, of: 1 }
 }
 
 /// Execute one batch on the rust-native model. No padding is needed —
@@ -452,5 +596,28 @@ impl Client {
     pub fn call(&mut self, req: &Request) -> Result<Response> {
         self.send(req)?;
         self.recv()
+    }
+
+    /// Read one full response stream (frames until `index + 1 == of`).
+    /// Assumes a single outstanding request on this connection — streams
+    /// of pipelined requests interleave and must be grouped by `id`
+    /// instead.
+    pub fn recv_stream(&mut self) -> Result<Vec<Response>> {
+        let mut out = Vec::new();
+        loop {
+            let r = self.recv()?;
+            let last = r.is_last();
+            out.push(r);
+            if last {
+                return Ok(out);
+            }
+        }
+    }
+
+    /// Round-trip a generation request: send, then read the whole token
+    /// stream.
+    pub fn generate(&mut self, req: &Request) -> Result<Vec<Response>> {
+        self.send(req)?;
+        self.recv_stream()
     }
 }

@@ -1,0 +1,173 @@
+//! Continuous batching end to end: mid-flight admission into in-flight
+//! decode batches, eviction on completion, and output that is
+//! deterministic regardless of arrival order — at the [`DecodeEngine`]
+//! level and through the full native server (listener → slot map →
+//! streamed responses).
+
+use hif4::model::kv::KvCacheType;
+use hif4::model::transformer::Transformer;
+use hif4::model::zoo;
+use hif4::runtime::artifact::Manifest;
+use hif4::runtime::native::{transformer_from_store, DecodeEngine, DecodeStream};
+use hif4::server::batcher::BatchPolicy;
+use hif4::server::protocol::Request;
+use hif4::server::service::{Client, NativeServerConfig, Server};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn engine(kind: KvCacheType) -> DecodeEngine {
+    let model = Arc::new(Transformer::init(zoo::llama3_tiny(), 37));
+    DecodeEngine::new(model, kind, 64)
+}
+
+/// Drive `stream` alone for `n` steps, collecting tokens.
+fn drive_solo(eng: &DecodeEngine, stream: &mut DecodeStream, n: usize) -> Vec<u32> {
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let r = eng.step(&mut [&mut *stream]);
+        out.push(r[0].0);
+    }
+    out
+}
+
+#[test]
+fn mid_flight_admission_matches_solo_generation() {
+    for kind in [KvCacheType::F32, KvCacheType::HiF4] {
+        let eng = engine(kind);
+        let (pa, pb) = (vec![1usize, 5, 9, 13], vec![2usize, 6, 10]);
+        let solo_a = eng.model().generate_greedy(&pa, 6, kind);
+        let solo_b = eng.model().generate_greedy(&pb, 4, kind);
+
+        // A runs alone for 2 steps, then B is admitted mid-flight; A
+        // finishes first and is evicted while B keeps decoding.
+        let mut a = eng.start(&pa);
+        let mut b = eng.start(&pb);
+        let mut got_a: Vec<u32> = drive_solo(&eng, &mut a, 2);
+        let mut got_b: Vec<u32> = Vec::new();
+        for _ in 0..4 {
+            let r = eng.step(&mut [&mut a, &mut b]);
+            got_a.push(r[0].0);
+            got_b.push(r[1].0);
+        }
+        assert_eq!(a.generated(), 6);
+        drop(a); // eviction: the cache page is freed with the stream
+        assert_eq!(got_a.iter().map(|&t| t as usize).collect::<Vec<_>>(), solo_a, "{kind:?}");
+        assert_eq!(got_b.iter().map(|&t| t as usize).collect::<Vec<_>>(), solo_b, "{kind:?}");
+        assert_eq!(b.generated(), 4);
+        assert_eq!(got_b.len(), 4);
+    }
+}
+
+#[test]
+fn batch_composition_never_changes_a_streams_tokens() {
+    // The same stream stepped inside batches of different shapes and
+    // orders yields bit-identical tokens: admission order cannot matter.
+    let eng = engine(KvCacheType::HiF4);
+    let prompts: Vec<Vec<usize>> =
+        (0..3).map(|s| (0..5).map(|i| 1 + (i * 11 + s * 3) % 300).collect()).collect();
+    let solo: Vec<Vec<usize>> =
+        prompts.iter().map(|p| eng.model().generate_greedy(p, 5, eng.kv())).collect();
+
+    for order in [[0usize, 1, 2], [2, 1, 0], [1, 2, 0]] {
+        let mut streams: Vec<DecodeStream> =
+            order.iter().map(|&i| eng.start(&prompts[i])).collect();
+        let mut got: Vec<Vec<u32>> = vec![Vec::new(); 3];
+        for _ in 0..5 {
+            let outs = {
+                let mut refs: Vec<&mut DecodeStream> = streams.iter_mut().collect();
+                eng.step(&mut refs)
+            };
+            for (slot, (tok, _)) in outs.into_iter().enumerate() {
+                got[order[slot]].push(tok);
+            }
+        }
+        for (i, solo_i) in solo.iter().enumerate() {
+            let got_i: Vec<usize> = got[i].iter().map(|&t| t as usize).collect();
+            assert_eq!(&got_i, solo_i, "prompt {i} under order {order:?}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Full-server tests (same manifest fixture as tests/native_serving.rs).
+// ---------------------------------------------------------------------
+
+fn write_manifest(dir: &Path) {
+    std::fs::create_dir_all(dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.txt"),
+        "batch 4\nseq 16\nvocab 96\nn_heads 4\nkv_heads 2\nhead_dim 8\nrope_base 10000\n\
+         qdq 8 64\n\
+         param embed 96 32\nparam head 96 32\nparam norm_f 32\n\
+         param layer0.norm1 32\nparam layer0.norm2 32\n\
+         param layer0.wq 32 32\nparam layer0.wk 16 32\nparam layer0.wv 16 32\n\
+         param layer0.wo 32 32\n\
+         param layer0.w1 64 32\nparam layer0.w2 32 64\nparam layer0.w3 64 32\n",
+    )
+    .unwrap();
+}
+
+fn manifest_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("hif4_continuous_batching_{tag}"))
+}
+
+fn start_server(tag: &str, kv: KvCacheType, max_batch: usize) -> (Server, Arc<Transformer>) {
+    let dir = manifest_dir(tag);
+    write_manifest(&dir);
+    let manifest = Manifest::load(&dir).unwrap();
+    let store = manifest.init_params(23);
+    let model = Arc::new(transformer_from_store(&manifest, &store).unwrap());
+    let cfg = NativeServerConfig {
+        policy: BatchPolicy { max_batch, max_wait: Duration::from_millis(1) },
+        workers: 1,
+        seq: manifest.seq,
+        kv,
+    };
+    let server = Server::start_native(Arc::clone(&model), cfg, "127.0.0.1:0").unwrap();
+    (server, model)
+}
+
+#[test]
+fn server_slot_reuse_outlives_many_generations() {
+    // More requests than slots forces completion-eviction + slot reuse;
+    // every stream must still match the in-process greedy reference.
+    let (server, model) = start_server("reuse", KvCacheType::F32, 2);
+    let prompts: Vec<Vec<usize>> =
+        (0..5).map(|s| (0..4).map(|i| 1 + (i * 5 + s * 17) % 90).collect()).collect();
+    let mut clients: Vec<Client> =
+        prompts.iter().map(|_| Client::connect(server.addr).unwrap()).collect();
+    for (i, (c, p)) in clients.iter_mut().zip(&prompts).enumerate() {
+        c.send(&Request::generate(i as u64, p.clone(), 3)).unwrap();
+    }
+    for (i, (c, p)) in clients.iter_mut().zip(&prompts).enumerate() {
+        let stream = c.recv_stream().unwrap();
+        assert_eq!(stream.len(), 3, "request {i}");
+        let want = model.generate_greedy(p, 3, KvCacheType::F32);
+        let got: Vec<usize> = stream.iter().map(|r| r.token as usize).collect();
+        assert_eq!(got, want, "request {i}");
+    }
+    let batches = server.metrics.batches.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(batches >= 5, "5 requests × 3 tokens need several decode steps, saw {batches}");
+}
+
+#[test]
+fn server_output_is_independent_of_arrival_order() {
+    for (tag, order) in [("order_fwd", [0usize, 1, 2]), ("order_rev", [2, 1, 0])] {
+        let (server, model) = start_server(tag, KvCacheType::HiF4, 3);
+        let prompts: Vec<Vec<usize>> =
+            (0..3).map(|s| (0..3).map(|i| 2 + (i * 7 + s * 29) % 90).collect()).collect();
+        let mut clients: Vec<(usize, Client)> = Vec::new();
+        for &i in &order {
+            let mut c = Client::connect(server.addr).unwrap();
+            c.send(&Request::generate(i as u64, prompts[i].clone(), 4)).unwrap();
+            clients.push((i, c));
+        }
+        for (i, c) in clients.iter_mut() {
+            let stream = c.recv_stream().unwrap();
+            let want = model.generate_greedy(&prompts[*i], 4, KvCacheType::HiF4);
+            let got: Vec<usize> = stream.iter().map(|r| r.token as usize).collect();
+            assert_eq!(got, want, "prompt {i} arriving under order {order:?}");
+        }
+    }
+}

@@ -1,0 +1,147 @@
+//! Decode parity: greedy generation through the KV-cached incremental
+//! path must be **token-identical** to the full-recompute reference —
+//! for the f32 cache (where the logits are bit-identical too), for the
+//! HiF4 cache (against the full recompute that applies the same KV
+//! codec via `QuantPolicy::kv`), across the model zoo's architecture
+//! coverage, with prepacked fixed-point linears, and for any thread
+//! count.
+
+use hif4::formats::Format;
+use hif4::model::kv::{KvCache, KvCacheType};
+use hif4::model::transformer::{CachedSeq, QuantPolicy, Transformer};
+use hif4::model::zoo;
+use hif4::tensor::Matrix;
+use hif4::util::threadpool;
+
+const N_NEW: usize = 10;
+
+fn bits(m: &Matrix) -> Vec<u32> {
+    m.data.iter().map(|x| x.to_bits()).collect()
+}
+
+fn prompt(vocab: usize, n: usize, salt: usize) -> Vec<usize> {
+    (0..n).map(|i| 1 + (i * 13 + salt * 7) % (vocab - 1)).collect()
+}
+
+/// Four zoo configs spanning MHA, GQA, wide-FFN GQA and MLA+MoE.
+fn models() -> Vec<Transformer> {
+    [zoo::llama2_tiny(), zoo::llama3_tiny(), zoo::qwen_tiny(), zoo::deepseek_tiny()]
+        .into_iter()
+        .enumerate()
+        .map(|(i, cfg)| Transformer::init(cfg, 400 + i as u64))
+        .collect()
+}
+
+#[test]
+fn f32_cached_prefill_is_bitwise_identical_to_full_forward() {
+    for (mi, m) in models().iter().enumerate() {
+        let p = prompt(m.cfg.vocab, 12, mi);
+        let full = m.forward(&[p.clone()], None, None, None);
+        let mut cache = KvCache::new(&m.cfg, KvCacheType::F32);
+        let cached = {
+            let mut seqs = [CachedSeq { tokens: &p, cache: &mut cache }];
+            m.forward_cached(&mut seqs)
+        };
+        assert_eq!(bits(&full), bits(&cached), "{}", m.cfg.name);
+    }
+}
+
+#[test]
+fn hif4_cached_prefill_matches_kv_codec_reference_bitwise() {
+    let policy = QuantPolicy { act: None, kv: Some(KvCacheType::HiF4) };
+    for (mi, m) in models().iter().enumerate() {
+        let p = prompt(m.cfg.vocab, 12, mi);
+        let reference = m.forward(&[p.clone()], Some(&policy), None, None);
+        let mut cache = KvCache::new(&m.cfg, KvCacheType::HiF4);
+        let cached = {
+            let mut seqs = [CachedSeq { tokens: &p, cache: &mut cache }];
+            m.forward_cached(&mut seqs)
+        };
+        assert_eq!(bits(&reference), bits(&cached), "{}", m.cfg.name);
+    }
+}
+
+#[test]
+fn greedy_decode_is_token_identical_to_full_recompute_f32() {
+    for (mi, m) in models().iter().enumerate() {
+        let p = prompt(m.cfg.vocab, 8, mi);
+        let cached = m.generate_greedy(&p, N_NEW, KvCacheType::F32);
+        let full = m.generate_greedy_full_recompute(&p, N_NEW, KvCacheType::F32);
+        assert_eq!(cached, full, "{}", m.cfg.name);
+    }
+}
+
+#[test]
+fn greedy_decode_is_token_identical_to_full_recompute_hif4() {
+    for (mi, m) in models().iter().enumerate() {
+        let p = prompt(m.cfg.vocab, 8, mi);
+        let cached = m.generate_greedy(&p, N_NEW, KvCacheType::HiF4);
+        let full = m.generate_greedy_full_recompute(&p, N_NEW, KvCacheType::HiF4);
+        assert_eq!(cached, full, "{}", m.cfg.name);
+    }
+}
+
+#[test]
+fn greedy_decode_parity_survives_prepacked_fixed_point_linears() {
+    // The serving configuration: real-quantized weights (decode-once
+    // planes, fixed-point QGEMM) under both cache kinds.
+    for (mi, mut m) in models().into_iter().enumerate() {
+        m.prepack_quantized_weights(Format::HiF4);
+        let p = prompt(m.cfg.vocab, 8, mi);
+        for kind in [KvCacheType::F32, KvCacheType::HiF4] {
+            let cached = m.generate_greedy(&p, N_NEW, kind);
+            let full = m.generate_greedy_full_recompute(&p, N_NEW, kind);
+            assert_eq!(cached, full, "{} {kind:?}", m.cfg.name);
+        }
+    }
+}
+
+#[test]
+fn greedy_decode_parity_holds_for_any_thread_count() {
+    // The cached forward inherits the kernels' any-thread-count
+    // determinism contract, so flipping the process knob mid-suite is
+    // safe (results are invariant by construction) and this test needs
+    // no serialization against the others.
+    let m = Transformer::init(zoo::llama3_tiny(), 404);
+    let p = prompt(m.cfg.vocab, 8, 0);
+    let before = threadpool::threads();
+    let mut results: Vec<(Vec<usize>, Vec<usize>)> = Vec::new();
+    for t in [1usize, 2, 5] {
+        threadpool::set_threads(t);
+        results.push((
+            m.generate_greedy(&p, N_NEW, KvCacheType::F32),
+            m.generate_greedy(&p, N_NEW, KvCacheType::HiF4),
+        ));
+    }
+    threadpool::set_threads(before);
+    for (f, h) in &results[1..] {
+        assert_eq!(f, &results[0].0, "f32 decode drifted across thread counts");
+        assert_eq!(h, &results[0].1, "HiF4 decode drifted across thread counts");
+    }
+}
+
+#[test]
+fn hif4_cache_page_is_smaller_than_f32() {
+    let m = Transformer::init(zoo::llama3_tiny(), 405);
+    let p = prompt(m.cfg.vocab, 16, 1);
+    let mut f32c = KvCache::new(&m.cfg, KvCacheType::F32);
+    let mut hc = KvCache::new(&m.cfg, KvCacheType::HiF4);
+    for cache in [&mut f32c, &mut hc] {
+        let mut seqs = [CachedSeq { tokens: &p, cache }];
+        m.forward_cached(&mut seqs);
+    }
+    assert_eq!(f32c.len(), p.len());
+    assert_eq!(hc.len(), p.len());
+    assert!(
+        hc.resident_bytes() < f32c.resident_bytes(),
+        "HiF4 planes ({}) must beat f32 ({}) resident",
+        hc.resident_bytes(),
+        f32c.resident_bytes()
+    );
+    assert!(
+        hc.wire_bytes() * 2 < f32c.wire_bytes(),
+        "the 4.5-bit unit wire form ({}) must be far below f32 ({})",
+        hc.wire_bytes(),
+        f32c.wire_bytes()
+    );
+}

@@ -194,7 +194,7 @@ fn end_to_end_tcp_serving() {
     let mut client = Client::connect(server.addr).unwrap();
     // Pipelined requests exercise the dynamic batcher.
     for id in 0..20u64 {
-        let req = Request { id, tokens: vec![1 + (id as usize % 7), 5, 9] };
+        let req = Request::next_token(id, vec![1 + (id as usize % 7), 5, 9]);
         client.send(&req).unwrap();
     }
     let mut got = Vec::new();
@@ -208,7 +208,7 @@ fn end_to_end_tcp_serving() {
     assert_eq!(got, (0..20).collect::<Vec<u64>>(), "every request answered once");
     assert!(server.metrics.batches.load(std::sync::atomic::Ordering::Relaxed) >= 1);
     // Determinism: identical contexts get identical tokens.
-    let r1 = client.call(&Request { id: 100, tokens: vec![3, 5, 9] }).unwrap();
-    let r2 = client.call(&Request { id: 101, tokens: vec![3, 5, 9] }).unwrap();
+    let r1 = client.call(&Request::next_token(100, vec![3, 5, 9])).unwrap();
+    let r2 = client.call(&Request::next_token(101, vec![3, 5, 9])).unwrap();
     assert_eq!(r1.token, r2.token);
 }

@@ -4,6 +4,7 @@
 //! once at startup and every request runs the fixed-point QGEMM.
 
 use hif4::formats::Format;
+use hif4::model::kv::KvCacheType;
 use hif4::runtime::artifact::Manifest;
 use hif4::runtime::native::transformer_from_store;
 use hif4::server::batcher::{BatchPolicy, Pending};
@@ -36,7 +37,7 @@ fn manifest_dir(tag: &str) -> PathBuf {
 }
 
 fn pending(id: u64, tokens: Vec<usize>) -> Pending<()> {
-    Pending { request: Request { id, tokens }, arrived: Instant::now(), reply: () }
+    Pending { request: Request::next_token(id, tokens), arrived: Instant::now(), reply: () }
 }
 
 #[test]
@@ -60,11 +61,12 @@ fn native_server_round_trips_and_matches_direct_execution() {
         policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) },
         workers: 2,
         seq: manifest.seq,
+        kv: KvCacheType::F32,
     };
     let mut server = Server::start_native(Arc::clone(&model), cfg, "127.0.0.1:0").unwrap();
     let mut client = Client::connect(server.addr).unwrap();
     for (i, t) in requests.iter().enumerate() {
-        let resp = client.call(&Request { id: i as u64, tokens: t.clone() }).unwrap();
+        let resp = client.call(&Request::next_token(i as u64, t.clone())).unwrap();
         assert_eq!(resp.id, i as u64);
         assert_eq!(resp.token, expected[i].token, "request {i} argmax");
         assert_eq!(resp.logprob, expected[i].logprob, "request {i} logprob");
@@ -90,16 +92,17 @@ fn native_server_serves_prepacked_hif4_deterministically() {
         policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
         workers: 2,
         seq: manifest.seq,
+        kv: KvCacheType::F32,
     };
     let server = Server::start_native(Arc::clone(&model), cfg, "127.0.0.1:0").unwrap();
     let mut client = Client::connect(server.addr).unwrap();
-    let req = Request { id: 1, tokens: vec![4, 8, 15, 16, 23, 42] };
+    let req = Request::next_token(1, vec![4, 8, 15, 16, 23, 42]);
     let first = client.call(&req).unwrap();
     assert!(first.logprob.is_finite());
     // Same request again (possibly on the other worker): byte-identical
     // answer — the packed planes are shared, read-only state.
     for i in 2..8u64 {
-        let resp = client.call(&Request { id: i, tokens: req.tokens.clone() }).unwrap();
+        let resp = client.call(&Request::next_token(i, req.tokens.clone())).unwrap();
         assert_eq!(resp.token, first.token);
         assert_eq!(resp.logprob.to_bits(), first.logprob.to_bits());
     }
@@ -107,4 +110,36 @@ fn native_server_serves_prepacked_hif4_deterministically() {
     let direct = run_batch_native(&model, &[pending(9, req.tokens.clone())], manifest.seq);
     assert_eq!(direct[0].token, first.token);
     assert_eq!(direct[0].logprob.to_bits(), first.logprob.to_bits());
+}
+
+#[test]
+fn native_server_streams_multi_token_generation() {
+    let dir = manifest_dir("stream");
+    write_manifest(&dir);
+    let manifest = Manifest::load(&dir).unwrap();
+    let store = manifest.init_params(13);
+    let model = Arc::new(transformer_from_store(&manifest, &store).unwrap());
+
+    let cfg = NativeServerConfig {
+        policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        workers: 1,
+        seq: manifest.seq,
+        kv: KvCacheType::F32,
+    };
+    let server = Server::start_native(Arc::clone(&model), cfg, "127.0.0.1:0").unwrap();
+    let mut client = Client::connect(server.addr).unwrap();
+    let prompt = vec![2usize, 4, 6];
+    let n_new = 5u16;
+    let stream = client.generate(&Request::generate(7, prompt.clone(), n_new)).unwrap();
+    assert_eq!(stream.len(), n_new as usize);
+    for (i, r) in stream.iter().enumerate() {
+        assert_eq!(r.id, 7);
+        assert_eq!(r.index, i as u16);
+        assert_eq!(r.of, n_new);
+        assert!((r.token as usize) < model.cfg.vocab);
+    }
+    // The streamed tokens are exactly the model's greedy continuation.
+    let want = model.generate_greedy(&prompt, n_new as usize, KvCacheType::F32);
+    let got: Vec<usize> = stream.iter().map(|r| r.token as usize).collect();
+    assert_eq!(got, want, "server stream must equal in-process greedy decode");
 }
