@@ -6,7 +6,7 @@
 //! ```
 
 use hif4::formats::rounding::RoundMode;
-use hif4::formats::{hif4 as hif4_fmt, mse, Format, QuantScheme};
+use hif4::formats::{hif4 as hif4_fmt, mse, QuantKind, QuantScheme};
 use hif4::tensor::{Matrix, Rng};
 use hif4::util::bench::Table;
 
@@ -37,10 +37,10 @@ fn main() {
         &["format", "group", "bits/val", "MSE", "vs HiF4"],
     );
     let base = {
-        let q = QuantScheme::direct(Format::HiF4).quant_dequant_vec(&x.data);
+        let q = QuantScheme::direct(QuantKind::HiF4).quant_dequant_vec(&x.data);
         mse(&x.data, &q)
     };
-    for f in [Format::HiF4, Format::Nvfp4, Format::Mxfp4, Format::Mx4, Format::VanillaBfp] {
+    for f in QuantKind::ALL {
         let q = QuantScheme::direct(f).quant_dequant_vec(&x.data);
         let e = mse(&x.data, &q);
         t.row(vec![
@@ -56,7 +56,7 @@ fn main() {
     println!("\n== the NVFP4 range failure HiF4 is designed around ==");
     let mut wide = vec![2f32.powi(-14); 64];
     wide[0] = 2f32.powi(13);
-    for f in [Format::HiF4, Format::Nvfp4] {
+    for f in [QuantKind::HiF4, QuantKind::Nvfp4] {
         let q = QuantScheme::direct(f).quant_dequant_vec(&wide);
         println!(
             "  {:6}: peak {:.3e} -> {:.3e}   tiny {:.3e} -> {:.3e}",

@@ -10,7 +10,7 @@
 //! ```
 
 use hif4::eval::tasks::{self, Task};
-use hif4::formats::{Format, QuantScheme};
+use hif4::formats::{QuantKind, QuantScheme};
 use hif4::runtime::artifact::{Manifest, ParamStore};
 use hif4::server::batcher::BatchPolicy;
 use hif4::server::protocol::Request;
@@ -49,7 +49,7 @@ fn main() -> anyhow::Result<()> {
         if quantize {
             // Weight half of the simulated quantization; activations are
             // quantized in-graph by the artifact's Pallas-derived HLO.
-            served.quantize_weights(&QuantScheme::direct(Format::HiF4));
+            served.quantize_weights(&QuantScheme::direct(QuantKind::HiF4));
         }
         let cfg = ServerConfig {
             artifact: artifact.into(),

@@ -90,6 +90,12 @@ QDQ_ROWS, QDQ_COLS = 8, 256
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--serve-format",
+        default=None,
+        help="optional manifest `format` key: default serving format for "
+        "`serve --native` (hif4|nvfp4|mxfp4|mx4|bfp); omit for dense bf16",
+    )
     args = ap.parse_args()
     os.makedirs(args.out_dir, exist_ok=True)
 
@@ -151,6 +157,12 @@ def main():
         f"rope_base {model.CONFIG['rope_base']}",
         f"qdq {QDQ_ROWS} {QDQ_COLS}",
     ]
+    # Optional default serving format for `serve --native` (any QuantKind
+    # spelling: hif4|nvfp4|mxfp4|mx4|bfp); the CLI --format overrides.
+    # Opt-in via --serve-format so a regenerated manifest never silently
+    # flips the no-flag default away from dense bf16.
+    if getattr(args, "serve_format", None):
+        lines.append(f"format {args.serve_format}")
     for n in names:
         dims = " ".join(str(d) for d in shapes[n])
         lines.append(f"param {n} {dims}")

@@ -12,6 +12,7 @@
 //! runs; the full run generates to a context length ≥ 128 where the
 //! O(T) cached path's win over full recompute is unambiguous.
 
+use hif4::formats::QuantKind;
 use hif4::model::kv::KvCacheType;
 use hif4::model::transformer::Transformer;
 use hif4::model::zoo;
@@ -37,8 +38,17 @@ fn main() {
         model.cfg.name
     );
 
+    // f32 + HiF4 always; the full run adds the other quantized cache
+    // kinds so the JSON carries a per-format decode row for each.
+    let mut kinds = vec![KvCacheType::F32, KvCacheType::HIF4];
+    if !quick {
+        kinds.extend(
+            [QuantKind::Nvfp4, QuantKind::Mxfp4, QuantKind::Mx4, QuantKind::Bfp]
+                .map(KvCacheType::Quant),
+        );
+    }
     let mut kind_json = Vec::new();
-    for kind in [KvCacheType::F32, KvCacheType::HiF4] {
+    for kind in kinds {
         // Correctness first: cached decode must equal full recompute.
         let cached_tokens = model.generate_greedy(&prompt, new_tokens, kind);
         let full_tokens = model.generate_greedy_full_recompute(&prompt, new_tokens, kind);

@@ -3,12 +3,9 @@
 //! bit-exactness against the dequantized reference, and measures simulator
 //! throughput of both flows and the quantized GEMMs built on them.
 
-use hif4::dotprod::qgemm::{
-    hif4_gemm_bt, hif4_gemm_bt_threads, nvfp4_gemm_bt, nvfp4_gemm_bt_threads, HiF4Matrix,
-    Nvfp4Matrix,
-};
-use hif4::dotprod::{hif4_flow, nvfp4_flow};
+use hif4::dotprod::{hif4_flow, nvfp4_flow, QuantizedMatrix};
 use hif4::formats::rounding::RoundMode;
+use hif4::formats::QuantKind;
 use hif4::tensor::{Matrix, Rng};
 use hif4::util::bench::{BenchRunner, Table};
 
@@ -72,16 +69,16 @@ fn main() {
     let (m, k, nn) = if quick { (16, 128, 16) } else { (64, 512, 64) };
     let a = Matrix::randn(m, k, 1.0, &mut rng);
     let b = Matrix::randn(nn, k, 1.0, &mut rng);
-    let qa = HiF4Matrix::quantize(&a, RoundMode::NearestEven);
-    let qb = HiF4Matrix::quantize(&b, RoundMode::NearestEven);
-    let na = Nvfp4Matrix::quantize(&a, RoundMode::NearestEven);
-    let nb = Nvfp4Matrix::quantize(&b, RoundMode::NearestEven);
+    let qa = QuantizedMatrix::quantize(QuantKind::HiF4, &a, RoundMode::NearestEven);
+    let qb = QuantizedMatrix::quantize(QuantKind::HiF4, &b, RoundMode::NearestEven);
+    let na = QuantizedMatrix::quantize(QuantKind::Nvfp4, &a, RoundMode::NearestEven);
+    let nb = QuantizedMatrix::quantize(QuantKind::Nvfp4, &b, RoundMode::NearestEven);
     let flops = (2 * m * k * nn) as u64;
     r.run(&format!("HiF4 qgemm {m}x{k}x{nn} (flops)"), Some(flops), || {
-        std::hint::black_box(hif4_gemm_bt(&qa, &qb));
+        std::hint::black_box(qa.qgemm_bt(&qb));
     });
     r.run(&format!("NVFP4 qgemm {m}x{k}x{nn} (flops)"), Some(flops), || {
-        std::hint::black_box(nvfp4_gemm_bt(&na, &nb));
+        std::hint::black_box(na.qgemm_bt(&nb));
     });
 
     // Parallel scaling of the blocked QGEMM: serial baseline vs the
@@ -92,20 +89,20 @@ fn main() {
     let nthreads = cores.min(4).max(2);
     println!("\nparallel scaling ({cores} cores available):");
     let s1 = r.run(&format!("HiF4 qgemm {m}x{k}x{nn} threads=1"), Some(flops), || {
-        std::hint::black_box(hif4_gemm_bt_threads(&qa, &qb, 1));
+        std::hint::black_box(qa.qgemm_bt_threads(&qb, 1));
     });
     let sn = r.run(&format!("HiF4 qgemm {m}x{k}x{nn} threads={nthreads}"), Some(flops), || {
-        std::hint::black_box(hif4_gemm_bt_threads(&qa, &qb, nthreads));
+        std::hint::black_box(qa.qgemm_bt_threads(&qb, nthreads));
     });
     println!(
         "  HiF4 qgemm speedup: {:.2}x on {nthreads} threads",
         s1.mean.as_secs_f64() / sn.mean.as_secs_f64()
     );
     let s1 = r.run(&format!("NVFP4 qgemm {m}x{k}x{nn} threads=1"), Some(flops), || {
-        std::hint::black_box(nvfp4_gemm_bt_threads(&na, &nb, 1));
+        std::hint::black_box(na.qgemm_bt_threads(&nb, 1));
     });
     let sn = r.run(&format!("NVFP4 qgemm {m}x{k}x{nn} threads={nthreads}"), Some(flops), || {
-        std::hint::black_box(nvfp4_gemm_bt_threads(&na, &nb, nthreads));
+        std::hint::black_box(na.qgemm_bt_threads(&nb, nthreads));
     });
     println!(
         "  NVFP4 qgemm speedup: {:.2}x on {nthreads} threads",

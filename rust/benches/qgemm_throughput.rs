@@ -1,25 +1,23 @@
-//! Flow-vs-packed quantized GEMM throughput at serving-like shapes.
+//! Flow-vs-packed quantized GEMM throughput at serving-like shapes,
+//! across **all five block formats** through the unified
+//! `QuantizedMatrix` API.
 //!
-//! Times the reference flow kernel against the decode-once packed kernel
-//! (single- and multi-thread), asserts their outputs are bit-identical,
-//! and writes `BENCH_qgemm.json` (GFLOP/s + speedups) so the perf
-//! trajectory is machine-readable across PRs. `HIF4_BENCH_QUICK=1`
-//! shrinks to one small shape for CI smoke runs (build + run, no
-//! thresholds enforced here).
+//! For every format: times the reference flow kernel against the
+//! decode-once packed kernel (single- and multi-thread), asserts their
+//! outputs are bit-identical, and writes `BENCH_qgemm.json` keyed by
+//! format spelling (GFLOP/s + speedups) so the perf trajectory is
+//! machine-readable across PRs. `HIF4_BENCH_QUICK=1` shrinks to one
+//! small shape for CI smoke runs (build + run, no thresholds enforced
+//! here).
 //!
 //! "Packed (end-to-end)" includes packing both operands fresh each call —
 //! the worst case for the packed path; "packed (prepacked)" reuses the
 //! planes, which is how the model/serving layers actually run (weights
 //! pack once, activations per call).
 
-use hif4::dotprod::packed::{
-    hif4_gemm_bt_packed_threads, nvfp4_gemm_bt_packed_threads, PackedHiF4Matrix,
-    PackedNvfp4Matrix,
-};
-use hif4::dotprod::qgemm::{
-    hif4_gemm_bt_flow_threads, nvfp4_gemm_bt_flow_threads, HiF4Matrix, Nvfp4Matrix,
-};
+use hif4::dotprod::QuantizedMatrix;
 use hif4::formats::rounding::RoundMode;
+use hif4::formats::QuantKind;
 use hif4::tensor::{Matrix, Rng};
 use hif4::util::threadpool;
 use std::time::Instant;
@@ -83,8 +81,10 @@ fn bits(m: &Matrix) -> Vec<u32> {
 fn main() {
     let quick = std::env::var("HIF4_BENCH_QUICK").is_ok();
     // Serving-like shape: decode activations (batch·seq = 512 rows) ×
-    // d_ff-scale weights over a 4096 reduction.
-    let (m, k, n) = if quick { (64, 512, 64) } else { (512, 4096, 512) };
+    // d_ff-scale weights over a 4096 reduction. The flow kernels are slow
+    // by design (per-element re-decode), so the full run uses a smaller
+    // shape per format than the old HiF4-only bench did.
+    let (m, k, n) = if quick { (64, 512, 64) } else { (256, 2048, 256) };
     let reps_flow = if quick { 3 } else { 1 };
     let reps_packed = if quick { 5 } else { 3 };
     let nthreads = threadpool::threads();
@@ -97,86 +97,67 @@ fn main() {
 
     println!("qgemm throughput — shape {m}x{k}x{n}, multi-thread = {nthreads}\n");
 
-    // ---- HiF4 ----
-    let qa = HiF4Matrix::quantize(&a, mode);
-    let qb = HiF4Matrix::quantize(&b, mode);
-    let pa = PackedHiF4Matrix::pack_threads(&qa, 1);
-    let pb = PackedHiF4Matrix::pack_threads(&qb, 1);
-    // Bit-identity of the two backends on the bench shape itself.
-    let c_flow = hif4_gemm_bt_flow_threads(&qa, &qb, nthreads);
-    let c_packed = hif4_gemm_bt_packed_threads(&pa, &pb, nthreads);
-    let identical = bits(&c_flow) == bits(&c_packed);
-    assert!(identical, "flow and packed kernels must agree bit for bit");
-    drop((c_flow, c_packed));
+    let mut format_json = Vec::new();
+    for kind in QuantKind::ALL {
+        let qa = QuantizedMatrix::quantize(kind, &a, mode);
+        let qb = QuantizedMatrix::quantize(kind, &b, mode);
+        let pa = qa.pack_threads(1);
+        let pb = qb.pack_threads(1);
+        // Bit-identity of the two backends on the bench shape itself —
+        // any mismatch aborts before the JSON is written, so a written
+        // `bit_identical` is true by construction.
+        let c_flow = qa.qgemm_bt_flow_threads(&qb, nthreads);
+        let c_packed = pa.qgemm_bt_threads(&pb, nthreads);
+        assert!(
+            bits(&c_flow) == bits(&c_packed),
+            "{kind}: flow and packed kernels must agree bit for bit"
+        );
+        drop((c_flow, c_packed));
 
-    let mut hif4_json = Vec::new();
-    for (label, threads) in [("single", 1usize), ("multi", nthreads)] {
-        let flow_s =
-            secs(reps_flow, || std::hint::black_box(hif4_gemm_bt_flow_threads(&qa, &qb, threads)));
-        let prepacked_s = secs(reps_packed, || {
-            std::hint::black_box(hif4_gemm_bt_packed_threads(&pa, &pb, threads))
-        });
-        // Pack cost at *this* thread count (the amortized one-time cost).
-        let pack_s = secs(reps_packed, || {
-            std::hint::black_box(PackedHiF4Matrix::pack_threads(&qa, threads));
-            std::hint::black_box(PackedHiF4Matrix::pack_threads(&qb, threads));
-        });
-        let e2e_s = secs(reps_packed, || {
-            let xa = PackedHiF4Matrix::pack_threads(&qa, threads);
-            let xb = PackedHiF4Matrix::pack_threads(&qb, threads);
-            std::hint::black_box(hif4_gemm_bt_packed_threads(&xa, &xb, threads));
-        });
-        let t = KernelTimes {
-            flow_s,
-            packed_s: e2e_s,
-            packed_prepacked_s: prepacked_s,
-            pack_s,
-        };
-        let fields = t.row(&format!("HiF4 {label} ({threads}t)"), flops);
-        hif4_json.push(format!("\"{label}\":{{\"threads\":{threads},{fields}}}"));
-    }
-
-    // ---- NVFP4 ----
-    let na = Nvfp4Matrix::quantize(&a, mode);
-    let nb = Nvfp4Matrix::quantize(&b, mode);
-    let npa = PackedNvfp4Matrix::pack_threads(&na, 1);
-    let npb = PackedNvfp4Matrix::pack_threads(&nb, 1);
-    let mut nvfp4_json = Vec::new();
-    for (label, threads) in [("single", 1usize), ("multi", nthreads)] {
-        let flow_s = secs(reps_flow, || {
-            std::hint::black_box(nvfp4_gemm_bt_flow_threads(&na, &nb, threads))
-        });
-        let prepacked_s = secs(reps_packed, || {
-            std::hint::black_box(nvfp4_gemm_bt_packed_threads(&npa, &npb, threads))
-        });
-        let pack_s = secs(reps_packed, || {
-            std::hint::black_box(PackedNvfp4Matrix::pack_threads(&na, threads));
-            std::hint::black_box(PackedNvfp4Matrix::pack_threads(&nb, threads));
-        });
-        let e2e_s = secs(reps_packed, || {
-            let xa = PackedNvfp4Matrix::pack_threads(&na, threads);
-            let xb = PackedNvfp4Matrix::pack_threads(&nb, threads);
-            std::hint::black_box(nvfp4_gemm_bt_packed_threads(&xa, &xb, threads));
-        });
-        let t = KernelTimes {
-            flow_s,
-            packed_s: e2e_s,
-            packed_prepacked_s: prepacked_s,
-            pack_s,
-        };
-        let fields = t.row(&format!("NVFP4 {label} ({threads}t)"), flops);
-        nvfp4_json.push(format!("\"{label}\":{{\"threads\":{threads},{fields}}}"));
+        let mut rows_json = Vec::new();
+        for (label, threads) in [("single", 1usize), ("multi", nthreads)] {
+            let flow_s =
+                secs(reps_flow, || std::hint::black_box(qa.qgemm_bt_flow_threads(&qb, threads)));
+            let prepacked_s =
+                secs(reps_packed, || std::hint::black_box(pa.qgemm_bt_threads(&pb, threads)));
+            // Pack cost at *this* thread count (the amortized one-time cost).
+            let pack_s = secs(reps_packed, || {
+                std::hint::black_box(qa.pack_threads(threads));
+                std::hint::black_box(qb.pack_threads(threads));
+            });
+            let e2e_s = secs(reps_packed, || {
+                let xa = qa.pack_threads(threads);
+                let xb = qb.pack_threads(threads);
+                std::hint::black_box(xa.qgemm_bt_threads(&xb, threads));
+            });
+            let t = KernelTimes {
+                flow_s,
+                packed_s: e2e_s,
+                packed_prepacked_s: prepacked_s,
+                pack_s,
+            };
+            let fields = t.row(&format!("{} {label} ({threads}t)", kind.name()), flops);
+            rows_json.push(format!("\"{label}\":{{\"threads\":{threads},{fields}}}"));
+        }
+        format_json.push(format!(
+            "\"{}\":{{\"label\":\"{}\",\"group\":{},\"bits_per_value\":{},{}}}",
+            kind.spelling(),
+            kind.name(),
+            kind.group(),
+            kind.bits_per_value(),
+            rows_json.join(",")
+        ));
+        println!();
     }
 
     let json = format!(
         "{{\n  \"bench\": \"qgemm_throughput\",\n  \"quick\": {quick},\n  \
          \"shape\": {{\"m\": {m}, \"k\": {k}, \"n\": {n}}},\n  \
-         \"bit_identical\": {identical},\n  \
-         \"hif4\": {{{}}},\n  \"nvfp4\": {{{}}}\n}}\n",
-        hif4_json.join(","),
-        nvfp4_json.join(",")
+         \"bit_identical\": true,\n  \
+         \"formats\": {{{}}}\n}}\n",
+        format_json.join(",")
     );
     let path = "BENCH_qgemm.json";
     std::fs::write(path, &json).expect("write BENCH_qgemm.json");
-    println!("\nwrote {path}");
+    println!("wrote {path}");
 }

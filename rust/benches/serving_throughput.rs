@@ -8,7 +8,7 @@
 //!   artifacts per batching policy.
 
 use hif4::dotprod::{set_kernel, Kernel};
-use hif4::formats::{Format, QuantScheme};
+use hif4::formats::{QuantKind, QuantScheme};
 use hif4::model::kv::KvCacheType;
 use hif4::model::transformer::Transformer;
 use hif4::model::zoo;
@@ -58,15 +58,18 @@ fn main() {
         &["engine", "kernel", "req/s", "mean lat", "mean batch"],
     );
     for (label, quantize, kernel) in [
-        ("native-bf16", false, Kernel::Packed),
-        ("native-hif4", true, Kernel::Flow),
-        ("native-hif4", true, Kernel::Packed),
+        ("native-bf16", None, Kernel::Packed),
+        ("native-hif4", Some(QuantKind::HiF4), Kernel::Flow),
+        ("native-hif4", Some(QuantKind::HiF4), Kernel::Packed),
+        // One of the formats the packed layer gained in the unified
+        // QuantTensor redesign, end to end through the server.
+        ("native-mxfp4", Some(QuantKind::Mxfp4), Kernel::Packed),
     ] {
         let mut model = base.clone();
-        if quantize {
+        if let Some(kind) = quantize {
             // Real-quantized serving: weight planes pack once, here, and
             // the dense f32 planes are freed like a real deployment.
-            model.prepack_quantized_weights(Format::HiF4);
+            model.prepack_quantized_weights(kind);
             model.release_dense_weights();
         }
         set_kernel(kernel);
@@ -110,8 +113,9 @@ fn main() {
     for artifact in ["fwd_bf16.hlo.txt", "fwd_hif4.hlo.txt", "fwd_nvfp4.hlo.txt"] {
         for max_batch in [1usize, 8] {
             let mut served = params.clone();
-            if artifact != "fwd_bf16.hlo.txt" {
-                let fmt = if artifact.contains("hif4") { Format::HiF4 } else { Format::Nvfp4 };
+            // The shared artifact-name sniffing rule (same as the server's
+            // metrics tag), so rows can never mislabel their format.
+            if let Some(fmt) = QuantKind::from_artifact_name(artifact) {
                 served.quantize_weights(&QuantScheme::direct(fmt));
             }
             let cfg = ServerConfig {

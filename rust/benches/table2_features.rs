@@ -1,7 +1,7 @@
 //! Table II regeneration: typical values and features for HiF4 and NVFP4,
 //! derived from the format constants and verified by quantizing probes.
 
-use hif4::formats::{hif4 as hif4_fmt, nvfp4, Format, QuantScheme};
+use hif4::formats::{hif4 as hif4_fmt, nvfp4, QuantKind, QuantScheme};
 use hif4::util::bench::Table;
 
 fn main() {
@@ -48,11 +48,11 @@ fn main() {
     // nonzero code).
     println!("\nverification by roundtrip:");
     for (name, fmt, probe, peak) in [
-        ("HiF4 max", Format::HiF4, hif4_fmt::MAX_POSITIVE, None),
-        ("HiF4 min", Format::HiF4, hif4_fmt::MIN_POSITIVE, None),
-        ("NVFP4 max", Format::Nvfp4, nvfp4::MAX_POSITIVE, None),
+        ("HiF4 max", QuantKind::HiF4, hif4_fmt::MAX_POSITIVE, None),
+        ("HiF4 min", QuantKind::HiF4, hif4_fmt::MIN_POSITIVE, None),
+        ("NVFP4 max", QuantKind::Nvfp4, nvfp4::MAX_POSITIVE, None),
         // Scale = E4M3 min subnormal 2^-9 requires amax = 6×2^-9.
-        ("NVFP4 min", Format::Nvfp4, nvfp4::MIN_POSITIVE, Some(6.0 * 2f32.powi(-9))),
+        ("NVFP4 min", QuantKind::Nvfp4, nvfp4::MIN_POSITIVE, Some(6.0 * 2f32.powi(-9))),
     ] {
         let scheme = QuantScheme::direct(fmt);
         let mut v = vec![0f32; fmt.group()];

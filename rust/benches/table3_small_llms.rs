@@ -7,6 +7,7 @@
 //! training/eval for smoke runs.
 
 use hif4::eval::tasks::Task;
+use hif4::formats::QuantKind;
 use hif4::model::zoo;
 use hif4::quant::experiment::{run_model, ExperimentConfig, ModelBlock, QuantType};
 use hif4::util::bench::Table;
@@ -25,10 +26,10 @@ fn main() {
     };
     let types = [
         QuantType::Bf16,
-        QuantType::Nvfp4,
-        QuantType::Nvfp4Pts,
-        QuantType::HiF4,
-        QuantType::HiF4HiGptq,
+        QuantType::Direct(QuantKind::Nvfp4),
+        QuantType::Pts(QuantKind::Nvfp4),
+        QuantType::Direct(QuantKind::HiF4),
+        QuantType::HiGptq(QuantKind::HiF4),
     ];
     let suite = Task::small_suite();
 

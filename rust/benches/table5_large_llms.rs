@@ -4,6 +4,7 @@
 //! FFN_linear per the paper's §IV.C policy.
 
 use hif4::eval::tasks::Task;
+use hif4::formats::QuantKind;
 use hif4::model::zoo;
 use hif4::quant::experiment::{run_model, ExperimentConfig, QuantType};
 use hif4::util::bench::Table;
@@ -21,7 +22,12 @@ fn main() {
         ExperimentConfig { train_steps: 320, ..Default::default() }
     };
     // Table V evaluates direct-cast types only (no HiGPTQ rows).
-    let types = [QuantType::Bf16, QuantType::Nvfp4, QuantType::Nvfp4Pts, QuantType::HiF4];
+    let types = [
+        QuantType::Bf16,
+        QuantType::Direct(QuantKind::Nvfp4),
+        QuantType::Pts(QuantKind::Nvfp4),
+        QuantType::Direct(QuantKind::HiF4),
+    ];
     let suite = Task::large_suite();
 
     let mut header: Vec<String> = vec!["Model".into(), "A-W Quant Type".into()];

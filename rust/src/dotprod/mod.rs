@@ -20,26 +20,30 @@
 //! quantized value is a small dyadic rational times its scales).
 //!
 //! Two software *schedules* of the same datapaths exist: the element-wise
-//! flow kernels above (the reference) and the decode-once [`packed`]
-//! operand planes (the fast path). The process-wide [`kernel`] selector
-//! picks which one the [`qgemm`] entry points run; both are bit-identical,
-//! so it is purely a performance knob.
+//! flow kernels above (the reference) and the decode-once packed operand
+//! planes (the fast path). Both live behind the **unified quantized-tensor
+//! API** of [`quant_tensor`] — one [`QuantizedMatrix`] /
+//! [`PackedQuantizedMatrix`] surface over all five block formats, with the
+//! process-wide [`kernel`] selector picking which schedule
+//! [`QuantizedMatrix::qgemm_bt`] runs; both are bit-identical, so it is
+//! purely a performance knob.
 
 pub mod hif4_flow;
 pub mod nvfp4_flow;
-pub mod packed;
-pub mod qgemm;
+pub mod quant_tensor;
+
+pub use quant_tensor::{BlockFormat, PackedQuantizedMatrix, QuantizedMatrix};
 
 use std::sync::atomic::{AtomicU8, Ordering};
 
 /// Which software schedule the quantized GEMM entry points run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Kernel {
-    /// Reference: every unit pair through the element-wise PE flow
+    /// Reference: every group pair through the element-wise PE flow
     /// (re-decodes nibbles/micro-exponents per output element).
     Flow,
     /// Fast path (default): decode-once integer operand planes
-    /// ([`packed`]) with a straight `i8` inner dot.
+    /// ([`quant_tensor::PackedQuantMat`]) with a straight `i8` inner dot.
     Packed,
 }
 
@@ -99,12 +103,12 @@ pub fn set_kernel(k: Kernel) {
 /// the Fig-4 bench.
 ///
 /// These counts describe the *hardware datapath* of Fig 4. The software
-/// [`packed`] kernel is a different **schedule** of the same datapath —
-/// it performs exactly the same element multiplies and integer-tree adds
-/// per 64-length dot (the micro-exponent shifts are merely pre-applied at
-/// pack time), so these inventories, and the [`crate::hwcost`] area/power
-/// tables derived from them, remain the hardware story regardless of
-/// which software backend ran.
+/// packed kernel ([`quant_tensor`]) is a different **schedule** of the
+/// same datapath — it performs exactly the same element multiplies and
+/// integer-tree adds per 64-length dot (the micro-exponent shifts are
+/// merely pre-applied at pack time), so these inventories, and the
+/// [`crate::hwcost`] area/power tables derived from them, remain the
+/// hardware story regardless of which software backend ran.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct FlowStats {
     /// 5-bit × 5-bit element multipliers (shared with the INT8 path).

@@ -1,0 +1,1170 @@
+//! The unified quantized-tensor API: **one** format-generic
+//! quantize/pack/GEMM surface over every block format the paper evaluates.
+//!
+//! Three layers, bottom to top:
+//!
+//! * [`BlockFormat`] — the per-format codec trait: group size, PE
+//!   structure, the integer-lane transform, and the bit-exact flow
+//!   partial. Implemented by five zero-sized codecs ([`HiF4Fmt`],
+//!   [`Nvfp4Fmt`], [`Mxfp4Fmt`], [`Mx4Fmt`], [`BfpFmt`]).
+//! * [`QuantMat<F>`] / [`PackedQuantMat<F>`] — the single generic matrix
+//!   implementation (group storage, decode-once integer operand planes)
+//!   plus the generic flow/packed GEMM kernels. Monomorphized per format,
+//!   so the inner loops stay as tight as the old hand-written per-format
+//!   kernels.
+//! * [`QuantizedMatrix`] / [`PackedQuantizedMatrix`] — the
+//!   enum-dispatched surface keyed by [`QuantKind`] that every consumer
+//!   (model linears, KV cache, serving, CLI, benches) programs against:
+//!   `quantize`, `dequantize`, `pack`, `qgemm_bt`, `wire_bytes`,
+//!   `assert_geometry`.
+//!
+//! ## Why the packed planes are bit-identical to the flows
+//!
+//! Every format here is **group-scaled and integer-exact**: a group
+//! decodes to `scale · lane_i / LANE_UNIT` where `lane_i` is a small
+//! signed integer (micro-exponents, where the format has them, are
+//! absorbed into the lanes at pack time — left shifts distribute over
+//! exact integer sums, the PR 2 absorption trick). One group-pair partial
+//! is therefore
+//!
+//! ```text
+//! partial = (scale_a · scale_b) · (Σ lane_a_i · lane_b_i) / LANE_UNIT²
+//! ```
+//!
+//! computed identically by the element-wise flow (re-extracting lanes per
+//! output element) and by the decode-once planes — and, because every
+//! factor is a small dyadic rational, identically equal to the
+//! dequantized-f64 reference walk. Per format:
+//!
+//! | codec       | lanes                         | |lane| | partial denom |
+//! |-------------|-------------------------------|--------|---------------|
+//! | [`HiF4Fmt`] | S1P2 quarters `<< (l2 + l3)`  | ≤ 28   | 16            |
+//! | [`Nvfp4Fmt`]| E2M1 halves (S3P1)            | ≤ 12   | 4             |
+//! | [`Mxfp4Fmt`]| E2M1 halves (S3P1)            | ≤ 12   | 4             |
+//! | [`Mx4Fmt`]  | S1P1 halves `<< (1 − micro)`  | ≤ 6    | 16            |
+//! | [`BfpFmt`]  | S1P2 quarters                 | ≤ 7    | 16            |
+//!
+//! GEMM accumulation replays the Fig-4 PE structure: HiF4 fills a
+//! 64-length PE with one group (partials accumulate in ascending K
+//! order); NVFP4 reduces [`BlockFormat::GROUPS_PER_PE`] = 4 partials
+//! through the balanced `(p0+p1)+(p2+p3)` tree of
+//! [`super::nvfp4_flow::dot64`], tail groups staying on the single-group
+//! fixed-point path. MXFP4/MX4/BFP have no published PE flow; they use
+//! the direct per-group accumulation (`GROUPS_PER_PE = 1`). Every output
+//! element sums its partials on one thread in ascending K order, so
+//! results are **bit-identical for any thread count and either kernel
+//! backend** (pinned by `tests/packed_parity.rs` and
+//! `tests/parallel_parity.rs`).
+
+use super::{hif4_flow, nvfp4_flow, Kernel};
+use crate::formats::bfp::{self, BfpGroup};
+use crate::formats::hif4::{self, HiF4Unit};
+use crate::formats::mx4::{self, Mx4Group};
+use crate::formats::mxfp4::{self, Mxfp4Group};
+use crate::formats::nvfp4::{self, Nvfp4Group};
+use crate::formats::rounding::RoundMode;
+use crate::formats::QuantKind;
+use crate::tensor::Matrix;
+use crate::util::threadpool::{self, parallel_row_bands, parallel_row_bands2};
+use std::marker::PhantomData;
+
+/// B-rows per cache block of the quantized GEMM kernels.
+pub(crate) const JB: usize = 16;
+/// K-groups per cache block (a multiple of every format's
+/// [`BlockFormat::GROUPS_PER_PE`], so PE boundaries never straddle a
+/// block edge).
+pub(crate) const UB: usize = 16;
+
+/// Flop-equivalents per element of the pack transform (lane extract,
+/// micro-exponent shift, store) — weights `threads_for` so packing
+/// mid-sized operands still fans out.
+const PACK_WORK_PER_ELEM: usize = 4;
+
+// ---------------------------------------------------------------------------
+// The per-format codec trait + five codecs
+// ---------------------------------------------------------------------------
+
+/// Per-format codec behind the unified quantized-tensor API: everything
+/// the generic matrix/GEMM layer needs to know about one block format.
+///
+/// Invariants every codec upholds (asserted by the parity suites):
+///
+/// * `decode(group) == scale · lane_i / LANE_UNIT` element-wise, with the
+///   exact `f64` scale returned by [`BlockFormat::group_plane`] (`NaN`
+///   for a NaN-poisoned group — the only NaN channel any format has);
+/// * [`BlockFormat::dot_flow`] equals the packed-plane partial
+///   `(scale_a·scale_b) · Σ lane_a·lane_b / LANE_UNIT²` bit for bit;
+/// * lanes fit `i8`.
+pub trait BlockFormat: Send + Sync + 'static {
+    /// The packed group type from [`crate::formats`].
+    type Group: Clone + Send + Sync;
+    /// The enum key this codec implements.
+    const KIND: QuantKind;
+    /// Elements per group.
+    const GROUP: usize;
+    /// Group partials reduced per 64-length PE through a balanced FP tree
+    /// (1 = direct ascending accumulation).
+    const GROUPS_PER_PE: usize;
+    /// Integer-lane unit: `value = scale · lane / LANE_UNIT` (2 = lanes
+    /// are halves, 4 = quarters). The group-pair partial divides by
+    /// `LANE_UNIT²`.
+    const LANE_UNIT: f64;
+
+    /// Quantize exactly `GROUP` values into a packed group.
+    fn quantize_group(v: &[f32], mode: RoundMode) -> Self::Group;
+    /// Decode the whole group into `out[..GROUP]` (the format's own
+    /// decode, shared with the simulated-quantization path).
+    fn decode_group(g: &Self::Group, out: &mut [f32]);
+    /// Fill the group's `GROUP` integer lanes (micro-exponents absorbed);
+    /// return the exact `f64` scale (`NaN` channel included).
+    fn group_plane(g: &Self::Group, lanes: &mut [i8]) -> f64;
+    /// The reference flow partial for one group pair: re-extracts lanes
+    /// per call, bit-identical to the packed partial.
+    fn dot_flow(a: &Self::Group, b: &Self::Group) -> f64;
+}
+
+/// HiF4 codec: 64-element units, three-level scaling, the paper's format.
+#[derive(Debug, Clone, Copy)]
+pub struct HiF4Fmt;
+
+impl BlockFormat for HiF4Fmt {
+    type Group = HiF4Unit;
+    const KIND: QuantKind = QuantKind::HiF4;
+    const GROUP: usize = hif4::GROUP;
+    const GROUPS_PER_PE: usize = 1;
+    const LANE_UNIT: f64 = 4.0;
+
+    fn quantize_group(v: &[f32], mode: RoundMode) -> HiF4Unit {
+        hif4::quantize(v, mode)
+    }
+
+    fn decode_group(g: &HiF4Unit, out: &mut [f32]) {
+        g.decode_all(out);
+    }
+
+    fn group_plane(g: &HiF4Unit, lanes: &mut [i8]) -> f64 {
+        for (i, lane) in lanes.iter_mut().enumerate().take(Self::GROUP) {
+            // Absorb level 2 *and* level 3: q ≤ 7 shifted by ≤ 2 stays ≤ 28.
+            *lane = g.elem(i).signed_q() << (g.l2(i) + g.l3(i));
+        }
+        if g.scale.is_nan() {
+            f64::NAN
+        } else {
+            g.scale.to_f32() as f64
+        }
+    }
+
+    fn dot_flow(a: &HiF4Unit, b: &HiF4Unit) -> f64 {
+        hif4_flow::dot(a, b)
+    }
+}
+
+/// NVFP4 codec: 16-element groups, E4M3 scale, four groups per PE.
+#[derive(Debug, Clone, Copy)]
+pub struct Nvfp4Fmt;
+
+impl BlockFormat for Nvfp4Fmt {
+    type Group = Nvfp4Group;
+    const KIND: QuantKind = QuantKind::Nvfp4;
+    const GROUP: usize = nvfp4::GROUP;
+    const GROUPS_PER_PE: usize = nvfp4_flow::GROUPS_PER_PE;
+    const LANE_UNIT: f64 = 2.0;
+
+    fn quantize_group(v: &[f32], mode: RoundMode) -> Nvfp4Group {
+        nvfp4::quantize(v, mode)
+    }
+
+    fn decode_group(g: &Nvfp4Group, out: &mut [f32]) {
+        g.decode_all(out);
+    }
+
+    fn group_plane(g: &Nvfp4Group, lanes: &mut [i8]) -> f64 {
+        for (i, lane) in lanes.iter_mut().enumerate().take(Self::GROUP) {
+            *lane = g.elem(i).signed_halves();
+        }
+        if g.scale.is_nan() {
+            f64::NAN
+        } else {
+            g.scale.to_f32() as f64
+        }
+    }
+
+    fn dot_flow(a: &Nvfp4Group, b: &Nvfp4Group) -> f64 {
+        nvfp4_flow::dot_group(a, b)
+    }
+}
+
+/// MXFP4 codec: 32-element groups, power-of-two E8M0 scale, E2M1 elements.
+#[derive(Debug, Clone, Copy)]
+pub struct Mxfp4Fmt;
+
+impl BlockFormat for Mxfp4Fmt {
+    type Group = Mxfp4Group;
+    const KIND: QuantKind = QuantKind::Mxfp4;
+    const GROUP: usize = mxfp4::GROUP;
+    const GROUPS_PER_PE: usize = 1;
+    const LANE_UNIT: f64 = 2.0;
+
+    fn quantize_group(v: &[f32], mode: RoundMode) -> Mxfp4Group {
+        mxfp4::quantize(v, mode)
+    }
+
+    fn decode_group(g: &Mxfp4Group, out: &mut [f32]) {
+        g.decode_all(out);
+    }
+
+    fn group_plane(g: &Mxfp4Group, lanes: &mut [i8]) -> f64 {
+        for (i, lane) in lanes.iter_mut().enumerate().take(Self::GROUP) {
+            *lane = g.elem(i).signed_halves();
+        }
+        if g.scale.is_nan() {
+            f64::NAN
+        } else {
+            g.scale.to_f32() as f64
+        }
+    }
+
+    fn dot_flow(a: &Mxfp4Group, b: &Mxfp4Group) -> f64 {
+        if a.scale.is_nan() || b.scale.is_nan() {
+            return f64::NAN;
+        }
+        let mut sum: i32 = 0;
+        for i in 0..Self::GROUP {
+            sum += (a.elem(i).signed_halves() as i32) * (b.elem(i).signed_halves() as i32);
+        }
+        let sp = (a.scale.to_f32() as f64) * (b.scale.to_f32() as f64);
+        sp * (sum as f64) / 4.0
+    }
+}
+
+/// MX4 codec: 16-element groups, shared E8M0 + per-pair 1-bit
+/// micro-exponents absorbed into the lanes (S1P1 halves `<< (1 − micro)`).
+#[derive(Debug, Clone, Copy)]
+pub struct Mx4Fmt;
+
+impl Mx4Fmt {
+    /// Micro-exponent-absorbed lane in quarter-units: a set micro bit
+    /// halves the sub-group's scale, so `value = scale · lane / 4` with
+    /// `lane = halves << (1 − micro)` (magnitude ≤ 3·2 = 6).
+    #[inline]
+    fn lane(g: &Mx4Group, i: usize) -> i8 {
+        g.signed_h(i) << (1 - g.micro_down(i))
+    }
+}
+
+impl BlockFormat for Mx4Fmt {
+    type Group = Mx4Group;
+    const KIND: QuantKind = QuantKind::Mx4;
+    const GROUP: usize = mx4::GROUP;
+    const GROUPS_PER_PE: usize = 1;
+    const LANE_UNIT: f64 = 4.0;
+
+    fn quantize_group(v: &[f32], mode: RoundMode) -> Mx4Group {
+        mx4::quantize(v, mode)
+    }
+
+    fn decode_group(g: &Mx4Group, out: &mut [f32]) {
+        g.decode_all(out);
+    }
+
+    fn group_plane(g: &Mx4Group, lanes: &mut [i8]) -> f64 {
+        for (i, lane) in lanes.iter_mut().enumerate().take(Self::GROUP) {
+            *lane = Self::lane(g, i);
+        }
+        if g.scale.is_nan() {
+            f64::NAN
+        } else {
+            g.scale.to_f32() as f64
+        }
+    }
+
+    fn dot_flow(a: &Mx4Group, b: &Mx4Group) -> f64 {
+        if a.scale.is_nan() || b.scale.is_nan() {
+            return f64::NAN;
+        }
+        let mut sum: i32 = 0;
+        for i in 0..Self::GROUP {
+            sum += (Self::lane(a, i) as i32) * (Self::lane(b, i) as i32);
+        }
+        let sp = (a.scale.to_f32() as f64) * (b.scale.to_f32() as f64);
+        sp * (sum as f64) / 16.0
+    }
+}
+
+/// Vanilla-BFP codec: 16-element groups, one shared E8M0, S1P2 elements.
+#[derive(Debug, Clone, Copy)]
+pub struct BfpFmt;
+
+impl BlockFormat for BfpFmt {
+    type Group = BfpGroup;
+    const KIND: QuantKind = QuantKind::Bfp;
+    const GROUP: usize = bfp::GROUP;
+    const GROUPS_PER_PE: usize = 1;
+    const LANE_UNIT: f64 = 4.0;
+
+    fn quantize_group(v: &[f32], mode: RoundMode) -> BfpGroup {
+        bfp::quantize(v, mode)
+    }
+
+    fn decode_group(g: &BfpGroup, out: &mut [f32]) {
+        g.decode_all(out);
+    }
+
+    fn group_plane(g: &BfpGroup, lanes: &mut [i8]) -> f64 {
+        for (i, lane) in lanes.iter_mut().enumerate().take(Self::GROUP) {
+            *lane = g.elem(i).signed_q();
+        }
+        if g.scale.is_nan() {
+            f64::NAN
+        } else {
+            g.scale.to_f32() as f64
+        }
+    }
+
+    fn dot_flow(a: &BfpGroup, b: &BfpGroup) -> f64 {
+        if a.scale.is_nan() || b.scale.is_nan() {
+            return f64::NAN;
+        }
+        let mut sum: i32 = 0;
+        for i in 0..Self::GROUP {
+            sum += (a.elem(i).signed_q() as i32) * (b.elem(i).signed_q() as i32);
+        }
+        let sp = (a.scale.to_f32() as f64) * (b.scale.to_f32() as f64);
+        sp * (sum as f64) / 16.0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The generic matrix + packed planes
+// ---------------------------------------------------------------------------
+
+/// A matrix quantized into `F` groups along its rows (row-major; each row
+/// padded to a multiple of [`BlockFormat::GROUP`]). The single generic
+/// implementation behind every [`QuantizedMatrix`] variant.
+#[derive(Debug, Clone)]
+pub struct QuantMat<F: BlockFormat> {
+    pub rows: usize,
+    pub cols: usize,
+    pub groups_per_row: usize,
+    pub groups: Vec<F::Group>,
+}
+
+impl<F: BlockFormat> QuantMat<F> {
+    /// Quantize a row-major matrix along its rows (row-parallel with the
+    /// process-default thread count; rows quantize independently, so the
+    /// result is identical for any count).
+    pub fn quantize(m: &Matrix, mode: RoundMode) -> QuantMat<F> {
+        let work = m.rows * m.cols * threadpool::QUANT_WORK_PER_ELEM;
+        Self::quantize_threads(m, mode, threadpool::threads_for(work))
+    }
+
+    /// [`QuantMat::quantize`] with an explicit thread count.
+    pub fn quantize_threads(m: &Matrix, mode: RoundMode, threads: usize) -> QuantMat<F> {
+        let gpr = m.cols.div_ceil(F::GROUP);
+        if m.rows == 0 || gpr == 0 {
+            return QuantMat { rows: m.rows, cols: m.cols, groups_per_row: gpr, groups: Vec::new() };
+        }
+        let zero_buf = vec![0f32; F::GROUP];
+        let zero = F::quantize_group(&zero_buf, mode);
+        let mut groups = vec![zero; m.rows * gpr];
+        parallel_row_bands(&mut groups, gpr, threads, |first_row, band| {
+            let mut buf = vec![0f32; F::GROUP];
+            for (i, grow) in band.chunks_mut(gpr).enumerate() {
+                let row = m.row(first_row + i);
+                for (g, group) in grow.iter_mut().enumerate() {
+                    let start = g * F::GROUP;
+                    let end = (start + F::GROUP).min(m.cols);
+                    buf[..end - start].copy_from_slice(&row[start..end]);
+                    buf[end - start..].fill(0.0);
+                    *group = F::quantize_group(&buf, mode);
+                }
+            }
+        });
+        QuantMat { rows: m.rows, cols: m.cols, groups_per_row: gpr, groups }
+    }
+
+    /// Check the rows/cols/groups bookkeeping is self-consistent: every
+    /// row carries `cols.div_ceil(GROUP)` groups (ragged tails are
+    /// zero-padded at quantize time — the single supported tail
+    /// handling). Every consumer that walks the group plane calls this,
+    /// so a hand-built matrix with a missing or surplus tail group fails
+    /// loudly and identically everywhere.
+    pub fn assert_geometry(&self) {
+        let need = self.cols.div_ceil(F::GROUP);
+        assert_eq!(
+            self.groups_per_row,
+            need,
+            "{} matrix geometry: {} cols need {} groups/row ({}-element groups, padded tail), \
+             got {}",
+            F::KIND,
+            self.cols,
+            need,
+            F::GROUP,
+            self.groups_per_row
+        );
+        assert_eq!(
+            self.groups.len(),
+            self.rows * self.groups_per_row,
+            "{} matrix geometry: {}×{} rows×groups/row needs {} groups, got {}",
+            F::KIND,
+            self.rows,
+            self.groups_per_row,
+            self.rows * self.groups_per_row,
+            self.groups.len()
+        );
+    }
+
+    /// Dequantize back to a dense matrix (zero-padding trimmed),
+    /// row-parallel with the process-default thread count.
+    pub fn dequantize(&self) -> Matrix {
+        let work = self.rows * self.cols * threadpool::DEQUANT_WORK_PER_ELEM;
+        self.dequantize_threads(threadpool::threads_for(work))
+    }
+
+    /// [`QuantMat::dequantize`] with an explicit thread count.
+    pub fn dequantize_threads(&self, threads: usize) -> Matrix {
+        self.assert_geometry();
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        if m.data.is_empty() {
+            return m;
+        }
+        let gpr = self.groups_per_row;
+        let cols = self.cols;
+        parallel_row_bands(&mut m.data, cols, threads, |first_row, band| {
+            let mut buf = vec![0f32; F::GROUP];
+            for (i, row) in band.chunks_mut(cols).enumerate() {
+                let groups = self.row_groups(first_row + i);
+                for g in 0..gpr {
+                    F::decode_group(&groups[g], &mut buf);
+                    let start = g * F::GROUP;
+                    let end = (start + F::GROUP).min(cols);
+                    row[start..end].copy_from_slice(&buf[..end - start]);
+                }
+            }
+        });
+        m
+    }
+
+    /// Serialized wire size in bytes (the format's canonical packed group
+    /// layout, padded tail groups included).
+    pub fn wire_bytes(&self) -> usize {
+        self.groups.len() * F::KIND.wire_bytes_group()
+    }
+
+    #[inline]
+    pub fn row_groups(&self, r: usize) -> &[F::Group] {
+        &self.groups[r * self.groups_per_row..(r + 1) * self.groups_per_row]
+    }
+}
+
+/// A [`QuantMat`] re-laid-out as decode-once integer operand planes: per
+/// group, `GROUP` contiguous micro-exponent-absorbed `i8` lanes plus the
+/// exact `f64` scale. Packing costs O(rows·cols) once; planes are reused
+/// across any number of GEMM calls (the model's real-quantized linears
+/// keep weight planes alive across every token).
+#[derive(Debug, Clone)]
+pub struct PackedQuantMat<F: BlockFormat> {
+    pub rows: usize,
+    pub cols: usize,
+    pub groups_per_row: usize,
+    lanes: Vec<i8>,
+    scales: Vec<f64>,
+    _fmt: PhantomData<F>,
+}
+
+impl<F: BlockFormat> PackedQuantMat<F> {
+    /// Pack with the process-default thread count (rows pack
+    /// independently, so the result is identical for any count).
+    pub fn pack(q: &QuantMat<F>) -> PackedQuantMat<F> {
+        Self::pack_threads(q, threadpool::threads_for(q.rows * q.cols * PACK_WORK_PER_ELEM))
+    }
+
+    /// [`PackedQuantMat::pack`] with an explicit thread count.
+    pub fn pack_threads(q: &QuantMat<F>, threads: usize) -> PackedQuantMat<F> {
+        q.assert_geometry();
+        let gpr = q.groups_per_row;
+        let n = q.rows * gpr;
+        let mut lanes = vec![0i8; n * F::GROUP];
+        let mut scales = vec![0f64; n];
+        if n > 0 {
+            let lane_stride = gpr * F::GROUP;
+            parallel_row_bands2(
+                &mut lanes,
+                lane_stride,
+                &mut scales,
+                gpr,
+                threads,
+                |first_row, lb, sb| {
+                    for (i, (lrow, srow)) in
+                        lb.chunks_mut(lane_stride).zip(sb.chunks_mut(gpr)).enumerate()
+                    {
+                        let groups = q.row_groups(first_row + i);
+                        for ((lg, s), g) in
+                            lrow.chunks_mut(F::GROUP).zip(srow.iter_mut()).zip(groups)
+                        {
+                            *s = F::group_plane(g, lg);
+                        }
+                    }
+                },
+            );
+        }
+        PackedQuantMat {
+            rows: q.rows,
+            cols: q.cols,
+            groups_per_row: gpr,
+            lanes,
+            scales,
+            _fmt: PhantomData,
+        }
+    }
+
+    /// Quantize + pack in one step (convenience for activation operands).
+    pub fn quantize(m: &Matrix, mode: RoundMode) -> PackedQuantMat<F> {
+        Self::pack(&QuantMat::quantize(m, mode))
+    }
+
+    /// Lane plane of row `r` (`groups_per_row × GROUP` lanes).
+    #[inline]
+    pub fn row_lanes(&self, r: usize) -> &[i8] {
+        let stride = self.groups_per_row * F::GROUP;
+        &self.lanes[r * stride..(r + 1) * stride]
+    }
+
+    /// Scale plane of row `r` (one entry per K group).
+    #[inline]
+    pub fn row_scales(&self, r: usize) -> &[f64] {
+        &self.scales[r * self.groups_per_row..(r + 1) * self.groups_per_row]
+    }
+
+    /// Wire size of the unit form the planes were packed from.
+    pub fn wire_bytes(&self) -> usize {
+        self.scales.len() * F::KIND.wire_bytes_group()
+    }
+
+    /// One group-pair partial against another packed matrix —
+    /// bit-identical to [`BlockFormat::dot_flow`] on the corresponding
+    /// groups (pinned by `tests/packed_parity.rs`).
+    pub fn dot_group(
+        &self,
+        r: usize,
+        g: usize,
+        other: &PackedQuantMat<F>,
+        ro: usize,
+        go: usize,
+    ) -> f64 {
+        let ia = &self.row_lanes(r)[g * F::GROUP..(g + 1) * F::GROUP];
+        let ib = &other.row_lanes(ro)[go * F::GROUP..(go + 1) * F::GROUP];
+        let sp = self.row_scales(r)[g] * other.row_scales(ro)[go];
+        sp * (lanes_idot(ia, ib) as f64) / (F::LANE_UNIT * F::LANE_UNIT)
+    }
+}
+
+/// Straight `i8 × i8 → i32` integer dot over one group's lanes — the
+/// entire fixed-point part of a group-pair partial. Integer adds are
+/// associative, so the optimizer is free to vectorize; the result is
+/// exact either way.
+#[inline]
+fn lanes_idot(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0i32;
+    for (x, y) in a.iter().zip(b) {
+        acc += (*x as i32) * (*y as i32);
+    }
+    acc
+}
+
+/// Balanced power-of-two reduction of `pe` partials — `(p0+p1)+(p2+p3)`
+/// for `pe = 4` (the [`nvfp4_flow::dot64`] tree), the bare partial for
+/// `pe = 1`.
+#[inline]
+fn pe_tree(pe: usize, partial: impl Fn(usize) -> f64) -> f64 {
+    debug_assert!(pe.is_power_of_two() && pe <= 8);
+    let mut p = [0f64; 8];
+    for (t, slot) in p[..pe].iter_mut().enumerate() {
+        *slot = partial(t);
+    }
+    let mut width = pe;
+    while width > 1 {
+        width /= 2;
+        for t in 0..width {
+            p[t] = p[2 * t] + p[2 * t + 1];
+        }
+    }
+    p[0]
+}
+
+// ---------------------------------------------------------------------------
+// The generic GEMM kernels
+// ---------------------------------------------------------------------------
+
+/// `C = A · Bᵀ` through the reference flow kernel: every group pair runs
+/// the element-wise fixed-point partial ([`BlockFormat::dot_flow`]),
+/// cache-blocked (JB × UB panels) and row-parallel. Bit-identical for
+/// every thread count.
+pub fn qgemm_bt_flow_threads<F: BlockFormat>(
+    a: &QuantMat<F>,
+    b_t: &QuantMat<F>,
+    threads: usize,
+) -> Matrix {
+    a.assert_geometry();
+    b_t.assert_geometry();
+    assert_eq!(a.cols, b_t.cols, "reduction dims must agree");
+    // Always-on (a debug-only check would vanish in release, and a PE
+    // window straddling a K-block edge silently changes the FP
+    // association): UB must be a PE multiple so the blocked schedule
+    // issues exactly the flat left-to-right walk's PE sequence.
+    let pe = F::GROUPS_PER_PE;
+    assert!(UB % pe == 0, "UB ({UB}) must be a multiple of {} PE groups ({pe})", F::KIND);
+    let (n, gpr) = (b_t.rows, a.groups_per_row);
+    let mut c = Matrix::zeros(a.rows, n);
+    if a.rows == 0 || n == 0 {
+        return c;
+    }
+    parallel_row_bands(&mut c.data, n, threads, |first_row, band| {
+        let rows = band.len() / n;
+        let mut accs = [0f64; JB];
+        for j0 in (0..n).step_by(JB) {
+            let jb = (j0 + JB).min(n) - j0;
+            for i in 0..rows {
+                let ag = a.row_groups(first_row + i);
+                accs[..jb].fill(0.0);
+                // K-blocked: a JB × UB panel of B groups stays hot while
+                // the A row streams; accumulation per (i, j) remains
+                // ascending-K with the per-format PE tree inside.
+                for u0 in (0..gpr).step_by(UB) {
+                    let u1 = (u0 + UB).min(gpr);
+                    for (jj, acc) in accs[..jb].iter_mut().enumerate() {
+                        let bg = b_t.row_groups(j0 + jj);
+                        let mut g = u0;
+                        while g + pe <= u1 {
+                            *acc += pe_tree(pe, |t| F::dot_flow(&ag[g + t], &bg[g + t]));
+                            g += pe;
+                        }
+                        while g < u1 {
+                            // Tail groups stay on the single-group
+                            // fixed-point path.
+                            *acc += F::dot_flow(&ag[g], &bg[g]);
+                            g += 1;
+                        }
+                    }
+                }
+                let crow = &mut band[i * n..(i + 1) * n];
+                for (jj, acc) in accs[..jb].iter().enumerate() {
+                    crow[j0 + jj] = *acc as f32;
+                }
+            }
+        }
+    });
+    c
+}
+
+/// `C = A · Bᵀ` over decode-once packed planes — the fast path, bit-
+/// identical to [`qgemm_bt_flow_threads`] on the matrices the planes were
+/// packed from (same blocking, same PE tree, same ascending-K order).
+pub fn qgemm_bt_packed_threads<F: BlockFormat>(
+    a: &PackedQuantMat<F>,
+    b_t: &PackedQuantMat<F>,
+    threads: usize,
+) -> Matrix {
+    assert_eq!(a.cols, b_t.cols, "reduction dims must agree");
+    // Always-on (a debug-only check would vanish in release, and a PE
+    // window straddling a K-block edge silently changes the FP
+    // association): UB must be a PE multiple so the blocked schedule
+    // issues exactly the flat left-to-right walk's PE sequence.
+    let pe = F::GROUPS_PER_PE;
+    assert!(UB % pe == 0, "UB ({UB}) must be a multiple of {} PE groups ({pe})", F::KIND);
+    let denom = F::LANE_UNIT * F::LANE_UNIT;
+    let (n, gpr) = (b_t.rows, a.groups_per_row);
+    let mut c = Matrix::zeros(a.rows, n);
+    if a.rows == 0 || n == 0 {
+        return c;
+    }
+    parallel_row_bands(&mut c.data, n, threads, |first_row, band| {
+        let rows = band.len() / n;
+        let mut accs = [0f64; JB];
+        for j0 in (0..n).step_by(JB) {
+            let jb = (j0 + JB).min(n) - j0;
+            for i in 0..rows {
+                let al = a.row_lanes(first_row + i);
+                let asc = a.row_scales(first_row + i);
+                accs[..jb].fill(0.0);
+                for u0 in (0..gpr).step_by(UB) {
+                    let u1 = (u0 + UB).min(gpr);
+                    for (jj, acc) in accs[..jb].iter_mut().enumerate() {
+                        let bl = b_t.row_lanes(j0 + jj);
+                        let bsc = b_t.row_scales(j0 + jj);
+                        // One group's partial: the flow's final stage, op
+                        // for op — (sa·sb) · Σ lanes / LANE_UNIT².
+                        let partial = |g: usize| -> f64 {
+                            let ia = &al[g * F::GROUP..(g + 1) * F::GROUP];
+                            let ib = &bl[g * F::GROUP..(g + 1) * F::GROUP];
+                            (asc[g] * bsc[g]) * (lanes_idot(ia, ib) as f64) / denom
+                        };
+                        let mut g = u0;
+                        while g + pe <= u1 {
+                            *acc += pe_tree(pe, |t| partial(g + t));
+                            g += pe;
+                        }
+                        while g < u1 {
+                            *acc += partial(g);
+                            g += 1;
+                        }
+                    }
+                }
+                let crow = &mut band[i * n..(i + 1) * n];
+                for (jj, acc) in accs[..jb].iter().enumerate() {
+                    crow[j0 + jj] = *acc as f32;
+                }
+            }
+        }
+    });
+    c
+}
+
+/// The dequantized-f64 reference partial for one group pair: decode both
+/// groups and walk the products in ascending element order. Every codec's
+/// flow/packed partials equal this bit for bit (each term is a small
+/// dyadic rational, so the f64 walk is exact).
+pub fn dot_dequant_ref<F: BlockFormat>(a: &F::Group, b: &F::Group) -> f64 {
+    let mut da = vec![0f32; F::GROUP];
+    let mut db = vec![0f32; F::GROUP];
+    F::decode_group(a, &mut da);
+    F::decode_group(b, &mut db);
+    let mut acc = 0f64;
+    for (x, y) in da.iter().zip(&db) {
+        acc += (*x as f64) * (*y as f64);
+    }
+    acc
+}
+
+// ---------------------------------------------------------------------------
+// The enum-dispatched surface
+// ---------------------------------------------------------------------------
+
+macro_rules! dispatch {
+    ($self:expr, $m:ident => $body:expr) => {
+        match $self {
+            Self::HiF4($m) => $body,
+            Self::Nvfp4($m) => $body,
+            Self::Mxfp4($m) => $body,
+            Self::Mx4($m) => $body,
+            Self::Bfp($m) => $body,
+        }
+    };
+}
+
+macro_rules! dispatch_pair {
+    ($a:expr, $b:expr, $x:ident, $y:ident => $body:expr, $op:literal) => {
+        match ($a, $b) {
+            (Self::HiF4($x), Self::HiF4($y)) => $body,
+            (Self::Nvfp4($x), Self::Nvfp4($y)) => $body,
+            (Self::Mxfp4($x), Self::Mxfp4($y)) => $body,
+            (Self::Mx4($x), Self::Mx4($y)) => $body,
+            (Self::Bfp($x), Self::Bfp($y)) => $body,
+            (x, y) => panic!(
+                concat!($op, " operands must share a format, got {} vs {}"),
+                x.kind(),
+                y.kind()
+            ),
+        }
+    };
+}
+
+/// A matrix quantized in any of the five block formats — the single
+/// quantized-tensor type every consumer programs against. Construct with
+/// [`QuantizedMatrix::quantize`]; run GEMMs with
+/// [`QuantizedMatrix::qgemm_bt`] (kernel-backend dispatching) or pack
+/// once with [`QuantizedMatrix::pack`] and reuse the planes.
+#[derive(Debug, Clone)]
+pub enum QuantizedMatrix {
+    HiF4(QuantMat<HiF4Fmt>),
+    Nvfp4(QuantMat<Nvfp4Fmt>),
+    Mxfp4(QuantMat<Mxfp4Fmt>),
+    Mx4(QuantMat<Mx4Fmt>),
+    Bfp(QuantMat<BfpFmt>),
+}
+
+impl QuantizedMatrix {
+    /// Quantize a row-major matrix in `kind` (row-parallel, process-
+    /// default thread count).
+    pub fn quantize(kind: QuantKind, m: &Matrix, mode: RoundMode) -> QuantizedMatrix {
+        let work = m.rows * m.cols * threadpool::QUANT_WORK_PER_ELEM;
+        Self::quantize_threads(kind, m, mode, threadpool::threads_for(work))
+    }
+
+    /// [`QuantizedMatrix::quantize`] with an explicit thread count
+    /// (identical output for any count).
+    pub fn quantize_threads(
+        kind: QuantKind,
+        m: &Matrix,
+        mode: RoundMode,
+        threads: usize,
+    ) -> QuantizedMatrix {
+        match kind {
+            QuantKind::HiF4 => Self::HiF4(QuantMat::quantize_threads(m, mode, threads)),
+            QuantKind::Nvfp4 => Self::Nvfp4(QuantMat::quantize_threads(m, mode, threads)),
+            QuantKind::Mxfp4 => Self::Mxfp4(QuantMat::quantize_threads(m, mode, threads)),
+            QuantKind::Mx4 => Self::Mx4(QuantMat::quantize_threads(m, mode, threads)),
+            QuantKind::Bfp => Self::Bfp(QuantMat::quantize_threads(m, mode, threads)),
+        }
+    }
+
+    /// The block format this matrix is quantized in.
+    pub fn kind(&self) -> QuantKind {
+        match self {
+            Self::HiF4(_) => QuantKind::HiF4,
+            Self::Nvfp4(_) => QuantKind::Nvfp4,
+            Self::Mxfp4(_) => QuantKind::Mxfp4,
+            Self::Mx4(_) => QuantKind::Mx4,
+            Self::Bfp(_) => QuantKind::Bfp,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        dispatch!(self, m => m.rows)
+    }
+
+    pub fn cols(&self) -> usize {
+        dispatch!(self, m => m.cols)
+    }
+
+    pub fn groups_per_row(&self) -> usize {
+        dispatch!(self, m => m.groups_per_row)
+    }
+
+    /// Uniform geometry check (see [`QuantMat::assert_geometry`]).
+    pub fn assert_geometry(&self) {
+        dispatch!(self, m => m.assert_geometry())
+    }
+
+    /// Serialized wire size in bytes.
+    pub fn wire_bytes(&self) -> usize {
+        dispatch!(self, m => m.wire_bytes())
+    }
+
+    /// Dequantize back to a dense matrix.
+    pub fn dequantize(&self) -> Matrix {
+        dispatch!(self, m => m.dequantize())
+    }
+
+    /// [`QuantizedMatrix::dequantize`] with an explicit thread count.
+    pub fn dequantize_threads(&self, threads: usize) -> Matrix {
+        dispatch!(self, m => m.dequantize_threads(threads))
+    }
+
+    /// Pack into decode-once integer operand planes.
+    pub fn pack(&self) -> PackedQuantizedMatrix {
+        self.pack_threads(threadpool::threads_for(self.rows() * self.cols() * PACK_WORK_PER_ELEM))
+    }
+
+    /// [`QuantizedMatrix::pack`] with an explicit thread count.
+    pub fn pack_threads(&self, threads: usize) -> PackedQuantizedMatrix {
+        match self {
+            Self::HiF4(m) => PackedQuantizedMatrix::HiF4(PackedQuantMat::pack_threads(m, threads)),
+            Self::Nvfp4(m) => {
+                PackedQuantizedMatrix::Nvfp4(PackedQuantMat::pack_threads(m, threads))
+            }
+            Self::Mxfp4(m) => {
+                PackedQuantizedMatrix::Mxfp4(PackedQuantMat::pack_threads(m, threads))
+            }
+            Self::Mx4(m) => PackedQuantizedMatrix::Mx4(PackedQuantMat::pack_threads(m, threads)),
+            Self::Bfp(m) => PackedQuantizedMatrix::Bfp(PackedQuantMat::pack_threads(m, threads)),
+        }
+    }
+
+    /// `C = self · b_tᵀ` on the process-wide kernel backend
+    /// ([`super::kernel`]; numerically inert — both backends are
+    /// bit-identical). Panics if the operands' formats differ.
+    pub fn qgemm_bt(&self, b_t: &QuantizedMatrix) -> Matrix {
+        let work = self.rows() * b_t.rows() * self.cols();
+        self.qgemm_bt_threads(b_t, threadpool::threads_for(work))
+    }
+
+    /// [`QuantizedMatrix::qgemm_bt`] with an explicit thread count —
+    /// bit-identical for every value.
+    pub fn qgemm_bt_threads(&self, b_t: &QuantizedMatrix, threads: usize) -> Matrix {
+        match super::kernel() {
+            Kernel::Flow => self.qgemm_bt_flow_threads(b_t, threads),
+            Kernel::Packed => {
+                // One-time O(M·K + N·K) pack, then the integer fast path;
+                // callers holding operands across calls should pack once
+                // themselves ([`QuantizedMatrix::pack`]) to amortize even
+                // this.
+                self.pack_threads(threads).qgemm_bt_threads(&b_t.pack_threads(threads), threads)
+            }
+        }
+    }
+
+    /// The reference flow-kernel GEMM (process-default threads).
+    pub fn qgemm_bt_flow(&self, b_t: &QuantizedMatrix) -> Matrix {
+        let work = self.rows() * b_t.rows() * self.cols();
+        self.qgemm_bt_flow_threads(b_t, threadpool::threads_for(work))
+    }
+
+    /// [`QuantizedMatrix::qgemm_bt_flow`] with an explicit thread count.
+    pub fn qgemm_bt_flow_threads(&self, b_t: &QuantizedMatrix, threads: usize) -> Matrix {
+        dispatch_pair!(self, b_t, x, y => qgemm_bt_flow_threads(x, y, threads), "flow QGEMM")
+    }
+}
+
+/// Decode-once packed integer operand planes for any of the five block
+/// formats — the fast-path twin of [`QuantizedMatrix`].
+#[derive(Debug, Clone)]
+pub enum PackedQuantizedMatrix {
+    HiF4(PackedQuantMat<HiF4Fmt>),
+    Nvfp4(PackedQuantMat<Nvfp4Fmt>),
+    Mxfp4(PackedQuantMat<Mxfp4Fmt>),
+    Mx4(PackedQuantMat<Mx4Fmt>),
+    Bfp(PackedQuantMat<BfpFmt>),
+}
+
+impl PackedQuantizedMatrix {
+    pub fn kind(&self) -> QuantKind {
+        match self {
+            Self::HiF4(_) => QuantKind::HiF4,
+            Self::Nvfp4(_) => QuantKind::Nvfp4,
+            Self::Mxfp4(_) => QuantKind::Mxfp4,
+            Self::Mx4(_) => QuantKind::Mx4,
+            Self::Bfp(_) => QuantKind::Bfp,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        dispatch!(self, m => m.rows)
+    }
+
+    pub fn cols(&self) -> usize {
+        dispatch!(self, m => m.cols)
+    }
+
+    /// Wire size of the unit form the planes were packed from.
+    pub fn wire_bytes(&self) -> usize {
+        dispatch!(self, m => m.wire_bytes())
+    }
+
+    /// `C = self · b_tᵀ` over prepacked planes (process-default threads).
+    pub fn qgemm_bt(&self, b_t: &PackedQuantizedMatrix) -> Matrix {
+        let work = self.rows() * b_t.rows() * self.cols();
+        self.qgemm_bt_threads(b_t, threadpool::threads_for(work))
+    }
+
+    /// [`PackedQuantizedMatrix::qgemm_bt`] with an explicit thread count
+    /// — bit-identical to the flow kernel on the matrices the planes were
+    /// packed from, for every thread count.
+    pub fn qgemm_bt_threads(&self, b_t: &PackedQuantizedMatrix, threads: usize) -> Matrix {
+        dispatch_pair!(self, b_t, x, y => qgemm_bt_packed_threads(x, y, threads), "packed QGEMM")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Row-plane helpers (the KV cache's encode-once layout)
+// ---------------------------------------------------------------------------
+
+/// Encode one row into decode-once planes: chunk `row` into `kind`-sized
+/// groups (zero-padded tail — the same uniform tail handling as
+/// [`QuantMat::quantize`]), quantize each through the format codec, and
+/// append the integer lanes + exact `f64` scale. Row-granular twin of
+/// [`PackedQuantMat::pack`] for consumers that grow one row at a time
+/// (the quantized KV cache).
+pub fn encode_row_planes(kind: QuantKind, row: &[f32], lanes: &mut Vec<i8>, scales: &mut Vec<f64>) {
+    match kind {
+        QuantKind::HiF4 => encode_row_planes_g::<HiF4Fmt>(row, lanes, scales),
+        QuantKind::Nvfp4 => encode_row_planes_g::<Nvfp4Fmt>(row, lanes, scales),
+        QuantKind::Mxfp4 => encode_row_planes_g::<Mxfp4Fmt>(row, lanes, scales),
+        QuantKind::Mx4 => encode_row_planes_g::<Mx4Fmt>(row, lanes, scales),
+        QuantKind::Bfp => encode_row_planes_g::<BfpFmt>(row, lanes, scales),
+    }
+}
+
+fn encode_row_planes_g<F: BlockFormat>(row: &[f32], lanes: &mut Vec<i8>, scales: &mut Vec<f64>) {
+    // Stack buffer on the decode hot path (one call per appended KV row):
+    // 64 is the largest group across all five codecs.
+    debug_assert!(F::GROUP <= 64);
+    let mut buf = [0f32; 64];
+    let buf = &mut buf[..F::GROUP];
+    for u in 0..row.len().div_ceil(F::GROUP) {
+        let start = u * F::GROUP;
+        let end = (start + F::GROUP).min(row.len());
+        buf[..end - start].copy_from_slice(&row[start..end]);
+        buf[end - start..].fill(0.0);
+        let g = F::quantize_group(&buf, RoundMode::NearestEven);
+        let base = lanes.len();
+        lanes.resize(base + F::GROUP, 0);
+        scales.push(F::group_plane(&g, &mut lanes[base..]));
+    }
+}
+
+/// Decode the first `out.len()` lanes of one plane group back to f32:
+/// `v_i = scale · lane_i / LANE_UNIT` — one multiply per element,
+/// bit-identical to the format's own group decode (a NaN scale poisons
+/// every element, matching the NaN channel).
+pub fn decode_plane(kind: QuantKind, lanes: &[i8], scale: f64, out: &mut [f32]) {
+    match kind {
+        QuantKind::HiF4 => decode_plane_g::<HiF4Fmt>(lanes, scale, out),
+        QuantKind::Nvfp4 => decode_plane_g::<Nvfp4Fmt>(lanes, scale, out),
+        QuantKind::Mxfp4 => decode_plane_g::<Mxfp4Fmt>(lanes, scale, out),
+        QuantKind::Mx4 => decode_plane_g::<Mx4Fmt>(lanes, scale, out),
+        QuantKind::Bfp => decode_plane_g::<BfpFmt>(lanes, scale, out),
+    }
+}
+
+fn decode_plane_g<F: BlockFormat>(lanes: &[i8], scale: f64, out: &mut [f32]) {
+    assert!(
+        out.len() <= F::GROUP,
+        "{} plane decodes at most {} elements; buffer holds {}",
+        F::KIND,
+        F::GROUP,
+        out.len()
+    );
+    let s = scale as f32;
+    // 1/LANE_UNIT is a power of two: the lane scaling is exact.
+    let recip = (1.0 / F::LANE_UNIT) as f32;
+    for (o, lane) in out.iter_mut().zip(lanes) {
+        *o = s * (*lane as f32 * recip);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Rng;
+
+    const MODE: RoundMode = RoundMode::NearestEven;
+
+    #[test]
+    fn lane_magnitudes_stay_in_bounds() {
+        // The deterministic worst case: every element alternating ±peak,
+        // which for HiF4 sets both micro-exponent levels so lanes hit the
+        // 7 << 2 = 28 extreme — the bound that makes the i8 plane
+        // lossless. Every codec's lanes must respect its documented bound.
+        for (kind, bound) in [
+            (QuantKind::HiF4, 28i8),
+            (QuantKind::Nvfp4, 12),
+            (QuantKind::Mxfp4, 12),
+            (QuantKind::Mx4, 6),
+            (QuantKind::Bfp, 7),
+        ] {
+            let g = kind.group();
+            let v: Vec<f32> =
+                (0..g).map(|i| if i % 2 == 0 { 7.0 } else { -7.0 }).collect();
+            let mut lanes = Vec::new();
+            let mut scales = Vec::new();
+            encode_row_planes(kind, &v, &mut lanes, &mut scales);
+            assert_eq!(lanes.len(), g);
+            assert_eq!(scales.len(), 1);
+            for lane in &lanes {
+                assert!(lane.abs() <= bound, "{kind}: lane {lane} exceeds {bound}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_dequantize_matches_scheme_path_all_formats() {
+        // The matrix path and the flat QuantScheme path must agree bitwise
+        // for every format (same codec, same padded-tail handling).
+        use crate::formats::QuantScheme;
+        let mut rng = Rng::seed(503);
+        let m = Matrix::randn(3, 100, 0.5, &mut rng);
+        for kind in QuantKind::ALL {
+            let q = QuantizedMatrix::quantize(kind, &m, MODE);
+            q.assert_geometry();
+            let deq = q.dequantize();
+            let scheme = QuantScheme::direct(kind);
+            for r in 0..m.rows {
+                let flat = scheme.quant_dequant_vec(m.row(r));
+                assert_eq!(deq.row(r), &flat[..], "{kind} row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn plane_decode_matches_group_decode_bitwise() {
+        // Lane decode (scale · lane / LANE_UNIT) must reproduce the
+        // format's own decode exactly, including the NaN channel.
+        let mut rng = Rng::seed(505);
+        for kind in QuantKind::ALL {
+            let g = kind.group();
+            for round in 0..40 {
+                let sigma = 10f32.powi((round % 8) - 4);
+                let v: Vec<f32> = (0..g).map(|_| rng.normal() as f32 * sigma).collect();
+                let mut qd = vec![0f32; g];
+                kind.quant_dequant_block(&v, &mut qd, MODE);
+                let mut lanes = Vec::new();
+                let mut scales = Vec::new();
+                encode_row_planes(kind, &v, &mut lanes, &mut scales);
+                let mut decoded = vec![0f32; g];
+                decode_plane(kind, &lanes, scales[0], &mut decoded);
+                for (i, (d, want)) in decoded.iter().zip(&qd).enumerate() {
+                    assert_eq!(d.to_bits(), want.to_bits(), "{kind} round {round} elem {i}");
+                }
+            }
+            // NaN channel: a poisoned group poisons every decoded lane.
+            let mut v = vec![1.0f32; g];
+            v[g / 2] = f32::NAN;
+            let mut lanes = Vec::new();
+            let mut scales = Vec::new();
+            encode_row_planes(kind, &v, &mut lanes, &mut scales);
+            let mut decoded = vec![0f32; g];
+            decode_plane(kind, &lanes, scales[0], &mut decoded);
+            assert!(decoded.iter().all(|x| x.is_nan()), "{kind}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "matrix geometry")]
+    fn pack_rejects_inconsistent_geometry() {
+        let mut rng = Rng::seed(506);
+        let mut q = QuantMat::<HiF4Fmt>::quantize(&Matrix::randn(2, 130, 1.0, &mut rng), MODE);
+        q.groups_per_row = 1; // lies about the padded tail unit
+        let _ = PackedQuantMat::pack_threads(&q, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "share a format")]
+    fn mismatched_formats_panic_loudly() {
+        let mut rng = Rng::seed(507);
+        let m = Matrix::randn(2, 64, 1.0, &mut rng);
+        let a = QuantizedMatrix::quantize(QuantKind::HiF4, &m, MODE);
+        let b = QuantizedMatrix::quantize(QuantKind::Mxfp4, &m, MODE);
+        let _ = a.qgemm_bt(&b);
+    }
+
+    #[test]
+    fn pack_is_thread_count_invariant_all_formats() {
+        let mut rng = Rng::seed(504);
+        let m = Matrix::randn(9, 200, 1.0, &mut rng);
+        for kind in QuantKind::ALL {
+            let q = QuantizedMatrix::quantize_threads(kind, &m, MODE, 1);
+            let serial = q.pack_threads(1);
+            // Probe the raw planes directly on the HiF4 variant; for every
+            // kind, identical planes give a bit-identical product.
+            let c0 = serial.qgemm_bt_threads(&serial, 1);
+            for t in [2, 3, 5] {
+                let par = q.pack_threads(t);
+                if let (PackedQuantizedMatrix::HiF4(a), PackedQuantizedMatrix::HiF4(b)) =
+                    (&serial, &par)
+                {
+                    for r in 0..q.rows() {
+                        assert_eq!(a.row_scales(r), b.row_scales(r), "threads={t}");
+                        assert_eq!(a.row_lanes(r), b.row_lanes(r), "threads={t}");
+                    }
+                }
+                let c1 = par.qgemm_bt_threads(&par, 1);
+                assert_eq!(c0.data, c1.data, "{kind} threads={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn wire_bytes_accounting() {
+        let mut rng = Rng::seed(508);
+        // 100 cols: ragged tails for every group size.
+        let m = Matrix::randn(3, 100, 1.0, &mut rng);
+        for kind in QuantKind::ALL {
+            let q = QuantizedMatrix::quantize(kind, &m, MODE);
+            let groups = 3 * 100usize.div_ceil(kind.group());
+            assert_eq!(q.wire_bytes(), groups * kind.wire_bytes_group(), "{kind}");
+            assert_eq!(q.pack().wire_bytes(), q.wire_bytes(), "{kind} packed");
+        }
+    }
+}

@@ -34,56 +34,135 @@ use rounding::RoundMode;
 
 /// The block formats under evaluation, as a uniform enum (dyn-free dispatch
 /// keeps the hot quantization loops monomorphic-ish and inlinable).
+///
+/// `QuantKind` is the **single** format authority of the crate: the one
+/// parser ([`std::str::FromStr`], shared by the CLI, env knobs and
+/// manifest keys), the one label source ([`std::fmt::Display`], which
+/// every bench/eval/serving label derives from), and the dispatch key of
+/// the unified quantized-tensor API
+/// (`crate::dotprod::quant_tensor::QuantizedMatrix`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum Format {
+pub enum QuantKind {
     HiF4,
     Nvfp4,
     Mxfp4,
     Mx4,
-    VanillaBfp,
+    /// Vanilla 4-bit BFP (shared power-of-two exponent, no micro-exponents).
+    Bfp,
 }
 
-impl Format {
+impl QuantKind {
+    /// Every supported block format, in the canonical reporting order.
+    pub const ALL: [QuantKind; 5] =
+        [QuantKind::HiF4, QuantKind::Nvfp4, QuantKind::Mxfp4, QuantKind::Mx4, QuantKind::Bfp];
+
+    /// Canonical display label (also what [`std::fmt::Display`] prints).
     pub fn name(self) -> &'static str {
         match self {
-            Format::HiF4 => "HiF4",
-            Format::Nvfp4 => "NVFP4",
-            Format::Mxfp4 => "MXFP4",
-            Format::Mx4 => "MX4",
-            Format::VanillaBfp => "BFP4",
+            QuantKind::HiF4 => "HiF4",
+            QuantKind::Nvfp4 => "NVFP4",
+            QuantKind::Mxfp4 => "MXFP4",
+            QuantKind::Mx4 => "MX4",
+            QuantKind::Bfp => "BFP4",
+        }
+    }
+
+    /// Canonical lower-case spelling — the CLI `--format` value, env-knob
+    /// value, manifest key and bench-JSON key. The `FromStr` impl
+    /// round-trips it.
+    pub fn spelling(self) -> &'static str {
+        match self {
+            QuantKind::HiF4 => "hif4",
+            QuantKind::Nvfp4 => "nvfp4",
+            QuantKind::Mxfp4 => "mxfp4",
+            QuantKind::Mx4 => "mx4",
+            QuantKind::Bfp => "bfp",
         }
     }
 
     /// Block length of one quantization group.
     pub fn group(self) -> usize {
         match self {
-            Format::HiF4 => hif4::GROUP,
-            Format::Nvfp4 => nvfp4::GROUP,
-            Format::Mxfp4 => mxfp4::GROUP,
-            Format::Mx4 => mx4::GROUP,
-            Format::VanillaBfp => bfp::GROUP,
+            QuantKind::HiF4 => hif4::GROUP,
+            QuantKind::Nvfp4 => nvfp4::GROUP,
+            QuantKind::Mxfp4 => mxfp4::GROUP,
+            QuantKind::Mx4 => mx4::GROUP,
+            QuantKind::Bfp => bfp::GROUP,
         }
     }
 
     /// Average storage cost in bits/value including metadata.
     pub fn bits_per_value(self) -> f64 {
         match self {
-            Format::HiF4 => hif4::BITS_PER_VALUE,
-            Format::Nvfp4 => nvfp4::BITS_PER_VALUE,
-            Format::Mxfp4 => mxfp4::BITS_PER_VALUE,
-            Format::Mx4 => mx4::BITS_PER_VALUE,
-            Format::VanillaBfp => bfp::BITS_PER_VALUE,
+            QuantKind::HiF4 => hif4::BITS_PER_VALUE,
+            QuantKind::Nvfp4 => nvfp4::BITS_PER_VALUE,
+            QuantKind::Mxfp4 => mxfp4::BITS_PER_VALUE,
+            QuantKind::Mx4 => mx4::BITS_PER_VALUE,
+            QuantKind::Bfp => bfp::BITS_PER_VALUE,
         }
+    }
+
+    /// Serialized bytes of one packed group (shared metadata + packed
+    /// elements) — `group() × bits_per_value() / 8`, always whole bytes.
+    pub fn wire_bytes_group(self) -> usize {
+        match self {
+            QuantKind::HiF4 => hif4::HiF4Unit::WIRE_BYTES, // 4B meta + 32B elems
+            QuantKind::Nvfp4 => 9,                         // 1B E4M3 + 8B nibbles
+            QuantKind::Mxfp4 => 17,                        // 1B E8M0 + 16B nibbles
+            QuantKind::Mx4 => 8,                           // 1B E8M0 + 1B micro + 6B elems
+            QuantKind::Bfp => 9,                           // 1B E8M0 + 8B nibbles
+        }
+    }
+
+    /// Sniff the quantization format out of an artifact file name
+    /// (`"fwd_hif4.hlo.txt"` → `HiF4`); `None` means dense bf16. Only the
+    /// final path component is inspected, so a directory that happens to
+    /// contain a format spelling (e.g. a checkout named `hif4/`) never
+    /// mislabels a dense artifact. The one sniffing rule shared by the
+    /// PJRT server, the CLI's artifact branch and the serving bench, so
+    /// weight quantization and metrics tags can never disagree about the
+    /// same file.
+    pub fn from_artifact_name(name: &str) -> Option<QuantKind> {
+        let base = name.rsplit(['/', '\\']).next().unwrap_or(name);
+        let lower = base.to_ascii_lowercase();
+        QuantKind::ALL.into_iter().find(|k| lower.contains(k.spelling()))
     }
 
     /// Quantize→dequantize one block (input length == `group()`).
     pub fn quant_dequant_block(self, v: &[f32], out: &mut [f32], mode: RoundMode) {
         match self {
-            Format::HiF4 => hif4::quant_dequant(v, out, mode),
-            Format::Nvfp4 => nvfp4::quant_dequant(v, out, mode),
-            Format::Mxfp4 => mxfp4::quant_dequant(v, out, mode),
-            Format::Mx4 => mx4::quant_dequant(v, out, mode),
-            Format::VanillaBfp => bfp::quant_dequant(v, out, mode),
+            QuantKind::HiF4 => hif4::quant_dequant(v, out, mode),
+            QuantKind::Nvfp4 => nvfp4::quant_dequant(v, out, mode),
+            QuantKind::Mxfp4 => mxfp4::quant_dequant(v, out, mode),
+            QuantKind::Mx4 => mx4::quant_dequant(v, out, mode),
+            QuantKind::Bfp => bfp::quant_dequant(v, out, mode),
+        }
+    }
+}
+
+impl std::fmt::Display for QuantKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for QuantKind {
+    type Err = String;
+
+    /// The one format parser (CLI `--format`, env knobs, manifest keys).
+    /// Accepts the canonical [`QuantKind::spelling`] case-insensitively
+    /// (plus `bfp4` for the BFP label); the error lists every valid name.
+    fn from_str(s: &str) -> Result<QuantKind, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "hif4" => Ok(QuantKind::HiF4),
+            "nvfp4" => Ok(QuantKind::Nvfp4),
+            "mxfp4" => Ok(QuantKind::Mxfp4),
+            "mx4" => Ok(QuantKind::Mx4),
+            "bfp" | "bfp4" => Ok(QuantKind::Bfp),
+            other => Err(format!(
+                "unknown quantization format {other:?}; expected one of hif4, nvfp4, mxfp4, \
+                 mx4, bfp"
+            )),
         }
     }
 }
@@ -98,9 +177,9 @@ impl Format {
 /// the semantics every LLM experiment in the paper uses):
 ///
 /// ```
-/// use hif4::formats::{mse, Format, QuantScheme};
+/// use hif4::formats::{mse, QuantKind, QuantScheme};
 ///
-/// let scheme = QuantScheme::direct(Format::HiF4);
+/// let scheme = QuantScheme::direct(QuantKind::HiF4);
 /// let x: Vec<f32> = (0..100).map(|i| (i as f32 - 50.0) / 25.0).collect();
 /// let q = scheme.quant_dequant_vec(&x);
 ///
@@ -111,7 +190,7 @@ impl Format {
 /// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct QuantScheme {
-    pub format: Format,
+    pub format: QuantKind,
     /// Software per-tensor scaling before/after quantization (§I: NVFP4's
     /// extra pipeline stage; a no-op for formats with enough global range).
     pub pts: bool,
@@ -120,24 +199,26 @@ pub struct QuantScheme {
 
 /// Uniform quantize→dequantize entry point — the name the crate docs use
 /// for the "simulated quantization" interface ([`QuantScheme`] by another
-/// name; `Quantizer::direct(Format::HiF4)` reads better at call sites that
-/// never touch PTS).
+/// name; `Quantizer::direct(QuantKind::HiF4)` reads better at call sites
+/// that never touch PTS).
 pub use self::QuantScheme as Quantizer;
 
 impl QuantScheme {
-    pub fn direct(format: Format) -> Self {
+    pub fn direct(format: QuantKind) -> Self {
         QuantScheme { format, pts: false, mode: RoundMode::NearestEven }
     }
 
-    pub fn with_pts(format: Format) -> Self {
+    pub fn with_pts(format: QuantKind) -> Self {
         QuantScheme { format, pts: true, mode: RoundMode::NearestEven }
     }
 
+    /// Scheme label, derived from the one [`QuantKind`] display impl
+    /// (bench JSON, eval tables and `hif4 info` all agree by construction).
     pub fn label(&self) -> String {
         if self.pts {
-            format!("{}+PTS", self.format.name())
+            format!("{}+PTS", self.format)
         } else {
-            self.format.name().to_string()
+            self.format.to_string()
         }
     }
 
@@ -230,7 +311,7 @@ mod tests {
 
     #[test]
     fn all_formats_roundtrip_zero() {
-        for f in [Format::HiF4, Format::Nvfp4, Format::Mxfp4, Format::Mx4, Format::VanillaBfp] {
+        for f in QuantKind::ALL {
             let scheme = QuantScheme::direct(f);
             let v = vec![0f32; 100]; // non-multiple of any group size
             let out = scheme.quant_dequant_vec(&v);
@@ -239,12 +320,45 @@ mod tests {
     }
 
     #[test]
+    fn kind_spelling_parse_display_roundtrip() {
+        for k in QuantKind::ALL {
+            assert_eq!(k.spelling().parse::<QuantKind>(), Ok(k));
+            assert_eq!(k.to_string(), k.name());
+            // Wire bytes agree with the advertised bits/value exactly.
+            assert_eq!(
+                k.wire_bytes_group() as f64 * 8.0,
+                k.bits_per_value() * k.group() as f64,
+                "{k}"
+            );
+        }
+        assert!("fp8".parse::<QuantKind>().unwrap_err().contains("hif4"));
+    }
+
+    #[test]
+    fn artifact_name_sniffing() {
+        assert_eq!(QuantKind::from_artifact_name("fwd_hif4.hlo.txt"), Some(QuantKind::HiF4));
+        assert_eq!(QuantKind::from_artifact_name("fwd_NVFP4.hlo.txt"), Some(QuantKind::Nvfp4));
+        assert_eq!(QuantKind::from_artifact_name("qdq_mxfp4.hlo.txt"), Some(QuantKind::Mxfp4));
+        assert_eq!(QuantKind::from_artifact_name("fwd_bf16.hlo.txt"), None);
+        // "mxfp4" must not be mis-sniffed as MX4 (no spelling is a
+        // substring of another's artifact token).
+        assert_eq!(QuantKind::from_artifact_name("fwd_mx4.hlo.txt"), Some(QuantKind::Mx4));
+        // Only the file name counts: a checkout directory named after the
+        // crate must not turn a dense artifact quantized.
+        assert_eq!(QuantKind::from_artifact_name("/home/u/hif4/artifacts/fwd_bf16.hlo.txt"), None);
+        assert_eq!(
+            QuantKind::from_artifact_name("/srv/hif4/fwd_nvfp4.hlo.txt"),
+            Some(QuantKind::Nvfp4)
+        );
+    }
+
+    #[test]
     fn tail_padding_matches_full_group() {
         // Quantizing a prefix that is not a multiple of the group must equal
         // quantizing the zero-padded group (blocking invariant).
         let mut rng = Rng::seed(23);
         let v: Vec<f32> = (0..100).map(|_| rng.normal() as f32).collect();
-        for f in [Format::HiF4, Format::Nvfp4, Format::Mxfp4] {
+        for f in [QuantKind::HiF4, QuantKind::Nvfp4, QuantKind::Mxfp4] {
             let scheme = QuantScheme::direct(f);
             let out = scheme.quant_dequant_vec(&v);
             let g = f.group();
@@ -265,8 +379,8 @@ mod tests {
         // for an out-of-range tensor it must dramatically reduce MSE.
         let mut rng = Rng::seed(29);
         let big: Vec<f32> = (0..256).map(|_| rng.normal() as f32 * 10000.0).collect();
-        let direct = QuantScheme::direct(Format::Nvfp4).quant_dequant_vec(&big);
-        let pts = QuantScheme::with_pts(Format::Nvfp4).quant_dequant_vec(&big);
+        let direct = QuantScheme::direct(QuantKind::Nvfp4).quant_dequant_vec(&big);
+        let pts = QuantScheme::with_pts(QuantKind::Nvfp4).quant_dequant_vec(&big);
         let e_direct = mse(&big, &direct);
         let e_pts = mse(&big, &pts);
         assert!(
@@ -281,9 +395,9 @@ mod tests {
         // HiF4 < NVFP4 < MXFP4.
         let mut rng = Rng::seed(31);
         let v: Vec<f32> = (0..4096).map(|_| rng.normal() as f32).collect();
-        let e_hif4 = mse(&v, &QuantScheme::direct(Format::HiF4).quant_dequant_vec(&v));
-        let e_nvfp4 = mse(&v, &QuantScheme::direct(Format::Nvfp4).quant_dequant_vec(&v));
-        let e_mxfp4 = mse(&v, &QuantScheme::direct(Format::Mxfp4).quant_dequant_vec(&v));
+        let e_hif4 = mse(&v, &QuantScheme::direct(QuantKind::HiF4).quant_dequant_vec(&v));
+        let e_nvfp4 = mse(&v, &QuantScheme::direct(QuantKind::Nvfp4).quant_dequant_vec(&v));
+        let e_mxfp4 = mse(&v, &QuantScheme::direct(QuantKind::Mxfp4).quant_dequant_vec(&v));
         assert!(e_hif4 < e_nvfp4, "HiF4 {e_hif4} < NVFP4 {e_nvfp4}");
         assert!(e_nvfp4 < e_mxfp4, "NVFP4 {e_nvfp4} < MXFP4 {e_mxfp4}");
     }

@@ -18,7 +18,7 @@
 //! demands: scale multipliers, large integer multipliers, extra shift/
 //! accumulation logic (the paper's accounting; Fig 4).
 //!
-//! Software note: the crate's packed QGEMM ([`crate::dotprod::packed`])
+//! Software note: the crate's packed QGEMM ([`crate::dotprod::quant_tensor`])
 //! is a CPU *schedule* of this same Fig 4 datapath — the identical
 //! element multiplies and integer-tree adds per 64-length dot, with the
 //! micro-exponent shifts pre-applied at pack time. It changes nothing

@@ -15,22 +15,30 @@
 //!   train step, AOT-lowered to `artifacts/*.hlo.txt`.
 //! * **L3** this crate — formats, quantization pipeline, eval, serving.
 //!
+//! All five block formats run behind one **unified quantized-tensor
+//! API** ([`dotprod::quant_tensor`]): a single [`dotprod::QuantizedMatrix`]
+//! (enum-dispatched over [`formats::QuantKind`], with the per-format
+//! codecs behind the [`dotprod::BlockFormat`] trait) provides
+//! `quantize` / `dequantize` / `pack` / `qgemm_bt` / `wire_bytes` /
+//! `assert_geometry` uniformly, and one `QuantKind` parser/label feeds
+//! the CLI, env knobs, manifest keys and bench JSON.
+//!
 //! The hot paths are data-parallel with a determinism contract: the f32
-//! GEMMs ([`tensor::gemm`]), the quantized GEMMs ([`dotprod::qgemm`]),
-//! GPTQ ([`quant::gptq`]) and the serving worker pool ([`server`]) all
-//! fan out over OS threads while producing **bit-identical** results for
-//! every thread count (`HIF4_THREADS` / `--threads` /
-//! [`util::threadpool::set_threads`]); `tests/parallel_parity.rs` pins
-//! the contract. The quantized GEMMs additionally have two bit-identical
-//! kernel backends — the element-wise flow reference and the decode-once
-//! packed integer planes ([`dotprod::packed`], `HIF4_KERNEL` /
-//! `--kernel`) — and the model/serving layers run quantized linears on
-//! the packed planes directly (weights packed once, activations per
-//! call), including a PJRT-free native serving engine
+//! GEMMs ([`tensor::gemm`]), the quantized GEMMs
+//! ([`dotprod::quant_tensor`]), GPTQ ([`quant::gptq`]) and the serving
+//! worker pool ([`server`]) all fan out over OS threads while producing
+//! **bit-identical** results for every thread count (`HIF4_THREADS` /
+//! `--threads` / [`util::threadpool::set_threads`]);
+//! `tests/parallel_parity.rs` pins the contract. The quantized GEMMs
+//! additionally have two bit-identical kernel backends — the
+//! element-wise flow reference and the decode-once packed integer planes
+//! (`HIF4_KERNEL` / `--kernel`) — and the model/serving layers run
+//! quantized linears on the packed planes directly (weights packed once,
+//! activations per call), including a PJRT-free native serving engine
 //! ([`runtime::native`], [`server::service::Server::start_native`])
 //! that decodes autoregressively with per-sequence KV caches
-//! ([`model::kv`] — f32 or HiF4 units encoded on append, `--kv-cache`)
-//! under a continuous-batching scheduler
+//! ([`model::kv`] — f32 or any block format encoded on append,
+//! `--kv-cache`) under a continuous-batching scheduler
 //! ([`server::batcher::ContinuousScheduler`]): requests are admitted
 //! into in-flight decode batches each step and every generated token
 //! streams to its client immediately.

@@ -3,10 +3,12 @@
 //! ```text
 //! hif4 serve   --artifact fwd_hif4.hlo.txt --addr 127.0.0.1:7401 [--params p.bin]
 //!              [--workers 2]                 # worker pool size
-//!              [--native --format hif4]      # PJRT-free rust-native engine:
+//!              [--native --format mxfp4]     # PJRT-free rust-native engine:
 //!                                            # continuous-batching decode over
 //!                                            # prepacked fixed-point linears
-//!              [--kv-cache f32|hif4]         # KV-cache storage (native engine;
+//!                                            # (bf16 or any block format:
+//!                                            # hif4|nvfp4|mxfp4|mx4|bfp)
+//!              [--kv-cache f32|hif4|...]     # KV-cache storage (native engine;
 //!                                            # HIF4_KV_CACHE env default)
 //! hif4 sweep   --dim 512                       # Fig 3 series
 //! hif4 hwcost                                  # §III.B area/power table
@@ -21,7 +23,7 @@
 //! results; packed is the fast path).
 
 use anyhow::Result;
-use hif4::formats::{mse, Format, QuantScheme};
+use hif4::formats::{mse, QuantKind, QuantScheme};
 use hif4::model::kv::KvCacheType;
 use hif4::quant::sweep;
 use hif4::runtime::artifact::{Manifest, ParamStore};
@@ -95,13 +97,19 @@ fn main() -> Result<()> {
                 "4-bit BFP formats implemented",
                 &["format", "group", "bits/value", "scale", "element"],
             );
-            for (f, scale, elem) in [
-                (Format::HiF4, "E6M2 + E1_8 + E1_16", "S1P2"),
-                (Format::Nvfp4, "FP8-E4M3", "E2M1"),
-                (Format::Mxfp4, "E8M0 (pow-2)", "E2M1"),
-                (Format::Mx4, "E8M0 + 8x E1", "S1P1"),
-                (Format::VanillaBfp, "E8M0 (pow-2)", "S1P2"),
-            ] {
+            let details = [
+                "E6M2 + E1_8 + E1_16",
+                "FP8-E4M3",
+                "E8M0 (pow-2)",
+                "E8M0 + 8x E1",
+                "E8M0 (pow-2)",
+            ];
+            let elems = ["S1P2", "E2M1", "E2M1", "S1P1", "S1P2"];
+            // Positional zip over parallel arrays: a new QuantKind must
+            // extend both, or rows would silently vanish/shift.
+            assert_eq!(details.len(), QuantKind::ALL.len());
+            assert_eq!(elems.len(), QuantKind::ALL.len());
+            for ((f, scale), elem) in QuantKind::ALL.iter().zip(details).zip(elems) {
                 t.row(vec![
                     f.name().into(),
                     f.group().to_string(),
@@ -137,13 +145,21 @@ fn serve(args: &Args) -> Result<()> {
         // PJRT-free engine: rebuild the L2 model from the store and serve
         // it rust-natively with continuous-batching decode; quantized
         // formats run the real fixed-point path with weight planes packed
-        // once at startup.
+        // once at startup. `--format` accepts bf16 or any QuantKind
+        // spelling (all five block formats run the packed QGEMM); when
+        // absent, the manifest's own `format` key decides, else bf16.
         let mut model = hif4::runtime::native::transformer_from_store(&manifest, &params)?;
-        match args.get_or("format", "bf16") {
-            "bf16" => {}
-            "hif4" => model.prepack_quantized_weights(Format::HiF4),
-            "nvfp4" => model.prepack_quantized_weights(Format::Nvfp4),
-            other => anyhow::bail!("--format must be bf16, hif4 or nvfp4, got {other}"),
+        let fmt = match args.get("format") {
+            // Case-insensitive like every QuantKind spelling (and the
+            // --kv-cache f32 escape).
+            Some(s) if s.eq_ignore_ascii_case("bf16") => None,
+            Some(s) => Some(s.parse::<QuantKind>().map_err(|e| {
+                anyhow::anyhow!("--format: {e} (or bf16 for the unquantized model)")
+            })?),
+            None => manifest.format,
+        };
+        if let Some(kind) = fmt {
+            model.prepack_quantized_weights(kind);
         }
         // Serving never reads the dense plane of a prepacked linear; free
         // it so the 4-bit format's memory win survives into deployment.
@@ -154,9 +170,8 @@ fn serve(args: &Args) -> Result<()> {
             .map(str::to_string)
             .or_else(|| std::env::var("HIF4_KV_CACHE").ok());
         let kv = match kv_spec {
-            Some(s) => KvCacheType::parse(&s).ok_or_else(|| {
-                anyhow::anyhow!("--kv-cache / HIF4_KV_CACHE must be f32 or hif4, got {s}")
-            })?,
+            Some(s) => KvCacheType::parse(&s)
+                .map_err(|e| anyhow::anyhow!("--kv-cache / HIF4_KV_CACHE: {e}"))?,
             None => KvCacheType::F32,
         };
         let cfg = NativeServerConfig { policy, workers, seq: manifest.seq, kv };
@@ -164,10 +179,10 @@ fn serve(args: &Args) -> Result<()> {
     } else {
         let artifact = args.get_or("artifact", "fwd_bf16.hlo.txt").to_string();
         let mut served = params;
-        if artifact.contains("hif4") {
-            served.quantize_weights(&QuantScheme::direct(Format::HiF4));
-        } else if artifact.contains("nvfp4") {
-            served.quantize_weights(&QuantScheme::direct(Format::Nvfp4));
+        // Same sniffing rule the server's metrics tag uses, so the
+        // quantized weights and the reported format can never disagree.
+        if let Some(kind) = QuantKind::from_artifact_name(&artifact) {
+            served.quantize_weights(&QuantScheme::direct(kind));
         }
         let cfg = ServerConfig { artifact, policy, workers };
         Server::start(dir, cfg, &served, addr)?
@@ -181,14 +196,10 @@ fn serve(args: &Args) -> Result<()> {
 
 fn quantize(args: &Args) -> Result<()> {
     let input = args.get("in").ok_or_else(|| anyhow::anyhow!("--in <f32le file> required"))?;
-    let fmt = match args.get_or("format", "hif4") {
-        "hif4" => Format::HiF4,
-        "nvfp4" => Format::Nvfp4,
-        "mxfp4" => Format::Mxfp4,
-        "mx4" => Format::Mx4,
-        "bfp" => Format::VanillaBfp,
-        other => anyhow::bail!("unknown format {other}"),
-    };
+    // The same single QuantKind parser as `serve --native --format` and
+    // the manifest key — one error message, listing every valid name.
+    let fmt: QuantKind =
+        args.get_or("format", "hif4").parse().map_err(|e| anyhow::anyhow!("--format: {e}"))?;
     let bytes = std::fs::read(input)?;
     let data: Vec<f32> =
         bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();

@@ -6,27 +6,26 @@
 //!
 //! * **F32** — the reference: appended K/V rows are kept verbatim, so
 //!   cached decode is *bit-identical* to the full-recompute forward.
-//! * **HiF4** — each appended row is encoded through Algorithm 1 in
-//!   64-element groups along the head dimension ([`crate::formats::hif4`])
-//!   and held as the decode-once integer lane planes of
-//!   [`crate::dotprod::packed`]: the nibble/micro-exponent extraction is
-//!   paid exactly once per cached value at append time, and attention
-//!   scores read straight from the planes (one multiply per lane). The
-//!   resident plane costs 9 bits/value (`i8` lane + amortized `f64` unit
-//!   scale) vs 32 for f32 — and the canonical 36-byte unit wire form
-//!   ([`KvCache::wire_bytes`], 4.5 bits/value) is what a paged or
-//!   offloaded cache would persist.
+//! * **Quant(kind)** — each appended row is encoded through the format
+//!   codec of `kind` (any of the five block formats, grouped along the
+//!   head dimension) and held as the decode-once integer lane planes of
+//!   [`crate::dotprod::quant_tensor`]: the nibble/micro-exponent
+//!   extraction is paid exactly once per cached value at append time, and
+//!   attention reads straight from the planes (one multiply per lane).
+//!   The resident plane costs 8 bits/value of lanes plus one amortized
+//!   `f64` group scale vs 32 for f32 — and the canonical packed wire form
+//!   ([`KvCache::wire_bytes`], `bits_per_value()` of the kind) is what a
+//!   paged or offloaded cache would persist.
 //!
 //! Keys are cached **post-RoPE** (their rotation depends only on the
-//! absolute position, which never changes once cached). The HiF4
-//! quantize→decode round trip here is the *same math* the full-recompute
-//! reference applies via [`hif4_qdq_rows`], so the greedy-decode parity
-//! suite (`tests/decode_parity.rs`) can pin cached-vs-recompute equality
-//! down to the bit.
+//! absolute position, which never changes once cached). The
+//! quantize→decode round trip here is the *same code* the full-recompute
+//! reference applies via [`qdq_rows`], so the greedy-decode parity suite
+//! (`tests/decode_parity.rs`) can pin cached-vs-recompute equality down
+//! to the bit for every format.
 
-use crate::dotprod::packed::{self, HiF4Lanes};
-use crate::formats::hif4;
-use crate::formats::rounding::RoundMode;
+use crate::dotprod::quant_tensor::{decode_plane, encode_row_planes};
+use crate::formats::QuantKind;
 use crate::model::config::ModelConfig;
 use crate::tensor::Matrix;
 
@@ -36,25 +35,34 @@ pub enum KvCacheType {
     /// Dense f32 rows — bit-identical to full recompute.
     #[default]
     F32,
-    /// HiF4 units encoded on append, held as decode-once lane planes.
-    HiF4,
+    /// Block-quantized rows encoded on append, held as decode-once lane
+    /// planes (any [`QuantKind`]).
+    Quant(QuantKind),
 }
 
 impl KvCacheType {
-    /// Parse a CLI/env spelling (`f32` / `hif4`, case-insensitive).
-    pub fn parse(s: &str) -> Option<KvCacheType> {
-        match s.to_ascii_lowercase().as_str() {
-            "f32" => Some(KvCacheType::F32),
-            "hif4" => Some(KvCacheType::HiF4),
-            _ => None,
+    /// The HiF4-quantized cache (the paper's configuration), spelled out
+    /// since it is the default quantized choice everywhere.
+    pub const HIF4: KvCacheType = KvCacheType::Quant(QuantKind::HiF4);
+
+    /// Parse a CLI/env spelling through the single [`QuantKind`] parser:
+    /// `f32`, or any format spelling (`hif4`, `nvfp4`, `mxfp4`, `mx4`,
+    /// `bfp`), case-insensitive.
+    pub fn parse(s: &str) -> Result<KvCacheType, String> {
+        if s.eq_ignore_ascii_case("f32") {
+            return Ok(KvCacheType::F32);
         }
+        s.parse::<QuantKind>()
+            .map(KvCacheType::Quant)
+            .map_err(|e| format!("{e} (or f32 for the unquantized cache)"))
     }
 
-    /// Canonical lower-case label (bench/JSON key).
+    /// Canonical lower-case label (bench/JSON key); round-trips through
+    /// [`KvCacheType::parse`].
     pub fn label(self) -> &'static str {
         match self {
             KvCacheType::F32 => "f32",
-            KvCacheType::HiF4 => "hif4",
+            KvCacheType::Quant(kind) => kind.spelling(),
         }
     }
 }
@@ -79,12 +87,21 @@ pub(crate) struct LayerKv {
 /// Append-only row store for one tensor (K or V) of one layer.
 #[derive(Debug, Clone)]
 pub(crate) enum KvStore {
-    F32 { kvd: usize, data: Vec<f32> },
-    HiF4 { kvd: usize, units_per_row: usize, lanes: Vec<HiF4Lanes>, scales: Vec<f64> },
+    F32 {
+        kvd: usize,
+        data: Vec<f32>,
+    },
+    Quant {
+        quant: QuantKind,
+        kvd: usize,
+        groups_per_row: usize,
+        lanes: Vec<i8>,
+        scales: Vec<f64>,
+    },
 }
 
 /// A dense f32 view of the first `rows` cached rows: f32 stores borrow in
-/// place, HiF4 stores decode their lane planes once per view.
+/// place, quantized stores decode their lane planes once per view.
 pub(crate) struct KvDense<'a> {
     kvd: usize,
     data: DenseData<'a>,
@@ -111,38 +128,29 @@ impl KvStore {
     fn new(kind: KvCacheType, kvd: usize) -> KvStore {
         match kind {
             KvCacheType::F32 => KvStore::F32 { kvd, data: Vec::new() },
-            KvCacheType::HiF4 => KvStore::HiF4 {
+            KvCacheType::Quant(quant) => KvStore::Quant {
+                quant,
                 kvd,
-                units_per_row: kvd.div_ceil(hif4::GROUP),
+                groups_per_row: kvd.div_ceil(quant.group()),
                 lanes: Vec::new(),
                 scales: Vec::new(),
             },
         }
     }
 
-    /// Append one position's row. HiF4 stores encode it through
-    /// Algorithm 1 (64-element groups, zero-padded tail group — the same
-    /// uniform tail handling as [`crate::dotprod::qgemm::HiF4Matrix`])
-    /// and keep only the decode-once plane.
+    /// Append one position's row. Quantized stores encode it through the
+    /// format codec (zero-padded tail group — the same uniform tail
+    /// handling as the quantized matrices) and keep only the decode-once
+    /// plane.
     pub(crate) fn append_row(&mut self, row: &[f32]) {
         match self {
             KvStore::F32 { kvd, data } => {
                 assert_eq!(row.len(), *kvd, "KV row width must match kv_heads×head_dim");
                 data.extend_from_slice(row);
             }
-            KvStore::HiF4 { kvd, units_per_row, lanes, scales } => {
+            KvStore::Quant { quant, kvd, lanes, scales, .. } => {
                 assert_eq!(row.len(), *kvd, "KV row width must match kv_heads×head_dim");
-                let mut buf = [0f32; hif4::GROUP];
-                for u in 0..*units_per_row {
-                    let start = u * hif4::GROUP;
-                    let end = (start + hif4::GROUP).min(*kvd);
-                    buf[..end - start].copy_from_slice(&row[start..end]);
-                    buf[end - start..].fill(0.0);
-                    let unit = hif4::quantize(&buf, RoundMode::NearestEven);
-                    let (l, s) = packed::hif4_unit_plane(&unit);
-                    lanes.push(l);
-                    scales.push(s);
-                }
+                encode_row_planes(*quant, row, lanes, scales);
             }
         }
     }
@@ -153,15 +161,21 @@ impl KvStore {
             KvStore::F32 { kvd, data } => {
                 KvDense { kvd: *kvd, data: DenseData::Borrowed(&data[..rows * *kvd]) }
             }
-            KvStore::HiF4 { kvd, units_per_row, lanes, scales } => {
+            KvStore::Quant { quant, kvd, groups_per_row, lanes, scales } => {
+                let group = quant.group();
                 let mut out = vec![0f32; rows * *kvd];
                 for r in 0..rows {
                     let row = &mut out[r * *kvd..(r + 1) * *kvd];
-                    for u in 0..*units_per_row {
-                        let start = u * hif4::GROUP;
-                        let end = (start + hif4::GROUP).min(*kvd);
-                        let i = r * *units_per_row + u;
-                        lanes[i].decode_into(scales[i], &mut row[start..end]);
+                    for u in 0..*groups_per_row {
+                        let start = u * group;
+                        let end = (start + group).min(*kvd);
+                        let i = r * *groups_per_row + u;
+                        decode_plane(
+                            *quant,
+                            &lanes[i * group..(i + 1) * group],
+                            scales[i],
+                            &mut row[start..end],
+                        );
                     }
                 }
                 KvDense { kvd: *kvd, data: DenseData::Owned(out) }
@@ -172,7 +186,7 @@ impl KvStore {
     fn resident_bytes(&self) -> usize {
         match self {
             KvStore::F32 { data, .. } => std::mem::size_of_val(data.as_slice()),
-            KvStore::HiF4 { lanes, scales, .. } => {
+            KvStore::Quant { lanes, scales, .. } => {
                 std::mem::size_of_val(lanes.as_slice()) + std::mem::size_of_val(scales.as_slice())
             }
         }
@@ -181,7 +195,7 @@ impl KvStore {
     fn wire_bytes(&self) -> usize {
         match self {
             KvStore::F32 { data, .. } => std::mem::size_of_val(data.as_slice()),
-            KvStore::HiF4 { lanes, .. } => lanes.len() * hif4::HiF4Unit::WIRE_BYTES,
+            KvStore::Quant { quant, scales, .. } => scales.len() * quant.wire_bytes_group(),
         }
     }
 }
@@ -209,13 +223,14 @@ impl KvCache {
         self.len == 0
     }
 
-    /// Bytes the cache keeps resident (decode-once planes for HiF4).
+    /// Bytes the cache keeps resident (decode-once planes for quantized
+    /// kinds).
     pub fn resident_bytes(&self) -> usize {
         self.layers.iter().map(|l| l.k.resident_bytes() + l.v.resident_bytes()).sum()
     }
 
-    /// Bytes of the serialized form (the 36-byte HiF4 unit wire layout —
-    /// 4.5 bits/value — for HiF4 caches; same as resident for f32).
+    /// Bytes of the serialized form (the format's canonical packed group
+    /// wire layout for quantized caches; same as resident for f32).
     pub fn wire_bytes(&self) -> usize {
         self.layers.iter().map(|l| l.k.wire_bytes() + l.v.wire_bytes()).sum()
     }
@@ -225,15 +240,15 @@ impl KvCache {
     }
 }
 
-/// Quantize→dequantize every row of `m` through the HiF4 KV codec. Not a
-/// reimplementation: the rows go through the *actual* cache store
+/// Quantize→dequantize every row of `m` through the `kind` KV codec. Not
+/// a reimplementation: the rows go through the *actual* cache store
 /// ([`KvStore::append_row`] encode, [`KvStore::dense`] decode), so a
 /// full-recompute forward with
 /// [`super::transformer::QuantPolicy::kv`] set is a *bit-exact*
-/// reference for HiF4-cached incremental decode by construction — the
-/// two paths cannot drift apart.
-pub fn hif4_qdq_rows(m: &mut Matrix) {
-    let mut store = KvStore::new(KvCacheType::HiF4, m.cols);
+/// reference for quantized-cache incremental decode by construction — the
+/// two paths cannot drift apart, for any format.
+pub fn qdq_rows(kind: QuantKind, m: &mut Matrix) {
+    let mut store = KvStore::new(KvCacheType::Quant(kind), m.cols);
     for r in 0..m.rows {
         store.append_row(m.row(r));
     }
@@ -246,6 +261,7 @@ pub fn hif4_qdq_rows(m: &mut Matrix) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::formats::hif4;
     use crate::tensor::Rng;
 
     fn cfg() -> ModelConfig {
@@ -268,11 +284,14 @@ mod tests {
 
     #[test]
     fn parse_and_label_roundtrip() {
-        for kind in [KvCacheType::F32, KvCacheType::HiF4] {
-            assert_eq!(KvCacheType::parse(kind.label()), Some(kind));
+        let mut kinds = vec![KvCacheType::F32];
+        kinds.extend(QuantKind::ALL.map(KvCacheType::Quant));
+        for kind in kinds {
+            assert_eq!(KvCacheType::parse(kind.label()), Ok(kind));
         }
-        assert_eq!(KvCacheType::parse("HIF4"), Some(KvCacheType::HiF4));
-        assert_eq!(KvCacheType::parse("bf16"), None);
+        assert_eq!(KvCacheType::parse("HIF4"), Ok(KvCacheType::HIF4));
+        let err = KvCacheType::parse("bf16").unwrap_err();
+        assert!(err.contains("f32") && err.contains("mxfp4"), "{err}");
     }
 
     #[test]
@@ -291,30 +310,33 @@ mod tests {
     }
 
     #[test]
-    fn hif4_store_matches_qdq_reference_bitwise() {
+    fn quant_store_matches_qdq_reference_bitwise_all_formats() {
         let c = cfg();
-        let mut cache = KvCache::new(&c, KvCacheType::HiF4);
         let mut rng = Rng::seed(6);
-        // 16-wide rows: one padded tail unit per row.
+        // 16-wide rows: a padded tail group for HiF4/MXFP4, exact fit for
+        // the 16-element formats.
         let rows = Matrix::randn(4, 16, 0.7, &mut rng);
-        for r in 0..rows.rows {
-            cache.layers[1].v.append_row(rows.row(r));
-        }
-        let mut reference = rows.clone();
-        hif4_qdq_rows(&mut reference);
-        let dense = cache.layers[1].v.dense(4);
-        for r in 0..rows.rows {
-            let got: Vec<u32> = dense.row(r).iter().map(|x| x.to_bits()).collect();
-            let want: Vec<u32> = reference.row(r).iter().map(|x| x.to_bits()).collect();
-            assert_eq!(got, want, "row {r}");
+        for kind in QuantKind::ALL {
+            let mut cache = KvCache::new(&c, KvCacheType::Quant(kind));
+            for r in 0..rows.rows {
+                cache.layers[1].v.append_row(rows.row(r));
+            }
+            let mut reference = rows.clone();
+            qdq_rows(kind, &mut reference);
+            let dense = cache.layers[1].v.dense(4);
+            for r in 0..rows.rows {
+                let got: Vec<u32> = dense.row(r).iter().map(|x| x.to_bits()).collect();
+                let want: Vec<u32> = reference.row(r).iter().map(|x| x.to_bits()).collect();
+                assert_eq!(got, want, "{kind} row {r}");
+            }
         }
     }
 
     #[test]
-    fn hif4_cache_is_smaller_resident_and_on_the_wire() {
+    fn quant_cache_is_smaller_resident_and_on_the_wire() {
         let c = cfg();
         let mut f32c = KvCache::new(&c, KvCacheType::F32);
-        let mut hc = KvCache::new(&c, KvCacheType::HiF4);
+        let mut hc = KvCache::new(&c, KvCacheType::HIF4);
         let mut rng = Rng::seed(7);
         let rows = Matrix::randn(8, 16, 1.0, &mut rng);
         for cache in [&mut f32c, &mut hc] {

@@ -13,10 +13,12 @@
 //!   f32 and the linears stay f32 GEMMs — the paper's accuracy-table
 //!   semantics.
 //! * **Real** ([`Transformer::prepack_quantized_weights`]): weights are
-//!   quantized once into units + decode-once integer operand planes held
-//!   on each [`Linear`]; the forward pass then runs those linears through
-//!   the fixed-point QGEMM (backend per [`crate::dotprod::kernel`]),
-//!   quantizing activations on entry — the serving configuration.
+//!   quantized once into any [`QuantKind`]'s groups + decode-once integer
+//!   operand planes held on each [`Linear`]; the forward pass then runs
+//!   those linears through the fixed-point QGEMM (backend per
+//!   [`crate::dotprod::kernel`]), quantizing activations on entry — the
+//!   serving configuration, available for all five block formats through
+//!   the unified [`QuantizedMatrix`] API.
 //!
 //! The *serving* path runs either the L2 JAX model via PJRT or this
 //! rust-native model (`runtime/native.rs`, `server/`); see DESIGN.md.
@@ -27,24 +29,30 @@
 
 use super::config::{Attention, Ffn, LayerKind, ModelConfig};
 use super::kv::{KvCache, KvCacheType};
-use crate::dotprod::packed::{self, PackedHiF4Matrix, PackedNvfp4Matrix};
-use crate::dotprod::qgemm::{self, HiF4Matrix, Nvfp4Matrix};
-use crate::dotprod::Kernel;
+use crate::dotprod::{Kernel, PackedQuantizedMatrix, QuantizedMatrix};
 use crate::formats::rounding::RoundMode;
-use crate::formats::{Format, QuantScheme};
+use crate::formats::{QuantKind, QuantScheme};
 use crate::tensor::gemm::matmul_bt;
 use crate::tensor::{Matrix, Rng};
 use std::collections::HashMap;
 use std::sync::Arc;
 
-/// Quantized weight operands a linear keeps alive across calls: the unit
-/// form (for the reference flow kernel) plus the decode-once integer
-/// planes (for the packed fast path). Arc'd so cloning a quantized model
-/// shares rather than re-packs.
+/// Quantized weight operands a linear keeps alive across calls — one
+/// format-generic pair for any [`QuantKind`]: the group form (for the
+/// reference flow kernel) plus the decode-once integer planes (for the
+/// packed fast path). Arc'd so cloning a quantized model shares rather
+/// than re-packs.
 #[derive(Debug, Clone)]
-pub enum QuantWeights {
-    HiF4 { units: Arc<HiF4Matrix>, planes: Arc<PackedHiF4Matrix> },
-    Nvfp4 { units: Arc<Nvfp4Matrix>, planes: Arc<PackedNvfp4Matrix> },
+pub struct QuantWeights {
+    pub units: Arc<QuantizedMatrix>,
+    pub planes: Arc<PackedQuantizedMatrix>,
+}
+
+impl QuantWeights {
+    /// The block format these operands are quantized in.
+    pub fn kind(&self) -> QuantKind {
+        self.units.kind()
+    }
 }
 
 /// One named linear layer.
@@ -122,10 +130,10 @@ pub struct QuantPolicy {
     pub act: Option<QuantScheme>,
     /// Quantize the attention K (post-RoPE) and V rows through the KV-cache
     /// codec of [`super::kv`] — the **full-recompute reference** for
-    /// HiF4-cached incremental decode: a forward with
-    /// `kv: Some(KvCacheType::HiF4)` sees bit-identical K/V values to a
-    /// cached decode that encoded the same rows on append.
-    /// `None` / `Some(KvCacheType::F32)` are no-ops.
+    /// quantized-cache incremental decode: a forward with
+    /// `kv: Some(KvCacheType::Quant(kind))` sees bit-identical K/V values
+    /// to a cached decode that encoded the same rows on append, for any
+    /// format. `None` / `Some(KvCacheType::F32)` are no-ops.
     pub kv: Option<KvCacheType>,
 }
 
@@ -287,33 +295,50 @@ impl Transformer {
     }
 
     /// **Real**-quantize every paper-quantized linear: quantize its weights
-    /// once into HiF4 units / NVFP4 groups, pack them into decode-once
-    /// integer operand planes, and keep both alive on the linear. From then
-    /// on [`Transformer::forward`] runs those linears through the
-    /// fixed-point QGEMM (activations quantized per call, weights packed
-    /// once and amortized across every call/token) instead of the
-    /// dequantize-then-f32 simulated path. Supports the two formats with a
-    /// fixed-point GEMM datapath.
-    pub fn prepack_quantized_weights(&mut self, format: Format) {
+    /// once into `kind` groups through the unified
+    /// [`QuantizedMatrix`] API, pack them into decode-once integer operand
+    /// planes, and keep both alive on the linear. From then on
+    /// [`Transformer::forward`] runs those linears through the fixed-point
+    /// QGEMM (activations quantized per call, weights packed once and
+    /// amortized across every call/token) instead of the
+    /// dequantize-then-f32 simulated path. Every block format runs this
+    /// path — all five are group-scaled and integer-exact.
+    pub fn prepack_quantized_weights(&mut self, kind: QuantKind) {
         let mode = RoundMode::NearestEven;
         self.visit_linears_mut(&mut |lin| {
             if !lin.kind.quantized_by_paper() {
                 return;
             }
-            lin.qw = Some(match format {
-                Format::HiF4 => {
-                    let units = HiF4Matrix::quantize(&lin.w, mode);
-                    let planes = PackedHiF4Matrix::pack(&units);
-                    QuantWeights::HiF4 { units: Arc::new(units), planes: Arc::new(planes) }
-                }
-                Format::Nvfp4 => {
-                    let units = Nvfp4Matrix::quantize(&lin.w, mode);
-                    let planes = PackedNvfp4Matrix::pack(&units);
-                    QuantWeights::Nvfp4 { units: Arc::new(units), planes: Arc::new(planes) }
-                }
-                other => panic!("no fixed-point GEMM datapath for {other:?}"),
-            });
+            let units = QuantizedMatrix::quantize(kind, &lin.w, mode);
+            let planes = units.pack();
+            lin.qw = Some(QuantWeights { units: Arc::new(units), planes: Arc::new(planes) });
         });
+    }
+
+    /// The block format the prepacked linears run in (`None` when the
+    /// model serves dense f32 weights). Uniform across linears by
+    /// construction — [`Transformer::prepack_quantized_weights`] applies
+    /// one kind everywhere.
+    pub fn quantized_weight_kind(&self) -> Option<QuantKind> {
+        let mut kind = None;
+        self.visit_linears(&mut |lin| {
+            if kind.is_none() {
+                kind = lin.qw.as_ref().map(|qw| qw.kind());
+            }
+        });
+        kind
+    }
+
+    /// Total canonical wire bytes of the prepacked weight operands (the
+    /// 4-bit resident footprint serving metrics report); 0 when dense.
+    pub fn quantized_weight_wire_bytes(&self) -> usize {
+        let mut total = 0usize;
+        self.visit_linears(&mut |lin| {
+            if let Some(qw) = &lin.qw {
+                total += qw.units.wire_bytes();
+            }
+        });
+        total
     }
 
     /// Free the dense f32 weights of every real-quantized linear (those
@@ -338,26 +363,10 @@ impl Transformer {
         let Some(qw) = &lin.qw else {
             return matmul_bt(x, &lin.w);
         };
-        let mode = RoundMode::NearestEven;
-        match qw {
-            QuantWeights::HiF4 { units, planes } => {
-                let qx = HiF4Matrix::quantize(x, mode);
-                match crate::dotprod::kernel() {
-                    Kernel::Packed => {
-                        packed::hif4_gemm_bt_packed(&PackedHiF4Matrix::pack(&qx), planes)
-                    }
-                    Kernel::Flow => qgemm::hif4_gemm_bt_flow(&qx, units),
-                }
-            }
-            QuantWeights::Nvfp4 { units, planes } => {
-                let qx = Nvfp4Matrix::quantize(x, mode);
-                match crate::dotprod::kernel() {
-                    Kernel::Packed => {
-                        packed::nvfp4_gemm_bt_packed(&PackedNvfp4Matrix::pack(&qx), planes)
-                    }
-                    Kernel::Flow => qgemm::nvfp4_gemm_bt_flow(&qx, units),
-                }
-            }
+        let qx = QuantizedMatrix::quantize(qw.kind(), x, RoundMode::NearestEven);
+        match crate::dotprod::kernel() {
+            Kernel::Packed => qx.pack().qgemm_bt(&qw.planes),
+            Kernel::Flow => qx.qgemm_bt_flow(&qw.units),
         }
     }
 
@@ -518,11 +527,11 @@ impl Transformer {
         rope_fwd(&mut qr, seq_lens, cfg.n_heads, cfg.head_dim, cfg.rope_base);
         rope_fwd(&mut k, seq_lens, cfg.kv_heads(), cfg.head_dim, cfg.rope_base);
         // KV-cache reference mode: run K (post-RoPE, like the cache stores
-        // it) and V row-wise through the HiF4 KV codec.
-        let v = if policy.and_then(|p| p.kv) == Some(KvCacheType::HiF4) {
-            super::kv::hif4_qdq_rows(&mut k);
+        // it) and V row-wise through the quantized KV codec.
+        let v = if let Some(KvCacheType::Quant(kind)) = policy.and_then(|p| p.kv) {
+            super::kv::qdq_rows(kind, &mut k);
             let mut vq = v;
-            super::kv::hif4_qdq_rows(&mut vq);
+            super::kv::qdq_rows(kind, &mut vq);
             vq
         } else {
             v
@@ -641,9 +650,9 @@ impl Transformer {
     /// [`KvCacheType::F32`] caches — of whether the prefix was cached or
     /// recomputed: linears are row-independent, attention is
     /// per-sequence, and the score/softmax/context loops replay
-    /// [`causal_attention_fwd`]'s exact operation order. HiF4 caches are
-    /// bit-identical to a full recompute under
-    /// [`QuantPolicy::kv`]`= Some(HiF4)` (`tests/decode_parity.rs`).
+    /// [`causal_attention_fwd`]'s exact operation order. Quantized caches
+    /// are bit-identical to a full recompute under
+    /// [`QuantPolicy::kv`]`= Some(Quant(kind))` (`tests/decode_parity.rs`).
     ///
     /// Quantized serving composes: with
     /// [`Transformer::prepack_quantized_weights`] applied, every linear
@@ -715,9 +724,9 @@ impl Transformer {
 
     /// Cached attention: project the new rows, RoPE them at their absolute
     /// positions, append K/V to each sequence's cache pages, then score
-    /// every new row against its full cached prefix. HiF4 pages decode
-    /// their lane planes once per call (one multiply per element); f32
-    /// pages borrow in place.
+    /// every new row against its full cached prefix. Quantized pages
+    /// decode their lane planes once per call (one multiply per element);
+    /// f32 pages borrow in place.
     fn attention_cached(
         &self,
         li: usize,
@@ -1350,12 +1359,12 @@ mod tests {
 
     #[test]
     fn quant_policy_changes_outputs_but_stays_finite() {
-        use crate::formats::{Format, QuantScheme};
+        use crate::formats::{QuantKind, QuantScheme};
         let m = Transformer::init(tiny_cfg(Attention::Mha, Ffn::SwiGlu), 10);
         let clean = m.forward(&toks(), None, None, None);
         let mut qm = m.clone();
-        qm.quantize_weights(&QuantScheme::direct(Format::HiF4));
-        let policy = QuantPolicy { act: Some(QuantScheme::direct(Format::HiF4)), kv: None };
+        qm.quantize_weights(&QuantScheme::direct(QuantKind::HiF4));
+        let policy = QuantPolicy { act: Some(QuantScheme::direct(QuantKind::HiF4)), kv: None };
         let quant = qm.forward(&toks(), Some(&policy), None, None);
         assert!(quant.data.iter().all(|x| x.is_finite()));
         let diff: f32 =
@@ -1368,16 +1377,16 @@ mod tests {
 
     #[test]
     fn prepacked_linears_track_simulated_quantization() {
-        use crate::formats::{Format, QuantScheme};
+        use crate::formats::{QuantKind, QuantScheme};
         let m = Transformer::init(tiny_cfg(Attention::Mha, Ffn::SwiGlu), 21);
         // Simulated: fake-quant weights + activations, f32 GEMMs.
         let mut sim = m.clone();
-        sim.quantize_weights(&QuantScheme::direct(Format::HiF4));
-        let policy = QuantPolicy { act: Some(QuantScheme::direct(Format::HiF4)), kv: None };
+        sim.quantize_weights(&QuantScheme::direct(QuantKind::HiF4));
+        let policy = QuantPolicy { act: Some(QuantScheme::direct(QuantKind::HiF4)), kv: None };
         let sim_logits = sim.forward(&toks(), Some(&policy), None, None);
         // Real: same quantized operands through the fixed-point QGEMM.
         let mut real = m.clone();
-        real.prepack_quantized_weights(Format::HiF4);
+        real.prepack_quantized_weights(QuantKind::HiF4);
         let real_logits = real.forward(&toks(), None, None, None);
         assert!(real_logits.data.iter().all(|x| x.is_finite()));
         // Identical quantized operands; only GEMM accumulation precision
@@ -1398,9 +1407,9 @@ mod tests {
     #[test]
     fn prepacked_forward_is_deterministic_and_kernel_invariant() {
         use crate::dotprod::{set_kernel, Kernel};
-        use crate::formats::Format;
+        use crate::formats::QuantKind;
         let mut m = Transformer::init(tiny_cfg(Attention::Gqa { kv_heads: 2 }, Ffn::SwiGlu), 22);
-        m.prepack_quantized_weights(Format::HiF4);
+        m.prepack_quantized_weights(QuantKind::HiF4);
         let a = m.forward(&toks(), None, None, None);
         let b = m.forward(&toks(), None, None, None);
         assert_eq!(a.data, b.data, "packed planes reused across calls must be deterministic");
@@ -1424,16 +1433,40 @@ mod tests {
     }
 
     #[test]
-    fn prepacked_nvfp4_linears_run_fixed_point() {
-        use crate::formats::Format;
-        let mut m = Transformer::init(tiny_cfg(Attention::Mha, Ffn::Gelu), 23);
-        m.prepack_quantized_weights(Format::Nvfp4);
-        let logits = m.forward(&toks(), None, None, None);
-        assert!(logits.data.iter().all(|x| x.is_finite()));
+    fn prepacked_linears_run_fixed_point_all_formats() {
+        use crate::formats::QuantKind;
         let clean = Transformer::init(tiny_cfg(Attention::Mha, Ffn::Gelu), 23)
             .forward(&toks(), None, None, None);
-        let diff: f32 = clean.data.iter().zip(&logits.data).map(|(a, b)| (a - b).abs()).sum();
-        assert!(diff > 0.0);
+        for kind in QuantKind::ALL {
+            let mut m = Transformer::init(tiny_cfg(Attention::Mha, Ffn::Gelu), 23);
+            m.prepack_quantized_weights(kind);
+            assert_eq!(m.quantized_weight_kind(), Some(kind));
+            assert!(m.quantized_weight_wire_bytes() > 0);
+            let logits = m.forward(&toks(), None, None, None);
+            assert!(logits.data.iter().all(|x| x.is_finite()), "{kind}");
+            let diff: f32 = clean.data.iter().zip(&logits.data).map(|(a, b)| (a - b).abs()).sum();
+            assert!(diff > 0.0, "{kind} prepacked path must perturb logits");
+        }
+    }
+
+    #[test]
+    fn prepacked_forward_deterministic_new_formats() {
+        // Plane reuse is deterministic for the formats the packed layer
+        // gained in this redesign. Kernel-backend invariance needs no
+        // per-format model test: `linear_fwd` has a single format-generic
+        // dispatch (exercised for both backends by the HiF4 test above,
+        // the only test that writes the process knob — see the note in
+        // `dotprod`'s tests), and flow==packed bit-identity per format is
+        // pinned at the GEMM level by tests/packed_parity.rs.
+        use crate::formats::QuantKind;
+        for kind in [QuantKind::Mxfp4, QuantKind::Mx4, QuantKind::Bfp] {
+            let mut m =
+                Transformer::init(tiny_cfg(Attention::Gqa { kv_heads: 2 }, Ffn::SwiGlu), 24);
+            m.prepack_quantized_weights(kind);
+            let a = m.forward(&toks(), None, None, None);
+            let b = m.forward(&toks(), None, None, None);
+            assert_eq!(a.data, b.data, "{kind} planes reused across calls must be deterministic");
+        }
     }
 
     #[test]
@@ -1538,9 +1571,9 @@ mod tests {
     fn hif4_cached_prefill_matches_kv_quant_reference_bitwise() {
         let m = Transformer::init(tiny_cfg(Attention::Mha, Ffn::SwiGlu), 33);
         let prompt = vec![2usize, 6, 10, 14, 3, 7];
-        let policy = QuantPolicy { act: None, kv: Some(KvCacheType::HiF4) };
+        let policy = QuantPolicy { act: None, kv: Some(KvCacheType::HIF4) };
         let reference = m.forward(&[prompt.clone()], Some(&policy), None, None);
-        let mut cache = KvCache::new(&m.cfg, KvCacheType::HiF4);
+        let mut cache = KvCache::new(&m.cfg, KvCacheType::HIF4);
         let cached = {
             let mut seqs = [CachedSeq { tokens: &prompt, cache: &mut cache }];
             m.forward_cached(&mut seqs)
@@ -1616,7 +1649,7 @@ mod tests {
     fn greedy_generation_matches_full_recompute_both_cache_kinds() {
         let m = Transformer::init(tiny_cfg(Attention::Mha, Ffn::SwiGlu), 35);
         let prompt = vec![4usize, 8, 15];
-        for kind in [KvCacheType::F32, KvCacheType::HiF4] {
+        for kind in [KvCacheType::F32, KvCacheType::HIF4] {
             let cached = m.generate_greedy(&prompt, 6, kind);
             let full = m.generate_greedy_full_recompute(&prompt, 6, kind);
             assert_eq!(cached, full, "{kind:?}");

@@ -6,37 +6,44 @@
 use super::gptq::{gptq_quantize, GptqConfig};
 use crate::eval::harness::{evaluate, EvalRow};
 use crate::eval::tasks::{self, Task};
-use crate::formats::{Format, QuantScheme};
+use crate::formats::{QuantKind, QuantScheme};
 use crate::model::config::ModelConfig;
 use crate::model::train::train;
 use crate::model::transformer::{Calibration, QuantPolicy, Transformer};
 use crate::tensor::Rng;
 
-/// The A-W quantization configurations of the paper's tables, plus
-/// [`QuantType::HiF4Packed`]: the same HiF4 direct cast executed on the
-/// *real* fixed-point path (weights prepacked into integer operand planes,
-/// activations quantized at each linear, GEMMs on the
-/// [`crate::dotprod::kernel`]-selected QGEMM backend) instead of the
-/// dequantize-then-f32 simulated path.
+/// An A-W quantization configuration of the paper's tables: an execution
+/// mode crossed with one [`QuantKind`]. Any of the five block formats
+/// composes with any mode (HiGPTQ's error-feedback grids exist for
+/// HiF4/NVFP4, the two formats [`crate::quant::gptq`] defines), so the
+/// eval harness can run the full cross-format accuracy matrix the
+/// comparison papers use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum QuantType {
+    /// Full precision (the baseline every Acc-Drop row subtracts).
     Bf16,
-    Nvfp4,
-    Nvfp4Pts,
-    HiF4,
-    HiF4Packed,
-    HiF4HiGptq,
+    /// Direct-cast simulated quantization (quant-dequant + f32 GEMMs).
+    Direct(QuantKind),
+    /// Direct cast with software per-tensor scaling (NVFP4's rescue).
+    Pts(QuantKind),
+    /// The *real* fixed-point path: weights prepacked into integer operand
+    /// planes, activations quantized at each linear, GEMMs on the
+    /// [`crate::dotprod::kernel`]-selected QGEMM backend.
+    Packed(QuantKind),
+    /// HiGPTQ weight calibration, then direct-cast activations.
+    HiGptq(QuantKind),
 }
 
 impl QuantType {
-    pub fn label(self) -> &'static str {
+    /// Table label, derived from the one [`QuantKind`] display impl so
+    /// bench JSON, eval tables and `hif4 info` agree on names.
+    pub fn label(self) -> String {
         match self {
-            QuantType::Bf16 => "BF16",
-            QuantType::Nvfp4 => "NVFP4",
-            QuantType::Nvfp4Pts => "NVFP4+PTS",
-            QuantType::HiF4 => "HiF4",
-            QuantType::HiF4Packed => "HiF4 (fixed-point)",
-            QuantType::HiF4HiGptq => "HiF4+HiGPTQ",
+            QuantType::Bf16 => "BF16".to_string(),
+            QuantType::Direct(k) => k.to_string(),
+            QuantType::Pts(k) => format!("{k}+PTS"),
+            QuantType::Packed(k) => format!("{k} (fixed-point)"),
+            QuantType::HiGptq(k) => format!("{k}+HiGPTQ"),
         }
     }
 
@@ -44,10 +51,9 @@ impl QuantType {
     pub fn scheme(self) -> Option<QuantScheme> {
         match self {
             QuantType::Bf16 => None,
-            QuantType::Nvfp4 => Some(QuantScheme::direct(Format::Nvfp4)),
-            QuantType::Nvfp4Pts => Some(QuantScheme::with_pts(Format::Nvfp4)),
-            QuantType::HiF4 | QuantType::HiF4Packed | QuantType::HiF4HiGptq => {
-                Some(QuantScheme::direct(Format::HiF4))
+            QuantType::Pts(k) => Some(QuantScheme::with_pts(k)),
+            QuantType::Direct(k) | QuantType::Packed(k) | QuantType::HiGptq(k) => {
+                Some(QuantScheme::direct(k))
             }
         }
     }
@@ -109,15 +115,16 @@ pub fn quantize_model(
     };
     let mut qm = model.clone();
     match qt {
-        QuantType::HiF4Packed => {
+        QuantType::Packed(kind) => {
             // Real-quantized execution: weights become packed integer
             // planes held across every forward; activations quantize
             // inside the packed linears, so no fake-quant policy applies
-            // on top.
-            qm.prepack_quantized_weights(Format::HiF4);
+            // on top. Works for every block format — the packed QGEMM is
+            // format-generic.
+            qm.prepack_quantized_weights(kind);
             return (qm, None);
         }
-        QuantType::HiF4HiGptq => {
+        QuantType::HiGptq(kind) => {
             // Calibrate on corpus text, then HiGPTQ each quantized linear.
             let mut calib = Calibration::new(xcfg.calib_rows);
             let mut rng = Rng::seed(0x0CA11B);
@@ -126,7 +133,7 @@ pub fn quantize_model(
                     (0..xcfg.batch).map(|_| tasks::training_sequence(&mut rng, xcfg.seq)).collect();
                 model.forward(&batch, None, Some(&mut calib), None);
             }
-            let gcfg = GptqConfig::higptq();
+            let gcfg = GptqConfig { format: kind, ..GptqConfig::higptq() };
             qm.visit_linears_mut(&mut |lin| {
                 if !lin.kind.quantized_by_paper() {
                     return;
@@ -182,7 +189,7 @@ pub fn run_model(
         let (qm, policy) = quantize_model(&model, *qt, xcfg);
         rows.push(evaluate(
             &qm,
-            qt.label(),
+            &qt.label(),
             suite,
             xcfg.eval_items,
             &xcfg.eval_seeds,
@@ -213,7 +220,7 @@ mod tests {
         let block = run_model(
             &cfg,
             &Task::small_suite(),
-            &[QuantType::Bf16, QuantType::HiF4],
+            &[QuantType::Bf16, QuantType::Direct(QuantKind::HiF4)],
             &quick(),
             1,
         );
@@ -242,7 +249,7 @@ mod tests {
         let block = run_model(
             &cfg,
             &[Task::AgreeEasy, Task::Physical],
-            &[QuantType::HiF4, QuantType::HiF4Packed],
+            &[QuantType::Direct(QuantKind::HiF4), QuantType::Packed(QuantKind::HiF4)],
             &xcfg,
             4,
         );
@@ -262,7 +269,11 @@ mod tests {
         let block = run_model(
             &cfg,
             &[Task::AgreeEasy, Task::Physical],
-            &[QuantType::Bf16, QuantType::Nvfp4, QuantType::HiF4],
+            &[
+                QuantType::Bf16,
+                QuantType::Direct(QuantKind::Nvfp4),
+                QuantType::Direct(QuantKind::HiF4),
+            ],
             &quick(),
             2,
         );

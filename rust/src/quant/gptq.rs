@@ -28,7 +28,7 @@
 
 use crate::formats::e6m2::exp2i;
 use crate::formats::rounding::RoundMode;
-use crate::formats::{e2m1, hif4, nvfp4, s1p2, Format};
+use crate::formats::{e2m1, hif4, nvfp4, s1p2, QuantKind};
 use crate::tensor::Matrix;
 use crate::util::threadpool::{self, parallel_row_bands, parallel_row_bands2};
 
@@ -89,7 +89,7 @@ impl GroupGrid {
 /// GPTQ configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct GptqConfig {
-    pub format: Format,
+    pub format: QuantKind,
     pub mode: RoundMode,
     /// Per-tensor scaling before quantization (NVFP4+PTS pipelines).
     pub pts: bool,
@@ -98,7 +98,7 @@ pub struct GptqConfig {
 impl GptqConfig {
     /// The paper's HiGPTQ: GPTQ adapted to HiF4's hierarchical grid.
     pub fn higptq() -> GptqConfig {
-        GptqConfig { format: Format::HiF4, mode: RoundMode::NearestEven, pts: false }
+        GptqConfig { format: QuantKind::HiF4, mode: RoundMode::NearestEven, pts: false }
     }
 
     pub fn group(&self) -> usize {
@@ -107,8 +107,8 @@ impl GptqConfig {
 
     fn make_grid(&self, w: &[f32]) -> GroupGrid {
         match self.format {
-            Format::HiF4 => GroupGrid::hif4(w, self.mode),
-            Format::Nvfp4 => GroupGrid::nvfp4(w, self.mode),
+            QuantKind::HiF4 => GroupGrid::hif4(w, self.mode),
+            QuantKind::Nvfp4 => GroupGrid::nvfp4(w, self.mode),
             other => panic!("GPTQ grid not implemented for {other:?}"),
         }
     }
@@ -474,7 +474,7 @@ mod tests {
         let w = Matrix::randn(8, 48, 0.05, &mut rng);
         let x = Matrix::randn(32, 48, 1.0, &mut rng);
         let cfg =
-            GptqConfig { format: Format::Nvfp4, mode: RoundMode::NearestEven, pts: false };
+            GptqConfig { format: QuantKind::Nvfp4, mode: RoundMode::NearestEven, pts: false };
         let r = gptq_quantize(&w, &x, &cfg);
         assert!(r.proxy_loss.is_finite());
         assert_eq!(r.weights.rows, 8);

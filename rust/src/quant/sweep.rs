@@ -4,7 +4,7 @@
 //! quantized to HiF4, MXFP4, NVFP4 (direct cast) and NVFP4+PTS; MSE against
 //! the original is reported normalized to HiF4's.
 
-use crate::formats::{mse, Format, QuantScheme};
+use crate::formats::{mse, QuantKind, QuantScheme};
 use crate::tensor::{Matrix, Rng};
 
 /// Matrix side length of the paper's experiment.
@@ -27,10 +27,10 @@ pub struct SweepPoint {
 /// The schemes Fig 3 plots, in plot order.
 pub fn schemes() -> Vec<QuantScheme> {
     vec![
-        QuantScheme::direct(Format::HiF4),
-        QuantScheme::direct(Format::Nvfp4),
-        QuantScheme::with_pts(Format::Nvfp4),
-        QuantScheme::direct(Format::Mxfp4),
+        QuantScheme::direct(QuantKind::HiF4),
+        QuantScheme::direct(QuantKind::Nvfp4),
+        QuantScheme::with_pts(QuantKind::Nvfp4),
+        QuantScheme::direct(QuantKind::Mxfp4),
     ]
 }
 

@@ -31,6 +31,10 @@ pub struct Manifest {
     pub kv_heads: usize,
     pub head_dim: usize,
     pub rope_base: f32,
+    /// Default serving format for `serve --native` when `--format` is not
+    /// given (the optional `format <spelling>` manifest key, parsed by the
+    /// single [`crate::formats::QuantKind`] parser; absent = dense bf16).
+    pub format: Option<crate::formats::QuantKind>,
 }
 
 impl Manifest {
@@ -50,6 +54,7 @@ impl Manifest {
         let mut kv_heads = 2;
         let mut head_dim = 16;
         let mut rope_base = 10000.0f32;
+        let mut format = None;
         for line in text.lines() {
             let mut it = line.split_whitespace();
             let Some(key) = it.next() else { continue };
@@ -61,6 +66,13 @@ impl Manifest {
                 "kv_heads" => kv_heads = it.next().context("kv_heads")?.parse()?,
                 "head_dim" => head_dim = it.next().context("head_dim")?.parse()?,
                 "rope_base" => rope_base = it.next().context("rope_base")?.parse()?,
+                "format" => {
+                    let spec = it.next().context("format")?;
+                    format = Some(
+                        spec.parse::<crate::formats::QuantKind>()
+                            .map_err(|e| anyhow::anyhow!("manifest format key: {e}"))?,
+                    );
+                }
                 "qdq" => {
                     qdq_rows = it.next().context("qdq rows")?.parse()?;
                     qdq_cols = it.next().context("qdq cols")?.parse()?;
@@ -92,6 +104,7 @@ impl Manifest {
             kv_heads,
             head_dim,
             rope_base,
+            format,
         })
     }
 
@@ -288,7 +301,7 @@ mod tests {
         let embed_before = store.params["embed"].1.clone();
         let wq_before = store.params["layer0.wq"].1.clone();
         store.quantize_weights(&crate::formats::QuantScheme::direct(
-            crate::formats::Format::HiF4,
+            crate::formats::QuantKind::HiF4,
         ));
         assert_eq!(store.params["embed"].1, embed_before, "embed protected");
         assert_ne!(store.params["layer0.wq"].1, wq_before, "wq quantized");

@@ -19,7 +19,8 @@
 //! This module also hosts the [`DecodeEngine`] — the incremental-decode
 //! executor the continuous-batching server loop drives: per-sequence
 //! [`DecodeStream`]s carry a KV-cache page each ([`KvCacheType`] knob:
-//! f32 or HiF4 units encoded on append), and one [`DecodeEngine::step`]
+//! f32 or any block format encoded on append), and one
+//! [`DecodeEngine::step`]
 //! advances a mixed batch of prefilling and decoding sequences by one
 //! greedy token through [`Transformer::forward_cached`].
 //!

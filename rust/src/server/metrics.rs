@@ -1,7 +1,20 @@
-//! Serving metrics: lock-light latency histogram + throughput counters.
+//! Serving metrics: lock-light latency histogram + throughput counters,
+//! tagged with the engine's quantization configuration so every
+//! `BENCH_decode`/serving row is attributable to a format.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
 use std::time::Duration;
+
+/// The quantization configuration a server's counters describe: weight
+/// format label (a [`crate::formats::QuantKind`] spelling or `bf16`), the
+/// KV-cache label, and the resident quantized-weight wire bytes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FormatTag {
+    pub format: String,
+    pub kv: String,
+    pub weight_wire_bytes: u64,
+}
 
 /// Exponential-bucket latency histogram (1µs .. ~17s) + counters.
 /// All atomic: writers never block each other or the readers.
@@ -14,11 +27,29 @@ pub struct Metrics {
     /// buckets[i] counts latencies in [2^i, 2^(i+1)) µs.
     buckets: [AtomicU64; 25],
     total_us: AtomicU64,
+    /// Set once at engine bring-up ([`Metrics::set_format_tag`]).
+    format_tag: OnceLock<FormatTag>,
 }
 
 impl Metrics {
     pub fn new() -> Metrics {
         Metrics::default()
+    }
+
+    /// Tag these counters with the serving quantization configuration
+    /// (first caller wins — the tag describes the engine, which never
+    /// changes over a server's lifetime).
+    pub fn set_format_tag(&self, format: &str, kv: &str, weight_wire_bytes: u64) {
+        let _ = self.format_tag.set(FormatTag {
+            format: format.to_string(),
+            kv: kv.to_string(),
+            weight_wire_bytes,
+        });
+    }
+
+    /// The engine's quantization tag, if one was set.
+    pub fn format_tag(&self) -> Option<&FormatTag> {
+        self.format_tag.get()
     }
 
     pub fn record_request(&self) {
@@ -72,8 +103,15 @@ impl Metrics {
     }
 
     pub fn summary(&self) -> String {
+        let tag = match self.format_tag() {
+            Some(t) => {
+                format!("format={} kv={} weights_wire={}B ", t.format, t.kv, t.weight_wire_bytes)
+            }
+            None => String::new(),
+        };
         format!(
-            "requests={} responses={} batches={} mean_batch={:.2} lat(mean={:.0}us p50<{}us p99<{}us)",
+            "{}requests={} responses={} batches={} mean_batch={:.2} lat(mean={:.0}us p50<{}us p99<{}us)",
+            tag,
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
@@ -115,5 +153,19 @@ mod tests {
         let m = Metrics::new();
         assert_eq!(m.percentile_us(0.99), 0);
         assert_eq!(m.mean_us(), 0.0);
+        assert!(m.format_tag().is_none());
+        assert!(!m.summary().contains("format="));
+    }
+
+    #[test]
+    fn format_tag_reaches_summary_once() {
+        let m = Metrics::new();
+        m.set_format_tag("mxfp4", "f32", 1234);
+        // First caller wins; later attempts don't clobber the engine tag.
+        m.set_format_tag("bf16", "hif4", 0);
+        let t = m.format_tag().expect("tag set");
+        assert_eq!((t.format.as_str(), t.kv.as_str(), t.weight_wire_bytes), ("mxfp4", "f32", 1234));
+        let s = m.summary();
+        assert!(s.contains("format=mxfp4") && s.contains("kv=f32") && s.contains("1234B"), "{s}");
     }
 }

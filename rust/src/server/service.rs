@@ -24,9 +24,10 @@
 //!   the slot and its KV-cache page. With
 //!   [`Transformer::prepack_quantized_weights`] applied first, every step
 //!   runs the real fixed-point QGEMM over weight planes packed exactly
-//!   once, and the KV cache itself can hold HiF4 units
-//!   (`NativeServerConfig::kv`) — quantized serving end to end with no
-//!   XLA runtime required.
+//!   once (any of the five block formats, through the unified
+//!   `QuantizedMatrix` API), and the KV cache itself can hold quantized
+//!   planes (`NativeServerConfig::kv`) — quantized serving end to end
+//!   with no XLA runtime required.
 
 use super::batcher::{run_batcher, BatchPolicy, ContinuousScheduler, Pending};
 use super::metrics::Metrics;
@@ -150,7 +151,18 @@ impl Server {
         // index logits for every pending request (out of bounds).
         let mut policy = cfg.policy;
         policy.max_batch = policy.max_batch.clamp(1, manifest.batch);
-        start_engine(policy, cfg.workers.max(1), addr, factory)
+        // Attribute the counters to the served artifact's format via the
+        // shared sniffing rule (the PJRT path has no KV cache and no
+        // resident quantized planes).
+        let format = crate::formats::QuantKind::from_artifact_name(&cfg.artifact)
+            .map(|k| k.spelling())
+            .unwrap_or("bf16");
+        let server = start_engine(policy, cfg.workers.max(1), addr, factory)?;
+        // "f32": the PJRT path has no quantized cache, and the tag stays
+        // inside the f32/QuantKind-spelling vocabulary every consumer of
+        // the kv axis parses.
+        server.metrics.set_format_tag(format, "f32", 0);
+        Ok(server)
     }
 
     /// Serve the rust-native `model` with `cfg.workers` continuous-
@@ -160,15 +172,22 @@ impl Server {
     /// Quantized serving: call
     /// [`Transformer::prepack_quantized_weights`] before handing the
     /// model over, and every step runs the fixed-point QGEMM over weight
-    /// planes packed once; `cfg.kv` additionally stores the KV cache as
-    /// HiF4 units.
+    /// planes packed once; `cfg.kv` additionally stores the KV cache in
+    /// a quantized format.
     pub fn start_native(
         model: Arc<Transformer>,
         cfg: NativeServerConfig,
         addr: &str,
     ) -> Result<Server> {
+        // Attribute every counter to the active quantization config: the
+        // prepacked weight format (one QuantKind across linears by
+        // construction), the KV-cache kind, and the resident quantized
+        // weight bytes in the canonical wire form.
+        let weight_format = model.quantized_weight_kind().map(|k| k.spelling()).unwrap_or("bf16");
+        let weight_wire = model.quantized_weight_wire_bytes() as u64;
         let engine = Arc::new(DecodeEngine::new(model, cfg.kv, cfg.seq.max(1)));
         let metrics = Arc::new(Metrics::new());
+        metrics.set_format_tag(weight_format, cfg.kv.label(), weight_wire);
         let stop = Arc::new(AtomicBool::new(false));
         let (tx, rx) = channel::<Pending<ReplyHandle>>();
         let rx = Arc::new(Mutex::new(rx));

@@ -144,12 +144,44 @@ mod tests {
     }
 
     #[test]
+    fn quant_kind_parse_display_roundtrip_property() {
+        // The single QuantKind parser round-trips its own spelling and its
+        // display name, case-folded arbitrarily; any other string of the
+        // same alphabet fails with an error that lists the valid names.
+        use crate::formats::QuantKind;
+        let idx = RangeUsize { lo: 0, hi: QuantKind::ALL.len() };
+        check(200, 11, &idx, |i| {
+            let k = QuantKind::ALL[*i];
+            let spell = k.spelling();
+            // Mixed-case variants of the spelling and the display label
+            // must all parse back to the same kind.
+            let upper = spell.to_ascii_uppercase();
+            let mixed: String = spell
+                .chars()
+                .enumerate()
+                .map(|(j, c)| if j % 2 == 0 { c.to_ascii_uppercase() } else { c })
+                .collect();
+            spell.parse() == Ok(k)
+                && upper.parse() == Ok(k)
+                && mixed.parse() == Ok(k)
+                && k.name().parse() == Ok(k)
+                && k.to_string() == k.name()
+        });
+        // BFP4's display label parses too (the bfp4 alias).
+        assert_eq!("BFP4".parse::<QuantKind>(), Ok(QuantKind::Bfp));
+        let err = "int4".parse::<QuantKind>().unwrap_err();
+        for k in QuantKind::ALL {
+            assert!(err.contains(k.spelling()), "error must list {k}: {err}");
+        }
+    }
+
+    #[test]
     fn format_soundness_properties() {
         // For every format and any finite input: output is finite, zeros
         // stay zero, signs never flip, magnitudes never overshoot the input
         // peak by more than the scale-rounding slack.
-        use crate::formats::{Format, QuantScheme};
-        for f in [Format::HiF4, Format::Nvfp4, Format::Mxfp4, Format::Mx4, Format::VanillaBfp] {
+        use crate::formats::{QuantKind, QuantScheme};
+        for f in QuantKind::ALL {
             let scheme = QuantScheme::direct(f);
             check(60, 7, &gen_vec_f32(f.group(), 100.0), |v| {
                 let q = scheme.quant_dequant_vec(v);

@@ -33,7 +33,7 @@ fn drive_solo(eng: &DecodeEngine, stream: &mut DecodeStream, n: usize) -> Vec<u3
 
 #[test]
 fn mid_flight_admission_matches_solo_generation() {
-    for kind in [KvCacheType::F32, KvCacheType::HiF4] {
+    for kind in [KvCacheType::F32, KvCacheType::HIF4] {
         let eng = engine(kind);
         let (pa, pb) = (vec![1usize, 5, 9, 13], vec![2usize, 6, 10]);
         let solo_a = eng.model().generate_greedy(&pa, 6, kind);
@@ -63,7 +63,7 @@ fn mid_flight_admission_matches_solo_generation() {
 fn batch_composition_never_changes_a_streams_tokens() {
     // The same stream stepped inside batches of different shapes and
     // orders yields bit-identical tokens: admission order cannot matter.
-    let eng = engine(KvCacheType::HiF4);
+    let eng = engine(KvCacheType::HIF4);
     let prompts: Vec<Vec<usize>> =
         (0..3).map(|s| (0..5).map(|i| 1 + (i * 11 + s * 3) % 300).collect()).collect();
     let solo: Vec<Vec<usize>> =
@@ -154,7 +154,7 @@ fn server_slot_reuse_outlives_many_generations() {
 #[test]
 fn server_output_is_independent_of_arrival_order() {
     for (tag, order) in [("order_fwd", [0usize, 1, 2]), ("order_rev", [2, 1, 0])] {
-        let (server, model) = start_server(tag, KvCacheType::HiF4, 3);
+        let (server, model) = start_server(tag, KvCacheType::HIF4, 3);
         let prompts: Vec<Vec<usize>> =
             (0..3).map(|s| (0..3).map(|i| 2 + (i * 7 + s * 29) % 90).collect()).collect();
         let mut clients: Vec<(usize, Client)> = Vec::new();
@@ -165,7 +165,7 @@ fn server_output_is_independent_of_arrival_order() {
         }
         for (i, c) in clients.iter_mut() {
             let stream = c.recv_stream().unwrap();
-            let want = model.generate_greedy(&prompts[*i], 4, KvCacheType::HiF4);
+            let want = model.generate_greedy(&prompts[*i], 4, KvCacheType::HIF4);
             let got: Vec<usize> = stream.iter().map(|r| r.token as usize).collect();
             assert_eq!(got, want, "prompt {i} arriving under order {order:?}");
         }

@@ -6,7 +6,7 @@
 //! coverage, with prepacked fixed-point linears, and for any thread
 //! count.
 
-use hif4::formats::Format;
+use hif4::formats::QuantKind;
 use hif4::model::kv::{KvCache, KvCacheType};
 use hif4::model::transformer::{CachedSeq, QuantPolicy, Transformer};
 use hif4::model::zoo;
@@ -48,11 +48,11 @@ fn f32_cached_prefill_is_bitwise_identical_to_full_forward() {
 
 #[test]
 fn hif4_cached_prefill_matches_kv_codec_reference_bitwise() {
-    let policy = QuantPolicy { act: None, kv: Some(KvCacheType::HiF4) };
+    let policy = QuantPolicy { act: None, kv: Some(KvCacheType::HIF4) };
     for (mi, m) in models().iter().enumerate() {
         let p = prompt(m.cfg.vocab, 12, mi);
         let reference = m.forward(&[p.clone()], Some(&policy), None, None);
-        let mut cache = KvCache::new(&m.cfg, KvCacheType::HiF4);
+        let mut cache = KvCache::new(&m.cfg, KvCacheType::HIF4);
         let cached = {
             let mut seqs = [CachedSeq { tokens: &p, cache: &mut cache }];
             m.forward_cached(&mut seqs)
@@ -72,12 +72,17 @@ fn greedy_decode_is_token_identical_to_full_recompute_f32() {
 }
 
 #[test]
-fn greedy_decode_is_token_identical_to_full_recompute_hif4() {
+fn greedy_decode_is_token_identical_to_full_recompute_all_quant_kinds() {
+    // Every block format's KV codec holds the cached-vs-recompute
+    // contract — the reference applies the same store encode/decode via
+    // QuantPolicy::kv, so parity is by construction, pinned here.
     for (mi, m) in models().iter().enumerate() {
         let p = prompt(m.cfg.vocab, 8, mi);
-        let cached = m.generate_greedy(&p, N_NEW, KvCacheType::HiF4);
-        let full = m.generate_greedy_full_recompute(&p, N_NEW, KvCacheType::HiF4);
-        assert_eq!(cached, full, "{}", m.cfg.name);
+        for kind in QuantKind::ALL.map(KvCacheType::Quant) {
+            let cached = m.generate_greedy(&p, N_NEW, kind);
+            let full = m.generate_greedy_full_recompute(&p, N_NEW, kind);
+            assert_eq!(cached, full, "{} {kind:?}", m.cfg.name);
+        }
     }
 }
 
@@ -86,9 +91,9 @@ fn greedy_decode_parity_survives_prepacked_fixed_point_linears() {
     // The serving configuration: real-quantized weights (decode-once
     // planes, fixed-point QGEMM) under both cache kinds.
     for (mi, mut m) in models().into_iter().enumerate() {
-        m.prepack_quantized_weights(Format::HiF4);
+        m.prepack_quantized_weights(QuantKind::HiF4);
         let p = prompt(m.cfg.vocab, 8, mi);
-        for kind in [KvCacheType::F32, KvCacheType::HiF4] {
+        for kind in [KvCacheType::F32, KvCacheType::HIF4] {
             let cached = m.generate_greedy(&p, N_NEW, kind);
             let full = m.generate_greedy_full_recompute(&p, N_NEW, kind);
             assert_eq!(cached, full, "{} {kind:?}", m.cfg.name);
@@ -110,7 +115,7 @@ fn greedy_decode_parity_holds_for_any_thread_count() {
         threadpool::set_threads(t);
         results.push((
             m.generate_greedy(&p, N_NEW, KvCacheType::F32),
-            m.generate_greedy(&p, N_NEW, KvCacheType::HiF4),
+            m.generate_greedy(&p, N_NEW, KvCacheType::HIF4),
         ));
     }
     threadpool::set_threads(before);
@@ -125,7 +130,7 @@ fn hif4_cache_page_is_smaller_than_f32() {
     let m = Transformer::init(zoo::llama3_tiny(), 405);
     let p = prompt(m.cfg.vocab, 16, 1);
     let mut f32c = KvCache::new(&m.cfg, KvCacheType::F32);
-    let mut hc = KvCache::new(&m.cfg, KvCacheType::HiF4);
+    let mut hc = KvCache::new(&m.cfg, KvCacheType::HIF4);
     for cache in [&mut f32c, &mut hc] {
         let mut seqs = [CachedSeq { tokens: &p, cache }];
         m.forward_cached(&mut seqs);

@@ -7,7 +7,7 @@
 //! loud message) when `artifacts/` is missing so `cargo test` stays green
 //! in a fresh checkout.
 
-use hif4::formats::{Format, QuantScheme};
+use hif4::formats::{QuantKind, QuantScheme};
 use hif4::runtime::artifact::Manifest;
 use hif4::runtime::client::{literal_f32, tokens_literal, Runtime};
 use hif4::server::batcher::BatchPolicy;
@@ -37,7 +37,7 @@ fn qdq_artifact_matches_rust_codec_bit_exactly() {
     let (rows, cols) = (m.qdq_rows, m.qdq_cols);
 
     for (artifact, format) in
-        [("qdq_hif4.hlo.txt", Format::HiF4), ("qdq_nvfp4.hlo.txt", Format::Nvfp4)]
+        [("qdq_hif4.hlo.txt", QuantKind::HiF4), ("qdq_nvfp4.hlo.txt", QuantKind::Nvfp4)]
     {
         let exe = runtime.load(&dir.join(artifact)).unwrap();
         let mut rng = Rng::seed(2024);

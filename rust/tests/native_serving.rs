@@ -3,7 +3,7 @@
 //! the real-quantized configuration where HiF4 weight planes are packed
 //! once at startup and every request runs the fixed-point QGEMM.
 
-use hif4::formats::Format;
+use hif4::formats::QuantKind;
 use hif4::model::kv::KvCacheType;
 use hif4::runtime::artifact::Manifest;
 use hif4::runtime::native::transformer_from_store;
@@ -84,7 +84,7 @@ fn native_server_serves_prepacked_hif4_deterministically() {
     let mut model = transformer_from_store(&manifest, &store).unwrap();
     // Real-quantized serving: weight planes packed exactly once here, and
     // the dense f32 planes freed — forward must never touch them.
-    model.prepack_quantized_weights(Format::HiF4);
+    model.prepack_quantized_weights(QuantKind::HiF4);
     model.release_dense_weights();
     let model = Arc::new(model);
 
@@ -110,6 +110,75 @@ fn native_server_serves_prepacked_hif4_deterministically() {
     let direct = run_batch_native(&model, &[pending(9, req.tokens.clone())], manifest.seq);
     assert_eq!(direct[0].token, first.token);
     assert_eq!(direct[0].logprob.to_bits(), first.logprob.to_bits());
+}
+
+#[test]
+fn native_server_serves_every_block_format_end_to_end() {
+    // The acceptance contract of the unified QuantTensor API: all five
+    // formats run the packed integer QGEMM behind `serve --native`
+    // through the same QuantizedMatrix surface, and the server's metrics
+    // carry the format tag + resident wire bytes.
+    for kind in QuantKind::ALL {
+        let dir = manifest_dir(kind.spelling());
+        write_manifest(&dir);
+        let manifest = Manifest::load(&dir).unwrap();
+        let store = manifest.init_params(17);
+        let mut model = transformer_from_store(&manifest, &store).unwrap();
+        model.prepack_quantized_weights(kind);
+        model.release_dense_weights();
+        let wire = model.quantized_weight_wire_bytes();
+        assert!(wire > 0, "{kind}");
+        let model = Arc::new(model);
+
+        let cfg = NativeServerConfig {
+            policy: BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) },
+            workers: 1,
+            seq: manifest.seq,
+            kv: KvCacheType::F32,
+        };
+        let server = Server::start_native(Arc::clone(&model), cfg, "127.0.0.1:0").unwrap();
+        let tag = server.metrics.format_tag().expect("native engine must tag its metrics");
+        assert_eq!(tag.format, kind.spelling(), "{kind}");
+        assert_eq!(tag.weight_wire_bytes, wire as u64, "{kind}");
+        assert!(server.metrics.summary().contains(kind.spelling()), "{kind}");
+
+        let mut client = Client::connect(server.addr).unwrap();
+        let req = Request::next_token(1, vec![3, 1, 4, 1, 5]);
+        let resp = client.call(&req).unwrap();
+        assert!(resp.logprob.is_finite(), "{kind}");
+        let direct = run_batch_native(&model, &[pending(2, req.tokens.clone())], manifest.seq);
+        assert_eq!(direct[0].token, resp.token, "{kind}");
+        assert_eq!(direct[0].logprob.to_bits(), resp.logprob.to_bits(), "{kind}");
+    }
+}
+
+#[test]
+fn manifest_format_key_parses_through_quant_kind() {
+    // The optional manifest `format` key goes through the single
+    // QuantKind parser and lands on Manifest::format.
+    let dir = manifest_dir("fmtkey");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.txt"),
+        "batch 2\nseq 8\nvocab 16\nformat mxfp4\nparam embed 16 8\n",
+    )
+    .unwrap();
+    let m = Manifest::load(&dir).unwrap();
+    assert_eq!(m.format, Some(QuantKind::Mxfp4));
+    // A manifest without the key defaults to dense serving.
+    let dir2 = manifest_dir("fmtkey_none");
+    write_manifest(&dir2);
+    assert_eq!(Manifest::load(&dir2).unwrap().format, None);
+    // A bad spelling fails loudly with the shared error message.
+    let dir3 = manifest_dir("fmtkey_bad");
+    std::fs::create_dir_all(&dir3).unwrap();
+    std::fs::write(
+        dir3.join("manifest.txt"),
+        "batch 2\nseq 8\nvocab 16\nformat int4\nparam embed 16 8\n",
+    )
+    .unwrap();
+    let err = format!("{:#}", Manifest::load(&dir3).unwrap_err());
+    assert!(err.contains("mxfp4"), "error must list valid names: {err}");
 }
 
 #[test]

@@ -1,19 +1,19 @@
-//! Packed-plane bit-equality: the decode-once integer kernels must equal
-//! the element-wise PE flows — and the flows equal the dequantized-f64
-//! reference — **exactly**, across scale decades, on zero units, and under
-//! NaN-scale poisoning. This is the contract that makes the kernel-backend
-//! selector a pure performance knob.
+//! Packed-plane bit-equality across **all five block formats**: the
+//! decode-once integer kernels must equal the element-wise flow partials
+//! — and the flows equal the dequantized-f64 reference — **exactly**,
+//! across ≥6 magnitude decades, on zero groups, under NaN-scale
+//! poisoning, on ragged tail-group shapes, and for any thread count.
+//! This is the contract that makes the kernel-backend selector a pure
+//! performance knob for every format the unified `QuantizedMatrix` API
+//! serves.
 
-use hif4::dotprod::packed::{
-    hif4_gemm_bt_packed_threads, nvfp4_gemm_bt_packed_threads, PackedHiF4Matrix,
-    PackedNvfp4Matrix,
+use hif4::dotprod::quant_tensor::{
+    dot_dequant_ref, qgemm_bt_flow_threads, qgemm_bt_packed_threads, BfpFmt, BlockFormat,
+    HiF4Fmt, Mx4Fmt, Mxfp4Fmt, Nvfp4Fmt, PackedQuantMat, QuantMat,
 };
-use hif4::dotprod::qgemm::{
-    hif4_gemm_bt_flow_threads, hif4_gemm_bt_threads, nvfp4_gemm_bt_flow_threads, HiF4Matrix,
-    Nvfp4Matrix,
-};
-use hif4::dotprod::{hif4_flow, nvfp4_flow};
+use hif4::dotprod::QuantizedMatrix;
 use hif4::formats::rounding::RoundMode;
+use hif4::formats::QuantKind;
 use hif4::tensor::{Matrix, Rng};
 
 const MODE: RoundMode = RoundMode::NearestEven;
@@ -29,120 +29,143 @@ fn feq32_all(a: &[f32], b: &[f32]) -> bool {
         && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits() || (x.is_nan() && y.is_nan()))
 }
 
-#[test]
-fn hif4_packed_dot_equals_flow_and_dequant_ref_across_decades() {
-    // ≥6 scale decades: sigma from 1e-3 to 1e2, 300 random unit pairs. The
-    // three computations — packed integer dot, PE flow, dequantized f64
-    // walk — must agree bit for bit.
-    let mut rng = Rng::seed(7001);
+/// One format's group-level parity: packed partial == flow partial ==
+/// dequantized-f64 reference, 300 random group pairs over ≥6 decades.
+fn group_parity<F: BlockFormat>(seed: u64) {
+    let mut rng = Rng::seed(seed);
     for round in 0..300 {
         let sigma = 10f32.powi((round % 6) - 3);
-        let va: Vec<f32> = (0..64).map(|_| rng.normal() as f32 * sigma).collect();
-        let vb: Vec<f32> = (0..64).map(|_| rng.normal() as f32 * sigma).collect();
-        let qa = HiF4Matrix::quantize(&Matrix::from_vec(1, 64, va), MODE);
-        let qb = HiF4Matrix::quantize(&Matrix::from_vec(1, 64, vb), MODE);
-        let pa = PackedHiF4Matrix::pack(&qa);
-        let pb = PackedHiF4Matrix::pack(&qb);
-        let packed = pa.dot_unit(0, 0, &pb, 0, 0);
-        let flow = hif4_flow::dot(&qa.row_units(0)[0], &qb.row_units(0)[0]);
-        let reference = hif4_flow::dot_dequant_ref(&qa.row_units(0)[0], &qb.row_units(0)[0]);
-        assert!(feq64(packed, flow), "round {round} (σ={sigma}): packed {packed} vs flow {flow}");
-        assert!(feq64(flow, reference), "round {round}: flow {flow} vs ref {reference}");
-    }
-}
-
-#[test]
-fn nvfp4_packed_group_equals_flow_and_dequant_ref_across_decades() {
-    let mut rng = Rng::seed(7002);
-    for round in 0..300 {
-        let sigma = 10f32.powi((round % 6) - 3);
-        let va: Vec<f32> = (0..16).map(|_| rng.normal() as f32 * sigma).collect();
-        let vb: Vec<f32> = (0..16).map(|_| rng.normal() as f32 * sigma).collect();
-        let qa = Nvfp4Matrix::quantize(&Matrix::from_vec(1, 16, va), MODE);
-        let qb = Nvfp4Matrix::quantize(&Matrix::from_vec(1, 16, vb), MODE);
-        let pa = PackedNvfp4Matrix::pack(&qa);
-        let pb = PackedNvfp4Matrix::pack(&qb);
+        let va: Vec<f32> = (0..F::GROUP).map(|_| rng.normal() as f32 * sigma).collect();
+        let vb: Vec<f32> = (0..F::GROUP).map(|_| rng.normal() as f32 * sigma).collect();
+        let qa = QuantMat::<F>::quantize(&Matrix::from_vec(1, F::GROUP, va), MODE);
+        let qb = QuantMat::<F>::quantize(&Matrix::from_vec(1, F::GROUP, vb), MODE);
+        let pa = PackedQuantMat::pack(&qa);
+        let pb = PackedQuantMat::pack(&qb);
         let packed = pa.dot_group(0, 0, &pb, 0, 0);
-        let ga = &qa.row_groups(0)[0];
-        let gb = &qb.row_groups(0)[0];
-        let flow = nvfp4_flow::dot_group(ga, gb);
-        let reference =
-            nvfp4_flow::dot64_dequant_ref(core::slice::from_ref(ga), core::slice::from_ref(gb));
-        assert!(feq64(packed, flow), "round {round} (σ={sigma})");
-        assert!(feq64(flow, reference), "round {round}");
+        let flow = F::dot_flow(&qa.row_groups(0)[0], &qb.row_groups(0)[0]);
+        let reference = dot_dequant_ref::<F>(&qa.row_groups(0)[0], &qb.row_groups(0)[0]);
+        assert!(
+            feq64(packed, flow),
+            "{} round {round} (σ={sigma}): packed {packed} vs flow {flow}",
+            F::KIND
+        );
+        assert!(
+            feq64(flow, reference),
+            "{} round {round}: flow {flow} vs ref {reference}",
+            F::KIND
+        );
     }
 }
 
 #[test]
-fn zero_units_dot_to_exact_positive_zero() {
-    let z = HiF4Matrix::quantize(&Matrix::zeros(1, 64), MODE);
-    let pz = PackedHiF4Matrix::pack(&z);
-    let d = pz.dot_unit(0, 0, &pz, 0, 0);
-    assert_eq!(d.to_bits(), 0f64.to_bits(), "zero units must dot to +0.0 exactly");
-    assert_eq!(d.to_bits(), hif4_flow::dot(&z.row_units(0)[0], &z.row_units(0)[0]).to_bits());
+fn packed_dot_equals_flow_and_dequant_ref_across_decades_all_formats() {
+    group_parity::<HiF4Fmt>(7001);
+    group_parity::<Nvfp4Fmt>(7002);
+    group_parity::<Mxfp4Fmt>(7003);
+    group_parity::<Mx4Fmt>(7004);
+    group_parity::<BfpFmt>(7005);
 }
 
 #[test]
-fn nan_scale_poisons_packed_dot_and_gemm() {
-    let mut rng = Rng::seed(7003);
-    let mut va: Vec<f32> = (0..130).map(|_| rng.normal() as f32).collect();
-    va[70] = f32::NAN; // poisons A's second unit only
-    let vb: Vec<f32> = (0..130).map(|_| rng.normal() as f32).collect();
-    let qa = HiF4Matrix::quantize(&Matrix::from_vec(1, 130, va), MODE);
-    let qb = HiF4Matrix::quantize(&Matrix::from_vec(2, 130, [vb.clone(), vb].concat()), MODE);
-    assert!(qa.row_units(0)[1].scale.is_nan(), "unit 1 must be NaN-poisoned");
-    let pa = PackedHiF4Matrix::pack(&qa);
-    let pb = PackedHiF4Matrix::pack(&qb);
-    assert!(pa.dot_unit(0, 1, &pb, 0, 1).is_nan());
-    // Clean unit 0 still matches the flow exactly.
-    assert_eq!(
-        pa.dot_unit(0, 0, &pb, 0, 0).to_bits(),
-        hif4_flow::dot(&qa.row_units(0)[0], &qb.row_units(0)[0]).to_bits()
-    );
-    // GEMM: every output touching the poisoned unit is NaN on both paths.
-    let flow = hif4_gemm_bt_flow_threads(&qa, &qb, 1);
-    let packed = hif4_gemm_bt_packed_threads(&pa, &pb, 1);
-    assert!(flow.data.iter().all(|x| x.is_nan()));
-    assert!(packed.data.iter().all(|x| x.is_nan()));
+fn zero_groups_dot_to_exact_zero_all_formats() {
+    for kind in QuantKind::ALL {
+        let g = kind.group();
+        let z = QuantizedMatrix::quantize(kind, &Matrix::zeros(1, g), MODE);
+        let pz = z.pack();
+        let c = pz.qgemm_bt_threads(&pz, 1);
+        assert_eq!(c.data[0], 0.0, "{kind}: zero groups must dot to zero exactly");
+        let flow = z.qgemm_bt_flow_threads(&z, 1);
+        assert_eq!(c.data[0].to_bits(), flow.data[0].to_bits(), "{kind}");
+    }
 }
 
 #[test]
-fn hif4_packed_gemm_equals_flow_gemm_bitwise() {
-    // Ragged shapes: clean multiples, sub-unit K, tails of the 64-group.
-    let mut rng = Rng::seed(7004);
-    for (m, k, n) in [(5, 130, 7), (16, 64, 16), (1, 200, 9), (23, 72, 11), (8, 40, 3)] {
-        let a = Matrix::randn(m, k, 1.0, &mut rng);
-        let b = Matrix::randn(n, k, 1.0, &mut rng);
-        let qa = HiF4Matrix::quantize(&a, MODE);
-        let qb = HiF4Matrix::quantize(&b, MODE);
-        let flow = hif4_gemm_bt_flow_threads(&qa, &qb, 1);
-        let pa = PackedHiF4Matrix::pack(&qa);
-        let pb = PackedHiF4Matrix::pack(&qb);
-        for threads in [1, 3, 4] {
-            let packed = hif4_gemm_bt_packed_threads(&pa, &pb, threads);
-            assert!(feq32_all(&flow.data, &packed.data), "{m}x{k}x{n} threads={threads}");
+fn nan_scale_poisons_packed_dot_and_gemm_all_formats() {
+    let mut rng = Rng::seed(7006);
+    for kind in QuantKind::ALL {
+        let g = kind.group();
+        // Two groups per row; poison only A's second group.
+        let k = 2 * g + g / 2; // ragged tail too
+        let mut va: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
+        va[g + 1] = f32::NAN;
+        let vb: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
+        let qa = QuantizedMatrix::quantize(kind, &Matrix::from_vec(1, k, va), MODE);
+        let qb = QuantizedMatrix::quantize(kind, &Matrix::from_vec(1, k, vb), MODE);
+        // GEMM: every output touching the poisoned group is NaN on both
+        // backends (here: the single output cell).
+        let flow = qa.qgemm_bt_flow_threads(&qb, 1);
+        let packed = qa.pack_threads(1).qgemm_bt_threads(&qb.pack_threads(1), 1);
+        assert!(flow.data.iter().all(|x| x.is_nan()), "{kind} flow");
+        assert!(packed.data.iter().all(|x| x.is_nan()), "{kind} packed");
+    }
+}
+
+#[test]
+fn packed_gemm_equals_flow_gemm_bitwise_all_formats() {
+    // Ragged shapes: clean multiples, sub-group K, tails of every group
+    // size (64/32/16), plus NVFP4's non-multiple-of-PE tails.
+    let mut rng = Rng::seed(7007);
+    for kind in QuantKind::ALL {
+        for (m, k, n) in [(5, 130, 7), (16, 64, 16), (1, 200, 9), (4, 72, 6), (8, 40, 3)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(n, k, 1.0, &mut rng);
+            let qa = QuantizedMatrix::quantize(kind, &a, MODE);
+            let qb = QuantizedMatrix::quantize(kind, &b, MODE);
+            let flow = qa.qgemm_bt_flow_threads(&qb, 1);
+            let pa = qa.pack_threads(1);
+            let pb = qb.pack_threads(1);
+            for threads in [1, 3, 4] {
+                let packed = pa.qgemm_bt_threads(&pb, threads);
+                assert!(
+                    feq32_all(&flow.data, &packed.data),
+                    "{kind} {m}x{k}x{n} threads={threads}"
+                );
+            }
+            // The dispatching entry point agrees too, whatever the backend.
+            let dispatched = qa.qgemm_bt_threads(&qb, 2);
+            assert!(feq32_all(&flow.data, &dispatched.data), "{kind} {m}x{k}x{n} dispatch");
         }
-        // The dispatching entry point agrees too, whatever the backend.
-        let dispatched = hif4_gemm_bt_threads(&qa, &qb, 2);
-        assert!(feq32_all(&flow.data, &dispatched.data), "{m}x{k}x{n} dispatch");
     }
 }
 
 #[test]
-fn nvfp4_packed_gemm_equals_flow_gemm_bitwise() {
-    // 72 and 40 cols exercise the tail-group (non-multiple-of-PE) path.
-    let mut rng = Rng::seed(7005);
-    for (m, k, n) in [(5, 130, 7), (4, 72, 6), (3, 40, 5), (2, 256, 3)] {
-        let a = Matrix::randn(m, k, 1.0, &mut rng);
-        let b = Matrix::randn(n, k, 1.0, &mut rng);
-        let qa = Nvfp4Matrix::quantize(&a, MODE);
-        let qb = Nvfp4Matrix::quantize(&b, MODE);
-        let flow = nvfp4_gemm_bt_flow_threads(&qa, &qb, 1);
-        let pa = PackedNvfp4Matrix::pack(&qa);
-        let pb = PackedNvfp4Matrix::pack(&qb);
-        for threads in [1, 3, 4] {
-            let packed = nvfp4_gemm_bt_packed_threads(&pa, &pb, threads);
-            assert!(feq32_all(&flow.data, &packed.data), "{m}x{k}x{n} threads={threads}");
+fn qgemm_equals_dequantized_f32_gemm_all_formats() {
+    // The fixed-point GEMM approximates the dequantize-then-f32-GEMM
+    // simulated path up to f32 summation noise — the bridge between the
+    // serving path and the paper's accuracy-table semantics, now for
+    // every format.
+    use hif4::tensor::gemm;
+    let mut rng = Rng::seed(7008);
+    for kind in QuantKind::ALL {
+        let a = Matrix::randn(5, 130, 1.0, &mut rng);
+        let b = Matrix::randn(7, 130, 1.0, &mut rng);
+        let qa = QuantizedMatrix::quantize(kind, &a, MODE);
+        let qb = QuantizedMatrix::quantize(kind, &b, MODE);
+        let via_pe = qa.qgemm_bt(&qb);
+        let via_dequant = gemm::matmul_bt(&qa.dequantize(), &qb.dequantize());
+        for (x, y) in via_pe.data.iter().zip(&via_dequant.data) {
+            assert!((x - y).abs() <= 2e-3 * (1.0 + x.abs()), "{kind}: {x} vs {y}");
         }
     }
+}
+
+#[test]
+fn generic_kernels_match_enum_surface() {
+    // The free generic kernels and the enum-dispatched methods are the
+    // same code; pin it so nothing drifts between the two entry styles.
+    let mut rng = Rng::seed(7009);
+    let a = Matrix::randn(3, 100, 1.0, &mut rng);
+    let b = Matrix::randn(4, 100, 1.0, &mut rng);
+    let qa = QuantMat::<Mxfp4Fmt>::quantize(&a, MODE);
+    let qb = QuantMat::<Mxfp4Fmt>::quantize(&b, MODE);
+    let generic_flow = qgemm_bt_flow_threads(&qa, &qb, 1);
+    let generic_packed =
+        qgemm_bt_packed_threads(&PackedQuantMat::pack(&qa), &PackedQuantMat::pack(&qb), 1);
+    let ea = QuantizedMatrix::quantize(QuantKind::Mxfp4, &a, MODE);
+    let eb = QuantizedMatrix::quantize(QuantKind::Mxfp4, &b, MODE);
+    let enum_flow = ea.qgemm_bt_flow_threads(&eb, 1);
+    let enum_packed = ea.pack_threads(1).qgemm_bt_threads(&eb.pack_threads(1), 1);
+    assert!(feq32_all(&generic_flow.data, &enum_flow.data));
+    assert!(feq32_all(&generic_packed.data, &enum_packed.data));
+    assert!(feq32_all(&generic_flow.data, &generic_packed.data));
 }
