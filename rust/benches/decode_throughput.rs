@@ -12,6 +12,7 @@
 //! runs; the full run generates to a context length ≥ 128 where the
 //! O(T) cached path's win over full recompute is unambiguous.
 
+use hif4::dotprod::{set_kernel, simd_isa_label, Kernel};
 use hif4::formats::QuantKind;
 use hif4::model::kv::KvCacheType;
 use hif4::model::transformer::Transformer;
@@ -122,13 +123,63 @@ fn main() {
         ));
     }
 
+    // Per-kernel decode rows: the same model with HiF4-prepacked weights
+    // (so every decode step runs the quantized GEMM) timed under each
+    // plane backend. Tokens must be identical across kernels — the
+    // backends are bit-identical — before anything is timed.
+    let mut qcfg = zoo::llama3_tiny();
+    qcfg.max_seq = context_len + 1;
+    let mut qmodel = Transformer::init(qcfg, 91);
+    qmodel.prepack_quantized_weights(QuantKind::HiF4);
+    qmodel.release_dense_weights();
+    let qmodel = Arc::new(qmodel);
+    let qb = if quick { 2 } else { 8 };
+    let prev_kernel = hif4::dotprod::kernel();
+    let mut kernel_json = Vec::new();
+    let mut reference_tokens: Option<Vec<usize>> = None;
+    for kernel in [Kernel::Packed, Kernel::Simd] {
+        set_kernel(kernel);
+        let tokens = qmodel.generate_greedy(&prompt, new_tokens.min(8), KvCacheType::HIF4);
+        if let Some(want) = &reference_tokens {
+            assert_eq!(&tokens, want, "kernel backends must decode identical tokens");
+        } else {
+            reference_tokens = Some(tokens);
+        }
+        let engine = DecodeEngine::new(Arc::clone(&qmodel), KvCacheType::HIF4, context_len);
+        let mut streams: Vec<DecodeStream> = (0..qb).map(|_| engine.start(&prompt)).collect();
+        {
+            let mut refs: Vec<&mut DecodeStream> = streams.iter_mut().collect();
+            std::hint::black_box(engine.step(&mut refs)); // prefill
+        }
+        let decode_steps = new_tokens - 1;
+        let t0 = Instant::now();
+        for _ in 0..decode_steps {
+            let mut refs: Vec<&mut DecodeStream> = streams.iter_mut().collect();
+            std::hint::black_box(engine.step(&mut refs));
+        }
+        let decode_tps = (qb * decode_steps) as f64 / t0.elapsed().as_secs_f64();
+        println!(
+            "hif4-weights kernel {:<6} batch {qb:>2}: decode {decode_tps:9.1} tok/s",
+            kernel.label()
+        );
+        kernel_json.push(format!(
+            "\"{}\":{{\"batch\":{qb},\"decode_tps\":{decode_tps:.2}}}",
+            kernel.label()
+        ));
+    }
+    set_kernel(prev_kernel);
+    println!();
+
     let json = format!(
         "{{\n  \"bench\": \"decode_throughput\",\n  \"quick\": {quick},\n  \
-         \"threads\": {nthreads},\n  \
+         \"threads\": {nthreads},\n  \"simd_isa\": \"{}\",\n  \
          \"prompt_len\": {prompt_len},\n  \"new_tokens\": {new_tokens},\n  \
          \"context_len\": {context_len},\n  \"parity\": true,\n  \
-         \"kinds\": {{{}}}\n}}\n",
-        kind_json.join(",")
+         \"kinds\": {{{}}},\n  \
+         \"kernels\": {{{}}}\n}}\n",
+        simd_isa_label(),
+        kind_json.join(","),
+        kernel_json.join(",")
     );
     let path = "BENCH_decode.json";
     std::fs::write(path, &json).expect("write BENCH_decode.json");

@@ -64,7 +64,11 @@ fn main() {
     // on the process kernel backend (flow reference vs decode-once packed
     // planes — bit-identical; see benches/qgemm_throughput.rs for the
     // backend comparison).
-    println!("qgemm kernel backend: {:?}", hif4::dotprod::kernel());
+    println!(
+        "qgemm kernel backend: {} (simd isa: {})",
+        hif4::dotprod::kernel().label(),
+        hif4::dotprod::simd_isa_label()
+    );
     let quick = std::env::var("HIF4_BENCH_QUICK").is_ok();
     let (m, k, nn) = if quick { (16, 128, 16) } else { (64, 512, 64) };
     let a = Matrix::randn(m, k, 1.0, &mut rng);

@@ -1,21 +1,23 @@
-//! Flow-vs-packed quantized GEMM throughput at serving-like shapes,
-//! across **all five block formats** through the unified
-//! `QuantizedMatrix` API.
+//! Per-kernel quantized GEMM throughput at serving-like shapes, across
+//! **all five block formats** through the unified `QuantizedMatrix` API.
 //!
-//! For every format: times the reference flow kernel against the
-//! decode-once packed kernel (single- and multi-thread), asserts their
-//! outputs are bit-identical, and writes `BENCH_qgemm.json` keyed by
-//! format spelling (GFLOP/s + speedups) so the perf trajectory is
-//! machine-readable across PRs. `HIF4_BENCH_QUICK=1` shrinks to one
-//! small shape for CI smoke runs (build + run, no thresholds enforced
-//! here).
+//! For every format: times the reference flow kernel against both plane
+//! backends — the scalar packed kernel and the SIMD-tiled microkernel
+//! (single- and multi-thread) — asserts all three outputs are
+//! bit-identical, and writes `BENCH_qgemm.json` keyed by format spelling
+//! with one row per kernel backend (GFLOP/s + speedups, plus the
+//! detected SIMD lane ISA) so the perf trajectory is machine-readable
+//! across PRs. The full run uses a 512×512×512 GEMM — the shape the
+//! acceptance gate reads `simd` vs `packed` from; `HIF4_BENCH_QUICK=1`
+//! shrinks to one small shape for CI smoke runs (build + run, no
+//! thresholds enforced here).
 //!
-//! "Packed (end-to-end)" includes packing both operands fresh each call —
-//! the worst case for the packed path; "packed (prepacked)" reuses the
-//! planes, which is how the model/serving layers actually run (weights
-//! pack once, activations per call).
+//! "e2e" packs both operands fresh each call — the worst case for the
+//! plane backends; "prepacked" reuses the planes, which is how the
+//! model/serving layers actually run (weights pack once, activations per
+//! call).
 
-use hif4::dotprod::QuantizedMatrix;
+use hif4::dotprod::{simd_isa_label, QuantizedMatrix};
 use hif4::formats::rounding::RoundMode;
 use hif4::formats::QuantKind;
 use hif4::tensor::{Matrix, Rng};
@@ -33,58 +35,16 @@ fn secs<T, F: FnMut() -> T>(reps: usize, mut f: F) -> f64 {
     best
 }
 
-struct KernelTimes {
-    flow_s: f64,
-    packed_s: f64,
-    packed_prepacked_s: f64,
-    pack_s: f64,
-}
-
-impl KernelTimes {
-    fn row(&self, label: &str, flops: f64) -> String {
-        let gf = |s: f64| flops / s / 1e9;
-        println!(
-            "{label:<28} flow {:8.3}s ({:6.3} GFLOP/s)  packed e2e {:8.3}s ({:6.3} GFLOP/s)  \
-             prepacked {:8.3}s ({:6.3} GFLOP/s)  pack {:6.3}s  speedup {:5.2}x (e2e) {:5.2}x (prepacked)",
-            self.flow_s,
-            gf(self.flow_s),
-            self.packed_s,
-            gf(self.packed_s),
-            self.packed_prepacked_s,
-            gf(self.packed_prepacked_s),
-            self.pack_s,
-            self.flow_s / self.packed_s,
-            self.flow_s / self.packed_prepacked_s,
-        );
-        // Inner JSON fields (no braces); the caller wraps them.
-        format!(
-            "\"flow_s\":{:.6},\"packed_s\":{:.6},\"packed_prepacked_s\":{:.6},\
-             \"pack_s\":{:.6},\"flow_gflops\":{:.4},\"packed_gflops\":{:.4},\
-             \"packed_prepacked_gflops\":{:.4},\"speedup\":{:.3},\"speedup_prepacked\":{:.3}",
-            self.flow_s,
-            self.packed_s,
-            self.packed_prepacked_s,
-            self.pack_s,
-            gf(self.flow_s),
-            gf(self.packed_s),
-            gf(self.packed_prepacked_s),
-            self.flow_s / self.packed_s,
-            self.flow_s / self.packed_prepacked_s,
-        )
-    }
-}
-
 fn bits(m: &Matrix) -> Vec<u32> {
     m.data.iter().map(|x| x.to_bits()).collect()
 }
 
 fn main() {
     let quick = std::env::var("HIF4_BENCH_QUICK").is_ok();
-    // Serving-like shape: decode activations (batch·seq = 512 rows) ×
-    // d_ff-scale weights over a 4096 reduction. The flow kernels are slow
-    // by design (per-element re-decode), so the full run uses a smaller
-    // shape per format than the old HiF4-only bench did.
-    let (m, k, n) = if quick { (64, 512, 64) } else { (256, 2048, 256) };
+    // Full run: the 512×512×512 GEMM the acceptance gate reads (the flow
+    // kernel is slow by design — per-element re-decode — so the shape is
+    // modest; the plane backends are what the comparison is about).
+    let (m, k, n) = if quick { (64, 512, 64) } else { (512, 512, 512) };
     let reps_flow = if quick { 3 } else { 1 };
     let reps_packed = if quick { 5 } else { 3 };
     let nthreads = threadpool::threads();
@@ -95,7 +55,10 @@ fn main() {
     let a = Matrix::randn(m, k, 1.0, &mut rng);
     let b = Matrix::randn(n, k, 1.0, &mut rng);
 
-    println!("qgemm throughput — shape {m}x{k}x{n}, multi-thread = {nthreads}\n");
+    println!(
+        "qgemm throughput — shape {m}x{k}x{n}, multi-thread = {nthreads}, simd isa = {}\n",
+        simd_isa_label()
+    );
 
     let mut format_json = Vec::new();
     for kind in QuantKind::ALL {
@@ -103,24 +66,35 @@ fn main() {
         let qb = QuantizedMatrix::quantize(kind, &b, mode);
         let pa = qa.pack_threads(1);
         let pb = qb.pack_threads(1);
-        // Bit-identity of the two backends on the bench shape itself —
+        // Bit-identity of the three backends on the bench shape itself —
         // any mismatch aborts before the JSON is written, so a written
         // `bit_identical` is true by construction.
         let c_flow = qa.qgemm_bt_flow_threads(&qb, nthreads);
-        let c_packed = pa.qgemm_bt_threads(&pb, nthreads);
+        let c_packed = pa.qgemm_bt_packed_threads(&pb, nthreads);
+        let c_simd = pa.qgemm_bt_simd_threads(&pb, nthreads);
         assert!(
             bits(&c_flow) == bits(&c_packed),
             "{kind}: flow and packed kernels must agree bit for bit"
         );
-        drop((c_flow, c_packed));
+        assert!(
+            bits(&c_packed) == bits(&c_simd),
+            "{kind}: packed and simd kernels must agree bit for bit"
+        );
+        drop((c_flow, c_packed, c_simd));
 
         let mut rows_json = Vec::new();
         for (label, threads) in [("single", 1usize), ("multi", nthreads)] {
             let flow_s =
                 secs(reps_flow, || std::hint::black_box(qa.qgemm_bt_flow_threads(&qb, threads)));
-            let prepacked_s =
-                secs(reps_packed, || std::hint::black_box(pa.qgemm_bt_threads(&pb, threads)));
-            // Pack cost at *this* thread count (the amortized one-time cost).
+            let packed_s = secs(reps_packed, || {
+                std::hint::black_box(pa.qgemm_bt_packed_threads(&pb, threads))
+            });
+            let simd_s = secs(reps_packed, || {
+                std::hint::black_box(pa.qgemm_bt_simd_threads(&pb, threads))
+            });
+            // Pack cost at *this* thread count (the amortized one-time
+            // cost) and the pack-fresh-each-call end-to-end variant on
+            // the fastest plane backend.
             let pack_s = secs(reps_packed, || {
                 std::hint::black_box(qa.pack_threads(threads));
                 std::hint::black_box(qb.pack_threads(threads));
@@ -128,16 +102,41 @@ fn main() {
             let e2e_s = secs(reps_packed, || {
                 let xa = qa.pack_threads(threads);
                 let xb = qb.pack_threads(threads);
-                std::hint::black_box(xa.qgemm_bt_threads(&xb, threads));
+                std::hint::black_box(xa.qgemm_bt_simd_threads(&xb, threads))
             });
-            let t = KernelTimes {
+            let gf = |s: f64| flops / s / 1e9;
+            println!(
+                "{:<28} flow {:8.3}s ({:6.3} GF/s)  packed {:8.3}s ({:6.3} GF/s)  \
+                 simd {:8.3}s ({:6.3} GF/s)  pack {:6.3}s  simd-vs-packed {:5.2}x  \
+                 simd-vs-flow {:5.2}x",
+                format!("{} {label} ({threads}t)", kind.name()),
                 flow_s,
-                packed_s: e2e_s,
-                packed_prepacked_s: prepacked_s,
+                gf(flow_s),
+                packed_s,
+                gf(packed_s),
+                simd_s,
+                gf(simd_s),
                 pack_s,
-            };
-            let fields = t.row(&format!("{} {label} ({threads}t)", kind.name()), flops);
-            rows_json.push(format!("\"{label}\":{{\"threads\":{threads},{fields}}}"));
+                packed_s / simd_s,
+                flow_s / simd_s,
+            );
+            rows_json.push(format!(
+                "\"{label}\":{{\"threads\":{threads},\
+                 \"kernels\":{{\
+                 \"flow\":{{\"s\":{flow_s:.6},\"gflops\":{:.4}}},\
+                 \"packed\":{{\"s\":{packed_s:.6},\"gflops\":{:.4}}},\
+                 \"simd\":{{\"s\":{simd_s:.6},\"gflops\":{:.4}}}}},\
+                 \"pack_s\":{pack_s:.6},\"simd_e2e_s\":{e2e_s:.6},\
+                 \"speedup_simd_vs_packed\":{:.3},\
+                 \"speedup_simd_vs_flow\":{:.3},\
+                 \"speedup_packed_vs_flow\":{:.3}}}",
+                gf(flow_s),
+                gf(packed_s),
+                gf(simd_s),
+                packed_s / simd_s,
+                flow_s / simd_s,
+                flow_s / packed_s,
+            ));
         }
         format_json.push(format!(
             "\"{}\":{{\"label\":\"{}\",\"group\":{},\"bits_per_value\":{},{}}}",
@@ -154,7 +153,9 @@ fn main() {
         "{{\n  \"bench\": \"qgemm_throughput\",\n  \"quick\": {quick},\n  \
          \"shape\": {{\"m\": {m}, \"k\": {k}, \"n\": {n}}},\n  \
          \"bit_identical\": true,\n  \
+         \"simd_isa\": \"{}\",\n  \
          \"formats\": {{{}}}\n}}\n",
+        simd_isa_label(),
         format_json.join(",")
     );
     let path = "BENCH_qgemm.json";

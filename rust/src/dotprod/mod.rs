@@ -19,14 +19,17 @@
 //! against the dequantized-f64 dot product (they agree exactly because every
 //! quantized value is a small dyadic rational times its scales).
 //!
-//! Two software *schedules* of the same datapaths exist: the element-wise
-//! flow kernels above (the reference) and the decode-once packed operand
-//! planes (the fast path). Both live behind the **unified quantized-tensor
-//! API** of [`quant_tensor`] — one [`QuantizedMatrix`] /
-//! [`PackedQuantizedMatrix`] surface over all five block formats, with the
-//! process-wide [`kernel`] selector picking which schedule
-//! [`QuantizedMatrix::qgemm_bt`] runs; both are bit-identical, so it is
-//! purely a performance knob.
+//! Three software *schedules* of the same datapaths exist: the
+//! element-wise flow kernels above (the reference), the decode-once packed
+//! operand planes with a scalar inner dot, and the SIMD-tiled microkernel
+//! over the same planes (the fast path — explicit AVX2 on `x86_64`
+//! machines that have it, a portable unrolled-scalar microkernel
+//! everywhere else; [`simd_isa`] reports which was detected at startup).
+//! All live behind the **unified quantized-tensor API** of
+//! [`quant_tensor`] — one [`QuantizedMatrix`] / [`PackedQuantizedMatrix`]
+//! surface over all five block formats, with the process-wide [`kernel`]
+//! selector picking which schedule [`QuantizedMatrix::qgemm_bt`] runs; all
+//! backends are bit-identical, so it is purely a performance knob.
 
 pub mod hif4_flow;
 pub mod nvfp4_flow;
@@ -42,9 +45,28 @@ pub enum Kernel {
     /// Reference: every group pair through the element-wise PE flow
     /// (re-decodes nibbles/micro-exponents per output element).
     Flow,
-    /// Fast path (default): decode-once integer operand planes
-    /// ([`quant_tensor::PackedQuantMat`]) with a straight `i8` inner dot.
+    /// Decode-once integer operand planes
+    /// ([`quant_tensor::PackedQuantMat`]) with a straight scalar `i8`
+    /// inner dot — the portable baseline of the plane schedule.
     Packed,
+    /// Fast path (default): the same packed planes driven by the
+    /// register-tiled SIMD microkernel — explicit AVX2 intrinsics where
+    /// [`simd_isa`] detected them at startup, the unrolled-scalar
+    /// microkernel elsewhere. Bit-identical to [`Kernel::Packed`] and
+    /// [`Kernel::Flow`] on every format.
+    Simd,
+}
+
+impl Kernel {
+    /// Canonical lower-case label — the `HIF4_KERNEL` / `--kernel`
+    /// spelling and the bench-JSON key.
+    pub fn label(self) -> &'static str {
+        match self {
+            Kernel::Flow => "flow",
+            Kernel::Packed => "packed",
+            Kernel::Simd => "simd",
+        }
+    }
 }
 
 /// Process-wide kernel-backend override; 0 = not resolved yet.
@@ -52,41 +74,46 @@ static KERNEL: AtomicU8 = AtomicU8::new(0);
 
 const KERNEL_FLOW: u8 = 1;
 const KERNEL_PACKED: u8 = 2;
+const KERNEL_SIMD: u8 = 3;
 
-/// The process-wide kernel backend: `HIF4_KERNEL` (`flow` / `packed`) if
-/// set, else [`Kernel::Packed`]; override with [`set_kernel`] (the CLI
-/// exposes `--kernel`). Both backends produce bit-identical matrices, so
-/// this only changes throughput.
+fn kernel_from_tag(tag: u8) -> Kernel {
+    match tag {
+        KERNEL_FLOW => Kernel::Flow,
+        KERNEL_PACKED => Kernel::Packed,
+        _ => Kernel::Simd,
+    }
+}
+
+/// The process-wide kernel backend: `HIF4_KERNEL` (`simd` / `packed` /
+/// `flow`) if set, else [`Kernel::Simd`] — whose lane ISA is resolved
+/// once at startup by [`simd_isa`]; override with [`set_kernel`] (the
+/// CLI exposes `--kernel`). All backends produce bit-identical matrices,
+/// so this only changes throughput.
 pub fn kernel() -> Kernel {
-    match KERNEL.load(Ordering::Relaxed) {
-        KERNEL_FLOW => return Kernel::Flow,
-        KERNEL_PACKED => return Kernel::Packed,
-        _ => {}
+    let tag = KERNEL.load(Ordering::Relaxed);
+    if tag != 0 {
+        return kernel_from_tag(tag);
     }
     let resolved = match std::env::var("HIF4_KERNEL").ok().as_deref() {
         Some("flow") => KERNEL_FLOW,
-        Some("packed") | None => KERNEL_PACKED,
+        Some("packed") => KERNEL_PACKED,
+        Some("simd") | None => KERNEL_SIMD,
         Some(other) => {
             // A perf knob that silently ignores typos would corrupt
             // measurements; warn loudly (once — the resolution is cached)
             // and run the default. The CLI's `--kernel` rejects outright.
             eprintln!(
                 "warning: unrecognized HIF4_KERNEL={other:?} \
-                 (expected \"flow\" or \"packed\"); using packed"
+                 (expected \"simd\", \"packed\" or \"flow\"); using simd"
             );
-            KERNEL_PACKED
+            KERNEL_SIMD
         }
     };
     // Cache only if still unset so a racing set_kernel() is never
     // clobbered (same pattern as threadpool::threads).
     match KERNEL.compare_exchange(0, resolved, Ordering::Relaxed, Ordering::Relaxed) {
-        Ok(_) => {}
-        Err(current) => return if current == KERNEL_FLOW { Kernel::Flow } else { Kernel::Packed },
-    }
-    if resolved == KERNEL_FLOW {
-        Kernel::Flow
-    } else {
-        Kernel::Packed
+        Ok(_) => kernel_from_tag(resolved),
+        Err(current) => kernel_from_tag(current),
     }
 }
 
@@ -95,8 +122,72 @@ pub fn set_kernel(k: Kernel) {
     let v = match k {
         Kernel::Flow => KERNEL_FLOW,
         Kernel::Packed => KERNEL_PACKED,
+        Kernel::Simd => KERNEL_SIMD,
     };
     KERNEL.store(v, Ordering::Relaxed);
+}
+
+/// Which lane ISA the [`Kernel::Simd`] backend's microkernel runs on.
+/// Resolved exactly once per process by runtime CPU-feature detection
+/// ([`simd_isa`]); both ISAs are exact, so this never changes results.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdIsa {
+    /// `x86_64` AVX2: 16-lane `i8→i16` widening + `vpmaddwd`
+    /// multiply-accumulate (no saturating instruction anywhere).
+    Avx2,
+    /// The portable unrolled-scalar microkernel (four independent
+    /// accumulator chains) — any architecture, no special CPU features.
+    Portable,
+}
+
+/// Cached [`SimdIsa`] resolution; 0 = not detected yet.
+static SIMD_ISA: AtomicU8 = AtomicU8::new(0);
+
+const ISA_AVX2: u8 = 1;
+const ISA_PORTABLE: u8 = 2;
+
+#[cfg(target_arch = "x86_64")]
+fn detect_simd_isa() -> SimdIsa {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        SimdIsa::Avx2
+    } else {
+        SimdIsa::Portable
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn detect_simd_isa() -> SimdIsa {
+    SimdIsa::Portable
+}
+
+/// The lane ISA the SIMD backend dispatches to: AVX2 when the CPU
+/// reports it (checked once, result cached for the process lifetime),
+/// the portable microkernel otherwise. Purely a throughput property —
+/// the parity suites pin both ISAs bit-identical to the scalar kernels.
+pub fn simd_isa() -> SimdIsa {
+    match SIMD_ISA.load(Ordering::Relaxed) {
+        ISA_AVX2 => return SimdIsa::Avx2,
+        ISA_PORTABLE => return SimdIsa::Portable,
+        _ => {}
+    }
+    let detected = detect_simd_isa();
+    let tag = match detected {
+        SimdIsa::Avx2 => ISA_AVX2,
+        SimdIsa::Portable => ISA_PORTABLE,
+    };
+    SIMD_ISA.store(tag, Ordering::Relaxed);
+    detected
+}
+
+/// Lower-case label of the detected [`simd_isa`] (`"avx2"` /
+/// `"portable"`) — printed by `hif4 info` and the benches, and asserted
+/// by CI's `HIF4_REQUIRE_SIMD` guard so the AVX2 path can never compile
+/// out silently.
+pub fn simd_isa_label() -> &'static str {
+    match simd_isa() {
+        SimdIsa::Avx2 => "avx2",
+        SimdIsa::Portable => "portable",
+    }
 }
 
 /// Datapath statistics a flow reports — consumed by [`crate::hwcost`] and
@@ -133,8 +224,25 @@ mod tests {
     // NOTE: the set_kernel/kernel round-trip is asserted inside
     // `model::transformer`'s kernel-invariance test — exactly one test
     // mutates the process-wide knob, so readback can never race. Every
-    // other consumer only *reads* it, and since both backends are
+    // other consumer only *reads* it, and since all backends are
     // bit-identical, a concurrently flipped knob never changes results.
+
+    #[test]
+    fn kernel_labels_and_simd_isa_resolve() {
+        use super::{simd_isa, simd_isa_label, Kernel, SimdIsa};
+        assert_eq!(Kernel::Flow.label(), "flow");
+        assert_eq!(Kernel::Packed.label(), "packed");
+        assert_eq!(Kernel::Simd.label(), "simd");
+        // Detection is cached: repeated reads agree, and the label is the
+        // canonical spelling of the resolved ISA.
+        let first = simd_isa();
+        assert_eq!(first, simd_isa());
+        let want = match first {
+            SimdIsa::Avx2 => "avx2",
+            SimdIsa::Portable => "portable",
+        };
+        assert_eq!(simd_isa_label(), want);
+    }
 
     #[test]
     fn fig4_multiplier_elimination() {

@@ -52,11 +52,28 @@
 //! fixed-point path. MXFP4/MX4/BFP have no published PE flow; they use
 //! the direct per-group accumulation (`GROUPS_PER_PE = 1`). Every output
 //! element sums its partials on one thread in ascending K order, so
-//! results are **bit-identical for any thread count and either kernel
+//! results are **bit-identical for any thread count and every kernel
 //! backend** (pinned by `tests/packed_parity.rs` and
 //! `tests/parallel_parity.rs`).
+//!
+//! ## The SIMD-tiled backend
+//!
+//! The packed planes have two inner-kernel schedules: the straight
+//! scalar dot ([`super::Kernel::Packed`]) and a register-tiled
+//! microkernel ([`super::Kernel::Simd`], the default) that processes
+//! [`MR`]×[`NR`] output elements per pass — A-row lanes are loaded once
+//! per group and reused across [`NR`] B rows, B-row lanes across [`MR`]
+//! A rows, with [`MR`]·[`NR`] independent accumulator chains. The lane
+//! ISA is picked once at startup by [`super::simd_isa`]: explicit AVX2
+//! intrinsics on `x86_64` CPUs that report the feature (16-lane
+//! `i8→i16` widening + `vpmaddwd` — exact for any `i8` input, no
+//! saturating instruction anywhere), a portable unrolled-scalar
+//! microkernel otherwise. Because a group's integer dot is exact under
+//! any association and the surrounding `f64` ops replay the scalar
+//! kernel's per-element sequence, the tiled backend is bit-identical
+//! to the scalar packed kernel and the flow reference on every format.
 
-use super::{hif4_flow, nvfp4_flow, Kernel};
+use super::{hif4_flow, nvfp4_flow, Kernel, SimdIsa};
 use crate::formats::bfp::{self, BfpGroup};
 use crate::formats::hif4::{self, HiF4Unit};
 use crate::formats::mx4::{self, Mx4Group};
@@ -555,22 +572,58 @@ impl<F: BlockFormat> PackedQuantMat<F> {
         let ia = &self.row_lanes(r)[g * F::GROUP..(g + 1) * F::GROUP];
         let ib = &other.row_lanes(ro)[go * F::GROUP..(go + 1) * F::GROUP];
         let sp = self.row_scales(r)[g] * other.row_scales(ro)[go];
-        sp * (lanes_idot(ia, ib) as f64) / (F::LANE_UNIT * F::LANE_UNIT)
+        sp * (lanes_idot_exact(ia, ib) as f64) / (F::LANE_UNIT * F::LANE_UNIT)
     }
 }
+
+/// Largest lane count for which a single `i32` accumulator provably
+/// cannot overflow: every `i8×i8` product has magnitude ≤ 128² = 16384
+/// (`i8::MIN · i8::MIN` — the extreme, larger than 127²), so
+/// `⌊i32::MAX / 16384⌋` = 131 071 products always fit.
+///
+/// **Overflow audit** (the reason the per-group kernels stay on `i32`):
+/// a group reduction spans at most 64 lanes, and the worst in-tree lane
+/// magnitudes are 28 (HiF4), 12 (NVFP4/MXFP4), 7 (BFP) and 6 (MX4), so
+/// the largest group dot any codec can produce is 64·28² = 50 176 —
+/// five orders of magnitude inside `i32`, and still safe (64·128² =
+/// 1 048 576) for arbitrary `i8` lanes including `i8::MIN`.
+/// *Cross-group* accumulation never happens in integers: each group's
+/// dot meets its `f64` scales immediately (scales differ per group), so
+/// the only way to approach this bound is a single flat span of more
+/// than 131 071 lanes — which [`lanes_idot_exact`] handles by widening
+/// to `i64`.
+pub const IDOT_I32_SAFE_LANES: usize = (i32::MAX / (128 * 128)) as usize;
 
 /// Straight `i8 × i8 → i32` integer dot over one group's lanes — the
 /// entire fixed-point part of a group-pair partial. Integer adds are
 /// associative, so the optimizer is free to vectorize; the result is
-/// exact either way.
+/// exact either way. Callers pass group-sized spans, far below the
+/// [`IDOT_I32_SAFE_LANES`] overflow bound (debug-asserted).
 #[inline]
 fn lanes_idot(a: &[i8], b: &[i8]) -> i32 {
     debug_assert_eq!(a.len(), b.len());
+    debug_assert!(a.len() <= IDOT_I32_SAFE_LANES, "span too long for an i32 accumulator");
     let mut acc = 0i32;
     for (x, y) in a.iter().zip(b) {
         acc += (*x as i32) * (*y as i32);
     }
     acc
+}
+
+/// Exact integer dot over a lane span of **any** length: group-sized
+/// spans (every GEMM/KV call) reduce in a single `i32` chunk; spans past
+/// [`IDOT_I32_SAFE_LANES`] — reachable only for whole-K-row reductions
+/// with adversarial max-magnitude lanes — accumulate per-chunk `i32`
+/// partials into an `i64` total, so the result can never wrap
+/// (regression-tested with `i8::MIN` lanes beyond the bound, and
+/// end-to-end at `k ≥ 16384` in `tests/packed_parity.rs`).
+pub fn lanes_idot_exact(a: &[i8], b: &[i8]) -> i64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut total = 0i64;
+    for (ca, cb) in a.chunks(IDOT_I32_SAFE_LANES).zip(b.chunks(IDOT_I32_SAFE_LANES)) {
+        total += lanes_idot(ca, cb) as i64;
+    }
+    total
 }
 
 /// Balanced power-of-two reduction of `pe` partials — `(p0+p1)+(p2+p3)`
@@ -719,6 +772,483 @@ pub fn qgemm_bt_packed_threads<F: BlockFormat>(
         }
     });
     c
+}
+
+// ---------------------------------------------------------------------------
+// The SIMD-tiled microkernel backend
+// ---------------------------------------------------------------------------
+
+/// Output rows per register tile of the SIMD backend's microkernel.
+pub const MR: usize = 2;
+/// Output columns per register tile.
+pub const NR: usize = 4;
+/// Largest [`BlockFormat::GROUPS_PER_PE`] the PE-window buffers size for
+/// (matches [`pe_tree`]'s bound).
+const MAX_PE: usize = 8;
+
+/// One lane ISA's exact integer microkernels. Every method computes
+/// plain `i8·i8→i32` group dots — bit-identical to [`lanes_idot`] by
+/// integer associativity — shaped for register reuse: `dot_1x4` loads
+/// each A chunk once for [`NR`] B rows, `dot_2x4` additionally loads
+/// each B chunk once for [`MR`] A rows.
+trait LaneKernel: Send + Sync + 'static {
+    /// Exact dot over one group's lanes.
+    fn dot(a: &[i8], b: &[i8]) -> i32;
+    /// One A group against [`NR`] B groups.
+    fn dot_1x4(a: &[i8], b: [&[i8]; NR]) -> [i32; NR];
+    /// [`MR`] A groups against [`NR`] B groups — the full register tile.
+    fn dot_2x4(a0: &[i8], a1: &[i8], b: [&[i8]; NR]) -> [[i32; NR]; MR];
+}
+
+/// Portable unrolled-scalar lane dot: four independent `i32` accumulator
+/// chains merged by a balanced final reduction — exact under integer
+/// associativity, and the shape LLVM auto-vectorizes well. The SIMD
+/// backend's fallback on machines without AVX2.
+#[inline]
+fn idot_unrolled(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert!(a.len() <= IDOT_I32_SAFE_LANES, "span too long for an i32 accumulator");
+    let n = a.len();
+    let (mut s0, mut s1, mut s2, mut s3) = (0i32, 0i32, 0i32, 0i32);
+    let mut i = 0;
+    while i + 4 <= n {
+        s0 += (a[i] as i32) * (b[i] as i32);
+        s1 += (a[i + 1] as i32) * (b[i + 1] as i32);
+        s2 += (a[i + 2] as i32) * (b[i + 2] as i32);
+        s3 += (a[i + 3] as i32) * (b[i + 3] as i32);
+        i += 4;
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    while i < n {
+        s += (a[i] as i32) * (b[i] as i32);
+        i += 1;
+    }
+    s
+}
+
+/// The portable [`LaneKernel`]: unrolled scalar chains, no CPU features.
+struct PortableKernel;
+
+impl LaneKernel for PortableKernel {
+    #[inline]
+    fn dot(a: &[i8], b: &[i8]) -> i32 {
+        idot_unrolled(a, b)
+    }
+
+    #[inline]
+    fn dot_1x4(a: &[i8], b: [&[i8]; NR]) -> [i32; NR] {
+        [
+            idot_unrolled(a, b[0]),
+            idot_unrolled(a, b[1]),
+            idot_unrolled(a, b[2]),
+            idot_unrolled(a, b[3]),
+        ]
+    }
+
+    #[inline]
+    fn dot_2x4(a0: &[i8], a1: &[i8], b: [&[i8]; NR]) -> [[i32; NR]; MR] {
+        [Self::dot_1x4(a0, b), Self::dot_1x4(a1, b)]
+    }
+}
+
+/// `x86_64` AVX2 lane microkernels, selected once at startup by
+/// [`crate::dotprod::simd_isa`]. Lanes widen `i8→i16` (`vpmovsxbw`) and
+/// multiply-accumulate adjacent pairs into `i32` vector lanes
+/// (`vpmaddwd`) — exact for any `i8` inputs: the pairwise products are
+/// at most 128² = 16384 each (the `i8::MIN` extreme), their pair sum at
+/// most 32 768, and each `i32` vector lane accumulates at most
+/// `GROUP/16` pair sums, nowhere near the `i32` range (no
+/// `vpmaddubsw`-style saturation anywhere). The horizontal sum
+/// therefore equals [`lanes_idot`] bit for bit.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{LaneKernel, MR, NR};
+    use std::arch::x86_64::{
+        __m128i, __m256i, _mm256_add_epi32, _mm256_castsi256_si128, _mm256_cvtepi8_epi16,
+        _mm256_extracti128_si256, _mm256_madd_epi16, _mm256_setzero_si256, _mm_add_epi32,
+        _mm_cvtsi128_si32, _mm_loadu_si128, _mm_shuffle_epi32, _mm_unpackhi_epi64,
+    };
+
+    /// The AVX2 [`LaneKernel`]. Only instantiated by
+    /// [`super::qgemm_bt_simd_threads`] after runtime feature detection
+    /// reported AVX2, which is what makes the `unsafe` calls sound.
+    pub(super) struct Avx2Kernel;
+
+    impl LaneKernel for Avx2Kernel {
+        #[inline]
+        fn dot(a: &[i8], b: &[i8]) -> i32 {
+            // SAFETY: Avx2Kernel is only selected when AVX2 is detected.
+            unsafe { idot(a, b) }
+        }
+
+        #[inline]
+        fn dot_1x4(a: &[i8], b: [&[i8]; NR]) -> [i32; NR] {
+            // SAFETY: Avx2Kernel is only selected when AVX2 is detected.
+            unsafe { idot_1x4(a, b) }
+        }
+
+        #[inline]
+        fn dot_2x4(a0: &[i8], a1: &[i8], b: [&[i8]; NR]) -> [[i32; NR]; MR] {
+            // SAFETY: Avx2Kernel is only selected when AVX2 is detected.
+            unsafe { idot_2x4(a0, a1, b) }
+        }
+    }
+
+    /// Widen 16 `i8` lanes at `p[i..i + 16]` to `i16` vector lanes.
+    ///
+    /// # Safety
+    /// AVX2 must be available and `i + 16 <= p.len()`.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn widen16(p: &[i8], i: usize) -> __m256i {
+        debug_assert!(i + 16 <= p.len());
+        _mm256_cvtepi8_epi16(_mm_loadu_si128(p.as_ptr().add(i) as *const __m128i))
+    }
+
+    /// Horizontal sum of the 8 `i32` vector lanes.
+    ///
+    /// # Safety
+    /// AVX2 must be available.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum(v: __m256i) -> i32 {
+        let hi: __m128i = _mm256_extracti128_si256::<1>(v);
+        let s = _mm_add_epi32(_mm256_castsi256_si128(v), hi);
+        let s = _mm_add_epi32(s, _mm_unpackhi_epi64(s, s));
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32::<1>(s));
+        _mm_cvtsi128_si32(s)
+    }
+
+    /// Exact `i8` dot over one group's lanes (16-lane vector body plus a
+    /// scalar tail; in-tree groups are 16/32/64, so the tail is empty).
+    ///
+    /// # Safety
+    /// AVX2 must be available.
+    #[target_feature(enable = "avx2")]
+    unsafe fn idot(a: &[i8], b: &[i8]) -> i32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0;
+        while i + 16 <= n {
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(widen16(a, i), widen16(b, i)));
+            i += 16;
+        }
+        let mut s = hsum(acc);
+        while i < n {
+            s += (a[i] as i32) * (b[i] as i32);
+            i += 1;
+        }
+        s
+    }
+
+    /// One A group against [`NR`] B groups: each A chunk is widened once
+    /// and reused across all four B rows (the register-reuse payoff).
+    ///
+    /// # Safety
+    /// AVX2 must be available.
+    #[target_feature(enable = "avx2")]
+    unsafe fn idot_1x4(a: &[i8], b: [&[i8]; NR]) -> [i32; NR] {
+        let n = a.len();
+        let mut acc = [_mm256_setzero_si256(); NR];
+        let mut i = 0;
+        while i + 16 <= n {
+            let wa = widen16(a, i);
+            for c in 0..NR {
+                debug_assert_eq!(b[c].len(), n);
+                acc[c] = _mm256_add_epi32(acc[c], _mm256_madd_epi16(wa, widen16(b[c], i)));
+            }
+            i += 16;
+        }
+        let mut out = [0i32; NR];
+        for c in 0..NR {
+            out[c] = hsum(acc[c]);
+        }
+        while i < n {
+            for c in 0..NR {
+                out[c] += (a[i] as i32) * (b[c][i] as i32);
+            }
+            i += 1;
+        }
+        out
+    }
+
+    /// The full [`MR`]×[`NR`] register tile: A chunks widened once per
+    /// [`NR`] columns, B chunks once per [`MR`] rows, eight independent
+    /// vector accumulators (2 A + 1 B temp + 8 accumulators = 11 live
+    /// `ymm` registers, inside the 16 AVX2 provides).
+    ///
+    /// # Safety
+    /// AVX2 must be available.
+    #[target_feature(enable = "avx2")]
+    unsafe fn idot_2x4(a0: &[i8], a1: &[i8], b: [&[i8]; NR]) -> [[i32; NR]; MR] {
+        debug_assert_eq!(a0.len(), a1.len());
+        let n = a0.len();
+        let mut acc = [[_mm256_setzero_si256(); NR]; MR];
+        let mut i = 0;
+        while i + 16 <= n {
+            let wa0 = widen16(a0, i);
+            let wa1 = widen16(a1, i);
+            for c in 0..NR {
+                debug_assert_eq!(b[c].len(), n);
+                let wb = widen16(b[c], i);
+                acc[0][c] = _mm256_add_epi32(acc[0][c], _mm256_madd_epi16(wa0, wb));
+                acc[1][c] = _mm256_add_epi32(acc[1][c], _mm256_madd_epi16(wa1, wb));
+            }
+            i += 16;
+        }
+        let mut out = [[0i32; NR]; MR];
+        for r in 0..MR {
+            for c in 0..NR {
+                out[r][c] = hsum(acc[r][c]);
+            }
+        }
+        while i < n {
+            for c in 0..NR {
+                out[0][c] += (a0[i] as i32) * (b[c][i] as i32);
+                out[1][c] += (a1[i] as i32) * (b[c][i] as i32);
+            }
+            i += 1;
+        }
+        out
+    }
+}
+
+/// The four B-row lane slices of group `g`.
+#[inline]
+fn b_group_slices<'a>(bl: [&'a [i8]; NR], g: usize, gs: usize) -> [&'a [i8]; NR] {
+    [
+        &bl[0][g * gs..(g + 1) * gs],
+        &bl[1][g * gs..(g + 1) * gs],
+        &bl[2][g * gs..(g + 1) * gs],
+        &bl[3][g * gs..(g + 1) * gs],
+    ]
+}
+
+/// Integer dots of group `g` across the register tile (`ra` ∈ {1, 2}
+/// live A rows; a 1-row tail leaves the second result row zeroed and
+/// unread).
+#[inline]
+fn tile_dots<K: LaneKernel>(
+    ra: usize,
+    al: [&[i8]; MR],
+    g: usize,
+    gs: usize,
+    gb: [&[i8]; NR],
+) -> [[i32; NR]; MR] {
+    let ga0 = &al[0][g * gs..(g + 1) * gs];
+    if ra == MR {
+        K::dot_2x4(ga0, &al[1][g * gs..(g + 1) * gs], gb)
+    } else {
+        [K::dot_1x4(ga0, gb), [0i32; NR]]
+    }
+}
+
+/// One register tile (`ra` A rows × [`NR`] B rows) against one K block
+/// (groups `u0..u1`): integer dots through the lane microkernel, then
+/// per output element the **identical** `f64` op sequence the scalar
+/// packed kernel performs — ascending K, the per-format PE tree — so the
+/// backends stay bit-identical.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn tile_update<F: BlockFormat, K: LaneKernel>(
+    ra: usize,
+    al: [&[i8]; MR],
+    asc: [&[f64]; MR],
+    bl: [&[i8]; NR],
+    bsc: [&[f64]; NR],
+    u0: usize,
+    u1: usize,
+    denom: f64,
+    accs: &mut [[f64; JB]; MR],
+    jj: usize,
+) {
+    let pe = F::GROUPS_PER_PE;
+    let gs = F::GROUP;
+    if pe == 1 {
+        // Direct ascending accumulation (HiF4/MXFP4/MX4/BFP).
+        for g in u0..u1 {
+            let w = tile_dots::<K>(ra, al, g, gs, b_group_slices(bl, g, gs));
+            for r in 0..ra {
+                for (c, wc) in w[r].iter().enumerate() {
+                    accs[r][jj + c] += (asc[r][g] * bsc[c][g]) * (*wc as f64) / denom;
+                }
+            }
+        }
+        return;
+    }
+    // PE windows (NVFP4): gather the window's tile dots, then reduce
+    // each output element through the same balanced tree as the scalar
+    // kernel, in the same ascending-K window order.
+    let mut g = u0;
+    while g + pe <= u1 {
+        let mut w = [[[0i32; NR]; MR]; MAX_PE];
+        for (t, wt) in w[..pe].iter_mut().enumerate() {
+            let gt = g + t;
+            *wt = tile_dots::<K>(ra, al, gt, gs, b_group_slices(bl, gt, gs));
+        }
+        for r in 0..ra {
+            for c in 0..NR {
+                accs[r][jj + c] += pe_tree(pe, |t| {
+                    (asc[r][g + t] * bsc[c][g + t]) * (w[t][r][c] as f64) / denom
+                });
+            }
+        }
+        g += pe;
+    }
+    // K tail that doesn't fill a PE: single-group fixed-point partials.
+    while g < u1 {
+        let w = tile_dots::<K>(ra, al, g, gs, b_group_slices(bl, g, gs));
+        for r in 0..ra {
+            for (c, wc) in w[r].iter().enumerate() {
+                accs[r][jj + c] += (asc[r][g] * bsc[c][g]) * (*wc as f64) / denom;
+            }
+        }
+        g += 1;
+    }
+}
+
+/// Column tail of a tile row-set: `ra` A rows against a single B row,
+/// exactly the scalar packed kernel's per-element schedule with the lane
+/// microkernel's single-group dot.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn col_update<F: BlockFormat, K: LaneKernel>(
+    ra: usize,
+    al: [&[i8]; MR],
+    asc: [&[f64]; MR],
+    bl: &[i8],
+    bsc: &[f64],
+    u0: usize,
+    u1: usize,
+    denom: f64,
+    accs: &mut [[f64; JB]; MR],
+    jj: usize,
+) {
+    let pe = F::GROUPS_PER_PE;
+    let gs = F::GROUP;
+    for r in 0..ra {
+        let acc = &mut accs[r][jj];
+        let partial = |g: usize| -> f64 {
+            let ia = &al[r][g * gs..(g + 1) * gs];
+            let ib = &bl[g * gs..(g + 1) * gs];
+            (asc[r][g] * bsc[g]) * (K::dot(ia, ib) as f64) / denom
+        };
+        let mut g = u0;
+        while g + pe <= u1 {
+            *acc += pe_tree(pe, |t| partial(g + t));
+            g += pe;
+        }
+        while g < u1 {
+            *acc += partial(g);
+            g += 1;
+        }
+    }
+}
+
+/// `C = A · Bᵀ` through the register-tiled microkernel over one lane
+/// ISA — same blocking, PE tree and ascending-K order as
+/// [`qgemm_bt_packed_threads`], so outputs are bit-identical to it (and
+/// to the flow) for every thread count.
+fn qgemm_bt_tiled_threads<F: BlockFormat, K: LaneKernel>(
+    a: &PackedQuantMat<F>,
+    b_t: &PackedQuantMat<F>,
+    threads: usize,
+) -> Matrix {
+    assert_eq!(a.cols, b_t.cols, "reduction dims must agree");
+    // Always-on (a debug-only check would vanish in release, and a PE
+    // window straddling a K-block edge silently changes the FP
+    // association): UB must be a PE multiple so the blocked schedule
+    // issues exactly the flat left-to-right walk's PE sequence.
+    let pe = F::GROUPS_PER_PE;
+    assert!(UB % pe == 0, "UB ({UB}) must be a multiple of {} PE groups ({pe})", F::KIND);
+    let denom = F::LANE_UNIT * F::LANE_UNIT;
+    let (n, gpr) = (b_t.rows, a.groups_per_row);
+    let mut c = Matrix::zeros(a.rows, n);
+    if a.rows == 0 || n == 0 {
+        return c;
+    }
+    parallel_row_bands(&mut c.data, n, threads, |first_row, band| {
+        let rows = band.len() / n;
+        let mut accs = [[0f64; JB]; MR];
+        for j0 in (0..n).step_by(JB) {
+            let jb = (j0 + JB).min(n) - j0;
+            let mut i = 0;
+            while i < rows {
+                let ra = (i + MR).min(rows) - i;
+                // A 1-row tail aliases the same row into both tile slots;
+                // the second slot's results are never read.
+                let al = [a.row_lanes(first_row + i), a.row_lanes(first_row + i + ra - 1)];
+                let asc = [a.row_scales(first_row + i), a.row_scales(first_row + i + ra - 1)];
+                for acc in accs.iter_mut() {
+                    acc[..jb].fill(0.0);
+                }
+                for u0 in (0..gpr).step_by(UB) {
+                    let u1 = (u0 + UB).min(gpr);
+                    let mut jj = 0;
+                    while jj + NR <= jb {
+                        let bl = [
+                            b_t.row_lanes(j0 + jj),
+                            b_t.row_lanes(j0 + jj + 1),
+                            b_t.row_lanes(j0 + jj + 2),
+                            b_t.row_lanes(j0 + jj + 3),
+                        ];
+                        let bsc = [
+                            b_t.row_scales(j0 + jj),
+                            b_t.row_scales(j0 + jj + 1),
+                            b_t.row_scales(j0 + jj + 2),
+                            b_t.row_scales(j0 + jj + 3),
+                        ];
+                        tile_update::<F, K>(ra, al, asc, bl, bsc, u0, u1, denom, &mut accs, jj);
+                        jj += NR;
+                    }
+                    while jj < jb {
+                        col_update::<F, K>(
+                            ra,
+                            al,
+                            asc,
+                            b_t.row_lanes(j0 + jj),
+                            b_t.row_scales(j0 + jj),
+                            u0,
+                            u1,
+                            denom,
+                            &mut accs,
+                            jj,
+                        );
+                        jj += 1;
+                    }
+                }
+                for r in 0..ra {
+                    let crow = &mut band[(i + r) * n..(i + r + 1) * n];
+                    for (jx, acc) in accs[r][..jb].iter().enumerate() {
+                        crow[j0 + jx] = *acc as f32;
+                    }
+                }
+                i += ra;
+            }
+        }
+    });
+    c
+}
+
+/// `C = A · Bᵀ` through the SIMD-tiled backend: dispatches once to the
+/// lane ISA [`super::simd_isa`] detected at startup (AVX2 on `x86_64`
+/// CPUs that have it, the portable unrolled microkernel otherwise) and
+/// runs the [`MR`]×[`NR`] register-tiled schedule. Bit-identical to
+/// [`qgemm_bt_packed_threads`] and [`qgemm_bt_flow_threads`] on the
+/// matrices the planes were packed from, for every thread count.
+pub fn qgemm_bt_simd_threads<F: BlockFormat>(
+    a: &PackedQuantMat<F>,
+    b_t: &PackedQuantMat<F>,
+    threads: usize,
+) -> Matrix {
+    match super::simd_isa() {
+        #[cfg(target_arch = "x86_64")]
+        SimdIsa::Avx2 => qgemm_bt_tiled_threads::<F, avx2::Avx2Kernel>(a, b_t, threads),
+        #[cfg(not(target_arch = "x86_64"))]
+        SimdIsa::Avx2 => unreachable!("AVX2 is only ever detected on x86_64"),
+        SimdIsa::Portable => qgemm_bt_tiled_threads::<F, PortableKernel>(a, b_t, threads),
+    }
 }
 
 /// The dequantized-f64 reference partial for one group pair: decode both
@@ -885,8 +1415,9 @@ impl QuantizedMatrix {
     pub fn qgemm_bt_threads(&self, b_t: &QuantizedMatrix, threads: usize) -> Matrix {
         match super::kernel() {
             Kernel::Flow => self.qgemm_bt_flow_threads(b_t, threads),
-            Kernel::Packed => {
-                // One-time O(M·K + N·K) pack, then the integer fast path;
+            Kernel::Packed | Kernel::Simd => {
+                // One-time O(M·K + N·K) pack, then the integer fast path
+                // (the plane backend re-dispatches on the same knob);
                 // callers holding operands across calls should pack once
                 // themselves ([`QuantizedMatrix::pack`]) to amortize even
                 // this.
@@ -948,11 +1479,31 @@ impl PackedQuantizedMatrix {
         self.qgemm_bt_threads(b_t, threadpool::threads_for(work))
     }
 
-    /// [`PackedQuantizedMatrix::qgemm_bt`] with an explicit thread count
-    /// — bit-identical to the flow kernel on the matrices the planes were
-    /// packed from, for every thread count.
+    /// [`PackedQuantizedMatrix::qgemm_bt`] with an explicit thread count,
+    /// on the process-wide kernel backend: the SIMD-tiled microkernel
+    /// under [`Kernel::Simd`] (the default), the scalar packed kernel
+    /// otherwise ([`Kernel::Flow`] has no plane schedule — its
+    /// bit-identical twin on planes is the scalar kernel). Bit-identical
+    /// to the flow kernel on the matrices the planes were packed from,
+    /// for every thread count and backend.
     pub fn qgemm_bt_threads(&self, b_t: &PackedQuantizedMatrix, threads: usize) -> Matrix {
+        match super::kernel() {
+            Kernel::Simd => self.qgemm_bt_simd_threads(b_t, threads),
+            Kernel::Flow | Kernel::Packed => self.qgemm_bt_packed_threads(b_t, threads),
+        }
+    }
+
+    /// Force the scalar packed kernel regardless of the process knob
+    /// (backend comparisons — the parity suites and `qgemm_throughput`
+    /// pin and measure the backends independently).
+    pub fn qgemm_bt_packed_threads(&self, b_t: &PackedQuantizedMatrix, threads: usize) -> Matrix {
         dispatch_pair!(self, b_t, x, y => qgemm_bt_packed_threads(x, y, threads), "packed QGEMM")
+    }
+
+    /// Force the SIMD-tiled microkernel regardless of the process knob
+    /// (ISA per [`super::simd_isa`]).
+    pub fn qgemm_bt_simd_threads(&self, b_t: &PackedQuantizedMatrix, threads: usize) -> Matrix {
+        dispatch_pair!(self, b_t, x, y => qgemm_bt_simd_threads(x, y, threads), "SIMD QGEMM")
     }
 }
 
@@ -1165,6 +1716,133 @@ mod tests {
             let groups = 3 * 100usize.div_ceil(kind.group());
             assert_eq!(q.wire_bytes(), groups * kind.wire_bytes_group(), "{kind}");
             assert_eq!(q.pack().wire_bytes(), q.wire_bytes(), "{kind} packed");
+        }
+    }
+
+    /// Random `i8` lane vector over the FULL `i8` range including the
+    /// `i8::MIN` extreme the overflow audit is derived from (harsher
+    /// than any codec emits — the microkernels must be exact
+    /// regardless).
+    fn random_lanes(rng: &mut Rng, n: usize) -> Vec<i8> {
+        (0..n).map(|_| (rng.below(256) as i64 - 128) as i8).collect()
+    }
+
+    /// Reference dot in i64 (cannot wrap for these lengths).
+    fn idot_ref(a: &[i8], b: &[i8]) -> i64 {
+        a.iter().zip(b).map(|(x, y)| (*x as i64) * (*y as i64)).sum()
+    }
+
+    #[test]
+    fn lane_microkernels_are_exact_for_every_isa() {
+        // The portable unrolled kernel — and, where the CPU has it, the
+        // AVX2 kernel — must equal the plain i64 reference on every group
+        // size (16/32/64) plus odd tail lengths, with full-range lanes.
+        let mut rng = Rng::seed(520);
+        for n in [16usize, 32, 64, 7, 33] {
+            for round in 0..50 {
+                let a = random_lanes(&mut rng, n);
+                let b = [
+                    random_lanes(&mut rng, n),
+                    random_lanes(&mut rng, n),
+                    random_lanes(&mut rng, n),
+                    random_lanes(&mut rng, n),
+                ];
+                let want: Vec<i64> = b.iter().map(|bc| idot_ref(&a, bc)).collect();
+                let ctx = format!("n={n} round={round}");
+                assert_eq!(idot_unrolled(&a, &b[0]) as i64, want[0], "unrolled {ctx}");
+                let gb = [&b[0][..], &b[1][..], &b[2][..], &b[3][..]];
+                let p4 = PortableKernel::dot_1x4(&a, gb);
+                let p8 = PortableKernel::dot_2x4(&a, &b[0], gb);
+                for c in 0..NR {
+                    assert_eq!(p4[c] as i64, want[c], "portable 1x4 {ctx}");
+                    assert_eq!(p8[0][c] as i64, want[c], "portable 2x4 row0 {ctx}");
+                    assert_eq!(p8[1][c] as i64, idot_ref(&b[0], &b[c]), "portable 2x4 row1 {ctx}");
+                }
+                #[cfg(target_arch = "x86_64")]
+                {
+                    if super::super::simd_isa() == SimdIsa::Avx2 {
+                        assert_eq!(avx2::Avx2Kernel::dot(&a, &b[0]) as i64, want[0], "avx2 {ctx}");
+                        let v4 = avx2::Avx2Kernel::dot_1x4(&a, gb);
+                        let v8 = avx2::Avx2Kernel::dot_2x4(&a, &b[0], gb);
+                        for c in 0..NR {
+                            assert_eq!(v4[c] as i64, want[c], "avx2 1x4 {ctx}");
+                            assert_eq!(v8[0][c] as i64, want[c], "avx2 2x4 row0 {ctx}");
+                            assert_eq!(
+                                v8[1][c] as i64,
+                                idot_ref(&b[0], &b[c]),
+                                "avx2 2x4 row1 {ctx}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        // Deterministic vpmaddwd extreme: adjacent (-128)·(-128) pairs
+        // sum to 32 768 — one past i16::MAX, the exact value a
+        // saturating i16 path (vpmaddubsw-style) would corrupt. Every
+        // kernel must reduce it exactly on every group size.
+        for n in [16usize, 32, 64] {
+            let a = vec![i8::MIN; n];
+            let want = (n as i64) * 128 * 128;
+            assert_eq!(idot_unrolled(&a, &a) as i64, want, "unrolled min-extreme n={n}");
+            let gb = [&a[..], &a[..], &a[..], &a[..]];
+            let p4 = PortableKernel::dot_1x4(&a, gb);
+            assert_eq!(p4.map(|x| x as i64), [want; NR], "portable 1x4 min-extreme n={n}");
+            #[cfg(target_arch = "x86_64")]
+            {
+                if super::super::simd_isa() == SimdIsa::Avx2 {
+                    assert_eq!(avx2::Avx2Kernel::dot(&a, &a) as i64, want, "avx2 min n={n}");
+                    let v4 = avx2::Avx2Kernel::dot_1x4(&a, gb);
+                    assert_eq!(v4.map(|x| x as i64), [want; NR], "avx2 1x4 min n={n}");
+                    let v8 = avx2::Avx2Kernel::dot_2x4(&a, &a, gb);
+                    assert_eq!(v8[0].map(|x| x as i64), [want; NR], "avx2 2x4 r0 min n={n}");
+                    assert_eq!(v8[1].map(|x| x as i64), [want; NR], "avx2 2x4 r1 min n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn idot_exact_widens_beyond_the_i32_safe_span() {
+        // Adversarial whole-row reduction at the true i8 extreme
+        // (i8::MIN² = 16384 — the product the safe-lane bound must be
+        // derived from, NOT 127²), one lane past the provable bound. The
+        // true sum exceeds i32::MAX, so an unwidened accumulator would
+        // wrap; the chunked i64 path must return the exact value, and a
+        // full-length safe chunk must stay inside i32 (no debug-build
+        // overflow panic).
+        let n = IDOT_I32_SAFE_LANES + 1;
+        let a: Vec<i8> = vec![i8::MIN; n];
+        let want = (n as i64) * 128 * 128;
+        assert!(want > i32::MAX as i64, "the case must actually exceed i32");
+        assert_eq!(lanes_idot_exact(&a, &a), want);
+        // A full safe-length chunk is the worst case lanes_idot may see:
+        // it must fit i32 exactly.
+        assert!((IDOT_I32_SAFE_LANES as i64) * 128 * 128 <= i32::MAX as i64);
+        // And group-sized spans still take the single-chunk fast path.
+        assert_eq!(lanes_idot_exact(&a[..64], &a[..64]), 64 * 128 * 128);
+    }
+
+    #[test]
+    fn simd_kernel_matches_scalar_packed_kernel_bitwise() {
+        // Unit-level smoke of the tiled backend (the full parity matrix
+        // lives in tests/packed_parity.rs): both explicit plane backends,
+        // plus the knob-dispatching entry, agree bit for bit — across row
+        // tails (odd m), column tails (n % NR != 0) and K tails.
+        let mut rng = Rng::seed(521);
+        for kind in QuantKind::ALL {
+            for (m, k, n) in [(3, 130, 5), (1, 40, 1), (7, 64, 11)] {
+                let a = Matrix::randn(m, k, 1.0, &mut rng);
+                let b = Matrix::randn(n, k, 1.0, &mut rng);
+                let pa = QuantizedMatrix::quantize(kind, &a, MODE).pack_threads(1);
+                let pb = QuantizedMatrix::quantize(kind, &b, MODE).pack_threads(1);
+                let scalar = pa.qgemm_bt_packed_threads(&pb, 1);
+                let simd = pa.qgemm_bt_simd_threads(&pb, 1);
+                let dispatched = pa.qgemm_bt_threads(&pb, 1);
+                let bits = |m: &Matrix| m.data.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+                assert_eq!(bits(&scalar), bits(&simd), "{kind} {m}x{k}x{n}");
+                assert_eq!(bits(&scalar), bits(&dispatched), "{kind} {m}x{k}x{n} dispatch");
+            }
         }
     }
 }

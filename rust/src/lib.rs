@@ -30,9 +30,12 @@
 //! **bit-identical** results for every thread count (`HIF4_THREADS` /
 //! `--threads` / [`util::threadpool::set_threads`]);
 //! `tests/parallel_parity.rs` pins the contract. The quantized GEMMs
-//! additionally have two bit-identical kernel backends — the
-//! element-wise flow reference and the decode-once packed integer planes
-//! (`HIF4_KERNEL` / `--kernel`) — and the model/serving layers run
+//! additionally have three bit-identical kernel backends — the
+//! element-wise flow reference, the decode-once packed integer planes,
+//! and the default SIMD-tiled microkernel over those planes (AVX2 where
+//! the CPU has it, a portable unrolled-scalar fallback elsewhere —
+//! `HIF4_KERNEL` / `--kernel`, ISA via [`dotprod::simd_isa`]) — and the
+//! model/serving layers run
 //! quantized linears on the packed planes directly (weights packed once,
 //! activations per call), including a PJRT-free native serving engine
 //! ([`runtime::native`], [`server::service::Server::start_native`])

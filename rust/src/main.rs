@@ -18,9 +18,11 @@
 //! ```
 //!
 //! Every subcommand honours `--threads N` (or `HIF4_THREADS`) for the
-//! data-parallel GEMM/quantization kernels, and `--kernel flow|packed`
-//! (or `HIF4_KERNEL`) for the quantized-GEMM backend (bit-identical
-//! results; packed is the fast path).
+//! data-parallel GEMM/quantization kernels, and `--kernel
+//! simd|packed|flow` (or `HIF4_KERNEL`) for the quantized-GEMM backend
+//! (bit-identical results; `simd` — the default — is the register-tiled
+//! microkernel whose lane ISA is CPU-detected once at startup: AVX2
+//! where available, the portable unrolled-scalar kernel otherwise).
 
 use anyhow::Result;
 use hif4::formats::{mse, QuantKind, QuantScheme};
@@ -45,7 +47,8 @@ fn main() -> Result<()> {
         match k {
             "flow" => hif4::dotprod::set_kernel(hif4::dotprod::Kernel::Flow),
             "packed" => hif4::dotprod::set_kernel(hif4::dotprod::Kernel::Packed),
-            other => anyhow::bail!("--kernel must be flow or packed, got {other}"),
+            "simd" => hif4::dotprod::set_kernel(hif4::dotprod::Kernel::Simd),
+            other => anyhow::bail!("--kernel must be simd, packed or flow, got {other}"),
         }
     }
     match args.subcommand() {
@@ -119,6 +122,11 @@ fn main() -> Result<()> {
                 ]);
             }
             t.print();
+            println!(
+                "\nqgemm kernel backend: {} (simd isa: {})",
+                hif4::dotprod::kernel().label(),
+                hif4::dotprod::simd_isa_label()
+            );
             println!("\nsubcommands: serve | sweep | hwcost | dotprod | quantize | info");
             Ok(())
         }

@@ -183,6 +183,44 @@ impl KvStore {
         }
     }
 
+    /// Row width this store was sized for (kv_heads × head_dim).
+    pub(crate) fn kvd(&self) -> usize {
+        match self {
+            KvStore::F32 { kvd, .. } | KvStore::Quant { kvd, .. } => *kvd,
+        }
+    }
+
+    /// Positions stored so far (rows appended since creation/[`clear`]).
+    ///
+    /// [`clear`]: KvStore::clear
+    pub(crate) fn rows(&self) -> usize {
+        match self {
+            KvStore::F32 { kvd, data } => data.len() / (*kvd).max(1),
+            KvStore::Quant { groups_per_row, scales, .. } => {
+                scales.len() / (*groups_per_row).max(1)
+            }
+        }
+    }
+
+    /// Drop every stored row but keep the backing allocations — the
+    /// slot-reuse path: a recycled cache page serves its next sequence
+    /// without reallocating, while the byte accounting (stored length,
+    /// never `Vec` capacity) immediately reports the emptied store as 0.
+    fn clear(&mut self) {
+        match self {
+            KvStore::F32 { data, .. } => data.clear(),
+            KvStore::Quant { lanes, scales, .. } => {
+                lanes.clear();
+                scales.clear();
+            }
+        }
+    }
+
+    /// Bytes of the rows actually stored (decode-once planes for
+    /// quantized stores). Derived from the stored *length* — a recycled
+    /// page's backing capacity, which can be much larger after
+    /// reset/reuse churn, is reported by [`KvStore::capacity_bytes`]
+    /// instead and never leaks into this number.
     fn resident_bytes(&self) -> usize {
         match self {
             KvStore::F32 { data, .. } => std::mem::size_of_val(data.as_slice()),
@@ -192,6 +230,21 @@ impl KvStore {
         }
     }
 
+    /// Bytes the backing allocations currently hold, stored or parked
+    /// (`≥ resident_bytes` by construction).
+    fn capacity_bytes(&self) -> usize {
+        match self {
+            KvStore::F32 { data, .. } => data.capacity() * std::mem::size_of::<f32>(),
+            KvStore::Quant { lanes, scales, .. } => {
+                lanes.capacity() * std::mem::size_of::<i8>()
+                    + scales.capacity() * std::mem::size_of::<f64>()
+            }
+        }
+    }
+
+    /// Serialized bytes of the stored rows (canonical packed group wire
+    /// layout for quantized stores; dense f32 for F32). Like
+    /// [`KvStore::resident_bytes`], derived from the stored length only.
     fn wire_bytes(&self) -> usize {
         match self {
             KvStore::F32 { data, .. } => std::mem::size_of_val(data.as_slice()),
@@ -224,19 +277,60 @@ impl KvCache {
     }
 
     /// Bytes the cache keeps resident (decode-once planes for quantized
-    /// kinds).
+    /// kinds). Reported from the **stored length** — rows actually held —
+    /// never from the backing allocation capacity, so the number stays
+    /// exact through reset/reuse churn (`wire_bytes ≤ resident_bytes ≤
+    /// capacity_bytes` always; pinned by the slot-reuse unit test).
     pub fn resident_bytes(&self) -> usize {
         self.layers.iter().map(|l| l.k.resident_bytes() + l.v.resident_bytes()).sum()
     }
 
     /// Bytes of the serialized form (the format's canonical packed group
     /// wire layout for quantized caches; same as resident for f32).
+    /// Stored-length-derived like [`KvCache::resident_bytes`].
     pub fn wire_bytes(&self) -> usize {
         self.layers.iter().map(|l| l.k.wire_bytes() + l.v.wire_bytes()).sum()
     }
 
+    /// Bytes currently parked in the backing allocations — after
+    /// [`KvCache::reset`] this exceeds [`KvCache::resident_bytes`] (the
+    /// whole point of recycling: the allocation survives, the contents
+    /// don't count).
+    pub fn capacity_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.k.capacity_bytes() + l.v.capacity_bytes()).sum()
+    }
+
+    /// Reset for slot reuse: forget every stored row in every layer but
+    /// keep the backing allocations, so a recycled page appends its next
+    /// sequence without re-growing. The byte accounting reports the
+    /// stored content only — an emptied page is 0 bytes resident/wire
+    /// even while its capacity is still parked.
+    pub fn reset(&mut self) {
+        for l in &mut self.layers {
+            l.k.clear();
+            l.v.clear();
+        }
+        self.len = 0;
+    }
+
+    /// Does this page carry `cfg`'s geometry under `kind` storage? The
+    /// slot-reuse guard: recycled pages only re-attach to an engine whose
+    /// model/cache configuration they were built for.
+    pub fn fits(&self, cfg: &ModelConfig, kind: KvCacheType) -> bool {
+        let kvd = cfg.kv_heads() * cfg.head_dim;
+        self.kind == kind
+            && self.layers.len() == cfg.n_layers
+            && self.layers.iter().all(|l| l.k.kvd() == kvd && l.v.kvd() == kvd)
+    }
+
     pub(crate) fn advance(&mut self, n: usize) {
         self.len += n;
+        // Appends happen store-by-store before the position count moves;
+        // once it does, every store must actually hold the rows it claims.
+        debug_assert!(
+            self.layers.iter().all(|l| l.k.rows() == self.len && l.v.rows() == self.len),
+            "advance({n}) out of step with the appended rows"
+        );
     }
 }
 
@@ -353,5 +447,76 @@ mod tests {
         assert!(hc.wire_bytes() < hc.resident_bytes());
         // 16-wide rows pad to one 64-lane unit: 36 wire bytes vs 64 f32.
         assert_eq!(hc.wire_bytes(), 2 * 2 * 8 * hif4::HiF4Unit::WIRE_BYTES);
+    }
+
+    #[test]
+    fn byte_accounting_is_exact_through_slot_reuse() {
+        // The slot-reuse lifecycle: fill a page, reset it for the next
+        // sequence, refill with fewer rows. Resident/wire bytes must
+        // track the *stored* rows exactly at every step — a recycled
+        // page's parked capacity (from the longer first tenant) must
+        // never inflate them — and `wire ≤ resident ≤ capacity` holds
+        // throughout.
+        let c = cfg();
+        let mut rng = Rng::seed(8);
+        let mut cache = KvCache::new(&c, KvCacheType::HIF4);
+        assert!(cache.fits(&c, KvCacheType::HIF4));
+        assert!(!cache.fits(&c, KvCacheType::F32));
+        // Exact per-row costs for this geometry: kvd = 16 pads to one
+        // 64-lane HiF4 group → 64 lane bytes + 8 scale bytes resident,
+        // 36 canonical wire bytes; 2 layers × (K + V) = 4 stores.
+        let resident_per_pos = 4 * (64 + 8);
+        let wire_per_pos = 4 * hif4::HiF4Unit::WIRE_BYTES;
+        let fill = |cache: &mut KvCache, rows: &Matrix| {
+            for layer in 0..2 {
+                for r in 0..rows.rows {
+                    cache.layers[layer].k.append_row(rows.row(r));
+                    cache.layers[layer].v.append_row(rows.row(r));
+                }
+            }
+            cache.advance(rows.rows);
+        };
+        let first = Matrix::randn(8, 16, 1.0, &mut rng);
+        fill(&mut cache, &first);
+        assert_eq!(cache.resident_bytes(), 8 * resident_per_pos);
+        assert_eq!(cache.wire_bytes(), 8 * wire_per_pos);
+        assert!(cache.wire_bytes() <= cache.resident_bytes());
+        assert!(cache.resident_bytes() <= cache.capacity_bytes());
+
+        // Evict + recycle: contents gone, allocation parked.
+        cache.reset();
+        assert_eq!(cache.len(), 0);
+        assert!(cache.is_empty());
+        assert_eq!(cache.resident_bytes(), 0, "an emptied page stores nothing");
+        assert_eq!(cache.wire_bytes(), 0);
+        assert!(cache.capacity_bytes() >= 8 * resident_per_pos, "allocation must survive reset");
+
+        // Second, shorter tenant: counts reflect it exactly — reporting
+        // from capacity would claim the old 8-row footprint.
+        let second = Matrix::randn(3, 16, 1.0, &mut rng);
+        fill(&mut cache, &second);
+        assert_eq!(cache.len(), 3);
+        assert_eq!(cache.resident_bytes(), 3 * resident_per_pos);
+        assert_eq!(cache.wire_bytes(), 3 * wire_per_pos);
+        assert!(cache.wire_bytes() <= cache.resident_bytes());
+        assert!(cache.resident_bytes() < cache.capacity_bytes());
+
+        // And the recycled page still decodes correctly (same codec path
+        // as a fresh store).
+        let mut reference = second.clone();
+        qdq_rows(QuantKind::HiF4, &mut reference);
+        let dense = cache.layers[1].v.dense(3);
+        for r in 0..3 {
+            assert_eq!(dense.row(r), reference.row(r), "row {r}");
+        }
+
+        // The f32 backend holds the same invariants (wire == resident).
+        let mut f32c = KvCache::new(&c, KvCacheType::F32);
+        fill(&mut f32c, &first);
+        assert_eq!(f32c.resident_bytes(), 8 * 4 * 16 * 4);
+        assert_eq!(f32c.wire_bytes(), f32c.resident_bytes());
+        f32c.reset();
+        assert_eq!(f32c.resident_bytes(), 0);
+        assert!(f32c.capacity_bytes() > 0);
     }
 }

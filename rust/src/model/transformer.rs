@@ -365,7 +365,9 @@ impl Transformer {
         };
         let qx = QuantizedMatrix::quantize(qw.kind(), x, RoundMode::NearestEven);
         match crate::dotprod::kernel() {
-            Kernel::Packed => qx.pack().qgemm_bt(&qw.planes),
+            // Both plane backends (scalar packed and the SIMD-tiled
+            // microkernel) re-dispatch on the same knob inside qgemm_bt.
+            Kernel::Packed | Kernel::Simd => qx.pack().qgemm_bt(&qw.planes),
             Kernel::Flow => qx.qgemm_bt_flow(&qw.units),
         }
     }
@@ -1424,11 +1426,19 @@ mod tests {
         set_kernel(Kernel::Packed);
         assert_eq!(crate::dotprod::kernel(), Kernel::Packed, "knob round-trip");
         let packed = m.forward(&toks(), None, None, None);
+        set_kernel(Kernel::Simd);
+        assert_eq!(crate::dotprod::kernel(), Kernel::Simd, "knob round-trip");
+        let simd = m.forward(&toks(), None, None, None);
         set_kernel(prev);
         assert_eq!(
             flow.data.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
             packed.data.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
             "kernel backends must agree bit for bit"
+        );
+        assert_eq!(
+            packed.data.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+            simd.data.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+            "the SIMD backend must agree with the scalar backends bit for bit"
         );
     }
 

@@ -62,6 +62,14 @@ impl DecodeStream {
     pub fn cache(&self) -> &KvCache {
         &self.cache
     }
+
+    /// Surrender this stream's cache page for recycling: the serving
+    /// loop parks released pages and hands them back to
+    /// [`DecodeEngine::start_reusing`], so steady-state decode admits
+    /// sequences without reallocating KV storage.
+    pub fn into_cache(self) -> KvCache {
+        self.cache
+    }
 }
 
 impl DecodeEngine {
@@ -85,18 +93,31 @@ impl DecodeEngine {
     /// to `max_prompt`, never empty — a malformed request can never panic
     /// the engine.
     pub fn start(&self, tokens: &[usize]) -> DecodeStream {
+        self.start_reusing(tokens, None)
+    }
+
+    /// [`DecodeEngine::start`] with an optional recycled cache page: the
+    /// page is reset (stored rows dropped, allocations kept) and reused,
+    /// so admission after eviction churn skips the KV reallocation. A
+    /// page from a different configuration (guarded by
+    /// [`KvCache::fits`]) is dropped and a fresh one allocated —
+    /// recycling can never change behavior, only allocation traffic;
+    /// decode output is bit-identical either way (unit-tested below).
+    pub fn start_reusing(&self, tokens: &[usize], page: Option<KvCache>) -> DecodeStream {
         let vocab = self.model.cfg.vocab;
         let mut prompt: Vec<usize> = tokens.iter().map(|&t| t.min(vocab - 1)).collect();
         prompt.truncate(self.max_prompt);
         if prompt.is_empty() {
             prompt.push(0);
         }
-        DecodeStream {
-            prompt,
-            cache: KvCache::new(&self.model.cfg, self.kv),
-            next: 0,
-            generated: 0,
-        }
+        let cache = match page {
+            Some(mut page) if page.fits(&self.model.cfg, self.kv) => {
+                page.reset();
+                page
+            }
+            _ => KvCache::new(&self.model.cfg, self.kv),
+        };
+        DecodeStream { prompt, cache, next: 0, generated: 0 }
     }
 
     /// One continuous-batching step over a mixed batch: fresh streams
@@ -281,6 +302,42 @@ mod tests {
         assert!(matches!(cfg.attention, Attention::Gqa { kv_heads: 2 }));
         assert!(matches!(cfg.ffn, Ffn::SwiGlu));
         assert_eq!(cfg.param_count(), m.param_elems());
+    }
+
+    #[test]
+    fn recycled_cache_pages_decode_identically() {
+        let dir = std::env::temp_dir().join("hif4_native_recycle_test");
+        write_native_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        let store = m.init_params(21);
+        let model = Arc::new(transformer_from_store(&m, &store).unwrap());
+        let engine = DecodeEngine::new(Arc::clone(&model), KvCacheType::HIF4, 16);
+        // First tenant: a long sequence grows the page's allocations.
+        let mut s1 = engine.start(&[1, 2, 3, 4, 5, 6, 7]);
+        for _ in 0..6 {
+            engine.step(&mut [&mut s1]);
+        }
+        let page = s1.into_cache();
+        assert!(page.capacity_bytes() > 0);
+        // Recycled vs fresh on a shorter prompt: bit-identical decode,
+        // identical stored-length accounting, larger parked capacity.
+        let prompt = [9usize, 4, 2];
+        let mut recycled = engine.start_reusing(&prompt, Some(page));
+        let mut fresh = engine.start(&prompt);
+        assert_eq!(recycled.cache().resident_bytes(), 0, "reset page starts empty");
+        for stepi in 0..4 {
+            let a = engine.step(&mut [&mut recycled]);
+            let b = engine.step(&mut [&mut fresh]);
+            assert_eq!(a[0].0, b[0].0, "step {stepi} token");
+            assert_eq!(a[0].1.to_bits(), b[0].1.to_bits(), "step {stepi} logprob");
+        }
+        assert_eq!(recycled.cache().resident_bytes(), fresh.cache().resident_bytes());
+        assert_eq!(recycled.cache().wire_bytes(), fresh.cache().wire_bytes());
+        assert!(recycled.cache().capacity_bytes() >= fresh.cache().capacity_bytes());
+        // A page from a mismatched configuration is dropped, not misused.
+        let f32_engine = DecodeEngine::new(model, KvCacheType::F32, 16);
+        let s = f32_engine.start_reusing(&prompt, Some(recycled.into_cache()));
+        assert_eq!(s.cache().kind(), KvCacheType::F32);
     }
 
     #[test]

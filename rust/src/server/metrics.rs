@@ -3,7 +3,7 @@
 //! `BENCH_decode`/serving row is attributable to a format.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::OnceLock;
+use std::sync::Mutex;
 use std::time::Duration;
 
 /// The quantization configuration a server's counters describe: weight
@@ -27,8 +27,8 @@ pub struct Metrics {
     /// buckets[i] counts latencies in [2^i, 2^(i+1)) µs.
     buckets: [AtomicU64; 25],
     total_us: AtomicU64,
-    /// Set once at engine bring-up ([`Metrics::set_format_tag`]).
-    format_tag: OnceLock<FormatTag>,
+    /// (Re)bound at engine bring-up ([`Metrics::set_format_tag`]).
+    format_tag: Mutex<Option<FormatTag>>,
 }
 
 impl Metrics {
@@ -36,20 +36,22 @@ impl Metrics {
         Metrics::default()
     }
 
-    /// Tag these counters with the serving quantization configuration
-    /// (first caller wins — the tag describes the engine, which never
-    /// changes over a server's lifetime).
+    /// Tag these counters with the serving quantization configuration.
+    /// Every engine (re)construction calls this, and the **latest engine
+    /// wins**: an in-process engine swap or `serve` restart sharing a
+    /// `Metrics` handle overwrites the previous run's tag instead of
+    /// reporting a stale format/KV/weight-bytes combination.
     pub fn set_format_tag(&self, format: &str, kv: &str, weight_wire_bytes: u64) {
-        let _ = self.format_tag.set(FormatTag {
+        *self.format_tag.lock().unwrap() = Some(FormatTag {
             format: format.to_string(),
             kv: kv.to_string(),
             weight_wire_bytes,
         });
     }
 
-    /// The engine's quantization tag, if one was set.
-    pub fn format_tag(&self) -> Option<&FormatTag> {
-        self.format_tag.get()
+    /// The active engine's quantization tag, if one is bound.
+    pub fn format_tag(&self) -> Option<FormatTag> {
+        self.format_tag.lock().unwrap().clone()
     }
 
     pub fn record_request(&self) {
@@ -158,14 +160,21 @@ mod tests {
     }
 
     #[test]
-    fn format_tag_reaches_summary_once() {
+    fn format_tag_tracks_engine_reconstruction() {
         let m = Metrics::new();
         m.set_format_tag("mxfp4", "f32", 1234);
-        // First caller wins; later attempts don't clobber the engine tag.
-        m.set_format_tag("bf16", "hif4", 0);
         let t = m.format_tag().expect("tag set");
         assert_eq!((t.format.as_str(), t.kv.as_str(), t.weight_wire_bytes), ("mxfp4", "f32", 1234));
         let s = m.summary();
         assert!(s.contains("format=mxfp4") && s.contains("kv=f32") && s.contains("1234B"), "{s}");
+        // An engine swap re-tags at construction: the latest engine wins,
+        // so a restarted server can never report the previous run's
+        // format/KV/weight-bytes combination.
+        m.set_format_tag("bf16", "hif4", 0);
+        let t = m.format_tag().expect("tag rebound");
+        assert_eq!((t.format.as_str(), t.kv.as_str(), t.weight_wire_bytes), ("bf16", "hif4", 0));
+        let s = m.summary();
+        assert!(s.contains("format=bf16") && s.contains("kv=hif4"), "{s}");
+        assert!(!s.contains("mxfp4"), "stale tag must not survive a swap: {s}");
     }
 }

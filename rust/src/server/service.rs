@@ -32,7 +32,7 @@
 use super::batcher::{run_batcher, BatchPolicy, ContinuousScheduler, Pending};
 use super::metrics::Metrics;
 use super::protocol::{Request, Response, MAX_NEW_CAP};
-use crate::model::kv::KvCacheType;
+use crate::model::kv::{KvCache, KvCacheType};
 use crate::model::transformer::{greedy_from_row, Transformer};
 use crate::runtime::artifact::{Manifest, ParamStore};
 use crate::runtime::client::{literal_f32, tokens_literal, Executable, Runtime};
@@ -431,6 +431,13 @@ fn decode_worker_loop(
     // busy workers get through once per step.
     const IDLE_POLL: Duration = Duration::from_millis(1);
     let mut sched: ContinuousScheduler<ActiveSeq> = ContinuousScheduler::new(max_slots);
+    // Recycled KV-cache pages from evicted sequences: the next admission
+    // reuses the allocation instead of growing a fresh one (bounded by
+    // the slot count, so parked capacity never exceeds one full batch).
+    // Page reuse is behavior-neutral — decode is bit-identical on a
+    // recycled page (`runtime::native` unit tests) — and the cache's
+    // byte accounting reports stored rows, not the parked capacity.
+    let mut spare_pages: Vec<KvCache> = Vec::new();
     let mut closed = false;
     loop {
         if sched.is_empty() {
@@ -440,7 +447,7 @@ fn decode_worker_loop(
             // Idle: poll for work with a bounded wait (see IDLE_POLL).
             let next = { rx.lock().unwrap().recv_timeout(IDLE_POLL) };
             match next {
-                Ok(p) => admit_seq(&engine, &mut sched, p),
+                Ok(p) => admit_seq(&engine, &mut sched, p, &mut spare_pages),
                 Err(RecvTimeoutError::Timeout) => continue,
                 Err(RecvTimeoutError::Disconnected) => return,
             }
@@ -450,7 +457,7 @@ fn decode_worker_loop(
         while !closed && sched.has_free() {
             let next = { rx.lock().unwrap().try_recv() };
             match next {
-                Ok(p) => admit_seq(&engine, &mut sched, p),
+                Ok(p) => admit_seq(&engine, &mut sched, p, &mut spare_pages),
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => closed = true,
             }
@@ -489,21 +496,26 @@ fn decode_worker_loop(
             if done {
                 if let Some(a) = sched.release(id) {
                     metrics.record_latency(a.pending.arrived.elapsed());
+                    if spare_pages.len() < max_slots {
+                        spare_pages.push(a.stream.into_cache());
+                    }
                 }
             }
         }
     }
 }
 
-/// Open a decode stream for a request and admit it into a free slot (the
-/// callers only admit when one exists).
+/// Open a decode stream for a request — reusing a recycled cache page
+/// when one is parked — and admit it into a free slot (the callers only
+/// admit when one exists).
 fn admit_seq(
     engine: &DecodeEngine,
     sched: &mut ContinuousScheduler<ActiveSeq>,
     p: Pending<ReplyHandle>,
+    spare_pages: &mut Vec<KvCache>,
 ) {
     let of = p.request.max_new.clamp(1, MAX_NEW_CAP);
-    let stream = engine.start(&p.request.tokens);
+    let stream = engine.start_reusing(&p.request.tokens, spare_pages.pop());
     let admitted = sched.admit(ActiveSeq { pending: p, stream, emitted: 0, of });
     debug_assert!(admitted.is_some(), "admit_seq requires a free slot");
 }

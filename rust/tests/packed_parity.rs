@@ -1,20 +1,24 @@
 //! Packed-plane bit-equality across **all five block formats**: the
-//! decode-once integer kernels must equal the element-wise flow partials
-//! — and the flows equal the dequantized-f64 reference — **exactly**,
+//! decode-once integer kernels — the scalar packed kernel *and* the
+//! SIMD-tiled microkernel — must equal the element-wise flow partials,
+//! and the flows equal the dequantized-f64 reference, **exactly**:
 //! across ≥6 magnitude decades, on zero groups, under NaN-scale
-//! poisoning, on ragged tail-group shapes, and for any thread count.
-//! This is the contract that makes the kernel-backend selector a pure
-//! performance knob for every format the unified `QuantizedMatrix` API
-//! serves.
+//! poisoning, on ragged tail-group shapes, on randomized geometries
+//! (property-tested, incl. degenerate 1-row/1-col), at adversarial
+//! max-magnitude `k ≥ 16384`, and for any thread count. This is the
+//! contract that makes the kernel-backend selector (`simd == packed ==
+//! flow == dequant-f64`) a pure performance knob for every format the
+//! unified `QuantizedMatrix` API serves.
 
 use hif4::dotprod::quant_tensor::{
-    dot_dequant_ref, qgemm_bt_flow_threads, qgemm_bt_packed_threads, BfpFmt, BlockFormat,
-    HiF4Fmt, Mx4Fmt, Mxfp4Fmt, Nvfp4Fmt, PackedQuantMat, QuantMat,
+    dot_dequant_ref, qgemm_bt_flow_threads, qgemm_bt_packed_threads, qgemm_bt_simd_threads,
+    BfpFmt, BlockFormat, HiF4Fmt, Mx4Fmt, Mxfp4Fmt, Nvfp4Fmt, PackedQuantMat, QuantMat,
 };
 use hif4::dotprod::QuantizedMatrix;
 use hif4::formats::rounding::RoundMode;
 use hif4::formats::QuantKind;
 use hif4::tensor::{Matrix, Rng};
+use hif4::util::proptest::{check, Gen};
 
 const MODE: RoundMode = RoundMode::NearestEven;
 
@@ -72,8 +76,10 @@ fn zero_groups_dot_to_exact_zero_all_formats() {
         let g = kind.group();
         let z = QuantizedMatrix::quantize(kind, &Matrix::zeros(1, g), MODE);
         let pz = z.pack();
-        let c = pz.qgemm_bt_threads(&pz, 1);
+        let c = pz.qgemm_bt_packed_threads(&pz, 1);
         assert_eq!(c.data[0], 0.0, "{kind}: zero groups must dot to zero exactly");
+        let simd = pz.qgemm_bt_simd_threads(&pz, 1);
+        assert_eq!(c.data[0].to_bits(), simd.data[0].to_bits(), "{kind} simd");
         let flow = z.qgemm_bt_flow_threads(&z, 1);
         assert_eq!(c.data[0].to_bits(), flow.data[0].to_bits(), "{kind}");
     }
@@ -91,19 +97,25 @@ fn nan_scale_poisons_packed_dot_and_gemm_all_formats() {
         let vb: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
         let qa = QuantizedMatrix::quantize(kind, &Matrix::from_vec(1, k, va), MODE);
         let qb = QuantizedMatrix::quantize(kind, &Matrix::from_vec(1, k, vb), MODE);
-        // GEMM: every output touching the poisoned group is NaN on both
-        // backends (here: the single output cell).
+        // GEMM: every output touching the poisoned group is NaN on every
+        // backend (here: the single output cell).
         let flow = qa.qgemm_bt_flow_threads(&qb, 1);
-        let packed = qa.pack_threads(1).qgemm_bt_threads(&qb.pack_threads(1), 1);
+        let pa = qa.pack_threads(1);
+        let pb = qb.pack_threads(1);
+        let packed = pa.qgemm_bt_packed_threads(&pb, 1);
+        let simd = pa.qgemm_bt_simd_threads(&pb, 1);
         assert!(flow.data.iter().all(|x| x.is_nan()), "{kind} flow");
         assert!(packed.data.iter().all(|x| x.is_nan()), "{kind} packed");
+        assert!(simd.data.iter().all(|x| x.is_nan()), "{kind} simd");
     }
 }
 
 #[test]
 fn packed_gemm_equals_flow_gemm_bitwise_all_formats() {
     // Ragged shapes: clean multiples, sub-group K, tails of every group
-    // size (64/32/16), plus NVFP4's non-multiple-of-PE tails.
+    // size (64/32/16), plus NVFP4's non-multiple-of-PE tails. Both plane
+    // backends (scalar packed and the SIMD-tiled microkernel) must equal
+    // the flow for every thread count.
     let mut rng = Rng::seed(7007);
     for kind in QuantKind::ALL {
         for (m, k, n) in [(5, 130, 7), (16, 64, 16), (1, 200, 9), (4, 72, 6), (8, 40, 3)] {
@@ -115,15 +127,164 @@ fn packed_gemm_equals_flow_gemm_bitwise_all_formats() {
             let pa = qa.pack_threads(1);
             let pb = qb.pack_threads(1);
             for threads in [1, 3, 4] {
-                let packed = pa.qgemm_bt_threads(&pb, threads);
+                let packed = pa.qgemm_bt_packed_threads(&pb, threads);
                 assert!(
                     feq32_all(&flow.data, &packed.data),
                     "{kind} {m}x{k}x{n} threads={threads}"
                 );
+                let simd = pa.qgemm_bt_simd_threads(&pb, threads);
+                assert!(
+                    feq32_all(&flow.data, &simd.data),
+                    "{kind} {m}x{k}x{n} threads={threads} simd"
+                );
             }
-            // The dispatching entry point agrees too, whatever the backend.
+            // The dispatching entry points agree too, whatever backend
+            // the process knob picked.
             let dispatched = qa.qgemm_bt_threads(&qb, 2);
             assert!(feq32_all(&flow.data, &dispatched.data), "{kind} {m}x{k}x{n} dispatch");
+            let plane_dispatched = pa.qgemm_bt_threads(&pb, 2);
+            assert!(
+                feq32_all(&flow.data, &plane_dispatched.data),
+                "{kind} {m}x{k}x{n} plane dispatch"
+            );
+        }
+    }
+}
+
+/// Random GEMM geometries biased toward the awkward cases: `k % 64 != 0`
+/// tail groups (for every group size) and single-row / single-column
+/// degenerate matrices. Shrinks toward (1, 1, 1).
+struct GeomGen;
+
+impl Gen for GeomGen {
+    type Value = (usize, usize, usize);
+
+    fn generate(&self, rng: &mut Rng) -> (usize, usize, usize) {
+        // m/n: 1..=10 with a heavy bias to 1 (the degenerate shapes).
+        let dim = |rng: &mut Rng| if rng.below(4) == 0 { 1 } else { 1 + rng.below(10) };
+        let m = dim(rng);
+        let n = dim(rng);
+        // k: 1..=320, biased off the 64-multiple grid so padded tails
+        // dominate; keep exact multiples reachable too.
+        let k = if rng.below(5) == 0 { 64 * (1 + rng.below(4)) } else { 1 + rng.below(320) };
+        (m, k, n)
+    }
+
+    fn shrink(&self, v: &(usize, usize, usize)) -> Vec<(usize, usize, usize)> {
+        let (m, k, n) = *v;
+        let mut out = Vec::new();
+        if m > 1 {
+            out.push((1, k, n));
+            out.push((m / 2, k, n));
+        }
+        if n > 1 {
+            out.push((m, k, 1));
+            out.push((m, k, n / 2));
+        }
+        if k > 1 {
+            out.push((m, 1, n));
+            out.push((m, k / 2, n));
+        }
+        out
+    }
+}
+
+#[test]
+fn simd_matches_packed_bitwise_on_random_geometries_property() {
+    // The satellite property test: for ANY geometry — tails, degenerate
+    // rows/cols, every QuantKind — the SIMD microkernel and the scalar
+    // packed kernel agree bit for bit (and both match the flow).
+    check(60, 7010, &GeomGen, |&(m, k, n)| {
+        // Deterministic per-geometry data so shrinking stays meaningful.
+        let mut rng = Rng::seed(31 * m as u64 + 7 * k as u64 + 13 * n as u64);
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(n, k, 1.0, &mut rng);
+        QuantKind::ALL.iter().all(|&kind| {
+            let qa = QuantizedMatrix::quantize_threads(kind, &a, MODE, 1);
+            let qb = QuantizedMatrix::quantize_threads(kind, &b, MODE, 1);
+            let pa = qa.pack_threads(1);
+            let pb = qb.pack_threads(1);
+            let packed = pa.qgemm_bt_packed_threads(&pb, 1);
+            let simd = pa.qgemm_bt_simd_threads(&pb, 1);
+            let flow = qa.qgemm_bt_flow_threads(&qb, 1);
+            feq32_all(&packed.data, &simd.data) && feq32_all(&flow.data, &packed.data)
+        })
+    });
+}
+
+#[test]
+fn adversarial_max_magnitude_large_k_stays_exact() {
+    // The overflow-audit regression (satellite of the i64-widening fix):
+    // k ≥ 16384 with every element at the codec's peak magnitude drives
+    // hundreds of max-lane groups through the kernels — any accumulator
+    // that wrapped, saturated (e.g. a vpmaddubsw-style i16 path) or
+    // reassociated the f64 stages would break the four-way bit equality.
+    let k = 16384 + 40; // ragged tail on top, for every group size
+    for kind in QuantKind::ALL {
+        let va: Vec<f32> = (0..k).map(|i| if i % 2 == 0 { 7.0 } else { -7.0 }).collect();
+        let vb: Vec<f32> = (0..k).map(|i| if i % 3 == 0 { -7.0 } else { 7.0 }).collect();
+        let qa = QuantizedMatrix::quantize(kind, &Matrix::from_vec(1, k, va), MODE);
+        let qb = QuantizedMatrix::quantize(kind, &Matrix::from_vec(1, k, vb), MODE);
+        let flow = qa.qgemm_bt_flow_threads(&qb, 1);
+        let pa = qa.pack_threads(1);
+        let pb = qb.pack_threads(1);
+        let packed = pa.qgemm_bt_packed_threads(&pb, 1);
+        let simd = pa.qgemm_bt_simd_threads(&pb, 1);
+        assert!(flow.data[0].is_finite(), "{kind}: max-magnitude GEMM must stay finite");
+        assert_eq!(flow.data[0].to_bits(), packed.data[0].to_bits(), "{kind} packed");
+        assert_eq!(flow.data[0].to_bits(), simd.data[0].to_bits(), "{kind} simd");
+        // Self-product: every group partial is positive, so the result
+        // bounds k from below — a wrapped integer would go negative.
+        let self_packed = pa.qgemm_bt_packed_threads(&pa, 1);
+        let self_simd = pa.qgemm_bt_simd_threads(&pa, 1);
+        assert!(self_packed.data[0] > 0.0, "{kind}: self-dot must be positive");
+        assert_eq!(self_packed.data[0].to_bits(), self_simd.data[0].to_bits(), "{kind}");
+    }
+}
+
+#[test]
+fn knob_dispatching_entries_follow_process_kernel() {
+    // The test CI's kernel matrix actually varies: everything here routes
+    // through the knob-dispatching entry points (`qgemm_bt`,
+    // `qgemm_bt_threads` on both enum surfaces), so under
+    // HIF4_KERNEL=simd the whole body runs the tiled microkernel and
+    // under HIF4_KERNEL=packed the scalar plane kernel — and in both
+    // legs every result must still equal the flow reference bit for bit.
+    let mut rng = Rng::seed(7011);
+    for kind in QuantKind::ALL {
+        for (m, k, n) in [(6, 130, 9), (1, 96, 1), (11, 40, 5)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(n, k, 1.0, &mut rng);
+            let qa = QuantizedMatrix::quantize(kind, &a, MODE);
+            let qb = QuantizedMatrix::quantize(kind, &b, MODE);
+            let flow = qa.qgemm_bt_flow_threads(&qb, 1);
+            let via_quantized = qa.qgemm_bt(&qb);
+            assert!(feq32_all(&flow.data, &via_quantized.data), "{kind} {m}x{k}x{n} qgemm_bt");
+            let pa = qa.pack();
+            let pb = qb.pack();
+            let via_planes = pa.qgemm_bt(&pb);
+            assert!(feq32_all(&flow.data, &via_planes.data), "{kind} {m}x{k}x{n} planes");
+            for threads in [1, 2, 5] {
+                let c = pa.qgemm_bt_threads(&pb, threads);
+                assert!(feq32_all(&flow.data, &c.data), "{kind} {m}x{k}x{n} threads={threads}");
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_isa_meets_ci_requirement() {
+    // CI's simd matrix leg sets HIF4_REQUIRE_SIMD=avx2: if the AVX2
+    // microkernel silently compiled out, or runtime detection broke, this
+    // fails loudly instead of the parity suite quietly passing on the
+    // portable fallback. Unset (or empty) means "no requirement".
+    if let Ok(want) = std::env::var("HIF4_REQUIRE_SIMD") {
+        if !want.is_empty() {
+            assert_eq!(
+                hif4::dotprod::simd_isa_label(),
+                want,
+                "the SIMD lane ISA requirement was not met"
+            );
         }
     }
 }
@@ -158,14 +319,21 @@ fn generic_kernels_match_enum_surface() {
     let b = Matrix::randn(4, 100, 1.0, &mut rng);
     let qa = QuantMat::<Mxfp4Fmt>::quantize(&a, MODE);
     let qb = QuantMat::<Mxfp4Fmt>::quantize(&b, MODE);
+    let pa = PackedQuantMat::pack(&qa);
+    let pb = PackedQuantMat::pack(&qb);
     let generic_flow = qgemm_bt_flow_threads(&qa, &qb, 1);
-    let generic_packed =
-        qgemm_bt_packed_threads(&PackedQuantMat::pack(&qa), &PackedQuantMat::pack(&qb), 1);
+    let generic_packed = qgemm_bt_packed_threads(&pa, &pb, 1);
+    let generic_simd = qgemm_bt_simd_threads(&pa, &pb, 1);
     let ea = QuantizedMatrix::quantize(QuantKind::Mxfp4, &a, MODE);
     let eb = QuantizedMatrix::quantize(QuantKind::Mxfp4, &b, MODE);
     let enum_flow = ea.qgemm_bt_flow_threads(&eb, 1);
-    let enum_packed = ea.pack_threads(1).qgemm_bt_threads(&eb.pack_threads(1), 1);
+    let epa = ea.pack_threads(1);
+    let epb = eb.pack_threads(1);
+    let enum_packed = epa.qgemm_bt_packed_threads(&epb, 1);
+    let enum_simd = epa.qgemm_bt_simd_threads(&epb, 1);
     assert!(feq32_all(&generic_flow.data, &enum_flow.data));
     assert!(feq32_all(&generic_packed.data, &enum_packed.data));
+    assert!(feq32_all(&generic_simd.data, &enum_simd.data));
     assert!(feq32_all(&generic_flow.data, &generic_packed.data));
+    assert!(feq32_all(&generic_flow.data, &generic_simd.data));
 }

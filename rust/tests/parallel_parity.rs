@@ -3,9 +3,10 @@
 //! computed by exactly one thread with a fixed floating-point reduction
 //! order, so `threads = 1` and `threads = N` must agree down to the last
 //! bit — these tests pin that contract for the quantizers, the quantized
-//! GEMMs (both the flow and the packed-plane kernel backends, plus the
-//! pack and dequantize stages) across **all five block formats** of the
-//! unified `QuantizedMatrix` API, the f32 GEMMs and the GPTQ pipeline.
+//! GEMMs (the flow kernel and both packed-plane backends — scalar and
+//! the SIMD-tiled microkernel — plus the pack and dequantize stages)
+//! across **all five block formats** of the unified `QuantizedMatrix`
+//! API, the f32 GEMMs and the GPTQ pipeline.
 
 use hif4::dotprod::QuantizedMatrix;
 use hif4::formats::rounding::RoundMode;
@@ -76,7 +77,7 @@ fn packed_gemm_parity_bit_identical_all_formats() {
             let qb = QuantizedMatrix::quantize_threads(kind, &mb, MODE, 1);
             let pa = qa.pack_threads(1);
             let pb = qb.pack_threads(1);
-            let serial = pa.qgemm_bt_threads(&pb, 1);
+            let serial = pa.qgemm_bt_packed_threads(&pb, 1);
             // The serial packed kernel equals the serial flow kernel exactly.
             assert_eq!(
                 bits(&serial),
@@ -85,7 +86,37 @@ fn packed_gemm_parity_bit_identical_all_formats() {
             );
             for t in THREAD_COUNTS {
                 let pa_t = qa.pack_threads(t);
-                let par = pa_t.qgemm_bt_threads(&pb, t);
+                let par = pa_t.qgemm_bt_packed_threads(&pb, t);
+                assert_eq!(bits(&serial), bits(&par), "{kind} {m}x{k}x{n} threads={t}");
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_gemm_parity_bit_identical_all_formats() {
+    // The SIMD-tiled microkernel holds the identical contract: any
+    // thread count, bit-identical — to itself, to the scalar packed
+    // kernel, and (transitively) to the flow. Register tiling changes
+    // which output elements share a pass, never the per-element
+    // floating-point sequence.
+    let mut rng = Rng::seed(9011);
+    for kind in QuantKind::ALL {
+        for (m, k, n) in shapes() {
+            let ma = Matrix::randn(m, k, 1.0, &mut rng);
+            let mb = Matrix::randn(n, k, 1.0, &mut rng);
+            let qa = QuantizedMatrix::quantize_threads(kind, &ma, MODE, 1);
+            let qb = QuantizedMatrix::quantize_threads(kind, &mb, MODE, 1);
+            let pa = qa.pack_threads(1);
+            let pb = qb.pack_threads(1);
+            let serial = pa.qgemm_bt_simd_threads(&pb, 1);
+            assert_eq!(
+                bits(&serial),
+                bits(&pa.qgemm_bt_packed_threads(&pb, 1)),
+                "{kind} {m}x{k}x{n} simd vs packed"
+            );
+            for t in THREAD_COUNTS {
+                let par = pa.qgemm_bt_simd_threads(&pb, t);
                 assert_eq!(bits(&serial), bits(&par), "{kind} {m}x{k}x{n} threads={t}");
             }
         }
