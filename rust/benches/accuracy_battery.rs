@@ -1,0 +1,64 @@
+//! The comparative accuracy battery as a release artifact: runs the
+//! format × quant mode × zoo model × task matrix (plus held-out perplexity
+//! and the per-layer sensitivity sweep) and writes the schema-versioned
+//! `BENCH_accuracy.json` CI uploads, next to human-readable tables.
+//!
+//! HIF4_BENCH_QUICK=1 switches to the quick matrix — the same
+//! configuration `tests/accuracy_battery.rs` diffs against the checked-in
+//! golden file, so the uploaded quick artifact and the golden agree by
+//! construction. Override the output path with HIF4_BENCH_OUT.
+
+use hif4::eval::battery::{self, BatteryConfig};
+use hif4::util::json::Json;
+
+fn main() {
+    let quick = std::env::var("HIF4_BENCH_QUICK").is_ok();
+    let cfg = if quick { BatteryConfig::quick() } else { BatteryConfig::full() };
+    eprintln!(
+        "accuracy battery [{}]: {} models x {} rows ({} formats x {} modes + {} fixed + bf16) x {} tasks",
+        if quick { "quick" } else { "full" },
+        cfg.models.len(),
+        cfg.quant_types().len() + 1,
+        cfg.formats.len(),
+        cfg.modes.len(),
+        cfg.fixed_formats.len(),
+        cfg.tasks.len(),
+    );
+    let t0 = std::time::Instant::now();
+    let doc = battery::run(&cfg);
+    eprintln!("battery complete in {:.1?}", t0.elapsed());
+
+    battery::print_tables(&doc);
+
+    // Headline: HiF4-vs-NVFP4 mean-accuracy delta per mode, averaged over
+    // models (positive = HiF4 better — the paper's claim).
+    for (mi, mode) in
+        doc.get("modes").and_then(Json::as_arr).unwrap_or(&[]).iter().enumerate()
+    {
+        let mode = mode.as_str().unwrap_or("?");
+        let deltas: Vec<f64> = doc
+            .get("models")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|m| {
+                m.get("hif4_vs_nvfp4")
+                    .and_then(Json::as_arr)
+                    .and_then(|d| d.get(mi))
+                    .and_then(|d| d.get("mean_delta"))
+                    .and_then(Json::as_f64)
+            })
+            .collect();
+        if !deltas.is_empty() {
+            let mean = deltas.iter().sum::<f64>() / deltas.len() as f64;
+            println!(
+                "HiF4 - NVFP4 mean accuracy ({mode}, {} models): {mean:+.2} points",
+                deltas.len()
+            );
+        }
+    }
+
+    let out = std::env::var("HIF4_BENCH_OUT").unwrap_or_else(|_| "BENCH_accuracy.json".into());
+    std::fs::write(&out, doc.render()).expect("write battery artifact");
+    println!("wrote {out}");
+}

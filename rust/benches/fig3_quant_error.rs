@@ -29,19 +29,16 @@ fn main() {
     }
     println!("swept in {:.1?}", t0.elapsed());
 
-    let mut t = Table::new(
-        "Fig 3: MSE normalized to HiF4 (mean of 3 seeds)",
-        &["x", "sigma", "HiF4", "NVFP4", "NVFP4+PTS", "MXFP4"],
-    );
+    // Header labels derive from the scheme list (QuantScheme::label) so
+    // they can never drift from the column order of sweep::run.
+    let mut header = vec!["x".to_string(), "sigma".to_string()];
+    header.extend(sweep::scheme_labels());
+    let hdr: Vec<&str> = header.iter().map(String::as_str).collect();
+    let mut t = Table::new("Fig 3: MSE normalized to HiF4 (mean of 3 seeds)", &hdr);
     for (i, row) in acc.iter().enumerate() {
-        t.row(vec![
-            i.to_string(),
-            format!("{:.3e}", sigmas[i]),
-            format!("{:.3}", row[0]),
-            format!("{:.3}", row[1]),
-            format!("{:.3}", row[2]),
-            format!("{:.3}", row[3]),
-        ]);
+        let mut cells = vec![i.to_string(), format!("{:.3e}", sigmas[i])];
+        cells.extend(row.iter().map(|r| format!("{r:.3}")));
+        t.row(cells);
     }
     t.print();
 

@@ -1,0 +1,534 @@
+//! The comparative accuracy battery (ROADMAP O4): one matrix harness
+//! sweeping **format × quant mode × zoo model × task**, with corpus
+//! perplexity per cell and a per-layer sensitivity sweep, serialized to a
+//! schema-versioned JSON document.
+//!
+//! Axes:
+//! * **format** — any subset of [`QuantKind::ALL`] (+ the BF16 baseline
+//!   row every drop subtracts);
+//! * **mode** — [`QuantMode`]: direct RTN, RTN+PTS, GPTQ, plus optional
+//!   real fixed-point rows ([`QuantType::Packed`]) that run the packed
+//!   QGEMM so CI exercises every kernel backend through the battery;
+//! * **model** — zoo keys ([`zoo::keyed`]), each trained once per battery
+//!   on its deterministic [`zoo::train_seed`];
+//! * **task** — the synthetic benchmark suite, scored by the harness's
+//!   length-normalized likelihood rule, plus held-out perplexity
+//!   ([`super::ppl`]).
+//!
+//! Everything is deterministic end to end (seeded training, seeded eval
+//! items, seeded held-out corpus, bit-identical kernels for any thread
+//! count/backend), so the quick matrix diffs against a checked-in golden
+//! file with tight tolerances — `tests/accuracy_battery.rs` — and a
+//! format/kernel regression that preserves parity but moves accuracy
+//! cannot ship silently. Entry points: `hif4 eval --battery` and
+//! `benches/accuracy_battery.rs` (both write `BENCH_accuracy.json`).
+
+use super::harness::{evaluate, EvalRow};
+use super::ppl::{perplexity, PplConfig};
+use super::tasks::Task;
+use crate::formats::{QuantKind, QuantScheme};
+use crate::model::config::LayerKind;
+use crate::model::transformer::Transformer;
+use crate::model::zoo;
+use crate::quant::experiment::{
+    quantize_model, train_model, ExperimentConfig, QuantMode, QuantType,
+};
+use crate::util::json::Json;
+
+/// Layer classes of the sensitivity sweep: quantize exactly one class at a
+/// time (weight-only) and report the accuracy delta per class — the
+/// per-layer analysis showing *where* a format's error hurts (and why the
+/// paper's policy leaves embeddings/LM head in high precision).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerClass {
+    /// Attention projections (q/k/v/o and the MLA latent down-projection).
+    Attn,
+    /// FFN linears, including MoE expert weights (never the gate).
+    Mlp,
+    /// The token embedding table — a class the paper's policy *excludes*;
+    /// the sweep quantifies what that exclusion buys.
+    Embed,
+}
+
+impl LayerClass {
+    pub const ALL: [LayerClass; 3] = [LayerClass::Attn, LayerClass::Mlp, LayerClass::Embed];
+
+    /// Stable JSON key.
+    pub fn key(self) -> &'static str {
+        match self {
+            LayerClass::Attn => "attn",
+            LayerClass::Mlp => "mlp",
+            LayerClass::Embed => "embed",
+        }
+    }
+}
+
+/// Weight-only quantization of exactly one layer class, leaving everything
+/// else (and all activations) in f32 — isolates one class's contribution
+/// to the total drop.
+pub fn quantize_layer_class(
+    model: &Transformer,
+    class: LayerClass,
+    scheme: &QuantScheme,
+) -> Transformer {
+    let mut qm = model.clone();
+    match class {
+        LayerClass::Attn => qm.visit_linears_mut(&mut |lin| {
+            if lin.kind == LayerKind::AttnLinear {
+                lin.w.data = scheme.quant_dequant_rows(&lin.w.data, lin.w.cols);
+            }
+        }),
+        LayerClass::Mlp => qm.visit_linears_mut(&mut |lin| {
+            if matches!(lin.kind, LayerKind::FfnLinear | LayerKind::MoeExpert) {
+                lin.w.data = scheme.quant_dequant_rows(&lin.w.data, lin.w.cols);
+            }
+        }),
+        LayerClass::Embed => {
+            let cols = qm.w.embed.cols;
+            qm.w.embed.data = scheme.quant_dequant_rows(&qm.w.embed.data, cols);
+        }
+    }
+    qm
+}
+
+/// The full battery configuration. [`BatteryConfig::quick`] is the CI /
+/// golden-file subset; [`BatteryConfig::full`] is the paper-scale matrix
+/// behind `hif4 eval --battery` and the release bench.
+#[derive(Debug, Clone)]
+pub struct BatteryConfig {
+    pub quick: bool,
+    /// Zoo keys ([`zoo::keyed`] spellings).
+    pub models: Vec<String>,
+    /// The format axis (every entry crosses every mode).
+    pub formats: Vec<QuantKind>,
+    /// The mode axis.
+    pub modes: Vec<QuantMode>,
+    /// Extra real fixed-point rows (packed QGEMM execution), so the
+    /// battery exercises the kernel backend CI matrixes over.
+    pub fixed_formats: Vec<QuantKind>,
+    pub tasks: Vec<Task>,
+    pub xcfg: ExperimentConfig,
+    pub ppl: PplConfig,
+    /// Formats swept per layer class (weight-only).
+    pub sensitivity_formats: Vec<QuantKind>,
+}
+
+impl BatteryConfig {
+    /// The CI quick matrix: 3 architecture-diverse models (MHA; GQA with
+    /// the outlier widening that crashes NVFP4; MLA+MoE) × {HiF4, NVFP4}
+    /// × {direct, pts, gptq} + one fixed-point row, 3 tasks, 1 eval seed.
+    /// Small enough for a debug-mode `cargo test -q`, rich enough that a
+    /// format, GPTQ, kernel or eval regression moves at least one cell.
+    pub fn quick() -> BatteryConfig {
+        BatteryConfig {
+            quick: true,
+            models: ["llama2", "mistral", "deepseek"].map(String::from).to_vec(),
+            formats: vec![QuantKind::HiF4, QuantKind::Nvfp4],
+            modes: vec![QuantMode::Direct, QuantMode::Pts, QuantMode::Gptq],
+            fixed_formats: vec![QuantKind::HiF4],
+            tasks: vec![Task::AgreeEasy, Task::YesNo, Task::Arith],
+            xcfg: ExperimentConfig {
+                train_steps: 50,
+                eval_items: 16,
+                eval_seeds: vec![1],
+                calib_rows: 64,
+                ..ExperimentConfig::default()
+            },
+            ppl: PplConfig { n_seqs: 4, seq_len: 32, seed: 0x9E1D0, batch: 4 },
+            sensitivity_formats: vec![QuantKind::HiF4],
+        }
+    }
+
+    /// The paper-scale matrix: every zoo model × all five formats × all
+    /// three quant modes (+ BF16 baseline + HiF4/NVFP4 fixed-point rows),
+    /// the 11-task union suite, 3 eval seeds, default training budget.
+    pub fn full() -> BatteryConfig {
+        BatteryConfig {
+            quick: false,
+            models: zoo::keyed().into_iter().map(|(k, _)| k.to_string()).collect(),
+            formats: QuantKind::ALL.to_vec(),
+            modes: vec![QuantMode::Direct, QuantMode::Pts, QuantMode::Gptq],
+            fixed_formats: vec![QuantKind::HiF4, QuantKind::Nvfp4],
+            tasks: union_suite(),
+            xcfg: ExperimentConfig::default(),
+            ppl: PplConfig::default(),
+            sensitivity_formats: vec![QuantKind::HiF4, QuantKind::Nvfp4],
+        }
+    }
+
+    /// The quantized rows of one model block, in reporting order.
+    pub fn quant_types(&self) -> Vec<QuantType> {
+        let mut types = Vec::new();
+        for m in &self.modes {
+            for f in &self.formats {
+                types.push(m.apply(*f));
+            }
+        }
+        for f in &self.fixed_formats {
+            types.push(QuantType::Packed(*f));
+        }
+        types
+    }
+}
+
+/// The 11-task union of the Table III and Table V suites, in Table III
+/// order with the Table V additions appended.
+pub fn union_suite() -> Vec<Task> {
+    let mut suite = Task::small_suite();
+    for t in Task::large_suite() {
+        if !suite.contains(&t) {
+            suite.push(t);
+        }
+    }
+    suite
+}
+
+/// Run the battery, returning the schema-versioned JSON document (see
+/// DESIGN.md §12 for the schema and tolerance policy).
+pub fn run(cfg: &BatteryConfig) -> Json {
+    let mut models_json = Vec::new();
+    for key in &cfg.models {
+        let mcfg = zoo::by_key(key)
+            .unwrap_or_else(|| panic!("unknown zoo model key {key:?} (see zoo::keyed)"));
+        let seed = zoo::train_seed(key);
+        let t0 = std::time::Instant::now();
+        let (model, losses) = train_model(&mcfg, &cfg.xcfg, seed);
+
+        // BF16 baseline row first, then the quantized matrix.
+        let mut rows: Vec<(QuantType, EvalRow, f64)> = Vec::new();
+        for qt in std::iter::once(QuantType::Bf16).chain(cfg.quant_types()) {
+            let (qm, policy) = quantize_model(&model, qt, &cfg.xcfg);
+            let row = evaluate(
+                &qm,
+                &qt.label(),
+                &cfg.tasks,
+                cfg.xcfg.eval_items,
+                &cfg.xcfg.eval_seeds,
+                policy.as_ref(),
+            );
+            let ppl = perplexity(&qm, policy.as_ref(), &cfg.ppl);
+            rows.push((qt, row, ppl));
+        }
+        let (_, base_row, base_ppl) = &rows[0];
+        let base_mean = base_row.mean;
+        let base_ppl = *base_ppl;
+
+        let rows_json: Vec<Json> = rows
+            .iter()
+            .enumerate()
+            .map(|(i, (qt, row, ppl))| {
+                let base = if i == 0 { None } else { Some((base_mean, base_ppl)) };
+                row_json(&cfg.tasks, *qt, row, *ppl, base)
+            })
+            .collect();
+
+        // HiF4-vs-NVFP4 deltas per cell, one block per mode (positive
+        // acc_delta / negative ppl_delta = HiF4 better).
+        let mut deltas = Vec::new();
+        for m in &cfg.modes {
+            let hif4 = rows.iter().find(|(qt, _, _)| *qt == m.apply(QuantKind::HiF4));
+            let nvfp4 = rows.iter().find(|(qt, _, _)| *qt == m.apply(QuantKind::Nvfp4));
+            if let (Some((_, hr, hp)), Some((_, nr, np))) = (hif4, nvfp4) {
+                let acc_delta = Json::Obj(
+                    cfg.tasks
+                        .iter()
+                        .zip(hr.task_acc.iter().zip(&nr.task_acc))
+                        .map(|(t, (a, b))| (t.name().to_string(), Json::num(a - b)))
+                        .collect(),
+                );
+                deltas.push(Json::obj(vec![
+                    ("mode", Json::str(m.key())),
+                    ("acc_delta", acc_delta),
+                    ("mean_delta", Json::num(hr.mean - nr.mean)),
+                    ("ppl_delta", Json::num(hp - np)),
+                ]));
+            }
+        }
+
+        // Per-layer sensitivity: weight-only, one class at a time.
+        let mut sens = Vec::new();
+        for f in &cfg.sensitivity_formats {
+            let scheme = QuantScheme::direct(*f);
+            for class in LayerClass::ALL {
+                let qm = quantize_layer_class(&model, class, &scheme);
+                let label = format!("{}:{}", f.spelling(), class.key());
+                let row = evaluate(
+                    &qm,
+                    &label,
+                    &cfg.tasks,
+                    cfg.xcfg.eval_items,
+                    &cfg.xcfg.eval_seeds,
+                    None,
+                );
+                sens.push(Json::obj(vec![
+                    ("format", Json::str(f.spelling())),
+                    ("class", Json::str(class.key())),
+                    ("mean", Json::num(row.mean)),
+                    ("acc_drop_mean", Json::num(row.mean - base_mean)),
+                ]));
+            }
+        }
+
+        eprintln!(
+            "[battery] {key}: loss {:.3} -> {:.3}, {} rows + {} sensitivity cells in {:.1?}",
+            losses[0],
+            losses.last().unwrap(),
+            rows.len(),
+            sens.len(),
+            t0.elapsed()
+        );
+        models_json.push(Json::obj(vec![
+            ("key", Json::str(key.as_str())),
+            ("name", Json::str(mcfg.name.as_str())),
+            ("final_train_loss", Json::num(*losses.last().unwrap() as f64)),
+            ("rows", Json::Arr(rows_json)),
+            ("hif4_vs_nvfp4", Json::Arr(deltas)),
+            ("sensitivity", Json::Arr(sens)),
+        ]));
+    }
+
+    Json::obj(vec![
+        ("schema_version", Json::num(1.0)),
+        ("suite", Json::str(if cfg.quick { "quick" } else { "full" })),
+        ("tasks", Json::arr(cfg.tasks.iter().map(|t| Json::str(t.name())))),
+        ("formats", Json::arr(cfg.formats.iter().map(|f| Json::str(f.spelling())))),
+        ("modes", Json::arr(cfg.modes.iter().map(|m| Json::str(m.key())))),
+        ("models", Json::Arr(models_json)),
+    ])
+}
+
+fn row_json(
+    tasks: &[Task],
+    qt: QuantType,
+    row: &EvalRow,
+    ppl: f64,
+    base: Option<(f64, f64)>,
+) -> Json {
+    let acc = Json::Obj(
+        tasks
+            .iter()
+            .zip(&row.task_acc)
+            .map(|(t, a)| (t.name().to_string(), Json::num(*a)))
+            .collect(),
+    );
+    let mut pairs = vec![
+        ("quant", Json::str(qt.key())),
+        ("label", Json::str(qt.label())),
+        ("acc", acc),
+        ("mean", Json::num(row.mean)),
+        ("ppl", Json::num(ppl)),
+    ];
+    match base {
+        Some((base_mean, base_ppl)) => {
+            pairs.push(("acc_drop_mean", Json::num(row.mean - base_mean)));
+            pairs.push(("ppl_ratio", Json::num(ppl / base_ppl)));
+        }
+        None => {
+            pairs.push(("acc_drop_mean", Json::Null));
+            pairs.push(("ppl_ratio", Json::Null));
+        }
+    }
+    Json::obj(pairs)
+}
+
+/// Render a battery document as the human-readable per-model tables the
+/// CLI and bench print next to the JSON artifact.
+pub fn print_tables(doc: &Json) {
+    use crate::util::bench::Table;
+    let tasks: Vec<&str> = doc
+        .get("tasks")
+        .and_then(Json::as_arr)
+        .map(|a| a.iter().filter_map(Json::as_str).collect())
+        .unwrap_or_default();
+    for model in doc.get("models").and_then(Json::as_arr).unwrap_or(&[]) {
+        let name = model.get("name").and_then(Json::as_str).unwrap_or("?");
+        let mut header = vec!["quant", "label"];
+        header.extend(&tasks);
+        header.extend(["mean", "ppl", "drop"]);
+        let mut t = Table::new(name, &header);
+        for row in model.get("rows").and_then(Json::as_arr).unwrap_or(&[]) {
+            let mut cells = vec![
+                row.get("quant").and_then(Json::as_str).unwrap_or("?").to_string(),
+                row.get("label").and_then(Json::as_str).unwrap_or("?").to_string(),
+            ];
+            for &task in &tasks {
+                let v = row.get("acc").and_then(|a| a.get(task)).and_then(Json::as_f64);
+                cells.push(v.map_or("-".into(), |v| format!("{v:.2}")));
+            }
+            let mean = row.get("mean").and_then(Json::as_f64).unwrap_or(f64::NAN);
+            let ppl = row.get("ppl").and_then(Json::as_f64).unwrap_or(f64::NAN);
+            cells.push(format!("{mean:.2}"));
+            cells.push(format!("{ppl:.2}"));
+            cells.push(
+                row.get("acc_drop_mean")
+                    .and_then(Json::as_f64)
+                    .map_or("-".into(), |d| format!("{d:+.2}")),
+            );
+            t.row(cells);
+        }
+        t.print();
+        let mut s = Table::new(
+            &format!("{name} — per-layer sensitivity (weight-only, drop vs BF16)"),
+            &["format", "class", "mean", "drop"],
+        );
+        for cell in model.get("sensitivity").and_then(Json::as_arr).unwrap_or(&[]) {
+            s.row(vec![
+                cell.get("format").and_then(Json::as_str).unwrap_or("?").to_string(),
+                cell.get("class").and_then(Json::as_str).unwrap_or("?").to_string(),
+                format!("{:.2}", cell.get("mean").and_then(Json::as_f64).unwrap_or(f64::NAN)),
+                format!(
+                    "{:+.2}",
+                    cell.get("acc_drop_mean").and_then(Json::as_f64).unwrap_or(f64::NAN)
+                ),
+            ]);
+        }
+        s.print();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_class_quantization_touches_only_its_class() {
+        let model = Transformer::init(zoo::deepseek_tiny(), 3);
+        let scheme = QuantScheme::direct(QuantKind::HiF4);
+        for class in LayerClass::ALL {
+            let qm = quantize_layer_class(&model, class, &scheme);
+            // Embedding changes iff class == Embed.
+            let embed_changed = qm.w.embed.data != model.w.embed.data;
+            assert_eq!(embed_changed, class == LayerClass::Embed, "{:?}", class);
+            // Per-linear: only the matching kinds change, gate/head never.
+            let mut changed: Vec<(LayerKind, bool)> = Vec::new();
+            let mut originals = std::collections::HashMap::new();
+            model.visit_linears(&mut |lin| {
+                originals.insert(lin.name.clone(), lin.w.data.clone());
+            });
+            qm.visit_linears(&mut |lin| {
+                changed.push((lin.kind, originals[&lin.name] != lin.w.data));
+            });
+            for (kind, did_change) in changed {
+                let expect = match class {
+                    LayerClass::Attn => kind == LayerKind::AttnLinear,
+                    LayerClass::Mlp => {
+                        matches!(kind, LayerKind::FfnLinear | LayerKind::MoeExpert)
+                    }
+                    LayerClass::Embed => false,
+                };
+                // Quantization may be a no-op on an already-representable
+                // tensor, but must never touch the wrong class.
+                if !expect {
+                    assert!(!did_change, "{class:?} must not touch {kind:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn layer_class_quantization_changes_target_class_weights() {
+        // With random (non-representable) weights, the targeted class must
+        // actually change.
+        let model = Transformer::init(zoo::llama2_tiny(), 5);
+        let scheme = QuantScheme::direct(QuantKind::Nvfp4);
+        let qm = quantize_layer_class(&model, LayerClass::Attn, &scheme);
+        let mut any_changed = false;
+        let mut originals = std::collections::HashMap::new();
+        model.visit_linears(&mut |lin| {
+            originals.insert(lin.name.clone(), lin.w.data.clone());
+        });
+        qm.visit_linears(&mut |lin| {
+            if lin.kind == LayerKind::AttnLinear && originals[&lin.name] != lin.w.data {
+                any_changed = true;
+            }
+        });
+        assert!(any_changed, "attn weights should move under 4-bit quantization");
+    }
+
+    #[test]
+    fn union_suite_covers_both_tables_without_duplicates() {
+        let suite = union_suite();
+        assert_eq!(suite.len(), 11);
+        for t in Task::small_suite().into_iter().chain(Task::large_suite()) {
+            assert!(suite.contains(&t), "{} missing", t.name());
+        }
+        let mut names: Vec<&str> = suite.iter().map(|t| t.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 11, "duplicate tasks in the union suite");
+    }
+
+    #[test]
+    fn quick_config_covers_the_required_axes() {
+        let cfg = BatteryConfig::quick();
+        let types = cfg.quant_types();
+        // 2 formats × 3 modes + 1 fixed row.
+        assert_eq!(types.len(), 7);
+        assert!(types.contains(&QuantType::HiGptq(QuantKind::Nvfp4)));
+        assert!(types.contains(&QuantType::Packed(QuantKind::HiF4)), "kernel-backend row");
+        // Keys unique (JSON rows must not collide).
+        let mut keys: Vec<String> = types.iter().map(|t| t.key()).collect();
+        let n = keys.len();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), n);
+        let full = BatteryConfig::full();
+        assert_eq!(full.quant_types().len(), 5 * 3 + 2);
+        assert_eq!(full.models.len(), 6);
+        assert_eq!(full.tasks.len(), 11);
+    }
+
+    #[test]
+    fn tiny_battery_produces_the_documented_shape() {
+        // A deliberately minimal config (1 model, 1 format, 2 tasks, tiny
+        // budgets) exercises the whole pipeline: training, all four modes,
+        // ppl, deltas (absent: no NVFP4), sensitivity, JSON shape.
+        let cfg = BatteryConfig {
+            quick: true,
+            models: vec!["llama2".to_string()],
+            formats: vec![QuantKind::HiF4],
+            modes: vec![QuantMode::Direct],
+            fixed_formats: vec![],
+            tasks: vec![Task::AgreeEasy, Task::YesNo],
+            xcfg: ExperimentConfig {
+                train_steps: 25,
+                eval_items: 8,
+                eval_seeds: vec![1],
+                calib_rows: 64,
+                ..ExperimentConfig::default()
+            },
+            ppl: PplConfig { n_seqs: 2, seq_len: 16, seed: 11, batch: 2 },
+            sensitivity_formats: vec![QuantKind::HiF4],
+        };
+        let doc = run(&cfg);
+        assert_eq!(doc.get("schema_version").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(doc.get("suite").and_then(Json::as_str), Some("quick"));
+        let models = doc.get("models").and_then(Json::as_arr).unwrap();
+        assert_eq!(models.len(), 1);
+        let rows = models[0].get("rows").and_then(Json::as_arr).unwrap();
+        assert_eq!(rows.len(), 2, "bf16 + hif4 direct");
+        assert_eq!(rows[0].get("quant").and_then(Json::as_str), Some("bf16"));
+        assert_eq!(rows[1].get("quant").and_then(Json::as_str), Some("hif4"));
+        for row in rows {
+            let ppl = row.get("ppl").and_then(Json::as_f64).unwrap();
+            assert!(ppl.is_finite() && ppl > 1.0, "ppl {ppl}");
+            let acc = row.get("acc").and_then(Json::as_obj).unwrap();
+            assert_eq!(acc.len(), 2);
+        }
+        // No NVFP4 in the matrix → no deltas; sensitivity = 3 classes.
+        assert_eq!(models[0].get("hif4_vs_nvfp4").and_then(Json::as_arr).unwrap().len(), 0);
+        let sens = models[0].get("sensitivity").and_then(Json::as_arr).unwrap();
+        assert_eq!(sens.len(), 3);
+        // Every numeric leaf is finite (the golden diff treats null as a
+        // data bug, modulo the two intentional baseline nulls).
+        for (path, v) in doc.flatten_numbers() {
+            assert!(v.is_finite(), "{path} = {v}");
+        }
+        // Determinism: the whole document reruns bit-identically.
+        let doc2 = run(&cfg);
+        assert_eq!(doc.render(), doc2.render());
+        // And parses back from its own rendering.
+        let reparsed = crate::util::json::parse(&doc.render()).unwrap();
+        assert_eq!(reparsed.flatten_numbers(), doc.flatten_numbers());
+    }
+}

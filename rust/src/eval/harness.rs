@@ -2,6 +2,10 @@
 //! protocol (lm-eval-harness style): each choice is scored by the
 //! length-normalized sum of log-probabilities of its tokens given the
 //! context; the argmax choice is compared with gold.
+//!
+//! The scoring math is factored into pure functions over a logits matrix
+//! ([`score_choices`], [`argmax_first`]) so the battery's unit tests can
+//! pin it on hand-computed inputs, independent of any model.
 
 use super::tasks::{Item, Task};
 use crate::model::transformer::{QuantPolicy, Transformer};
@@ -28,7 +32,12 @@ pub fn task_accuracy(
 
 /// Argmax choice index under length-normalized log-likelihood.
 pub fn predict(model: &Transformer, item: &Item, policy: Option<&QuantPolicy>) -> usize {
-    // Batch all choices as full sequences (context ++ choice) — one forward.
+    argmax_first(&choice_scores(model, item, policy))
+}
+
+/// Per-choice length-normalized log-likelihoods: batch all choices as full
+/// sequences (context ++ choice) through one forward, then score.
+pub fn choice_scores(model: &Transformer, item: &Item, policy: Option<&QuantPolicy>) -> Vec<f64> {
     let seqs: Vec<Vec<usize>> = item
         .choices
         .iter()
@@ -39,45 +48,49 @@ pub fn predict(model: &Transformer, item: &Item, policy: Option<&QuantPolicy>) -
         })
         .collect();
     let logits = model.forward(&seqs, policy, None, None);
-    let mut best = (f64::NEG_INFINITY, 0usize);
+    score_choices(&logits, item)
+}
+
+/// The pure scoring rule: given the logits of the batched sequences
+/// (context ++ choice, concatenated row-wise in choice order), return each
+/// choice's mean log-probability over its own tokens. Length
+/// normalization keeps multi-token continuations comparable to single
+/// tokens (HellaSwag-style).
+pub fn score_choices(logits: &Matrix, item: &Item) -> Vec<f64> {
+    let ctx = item.context.len();
+    let mut scores = Vec::with_capacity(item.choices.len());
     let mut row_base = 0usize;
-    for (ci, seq) in seqs.iter().enumerate() {
-        let ctx = item.context.len();
+    for ch in &item.choices {
         let mut ll = 0f64;
-        for pos in ctx..seq.len() {
-            // logits at pos-1 predict token at pos.
-            ll += log_softmax_at(&logits, row_base + pos - 1, seq[pos]);
+        for (i, &tok) in ch.iter().enumerate() {
+            // logits at position p-1 predict the token at position p.
+            ll += log_softmax_at(logits, row_base + ctx + i - 1, tok);
         }
-        let norm = ll / (seq.len() - ctx) as f64;
-        if norm > best.0 {
-            best = (norm, ci);
+        scores.push(ll / ch.len() as f64);
+        row_base += ctx + ch.len();
+    }
+    scores
+}
+
+/// First index of the maximum score — ties resolve to the lowest index
+/// (deterministic, and documented by the battery's tie test).
+pub fn argmax_first(scores: &[f64]) -> usize {
+    let mut best = (f64::NEG_INFINITY, 0usize);
+    for (i, s) in scores.iter().enumerate() {
+        if *s > best.0 {
+            best = (*s, i);
         }
-        row_base += seq.len();
     }
     best.1
 }
 
-fn log_softmax_at(logits: &Matrix, row: usize, token: usize) -> f64 {
+/// Log-probability of `token` under row `row` of the logits (numerically
+/// stable log-softmax in f64). Shared with [`super::ppl`].
+pub(crate) fn log_softmax_at(logits: &Matrix, row: usize, token: usize) -> f64 {
     let r = logits.row(row);
     let maxv = r.iter().fold(f32::NEG_INFINITY, |m, x| m.max(*x));
     let denom: f64 = r.iter().map(|x| ((x - maxv) as f64).exp()).sum();
     (r[token] - maxv) as f64 - denom.ln()
-}
-
-/// Perplexity on sampled corpus text (secondary diagnostic metric).
-pub fn perplexity(model: &Transformer, n_seqs: usize, seq_len: usize, seed: u64) -> f64 {
-    let mut rng = Rng::seed(seed);
-    let mut nll = 0f64;
-    let mut count = 0usize;
-    for _ in 0..n_seqs {
-        let seq = super::tasks::training_sequence(&mut rng, seq_len);
-        let logits = model.forward(&[seq.clone()], None, None, None);
-        for pos in 1..seq.len() {
-            nll -= log_softmax_at(&logits, pos - 1, seq[pos]);
-            count += 1;
-        }
-    }
-    (nll / count as f64).exp()
 }
 
 /// A full evaluation row: accuracy per task plus the mean (one table line).
@@ -115,6 +128,7 @@ pub fn evaluate(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::eval::ppl::{perplexity, PplConfig};
     use crate::eval::tasks;
     use crate::model::config::{Attention, Ffn, ModelConfig};
     use crate::model::train::train;
@@ -137,6 +151,100 @@ mod tests {
         }
     }
 
+    /// Hand-checkable setting: vocab 3, two 1-token choices, context [0].
+    /// Sequences batch as rows [0,c0],[0,c1] → rows 0..2 and 2..4; only
+    /// rows 0 and 2 (the last context position of each sequence) score.
+    fn mini_item() -> Item {
+        Item { context: vec![0], choices: vec![vec![1], vec![2]], gold: 1 }
+    }
+
+    #[test]
+    fn scoring_matches_hand_computed_log_softmax() {
+        // Row 0 uniform: choice 0 scores ln(1/3). Row 2 favors token 2:
+        // score = 1 - ln(2 + e). The second is larger, so prediction = 1
+        // (= gold for mini_item): the "correct" case.
+        let logits = Matrix::from_vec(
+            4,
+            3,
+            vec![
+                0.0, 0.0, 0.0, // row 0: context of choice 0 (scored)
+                9.0, 9.0, 9.0, // row 1: choice-0 token position (ignored)
+                0.0, 0.0, 1.0, // row 2: context of choice 1 (scored)
+                9.0, 9.0, 9.0, // row 3: ignored
+            ],
+        );
+        let item = mini_item();
+        let scores = score_choices(&logits, &item);
+        let expect0 = -(3f64.ln());
+        let expect1 = 1.0 - (2.0 + 1f64.exp()).ln();
+        assert!((scores[0] - expect0).abs() < 1e-12, "{} vs {expect0}", scores[0]);
+        assert!((scores[1] - expect1).abs() < 1e-12, "{} vs {expect1}", scores[1]);
+        assert_eq!(argmax_first(&scores), 1, "correct case picks gold");
+    }
+
+    #[test]
+    fn scoring_incorrect_and_tie_cases() {
+        // Incorrect: row 2 now *penalizes* token 2 → choice 0 wins ≠ gold.
+        let bad = Matrix::from_vec(
+            4,
+            3,
+            vec![0.0, 0.0, 0.0, 9.0, 9.0, 9.0, 0.0, 0.0, -1.0, 9.0, 9.0, 9.0],
+        );
+        let item = mini_item();
+        let scores = score_choices(&bad, &item);
+        assert!(scores[0] > scores[1]);
+        assert_ne!(argmax_first(&scores), item.gold, "incorrect case misses gold");
+
+        // Tie: identical scored rows → identical scores → lowest index wins.
+        let tie = Matrix::from_vec(
+            4,
+            3,
+            vec![0.0, 0.5, 0.5, 9.0, 9.0, 9.0, 0.0, 0.5, 0.5, 9.0, 9.0, 9.0],
+        );
+        let scores = score_choices(&tie, &item);
+        assert_eq!(scores[0], scores[1], "scores must tie exactly");
+        assert_eq!(argmax_first(&scores), 0, "ties resolve to the first choice");
+    }
+
+    #[test]
+    fn length_normalization_averages_multi_token_choices() {
+        // Choice 1 has two tokens; its score must be the *mean* of the two
+        // per-token log-probs, not the sum (else long choices always lose).
+        let item = Item { context: vec![0], choices: vec![vec![1], vec![1, 2]], gold: 0 };
+        // Rows: choice 0 = [0,1] → rows 0..2 (row 0 scored);
+        //       choice 1 = [0,1,2] → rows 2..5 (rows 2 and 3 scored).
+        let logits = Matrix::from_vec(
+            5,
+            3,
+            vec![
+                0.0, 0.0, 0.0, // row 0: scores token 1 → -ln 3
+                9.0, 9.0, 9.0, // row 1: ignored
+                0.0, 0.0, 0.0, // row 2: scores token 1 → -ln 3
+                0.0, 0.0, 0.0, // row 3: scores token 2 → -ln 3
+                9.0, 9.0, 9.0, // row 4: ignored
+            ],
+        );
+        let scores = score_choices(&logits, &item);
+        assert!((scores[0] - scores[1]).abs() < 1e-12, "mean of equal logprobs is unchanged");
+        assert!((scores[1] + 3f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scoring_is_deterministic_per_seed() {
+        // Same seed → bit-identical accuracy (twice over, and per task);
+        // different seeds sample different items.
+        let model = Transformer::init(tiny(), 77);
+        for task in [Task::AgreeHard, Task::YesNo, Task::Arith] {
+            let a = task_accuracy(&model, task, 40, 9, None);
+            let b = task_accuracy(&model, task, 40, 9, None);
+            assert_eq!(a.to_bits(), b.to_bits(), "{}", task.name());
+        }
+        let r1 = evaluate(&model, "BF16", &Task::small_suite(), 10, &[1, 2], None);
+        let r2 = evaluate(&model, "BF16", &Task::small_suite(), 10, &[1, 2], None);
+        assert_eq!(r1.task_acc, r2.task_acc);
+        assert_eq!(r1.mean.to_bits(), r2.mean.to_bits());
+    }
+
     #[test]
     fn untrained_model_is_at_chance() {
         let model = Transformer::init(tiny(), 77);
@@ -157,7 +265,7 @@ mod tests {
         assert!(losses.last().unwrap() < &losses[0]);
         let acc = task_accuracy(&model, Task::AgreeEasy, 150, 2, None);
         assert!(acc > 55.0, "trained AgreeEasy should beat 25% chance: {acc}");
-        let ppl = perplexity(&model, 4, 32, 3);
+        let ppl = perplexity(&model, None, &PplConfig { n_seqs: 4, seed: 3, ..PplConfig::default() });
         assert!(ppl < tasks::VOCAB as f64 / 2.0, "ppl {ppl} should beat uniform");
     }
 

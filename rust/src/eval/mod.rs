@@ -1,4 +1,8 @@
-//! Synthetic evaluation harness mirroring the paper's benchmark suites.
+//! Synthetic evaluation harness mirroring the paper's benchmark suites:
+//! task generators, likelihood scoring, held-out perplexity, and the
+//! format × mode × model × task accuracy battery.
 
+pub mod battery;
 pub mod harness;
+pub mod ppl;
 pub mod tasks;

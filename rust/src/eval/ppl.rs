@@ -1,0 +1,127 @@
+//! Perplexity on a deterministic seeded held-out corpus — the battery's
+//! second metric next to task accuracy (Wikitext-style ppl in the
+//! comparison papers; here the held-out text is the synthetic grammar).
+//!
+//! The held-out corpus is generated **up front** from one seeded RNG, then
+//! scored sequence-by-sequence in corpus order; the forward batch size
+//! only groups sequences per call. Combined with the crate's per-row
+//! determinism contract (every kernel is bit-identical for any thread
+//! count and any batch packing), perplexity is a pure function of
+//! `(model, policy, PplConfig)` — the property `ppl_invariants` pins.
+
+use super::harness::log_softmax_at;
+use crate::eval::tasks;
+use crate::model::transformer::{QuantPolicy, Transformer};
+
+/// Held-out corpus + batching knobs. `seed` picks the corpus (disjoint by
+/// convention from the training stream's `seed ^ 0xC0FFEE` mixing and the
+/// eval-task seeds); `batch` is pure execution shape.
+#[derive(Debug, Clone)]
+pub struct PplConfig {
+    pub n_seqs: usize,
+    pub seq_len: usize,
+    pub seed: u64,
+    pub batch: usize,
+}
+
+impl Default for PplConfig {
+    fn default() -> Self {
+        PplConfig { n_seqs: 24, seq_len: 32, seed: 0x9E1D0, batch: 8 }
+    }
+}
+
+/// The deterministic held-out corpus: `n_seqs` sequences of `seq_len`
+/// tokens, all drawn from one seeded RNG in order (so the corpus is a pure
+/// function of the config, independent of how it is later batched).
+pub fn held_out_corpus(cfg: &PplConfig) -> Vec<Vec<usize>> {
+    let mut rng = crate::tensor::Rng::seed(cfg.seed);
+    (0..cfg.n_seqs).map(|_| tasks::training_sequence(&mut rng, cfg.seq_len)).collect()
+}
+
+/// Corpus perplexity: exp of the mean next-token negative log-likelihood
+/// over every position of every held-out sequence (positions 1.., since
+/// position 0 has no context). Accumulation runs in corpus order with f64
+/// addition, so the result is bit-identical for any `batch`.
+pub fn perplexity(model: &Transformer, policy: Option<&QuantPolicy>, cfg: &PplConfig) -> f64 {
+    let seqs = held_out_corpus(cfg);
+    let mut nll = 0f64;
+    let mut count = 0usize;
+    for chunk in seqs.chunks(cfg.batch.max(1)) {
+        let logits = model.forward(chunk, policy, None, None);
+        let mut row_base = 0usize;
+        for seq in chunk {
+            for pos in 1..seq.len() {
+                nll -= log_softmax_at(&logits, row_base + pos - 1, seq[pos]);
+                count += 1;
+            }
+            row_base += seq.len();
+        }
+    }
+    (nll / count as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::transformer::Transformer;
+    use crate::model::zoo;
+    use crate::util::proptest::{check, RangeUsize};
+    use crate::util::threadpool;
+
+    #[test]
+    fn corpus_is_deterministic_and_disjoint_from_other_seeds() {
+        let cfg = PplConfig::default();
+        assert_eq!(held_out_corpus(&cfg), held_out_corpus(&cfg));
+        let other = PplConfig { seed: cfg.seed + 1, ..cfg.clone() };
+        assert_ne!(held_out_corpus(&cfg), held_out_corpus(&other));
+        for s in held_out_corpus(&cfg) {
+            assert_eq!(s.len(), cfg.seq_len);
+            assert!(s.iter().all(|t| *t < tasks::VOCAB));
+        }
+    }
+
+    #[test]
+    fn ppl_invariants() {
+        // Property (packed_parity conventions): for any seeded zoo model,
+        // any batch size and any thread count, perplexity is strictly
+        // finite and bit-identical to the single-sequence serial
+        // reference. This is the determinism contract the golden accuracy
+        // file relies on, stated as a property instead of a fixture.
+        let models: Vec<Transformer> = zoo::keyed()
+            .into_iter()
+            .map(|(key, cfg)| Transformer::init(cfg, zoo::train_seed(key)))
+            .collect();
+        let base = PplConfig { n_seqs: 3, seq_len: 16, seed: 7, batch: 1 };
+        let reference: Vec<f64> = models.iter().map(|m| perplexity(m, None, &base)).collect();
+        for p in &reference {
+            assert!(p.is_finite() && *p > 1.0, "reference ppl {p}");
+        }
+        let prev_threads = threadpool::threads();
+        // Case space: model × batch ∈ [1,6] × threads ∈ [1,4], sampled.
+        let gen = RangeUsize { lo: 0, hi: models.len() * 6 * 4 };
+        check(24, 0xBA7C4, &gen, |case| {
+            let case = *case;
+            let mi = case % models.len();
+            let batch = 1 + (case / models.len()) % 6;
+            let threads = 1 + (case / (models.len() * 6)) % 4;
+            threadpool::set_threads(threads);
+            let p = perplexity(&models[mi], None, &PplConfig { batch, ..base.clone() });
+            threadpool::set_threads(prev_threads);
+            p.to_bits() == reference[mi].to_bits()
+        });
+    }
+
+    #[test]
+    fn quantized_policy_moves_ppl_but_keeps_it_finite() {
+        use crate::formats::{QuantKind, QuantScheme};
+        use crate::model::transformer::QuantPolicy;
+        let model = Transformer::init(zoo::llama2_tiny(), 1);
+        let cfg = PplConfig { n_seqs: 2, seq_len: 16, seed: 5, batch: 2 };
+        let base = perplexity(&model, None, &cfg);
+        let policy =
+            QuantPolicy { act: Some(QuantScheme::direct(QuantKind::HiF4)), kv: None };
+        let quant = perplexity(&model, Some(&policy), &cfg);
+        assert!(base.is_finite() && quant.is_finite());
+        assert_ne!(base.to_bits(), quant.to_bits(), "activation quant must do something");
+    }
+}

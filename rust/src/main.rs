@@ -11,6 +11,10 @@
 //!              [--kv-cache f32|hif4|...]     # KV-cache storage (native engine;
 //!                                            # HIF4_KV_CACHE env default)
 //! hif4 sweep   --dim 512                       # Fig 3 series
+//! hif4 eval    --battery [--quick]             # accuracy battery: format x
+//!              [--models llama2,deepseek]      # quant mode x zoo model x task
+//!              [--out BENCH_accuracy.json]     # (+ ppl + layer sensitivity),
+//!                                              # JSON artifact + tables
 //! hif4 hwcost                                  # §III.B area/power table
 //! hif4 dotprod                                 # Fig 4 inventory + exactness
 //! hif4 quantize --in w.bin --format hif4       # quantize a raw f32 tensor
@@ -56,19 +60,16 @@ fn main() -> Result<()> {
         Some("sweep") => {
             let dim = args.get_parse("dim", 512);
             let pts = sweep::run(dim, sweep::PAPER_POINTS, args.get_parse("seed", 42));
-            let mut t = Table::new(
-                "Fig 3 sweep",
-                &["x", "sigma", "HiF4", "NVFP4", "NVFP4+PTS", "MXFP4"],
-            );
+            // Header labels come from the scheme list itself (QuantScheme::
+            // label), so the table can never disagree with the data order.
+            let mut header = vec!["x".to_string(), "sigma".to_string()];
+            header.extend(sweep::scheme_labels());
+            let hdr: Vec<&str> = header.iter().map(String::as_str).collect();
+            let mut t = Table::new("Fig 3 sweep", &hdr);
             for p in &pts {
-                t.row(vec![
-                    p.x.to_string(),
-                    format!("{:.3e}", p.sigma),
-                    format!("{:.3}", p.normalized[0]),
-                    format!("{:.3}", p.normalized[1]),
-                    format!("{:.3}", p.normalized[2]),
-                    format!("{:.3}", p.normalized[3]),
-                ]);
+                let mut cells = vec![p.x.to_string(), format!("{:.3e}", p.sigma)];
+                cells.extend(p.normalized.iter().map(|r| format!("{r:.3}")));
+                t.row(cells);
             }
             t.print();
             Ok(())
@@ -94,6 +95,7 @@ fn main() -> Result<()> {
             );
             Ok(())
         }
+        Some("eval") => eval(&args),
         Some("quantize") => quantize(&args),
         Some("info") | None => {
             let mut t = Table::new(
@@ -127,7 +129,7 @@ fn main() -> Result<()> {
                 hif4::dotprod::kernel().label(),
                 hif4::dotprod::simd_isa_label()
             );
-            println!("\nsubcommands: serve | sweep | hwcost | dotprod | quantize | info");
+            println!("\nsubcommands: serve | sweep | eval | hwcost | dotprod | quantize | info");
             Ok(())
         }
         Some(other) => {
@@ -200,6 +202,35 @@ fn serve(args: &Args) -> Result<()> {
         std::thread::sleep(std::time::Duration::from_secs(10));
         println!("{}", server.metrics.summary());
     }
+}
+
+fn eval(args: &Args) -> Result<()> {
+    use hif4::eval::battery::{self, BatteryConfig};
+    anyhow::ensure!(
+        args.flag("battery"),
+        "only the accuracy battery is implemented: `hif4 eval --battery` \
+         (add --quick for the CI subset, --models for a zoo selection)"
+    );
+    let mut cfg = if args.flag("quick") { BatteryConfig::quick() } else { BatteryConfig::full() };
+    if let Some(models) = args.get("models") {
+        cfg.models =
+            models.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect();
+        anyhow::ensure!(!cfg.models.is_empty(), "--models: empty selection");
+        let known: Vec<&str> = hif4::model::zoo::keyed().iter().map(|(k, _)| *k).collect();
+        for key in &cfg.models {
+            anyhow::ensure!(
+                hif4::model::zoo::by_key(key).is_some(),
+                "--models: unknown zoo key {key:?} (known: {})",
+                known.join(", ")
+            );
+        }
+    }
+    let doc = battery::run(&cfg);
+    battery::print_tables(&doc);
+    let out = args.get_or("out", "BENCH_accuracy.json");
+    std::fs::write(out, doc.render())?;
+    println!("wrote {out}");
+    Ok(())
 }
 
 fn quantize(args: &Args) -> Result<()> {

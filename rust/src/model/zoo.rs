@@ -93,6 +93,37 @@ pub fn large_llms() -> Vec<ModelConfig> {
     vec![deepseek_tiny(), longcat_tiny()]
 }
 
+/// The whole zoo with stable machine keys — the battery's model axis and
+/// its bench-JSON spellings. Keys are permanent identifiers (golden files
+/// pin them); display names stay free to change.
+pub fn keyed() -> Vec<(&'static str, ModelConfig)> {
+    vec![
+        ("llama2", llama2_tiny()),
+        ("llama3", llama3_tiny()),
+        ("qwen", qwen_tiny()),
+        ("mistral", mistral_tiny()),
+        ("deepseek", deepseek_tiny()),
+        ("longcat", longcat_tiny()),
+    ]
+}
+
+/// Look one zoo model up by its [`keyed`] key (the CLI `--models` values).
+pub fn by_key(key: &str) -> Option<ModelConfig> {
+    keyed().into_iter().find(|(k, _)| *k == key).map(|(_, c)| c)
+}
+
+/// Deterministic per-model training seed, derived from the key (FNV-1a)
+/// so every battery entry point — CLI, bench, golden test — trains
+/// bit-identical weights for the same model regardless of roster order.
+pub fn train_seed(key: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in key.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -108,6 +139,25 @@ mod tests {
         assert!(matches!(large[0].attention, Attention::Mla { .. }));
         assert!(matches!(large[0].ffn, Ffn::Moe { .. }));
         assert!(matches!(large[1].ffn, Ffn::Moe { .. }));
+    }
+
+    #[test]
+    fn keys_cover_rosters_and_seeds_are_stable() {
+        let keyed = keyed();
+        assert_eq!(keyed.len(), small_llms().len() + large_llms().len());
+        // Keys are unique and each resolves through by_key to the same
+        // config (by display name).
+        for (k, cfg) in &keyed {
+            assert_eq!(by_key(k).unwrap().name, cfg.name);
+            assert_eq!(keyed.iter().filter(|(k2, _)| k2 == k).count(), 1, "dup key {k}");
+        }
+        assert!(by_key("gpt5").is_none());
+        // Seeds: pure function of the key, distinct across the zoo.
+        let mut seeds: Vec<u64> = keyed.iter().map(|(k, _)| train_seed(k)).collect();
+        assert_eq!(train_seed("llama2"), train_seed("llama2"));
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), keyed.len(), "seed collision in the zoo");
     }
 
     #[test]

@@ -12,12 +12,53 @@ use crate::model::train::train;
 use crate::model::transformer::{Calibration, QuantPolicy, Transformer};
 use crate::tensor::Rng;
 
+/// The execution-mode axis of the accuracy matrix, separated from the
+/// format axis so the battery (and its JSON keys) can sweep `format ×
+/// mode` without hand-listing every combination. [`QuantMode::key`] is the
+/// machine spelling; [`QuantType::label`] stays the human table label.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum QuantMode {
+    /// Direct-cast RTN (simulated quantization).
+    Direct,
+    /// RTN behind software per-tensor scaling.
+    Pts,
+    /// GPTQ weight calibration (HiGPTQ grids — all five formats).
+    Gptq,
+    /// The real fixed-point path (prepacked integer planes + QGEMM).
+    Fixed,
+}
+
+impl QuantMode {
+    /// Every mode, in the canonical reporting order.
+    pub const ALL: [QuantMode; 4] =
+        [QuantMode::Direct, QuantMode::Pts, QuantMode::Gptq, QuantMode::Fixed];
+
+    /// Canonical lower-case spelling (bench-JSON key suffix, CLI value).
+    pub fn key(self) -> &'static str {
+        match self {
+            QuantMode::Direct => "direct",
+            QuantMode::Pts => "pts",
+            QuantMode::Gptq => "gptq",
+            QuantMode::Fixed => "fixed",
+        }
+    }
+
+    /// Cross this mode with one block format.
+    pub fn apply(self, kind: QuantKind) -> QuantType {
+        match self {
+            QuantMode::Direct => QuantType::Direct(kind),
+            QuantMode::Pts => QuantType::Pts(kind),
+            QuantMode::Gptq => QuantType::HiGptq(kind),
+            QuantMode::Fixed => QuantType::Packed(kind),
+        }
+    }
+}
+
 /// An A-W quantization configuration of the paper's tables: an execution
 /// mode crossed with one [`QuantKind`]. Any of the five block formats
-/// composes with any mode (HiGPTQ's error-feedback grids exist for
-/// HiF4/NVFP4, the two formats [`crate::quant::gptq`] defines), so the
-/// eval harness can run the full cross-format accuracy matrix the
-/// comparison papers use.
+/// composes with any mode ([`crate::quant::gptq`] freezes per-group
+/// metadata grids for every format), so the eval harness can run the full
+/// cross-format accuracy matrix the comparison papers use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum QuantType {
     /// Full precision (the baseline every Acc-Drop row subtracts).
@@ -47,6 +88,42 @@ impl QuantType {
         }
     }
 
+    /// Machine-readable key (`bf16`, `hif4`, `nvfp4+pts`, `hif4+gptq`,
+    /// `mx4+fixed`): [`QuantKind::spelling`] `[+ QuantMode::key]`. The one
+    /// bench-JSON spelling; [`std::str::FromStr`] round-trips it *and* the
+    /// [`QuantType::label`] form, so a renamed mode cannot silently fork
+    /// the battery keys from the table labels.
+    pub fn key(self) -> String {
+        match (self.kind(), self.mode()) {
+            (None, _) => "bf16".to_string(),
+            (Some(k), Some(QuantMode::Direct)) => k.spelling().to_string(),
+            (Some(k), Some(m)) => format!("{}+{}", k.spelling(), m.key()),
+            (Some(_), None) => unreachable!("quantized type without a mode"),
+        }
+    }
+
+    /// The mode axis of this configuration (`None` = the BF16 baseline).
+    pub fn mode(self) -> Option<QuantMode> {
+        match self {
+            QuantType::Bf16 => None,
+            QuantType::Direct(_) => Some(QuantMode::Direct),
+            QuantType::Pts(_) => Some(QuantMode::Pts),
+            QuantType::HiGptq(_) => Some(QuantMode::Gptq),
+            QuantType::Packed(_) => Some(QuantMode::Fixed),
+        }
+    }
+
+    /// The format axis of this configuration (`None` = the BF16 baseline).
+    pub fn kind(self) -> Option<QuantKind> {
+        match self {
+            QuantType::Bf16 => None,
+            QuantType::Direct(k)
+            | QuantType::Pts(k)
+            | QuantType::Packed(k)
+            | QuantType::HiGptq(k) => Some(k),
+        }
+    }
+
     /// Weight/activation scheme (None = full precision).
     pub fn scheme(self) -> Option<QuantScheme> {
         match self {
@@ -55,6 +132,39 @@ impl QuantType {
             QuantType::Direct(k) | QuantType::Packed(k) | QuantType::HiGptq(k) => {
                 Some(QuantScheme::direct(k))
             }
+        }
+    }
+}
+
+impl std::str::FromStr for QuantType {
+    type Err = String;
+
+    /// The one quant-configuration parser: accepts both the machine key
+    /// (`hif4+gptq`, `nvfp4+pts`, `bf16`) and the table label
+    /// (`HiF4+HiGPTQ`, `NVFP4+PTS`, `HiF4 (fixed-point)`, `BF16`),
+    /// case-insensitively. Format names go through the single
+    /// [`QuantKind`] parser, so its error text (listing the valid names)
+    /// surfaces here too.
+    fn from_str(s: &str) -> Result<QuantType, String> {
+        let lower = s.trim().to_ascii_lowercase();
+        // The Packed table label spells its mode as a parenthetical.
+        let norm = lower.replace(" (fixed-point)", "+fixed");
+        if norm == "bf16" {
+            return Ok(QuantType::Bf16);
+        }
+        let (base, suffix) = match norm.split_once('+') {
+            Some((b, m)) => (b, Some(m)),
+            None => (norm.as_str(), None),
+        };
+        let kind: QuantKind = base.trim().parse()?;
+        match suffix.map(str::trim) {
+            None => Ok(QuantType::Direct(kind)),
+            Some("pts") => Ok(QuantType::Pts(kind)),
+            Some("gptq") | Some("higptq") => Ok(QuantType::HiGptq(kind)),
+            Some("fixed") | Some("fixed-point") => Ok(QuantType::Packed(kind)),
+            Some(other) => Err(format!(
+                "unknown quant mode suffix {other:?}; expected pts, gptq or fixed"
+            )),
         }
     }
 }
@@ -212,6 +322,47 @@ mod tests {
             calib_rows: 128,
             ..Default::default()
         }
+    }
+
+    #[test]
+    fn quant_type_key_and_label_roundtrip() {
+        // Every mode × format (plus the baseline) round-trips through BOTH
+        // spellings — the bench-JSON key and the human table label — so a
+        // renamed mode can't silently fork the battery keys from the
+        // tables (`quant/sweep.rs` and `eval/battery.rs` share this
+        // parser).
+        let mut all = vec![QuantType::Bf16];
+        for m in QuantMode::ALL {
+            for k in QuantKind::ALL {
+                all.push(m.apply(k));
+            }
+        }
+        for qt in all {
+            let key = qt.key();
+            assert_eq!(key.parse::<QuantType>(), Ok(qt), "key {key:?}");
+            let label = qt.label();
+            assert_eq!(label.parse::<QuantType>(), Ok(qt), "label {label:?}");
+            // Keys are lower-case, '+'-separated, stable spellings.
+            assert_eq!(key, key.to_ascii_lowercase());
+            // Mode/kind accessors agree with the constructor axes.
+            match qt {
+                QuantType::Bf16 => assert_eq!((qt.kind(), qt.mode()), (None, None)),
+                _ => assert_eq!(qt.mode().unwrap().apply(qt.kind().unwrap()), qt),
+            }
+        }
+        // Labels and keys of distinct configurations never collide.
+        let mut keys: Vec<String> = QuantMode::ALL
+            .iter()
+            .flat_map(|m| QuantKind::ALL.iter().map(|k| m.apply(*k).key()))
+            .collect();
+        keys.push(QuantType::Bf16.key());
+        let n = keys.len();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), n, "duplicate battery keys");
+        // Bad spellings fail with the shared QuantKind error text.
+        assert!("int4".parse::<QuantType>().unwrap_err().contains("hif4"));
+        assert!("hif4+awq".parse::<QuantType>().unwrap_err().contains("expected pts"));
     }
 
     #[test]

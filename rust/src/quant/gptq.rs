@@ -27,8 +27,8 @@
 //! default entry points, which use the process-wide thread knob.
 
 use crate::formats::e6m2::exp2i;
-use crate::formats::rounding::RoundMode;
-use crate::formats::{e2m1, hif4, nvfp4, s1p2, QuantKind};
+use crate::formats::rounding::{round_int, RoundMode};
+use crate::formats::{bfp, e2m1, hif4, mx4, mxfp4, nvfp4, s1p2, QuantKind};
 use crate::tensor::Matrix;
 use crate::util::threadpool::{self, parallel_row_bands, parallel_row_bands2};
 
@@ -38,10 +38,13 @@ pub const DAMP: f64 = 0.01;
 /// Which per-position grid a frozen-metadata group exposes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum GridKind {
-    /// Uniform ±1.75 sign-magnitude grid of step 0.25 × scale (HiF4).
+    /// Uniform ±1.75 sign-magnitude grid of step 0.25 × scale (HiF4, BFP).
     S1P2,
-    /// Non-uniform E2M1 magnitude grid × scale (NVFP4).
+    /// Non-uniform E2M1 magnitude grid × scale (NVFP4, MXFP4).
     E2M1,
+    /// Uniform ±1.5 sign-magnitude grid of step 0.5 × scale (MX4's 3-bit
+    /// element; the per-position step already folds the micro-exponent in).
+    S1P1,
 }
 
 /// Frozen-metadata quantization grid for one (row, K-group) pair.
@@ -72,6 +75,36 @@ impl GroupGrid {
         GroupGrid { kind: GridKind::E2M1, steps: vec![s; nvfp4::GROUP] }
     }
 
+    /// Freeze MXFP4 metadata (E8M0 scale) from the current weights.
+    fn mxfp4(w: &[f32], mode: RoundMode) -> GroupGrid {
+        debug_assert_eq!(w.len(), mxfp4::GROUP);
+        let g = mxfp4::quantize(w, mode);
+        let s = g.scale.to_f32();
+        GroupGrid { kind: GridKind::E2M1, steps: vec![s; mxfp4::GROUP] }
+    }
+
+    /// Freeze MX4 metadata (E8M0 scale + per-sub-group micro-exponents)
+    /// from the current weights; the micro bit folds into each position's
+    /// effective step, so in-group error feedback quantizes onto exactly
+    /// the grid the frozen metadata implies.
+    fn mx4(w: &[f32], mode: RoundMode) -> GroupGrid {
+        debug_assert_eq!(w.len(), mx4::GROUP);
+        let g = mx4::quantize(w, mode);
+        let s = g.scale.to_f32();
+        let steps =
+            (0..mx4::GROUP).map(|i| s * if g.micro_down(i) == 1 { 0.5 } else { 1.0 }).collect();
+        GroupGrid { kind: GridKind::S1P1, steps }
+    }
+
+    /// Freeze vanilla-BFP metadata (E8M0 shared exponent) from the current
+    /// weights.
+    fn bfp(w: &[f32], mode: RoundMode) -> GroupGrid {
+        debug_assert_eq!(w.len(), bfp::GROUP);
+        let g = bfp::quantize(w, mode);
+        let s = g.scale.to_f32();
+        GroupGrid { kind: GridKind::S1P2, steps: vec![s; bfp::GROUP] }
+    }
+
     /// Quantize one value at in-group position `i` onto the frozen grid.
     #[inline]
     fn quantize(&self, i: usize, x: f32, mode: RoundMode) -> f32 {
@@ -82,6 +115,12 @@ impl GroupGrid {
         match self.kind {
             GridKind::S1P2 => s * s1p2::S1P2::from_f32(x / s, mode).to_f32(),
             GridKind::E2M1 => s * e2m1::E2M1::from_f32(x / s, mode).to_f32(),
+            GridKind::S1P1 => {
+                // Mirror `mx4::quantize`'s element rule: round halves, clip
+                // the magnitude at 3 (|value| ≤ 1.5 × step).
+                let q = round_int(x / (s * mx4::ELEM_STEP), mode).clamp(-3.0, 3.0);
+                s * mx4::ELEM_STEP * q
+            }
         }
     }
 }
@@ -109,7 +148,9 @@ impl GptqConfig {
         match self.format {
             QuantKind::HiF4 => GroupGrid::hif4(w, self.mode),
             QuantKind::Nvfp4 => GroupGrid::nvfp4(w, self.mode),
-            other => panic!("GPTQ grid not implemented for {other:?}"),
+            QuantKind::Mxfp4 => GroupGrid::mxfp4(w, self.mode),
+            QuantKind::Mx4 => GroupGrid::mx4(w, self.mode),
+            QuantKind::Bfp => GroupGrid::bfp(w, self.mode),
         }
     }
 }
@@ -465,6 +506,60 @@ mod tests {
                 let sig = mantissa >> tz;
                 assert!(sig <= 105, "{v} not on a HiF4 grid (sig={sig})");
             }
+        }
+    }
+
+    #[test]
+    fn frozen_grids_match_rtn_per_group() {
+        // With no error feedback, quantizing a fresh group through its
+        // frozen grid must reproduce the format's own quant-dequant bit
+        // for bit — the grids exist to *freeze* that metadata, not to
+        // approximate it. (E8M0 scales are powers of two, so the grid's
+        // division and the format's reciprocal multiply agree exactly.
+        // HiF4/NVFP4 use non-power-of-two scales and are covered by the
+        // dyadic-grid and MSE tests instead.)
+        use crate::formats::QuantScheme;
+        let mut rng = Rng::seed(407);
+        for f in [QuantKind::Mxfp4, QuantKind::Mx4, QuantKind::Bfp] {
+            let cfg = GptqConfig { format: f, mode: RoundMode::NearestEven, pts: false };
+            let g = f.group();
+            for _ in 0..25 {
+                let v: Vec<f32> = (0..g).map(|_| rng.normal() as f32 * 0.3).collect();
+                let grid = cfg.make_grid(&v);
+                let want = QuantScheme::direct(f).quant_dequant_vec(&v);
+                for i in 0..g {
+                    let got = grid.quantize(i, v[i], cfg.mode);
+                    assert_eq!(
+                        got.to_bits(),
+                        want[i].to_bits(),
+                        "{f}: pos {i}, x={} grid={got} rtn={}",
+                        v[i],
+                        want[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gptq_covers_all_formats() {
+        // Every block format must run through GPTQ with finite outputs and
+        // stay competitive with RTN on its own calibration set.
+        let mut rng = Rng::seed(408);
+        let w = Matrix::randn(6, 64, 0.05, &mut rng);
+        let x = Matrix::randn(32, 64, 1.0, &mut rng);
+        let y = crate::tensor::gemm::matmul_bt(&x, &w);
+        for f in QuantKind::ALL {
+            let cfg = GptqConfig { format: f, mode: RoundMode::NearestEven, pts: false };
+            let r = gptq_quantize(&w, &x, &cfg);
+            assert!(r.proxy_loss.is_finite(), "{f}: proxy loss must be finite");
+            assert!(r.weights.data.iter().all(|v| v.is_finite()), "{f}: weights must be finite");
+            let e_g = y.mse(&crate::tensor::gemm::matmul_bt(&x, &r.weights));
+            let e_r = y.mse(&crate::tensor::gemm::matmul_bt(&x, &rtn_quantize(&w, &cfg)));
+            assert!(
+                e_g <= e_r * 1.05 + 1e-12,
+                "{f}: GPTQ output MSE {e_g:.3e} should not trail RTN {e_r:.3e}"
+            );
         }
     }
 

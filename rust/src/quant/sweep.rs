@@ -34,6 +34,14 @@ pub fn schemes() -> Vec<QuantScheme> {
     ]
 }
 
+/// Column labels for [`schemes`], derived from [`QuantScheme::label`] — the
+/// one label source the CLI table, the Fig-3 bench header and the accuracy
+/// battery all share (a renamed scheme renames every consumer at once
+/// instead of forking).
+pub fn scheme_labels() -> Vec<String> {
+    schemes().iter().map(QuantScheme::label).collect()
+}
+
 /// Run the sweep at a configurable matrix size (the paper's 1024×1024 by
 /// default; tests shrink it).
 pub fn run(dim: usize, points: usize, seed: u64) -> Vec<SweepPoint> {
@@ -81,6 +89,21 @@ pub fn stable_ratios(points: &[SweepPoint]) -> Vec<f64> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn scheme_labels_roundtrip_through_the_shared_parser() {
+        // The Fig-3 header labels and the battery's quant axis must agree:
+        // every label parses back (via the shared QuantType parser) to a
+        // QuantType whose scheme is exactly the one that produced it.
+        use crate::quant::experiment::QuantType;
+        let labels = scheme_labels();
+        assert_eq!(labels, ["HiF4", "NVFP4", "NVFP4+PTS", "MXFP4"]);
+        for (label, scheme) in labels.iter().zip(schemes()) {
+            let qt: QuantType = label.parse().unwrap();
+            assert_eq!(qt.scheme(), Some(scheme), "{label}");
+            assert_eq!(qt.label(), *label, "label must re-derive itself");
+        }
+    }
 
     #[test]
     fn fig3_shape_small() {

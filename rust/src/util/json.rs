@@ -1,0 +1,449 @@
+//! Minimal JSON value + parser + writer (the offline image has no `serde`).
+//!
+//! Grown for the accuracy battery: `BENCH_accuracy.json` is written from a
+//! [`Json`] tree with **insertion-ordered** objects (so reruns diff cleanly
+//! line-by-line) and read back by the golden regression test, which walks
+//! the numeric leaves via [`Json::flatten_numbers`]. The hand-rolled bench
+//! writers (`BENCH_qgemm.json`, …) predate this module and format their
+//! strings directly; new machine-read artifacts should go through here so
+//! the writer and the test-side parser can never disagree on escaping.
+//!
+//! Numbers render through Rust's shortest-roundtrip `Display` for `f64`, so
+//! `parse(render(x)) == x` bit-for-bit — the property the golden diff's
+//! tight tolerances rely on.
+
+use std::fmt::Write as _;
+
+/// A JSON document. Objects preserve insertion order (a `Vec`, not a map):
+/// serialization is deterministic and diff-friendly by construction.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Object constructor from pairs (insertion order kept).
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
+        Json::Arr(items.into_iter().collect())
+    }
+
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    pub fn num(x: f64) -> Json {
+        Json::Num(x)
+    }
+
+    /// Member lookup on objects (first match; `None` elsewhere).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&[(String, Json)]> {
+        match self {
+            Json::Obj(p) => Some(p),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    /// Every numeric leaf as `("a.b.3.c", value)`, depth-first in document
+    /// order — the flat view the golden regression diff compares.
+    pub fn flatten_numbers(&self) -> Vec<(String, f64)> {
+        let mut out = Vec::new();
+        self.walk_numbers("", &mut out);
+        out
+    }
+
+    fn walk_numbers(&self, path: &str, out: &mut Vec<(String, f64)>) {
+        let join = |k: &str| if path.is_empty() { k.to_string() } else { format!("{path}.{k}") };
+        match self {
+            Json::Num(x) => out.push((path.to_string(), *x)),
+            Json::Obj(pairs) => {
+                for (k, v) in pairs {
+                    v.walk_numbers(&join(k), out);
+                }
+            }
+            Json::Arr(items) => {
+                for (i, v) in items.iter().enumerate() {
+                    v.walk_numbers(&join(&i.to_string()), out);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Pretty-render with 2-space indentation and a trailing newline — the
+    /// one serialization every battery artifact uses (stable across runs
+    /// for identical trees, so `git diff` on a golden update shows exactly
+    /// the cells that moved).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, 0);
+        s.push('\n');
+        s
+    }
+
+    fn write(&self, s: &mut String, indent: usize) {
+        match self {
+            Json::Null => s.push_str("null"),
+            Json::Bool(b) => {
+                let _ = write!(s, "{b}");
+            }
+            Json::Num(x) => write_number(s, *x),
+            Json::Str(v) => write_string(s, v),
+            Json::Arr(items) if items.is_empty() => s.push_str("[]"),
+            Json::Arr(items) => {
+                s.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        s.push(',');
+                    }
+                    s.push('\n');
+                    s.push_str(&"  ".repeat(indent + 1));
+                    v.write(s, indent + 1);
+                }
+                s.push('\n');
+                s.push_str(&"  ".repeat(indent));
+                s.push(']');
+            }
+            Json::Obj(pairs) if pairs.is_empty() => s.push_str("{}"),
+            Json::Obj(pairs) => {
+                s.push('{');
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        s.push(',');
+                    }
+                    s.push('\n');
+                    s.push_str(&"  ".repeat(indent + 1));
+                    write_string(s, k);
+                    s.push_str(": ");
+                    v.write(s, indent + 1);
+                }
+                s.push('\n');
+                s.push_str(&"  ".repeat(indent));
+                s.push('}');
+            }
+        }
+    }
+}
+
+fn write_number(s: &mut String, x: f64) {
+    if !x.is_finite() {
+        // JSON has no Inf/NaN; the battery treats them as data bugs but the
+        // writer must still emit *valid* JSON (the golden diff then fails
+        // on the null, loudly).
+        s.push_str("null");
+    } else if x == 0.0 && x.is_sign_negative() {
+        // `as i64` would drop the sign bit; "-0" parses back to -0.0.
+        s.push_str("-0");
+    } else if x == x.trunc() && x.abs() < 1e15 {
+        let _ = write!(s, "{}", x as i64);
+    } else {
+        // Shortest round-trip representation (Rust's float Display).
+        let _ = write!(s, "{x}");
+    }
+}
+
+fn write_string(s: &mut String, v: &str) {
+    s.push('"');
+    for c in v.chars() {
+        match c {
+            '"' => s.push_str("\\\""),
+            '\\' => s.push_str("\\\\"),
+            '\n' => s.push_str("\\n"),
+            '\r' => s.push_str("\\r"),
+            '\t' => s.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(s, "\\u{:04x}", c as u32);
+            }
+            c => s.push(c),
+        }
+    }
+    s.push('"');
+}
+
+/// Parse a JSON document; errors carry the byte offset of the failure.
+pub fn parse(text: &str) -> Result<Json, String> {
+    let bytes = text.as_bytes();
+    let mut p = Parser { bytes, pos: 0 };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != bytes.len() {
+        return Err(format!("trailing garbage at byte {}", p.pos));
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), String> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(format!("expected {:?} at byte {}", b as char, self.pos))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => Err(format!("unexpected input at byte {}", self.pos)),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at byte {}", self.pos))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.pos;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        s.parse::<f64>().map(Json::Num).map_err(|e| format!("bad number {s:?} at {start}: {e}"))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let c = self.peek().ok_or_else(|| "unterminated string".to_string())?;
+            self.pos += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = self.peek().ok_or_else(|| "bad escape".to_string())?;
+                    self.pos += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            let hex = self
+                                .bytes
+                                .get(self.pos..self.pos + 4)
+                                .ok_or_else(|| "short \\u escape".to_string())?;
+                            let code = u32::from_str_radix(
+                                std::str::from_utf8(hex).map_err(|e| e.to_string())?,
+                                16,
+                            )
+                            .map_err(|e| e.to_string())?;
+                            self.pos += 4;
+                            // Surrogate pairs are not needed for battery keys;
+                            // map lone surrogates to the replacement char.
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        }
+                        other => return Err(format!("bad escape \\{}", other as char)),
+                    }
+                }
+                _ => {
+                    // Re-decode the UTF-8 sequence starting at c.
+                    let start = self.pos - 1;
+                    let rest = std::str::from_utf8(&self.bytes[start..])
+                        .map_err(|e| format!("bad utf8 at {start}: {e}"))?;
+                    let ch = rest.chars().next().unwrap();
+                    self.pos = start + ch.len_utf8();
+                    out.push(ch);
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(format!("expected ',' or ']' at byte {}", self.pos)),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut pairs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(pairs));
+        }
+        loop {
+            self.skip_ws();
+            let k = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let v = self.value()?;
+            pairs.push((k, v));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(pairs));
+                }
+                _ => return Err(format!("expected ',' or '}}' at byte {}", self.pos)),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_document() {
+        let doc = Json::obj(vec![
+            ("name", Json::str("battery")),
+            ("quick", Json::Bool(true)),
+            ("cells", Json::arr([Json::num(1.0), Json::num(56.25), Json::num(-0.125)])),
+            ("nested", Json::obj(vec![("ppl", Json::num(17.25)), ("none", Json::Null)])),
+            ("escaped", Json::str("a\"b\\c\nd\ttab")),
+        ]);
+        let text = doc.render();
+        let back = parse(&text).unwrap();
+        assert_eq!(doc, back);
+    }
+
+    #[test]
+    fn numbers_roundtrip_bit_exact() {
+        // Shortest-roundtrip Display: parse(render(x)) == x for awkward
+        // values (the golden diff's exact-pin tolerance depends on this).
+        for x in [
+            1.0 / 3.0,
+            66.666_666_666_666_67,
+            1e-9,
+            123456789.0,
+            0.1 + 0.2,
+            f64::MIN_POSITIVE,
+            -0.0,
+        ] {
+            let text = Json::num(x).render();
+            let y = parse(&text).unwrap().as_f64().unwrap();
+            assert_eq!(x.to_bits(), y.to_bits(), "{x} -> {text}");
+        }
+    }
+
+    #[test]
+    fn object_order_preserved() {
+        let doc = Json::obj(vec![("z", Json::num(1.0)), ("a", Json::num(2.0))]);
+        let text = doc.render();
+        assert!(text.find("\"z\"").unwrap() < text.find("\"a\"").unwrap());
+        // And the parser keeps it.
+        let back = parse(&text).unwrap();
+        assert_eq!(back.as_obj().unwrap()[0].0, "z");
+    }
+
+    #[test]
+    fn flatten_paths() {
+        let doc = Json::obj(vec![
+            ("a", Json::obj(vec![("b", Json::num(1.0))])),
+            ("arr", Json::arr([Json::num(2.0), Json::str("skip"), Json::num(3.0)])),
+        ]);
+        let flat = doc.flatten_numbers();
+        assert_eq!(
+            flat,
+            vec![("a.b".to_string(), 1.0), ("arr.0".to_string(), 2.0), ("arr.2".to_string(), 3.0)]
+        );
+    }
+
+    #[test]
+    fn parse_errors_carry_position() {
+        assert!(parse("{\"a\": }").unwrap_err().contains("byte"));
+        assert!(parse("[1, 2").unwrap_err().contains("expected"));
+        assert!(parse("{} junk").unwrap_err().contains("trailing"));
+    }
+
+    #[test]
+    fn integers_render_without_exponent() {
+        assert_eq!(Json::num(3.0).render(), "3\n");
+        assert_eq!(Json::num(56.25).render(), "56.25\n");
+    }
+}

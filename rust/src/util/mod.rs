@@ -1,7 +1,9 @@
 //! Offline-image substrates: CLI parsing, thread pool, mini property-test
-//! framework (the crate cache has no clap/tokio/proptest/criterion).
+//! framework, JSON (the crate cache has no clap/tokio/proptest/criterion/
+//! serde).
 
 pub mod bench;
 pub mod cli;
+pub mod json;
 pub mod proptest;
 pub mod threadpool;

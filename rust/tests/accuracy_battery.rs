@@ -1,0 +1,120 @@
+//! Golden-file regression test for the quick accuracy battery.
+//!
+//! The battery is deterministic end to end (seeded training + seeded eval
+//! + seeded held-out corpus + bit-identical kernels across thread counts
+//! and backends), so every numeric cell of the quick matrix diffs against
+//! `tests/golden/accuracy_golden.json` with a tight default tolerance.
+//! Per-cell overrides live under the golden's optional `"tolerances"`
+//! object (flattened dotted path → absolute tolerance) and survive
+//! regeneration.
+//!
+//! Updating the golden: run `UPDATE_GOLDEN=1 cargo test --test
+//! accuracy_battery` and commit the rewritten file. A checked-in
+//! `{"status": "bootstrap"}` stub (or a missing file) also regenerates in
+//! place, so the very first toolchain run mints the numbers.
+
+use hif4::eval::battery::{self, BatteryConfig};
+use hif4::util::bench::Table;
+use hif4::util::json::{self, Json};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/accuracy_golden.json")
+}
+
+/// Default per-cell absolute tolerance. Accuracy cells are percentages and
+/// ppl cells are O(1..vocab); both are pure functions of the seeds on
+/// bit-identical kernels, so drift beyond float-noise means a real change.
+const DEFAULT_TOL: f64 = 1e-9;
+
+#[test]
+fn quick_battery_matches_golden() {
+    let path = golden_path();
+    let golden = std::fs::read_to_string(&path)
+        .ok()
+        .map(|t| json::parse(&t).expect("golden file must parse as JSON"));
+
+    let doc = battery::run(&BatteryConfig::quick());
+
+    let bootstrap = match &golden {
+        None => true,
+        Some(g) => g.get("status").and_then(Json::as_str) == Some("bootstrap"),
+    };
+    if std::env::var("UPDATE_GOLDEN").is_ok() || bootstrap {
+        // Regenerate in place, preserving any per-cell tolerance overrides.
+        let mut out = doc;
+        if let Some(tols) = golden.as_ref().and_then(|g| g.get("tolerances")) {
+            if let Json::Obj(pairs) = &mut out {
+                pairs.push(("tolerances".to_string(), tols.clone()));
+            }
+        }
+        std::fs::write(&path, out.render()).expect("write golden");
+        eprintln!(
+            "accuracy golden (re)generated at {} — commit it to pin the battery",
+            path.display()
+        );
+        return;
+    }
+    let golden = golden.unwrap();
+
+    assert_eq!(
+        golden.get("schema_version").and_then(Json::as_f64),
+        doc.get("schema_version").and_then(Json::as_f64),
+        "schema version drift — regenerate with UPDATE_GOLDEN=1"
+    );
+
+    let tol_overrides = golden.get("tolerances").map(Json::flatten_numbers).unwrap_or_default();
+    let tol_for = |path: &str| {
+        tol_overrides.iter().find(|(p, _)| p == path).map(|(_, t)| *t).unwrap_or(DEFAULT_TOL)
+    };
+
+    let mut gold_nums = golden.flatten_numbers();
+    gold_nums.retain(|(p, _)| !p.starts_with("tolerances."));
+    let got_nums = doc.flatten_numbers();
+    let gold: BTreeMap<&str, f64> = gold_nums.iter().map(|(p, v)| (p.as_str(), *v)).collect();
+    let got: BTreeMap<&str, f64> = got_nums.iter().map(|(p, v)| (p.as_str(), *v)).collect();
+
+    // (cell, golden, got, tol) with NaN standing in for a missing side.
+    let mut failures: Vec<(String, f64, f64, f64)> = Vec::new();
+    for (path, gv) in &gold {
+        match got.get(path) {
+            None => failures.push((path.to_string(), *gv, f64::NAN, 0.0)),
+            Some(cv) => {
+                let tol = tol_for(path);
+                if (gv - cv).abs() > tol {
+                    failures.push((path.to_string(), *gv, *cv, tol));
+                }
+            }
+        }
+    }
+    for (path, cv) in &got {
+        if !gold.contains_key(path) {
+            failures.push((path.to_string(), f64::NAN, *cv, 0.0));
+        }
+    }
+
+    if !failures.is_empty() {
+        let mut t = Table::new(
+            "accuracy golden drift (NaN side = cell missing)",
+            &["cell", "golden", "got", "|delta|", "tol"],
+        );
+        for (path, gv, cv, tol) in &failures {
+            t.row(vec![
+                path.clone(),
+                format!("{gv}"),
+                format!("{cv}"),
+                format!("{:.3e}", (gv - cv).abs()),
+                format!("{tol:.1e}"),
+            ]);
+        }
+        t.print();
+        panic!(
+            "{} of {} battery cells drifted from tests/golden/accuracy_golden.json; \
+             if intentional, rerun with UPDATE_GOLDEN=1 and commit the new golden \
+             (or add a per-cell entry under its \"tolerances\" object)",
+            failures.len(),
+            gold.len()
+        );
+    }
+}
