@@ -55,6 +55,7 @@ fn main() -> anyhow::Result<()> {
             artifact: artifact.into(),
             policy: BatchPolicy { max_batch: manifest.batch, max_wait: Duration::from_millis(2) },
             workers: args.get_parse("workers", 2),
+            resilience: Default::default(),
         };
         let server = Server::start(&artifacts, cfg, &served, "127.0.0.1:0")?;
         println!("\n[{label}] serving {artifact} on {}", server.addr);

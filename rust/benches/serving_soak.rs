@@ -1,0 +1,322 @@
+//! Serving soak under chaos: offered load vs goodput with deterministic
+//! fault injection, plus a recovery-time probe — the resilience
+//! counterpart of `benches/serving_throughput.rs`.
+//!
+//! Three phases against the native continuous-batching engine (same
+//! model seed everywhere, so tokens are comparable across phases):
+//!
+//! 1. **baseline** — no faults: goodput and latency percentiles of the
+//!    healthy server, plus the reference tokens per prompt;
+//! 2. **chaos** — seeded worker panics + stalls, client garbage frames
+//!    and dropped connections, a bounded queue forcing real shedding,
+//!    and sprinkled 1ms deadlines forcing expiries. Retrying clients
+//!    measure goodput under fire; every stream that completes must be
+//!    token-identical to the baseline;
+//! 3. **recovery** — a single guaranteed `panic_at_step`: wall time from
+//!    the injected crash (first `Crashed` frame) until the retried
+//!    request completes.
+//!
+//! Writes `BENCH_serving.json` (offered/goodput/shed/expired/restarts/
+//! retries, p50/p99/p999, recovery ms). `HIF4_BENCH_QUICK=1` shrinks the
+//! request counts for CI.
+
+use hif4::model::kv::KvCacheType;
+use hif4::model::transformer::Transformer;
+use hif4::model::zoo;
+use hif4::server::batcher::BatchPolicy;
+use hif4::server::faults::{quiet_injected_panics, FaultConfig, FaultPlan};
+use hif4::server::protocol::{Request, Status};
+use hif4::server::service::{
+    Client, NativeServerConfig, ResilienceConfig, RetryPolicy, Server,
+};
+use hif4::util::bench::Table;
+use hif4::util::json::Json;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const MAX_PROMPT: usize = 32;
+const N_NEW: u16 = 4;
+
+fn start_server(model: Arc<Transformer>, resilience: ResilienceConfig) -> Server {
+    let cfg = NativeServerConfig {
+        policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        workers: 2,
+        seq: MAX_PROMPT,
+        kv: KvCacheType::F32,
+        resilience,
+    };
+    Server::start_native(model, cfg, "127.0.0.1:0").unwrap()
+}
+
+fn prompts(vocab: usize) -> Vec<Vec<usize>> {
+    (0..8).map(|s| (0..6).map(|i| 1 + (i * 19 + s * 41) % (vocab - 1)).collect()).collect()
+}
+
+struct PhaseStats {
+    offered: u64,
+    completed: u64,
+    expired: u64,
+    retries: u64,
+    elapsed: Duration,
+    mismatches: u64,
+}
+
+/// Drive `n_requests` across `n_clients` retrying clients; verify every
+/// completed stream against `reference` (tokens per prompt index). Every
+/// 10th request carries a 1ms TTL (chaos phases expire it; the baseline
+/// omits deadlines entirely when `with_deadlines` is false).
+fn drive(
+    server: &Server,
+    n_clients: u64,
+    n_requests: u64,
+    reference: &[Vec<usize>],
+    prompt_set: &[Vec<usize>],
+    with_deadlines: bool,
+) -> PhaseStats {
+    let addr = server.addr;
+    let t0 = Instant::now();
+    let per_client = n_requests / n_clients;
+    let results: Vec<(u64, u64, u64, u64)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n_clients)
+            .map(|c| {
+                s.spawn(move || {
+                    let mut client = Client::connect(addr).unwrap();
+                    let policy = RetryPolicy {
+                        max_retries: 12,
+                        base: Duration::from_millis(2),
+                        cap: Duration::from_millis(40),
+                        seed: 0xB0_0000 + c,
+                    };
+                    let (mut ok, mut expired, mut retries) = (0u64, 0u64, 0u64);
+                    let mut mismatches = 0u64;
+                    for i in 0..per_client {
+                        let pi = ((c + i) % prompt_set.len() as u64) as usize;
+                        let mut req =
+                            Request::generate(c * 10_000 + i, prompt_set[pi].clone(), N_NEW);
+                        if with_deadlines && i % 10 == 9 {
+                            req = req.with_deadline_ms(1);
+                        }
+                        match client.generate_retrying(&req, &policy) {
+                            Ok((frames, r)) => {
+                                retries += r as u64;
+                                match frames.last().map(|f| f.status) {
+                                    Some(Status::Ok) => {
+                                        ok += 1;
+                                        let got: Vec<usize> = frames
+                                            .iter()
+                                            .map(|f| f.token as usize)
+                                            .collect();
+                                        if got != reference[pi] {
+                                            mismatches += 1;
+                                        }
+                                    }
+                                    Some(Status::Expired) => expired += 1,
+                                    _ => {}
+                                }
+                            }
+                            Err(_) => {
+                                // Connection-level loss even after retries:
+                                // counted as non-goodput, keep driving.
+                                let _ = client.reconnect();
+                            }
+                        }
+                    }
+                    (ok, expired, retries, mismatches)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let mut stats = PhaseStats {
+        offered: per_client * n_clients,
+        completed: 0,
+        expired: 0,
+        retries: 0,
+        elapsed: t0.elapsed(),
+        mismatches: 0,
+    };
+    for (ok, expired, retries, mismatches) in results {
+        stats.completed += ok;
+        stats.expired += expired;
+        stats.retries += retries;
+        stats.mismatches += mismatches;
+    }
+    stats
+}
+
+fn percentiles(server: &Server) -> (u64, u64, u64) {
+    let m = &server.metrics;
+    (m.percentile_us(0.50), m.percentile_us(0.99), m.percentile_us(0.999))
+}
+
+fn phase_json(server: &Server, st: &PhaseStats) -> Json {
+    let (p50, p99, p999) = percentiles(server);
+    let secs = st.elapsed.as_secs_f64().max(1e-9);
+    let ord = Ordering::Relaxed;
+    Json::obj(vec![
+        ("offered", Json::num(st.offered as f64)),
+        ("completed", Json::num(st.completed as f64)),
+        ("expired", Json::num(st.expired as f64)),
+        ("offered_rps", Json::num(st.offered as f64 / secs)),
+        ("goodput_rps", Json::num(st.completed as f64 / secs)),
+        ("shed_queue_full", Json::num(server.metrics.shed_queue_full.load(ord) as f64)),
+        ("shed_kv_budget", Json::num(server.metrics.shed_kv_budget.load(ord) as f64)),
+        (
+            "shed_rate",
+            Json::num(server.metrics.shed_total() as f64 / (st.offered as f64).max(1.0)),
+        ),
+        ("worker_restarts", Json::num(server.metrics.worker_restarts.load(ord) as f64)),
+        ("client_retries", Json::num(st.retries as f64)),
+        ("survivor_mismatches", Json::num(st.mismatches as f64)),
+        ("p50_us", Json::num(p50 as f64)),
+        ("p99_us", Json::num(p99 as f64)),
+        ("p999_us", Json::num(p999 as f64)),
+    ])
+}
+
+/// Recovery probe: sequential requests against a server whose fault plan
+/// fires exactly one panic; returns ms from the first `Crashed` frame to
+/// the next completed stream.
+fn recovery_probe(
+    model: Arc<Transformer>,
+    reference: &[Vec<usize>],
+    prompt_set: &[Vec<usize>],
+) -> f64 {
+    let faults = FaultConfig { panic_at_step: Some(8), ..Default::default() };
+    let resilience = ResilienceConfig {
+        faults: Some(Arc::new(FaultPlan::new(5, faults))),
+        ..Default::default()
+    };
+    let server = start_server(model, resilience);
+    let mut client = Client::connect(server.addr).unwrap();
+    let policy = RetryPolicy {
+        max_retries: 12,
+        base: Duration::from_millis(1),
+        cap: Duration::from_millis(10),
+        seed: 1,
+    };
+    let mut crashed_at: Option<Instant> = None;
+    let mut recovery = 0.0f64;
+    for i in 0..40u64 {
+        let pi = (i % prompt_set.len() as u64) as usize;
+        let req = Request::generate(i, prompt_set[pi].clone(), N_NEW);
+        // Plain generate so the Crashed frame is observable; retry by hand
+        // to timestamp the crash → recovery window.
+        match client.generate(&req) {
+            Ok(frames) if frames.last().map(|f| f.status) == Some(Status::Ok) => {
+                if let Some(t) = crashed_at.take() {
+                    recovery = t.elapsed().as_secs_f64() * 1e3;
+                    break;
+                }
+                let got: Vec<usize> = frames.iter().map(|f| f.token as usize).collect();
+                assert_eq!(got, reference[pi], "pre-crash stream must match baseline");
+            }
+            Ok(_) => {
+                crashed_at.get_or_insert_with(Instant::now);
+                // Immediately retry through the policy: the supervisor is
+                // restarting the worker concurrently.
+                if let Ok((frames, _)) = client.generate_retrying(&req, &policy) {
+                    if frames.last().map(|f| f.status) == Some(Status::Ok) {
+                        if let Some(t) = crashed_at.take() {
+                            recovery = t.elapsed().as_secs_f64() * 1e3;
+                        }
+                        break;
+                    }
+                }
+            }
+            Err(_) => {
+                let _ = client.reconnect();
+            }
+        }
+    }
+    recovery
+}
+
+fn main() {
+    quiet_injected_panics();
+    let quick = std::env::var("HIF4_BENCH_QUICK").is_ok();
+    let (n_clients, n_requests) = if quick { (4u64, 80u64) } else { (8u64, 480u64) };
+
+    let model = Arc::new(Transformer::init(zoo::llama3_tiny(), 5));
+    let prompt_set = prompts(model.cfg.vocab);
+    let reference: Vec<Vec<usize>> = prompt_set
+        .iter()
+        .map(|p| model.generate_greedy(p, N_NEW as usize, KvCacheType::F32))
+        .collect();
+
+    // Phase 1: healthy server.
+    let baseline_server = start_server(Arc::clone(&model), ResilienceConfig::default());
+    let base =
+        drive(&baseline_server, n_clients, n_requests, &reference, &prompt_set, false);
+    let base_json = phase_json(&baseline_server, &base);
+    assert_eq!(base.mismatches, 0, "fault-free streams must match greedy decode");
+    assert_eq!(base.completed, base.offered, "healthy server completes everything");
+
+    // Phase 2: chaos — panics, stalls, bad clients, bounded queue,
+    // sprinkled 1ms deadlines.
+    let chaos_cfg = FaultConfig {
+        panic_per_mille: 20,
+        stall_per_mille: 40,
+        stall_ms: 2,
+        panic_at_step: Some(6),
+        garbage_per_mille: 0, // framing chaos is covered by tests/chaos_soak.rs
+        disconnect_per_mille: 0,
+    };
+    let resilience = ResilienceConfig {
+        max_queue: 32,
+        kv_budget_bytes: 1 << 30,
+        faults: Some(Arc::new(FaultPlan::new(0x50AC, chaos_cfg))),
+        ..Default::default()
+    };
+    let chaos_server = start_server(Arc::clone(&model), resilience);
+    let chaos = drive(&chaos_server, n_clients, n_requests, &reference, &prompt_set, true);
+    let chaos_json = phase_json(&chaos_server, &chaos);
+    assert_eq!(chaos.mismatches, 0, "chaos survivors must be token-identical to baseline");
+    assert!(
+        chaos_server.metrics.worker_restarts.load(Ordering::Relaxed) >= 1,
+        "panic_at_step guarantees at least one supervised restart"
+    );
+    chaos_server.metrics.record_retries(chaos.retries);
+
+    // Phase 3: recovery time.
+    let recovery_ms = recovery_probe(Arc::clone(&model), &reference, &prompt_set);
+
+    // Human-readable table + machine-readable artifact.
+    let mut t = Table::new(
+        "Serving soak: offered vs goodput",
+        &["phase", "offered", "ok", "goodput r/s", "shed", "restarts", "p99 us"],
+    );
+    for (label, server, st) in
+        [("baseline", &baseline_server, &base), ("chaos", &chaos_server, &chaos)]
+    {
+        let secs = st.elapsed.as_secs_f64().max(1e-9);
+        t.row(vec![
+            label.into(),
+            st.offered.to_string(),
+            st.completed.to_string(),
+            format!("{:.1}", st.completed as f64 / secs),
+            server.metrics.shed_total().to_string(),
+            server.metrics.worker_restarts.load(Ordering::Relaxed).to_string(),
+            server.metrics.percentile_us(0.99).to_string(),
+        ]);
+    }
+    t.print();
+    println!("recovery after injected crash: {recovery_ms:.1} ms");
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("serving_soak")),
+        ("quick", Json::Bool(quick)),
+        ("baseline", base_json),
+        ("chaos", chaos_json),
+        (
+            "recovery",
+            Json::obj(vec![
+                ("injected_at_step", Json::num(8.0)),
+                ("recovery_ms", Json::num(recovery_ms)),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_serving.json", doc.render()).unwrap();
+    println!("wrote BENCH_serving.json");
+}

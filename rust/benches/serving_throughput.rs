@@ -85,6 +85,7 @@ fn main() {
                 workers,
                 seq: cfg.max_seq,
                 kv: KvCacheType::F32,
+                resilience: Default::default(),
             },
             "127.0.0.1:0",
         )
@@ -133,6 +134,7 @@ fn main() {
                     .ok()
                     .and_then(|w| w.parse().ok())
                     .unwrap_or(1),
+                resilience: Default::default(),
             };
             let server = Server::start(dir, cfg, &served, "127.0.0.1:0").unwrap();
             let mut client = Client::connect(server.addr).unwrap();

@@ -10,6 +10,16 @@
 //!                                            # hif4|nvfp4|mxfp4|mx4|bfp)
 //!              [--kv-cache f32|hif4|...]     # KV-cache storage (native engine;
 //!                                            # HIF4_KV_CACHE env default)
+//!              [--request-timeout-ms 0]      # default per-request TTL
+//!                                            # (0 = none; requests may carry
+//!                                            # their own deadline_ms)
+//!              [--max-queue 0]               # bounded admission: queue depth
+//!                                            # cap (0 = unbounded)
+//!              [--kv-budget-mb 0]            # bounded admission: reserved KV
+//!                                            # byte budget, native engine
+//!                                            # (0 = unbounded)
+//!              [--faults seed=1,panic=5,...] # seeded fault injection (chaos
+//!                                            # drills; see server::faults)
 //! hif4 sweep   --dim 512                       # Fig 3 series
 //! hif4 eval    --battery [--quick]             # accuracy battery: format x
 //!              [--models llama2,deepseek]      # quant mode x zoo model x task
@@ -34,7 +44,8 @@ use hif4::model::kv::KvCacheType;
 use hif4::quant::sweep;
 use hif4::runtime::artifact::{Manifest, ParamStore};
 use hif4::server::batcher::BatchPolicy;
-use hif4::server::service::{NativeServerConfig, Server, ServerConfig};
+use hif4::server::faults::FaultPlan;
+use hif4::server::service::{NativeServerConfig, ResilienceConfig, Server, ServerConfig};
 use hif4::util::bench::Table;
 use hif4::util::cli::Args;
 use std::path::Path;
@@ -151,6 +162,25 @@ fn serve(args: &Args) -> Result<()> {
     };
     let workers = args.get_parse("workers", 1);
     let addr = args.get_or("addr", "127.0.0.1:7401");
+    // Resilience knobs (DESIGN.md §13): TTL, bounded admission, and the
+    // (chaos-drill-only) fault plan. All default off = pre-resilience
+    // behavior.
+    let timeout_ms: u64 = args.get_parse("request-timeout-ms", 0);
+    let resilience = ResilienceConfig {
+        request_timeout: (timeout_ms > 0)
+            .then(|| std::time::Duration::from_millis(timeout_ms)),
+        max_queue: args.get_parse("max-queue", 0),
+        kv_budget_bytes: args.get_parse::<usize>("kv-budget-mb", 0) * (1 << 20),
+        faults: match args.get("faults") {
+            Some(spec) => {
+                let plan =
+                    FaultPlan::parse(spec).map_err(|e| anyhow::anyhow!("--faults: {e}"))?;
+                eprintln!("WARNING: fault injection active ({spec}) — chaos drills only");
+                Some(Arc::new(plan))
+            }
+            None => None,
+        },
+    };
     let server = if args.flag("native") {
         // PJRT-free engine: rebuild the L2 model from the store and serve
         // it rust-natively with continuous-batching decode; quantized
@@ -184,7 +214,7 @@ fn serve(args: &Args) -> Result<()> {
                 .map_err(|e| anyhow::anyhow!("--kv-cache / HIF4_KV_CACHE: {e}"))?,
             None => KvCacheType::F32,
         };
-        let cfg = NativeServerConfig { policy, workers, seq: manifest.seq, kv };
+        let cfg = NativeServerConfig { policy, workers, seq: manifest.seq, kv, resilience };
         Server::start_native(Arc::new(model), cfg, addr)?
     } else {
         let artifact = args.get_or("artifact", "fwd_bf16.hlo.txt").to_string();
@@ -194,7 +224,7 @@ fn serve(args: &Args) -> Result<()> {
         if let Some(kind) = QuantKind::from_artifact_name(&artifact) {
             served.quantize_weights(&QuantScheme::direct(kind));
         }
-        let cfg = ServerConfig { artifact, policy, workers };
+        let cfg = ServerConfig { artifact, policy, workers, resilience };
         Server::start(dir, cfg, &served, addr)?
     };
     println!("serving on {} — Ctrl-C to stop", server.addr);

@@ -65,6 +65,24 @@ impl KvCacheType {
             KvCacheType::Quant(kind) => kind.spelling(),
         }
     }
+
+    /// Resident bytes one appended row of width `kvd` costs in a store of
+    /// this kind — the admission gate's KV-budget unit. Mirrors the
+    /// actual store layout (f32 values; decode-once lane planes padded to
+    /// whole groups plus one f64 scale per group for quantized kinds), so
+    /// gate reservations and [`KvCache::resident_bytes`] agree exactly;
+    /// the `resident_row_bytes_matches_store` test pins the equality for
+    /// every kind.
+    pub fn resident_row_bytes(self, kvd: usize) -> usize {
+        match self {
+            KvCacheType::F32 => kvd * std::mem::size_of::<f32>(),
+            KvCacheType::Quant(kind) => {
+                let group = kind.group();
+                kvd.div_ceil(group)
+                    * (group * std::mem::size_of::<i8>() + std::mem::size_of::<f64>())
+            }
+        }
+    }
 }
 
 /// Per-sequence, per-layer K/V storage for incremental decode. One cache
@@ -518,5 +536,32 @@ mod tests {
         f32c.reset();
         assert_eq!(f32c.resident_bytes(), 0);
         assert!(f32c.capacity_bytes() > 0);
+    }
+
+    #[test]
+    fn resident_row_bytes_matches_store() {
+        // The admission gate budgets KV bytes with the static estimator;
+        // if it ever drifted from what append_row actually stores, the
+        // gate would over-admit (OOM risk) or under-admit (wasted
+        // capacity). Pin exact agreement for every kind and both an
+        // exact-fit and a padded-tail row width.
+        let mut rng = Rng::seed(11);
+        let mut kinds = vec![KvCacheType::F32];
+        kinds.extend(QuantKind::ALL.map(KvCacheType::Quant));
+        for kind in kinds {
+            for kvd in [16usize, 24, 64] {
+                let rows = Matrix::randn(5, kvd, 1.0, &mut rng);
+                let mut store = KvStore::new(kind, kvd);
+                for r in 0..rows.rows {
+                    store.append_row(rows.row(r));
+                }
+                assert_eq!(
+                    store.resident_bytes(),
+                    5 * kind.resident_row_bytes(kvd),
+                    "{} kvd={kvd}",
+                    kind.label()
+                );
+            }
+        }
     }
 }

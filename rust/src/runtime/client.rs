@@ -52,8 +52,14 @@ impl Executable {
         inputs: &[L],
     ) -> Result<Vec<xla::Literal>> {
         let result = self.exe.execute::<L>(inputs).context("execute")?;
-        let literal =
-            result[0][0].to_literal_sync().context("fetch result literal")?;
+        // An executable that produced no output buffer is an engine
+        // error, not a panic: serving workers turn this into Crashed
+        // responses for the affected batch and keep running.
+        let buffer = result
+            .first()
+            .and_then(|device| device.first())
+            .with_context(|| format!("{}: execute returned no output buffer", self.name))?;
+        let literal = buffer.to_literal_sync().context("fetch result literal")?;
         literal.to_tuple().context("decompose result tuple")
     }
 }
@@ -73,12 +79,14 @@ pub fn scalar_literal(x: f32) -> xla::Literal {
     xla::Literal::scalar(x)
 }
 
-/// Token batch (B×T, i32) → literal.
+/// Token batch (B×T, i32) → literal. Rows longer than the lowered `seq`
+/// are truncated (never a panic: the serving layer validates prompt
+/// length at admission, so an over-long row here can only come from an
+/// internal caller that already chose truncation semantics).
 pub fn tokens_literal(tokens: &[Vec<usize>], seq: usize) -> Result<xla::Literal> {
     let b = tokens.len();
     let mut flat = Vec::with_capacity(b * seq);
     for row in tokens {
-        assert!(row.len() <= seq, "sequence longer than the lowered T");
         for i in 0..seq {
             // Pad with token 0 (the corpus pad/BOS id).
             flat.push(*row.get(i).unwrap_or(&0) as i32);

@@ -89,6 +89,24 @@ impl DecodeEngine {
         self.kv
     }
 
+    /// The prompt-length cap streams truncate to (the model context the
+    /// admission gate validates against).
+    pub fn max_prompt(&self) -> usize {
+        self.max_prompt
+    }
+
+    /// Worst-case resident KV bytes one cached position costs across all
+    /// layers (K + V stores) under this engine's cache kind — the
+    /// admission gate's per-token budget unit. Built on
+    /// [`KvCacheType::resident_row_bytes`], which is pinned against the
+    /// actual store layout, so `(prompt + max_new) × kv_bytes_per_token`
+    /// is an exact upper bound on a stream's resident page size.
+    pub fn kv_bytes_per_token(&self) -> usize {
+        let cfg = &self.model.cfg;
+        let kvd = cfg.kv_heads() * cfg.head_dim;
+        cfg.n_layers * 2 * self.kv.resident_row_bytes(kvd)
+    }
+
     /// Open a stream: clamp out-of-vocab ids to the last token, truncate
     /// to `max_prompt`, never empty — a malformed request can never panic
     /// the engine.
@@ -338,6 +356,36 @@ mod tests {
         let f32_engine = DecodeEngine::new(model, KvCacheType::F32, 16);
         let s = f32_engine.start_reusing(&prompt, Some(recycled.into_cache()));
         assert_eq!(s.cache().kind(), KvCacheType::F32);
+    }
+
+    #[test]
+    fn kv_bytes_per_token_matches_decoded_stream() {
+        // The admission gate multiplies this estimator by (prompt +
+        // max_new); it must equal the actual per-position resident cost
+        // of a live stream for both cache backends.
+        let dir = std::env::temp_dir().join("hif4_native_kvbytes_test");
+        write_native_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        let store = m.init_params(13);
+        let model = Arc::new(transformer_from_store(&m, &store).unwrap());
+        for kv in [KvCacheType::F32, KvCacheType::HIF4] {
+            let engine = DecodeEngine::new(Arc::clone(&model), kv, 16);
+            assert_eq!(engine.max_prompt(), 16);
+            let per_token = engine.kv_bytes_per_token();
+            // 1 layer, kvd = 2×8 = 16: f32 → 2×64 B; HiF4 (group 64,
+            // padded) → 2×72 B.
+            match kv {
+                KvCacheType::F32 => assert_eq!(per_token, 2 * 16 * 4),
+                _ => assert_eq!(per_token, 2 * (64 + 8)),
+            }
+            let mut s = engine.start(&[1, 2, 3]);
+            for _ in 0..4 {
+                engine.step(&mut [&mut s]);
+            }
+            // Prefill appended the 3 prompt rows, then 3 decode rows.
+            assert_eq!(s.cache().len(), 6);
+            assert_eq!(s.cache().resident_bytes(), 6 * per_token, "{}", kv.label());
+        }
     }
 
     #[test]

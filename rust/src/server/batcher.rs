@@ -22,7 +22,8 @@
 //!   [`crate::model::transformer::Transformer::forward_cached`]), which
 //!   makes generation results independent of arrival order.
 
-use super::protocol::Request;
+use super::protocol::{Request, Status, MAX_NEW_CAP};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::time::{Duration, Instant};
 
@@ -87,11 +88,163 @@ impl<T> ContinuousScheduler<T> {
     }
 }
 
-/// A request tagged with arrival time and a reply handle.
+/// A request tagged with arrival time, its resolved deadline, the KV
+/// bytes the admission gate reserved for it, and a reply handle.
 pub struct Pending<Reply> {
     pub request: Request,
     pub arrived: Instant,
+    /// Absolute deadline resolved at admission (the request's own
+    /// `deadline_ms`, else the server default TTL); `None` = no deadline.
+    pub deadline: Option<Instant>,
+    /// KV bytes [`AdmissionGate::try_enqueue`] reserved for this request.
+    /// Carried with the request so whichever path finishes it (completion,
+    /// expiry, crash drain) releases exactly what was taken.
+    pub kv_reserved: usize,
     pub reply: Reply,
+}
+
+impl<Reply> Pending<Reply> {
+    /// An untracked pending entry (tests / internal batch helpers): no
+    /// deadline, nothing reserved.
+    pub fn untracked(request: Request, reply: Reply) -> Pending<Reply> {
+        Pending { request, arrived: Instant::now(), deadline: None, kv_reserved: 0, reply }
+    }
+
+    /// Whether this request's deadline has passed as of `now`.
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
+}
+
+/// Why the admission gate refused a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Shed {
+    /// The bounded request queue is at `max_queue`.
+    QueueFull,
+    /// Admitting would push reserved KV bytes past the budget.
+    KvBudget,
+}
+
+impl Shed {
+    /// The wire status a shed maps to.
+    pub fn status(self) -> Status {
+        match self {
+            Shed::QueueFull => Status::ShedQueueFull,
+            Shed::KvBudget => Status::ShedKvBudget,
+        }
+    }
+}
+
+/// Bounded-admission gate: a queue-depth cap plus a KV-byte budget, both
+/// enforced with lock-free reservation (CAS loops) so connection threads
+/// shed load without serializing on a mutex. The gate is *conservative*:
+/// KV bytes are reserved at admission for the request's worst case —
+/// `(prompt ∧ max_prompt) + clamp(max_new)` positions times
+/// `kv_per_token` — and released when the request reaches any terminal
+/// outcome, so the sum of live streams' pages can never exceed the
+/// budget. Either limit set to 0 disables that check
+/// ([`AdmissionGate::unbounded`] disables both).
+#[derive(Debug)]
+pub struct AdmissionGate {
+    max_queue: usize,
+    kv_budget: usize,
+    kv_per_token: usize,
+    max_prompt: usize,
+    queued: AtomicUsize,
+    kv_reserved: AtomicUsize,
+}
+
+impl AdmissionGate {
+    pub fn new(
+        max_queue: usize,
+        kv_budget: usize,
+        kv_per_token: usize,
+        max_prompt: usize,
+    ) -> AdmissionGate {
+        AdmissionGate {
+            max_queue,
+            kv_budget,
+            kv_per_token,
+            max_prompt: max_prompt.max(1),
+            queued: AtomicUsize::new(0),
+            kv_reserved: AtomicUsize::new(0),
+        }
+    }
+
+    /// A gate that admits everything (both limits disabled).
+    pub fn unbounded() -> AdmissionGate {
+        AdmissionGate::new(0, 0, 0, usize::MAX)
+    }
+
+    /// Worst-case KV bytes `req` can pin: every prompt position (after
+    /// truncation to `max_prompt`, floor 1 — engines never feed an empty
+    /// prompt) plus every token it may generate (after the engine's
+    /// `[1, MAX_NEW_CAP]` clamp).
+    pub fn kv_need(&self, req: &Request) -> usize {
+        let prompt_rows = req.tokens.len().min(self.max_prompt).max(1);
+        let decode_rows = req.max_new.clamp(1, MAX_NEW_CAP) as usize;
+        (prompt_rows + decode_rows) * self.kv_per_token
+    }
+
+    /// Admit `req` into the queue, reserving its worst-case KV bytes.
+    /// Returns the reserved byte count (0 when the budget is disabled) to
+    /// carry on the `Pending`; on shed, nothing is reserved and the
+    /// caller answers with `Shed::status()`.
+    pub fn try_enqueue(&self, req: &Request) -> Result<usize, Shed> {
+        if self.max_queue > 0 {
+            let admit = self
+                .queued
+                .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |q| {
+                    (q < self.max_queue).then_some(q + 1)
+                });
+            if admit.is_err() {
+                return Err(Shed::QueueFull);
+            }
+        } else {
+            self.queued.fetch_add(1, Ordering::SeqCst);
+        }
+        let need = if self.kv_budget > 0 { self.kv_need(req) } else { 0 };
+        if need > 0 {
+            let reserve = self
+                .kv_reserved
+                .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |r| {
+                    r.checked_add(need).filter(|&total| total <= self.kv_budget)
+                });
+            if reserve.is_err() {
+                // Roll the queue slot back: the request was never admitted.
+                self.queued.fetch_sub(1, Ordering::SeqCst);
+                return Err(Shed::KvBudget);
+            }
+        }
+        Ok(need)
+    }
+
+    /// A previously admitted request left the queue (a worker picked it
+    /// up, or it was dropped at shutdown).
+    pub fn dequeued(&self) {
+        let prev = self.queued.fetch_sub(1, Ordering::SeqCst);
+        debug_assert!(prev > 0, "dequeued() without a matching try_enqueue()");
+    }
+
+    /// Release a reservation made by [`AdmissionGate::try_enqueue`] —
+    /// called with the `Pending`'s `kv_reserved` on every terminal
+    /// outcome. Zero (no budget / nothing reserved) is a no-op.
+    pub fn release_kv(&self, bytes: usize) {
+        if bytes > 0 {
+            let prev = self.kv_reserved.fetch_sub(bytes, Ordering::SeqCst);
+            debug_assert!(prev >= bytes, "release_kv({bytes}) exceeds outstanding reservation");
+        }
+    }
+
+    /// Requests currently between admission and worker pickup.
+    pub fn queued(&self) -> usize {
+        self.queued.load(Ordering::SeqCst)
+    }
+
+    /// KV bytes currently reserved for admitted-but-unfinished requests.
+    pub fn kv_reserved(&self) -> usize {
+        self.kv_reserved.load(Ordering::SeqCst)
+    }
 }
 
 /// Batching policy.
@@ -202,7 +355,107 @@ mod tests {
     use std::sync::mpsc::{channel, sync_channel};
 
     fn req(id: u64) -> Pending<()> {
-        Pending { request: Request::next_token(id, vec![1, 2]), arrived: Instant::now(), reply: () }
+        Pending::untracked(Request::next_token(id, vec![1, 2]), ())
+    }
+
+    #[test]
+    fn pending_deadline_expiry() {
+        let mut p = req(1);
+        let now = Instant::now();
+        assert!(!p.expired(now), "no deadline → never expires");
+        p.deadline = Some(now + Duration::from_millis(50));
+        assert!(!p.expired(now));
+        assert!(p.expired(now + Duration::from_millis(50)));
+        assert!(p.expired(now + Duration::from_secs(1)));
+    }
+
+    #[test]
+    fn gate_unbounded_admits_everything() {
+        let gate = AdmissionGate::unbounded();
+        for i in 0..100 {
+            assert_eq!(gate.try_enqueue(&Request::generate(i, vec![0; 64], 1000)), Ok(0));
+        }
+        assert_eq!(gate.queued(), 100);
+        assert_eq!(gate.kv_reserved(), 0, "no budget → nothing reserved");
+        for _ in 0..100 {
+            gate.dequeued();
+            gate.release_kv(0);
+        }
+        assert_eq!(gate.queued(), 0);
+    }
+
+    #[test]
+    fn gate_sheds_on_queue_depth_and_recovers() {
+        let gate = AdmissionGate::new(2, 0, 0, usize::MAX);
+        let r = Request::next_token(1, vec![1]);
+        assert!(gate.try_enqueue(&r).is_ok());
+        assert!(gate.try_enqueue(&r).is_ok());
+        assert_eq!(gate.try_enqueue(&r), Err(Shed::QueueFull));
+        assert_eq!(Shed::QueueFull.status(), Status::ShedQueueFull);
+        // Draining one admits one again.
+        gate.dequeued();
+        assert!(gate.try_enqueue(&r).is_ok());
+        assert_eq!(gate.queued(), 2);
+    }
+
+    #[test]
+    fn gate_reserves_worst_case_kv_and_rolls_back_on_shed() {
+        // 8 bytes per token, max_prompt 10: a (3-prompt, 2-new) request
+        // needs (3+2)*8 = 40 bytes.
+        let gate = AdmissionGate::new(0, 100, 8, 10);
+        let small = Request::generate(1, vec![1, 2, 3], 2);
+        assert_eq!(gate.kv_need(&small), 40);
+        let reserved = gate.try_enqueue(&small).unwrap();
+        assert_eq!(reserved, 40);
+        assert_eq!(gate.kv_reserved(), 40);
+        // A second small one fits (80 ≤ 100); a third does not.
+        assert_eq!(gate.try_enqueue(&small), Ok(40));
+        assert_eq!(gate.try_enqueue(&small), Err(Shed::KvBudget));
+        assert_eq!(Shed::KvBudget.status(), Status::ShedKvBudget);
+        // The shed rolled its queue slot back too.
+        assert_eq!(gate.queued(), 2, "shed request must not occupy a queue slot");
+        assert_eq!(gate.kv_reserved(), 80, "shed request must not leak reservation");
+        // Terminal outcome releases exactly what was reserved.
+        gate.dequeued();
+        gate.release_kv(reserved);
+        assert_eq!(gate.kv_reserved(), 40);
+        assert_eq!(gate.try_enqueue(&small), Ok(40));
+    }
+
+    #[test]
+    fn gate_kv_need_clamps_like_the_engine() {
+        let gate = AdmissionGate::new(0, 1 << 30, 10, 4);
+        // Prompt truncates to max_prompt=4; max_new clamps to MAX_NEW_CAP;
+        // empty prompts floor at one row.
+        let long = Request::generate(1, vec![0; 100], u16::MAX);
+        assert_eq!(gate.kv_need(&long), (4 + MAX_NEW_CAP as usize) * 10);
+        let empty = Request::generate(2, vec![], 0);
+        assert_eq!(gate.kv_need(&empty), (1 + 1) * 10);
+    }
+
+    #[test]
+    fn gate_is_race_free_under_concurrent_admission() {
+        use std::sync::Arc;
+        // 8 threads hammer a gate with room for exactly 16 queue slots and
+        // 16 single-token reservations; the accepted total must match the
+        // limits exactly (no overshoot, no lost slots).
+        let gate = Arc::new(AdmissionGate::new(16, 16 * 2, 1, 4));
+        let r = Request::generate(9, vec![1], 1);
+        let accepted: usize = (0..8)
+            .map(|_| {
+                let gate = Arc::clone(&gate);
+                let r = r.clone();
+                std::thread::spawn(move || {
+                    (0..64).filter(|_| gate.try_enqueue(&r).is_ok()).count()
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .sum();
+        assert_eq!(accepted, 16, "exactly the queue capacity admits");
+        assert_eq!(gate.queued(), 16);
+        assert_eq!(gate.kv_reserved(), 16 * 2);
     }
 
     #[test]

@@ -1,0 +1,304 @@
+//! Deterministic fault injection for the serving tier — the chaos
+//! harness behind the soak test and `benches/serving_soak.rs`.
+//!
+//! A [`FaultPlan`] is a pure function of `(seed, worker, step)`: every
+//! decode/batch worker consults it once per step ([`FaultPlan::trip`]),
+//! and the plan decides — via an FNV-1a roll against per-mille rates —
+//! whether that step panics (exercising the supervisor's
+//! `catch_unwind`/restart path), stalls (exercising deadlines and
+//! backpressure), or proceeds. Client-side faults
+//! ([`FaultPlan::client_decide`]) drive the same determinism for garbage
+//! frames, dropped connections and oversized payloads from chaos load
+//! generators. Nothing here samples real entropy or wall-clock time, so
+//! a chaos run replays bit-identically from its seed — the soak test's
+//! "surviving sequences are token-identical to a fault-free run"
+//! assertion depends on it.
+//!
+//! Injected panics carry the [`InjectedFault`] marker payload;
+//! [`quiet_injected_panics`] installs a panic hook that keeps them out
+//! of test/bench output while leaving genuine panics loud.
+
+use std::panic;
+use std::sync::Once;
+use std::time::Duration;
+
+/// Panic payload marking a fault-plan-injected worker panic. Supervisors
+/// treat it like any other panic (restart + drain); the panic *hook*
+/// uses it to tell deliberate chaos from real bugs.
+#[derive(Debug, Clone, Copy)]
+pub struct InjectedFault {
+    pub worker: usize,
+    pub step: u64,
+}
+
+/// Injection rates and triggers. All rates are per-mille (0..=1000) so a
+/// plan spec stays integer-only and exactly reproducible.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultConfig {
+    /// Per-mille chance a worker step panics.
+    pub panic_per_mille: u16,
+    /// Per-mille chance a worker step stalls for `stall_ms`.
+    pub stall_per_mille: u16,
+    /// Stall duration for slow-decode injection.
+    pub stall_ms: u64,
+    /// Guaranteed panic on exactly this global worker step (first worker
+    /// to reach it) — the recovery-time measurement hook.
+    pub panic_at_step: Option<u64>,
+    /// Per-mille chance a chaos client sends a garbage (unparseable)
+    /// frame instead of its request.
+    pub garbage_per_mille: u16,
+    /// Per-mille chance a chaos client drops its connection mid-request.
+    pub disconnect_per_mille: u16,
+}
+
+/// What a worker step should do.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    Panic,
+    Stall(Duration),
+}
+
+/// What a chaos client should do instead of sending its request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClientFault {
+    /// Send bytes that cannot parse as a request frame.
+    Garbage,
+    /// Close the connection without sending.
+    Disconnect,
+}
+
+/// Seeded, deterministic fault schedule (see module docs).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultPlan {
+    seed: u64,
+    pub cfg: FaultConfig,
+}
+
+/// FNV-1a over the three words — the crate's standard cheap deterministic
+/// mixer (shared with the retry-jitter computation in
+/// [`crate::server::service::RetryPolicy`]).
+pub fn mix64(seed: u64, a: u64, b: u64) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for w in [seed, a, b] {
+        for byte in w.to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+impl FaultPlan {
+    /// Panics if the panic+stall rates exceed 1000‰ (they partition one
+    /// roll).
+    pub fn new(seed: u64, cfg: FaultConfig) -> FaultPlan {
+        assert!(
+            cfg.panic_per_mille + cfg.stall_per_mille <= 1000,
+            "panic ({}) + stall ({}) rates exceed 1000 per mille",
+            cfg.panic_per_mille,
+            cfg.stall_per_mille
+        );
+        assert!(
+            cfg.garbage_per_mille + cfg.disconnect_per_mille <= 1000,
+            "garbage ({}) + disconnect ({}) rates exceed 1000 per mille",
+            cfg.garbage_per_mille,
+            cfg.disconnect_per_mille
+        );
+        FaultPlan { seed, cfg }
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// The fault (if any) for `worker`'s step number `step`. Pure.
+    pub fn decide(&self, worker: usize, step: u64) -> Option<Fault> {
+        if self.cfg.panic_at_step == Some(step) {
+            return Some(Fault::Panic);
+        }
+        let roll = (mix64(self.seed, worker as u64, step) % 1000) as u16;
+        if roll < self.cfg.panic_per_mille {
+            Some(Fault::Panic)
+        } else if roll < self.cfg.panic_per_mille + self.cfg.stall_per_mille {
+            Some(Fault::Stall(Duration::from_millis(self.cfg.stall_ms)))
+        } else {
+            None
+        }
+    }
+
+    /// Act on [`FaultPlan::decide`]: sleep for a stall, `panic_any` an
+    /// [`InjectedFault`] for a panic (callers run under the supervisor's
+    /// `catch_unwind`, which restarts the worker and drains its
+    /// in-flight sequences to `Crashed` responses).
+    pub fn trip(&self, worker: usize, step: u64) {
+        match self.decide(worker, step) {
+            Some(Fault::Panic) => panic::panic_any(InjectedFault { worker, step }),
+            Some(Fault::Stall(d)) => std::thread::sleep(d),
+            None => {}
+        }
+    }
+
+    /// The client-side fault (if any) for request number `req` on chaos
+    /// connection `conn`. A distinct domain constant keeps client rolls
+    /// uncorrelated with worker rolls under the same seed.
+    pub fn client_decide(&self, conn: u64, req: u64) -> Option<ClientFault> {
+        let roll = (mix64(self.seed ^ 0xC11E57, conn, req) % 1000) as u16;
+        if roll < self.cfg.garbage_per_mille {
+            Some(ClientFault::Garbage)
+        } else if roll < self.cfg.garbage_per_mille + self.cfg.disconnect_per_mille {
+            Some(ClientFault::Disconnect)
+        } else {
+            None
+        }
+    }
+
+    /// Parse a CLI `--faults` spec: comma-separated `key=value` pairs
+    /// with keys `seed`, `panic`, `stall`, `stall-ms`, `panic-at`,
+    /// `garbage`, `disconnect` (rates in per-mille). Example:
+    /// `seed=7,panic=5,stall=20,stall-ms=3`.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut seed = 0u64;
+        let mut cfg = FaultConfig::default();
+        for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| format!("fault spec item {part:?} is not key=value"))?;
+            let parse_u16 = |v: &str| -> Result<u16, String> {
+                let n: u16 = v.parse().map_err(|e| format!("{key}={v}: {e}"))?;
+                if n > 1000 {
+                    return Err(format!("{key}={v}: rates are per-mille (0..=1000)"));
+                }
+                Ok(n)
+            };
+            match key.trim() {
+                "seed" => seed = value.parse().map_err(|e| format!("seed={value}: {e}"))?,
+                "panic" => cfg.panic_per_mille = parse_u16(value.trim())?,
+                "stall" => cfg.stall_per_mille = parse_u16(value.trim())?,
+                "stall-ms" => {
+                    cfg.stall_ms = value.parse().map_err(|e| format!("stall-ms={value}: {e}"))?
+                }
+                "panic-at" => {
+                    cfg.panic_at_step =
+                        Some(value.parse().map_err(|e| format!("panic-at={value}: {e}"))?)
+                }
+                "garbage" => cfg.garbage_per_mille = parse_u16(value.trim())?,
+                "disconnect" => cfg.disconnect_per_mille = parse_u16(value.trim())?,
+                other => return Err(format!("unknown fault spec key {other:?}")),
+            }
+        }
+        if cfg.panic_per_mille + cfg.stall_per_mille > 1000 {
+            return Err("panic + stall rates exceed 1000 per mille".into());
+        }
+        if cfg.garbage_per_mille + cfg.disconnect_per_mille > 1000 {
+            return Err("garbage + disconnect rates exceed 1000 per mille".into());
+        }
+        Ok(FaultPlan::new(seed, cfg))
+    }
+}
+
+/// Install (once, process-wide) a panic hook that suppresses the default
+/// backtrace spew for [`InjectedFault`] panics — chaos tests inject
+/// hundreds of them by design — while delegating every other panic to
+/// the previous hook unchanged.
+pub fn quiet_injected_panics() {
+    static INSTALL: Once = Once::new();
+    INSTALL.call_once(|| {
+        let previous = panic::take_hook();
+        panic::set_hook(Box::new(move |info| {
+            if info.payload().is::<InjectedFault>() {
+                return; // deliberate chaos: the supervisor accounts for it
+            }
+            previous(info);
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plans_are_deterministic_and_seed_sensitive() {
+        let cfg = FaultConfig {
+            panic_per_mille: 50,
+            stall_per_mille: 100,
+            stall_ms: 2,
+            ..Default::default()
+        };
+        let a = FaultPlan::new(7, cfg);
+        let b = FaultPlan::new(7, cfg);
+        let c = FaultPlan::new(8, cfg);
+        let schedule =
+            |p: &FaultPlan| (0..200).map(|s| p.decide(1, s)).collect::<Vec<Option<Fault>>>();
+        assert_eq!(schedule(&a), schedule(&b), "same seed → same schedule");
+        assert_ne!(schedule(&a), schedule(&c), "different seed → different schedule");
+        // Rates roughly realize over a long horizon (rolls are per-mille).
+        let n = 10_000u64;
+        let panics = (0..n).filter(|&s| a.decide(0, s) == Some(Fault::Panic)).count();
+        assert!((300..700).contains(&panics), "~50/1000 of {n}: got {panics}");
+    }
+
+    #[test]
+    fn panic_at_step_fires_exactly_there() {
+        let cfg = FaultConfig { panic_at_step: Some(17), ..Default::default() };
+        let plan = FaultPlan::new(0, cfg);
+        assert_eq!(plan.decide(3, 17), Some(Fault::Panic));
+        assert_eq!(plan.decide(3, 16), None);
+        assert_eq!(plan.decide(3, 18), None);
+    }
+
+    #[test]
+    fn zero_rate_plan_never_fires() {
+        let plan = FaultPlan::new(99, FaultConfig::default());
+        for w in 0..4 {
+            for s in 0..500 {
+                assert_eq!(plan.decide(w, s), None);
+                assert_eq!(plan.client_decide(w as u64, s), None);
+                plan.trip(w, s); // must be a no-op, not a panic
+            }
+        }
+    }
+
+    #[test]
+    fn client_rolls_are_uncorrelated_with_worker_rolls() {
+        // Same rates on both sides: if the domains collided, every worker
+        // panic step would also be a client garbage step.
+        let cfg = FaultConfig {
+            panic_per_mille: 100,
+            garbage_per_mille: 100,
+            ..Default::default()
+        };
+        let plan = FaultPlan::new(21, cfg);
+        let worker: Vec<bool> = (0..2000).map(|s| plan.decide(0, s).is_some()).collect();
+        let client: Vec<bool> = (0..2000).map(|s| plan.client_decide(0, s).is_some()).collect();
+        assert_ne!(worker, client);
+    }
+
+    #[test]
+    fn spec_parser_roundtrips_and_rejects_garbage() {
+        let plan = FaultPlan::parse("seed=7,panic=5,stall=20,stall-ms=3,panic-at=100").unwrap();
+        assert_eq!(plan.seed(), 7);
+        assert_eq!(plan.cfg.panic_per_mille, 5);
+        assert_eq!(plan.cfg.stall_per_mille, 20);
+        assert_eq!(plan.cfg.stall_ms, 3);
+        assert_eq!(plan.cfg.panic_at_step, Some(100));
+        let client = FaultPlan::parse("garbage=10,disconnect=20").unwrap();
+        assert_eq!(client.cfg.garbage_per_mille, 10);
+        assert_eq!(client.cfg.disconnect_per_mille, 20);
+        assert_eq!(FaultPlan::parse("").unwrap(), FaultPlan::new(0, FaultConfig::default()));
+        assert!(FaultPlan::parse("panic").is_err(), "not key=value");
+        assert!(FaultPlan::parse("panic=1001").is_err(), "rate above 1000");
+        assert!(FaultPlan::parse("panic=600,stall=600").is_err(), "rates must partition a roll");
+        assert!(FaultPlan::parse("wat=1").is_err(), "unknown key");
+        assert!(FaultPlan::parse("seed=x").is_err(), "unparseable value");
+    }
+
+    #[test]
+    fn injected_panics_are_catchable_and_typed() {
+        quiet_injected_panics();
+        let plan = FaultPlan::new(0, FaultConfig { panic_at_step: Some(0), ..Default::default() });
+        let err = std::panic::catch_unwind(|| plan.trip(2, 0)).unwrap_err();
+        let fault = err.downcast_ref::<InjectedFault>().expect("typed payload");
+        assert_eq!((fault.worker, fault.step), (2, 0));
+    }
+}

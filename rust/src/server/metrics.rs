@@ -1,7 +1,14 @@
 //! Serving metrics: lock-light latency histogram + throughput counters,
 //! tagged with the engine's quantization configuration so every
 //! `BENCH_decode`/serving row is attributable to a format.
+//!
+//! The resilience counters (requests shed, deadlines expired, worker
+//! restarts, client retries observed) make overload and failure behavior
+//! a *measured* property: the chaos soak test asserts on them, and
+//! `summary()` surfaces them next to the latency percentiles.
 
+use super::protocol::Status;
+use crate::util::lock_recover;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
@@ -24,6 +31,22 @@ pub struct Metrics {
     pub responses: AtomicU64,
     pub batches: AtomicU64,
     pub batched_requests: AtomicU64,
+    /// Requests shed at admission because the bounded queue was full.
+    pub shed_queue_full: AtomicU64,
+    /// Requests shed at admission because the KV-byte budget was spent.
+    pub shed_kv_budget: AtomicU64,
+    /// Requests rejected by protocol validation (`max_new == 0`, prompt
+    /// beyond the model context, …).
+    pub rejected_invalid: AtomicU64,
+    /// Requests whose deadline passed before their stream completed
+    /// (counted wherever enforcement caught them: queue or mid-decode).
+    pub deadlines_expired: AtomicU64,
+    /// Times a supervisor restarted a panicked worker (each restart also
+    /// drained that worker's in-flight sequences to `Crashed` frames).
+    pub worker_restarts: AtomicU64,
+    /// Client-side retries reported back by in-process retrying clients
+    /// (benches/tests); zero when only external clients are used.
+    pub retries_observed: AtomicU64,
     /// buckets[i] counts latencies in [2^i, 2^(i+1)) µs.
     buckets: [AtomicU64; 25],
     total_us: AtomicU64,
@@ -42,7 +65,7 @@ impl Metrics {
     /// `Metrics` handle overwrites the previous run's tag instead of
     /// reporting a stale format/KV/weight-bytes combination.
     pub fn set_format_tag(&self, format: &str, kv: &str, weight_wire_bytes: u64) {
-        *self.format_tag.lock().unwrap() = Some(FormatTag {
+        *lock_recover(&self.format_tag) = Some(FormatTag {
             format: format.to_string(),
             kv: kv.to_string(),
             weight_wire_bytes,
@@ -51,11 +74,46 @@ impl Metrics {
 
     /// The active engine's quantization tag, if one is bound.
     pub fn format_tag(&self) -> Option<FormatTag> {
-        self.format_tag.lock().unwrap().clone()
+        lock_recover(&self.format_tag).clone()
     }
 
     pub fn record_request(&self) {
         self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request shed at admission with the given (shed-class) status.
+    pub fn record_shed(&self, status: Status) {
+        match status {
+            Status::ShedQueueFull => self.shed_queue_full.fetch_add(1, Ordering::Relaxed),
+            Status::ShedKvBudget => self.shed_kv_budget.fetch_add(1, Ordering::Relaxed),
+            // Not a shed class; counted so a miswired call site still
+            // shows up in the summary rather than vanishing.
+            _ => self.rejected_invalid.fetch_add(1, Ordering::Relaxed),
+        };
+    }
+
+    pub fn record_invalid(&self) {
+        self.rejected_invalid.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_expired(&self) {
+        self.deadlines_expired.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_worker_restart(&self) {
+        self.worker_restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Fold in retries a client performed for one logical request.
+    pub fn record_retries(&self, n: u64) {
+        if n > 0 {
+            self.retries_observed.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Total requests shed at admission (both shed classes).
+    pub fn shed_total(&self) -> u64 {
+        self.shed_queue_full.load(Ordering::Relaxed) + self.shed_kv_budget.load(Ordering::Relaxed)
     }
 
     pub fn record_batch(&self, size: usize) {
@@ -112,7 +170,9 @@ impl Metrics {
             None => String::new(),
         };
         format!(
-            "{}requests={} responses={} batches={} mean_batch={:.2} lat(mean={:.0}us p50<{}us p99<{}us)",
+            "{}requests={} responses={} batches={} mean_batch={:.2} \
+             lat(mean={:.0}us p50<{}us p99<{}us) \
+             shed(queue={} kv={}) invalid={} expired={} restarts={} retries={}",
             tag,
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
@@ -121,6 +181,12 @@ impl Metrics {
             self.mean_us(),
             self.percentile_us(0.5),
             self.percentile_us(0.99),
+            self.shed_queue_full.load(Ordering::Relaxed),
+            self.shed_kv_budget.load(Ordering::Relaxed),
+            self.rejected_invalid.load(Ordering::Relaxed),
+            self.deadlines_expired.load(Ordering::Relaxed),
+            self.worker_restarts.load(Ordering::Relaxed),
+            self.retries_observed.load(Ordering::Relaxed),
         )
     }
 }
@@ -157,6 +223,43 @@ mod tests {
         assert_eq!(m.mean_us(), 0.0);
         assert!(m.format_tag().is_none());
         assert!(!m.summary().contains("format="));
+        assert_eq!(m.shed_total(), 0);
+    }
+
+    #[test]
+    fn resilience_counters_surface_in_summary() {
+        let m = Metrics::new();
+        m.record_shed(Status::ShedQueueFull);
+        m.record_shed(Status::ShedQueueFull);
+        m.record_shed(Status::ShedKvBudget);
+        m.record_invalid();
+        m.record_expired();
+        m.record_worker_restart();
+        m.record_retries(0); // no-op
+        m.record_retries(3);
+        assert_eq!(m.shed_total(), 3);
+        let s = m.summary();
+        assert!(s.contains("shed(queue=2 kv=1)"), "{s}");
+        assert!(s.contains("invalid=1"), "{s}");
+        assert!(s.contains("expired=1"), "{s}");
+        assert!(s.contains("restarts=1"), "{s}");
+        assert!(s.contains("retries=3"), "{s}");
+    }
+
+    #[test]
+    fn tail_percentile_p999_reads_the_slowest_bucket() {
+        let m = Metrics::new();
+        // 1000 fast responses and 10 slow outliers: p50/p99 stay in the
+        // fast bucket, p999 must land on (the bucket of) the outliers.
+        for _ in 0..1000 {
+            m.record_latency(Duration::from_micros(100));
+        }
+        for _ in 0..10 {
+            m.record_latency(Duration::from_millis(100));
+        }
+        assert_eq!(m.percentile_us(0.5), 128);
+        assert_eq!(m.percentile_us(0.99), 128);
+        assert!(m.percentile_us(0.999) >= 1 << 17, "p999 sees the outlier");
     }
 
     #[test]

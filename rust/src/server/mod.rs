@@ -18,14 +18,26 @@
 //! ```
 //!
 //! [`protocol`] defines the length-prefixed binary frames (requests carry
-//! `max_new`, responses stream `index`/`of`-tagged tokens), [`batcher`]
-//! the drain policy plus the continuous-batching slot map, [`service`]
-//! the listener/scheduler/worker assembly plus a blocking
-//! [`service::Client`], and [`metrics`] the lock-light
-//! counters/histograms the `serve` subcommand and the serving benches
-//! report.
+//! `max_new` and a `deadline_ms` TTL, responses stream `index`/`of`-tagged
+//! tokens with a terminal [`protocol::Status`]), [`batcher`] the drain
+//! policy, the continuous-batching slot map and the bounded
+//! [`batcher::AdmissionGate`], [`service`] the listener/scheduler/worker
+//! assembly plus a blocking [`service::Client`] (with capped-backoff
+//! retry), [`metrics`] the lock-light counters/histograms the `serve`
+//! subcommand and the serving benches report, and [`faults`] the seeded
+//! deterministic fault-injection harness the chaos soak test and
+//! `benches/serving_soak.rs` drive.
+//!
+//! **Resilience model** (DESIGN.md §13): requests are validated and
+//! admitted through a queue-depth + KV-byte gate (overload sheds with
+//! structured rejections instead of blocking or OOMing), carry deadlines
+//! enforced at admission, in the queue, and between decode steps, and
+//! run under supervised workers — a panicking worker is restarted, its
+//! in-flight sequences drained to `Crashed` responses, its locks
+//! recovered rather than left poisoned.
 
 pub mod batcher;
+pub mod faults;
 pub mod metrics;
 pub mod protocol;
 pub mod service;

@@ -4,9 +4,10 @@
 //!
 //! Frame layout (little-endian):
 //! ```text
-//! request : u32 len | u64 id | u16 max_new | u16 n_tokens | n_tokens × u32
+//! request : u32 len | u64 id | u16 max_new | u16 n_tokens
+//!           | u32 deadline_ms | n_tokens × u32
 //! response: u32 len | u64 id | u32 token | f32 logprob | u32 latency_us
-//!           | u16 index | u16 of
+//!           | u16 index | u16 of | u8 status
 //! ```
 //!
 //! A request asks for `max_new` greedy continuation tokens; the
@@ -17,6 +18,16 @@
 //! [`MAX_NEW_CAP`]); the PJRT batch path always answers a single frame
 //! (`of = 1`). Responses to different requests pipelined on one
 //! connection may interleave — group by `id`.
+//!
+//! **Resilience extensions.** `deadline_ms` is a per-request TTL (0 = no
+//! deadline beyond the server default); `status` reports how the stream
+//! ended ([`Status`]): `Ok` token frames, or a single terminal error
+//! frame when the request was shed at admission ([`Status::ShedQueueFull`]
+//! / [`Status::ShedKvBudget`]), rejected as invalid, expired past its
+//! deadline, or lost to a worker crash. A non-`Ok` frame always
+//! terminates its stream. Both extensions are backward compatible: the
+//! reader accepts the pre-deadline request body (12 + 4n bytes) and the
+//! pre-status response body (24 bytes).
 
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
@@ -24,6 +35,61 @@ use std::io::{Read, Write};
 /// Hard server-side cap on tokens generated per request, bounding KV-cache
 /// growth for a single stream.
 pub const MAX_NEW_CAP: u16 = 1024;
+
+/// How a response stream ended (the last frame's `status` byte).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[repr(u8)]
+pub enum Status {
+    /// A generated-token frame (streams of these end at `index+1 == of`).
+    #[default]
+    Ok = 0,
+    /// Shed at admission: the bounded request queue was full.
+    ShedQueueFull = 1,
+    /// Shed at admission: the request's worst-case KV bytes exceeded the
+    /// remaining KV budget.
+    ShedKvBudget = 2,
+    /// Rejected by validation (`max_new == 0`, prompt beyond the model
+    /// context, …) — retrying the identical request cannot succeed.
+    Invalid = 3,
+    /// The request's deadline passed before the stream completed; the
+    /// frame's `index` tells how many tokens were streamed first.
+    Expired = 4,
+    /// A worker crashed (or its engine failed) while this request was in
+    /// flight; the sequence was drained, its slot and pages freed.
+    Crashed = 5,
+}
+
+impl Status {
+    pub fn from_u8(b: u8) -> Result<Status> {
+        Ok(match b {
+            0 => Status::Ok,
+            1 => Status::ShedQueueFull,
+            2 => Status::ShedKvBudget,
+            3 => Status::Invalid,
+            4 => Status::Expired,
+            5 => Status::Crashed,
+            other => bail!("unknown response status byte {other}"),
+        })
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Status::Ok => "ok",
+            Status::ShedQueueFull => "shed-queue-full",
+            Status::ShedKvBudget => "shed-kv-budget",
+            Status::Invalid => "invalid",
+            Status::Expired => "expired",
+            Status::Crashed => "crashed",
+        }
+    }
+
+    /// Whether a client retry can succeed. Shed and crash outcomes are
+    /// transient (load drains, workers restart); `Invalid` and `Expired`
+    /// are definitive for the request as sent.
+    pub fn retryable(self) -> bool {
+        matches!(self, Status::ShedQueueFull | Status::ShedKvBudget | Status::Crashed)
+    }
+}
 
 /// A generation request: score the context, then stream `max_new` greedy
 /// continuation tokens.
@@ -33,6 +99,11 @@ pub struct Request {
     pub tokens: Vec<usize>,
     /// Greedy tokens to generate (engines clamp to `[1, MAX_NEW_CAP]`).
     pub max_new: u16,
+    /// Per-request TTL in milliseconds from server-side arrival; 0 means
+    /// "no request-specific deadline" (the server default, if any,
+    /// applies). Enforced at admission, in the queue, and between decode
+    /// steps — an expired stream ends with a [`Status::Expired`] frame.
+    pub deadline_ms: u32,
 }
 
 /// One streamed token: the greedy next token + its log-probability +
@@ -47,27 +118,52 @@ pub struct Response {
     pub index: u16,
     /// Total frames this request's stream will carry.
     pub of: u16,
+    /// [`Status::Ok`] for token frames; any other value terminates the
+    /// stream (shed/invalid/expired/crashed).
+    pub status: Status,
 }
 
 impl Request {
     /// Single next-token request (`max_new = 1`) — the classic scoring
     /// call every pre-decode client and the PJRT path use.
     pub fn next_token(id: u64, tokens: Vec<usize>) -> Request {
-        Request { id, tokens, max_new: 1 }
+        Request { id, tokens, max_new: 1, deadline_ms: 0 }
     }
 
     /// Multi-token generation request.
     pub fn generate(id: u64, tokens: Vec<usize>, max_new: u16) -> Request {
-        Request { id, tokens, max_new }
+        Request { id, tokens, max_new, deadline_ms: 0 }
+    }
+
+    /// `self` with a per-request TTL attached.
+    pub fn with_deadline_ms(mut self, deadline_ms: u32) -> Request {
+        self.deadline_ms = deadline_ms;
+        self
+    }
+
+    /// Admission-time semantic validation (the frame itself already
+    /// parsed). Rejects requests the engine could only fail on:
+    /// `max_new == 0` (an empty stream can never terminate the protocol's
+    /// `index+1 == of` contract) and prompts longer than the model
+    /// context (`max_prompt`), which would silently truncate.
+    pub fn validate(&self, max_prompt: usize) -> std::result::Result<(), Status> {
+        if self.max_new == 0 {
+            return Err(Status::Invalid);
+        }
+        if self.tokens.len() > max_prompt {
+            return Err(Status::Invalid);
+        }
+        Ok(())
     }
 
     pub fn encode(&self) -> Vec<u8> {
-        let body_len = 8 + 2 + 2 + 4 * self.tokens.len();
+        let body_len = 8 + 2 + 2 + 4 + 4 * self.tokens.len();
         let mut buf = Vec::with_capacity(4 + body_len);
         buf.extend_from_slice(&(body_len as u32).to_le_bytes());
         buf.extend_from_slice(&self.id.to_le_bytes());
         buf.extend_from_slice(&self.max_new.to_le_bytes());
         buf.extend_from_slice(&(self.tokens.len() as u16).to_le_bytes());
+        buf.extend_from_slice(&self.deadline_ms.to_le_bytes());
         for t in &self.tokens {
             buf.extend_from_slice(&(*t as u32).to_le_bytes());
         }
@@ -86,27 +182,51 @@ impl Request {
         let id = u64::from_le_bytes(body[0..8].try_into()?);
         let max_new = u16::from_le_bytes(body[8..10].try_into()?);
         let n = u16::from_le_bytes(body[10..12].try_into()?) as usize;
-        if body.len() != 12 + 4 * n {
+        // Two accepted layouts: the pre-deadline body (12 + 4n) and the
+        // current one carrying deadline_ms (16 + 4n). Anything else is a
+        // framing error.
+        let (deadline_ms, tok_off) = if body.len() == 16 + 4 * n {
+            (u32::from_le_bytes(body[12..16].try_into()?), 16)
+        } else if body.len() == 12 + 4 * n {
+            (0, 12)
+        } else {
             bail!("request frame length mismatch");
-        }
-        let tokens = body[12..]
+        };
+        let tokens = body[tok_off..]
             .chunks_exact(4)
             .map(|c| u32::from_le_bytes(c.try_into().unwrap()) as usize)
             .collect();
-        Ok(Request { id, tokens, max_new })
+        Ok(Request { id, tokens, max_new, deadline_ms })
     }
 }
 
 impl Response {
+    /// A terminal error frame: no token, `index` = tokens streamed before
+    /// the failure, `of = index + 1` so [`Response::is_last`] holds for
+    /// stream-agnostic readers too.
+    pub fn error(id: u64, status: Status, index: u16) -> Response {
+        debug_assert!(status != Status::Ok, "error frames carry a non-Ok status");
+        Response {
+            id,
+            token: 0,
+            logprob: 0.0,
+            latency_us: 0,
+            index,
+            of: index.saturating_add(1),
+            status,
+        }
+    }
+
     pub fn encode(&self) -> Vec<u8> {
-        let mut buf = Vec::with_capacity(4 + 24);
-        buf.extend_from_slice(&24u32.to_le_bytes());
+        let mut buf = Vec::with_capacity(4 + 25);
+        buf.extend_from_slice(&25u32.to_le_bytes());
         buf.extend_from_slice(&self.id.to_le_bytes());
         buf.extend_from_slice(&self.token.to_le_bytes());
         buf.extend_from_slice(&self.logprob.to_le_bytes());
         buf.extend_from_slice(&self.latency_us.to_le_bytes());
         buf.extend_from_slice(&self.index.to_le_bytes());
         buf.extend_from_slice(&self.of.to_le_bytes());
+        buf.push(self.status as u8);
         buf
     }
 
@@ -114,11 +234,13 @@ impl Response {
         let mut len4 = [0u8; 4];
         r.read_exact(&mut len4).context("read frame length")?;
         let len = u32::from_le_bytes(len4) as usize;
-        if len != 24 {
+        // 24: pre-status body (implicitly Ok). 25: current body.
+        if len != 24 && len != 25 {
             bail!("bad response frame length {len}");
         }
-        let mut body = [0u8; 24];
+        let mut body = vec![0u8; len];
         r.read_exact(&mut body)?;
+        let status = if len == 25 { Status::from_u8(body[24])? } else { Status::Ok };
         Ok(Response {
             id: u64::from_le_bytes(body[0..8].try_into()?),
             token: u32::from_le_bytes(body[8..12].try_into()?),
@@ -126,12 +248,14 @@ impl Response {
             latency_us: u32::from_le_bytes(body[16..20].try_into()?),
             index: u16::from_le_bytes(body[20..22].try_into()?),
             of: u16::from_le_bytes(body[22..24].try_into()?),
+            status,
         })
     }
 
-    /// Whether this frame completes its stream.
+    /// Whether this frame completes its stream: the final token frame, or
+    /// any terminal error frame.
     pub fn is_last(&self) -> bool {
-        self.index + 1 >= self.of
+        self.status != Status::Ok || self.index + 1 >= self.of
     }
 
     pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
@@ -147,7 +271,7 @@ mod tests {
 
     #[test]
     fn request_roundtrip() {
-        let req = Request { id: 42, tokens: vec![1, 2, 300, 7], max_new: 16 };
+        let req = Request { id: 42, tokens: vec![1, 2, 300, 7], max_new: 16, deadline_ms: 250 };
         let bytes = req.encode();
         let got = Request::read_from(&mut Cursor::new(bytes)).unwrap();
         assert_eq!(got, req);
@@ -157,19 +281,110 @@ mod tests {
     fn next_token_constructor_asks_for_one() {
         let req = Request::next_token(9, vec![1, 2]);
         assert_eq!(req.max_new, 1);
+        assert_eq!(req.deadline_ms, 0);
         let got = Request::read_from(&mut Cursor::new(req.encode())).unwrap();
         assert_eq!(got, req);
     }
 
     #[test]
+    fn legacy_request_body_without_deadline_parses() {
+        // The pre-deadline layout: u64 id | u16 max_new | u16 n | n × u32.
+        let mut body = Vec::new();
+        body.extend_from_slice(&7u64.to_le_bytes());
+        body.extend_from_slice(&3u16.to_le_bytes());
+        body.extend_from_slice(&2u16.to_le_bytes());
+        body.extend_from_slice(&11u32.to_le_bytes());
+        body.extend_from_slice(&12u32.to_le_bytes());
+        let mut frame = (body.len() as u32).to_le_bytes().to_vec();
+        frame.extend_from_slice(&body);
+        let got = Request::read_from(&mut Cursor::new(frame)).unwrap();
+        assert_eq!(got, Request { id: 7, tokens: vec![11, 12], max_new: 3, deadline_ms: 0 });
+    }
+
+    #[test]
     fn response_roundtrip() {
-        let resp = Response { id: 7, token: 123, logprob: -1.5, latency_us: 987, index: 2, of: 4 };
+        let resp = Response {
+            id: 7,
+            token: 123,
+            logprob: -1.5,
+            latency_us: 987,
+            index: 2,
+            of: 4,
+            status: Status::Ok,
+        };
         let bytes = resp.encode();
         let got = Response::read_from(&mut Cursor::new(bytes)).unwrap();
         assert_eq!(got, resp);
         assert!(!got.is_last());
         let last = Response { index: 3, ..resp };
         assert!(last.is_last());
+    }
+
+    #[test]
+    fn legacy_response_body_without_status_parses_as_ok() {
+        let resp = Response {
+            id: 9,
+            token: 4,
+            logprob: -0.25,
+            latency_us: 10,
+            index: 0,
+            of: 1,
+            status: Status::Ok,
+        };
+        // Strip the status byte and rewrite the length prefix to 24.
+        let mut bytes = resp.encode();
+        bytes.truncate(4 + 24);
+        bytes[0..4].copy_from_slice(&24u32.to_le_bytes());
+        let got = Response::read_from(&mut Cursor::new(bytes)).unwrap();
+        assert_eq!(got, resp);
+    }
+
+    #[test]
+    fn error_frames_terminate_their_stream() {
+        let terminal = [
+            Status::ShedQueueFull,
+            Status::ShedKvBudget,
+            Status::Invalid,
+            Status::Expired,
+            Status::Crashed,
+        ];
+        for status in terminal {
+            let e = Response::error(3, status, 2);
+            assert!(e.is_last(), "{status:?} must be terminal");
+            assert_eq!(e.index, 2, "tokens-streamed-so-far survives");
+            let got = Response::read_from(&mut Cursor::new(e.encode())).unwrap();
+            assert_eq!(got, e, "{status:?} roundtrip");
+            assert_eq!(got.status.label(), status.label());
+        }
+        // Even at index 0 of a longer advertised stream, a non-Ok status
+        // terminates: is_last consults status before index/of.
+        let mid = Response { of: 10, ..Response::error(1, Status::Expired, 0) };
+        assert!(mid.is_last());
+    }
+
+    #[test]
+    fn status_retryability_split() {
+        assert!(Status::ShedQueueFull.retryable());
+        assert!(Status::ShedKvBudget.retryable());
+        assert!(Status::Crashed.retryable());
+        assert!(!Status::Ok.retryable());
+        assert!(!Status::Invalid.retryable());
+        assert!(!Status::Expired.retryable());
+        assert!(Status::from_u8(99).is_err());
+        for s in [Status::Ok, Status::ShedKvBudget, Status::Crashed] {
+            assert_eq!(Status::from_u8(s as u8).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn validation_rejects_unservable_requests() {
+        let ok = Request::generate(1, vec![1, 2, 3], 4);
+        assert!(ok.validate(8).is_ok());
+        let zero = Request { max_new: 0, ..ok.clone() };
+        assert_eq!(zero.validate(8), Err(Status::Invalid));
+        let long = Request::generate(2, vec![0; 9], 1);
+        assert_eq!(long.validate(8), Err(Status::Invalid));
+        assert!(long.validate(9).is_ok());
     }
 
     #[test]
@@ -181,7 +396,7 @@ mod tests {
 
     #[test]
     fn empty_token_request_roundtrip() {
-        let req = Request { id: 0, tokens: vec![], max_new: 1 };
+        let req = Request { id: 0, tokens: vec![], max_new: 1, deadline_ms: 0 };
         let got = Request::read_from(&mut Cursor::new(req.encode())).unwrap();
         assert_eq!(got.tokens.len(), 0);
     }

@@ -28,24 +28,71 @@
 //!   `QuantizedMatrix` API), and the KV cache itself can hold quantized
 //!   planes (`NativeServerConfig::kv`) — quantized serving end to end
 //!   with no XLA runtime required.
+//!
+//! **Resilience layer** ([`ResilienceConfig`], DESIGN.md §13). Both
+//! engines share the same failure model:
+//!
+//! * *Validation*: inbound requests are checked at the listener
+//!   ([`Request::validate`]) — `max_new == 0` or an over-context prompt
+//!   answers a terminal [`Status::Invalid`] frame instead of reaching an
+//!   engine.
+//! * *Bounded admission*: an [`AdmissionGate`] caps queue depth and (on
+//!   the native path) reserved KV bytes; overload sheds with a
+//!   structured [`Status::ShedQueueFull`] / [`Status::ShedKvBudget`]
+//!   frame instead of blocking or OOMing.
+//! * *Deadlines*: each request's TTL (its own `deadline_ms`, else the
+//!   server default) is enforced at queue pickup and between decode
+//!   steps; expired work answers [`Status::Expired`] (carrying how many
+//!   tokens were streamed), frees its slot and recycles its KV page.
+//! * *Panic isolation*: worker bodies run under `catch_unwind`; a panic
+//!   (injected or genuine) drains that worker's in-flight sequences to
+//!   [`Status::Crashed`] frames, releases their reservations, and
+//!   restarts the loop with a clean slot map — the server never
+//!   deadlocks or aborts. Locks shared with a panicking thread are
+//!   recovered ([`lock_recover`]), not unwrapped.
+//! * *Client retry*: [`Client::generate_retrying`] retries retryable
+//!   outcomes (shed/crashed/connection loss) with capped exponential
+//!   backoff and deterministic jitter ([`RetryPolicy`]).
 
-use super::batcher::{run_batcher, BatchPolicy, ContinuousScheduler, Pending};
+use super::batcher::{run_batcher, AdmissionGate, BatchPolicy, ContinuousScheduler, Pending};
+use super::faults::{mix64, FaultPlan};
 use super::metrics::Metrics;
-use super::protocol::{Request, Response, MAX_NEW_CAP};
+use super::protocol::{Request, Response, Status, MAX_NEW_CAP};
 use crate::model::kv::{KvCache, KvCacheType};
 use crate::model::transformer::{greedy_from_row, Transformer};
 use crate::runtime::artifact::{Manifest, ParamStore};
 use crate::runtime::client::{literal_f32, tokens_literal, Executable, Runtime};
 use crate::runtime::native::{DecodeEngine, DecodeStream};
+use crate::util::lock_recover;
 use anyhow::{Context, Result};
 use std::io::Write;
 use std::net::{TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// Overload/failure knobs shared by both engines. The default is fully
+/// permissive (no deadline, unbounded admission, no fault injection) —
+/// exactly the pre-resilience behavior.
+#[derive(Debug, Clone, Default)]
+pub struct ResilienceConfig {
+    /// Default per-request TTL applied when a request's own `deadline_ms`
+    /// is 0; `None` = requests without a TTL never expire.
+    pub request_timeout: Option<Duration>,
+    /// Max requests between admission and worker pickup; 0 = unbounded.
+    /// Beyond it, requests shed with [`Status::ShedQueueFull`].
+    pub max_queue: usize,
+    /// Budget for worst-case KV bytes reserved by admitted-but-unfinished
+    /// requests (native engine only); 0 = unbounded. Beyond it, requests
+    /// shed with [`Status::ShedKvBudget`].
+    pub kv_budget_bytes: usize,
+    /// Deterministic fault injection (chaos tests/benches; `--faults`).
+    pub faults: Option<Arc<FaultPlan>>,
+}
 
 /// PJRT server configuration.
 pub struct ServerConfig {
@@ -56,6 +103,9 @@ pub struct ServerConfig {
     /// and pulls batches from the shared queue when free. 0 is treated
     /// as 1.
     pub workers: usize,
+    /// Deadlines/backpressure/fault-injection knobs (`kv_budget_bytes`
+    /// is inert here — the PJRT path holds no KV cache).
+    pub resilience: ResilienceConfig,
 }
 
 /// Native-engine server configuration.
@@ -66,11 +116,14 @@ pub struct NativeServerConfig {
     pub policy: BatchPolicy,
     /// Decode loops sharing one `Arc<Transformer>`. 0 is treated as 1.
     pub workers: usize,
-    /// Max *prompt* tokens per request (requests truncate to this).
+    /// Max *prompt* tokens per request (longer prompts are rejected at
+    /// validation with [`Status::Invalid`]).
     pub seq: usize,
     /// KV-cache storage backend for every stream (`--kv-cache` /
     /// `HIF4_KV_CACHE`).
     pub kv: KvCacheType,
+    /// Deadlines/backpressure/fault-injection knobs.
+    pub resilience: ResilienceConfig,
 }
 
 type ReplyHandle = Arc<Mutex<TcpStream>>;
@@ -112,10 +165,31 @@ struct ActiveSeq {
     of: u16,
 }
 
+/// Everything the listener needs to admit (or refuse) a request before
+/// it touches the queue: the gate, the validation context, and the
+/// default TTL.
+struct ListenerCtx {
+    gate: Arc<AdmissionGate>,
+    max_prompt: usize,
+    default_timeout: Option<Duration>,
+}
+
+impl ListenerCtx {
+    /// Resolve a request's absolute deadline from its own TTL (beats the
+    /// server default) or the server default.
+    fn deadline_for(&self, req: &Request, arrived: Instant) -> Option<Instant> {
+        match req.deadline_ms {
+            0 => self.default_timeout.map(|t| arrived + t),
+            ms => Some(arrived + Duration::from_millis(ms as u64)),
+        }
+    }
+}
+
 /// A running server (listener + batcher + worker-pool threads).
 pub struct Server {
     pub addr: std::net::SocketAddr,
     pub metrics: Arc<Metrics>,
+    gate: Arc<AdmissionGate>,
     stop: Arc<AtomicBool>,
     listener_thread: Option<JoinHandle<()>>,
     batcher_thread: Option<JoinHandle<()>>,
@@ -157,7 +231,11 @@ impl Server {
         let format = crate::formats::QuantKind::from_artifact_name(&cfg.artifact)
             .map(|k| k.spelling())
             .unwrap_or("bf16");
-        let server = start_engine(policy, cfg.workers.max(1), addr, factory)?;
+        // No KV cache on this path: the gate only bounds queue depth
+        // (kv_per_token = 0 makes every reservation zero bytes).
+        let gate = Arc::new(AdmissionGate::new(cfg.resilience.max_queue, 0, 0, manifest.seq));
+        let server =
+            start_engine(policy, cfg.workers.max(1), addr, factory, gate, &cfg.resilience, seq)?;
         // "f32": the PJRT path has no quantized cache, and the tag stays
         // inside the f32/QuantKind-spelling vocabulary every consumer of
         // the kv axis parses.
@@ -189,6 +267,12 @@ impl Server {
         let metrics = Arc::new(Metrics::new());
         metrics.set_format_tag(weight_format, cfg.kv.label(), weight_wire);
         let stop = Arc::new(AtomicBool::new(false));
+        let gate = Arc::new(AdmissionGate::new(
+            cfg.resilience.max_queue,
+            cfg.resilience.kv_budget_bytes,
+            engine.kv_bytes_per_token(),
+            engine.max_prompt(),
+        ));
         let (tx, rx) = channel::<Pending<ReplyHandle>>();
         let rx = Arc::new(Mutex::new(rx));
         let max_slots = cfg.policy.max_batch.max(1);
@@ -198,9 +282,13 @@ impl Server {
             let wrx = Arc::clone(&rx);
             let wengine = Arc::clone(&engine);
             let wmetrics = Arc::clone(&metrics);
+            let wgate = Arc::clone(&gate);
+            let wfaults = cfg.resilience.faults.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("hif4-decode-{wi}"))
-                .spawn(move || decode_worker_loop(wengine, wrx, max_slots, wmetrics))
+                .spawn(move || {
+                    decode_worker_supervised(wengine, wrx, max_slots, wmetrics, wgate, wfaults, wi)
+                })
                 .context("spawn decode worker")?;
             worker_threads.push(handle);
         }
@@ -208,18 +296,30 @@ impl Server {
         let local = listener.local_addr()?;
         let listen_metrics = Arc::clone(&metrics);
         let listen_stop = Arc::clone(&stop);
+        let ctx = Arc::new(ListenerCtx {
+            gate: Arc::clone(&gate),
+            max_prompt: engine.max_prompt(),
+            default_timeout: cfg.resilience.request_timeout,
+        });
         let listener_thread = std::thread::Builder::new()
             .name("hif4-listener".into())
-            .spawn(move || listener_loop(listener, tx, listen_metrics, listen_stop))
+            .spawn(move || listener_loop(listener, tx, listen_metrics, listen_stop, ctx))
             .context("spawn listener")?;
         Ok(Server {
             addr: local,
             metrics,
+            gate,
             stop,
             listener_thread: Some(listener_thread),
             batcher_thread: None,
             worker_threads,
         })
+    }
+
+    /// The admission gate (tests/benches observe queue depth and
+    /// outstanding KV reservations through it).
+    pub fn admission(&self) -> &AdmissionGate {
+        &self.gate
     }
 
     /// Signal shutdown (threads exit on their next poll/disconnect).
@@ -238,6 +338,9 @@ fn start_engine(
     n_workers: usize,
     addr: &str,
     factory: EngineFactory,
+    gate: Arc<AdmissionGate>,
+    resilience: &ResilienceConfig,
+    max_prompt: usize,
 ) -> Result<Server> {
     let metrics = Arc::new(Metrics::new());
     let stop = Arc::new(AtomicBool::new(false));
@@ -257,6 +360,8 @@ fn start_engine(
         let ready_tx = ready_tx.clone();
         let worker_metrics = Arc::clone(&metrics);
         let worker_factory = Arc::clone(&factory);
+        let worker_gate = Arc::clone(&gate);
+        let worker_faults = resilience.faults.clone();
         let handle = std::thread::Builder::new()
             .name(format!("hif4-worker-{wi}"))
             .spawn(move || {
@@ -270,7 +375,7 @@ fn start_engine(
                     }
                     Ok(engine) => {
                         let _ = ready_tx.send(Ok(()));
-                        worker_loop(engine, wrx, worker_metrics);
+                        worker_loop(engine, wrx, worker_metrics, worker_gate, worker_faults, wi);
                     }
                 }
             })
@@ -300,14 +405,20 @@ fn start_engine(
     let local = listener.local_addr()?;
     let listen_metrics = Arc::clone(&metrics);
     let listen_stop = Arc::clone(&stop);
+    let ctx = Arc::new(ListenerCtx {
+        gate: Arc::clone(&gate),
+        max_prompt,
+        default_timeout: resilience.request_timeout,
+    });
     let listener_thread = std::thread::Builder::new()
         .name("hif4-listener".into())
-        .spawn(move || listener_loop(listener, tx, listen_metrics, listen_stop))
+        .spawn(move || listener_loop(listener, tx, listen_metrics, listen_stop, ctx))
         .context("spawn listener")?;
 
     Ok(Server {
         addr: local,
         metrics,
+        gate,
         stop,
         listener_thread: Some(listener_thread),
         batcher_thread: Some(batcher_thread),
@@ -332,11 +443,29 @@ impl Drop for Server {
     }
 }
 
+/// Write one frame to a (shared) reply stream, recovering the lock if a
+/// panicking thread poisoned it. A vanished client makes the write fail —
+/// that is a silent drop by design: the frame has nowhere to go, and
+/// per-frame logging under chaos (dropped-connection injection) would
+/// drown real diagnostics.
+fn send_frame(reply: &ReplyHandle, resp: &Response) {
+    let mut stream = lock_recover(reply);
+    if resp.write_to(&mut *stream).is_ok() {
+        let _ = stream.flush();
+    }
+}
+
+/// Terminal error frame for a request that never produced tokens.
+fn send_error(reply: &ReplyHandle, id: u64, status: Status) {
+    send_frame(reply, &Response::error(id, status, 0));
+}
+
 fn listener_loop(
     listener: TcpListener,
     tx: Sender<Pending<ReplyHandle>>,
     metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
+    ctx: Arc<ListenerCtx>,
 ) {
     for stream in listener.incoming() {
         if stop.load(Ordering::SeqCst) {
@@ -345,16 +474,48 @@ fn listener_loop(
         let Ok(stream) = stream else { continue };
         let tx = tx.clone();
         let metrics = Arc::clone(&metrics);
+        let ctx = Arc::clone(&ctx);
         let _ = std::thread::Builder::new().name("hif4-conn".into()).spawn(move || {
-            let reader = stream.try_clone().expect("clone stream");
+            let reader = match stream.try_clone() {
+                Ok(r) => r,
+                Err(e) => {
+                    // Connection-scoped failure: drop this client, keep
+                    // the server up.
+                    eprintln!("serve: cannot clone connection stream: {e}");
+                    return;
+                }
+            };
             let reply: ReplyHandle = Arc::new(Mutex::new(stream));
             let mut reader = std::io::BufReader::new(reader);
-            // Read frames until the client hangs up.
+            // Read frames until the client hangs up (or sends a frame the
+            // protocol cannot resync after — framing is length-prefixed,
+            // so a malformed/oversized frame ends the connection; the
+            // *semantic* failures below answer structured errors and keep
+            // the connection).
             while let Ok(req) = Request::read_from(&mut reader) {
                 metrics.record_request();
-                let pending =
-                    Pending { request: req, arrived: Instant::now(), reply: Arc::clone(&reply) };
+                let arrived = Instant::now();
+                if req.validate(ctx.max_prompt).is_err() {
+                    metrics.record_invalid();
+                    send_error(&reply, req.id, Status::Invalid);
+                    continue;
+                }
+                let kv_reserved = match ctx.gate.try_enqueue(&req) {
+                    Ok(bytes) => bytes,
+                    Err(shed) => {
+                        metrics.record_shed(shed.status());
+                        send_error(&reply, req.id, shed.status());
+                        continue;
+                    }
+                };
+                let deadline = ctx.deadline_for(&req, arrived);
+                let reply = Arc::clone(&reply);
+                let pending = Pending { request: req, arrived, deadline, kv_reserved, reply };
                 if tx.send(pending).is_err() {
+                    // Server shutting down: the request never reached a
+                    // worker, so roll its admission back here.
+                    ctx.gate.dequeued();
+                    ctx.gate.release_kv(kv_reserved);
                     break;
                 }
             }
@@ -362,41 +523,144 @@ fn listener_loop(
     }
 }
 
+/// Answer every request of a failed batch with a terminal `Crashed`
+/// frame and release its admission reservation.
+fn fail_batch(pending: &[Pending<ReplyHandle>], gate: &AdmissionGate) {
+    for p in pending {
+        gate.release_kv(p.kv_reserved);
+        send_error(&p.reply, p.request.id, Status::Crashed);
+    }
+}
+
 /// Worker lifecycle is purely channel-driven (exit when the batch queue
 /// closes): the batcher may be blocked in a rendezvous `send`, so a worker
 /// must never stop pulling before the channel closes or shutdown could
-/// deadlock.
+/// deadlock. Each batch executes under `catch_unwind`: a panicking engine
+/// (or an injected fault) fails that batch to `Crashed` responses and the
+/// worker keeps serving — the supervisor loop is this function itself.
 fn worker_loop(
     mut engine: Box<dyn BatchEngine>,
     rx: Arc<Mutex<Receiver<Vec<Pending<ReplyHandle>>>>>,
     metrics: Arc<Metrics>,
+    gate: Arc<AdmissionGate>,
+    faults: Option<Arc<FaultPlan>>,
+    worker: usize,
 ) {
+    let mut step: u64 = 0;
     loop {
         // Lock only for the pull: whichever worker is free takes the next
         // batch (same pattern as util::threadpool::ThreadPool).
-        let next = { rx.lock().unwrap().recv() };
-        let Ok(pending) = next else { break };
-        match engine.run(&pending) {
-            Ok(responses) => {
+        let next = { lock_recover(&rx).recv() };
+        let Ok(batch) = next else { break };
+        for _ in 0..batch.len() {
+            gate.dequeued();
+        }
+        // Deadline check at pickup: expired requests answer Expired
+        // without spending a forward pass.
+        let now = Instant::now();
+        let mut pending = Vec::with_capacity(batch.len());
+        for p in batch {
+            if p.expired(now) {
+                metrics.record_expired();
+                gate.release_kv(p.kv_reserved);
+                send_error(&p.reply, p.request.id, Status::Expired);
+            } else {
+                pending.push(p);
+            }
+        }
+        if pending.is_empty() {
+            continue;
+        }
+        let this_step = step;
+        step += 1;
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            if let Some(f) = &faults {
+                f.trip(worker, this_step);
+            }
+            engine.run(&pending)
+        }));
+        match result {
+            Ok(Ok(responses)) => {
                 for (p, mut resp) in pending.iter().zip(responses) {
                     resp.latency_us = p.arrived.elapsed().as_micros() as u32;
                     metrics.record_latency(p.arrived.elapsed());
-                    if let Ok(mut s) = p.reply.lock() {
-                        let _ = resp.write_to(&mut *s);
-                        let _ = s.flush();
-                    }
+                    gate.release_kv(p.kv_reserved);
+                    send_frame(&p.reply, &resp);
                 }
             }
-            Err(e) => {
+            Ok(Err(e)) => {
+                // Engine-reported failure: fail fast for the affected
+                // clients with structured Crashed frames (they can retry)
+                // and keep the worker alive for the next batch.
                 eprintln!("batch execution failed: {e:#}");
-                // Fail fast for the affected clients: close their
-                // connections instead of leaving them blocked in recv()
-                // waiting for replies that will never come.
-                for p in &pending {
-                    if let Ok(s) = p.reply.lock() {
-                        let _ = s.shutdown(std::net::Shutdown::Both);
+                fail_batch(&pending, &gate);
+            }
+            Err(_panic) => {
+                // Panic isolation: the batch is poisoned, the worker is
+                // not. Account the restart, drain the batch to Crashed,
+                // keep pulling.
+                metrics.record_worker_restart();
+                fail_batch(&pending, &gate);
+            }
+        }
+    }
+}
+
+/// Supervisor for one native decode worker: runs [`decode_worker_loop`]
+/// under `catch_unwind` and, when a decode step panics (injected fault or
+/// genuine bug), drains every in-flight sequence in this worker's slot
+/// map to a terminal [`Status::Crashed`] frame — releasing its admission
+/// reservation, dropping its (possibly mid-append) KV page — and restarts
+/// the loop with a clean slot map. The step counter survives restarts so
+/// a seeded fault plan's schedule (`panic_at_step`, per-step rolls) is a
+/// single deterministic timeline per worker.
+fn decode_worker_supervised(
+    engine: Arc<DecodeEngine>,
+    rx: Arc<Mutex<Receiver<Pending<ReplyHandle>>>>,
+    max_slots: usize,
+    metrics: Arc<Metrics>,
+    gate: Arc<AdmissionGate>,
+    faults: Option<Arc<FaultPlan>>,
+    worker: usize,
+) {
+    let mut sched: ContinuousScheduler<ActiveSeq> = ContinuousScheduler::new(max_slots);
+    let mut spare_pages: Vec<KvCache> = Vec::new();
+    let mut step: u64 = 0;
+    let mut closed = false;
+    loop {
+        let run = catch_unwind(AssertUnwindSafe(|| {
+            decode_worker_loop(
+                &engine,
+                &rx,
+                &mut sched,
+                &mut spare_pages,
+                &metrics,
+                &gate,
+                faults.as_deref(),
+                worker,
+                &mut step,
+                &mut closed,
+            )
+        }));
+        match run {
+            Ok(()) => return, // clean shutdown: queue closed, streams done
+            Err(_panic) => {
+                metrics.record_worker_restart();
+                for slot in 0..max_slots {
+                    if let Some(a) = sched.release(slot) {
+                        gate.release_kv(a.pending.kv_reserved);
+                        send_frame(
+                            &a.pending.reply,
+                            &Response::error(a.pending.request.id, Status::Crashed, a.emitted),
+                        );
+                        // The page may have been mid-append when the step
+                        // panicked: drop it rather than recycle a
+                        // potentially inconsistent allocation.
                     }
                 }
+                // Pages parked *before* the panic are between-steps
+                // consistent, but a restart starts maximally clean.
+                spare_pages.clear();
             }
         }
     }
@@ -407,21 +671,33 @@ fn worker_loop(
 /// ```text
 /// loop {
 ///   admit  — idle: block for a request; busy: drain the queue
-///            (non-blocking) into free slots
+///            (non-blocking) into free slots (expired requests answer
+///            Expired instead of taking a slot)
+///   sweep  — evict slots whose deadline passed (Expired frame carrying
+///            tokens-streamed-so-far; page recycled, reservation freed)
+///   fault  — consult the fault plan (chaos: maybe stall or panic)
 ///   step   — one greedy token for every active slot (fresh slots
 ///            prefill, in-flight slots decode) via DecodeEngine::step
 ///   emit   — stream each token to its client immediately
-///   evict  — release completed slots (drops the KV-cache page)
+///   evict  — release completed slots (page recycled, reservation freed)
 /// }
 /// ```
 ///
 /// Exits when the request queue closes *and* every in-flight stream has
-/// completed, so shutdown never truncates a response stream.
+/// completed, so shutdown never truncates a response stream. Panics
+/// unwind into [`decode_worker_supervised`], which drains and restarts.
+#[allow(clippy::too_many_arguments)]
 fn decode_worker_loop(
-    engine: Arc<DecodeEngine>,
-    rx: Arc<Mutex<Receiver<Pending<ReplyHandle>>>>,
-    max_slots: usize,
-    metrics: Arc<Metrics>,
+    engine: &DecodeEngine,
+    rx: &Mutex<Receiver<Pending<ReplyHandle>>>,
+    sched: &mut ContinuousScheduler<ActiveSeq>,
+    spare_pages: &mut Vec<KvCache>,
+    metrics: &Metrics,
+    gate: &AdmissionGate,
+    faults: Option<&FaultPlan>,
+    worker: usize,
+    step: &mut u64,
+    closed: &mut bool,
 ) {
     // Bound on how long an idle worker holds the shared receiver lock: a
     // plain blocking `recv()` would park *inside* the lock and starve the
@@ -430,37 +706,61 @@ fn decode_worker_loop(
     // for sequential clients). Between timeouts the lock is released, so
     // busy workers get through once per step.
     const IDLE_POLL: Duration = Duration::from_millis(1);
-    let mut sched: ContinuousScheduler<ActiveSeq> = ContinuousScheduler::new(max_slots);
-    // Recycled KV-cache pages from evicted sequences: the next admission
-    // reuses the allocation instead of growing a fresh one (bounded by
-    // the slot count, so parked capacity never exceeds one full batch).
-    // Page reuse is behavior-neutral — decode is bit-identical on a
-    // recycled page (`runtime::native` unit tests) — and the cache's
-    // byte accounting reports stored rows, not the parked capacity.
-    let mut spare_pages: Vec<KvCache> = Vec::new();
-    let mut closed = false;
+    let max_slots = sched.capacity();
     loop {
         if sched.is_empty() {
-            if closed {
+            if *closed {
                 return;
             }
             // Idle: poll for work with a bounded wait (see IDLE_POLL).
-            let next = { rx.lock().unwrap().recv_timeout(IDLE_POLL) };
+            let next = { lock_recover(rx).recv_timeout(IDLE_POLL) };
             match next {
-                Ok(p) => admit_seq(&engine, &mut sched, p, &mut spare_pages),
+                Ok(p) => admit_or_expire(engine, sched, p, spare_pages, metrics, gate),
                 Err(RecvTimeoutError::Timeout) => continue,
                 Err(RecvTimeoutError::Disconnected) => return,
             }
         }
         // In flight: top the slot map up without blocking — admission
         // latency is at most one decode step.
-        while !closed && sched.has_free() {
-            let next = { rx.lock().unwrap().try_recv() };
+        while !*closed && sched.has_free() {
+            let next = { lock_recover(rx).try_recv() };
             match next {
-                Ok(p) => admit_seq(&engine, &mut sched, p, &mut spare_pages),
+                Ok(p) => admit_or_expire(engine, sched, p, spare_pages, metrics, gate),
                 Err(TryRecvError::Empty) => break,
-                Err(TryRecvError::Disconnected) => closed = true,
+                Err(TryRecvError::Disconnected) => *closed = true,
             }
+        }
+        // Deadline sweep: evict expired streams *before* spending a
+        // decode step on them. Between steps the page is consistent, so
+        // it recycles like a completed stream's.
+        let now = Instant::now();
+        let expired: Vec<usize> = sched
+            .iter_active_mut()
+            .filter(|(_, a)| a.pending.expired(now))
+            .map(|(id, _)| id)
+            .collect();
+        for id in expired {
+            if let Some(a) = sched.release(id) {
+                metrics.record_expired();
+                gate.release_kv(a.pending.kv_reserved);
+                send_frame(
+                    &a.pending.reply,
+                    &Response::error(a.pending.request.id, Status::Expired, a.emitted),
+                );
+                if spare_pages.len() < max_slots {
+                    spare_pages.push(a.stream.into_cache());
+                }
+            }
+        }
+        if sched.is_empty() {
+            continue;
+        }
+        // Fault-injection hook (None in production): a chaos plan may
+        // stall this step (slow-decode) or panic it (→ supervisor).
+        let this_step = *step;
+        *step += 1;
+        if let Some(f) = faults {
+            f.trip(worker, this_step);
         }
         // One decode step over every active slot, in slot order.
         let mut ids: Vec<usize> = Vec::new();
@@ -475,7 +775,13 @@ fn decode_worker_loop(
         metrics.record_batch(ids.len());
         for (id, (token, logprob)) in ids.into_iter().zip(outs) {
             let done = {
-                let a = sched.get_mut(id).expect("stepped slot is active");
+                let Some(a) = sched.get_mut(id) else {
+                    // Unreachable by construction (ids came from the
+                    // active set and nothing released since); skip rather
+                    // than panic if it ever regresses.
+                    debug_assert!(false, "stepped slot {id} is no longer active");
+                    continue;
+                };
                 a.emitted += 1;
                 let resp = Response {
                     id: a.pending.request.id,
@@ -484,18 +790,17 @@ fn decode_worker_loop(
                     latency_us: a.pending.arrived.elapsed().as_micros() as u32,
                     index: a.emitted - 1,
                     of: a.of,
+                    status: Status::Ok,
                 };
                 // Stream immediately; a vanished client just means the
                 // remaining (bounded) tokens go nowhere.
-                if let Ok(mut s) = a.pending.reply.lock() {
-                    let _ = resp.write_to(&mut *s);
-                    let _ = s.flush();
-                }
+                send_frame(&a.pending.reply, &resp);
                 a.emitted >= a.of
             };
             if done {
                 if let Some(a) = sched.release(id) {
                     metrics.record_latency(a.pending.arrived.elapsed());
+                    gate.release_kv(a.pending.kv_reserved);
                     if spare_pages.len() < max_slots {
                         spare_pages.push(a.stream.into_cache());
                     }
@@ -503,6 +808,27 @@ fn decode_worker_loop(
             }
         }
     }
+}
+
+/// Queue pickup on the native path: account the dequeue, answer Expired
+/// for requests whose deadline passed while queued, otherwise open a
+/// decode stream in a free slot.
+fn admit_or_expire(
+    engine: &DecodeEngine,
+    sched: &mut ContinuousScheduler<ActiveSeq>,
+    p: Pending<ReplyHandle>,
+    spare_pages: &mut Vec<KvCache>,
+    metrics: &Metrics,
+    gate: &AdmissionGate,
+) {
+    gate.dequeued();
+    if p.expired(Instant::now()) {
+        metrics.record_expired();
+        gate.release_kv(p.kv_reserved);
+        send_error(&p.reply, p.request.id, Status::Expired);
+        return;
+    }
+    admit_seq(engine, sched, p, spare_pages);
 }
 
 /// Open a decode stream for a request — reusing a recycled cache page
@@ -546,7 +872,16 @@ pub fn run_batch(
     inputs.extend(param_literals.iter());
     inputs.push(&tokens);
     let outputs = exe.run(&inputs)?;
-    let logits = literal_f32(&outputs[0])?; // (batch, seq, vocab)
+    let first = outputs.first().context("executable returned no outputs")?;
+    let logits = literal_f32(first)?; // (batch, seq, vocab)
+    anyhow::ensure!(
+        logits.len() >= batch * seq * vocab,
+        "logits output carries {} values, need {}x{}x{}",
+        logits.len(),
+        batch,
+        seq,
+        vocab
+    );
     let mut responses = Vec::with_capacity(pending.len());
     for (bi, p) in pending.iter().enumerate() {
         let last = p.request.tokens.len().clamp(1, seq) - 1;
@@ -561,7 +896,15 @@ pub fn run_batch(
 /// engine ([`greedy_from_row`]).
 fn response_from_logits(id: u64, row: &[f32]) -> Response {
     let (token, logprob) = greedy_from_row(row);
-    Response { id, token: token as u32, logprob, latency_us: 0, index: 0, of: 1 }
+    Response {
+        id,
+        token: token as u32,
+        logprob,
+        latency_us: 0,
+        index: 0,
+        of: 1,
+        status: Status::Ok,
+    }
 }
 
 /// Execute one batch on the rust-native model. No padding is needed —
@@ -598,8 +941,44 @@ pub fn run_batch_native(
     responses
 }
 
+/// Retry policy for [`Client::generate_retrying`]: capped exponential
+/// backoff with deterministic jitter. Attempt `k` (0-based) sleeps
+/// `min(base · 2^k, cap)` scaled by a jitter factor in `[0.5, 1.0)`
+/// derived from `(seed, k)` — seeded, so chaos runs replay identically
+/// while distinct clients (distinct seeds) still decorrelate.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Retries after the first attempt (0 = single shot).
+    pub max_retries: u32,
+    pub base: Duration,
+    pub cap: Duration,
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 4,
+            base: Duration::from_millis(20),
+            cap: Duration::from_millis(500),
+            seed: 0x5eed,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The backoff before retry number `attempt` (0-based).
+    pub fn backoff(&self, attempt: u32) -> Duration {
+        let exp = self.base.saturating_mul(1u32 << attempt.min(16));
+        let capped = exp.min(self.cap);
+        let jitter = 0.5 + (mix64(self.seed, attempt as u64, 0) % 1000) as f64 / 2000.0;
+        capped.mul_f64(jitter)
+    }
+}
+
 /// Blocking client for examples/benches: send requests, read responses.
 pub struct Client {
+    addr: std::net::SocketAddr,
     stream: TcpStream,
     reader: std::io::BufReader<TcpStream>,
 }
@@ -609,7 +988,14 @@ impl Client {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
         let reader = std::io::BufReader::new(stream.try_clone()?);
-        Ok(Client { stream, reader })
+        Ok(Client { addr, stream, reader })
+    }
+
+    /// Drop the current connection and dial the server again (used by the
+    /// retry loop after connection-level failures).
+    pub fn reconnect(&mut self) -> Result<()> {
+        *self = Client::connect(self.addr)?;
+        Ok(())
     }
 
     /// Fire a request without waiting (pipelining).
@@ -629,10 +1015,10 @@ impl Client {
         self.recv()
     }
 
-    /// Read one full response stream (frames until `index + 1 == of`).
-    /// Assumes a single outstanding request on this connection — streams
-    /// of pipelined requests interleave and must be grouped by `id`
-    /// instead.
+    /// Read one full response stream (frames until [`Response::is_last`]:
+    /// the final token frame or any terminal error frame). Assumes a
+    /// single outstanding request on this connection — streams of
+    /// pipelined requests interleave and must be grouped by `id` instead.
     pub fn recv_stream(&mut self) -> Result<Vec<Response>> {
         let mut out = Vec::new();
         loop {
@@ -650,5 +1036,75 @@ impl Client {
     pub fn generate(&mut self, req: &Request) -> Result<Vec<Response>> {
         self.send(req)?;
         self.recv_stream()
+    }
+
+    /// [`Client::generate`] with resilience: on a retryable terminal
+    /// status (shed/crashed) or a connection-level error, back off per
+    /// `policy` (reconnecting after I/O errors) and try again, up to
+    /// `policy.max_retries` times. Returns the final attempt's stream
+    /// plus the number of retries performed; non-retryable outcomes
+    /// (`Invalid`, `Expired`) and exhausted budgets return as-is. Decode
+    /// is deterministic, so a retried stream's tokens are identical to
+    /// what the failed attempt would have produced.
+    pub fn generate_retrying(
+        &mut self,
+        req: &Request,
+        policy: &RetryPolicy,
+    ) -> Result<(Vec<Response>, u32)> {
+        let mut retries = 0u32;
+        loop {
+            match self.generate(req) {
+                Ok(frames) => {
+                    let terminal =
+                        frames.last().map(|r| r.status).unwrap_or(Status::Crashed);
+                    if !terminal.retryable() || retries >= policy.max_retries {
+                        return Ok((frames, retries));
+                    }
+                }
+                Err(e) => {
+                    if retries >= policy.max_retries {
+                        return Err(e);
+                    }
+                    // The connection may be half-dead (server worker
+                    // crashed mid-frame): re-dial before retrying. If the
+                    // server itself is gone, surface that error.
+                    std::thread::sleep(policy.backoff(retries));
+                    retries += 1;
+                    self.reconnect()?;
+                    continue;
+                }
+            }
+            std::thread::sleep(policy.backoff(retries));
+            retries += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retry_backoff_is_capped_deterministic_and_jittered() {
+        let p = RetryPolicy {
+            max_retries: 8,
+            base: Duration::from_millis(10),
+            cap: Duration::from_millis(100),
+            seed: 42,
+        };
+        for k in 0..8 {
+            let d = p.backoff(k);
+            assert_eq!(d, p.backoff(k), "same (seed, attempt) → same backoff");
+            // Jitter keeps every sleep in [0.5, 1.0) × the capped
+            // exponential envelope.
+            let envelope = Duration::from_millis((10u64 << k).min(100));
+            assert!(d >= envelope.mul_f64(0.5), "attempt {k}: {d:?} under floor");
+            assert!(d < envelope, "attempt {k}: {d:?} over envelope {envelope:?}");
+        }
+        // Large attempt numbers must not overflow the shift.
+        let _ = p.backoff(u32::MAX);
+        // Different seeds decorrelate.
+        let q = RetryPolicy { seed: 43, ..p };
+        assert!((0..8).any(|k| p.backoff(k) != q.backoff(k)));
     }
 }

@@ -7,3 +7,36 @@ pub mod cli;
 pub mod json;
 pub mod proptest;
 pub mod threadpool;
+
+/// Acquire a mutex, *recovering* from poisoning instead of propagating
+/// it. A lock is poisoned when some thread panicked while holding it; for
+/// the serving tier that panic is already isolated and accounted for by
+/// the worker supervisor, and every value guarded by these locks (reply
+/// streams, metrics tags, shared receivers) remains valid mid-update — so
+/// the right response is to keep serving, not to cascade the panic into
+/// every thread that touches the same lock.
+pub fn lock_recover<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::lock_recover;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn lock_recover_survives_poison() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _guard = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.lock().is_err(), "lock must actually be poisoned");
+        assert_eq!(*lock_recover(&m), 7, "recovering lock still reads the value");
+        *lock_recover(&m) = 9;
+        assert_eq!(*lock_recover(&m), 9);
+    }
+}
+

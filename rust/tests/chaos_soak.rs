@@ -1,0 +1,288 @@
+//! Chaos soak: the serving tier under seeded fault injection. Workers
+//! panic and stall on a deterministic schedule, chaos clients send
+//! garbage frames and drop connections, invalid requests arrive mid-load
+//! — and the acceptance contract holds: workers restart (never the
+//! process), overload sheds with structured rejections, the server never
+//! deadlocks, and every sequence that survives is token-identical to a
+//! fault-free run (continuous-batching decode is bit-deterministic
+//! regardless of batch composition, so a retry after a crash replays the
+//! exact same tokens).
+
+use hif4::model::kv::KvCacheType;
+use hif4::model::transformer::Transformer;
+use hif4::runtime::artifact::Manifest;
+use hif4::runtime::native::transformer_from_store;
+use hif4::server::batcher::BatchPolicy;
+use hif4::server::faults::{quiet_injected_panics, ClientFault, FaultConfig, FaultPlan};
+use hif4::server::protocol::{Request, Status};
+use hif4::server::service::{Client, NativeServerConfig, ResilienceConfig, RetryPolicy, Server};
+use std::io::Write as _;
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Same 1-layer GQA+SwiGLU fixture as tests/native_serving.rs (d=32,
+/// 4 heads × 8, kv 2, vocab 96, seq 16).
+fn write_manifest(dir: &Path) {
+    std::fs::create_dir_all(dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.txt"),
+        "batch 4\nseq 16\nvocab 96\nn_heads 4\nkv_heads 2\nhead_dim 8\nrope_base 10000\n\
+         qdq 8 64\n\
+         param embed 96 32\nparam head 96 32\nparam norm_f 32\n\
+         param layer0.norm1 32\nparam layer0.norm2 32\n\
+         param layer0.wq 32 32\nparam layer0.wk 16 32\nparam layer0.wv 16 32\n\
+         param layer0.wo 32 32\n\
+         param layer0.w1 64 32\nparam layer0.w2 32 64\nparam layer0.w3 64 32\n",
+    )
+    .unwrap();
+}
+
+fn start_server(
+    tag: &str,
+    workers: usize,
+    max_batch: usize,
+    resilience: ResilienceConfig,
+) -> (Server, Arc<Transformer>) {
+    let dir: PathBuf = std::env::temp_dir().join(format!("hif4_chaos_soak_{tag}"));
+    write_manifest(&dir);
+    let manifest = Manifest::load(&dir).unwrap();
+    let store = manifest.init_params(31);
+    let model = Arc::new(transformer_from_store(&manifest, &store).unwrap());
+    let cfg = NativeServerConfig {
+        policy: BatchPolicy { max_batch, max_wait: Duration::from_millis(1) },
+        workers,
+        seq: manifest.seq,
+        kv: KvCacheType::F32,
+        resilience,
+    };
+    let server = Server::start_native(Arc::clone(&model), cfg, "127.0.0.1:0").unwrap();
+    (server, model)
+}
+
+fn prompts() -> Vec<Vec<usize>> {
+    (0..4).map(|s| (0..5).map(|i| 1 + (i * 13 + s * 31) % 90).collect()).collect()
+}
+
+#[test]
+fn soak_with_panics_stalls_and_bad_clients_keeps_serving_deterministically() {
+    quiet_injected_panics();
+    // Worker chaos: ~3% of steps panic, ~5% stall 1ms, plus a guaranteed
+    // panic when a worker reaches step 6 (so restarts happen on every
+    // run, not just statistically). Client chaos: ~15% garbage frames,
+    // ~10% dropped connections.
+    let faults = Arc::new(FaultPlan::new(
+        0xC0FFEE,
+        FaultConfig {
+            panic_per_mille: 30,
+            stall_per_mille: 50,
+            stall_ms: 1,
+            panic_at_step: Some(6),
+            garbage_per_mille: 150,
+            disconnect_per_mille: 100,
+        },
+    ));
+    let resilience = ResilienceConfig {
+        max_queue: 64,
+        kv_budget_bytes: 1 << 30,
+        faults: Some(Arc::clone(&faults)),
+        ..Default::default()
+    };
+    let (server, model) = start_server("soak", 2, 2, resilience);
+    let prompts = prompts();
+    let n_new = 4usize;
+    let reference: Vec<Vec<usize>> =
+        prompts.iter().map(|p| model.generate_greedy(p, n_new, KvCacheType::F32)).collect();
+
+    // 6 chaos clients × 5 requests each, retrying through shed/crash.
+    let (n_clients, per_client) = (6u64, 5u64);
+    let addr = server.addr;
+    let results: Vec<(usize, Vec<hif4::server::protocol::Response>, u32)> =
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..n_clients)
+                .map(|c| {
+                    let faults = Arc::clone(&faults);
+                    let prompts = &prompts;
+                    s.spawn(move || {
+                        let mut client = Client::connect(addr).unwrap();
+                        let policy = RetryPolicy {
+                            max_retries: 12,
+                            base: Duration::from_millis(2),
+                            cap: Duration::from_millis(40),
+                            seed: 0xC11E57 + c,
+                        };
+                        let mut out = Vec::new();
+                        for i in 0..per_client {
+                            // Client-side chaos on throwaway connections, so
+                            // this client's own stream stays readable.
+                            match faults.client_decide(c, i) {
+                                Some(ClientFault::Garbage) => {
+                                    if let Ok(mut raw) = TcpStream::connect(addr) {
+                                        // Length prefix far past the 1MB frame
+                                        // cap: unparseable by construction.
+                                        let _ = raw.write_all(&(8u32 << 20).to_le_bytes());
+                                        let _ = raw.write_all(b"chaos");
+                                    }
+                                }
+                                Some(ClientFault::Disconnect) => {
+                                    if let Ok(mut raw) = TcpStream::connect(addr) {
+                                        // Half a frame, then hang up.
+                                        let _ = raw.write_all(&[7u8, 0]);
+                                    }
+                                }
+                                None => {}
+                            }
+                            let pi = ((c + i) % prompts.len() as u64) as usize;
+                            let req = Request::generate(
+                                c * 100 + i,
+                                prompts[pi].clone(),
+                                n_new as u16,
+                            );
+                            let (frames, retries) =
+                                client.generate_retrying(&req, &policy).unwrap();
+                            out.push((pi, frames, retries));
+                        }
+                        out
+                    })
+                })
+                .collect();
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+        });
+
+    // Every request eventually completed, and every survivor's tokens are
+    // exactly the fault-free greedy continuation.
+    assert_eq!(results.len(), (n_clients * per_client) as usize);
+    let mut total_retries = 0u64;
+    for (pi, frames, retries) in &results {
+        total_retries += *retries as u64;
+        let last = frames.last().unwrap();
+        assert_eq!(
+            last.status,
+            Status::Ok,
+            "request on prompt {pi} must survive retries, ended {last:?}"
+        );
+        assert_eq!(frames.len(), n_new);
+        let got: Vec<usize> = frames.iter().map(|r| r.token as usize).collect();
+        assert_eq!(&got, &reference[*pi], "survivor tokens must match the fault-free run");
+    }
+    server.metrics.record_retries(total_retries);
+
+    // The guaranteed step-6 panic means at least one supervised restart.
+    let restarts = server.metrics.worker_restarts.load(Ordering::Relaxed);
+    assert!(restarts >= 1, "panic_at_step must have tripped a restart");
+    // Crashed attempts implied retries; shed may or may not have occurred
+    // at this queue depth, but nothing may leak.
+    assert_eq!(server.admission().kv_reserved(), 0, "terminal outcomes release reservations");
+    assert_eq!(server.admission().queued(), 0);
+    // The resilience counters surface in the operator summary.
+    let summary = server.metrics.summary();
+    assert!(summary.contains("restarts="), "{summary}");
+    assert!(summary.contains(&format!("retries={total_retries}")), "{summary}");
+
+    // And the server is still fully alive after the storm (the fault
+    // plan stays active, so the probe retries like any chaos client).
+    let mut probe = Client::connect(addr).unwrap();
+    let policy = RetryPolicy { max_retries: 12, seed: 77, ..Default::default() };
+    let (frames, _) = probe
+        .generate_retrying(&Request::generate(9999, prompts[0].clone(), 2), &policy)
+        .unwrap();
+    assert_eq!(frames.last().unwrap().status, Status::Ok);
+}
+
+#[test]
+fn queue_full_shed_is_structured_and_retries_eventually_complete() {
+    quiet_injected_panics();
+    // One worker, one slot, every step stalled 5ms, queue bounded at 1:
+    // with one request decoding and one queued, further arrivals shed
+    // with ShedQueueFull — and a retrying client gets through once the
+    // backlog drains.
+    let stall = FaultConfig { stall_per_mille: 1000, stall_ms: 5, ..Default::default() };
+    let resilience = ResilienceConfig {
+        max_queue: 1,
+        faults: Some(Arc::new(FaultPlan::new(11, stall))),
+        ..Default::default()
+    };
+    let (server, model) = start_server("queuefull", 1, 1, resilience);
+    let prompt = vec![2usize, 4, 8, 16];
+    let want = model.generate_greedy(&prompt, 10, KvCacheType::F32);
+
+    let mut c1 = Client::connect(server.addr).unwrap();
+    let mut c2 = Client::connect(server.addr).unwrap();
+    let mut c3 = Client::connect(server.addr).unwrap();
+    // c1 occupies the slot (10 tokens × ≥5ms/step), c2 occupies the one
+    // queue seat, c3 must shed.
+    c1.send(&Request::generate(1, prompt.clone(), 10)).unwrap();
+    std::thread::sleep(Duration::from_millis(25));
+    c2.send(&Request::generate(2, prompt.clone(), 10)).unwrap();
+    std::thread::sleep(Duration::from_millis(5));
+    let shed = c3.generate(&Request::generate(3, prompt.clone(), 10)).unwrap();
+    assert_eq!(shed.len(), 1, "shed answers one terminal frame");
+    assert_eq!(shed[0].status, Status::ShedQueueFull);
+    assert!(shed[0].status.retryable());
+
+    // The retrying client eventually lands and decodes identically.
+    let policy = RetryPolicy {
+        max_retries: 30,
+        base: Duration::from_millis(5),
+        cap: Duration::from_millis(40),
+        seed: 3,
+    };
+    let (frames, retries) = c3
+        .generate_retrying(&Request::generate(4, prompt.clone(), 10), &policy)
+        .unwrap();
+    assert_eq!(frames.last().unwrap().status, Status::Ok, "after {retries} retries");
+    let got: Vec<usize> = frames.iter().map(|r| r.token as usize).collect();
+    assert_eq!(got, want, "post-shed retry matches the unloaded run");
+
+    // The earlier admissions complete untouched by the shedding.
+    for c in [&mut c1, &mut c2] {
+        let frames = c.recv_stream().unwrap();
+        assert_eq!(frames.last().unwrap().status, Status::Ok);
+        let got: Vec<usize> = frames.iter().map(|r| r.token as usize).collect();
+        assert_eq!(got, want);
+    }
+
+    let ord = Ordering::Relaxed;
+    assert!(server.metrics.shed_queue_full.load(ord) >= 1);
+    assert!(server.metrics.summary().contains("shed(queue="), "{}", server.metrics.summary());
+    assert_eq!(server.admission().queued(), 0);
+}
+
+#[test]
+fn malformed_and_oversized_requests_get_structured_errors_and_never_kill_the_server() {
+    let (server, model) = start_server("malformed", 1, 2, ResilienceConfig::default());
+    let prompt = vec![1usize, 3, 5];
+    let want = model.generate_greedy(&prompt, 2, KvCacheType::F32);
+
+    // Semantic failures answer Invalid and keep the connection usable.
+    let mut client = Client::connect(server.addr).unwrap();
+    let r = client.call(&Request::generate(1, prompt.clone(), 0)).unwrap();
+    assert_eq!(r.status, Status::Invalid, "max_new == 0 must be rejected");
+    assert!(!r.status.retryable(), "Invalid is the client's bug, not load");
+    let r = client.call(&Request::generate(2, vec![1; 17], 2)).unwrap();
+    assert_eq!(r.status, Status::Invalid, "over-context prompt (17 > seq 16) must be rejected");
+    let frames = client.generate(&Request::generate(3, prompt.clone(), 2)).unwrap();
+    assert_eq!(frames.last().unwrap().status, Status::Ok, "same connection still serves");
+    let got: Vec<usize> = frames.iter().map(|r| r.token as usize).collect();
+    assert_eq!(got, want);
+    assert_eq!(server.metrics.rejected_invalid.load(Ordering::Relaxed), 2);
+    assert!(server.metrics.summary().contains("invalid=2"), "{}", server.metrics.summary());
+
+    // Framing failures (oversized length prefix, truncated frame) close
+    // that connection — there is no way to resync — but never the server.
+    let mut raw = TcpStream::connect(server.addr).unwrap();
+    raw.write_all(&(8u32 << 20).to_le_bytes()).unwrap(); // 8MB ≫ 1MB cap
+    raw.write_all(b"oversized").unwrap();
+    drop(raw);
+    let mut raw = TcpStream::connect(server.addr).unwrap();
+    raw.write_all(&[12u8, 0]).unwrap(); // half a length prefix, then EOF
+    drop(raw);
+
+    let mut probe = Client::connect(server.addr).unwrap();
+    let frames = probe.generate(&Request::generate(4, prompt, 2)).unwrap();
+    assert_eq!(frames.last().unwrap().status, Status::Ok);
+    let got: Vec<usize> = frames.iter().map(|r| r.token as usize).collect();
+    assert_eq!(got, want, "the server survives framing garbage bit-identically");
+}

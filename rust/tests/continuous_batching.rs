@@ -10,8 +10,8 @@ use hif4::model::zoo;
 use hif4::runtime::artifact::Manifest;
 use hif4::runtime::native::{transformer_from_store, DecodeEngine, DecodeStream};
 use hif4::server::batcher::BatchPolicy;
-use hif4::server::protocol::Request;
-use hif4::server::service::{Client, NativeServerConfig, Server};
+use hif4::server::protocol::{Request, Status};
+use hif4::server::service::{Client, NativeServerConfig, ResilienceConfig, Server};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Duration;
@@ -113,6 +113,15 @@ fn manifest_dir(tag: &str) -> PathBuf {
 }
 
 fn start_server(tag: &str, kv: KvCacheType, max_batch: usize) -> (Server, Arc<Transformer>) {
+    start_server_with(tag, kv, max_batch, ResilienceConfig::default())
+}
+
+fn start_server_with(
+    tag: &str,
+    kv: KvCacheType,
+    max_batch: usize,
+    resilience: ResilienceConfig,
+) -> (Server, Arc<Transformer>) {
     let dir = manifest_dir(tag);
     write_manifest(&dir);
     let manifest = Manifest::load(&dir).unwrap();
@@ -123,6 +132,7 @@ fn start_server(tag: &str, kv: KvCacheType, max_batch: usize) -> (Server, Arc<Tr
         workers: 1,
         seq: manifest.seq,
         kv,
+        resilience,
     };
     let server = Server::start_native(Arc::clone(&model), cfg, "127.0.0.1:0").unwrap();
     (server, model)
@@ -149,6 +159,83 @@ fn server_slot_reuse_outlives_many_generations() {
     }
     let batches = server.metrics.batches.load(std::sync::atomic::Ordering::Relaxed);
     assert!(batches >= 5, "5 requests × 3 tokens need several decode steps, saw {batches}");
+}
+
+#[test]
+fn deadline_expiry_mid_decode_frees_the_slot_and_its_reservation() {
+    use hif4::server::faults::{FaultConfig, FaultPlan};
+    // One slot, every decode step stalled 5ms: a request with a 40ms TTL
+    // and a huge max_new must expire mid-decode — terminal Expired frame
+    // carrying the tokens streamed so far — and the follow-up request
+    // must find a free slot and decode token-identically to the
+    // in-process greedy reference.
+    let stall = FaultConfig { stall_per_mille: 1000, stall_ms: 5, ..Default::default() };
+    let resilience = ResilienceConfig {
+        kv_budget_bytes: 1 << 30, // real reservations, ample budget
+        faults: Some(Arc::new(FaultPlan::new(3, stall))),
+        ..Default::default()
+    };
+    let (server, model) = start_server_with("deadline", KvCacheType::F32, 1, resilience);
+    let prompt = vec![3usize, 7, 11];
+
+    let mut client = Client::connect(server.addr).unwrap();
+    let doomed = Request::generate(1, prompt.clone(), 1024).with_deadline_ms(40);
+    let stream = client.generate(&doomed).unwrap();
+    let last = stream.last().unwrap();
+    assert_eq!(last.status, Status::Expired, "must expire, got {stream:?}");
+    assert!(stream.len() < 1024, "expiry must cut the stream short");
+    assert_eq!(last.index as usize, stream.len() - 1, "Expired frame reports tokens streamed");
+    // Determinism survives expiry: the streamed prefix is exactly the
+    // greedy continuation's prefix.
+    let emitted = stream.len() - 1;
+    if emitted > 0 {
+        let want = model.generate_greedy(&prompt, emitted, KvCacheType::F32);
+        let got: Vec<usize> =
+            stream[..emitted].iter().map(|r| r.token as usize).collect();
+        assert_eq!(got, want, "tokens streamed before expiry match greedy decode");
+    }
+
+    // The slot and its worst-case KV reservation are free again: a
+    // no-deadline request completes, token-identical to the reference.
+    let survivor = client.generate(&Request::generate(2, prompt.clone(), 3)).unwrap();
+    assert_eq!(survivor.last().unwrap().status, Status::Ok);
+    let want = model.generate_greedy(&prompt, 3, KvCacheType::F32);
+    let got: Vec<usize> = survivor.iter().map(|r| r.token as usize).collect();
+    assert_eq!(got, want, "survivor after expiry matches greedy decode");
+
+    let expired = server.metrics.deadlines_expired.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(expired >= 1, "expiry must be counted, saw {expired}");
+    assert_eq!(server.admission().kv_reserved(), 0, "every reservation must be released");
+    assert_eq!(server.admission().queued(), 0);
+}
+
+#[test]
+fn kv_budget_shed_is_structured_and_survivors_are_token_identical() {
+    // Fixture KV cost: 1 layer x 2 (K+V) x kvd 16 x f32 = 128 B/token. A
+    // 2000-byte budget admits a (4-prompt, 3-new) request (896 B) but can
+    // never fit a (4-prompt, 50-new) one (6912 B): the big request sheds
+    // with a structured ShedKvBudget frame and the small one decodes
+    // token-identically — overload degrades service, never correctness.
+    let resilience = ResilienceConfig { kv_budget_bytes: 2000, ..Default::default() };
+    let (server, model) = start_server_with("kvshed", KvCacheType::F32, 2, resilience);
+    let prompt = vec![5usize, 9, 13, 17];
+
+    let mut client = Client::connect(server.addr).unwrap();
+    let big = client.generate(&Request::generate(1, prompt.clone(), 50)).unwrap();
+    assert_eq!(big.len(), 1, "shed answers a single terminal frame");
+    assert_eq!(big[0].status, Status::ShedKvBudget);
+    assert!(big[0].status.retryable(), "shed must invite a retry");
+
+    let small = client.generate(&Request::generate(2, prompt.clone(), 3)).unwrap();
+    assert_eq!(small.last().unwrap().status, Status::Ok);
+    let want = model.generate_greedy(&prompt, 3, KvCacheType::F32);
+    let got: Vec<usize> = small.iter().map(|r| r.token as usize).collect();
+    assert_eq!(got, want, "survivor alongside shed traffic matches greedy decode");
+
+    let ord = std::sync::atomic::Ordering::Relaxed;
+    assert!(server.metrics.shed_kv_budget.load(ord) >= 1);
+    assert_eq!(server.metrics.shed_queue_full.load(ord), 0);
+    assert_eq!(server.admission().kv_reserved(), 0, "shed + completion release everything");
 }
 
 #[test]

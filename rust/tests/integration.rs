@@ -188,6 +188,7 @@ fn end_to_end_tcp_serving() {
         artifact: "fwd_bf16.hlo.txt".into(),
         policy: BatchPolicy { max_batch: m.batch, max_wait: std::time::Duration::from_millis(2) },
         workers: 2,
+        resilience: Default::default(),
     };
     let server = Server::start(&dir, cfg, &params, "127.0.0.1:0").unwrap();
 

@@ -12,7 +12,7 @@ use hif4::server::protocol::Request;
 use hif4::server::service::{run_batch_native, Client, NativeServerConfig, Server};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// A complete 1-layer GQA+SwiGLU manifest (d=32, 4 heads × 8, kv 2).
 /// Twin of the fixture in `src/runtime/native.rs`'s unit tests — keep the
@@ -37,7 +37,7 @@ fn manifest_dir(tag: &str) -> PathBuf {
 }
 
 fn pending(id: u64, tokens: Vec<usize>) -> Pending<()> {
-    Pending { request: Request::next_token(id, tokens), arrived: Instant::now(), reply: () }
+    Pending::untracked(Request::next_token(id, tokens), ())
 }
 
 #[test]
@@ -62,6 +62,7 @@ fn native_server_round_trips_and_matches_direct_execution() {
         workers: 2,
         seq: manifest.seq,
         kv: KvCacheType::F32,
+        resilience: Default::default(),
     };
     let mut server = Server::start_native(Arc::clone(&model), cfg, "127.0.0.1:0").unwrap();
     let mut client = Client::connect(server.addr).unwrap();
@@ -93,6 +94,7 @@ fn native_server_serves_prepacked_hif4_deterministically() {
         workers: 2,
         seq: manifest.seq,
         kv: KvCacheType::F32,
+        resilience: Default::default(),
     };
     let server = Server::start_native(Arc::clone(&model), cfg, "127.0.0.1:0").unwrap();
     let mut client = Client::connect(server.addr).unwrap();
@@ -135,6 +137,7 @@ fn native_server_serves_every_block_format_end_to_end() {
             workers: 1,
             seq: manifest.seq,
             kv: KvCacheType::F32,
+            resilience: Default::default(),
         };
         let server = Server::start_native(Arc::clone(&model), cfg, "127.0.0.1:0").unwrap();
         let tag = server.metrics.format_tag().expect("native engine must tag its metrics");
@@ -194,6 +197,7 @@ fn native_server_streams_multi_token_generation() {
         workers: 1,
         seq: manifest.seq,
         kv: KvCacheType::F32,
+        resilience: Default::default(),
     };
     let server = Server::start_native(Arc::clone(&model), cfg, "127.0.0.1:0").unwrap();
     let mut client = Client::connect(server.addr).unwrap();
