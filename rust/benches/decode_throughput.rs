@@ -11,11 +11,20 @@
 //! `HIF4_BENCH_QUICK=1` shrinks the sequence/batch grid for CI smoke
 //! runs; the full run generates to a context length ≥ 128 where the
 //! O(T) cached path's win over full recompute is unambiguous.
+//!
+//! A long-context section pre-fills a HiF4 cache with synthetic rows
+//! (skipping the O(T²) prefill) and times single-token decode steps
+//! under both attention schedules — `fused` (tiled integer kernel over
+//! the packed lane planes) and `replay` (dense f32 re-materialization
+//! of every cached row per step) — at contexts up to 32k, asserting
+//! greedy-token parity before timing and reporting the per-step
+//! attention read traffic each path implies.
 
 use hif4::dotprod::{set_kernel, simd_isa_label, Kernel};
 use hif4::formats::QuantKind;
-use hif4::model::kv::KvCacheType;
-use hif4::model::transformer::Transformer;
+use hif4::model::attention::AttnPath;
+use hif4::model::kv::{KvCache, KvCacheType};
+use hif4::model::transformer::{greedy_from_row, CachedSeq, Transformer};
 use hif4::model::zoo;
 use hif4::runtime::native::{DecodeEngine, DecodeStream};
 use hif4::util::threadpool;
@@ -170,16 +179,80 @@ fn main() {
     set_kernel(prev_kernel);
     println!();
 
+    // Long-context decode: fused tiled attention over the packed KV lane
+    // planes vs. per-step dense replay, at contexts far beyond what an
+    // O(T²) prefill could reach in a bench. The cache is pre-filled with
+    // synthetic rows (`KvCache::fill_synthetic` — deterministic, read
+    // identically by both paths), then single-token decode steps are
+    // timed against the full context. Greedy tokens must match between
+    // the schedules before anything is timed.
+    let long_contexts: &[usize] = if quick { &[256, 1024] } else { &[1024, 8192, 32768] };
+    let long_steps = if quick { 4 } else { 16 };
+    let long_kind = KvCacheType::HIF4;
+    let mut long_json = Vec::new();
+    for &t_ctx in long_contexts {
+        let mut lcfg = zoo::llama3_tiny();
+        lcfg.max_seq = t_ctx + long_steps + 1;
+        let lmodel = Transformer::init(lcfg, 91);
+        let run = |path: AttnPath| {
+            let mut cache = KvCache::new(&lmodel.cfg, long_kind);
+            cache.fill_synthetic(t_ctx, 7);
+            let mut tok = 1usize;
+            let mut toks = Vec::with_capacity(long_steps);
+            let t0 = Instant::now();
+            for _ in 0..long_steps {
+                let tokens = [tok];
+                let mut seqs = [CachedSeq { tokens: &tokens, cache: &mut cache }];
+                let logits = lmodel.forward_cached_last_with(&mut seqs, path);
+                tok = greedy_from_row(logits.row(0)).0;
+                toks.push(tok);
+            }
+            (toks, long_steps as f64 / t0.elapsed().as_secs_f64())
+        };
+        let (replay_toks, replay_tps) = run(AttnPath::Replay);
+        let (fused_toks, fused_tps) = run(AttnPath::Fused);
+        assert_eq!(
+            fused_toks, replay_toks,
+            "fused and replay attention must decode identical tokens at T={t_ctx}"
+        );
+        // Per-step attention read traffic across both stores of every
+        // layer: replay materializes each cached row as dense f32; fused
+        // reads the resident planes (i8 lanes + f64 group scales).
+        let kvd = lmodel.cfg.kv_heads() * lmodel.cfg.head_dim;
+        let group = QuantKind::HiF4.group();
+        let gpr = kvd.div_ceil(group);
+        let stores = 2 * lmodel.cfg.n_layers;
+        let replay_bytes = stores * t_ctx * kvd * 4;
+        let fused_bytes = stores * t_ctx * gpr * (group + 8);
+        let speedup = fused_tps / replay_tps;
+        println!(
+            "long-context {:<5} T={t_ctx:>6}: fused {fused_tps:9.1} tok/s   replay \
+             {replay_tps:9.1} tok/s   ({speedup:.2}x, reads {fused_bytes} B vs {replay_bytes} B \
+             per step)",
+            long_kind.label()
+        );
+        long_json.push(format!(
+            "\"c{t_ctx}\":{{\"context\":{t_ctx},\"steps\":{long_steps},\
+             \"kind\":\"{}\",\"fused_tps\":{fused_tps:.2},\"replay_tps\":{replay_tps:.2},\
+             \"fused_speedup\":{speedup:.3},\"fused_read_bytes_per_step\":{fused_bytes},\
+             \"replay_read_bytes_per_step\":{replay_bytes}}}",
+            long_kind.label()
+        ));
+    }
+    println!();
+
     let json = format!(
         "{{\n  \"bench\": \"decode_throughput\",\n  \"quick\": {quick},\n  \
          \"threads\": {nthreads},\n  \"simd_isa\": \"{}\",\n  \
          \"prompt_len\": {prompt_len},\n  \"new_tokens\": {new_tokens},\n  \
          \"context_len\": {context_len},\n  \"parity\": true,\n  \
          \"kinds\": {{{}}},\n  \
-         \"kernels\": {{{}}}\n}}\n",
+         \"kernels\": {{{}}},\n  \
+         \"long_context\": {{{}}}\n}}\n",
         simd_isa_label(),
         kind_json.join(","),
-        kernel_json.join(",")
+        kernel_json.join(","),
+        long_json.join(",")
     );
     let path = "BENCH_decode.json";
     std::fs::write(path, &json).expect("write BENCH_decode.json");

@@ -1251,6 +1251,55 @@ pub fn qgemm_bt_simd_threads<F: BlockFormat>(
     }
 }
 
+/// One exact `i8·i8 → i32` group dot through the startup-detected lane
+/// ISA's `LaneKernel` — the integer `QK^T` primitive of the fused
+/// attention path ([`crate::model::attention`]), which scores query
+/// lanes against the KV cache's packed planes without dequantizing
+/// them. Exact for any `i8` contents (both ISAs widen before
+/// multiplying; see the overflow audit at [`IDOT_I32_SAFE_LANES`]), so
+/// callers may feed full 8-bit lanes, not just the 4-bit codec range.
+/// Spans must be one group (every format group is a 16-lane multiple,
+/// which the AVX2 kernel requires).
+pub fn lane_dot(a: &[i8], b: &[i8]) -> i32 {
+    match super::simd_isa() {
+        #[cfg(target_arch = "x86_64")]
+        SimdIsa::Avx2 => avx2::Avx2Kernel::dot(a, b),
+        #[cfg(not(target_arch = "x86_64"))]
+        SimdIsa::Avx2 => unreachable!("AVX2 is only ever detected on x86_64"),
+        SimdIsa::Portable => PortableKernel::dot(a, b),
+    }
+}
+
+/// [`lane_dot`] of one query group against [`NR`] key groups — the
+/// register-reuse shape the fused attention tile loop scores with: the
+/// query operand is widened once per four key rows, exactly as in the
+/// QGEMM microkernel's `dot_1x4` pass. Each result is bit-identical to
+/// the corresponding [`lane_dot`] (integer adds are associative).
+pub fn lane_dot_1x4(a: &[i8], b: [&[i8]; NR]) -> [i32; NR] {
+    match super::simd_isa() {
+        #[cfg(target_arch = "x86_64")]
+        SimdIsa::Avx2 => avx2::Avx2Kernel::dot_1x4(a, b),
+        #[cfg(not(target_arch = "x86_64"))]
+        SimdIsa::Avx2 => unreachable!("AVX2 is only ever detected on x86_64"),
+        SimdIsa::Portable => PortableKernel::dot_1x4(a, b),
+    }
+}
+
+/// `LANE_UNIT` of `kind`'s codec — the power-of-two lane quantum
+/// denominator: plane values decode as `scale · lane / LANE_UNIT`.
+/// Dispatch helper for consumers that hold a runtime [`QuantKind`]
+/// rather than a `BlockFormat` type parameter (the fused attention
+/// kernel's score scaling).
+pub fn lane_unit(kind: QuantKind) -> f64 {
+    match kind {
+        QuantKind::HiF4 => HiF4Fmt::LANE_UNIT,
+        QuantKind::Nvfp4 => Nvfp4Fmt::LANE_UNIT,
+        QuantKind::Mxfp4 => Mxfp4Fmt::LANE_UNIT,
+        QuantKind::Mx4 => Mx4Fmt::LANE_UNIT,
+        QuantKind::Bfp => BfpFmt::LANE_UNIT,
+    }
+}
+
 /// The dequantized-f64 reference partial for one group pair: decode both
 /// groups and walk the products in ascending element order. Every codec's
 /// flow/packed partials equal this bit for bit (each term is a small

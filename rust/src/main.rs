@@ -32,11 +32,15 @@
 //! ```
 //!
 //! Every subcommand honours `--threads N` (or `HIF4_THREADS`) for the
-//! data-parallel GEMM/quantization kernels, and `--kernel
+//! data-parallel GEMM/quantization kernels, `--kernel
 //! simd|packed|flow` (or `HIF4_KERNEL`) for the quantized-GEMM backend
 //! (bit-identical results; `simd` — the default — is the register-tiled
 //! microkernel whose lane ISA is CPU-detected once at startup: AVX2
-//! where available, the portable unrolled-scalar kernel otherwise).
+//! where available, the portable unrolled-scalar kernel otherwise), and
+//! `--attn fused|replay` (or `HIF4_ATTN`) for the attention schedule
+//! over quantized KV caches (`fused` — the default — streams the packed
+//! lane planes through the tiled integer kernel; greedy tokens are
+//! identical on both paths, f32 caches always replay).
 
 use anyhow::Result;
 use hif4::formats::{mse, QuantKind, QuantScheme};
@@ -65,6 +69,11 @@ fn main() -> Result<()> {
             "simd" => hif4::dotprod::set_kernel(hif4::dotprod::Kernel::Simd),
             other => anyhow::bail!("--kernel must be simd, packed or flow, got {other}"),
         }
+    }
+    if let Some(a) = args.get("attn") {
+        let path = hif4::model::attention::AttnPath::parse(a)
+            .map_err(|e| anyhow::anyhow!("--attn: {e}"))?;
+        hif4::model::attention::set_attn_path(path);
     }
     match args.subcommand() {
         Some("serve") => serve(&args),
@@ -139,6 +148,10 @@ fn main() -> Result<()> {
                 "\nqgemm kernel backend: {} (simd isa: {})",
                 hif4::dotprod::kernel().label(),
                 hif4::dotprod::simd_isa_label()
+            );
+            println!(
+                "attention path: {} (quantized KV caches; f32 caches always replay)",
+                hif4::model::attention::attn_path().label()
             );
             println!("\nsubcommands: serve | sweep | eval | hwcost | dotprod | quantize | info");
             Ok(())

@@ -1,0 +1,649 @@
+//! Fused tiled attention over packed KV lane planes — the long-context
+//! decode path.
+//!
+//! The replay path in [`super::transformer`] decodes every cached K/V
+//! row back to f32 each step and re-runs the two-pass softmax; at 8k+
+//! context that dense decode *is* the decode step. The fused path here
+//! never materializes the cache: it walks the quantized store's planes
+//! through [`super::kv::KvTiles`], scores `QK^T` with the exact integer
+//! lane microkernels ([`crate::dotprod::quant_tensor::lane_dot`]),
+//! streams the scores through an **online softmax** (running max /
+//! denominator / output with rescaling corrections), and fuses the `PV`
+//! product into the same pass — one tile of K/V in cache at a time,
+//! flash-attention style.
+//!
+//! Numerics (the full contract is DESIGN.md §14):
+//!
+//! * Queries are quantized once per step to **8-bit absmax groups** on
+//!   the K planes' group grid; `QK^T` partials are exact `i8·i8 → i32`
+//!   integer dots, scaled in f64 in ascending group order. A given
+//!   score is therefore **bit-identical for any tile size** and for the
+//!   batched (`dot_1x4`) vs single (`dot`) microkernel shapes.
+//! * The online-softmax state update is applied **per position**, not
+//!   per tile, so the f32 operation sequence depends only on the score/
+//!   value stream — logits are bit-invariant to `tile_rows` by
+//!   construction (pinned by `tests/decode_parity.rs`).
+//! * Against the replay path the result is *tolerance-bounded*, not
+//!   bitwise: Q rounding and the reassociated accumulation differ — but
+//!   greedy decode is token-identical (the parity suite's gate).
+//!
+//! Selection is the process-wide [`attn_path`] knob (`HIF4_ATTN` /
+//! `--attn`, default [`AttnPath::Fused`]); f32 caches have no planes and
+//! always replay, per sequence, at dispatch time.
+
+use crate::dotprod::quant_tensor::{lane_dot, lane_dot_1x4, lane_unit, NR};
+use crate::model::kv::{KvCacheType, LayerKv};
+use crate::tensor::Matrix;
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+
+/// Which attention schedule the cached forward runs over quantized KV
+/// pages. Purely a performance/precision-profile knob for greedy decode:
+/// both paths emit the same greedy tokens (`tests/decode_parity.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AttnPath {
+    /// Fused tiled attention on the packed lane planes (default for
+    /// quantized caches): integer `QK^T`, online softmax, fused `PV`.
+    Fused,
+    /// Row-at-a-time replay: decode the cache dense, then the exact
+    /// two-pass softmax — bit-identical to full recompute under the
+    /// matching KV quantization policy, and the only path f32 caches
+    /// can run.
+    Replay,
+}
+
+impl AttnPath {
+    /// Canonical lower-case label — the `HIF4_ATTN` / `--attn` spelling
+    /// and the bench-JSON key.
+    pub fn label(self) -> &'static str {
+        match self {
+            AttnPath::Fused => "fused",
+            AttnPath::Replay => "replay",
+        }
+    }
+
+    /// Parse the CLI/env spelling (`fused` / `replay`).
+    pub fn parse(s: &str) -> Result<AttnPath, String> {
+        match s {
+            "fused" => Ok(AttnPath::Fused),
+            "replay" => Ok(AttnPath::Replay),
+            other => {
+                Err(format!("unknown attention path {other:?} (expected \"fused\" or \"replay\")"))
+            }
+        }
+    }
+}
+
+/// Process-wide attention-path override; 0 = not resolved yet.
+static ATTN: AtomicU8 = AtomicU8::new(0);
+
+const ATTN_FUSED: u8 = 1;
+const ATTN_REPLAY: u8 = 2;
+
+fn attn_from_tag(tag: u8) -> AttnPath {
+    match tag {
+        ATTN_REPLAY => AttnPath::Replay,
+        _ => AttnPath::Fused,
+    }
+}
+
+/// The process-wide attention path: `HIF4_ATTN` (`fused` / `replay`) if
+/// set, else [`AttnPath::Fused`]; override with [`set_attn_path`] (the
+/// CLI exposes `--attn`). Greedy tokens are identical either way, so
+/// serving treats this as a throughput knob; tests that assert *logit*
+/// bits never mutate it — they pass the path explicitly through
+/// `forward_cached_with` instead, so concurrent tests cannot race.
+pub fn attn_path() -> AttnPath {
+    let tag = ATTN.load(Ordering::Relaxed);
+    if tag != 0 {
+        return attn_from_tag(tag);
+    }
+    let resolved = match std::env::var("HIF4_ATTN").ok().as_deref() {
+        Some("replay") => ATTN_REPLAY,
+        Some("fused") | None => ATTN_FUSED,
+        Some(other) => {
+            // A perf knob that silently ignores typos would corrupt
+            // measurements; warn loudly (once — the resolution is cached)
+            // and run the default. The CLI's `--attn` rejects outright.
+            eprintln!(
+                "warning: unrecognized HIF4_ATTN={other:?} \
+                 (expected \"fused\" or \"replay\"); using fused"
+            );
+            ATTN_FUSED
+        }
+    };
+    // Cache only if still unset so a racing set_attn_path() is never
+    // clobbered (same pattern as dotprod::kernel).
+    match ATTN.compare_exchange(0, resolved, Ordering::Relaxed, Ordering::Relaxed) {
+        Ok(_) => attn_from_tag(resolved),
+        Err(current) => attn_from_tag(current),
+    }
+}
+
+/// Override the process-wide attention path.
+pub fn set_attn_path(p: AttnPath) {
+    let v = match p {
+        AttnPath::Fused => ATTN_FUSED,
+        AttnPath::Replay => ATTN_REPLAY,
+    };
+    ATTN.store(v, Ordering::Relaxed);
+}
+
+/// The path a cache of `kind` actually runs when `requested` is asked
+/// for: f32 caches have no packed planes to tile, so fused requests fall
+/// back to [`AttnPath::Replay`] — per sequence, at dispatch time.
+pub fn effective_attn_path(requested: AttnPath, kind: KvCacheType) -> AttnPath {
+    match kind {
+        KvCacheType::F32 => AttnPath::Replay,
+        KvCacheType::Quant(_) => requested,
+    }
+}
+
+/// Default KV tile height for the fused path — large enough to amortize
+/// per-tile dispatch, small enough that a K+V tile of a tiny model stays
+/// cache-resident.
+pub const DEFAULT_ATTN_TILE_ROWS: usize = 128;
+
+/// Fused-path tile height (rows of K/V per tile). Results are
+/// **bit-invariant** to this value (see the module docs), so unlike the
+/// path knob it is safe to flip anywhere, tests included.
+static ATTN_TILE_ROWS: AtomicUsize = AtomicUsize::new(DEFAULT_ATTN_TILE_ROWS);
+
+/// Current fused-path tile height.
+pub fn attn_tile_rows() -> usize {
+    ATTN_TILE_ROWS.load(Ordering::Relaxed)
+}
+
+/// Override the fused-path tile height (a pure performance knob).
+pub fn set_attn_tile_rows(rows: usize) {
+    assert!(rows > 0, "attention tile height must be positive");
+    ATTN_TILE_ROWS.store(rows, Ordering::Relaxed);
+}
+
+/// One sequence's worth of fused-attention work: queries for the new
+/// rows against the (already appended) cached K/V pages of one layer.
+pub(crate) struct FusedAttnCall<'a> {
+    /// The layer's K/V stores, with the new rows already appended.
+    pub lkv: &'a LayerKv,
+    /// Cached positions before this call's new rows.
+    pub start: usize,
+    /// New rows (queries) this call scores.
+    pub t_new: usize,
+    /// All projected + roped queries of the batch (`bt × heads·hd`).
+    pub qr: &'a Matrix,
+    /// First row of this sequence within `qr` / the context matrix.
+    pub base: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub hd: usize,
+    /// Score scale (`1/√hd`).
+    pub scale: f32,
+    /// KV tile height ([`attn_tile_rows`] at the call site).
+    pub tile_rows: usize,
+}
+
+/// Run fused tiled attention for one sequence, writing each query's
+/// context vector into its `ctx` row slice (rows must be zeroed).
+/// Returns `false` without touching `ctx` when the stores carry no
+/// packed planes (f32 cache) — the caller replays instead.
+pub(crate) fn fused_attention_seq(call: &FusedAttnCall<'_>, ctx: &mut Matrix) -> bool {
+    let c = call;
+    let t_ctx = c.start + c.t_new;
+    let k_tiles = match c.lkv.k.tiles(t_ctx, c.tile_rows) {
+        Some(t) => t,
+        None => return false,
+    };
+    let v_tiles = c.lkv.v.tiles(t_ctx, c.tile_rows).expect("K and V stores share a backend");
+    let quant = k_tiles.quant();
+    let group = quant.group();
+    let gpr = k_tiles.groups_per_row();
+    let gqa = c.heads / c.kv_heads;
+    // 1/LANE_UNIT is a power of two: exact, so the K-side lane scaling
+    // loses nothing.
+    let inv_lu = 1.0 / lane_unit(quant);
+
+    // Quantize the queries once: 8-bit absmax lanes on the K planes'
+    // group grid. Each (row, head) owns a full gpr-group plane built
+    // from a zeroed kvd-wide buffer with only its head span populated —
+    // zero lanes mask out the other heads sharing a group (their
+    // products contribute exactly 0 to the integer dot), and the
+    // zero-padded tail mirrors the K planes' own padding.
+    let mut q_lanes = vec![0i8; c.t_new * c.heads * gpr * group];
+    let mut q_scales = vec![0f64; c.t_new * c.heads * gpr];
+    let mut buf = vec![0f32; gpr * group];
+    for i in 0..c.t_new {
+        let qrow = c.qr.row(c.base + i);
+        for h in 0..c.heads {
+            let kvh = h / gqa;
+            let (u_lo, u_hi) = head_groups(kvh, c.hd, group);
+            buf.fill(0.0);
+            buf[kvh * c.hd..(kvh + 1) * c.hd].copy_from_slice(&qrow[h * c.hd..(h + 1) * c.hd]);
+            let qg = (i * c.heads + h) * gpr;
+            for u in u_lo..=u_hi {
+                q_scales[qg + u] = encode_q_group(
+                    &buf[u * group..(u + 1) * group],
+                    &mut q_lanes[(qg + u) * group..(qg + u + 1) * group],
+                );
+            }
+        }
+    }
+
+    // Online-softmax state per (new row, head): running max, running
+    // denominator; the running (unnormalized) output accumulates
+    // directly in the caller's ctx row slices.
+    let mut m = vec![f32::NEG_INFINITY; c.t_new * c.heads];
+    let mut l = vec![0f32; c.t_new * c.heads];
+
+    let mut vbuf: Vec<f32> = Vec::new();
+    let mut sbuf: Vec<f32> = Vec::new();
+    for (kt, vt) in k_tiles.zip(v_tiles) {
+        debug_assert_eq!((kt.start(), kt.rows()), (vt.start(), vt.rows()));
+        for kvh in 0..c.kv_heads {
+            let (u_lo, u_hi) = head_groups(kvh, c.hd, group);
+            // Decode this KV head's V column span once per tile; K never
+            // decodes at all.
+            vbuf.clear();
+            vbuf.resize(kt.rows() * c.hd, 0.0);
+            vt.decode_cols(kvh * c.hd..(kvh + 1) * c.hd, &mut vbuf);
+            for h in kvh * gqa..(kvh + 1) * gqa {
+                for i in 0..c.t_new {
+                    let p = c.start + i;
+                    if kt.start() > p {
+                        // Tile is entirely in this query's future (later
+                        // queries in the batch may still see it).
+                        continue;
+                    }
+                    let n_vis = kt.rows().min(p + 1 - kt.start());
+                    let qg = (i * c.heads + h) * gpr;
+                    let qs = &q_scales[qg..qg + gpr];
+                    // Integer QK^T over the visible tile rows: NR at a
+                    // time through the register-reuse microkernel, then
+                    // singles — each row's f64 scale walk is ascending-u
+                    // and identical in both shapes, so a score never
+                    // depends on where the tile boundary fell.
+                    sbuf.clear();
+                    sbuf.resize(n_vis, 0.0);
+                    let mut r = 0usize;
+                    while r + NR <= n_vis {
+                        let mut acc = [0f64; NR];
+                        for u in u_lo..=u_hi {
+                            let qgl = &q_lanes[(qg + u) * group..(qg + u + 1) * group];
+                            let span = u * group..(u + 1) * group;
+                            let d = lane_dot_1x4(
+                                qgl,
+                                [
+                                    &kt.row_lanes(r)[span.clone()],
+                                    &kt.row_lanes(r + 1)[span.clone()],
+                                    &kt.row_lanes(r + 2)[span.clone()],
+                                    &kt.row_lanes(r + 3)[span],
+                                ],
+                            );
+                            for (t, dt) in d.iter().enumerate() {
+                                let ks = kt.row_scales(r + t)[u];
+                                acc[t] += qs[u] * ks * inv_lu * (*dt as f64);
+                            }
+                        }
+                        for (t, a) in acc.iter().enumerate() {
+                            sbuf[r + t] = *a as f32 * c.scale;
+                        }
+                        r += NR;
+                    }
+                    while r < n_vis {
+                        let mut acc = 0f64;
+                        for u in u_lo..=u_hi {
+                            let qgl = &q_lanes[(qg + u) * group..(qg + u + 1) * group];
+                            let d = lane_dot(qgl, &kt.row_lanes(r)[u * group..(u + 1) * group]);
+                            acc += qs[u] * kt.row_scales(r)[u] * inv_lu * (d as f64);
+                        }
+                        sbuf[r] = acc as f32 * c.scale;
+                        r += 1;
+                    }
+                    // Stream the scored rows through the per-position
+                    // online update, in ascending absolute position.
+                    let st = i * c.heads + h;
+                    let crow = &mut ctx.data[(c.base + i) * c.heads * c.hd + h * c.hd..][..c.hd];
+                    for (r, &s) in sbuf.iter().enumerate() {
+                        let vr = &vbuf[r * c.hd..(r + 1) * c.hd];
+                        online_update(s, vr, &mut m[st], &mut l[st], crow);
+                    }
+                }
+            }
+        }
+    }
+
+    // Final normalization: context = o / l.
+    for i in 0..c.t_new {
+        for h in 0..c.heads {
+            let inv = 1.0 / l[i * c.heads + h];
+            let crow = &mut ctx.data[(c.base + i) * c.heads * c.hd + h * c.hd..][..c.hd];
+            for x in crow {
+                *x *= inv;
+            }
+        }
+    }
+    true
+}
+
+/// The plane groups (inclusive range) a KV head's column span
+/// `[kvh·hd, (kvh+1)·hd)` intersects.
+#[inline]
+fn head_groups(kvh: usize, hd: usize, group: usize) -> (usize, usize) {
+    (kvh * hd / group, ((kvh + 1) * hd - 1) / group)
+}
+
+/// Quantize one group-wide query span to 8-bit absmax lanes: `scale =
+/// absmax/127`, `lane = round(x/scale)` (so `|lane| ≤ 127` exactly).
+/// Returns the f64 scale; an all-zero (or non-finite) span encodes as
+/// zero lanes with scale 0, contributing nothing to any dot.
+fn encode_q_group(x: &[f32], lanes: &mut [i8]) -> f64 {
+    let mut absmax = 0f32;
+    for &v in x {
+        absmax = absmax.max(v.abs());
+    }
+    if absmax == 0.0 || !absmax.is_finite() {
+        lanes.fill(0);
+        return 0.0;
+    }
+    let inv = 127.0 / absmax as f64;
+    for (l, &v) in lanes.iter_mut().zip(x) {
+        *l = (v as f64 * inv).round() as i8;
+    }
+    absmax as f64 / 127.0
+}
+
+/// One position's online-softmax step: fold score `s` and value row `v`
+/// into the running (max `m`, denominator `l`, unnormalized output
+/// `acc`) state. When `s` raises the max, the old state is rescaled by
+/// `exp(m_old − s)` first; the very first position enters with
+/// `m = −∞`, whose correction factor `exp(−∞) = 0` zeroes the empty
+/// state exactly. The operation sequence depends only on the `(s, v)`
+/// stream — never on how the stream was tiled.
+#[inline]
+fn online_update(s: f32, v: &[f32], m: &mut f32, l: &mut f32, acc: &mut [f32]) {
+    if s > *m {
+        let alpha = (*m - s).exp();
+        *l *= alpha;
+        for a in acc.iter_mut() {
+            *a *= alpha;
+        }
+        *m = s;
+    }
+    let e = (s - *m).exp();
+    *l += e;
+    for (a, vv) in acc.iter_mut().zip(v) {
+        *a += e * *vv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::QuantKind;
+    use crate::model::config::{Attention, Ffn, ModelConfig};
+    use crate::model::kv::KvCache;
+    use crate::tensor::Rng;
+
+    // NOTE: no test here (or anywhere) mutates the process-wide
+    // attn-path knob — lib unit tests share one process, and several
+    // assert logit *bits* through the knob-reading entry points. Tests
+    // exercise paths via explicit arguments instead; only the CI
+    // HIF4_ATTN matrix leg varies the knob, per process, from the
+    // environment.
+
+    fn cfg(attention: Attention) -> ModelConfig {
+        ModelConfig {
+            name: "attn-test".into(),
+            vocab: 32,
+            d_model: 64,
+            n_layers: 1,
+            n_heads: 4,
+            head_dim: 16,
+            attention,
+            ffn: Ffn::SwiGlu,
+            d_ff: 32,
+            max_seq: 64,
+            rope_base: 10000.0,
+            outlier_scale: 1.0,
+            outlier_frac: 0.0,
+        }
+    }
+
+    #[test]
+    fn labels_parse_and_effective_path() {
+        for p in [AttnPath::Fused, AttnPath::Replay] {
+            assert_eq!(AttnPath::parse(p.label()), Ok(p));
+        }
+        let err = AttnPath::parse("flash").unwrap_err();
+        assert!(err.contains("fused") && err.contains("replay"), "{err}");
+        assert_eq!(
+            effective_attn_path(AttnPath::Fused, KvCacheType::F32),
+            AttnPath::Replay,
+            "f32 caches have no planes to fuse over"
+        );
+        assert_eq!(effective_attn_path(AttnPath::Fused, KvCacheType::HIF4), AttnPath::Fused);
+        assert_eq!(effective_attn_path(AttnPath::Replay, KvCacheType::HIF4), AttnPath::Replay);
+        // The tile knob round-trips and rejects zero via assert — its
+        // default matches the documented constant.
+        assert_eq!(attn_tile_rows(), DEFAULT_ATTN_TILE_ROWS);
+    }
+
+    #[test]
+    fn encode_q_group_is_half_step_accurate() {
+        let mut rng = Rng::seed(31);
+        let x = crate::tensor::Matrix::randn(1, 64, 1.5, &mut rng);
+        let mut lanes = [0i8; 64];
+        let s = encode_q_group(x.row(0), &mut lanes);
+        assert!(s > 0.0);
+        for (&v, &l) in x.row(0).iter().zip(&lanes) {
+            assert!(l.unsigned_abs() <= 127);
+            let err = (v as f64 - s * l as f64).abs();
+            assert!(err <= s / 2.0 + 1e-12, "lane error {err} exceeds half a step {}", s / 2.0);
+        }
+        // All-zero spans: zero scale, zero lanes.
+        let z = [0f32; 16];
+        let mut zl = [7i8; 16];
+        assert_eq!(encode_q_group(&z, &mut zl), 0.0);
+        assert!(zl.iter().all(|&l| l == 0));
+    }
+
+    #[test]
+    fn online_softmax_matches_two_pass_reference() {
+        // The streaming update must agree with the classic two-pass
+        // softmax-weighted sum to f32 roundoff, for any score order.
+        let mut rng = Rng::seed(32);
+        let n = 37;
+        let scores = crate::tensor::Matrix::randn(1, n, 3.0, &mut rng);
+        let vals = crate::tensor::Matrix::randn(n, 8, 1.0, &mut rng);
+        let mut m = f32::NEG_INFINITY;
+        let mut l = 0f32;
+        let mut acc = [0f32; 8];
+        for j in 0..n {
+            online_update(scores.row(0)[j], vals.row(j), &mut m, &mut l, &mut acc);
+        }
+        let inv = 1.0 / l;
+        let got: Vec<f32> = acc.iter().map(|a| a * inv).collect();
+        // Two-pass reference.
+        let maxs = scores.row(0).iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0f32;
+        let weights: Vec<f32> = scores.row(0).iter().map(|s| (s - maxs).exp()).collect();
+        for w in &weights {
+            denom += w;
+        }
+        let mut want = [0f32; 8];
+        for (j, w) in weights.iter().enumerate() {
+            for (o, vv) in want.iter_mut().zip(vals.row(j)) {
+                *o += (w / denom) * vv;
+            }
+        }
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() <= 1e-5 * (1.0 + w.abs()), "online {g} vs two-pass {w}");
+        }
+    }
+
+    /// Replay-style reference attention for one sequence over dense
+    /// (decoded) K/V — the same loop `Transformer::attention_cached`
+    /// replays, minus the projections.
+    fn reference_ctx(
+        cache: &KvCache,
+        qr: &Matrix,
+        start: usize,
+        heads: usize,
+        kv_heads: usize,
+        hd: usize,
+    ) -> Matrix {
+        let t_new = qr.rows;
+        let t_ctx = start + t_new;
+        let gqa = heads / kv_heads;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let kd = cache.layers[0].k.dense(t_ctx);
+        let vd = cache.layers[0].v.dense(t_ctx);
+        let mut ctx = Matrix::zeros(t_new, heads * hd);
+        for h in 0..heads {
+            let kvh = h / gqa;
+            for i in 0..t_new {
+                let p = start + i;
+                let qi = &qr.row(i)[h * hd..(h + 1) * hd];
+                let mut scores = vec![0f32; p + 1];
+                let mut maxs = f32::NEG_INFINITY;
+                for (j, sc) in scores.iter_mut().enumerate() {
+                    let kj = &kd.row(j)[kvh * hd..(kvh + 1) * hd];
+                    *sc = crate::tensor::gemm::dot(qi, kj) * scale;
+                    maxs = maxs.max(*sc);
+                }
+                let mut denom = 0f32;
+                for sc in scores.iter_mut() {
+                    *sc = (*sc - maxs).exp();
+                    denom += *sc;
+                }
+                let crow = &mut ctx.data[i * heads * hd + h * hd..][..hd];
+                for (j, w) in scores.iter().enumerate() {
+                    let vj = &vd.row(j)[kvh * hd..(kvh + 1) * hd];
+                    for (cc, vv) in crow.iter_mut().zip(vj) {
+                        *cc += (w / denom) * *vv;
+                    }
+                }
+            }
+        }
+        ctx
+    }
+
+    fn fused_ctx(
+        cache: &KvCache,
+        qr: &Matrix,
+        start: usize,
+        heads: usize,
+        kv_heads: usize,
+        hd: usize,
+        tile_rows: usize,
+    ) -> Matrix {
+        let mut ctx = Matrix::zeros(qr.rows, heads * hd);
+        let ok = fused_attention_seq(
+            &FusedAttnCall {
+                lkv: &cache.layers[0],
+                start,
+                t_new: qr.rows,
+                qr,
+                base: 0,
+                heads,
+                kv_heads,
+                hd,
+                scale: 1.0 / (hd as f32).sqrt(),
+                tile_rows,
+            },
+            &mut ctx,
+        );
+        assert!(ok, "quantized caches must take the fused path");
+        ctx
+    }
+
+    #[test]
+    fn fused_matches_replay_reference_within_q_rounding_all_formats() {
+        // 21 cached rows, 3 of them new queries — MHA and GQA, every
+        // format. The fused path quantizes Q to 8 bits, so agreement
+        // with the dense reference is tolerance-bounded, not bitwise;
+        // the bound here is far above the analytic Q-rounding budget
+        // (≈2⁻⁷ relative) and far below head-swapping territory.
+        let mut rng = Rng::seed(33);
+        for attention in [Attention::Mha, Attention::Gqa { kv_heads: 2 }] {
+            let c = cfg(attention);
+            let (heads, hd) = (c.n_heads, c.head_dim);
+            let kv_heads = c.kv_heads();
+            let kvd = kv_heads * hd;
+            let (t_ctx, t_new) = (21, 3);
+            let start = t_ctx - t_new;
+            for kind in QuantKind::ALL {
+                let mut cache = KvCache::new(&c, KvCacheType::Quant(kind));
+                let krows = Matrix::randn(t_ctx, kvd, 0.9, &mut rng);
+                let vrows = Matrix::randn(t_ctx, kvd, 0.9, &mut rng);
+                for r in 0..t_ctx {
+                    cache.layers[0].k.append_row(krows.row(r));
+                    cache.layers[0].v.append_row(vrows.row(r));
+                }
+                let qr = Matrix::randn(t_new, heads * hd, 1.0, &mut rng);
+                let fused = fused_ctx(&cache, &qr, start, heads, kv_heads, hd, 8);
+                let want = reference_ctx(&cache, &qr, start, heads, kv_heads, hd);
+                for (a, b) in fused.data.iter().zip(&want.data) {
+                    assert!(
+                        (a - b).abs() <= 2e-2 * (1.0 + b.abs()),
+                        "{kind} {attention:?}: fused {a} vs replay {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_is_bitwise_invariant_to_tile_size() {
+        // The per-position online update makes the f32 op sequence a
+        // function of the (score, value) stream only — so any tile
+        // height, including one that makes a single-row tail tile,
+        // produces identical bits.
+        let mut rng = Rng::seed(34);
+        let c = cfg(Attention::Gqa { kv_heads: 2 });
+        let (heads, hd) = (c.n_heads, c.head_dim);
+        let kv_heads = c.kv_heads();
+        let kvd = kv_heads * hd;
+        let (t_ctx, t_new) = (29, 2);
+        let start = t_ctx - t_new;
+        let mut cache = KvCache::new(&c, KvCacheType::HIF4);
+        let krows = Matrix::randn(t_ctx, kvd, 1.0, &mut rng);
+        let vrows = Matrix::randn(t_ctx, kvd, 1.0, &mut rng);
+        for r in 0..t_ctx {
+            cache.layers[0].k.append_row(krows.row(r));
+            cache.layers[0].v.append_row(vrows.row(r));
+        }
+        let qr = Matrix::randn(t_new, heads * hd, 1.0, &mut rng);
+        let baseline = fused_ctx(&cache, &qr, start, heads, kv_heads, hd, 64);
+        for tile_rows in [1, 3, 4, 7, 16, 29, 1000] {
+            let got = fused_ctx(&cache, &qr, start, heads, kv_heads, hd, tile_rows);
+            let gb: Vec<u32> = got.data.iter().map(|x| x.to_bits()).collect();
+            let wb: Vec<u32> = baseline.data.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(gb, wb, "tile_rows={tile_rows} changed the logit bits");
+        }
+    }
+
+    #[test]
+    fn fused_refuses_f32_stores() {
+        let c = cfg(Attention::Mha);
+        let mut cache = KvCache::new(&c, KvCacheType::F32);
+        cache.fill_synthetic(4, 9);
+        let qr = Matrix::zeros(1, c.n_heads * c.head_dim);
+        let mut ctx = Matrix::zeros(1, c.n_heads * c.head_dim);
+        let ok = fused_attention_seq(
+            &FusedAttnCall {
+                lkv: &cache.layers[0],
+                start: 3,
+                t_new: 1,
+                qr: &qr,
+                base: 0,
+                heads: c.n_heads,
+                kv_heads: c.kv_heads(),
+                hd: c.head_dim,
+                scale: 1.0,
+                tile_rows: 4,
+            },
+            &mut ctx,
+        );
+        assert!(!ok, "f32 caches must signal replay fallback");
+        assert!(ctx.data.iter().all(|&x| x == 0.0), "fallback must not touch ctx");
+    }
+}

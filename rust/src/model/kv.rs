@@ -21,8 +21,47 @@
 //! absolute position, which never changes once cached). The
 //! quantize→decode round trip here is the *same code* the full-recompute
 //! reference applies via [`qdq_rows`], so the greedy-decode parity suite
-//! (`tests/decode_parity.rs`) can pin cached-vs-recompute equality down
-//! to the bit for every format.
+//! (`tests/decode_parity.rs`) can pin replay-attention
+//! cached-vs-recompute equality down to the bit for every format.
+//!
+//! # Tiled plane access
+//!
+//! Long-context attention does not have to pay the dense per-call decode
+//! of [`KvStore::dense`]: the fused path ([`crate::model::attention`])
+//! walks the planes through [`KvTiles`] — a borrowed, zero-copy tile
+//! view over a store's packed lanes and group scales — scoring `QK^T`
+//! on the integer lanes directly and decoding only the `V` column span
+//! it needs per tile. The iterator covers rows `0..rows` in order, every
+//! tile `tile_rows` long except a shorter final tail:
+//!
+//! ```
+//! use hif4::model::kv::{KvCache, KvCacheType};
+//! use hif4::model::zoo;
+//!
+//! // A quantized cache for one sequence, filled with 100 synthetic rows.
+//! let cfg = zoo::llama2_tiny();
+//! let mut cache = KvCache::new(&cfg, KvCacheType::HIF4);
+//! cache.fill_synthetic(100, 7);
+//!
+//! // Walk layer 0's K planes in 48-row tiles: 48 + 48 + a 4-row tail.
+//! let mut covered = 0;
+//! for tile in cache.k_tiles(0, cache.len(), 48).expect("quantized caches tile") {
+//!     assert_eq!(tile.start(), covered);
+//!     covered += tile.rows();
+//!     // Each tile row is one packed plane: an i8 lane per cached value
+//!     // plus one f64 scale per group (lane index == column index)…
+//!     assert_eq!(tile.row_lanes(0).len(), tile.groups_per_row() * tile.quant().group());
+//!     assert_eq!(tile.row_scales(0).len(), tile.groups_per_row());
+//!     // …and any column span decodes to f32 without touching the rest.
+//!     let mut head = vec![0f32; tile.rows() * 16];
+//!     tile.decode_cols(0..16, &mut head);
+//! }
+//! assert_eq!(covered, 100);
+//! ```
+//!
+//! F32 stores have no planes to tile ([`KvCache::k_tiles`] returns
+//! `None`), which is exactly the runtime signal the attention dispatcher
+//! uses to fall back to replay.
 
 use crate::dotprod::quant_tensor::{decode_plane, encode_row_planes};
 use crate::formats::QuantKind;
@@ -142,6 +181,144 @@ impl KvDense<'_> {
     }
 }
 
+/// Iterator over a quantized store's packed planes in row tiles — the
+/// fused attention path's view of the KV cache (see the module docs for
+/// a worked example). Yields [`KvTile`]s covering rows `0..rows` in
+/// ascending order; every tile spans `tile_rows` rows except a shorter
+/// final tail. Borrowed and zero-copy: no plane is decoded until a
+/// consumer asks via [`KvTile::decode_cols`].
+pub struct KvTiles<'a> {
+    quant: QuantKind,
+    kvd: usize,
+    groups_per_row: usize,
+    lanes: &'a [i8],
+    scales: &'a [f64],
+    rows: usize,
+    tile_rows: usize,
+    next: usize,
+}
+
+impl KvTiles<'_> {
+    /// The format every tile's planes were encoded with.
+    pub fn quant(&self) -> QuantKind {
+        self.quant
+    }
+
+    /// Plane groups per row (`kvd` rounded up to whole groups) — the
+    /// scratch-sizing constant consumers need before the first tile.
+    pub fn groups_per_row(&self) -> usize {
+        self.groups_per_row
+    }
+}
+
+impl<'a> Iterator for KvTiles<'a> {
+    type Item = KvTile<'a>;
+
+    fn next(&mut self) -> Option<KvTile<'a>> {
+        if self.next >= self.rows {
+            return None;
+        }
+        let start = self.next;
+        let rows = self.tile_rows.min(self.rows - start);
+        self.next += rows;
+        let g = self.groups_per_row;
+        let row_lanes = g * self.quant.group();
+        Some(KvTile {
+            quant: self.quant,
+            kvd: self.kvd,
+            groups_per_row: g,
+            start,
+            rows,
+            lanes: &self.lanes[start * row_lanes..(start + rows) * row_lanes],
+            scales: &self.scales[start * g..(start + rows) * g],
+        })
+    }
+}
+
+/// One tile of packed KV planes: `rows` consecutive cached positions
+/// starting at absolute position [`KvTile::start`], borrowed straight
+/// from the store.
+///
+/// Layout contract (what the integer attention kernel scores against):
+/// each tile-local row `r` owns `groups_per_row × group` i8 lanes
+/// ([`KvTile::row_lanes`]) and `groups_per_row` f64 scales
+/// ([`KvTile::row_scales`]); **lane index equals column index** within
+/// the row (group `u` occupies lanes `u·group..(u+1)·group`, padding
+/// beyond the row width `kvd` is zero lanes in the final group). A
+/// column `c` therefore decodes as `scales[c / group] · lanes[c] /
+/// LANE_UNIT`, which is what [`KvTile::decode_cols`] evaluates —
+/// bit-identical to the dense whole-store decode.
+pub struct KvTile<'a> {
+    quant: QuantKind,
+    kvd: usize,
+    groups_per_row: usize,
+    start: usize,
+    rows: usize,
+    lanes: &'a [i8],
+    scales: &'a [f64],
+}
+
+impl KvTile<'_> {
+    /// Absolute cache position of the tile's first row.
+    pub fn start(&self) -> usize {
+        self.start
+    }
+
+    /// Rows in this tile (`tile_rows`, except the shorter final tail).
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// The format the planes were encoded with.
+    pub fn quant(&self) -> QuantKind {
+        self.quant
+    }
+
+    /// Plane groups per row (`kvd` rounded up to whole groups).
+    pub fn groups_per_row(&self) -> usize {
+        self.groups_per_row
+    }
+
+    /// Tile-local row `r`'s packed i8 lanes (`groups_per_row × group`
+    /// long; lane index == column index, zero-padded past `kvd`).
+    pub fn row_lanes(&self, r: usize) -> &[i8] {
+        let w = self.groups_per_row * self.quant.group();
+        &self.lanes[r * w..(r + 1) * w]
+    }
+
+    /// Tile-local row `r`'s per-group f64 scales (`groups_per_row` long).
+    pub fn row_scales(&self, r: usize) -> &[f64] {
+        &self.scales[r * self.groups_per_row..(r + 1) * self.groups_per_row]
+    }
+
+    /// Decode the column span `cols` of **every** tile row into `out`
+    /// (row-major, `rows × cols.len()`), walking group boundaries so each
+    /// value is `scale · lane / LANE_UNIT` — bit-identical to the same
+    /// columns of [`KvStore::dense`]'s whole-row decode, since both run
+    /// the per-element [`decode_plane`] kernel with the same scale. The
+    /// fused attention path uses this for the `V` head slice only; `K`
+    /// never decodes at all.
+    pub fn decode_cols(&self, cols: std::ops::Range<usize>, out: &mut [f32]) {
+        assert!(cols.end <= self.kvd, "column span exceeds row width");
+        let w = cols.end - cols.start;
+        assert_eq!(out.len(), self.rows * w, "decode_cols buffer must be rows × span");
+        let group = self.quant.group();
+        for r in 0..self.rows {
+            let lanes = self.row_lanes(r);
+            let scales = self.row_scales(r);
+            let dst = &mut out[r * w..(r + 1) * w];
+            let mut c = cols.start;
+            while c < cols.end {
+                let u = c / group;
+                let stop = cols.end.min((u + 1) * group);
+                let span = &mut dst[c - cols.start..stop - cols.start];
+                decode_plane(self.quant, &lanes[c..stop], scales[u], span);
+                c = stop;
+            }
+        }
+    }
+}
+
 impl KvStore {
     fn new(kind: KvCacheType, kvd: usize) -> KvStore {
         match kind {
@@ -198,6 +375,28 @@ impl KvStore {
                 }
                 KvDense { kvd: *kvd, data: DenseData::Owned(out) }
             }
+        }
+    }
+
+    /// Tile the first `rows` stored rows into [`KvTiles`] of `tile_rows`
+    /// each (shorter tail). Quantized stores only — an f32 store has no
+    /// packed planes to walk and returns `None`, which is the attention
+    /// dispatcher's replay-fallback signal.
+    pub(crate) fn tiles(&self, rows: usize, tile_rows: usize) -> Option<KvTiles<'_>> {
+        assert!(tile_rows > 0, "tile_rows must be positive");
+        assert!(rows <= self.rows(), "cannot tile rows that were never appended");
+        match self {
+            KvStore::F32 { .. } => None,
+            KvStore::Quant { quant, kvd, groups_per_row, lanes, scales } => Some(KvTiles {
+                quant: *quant,
+                kvd: *kvd,
+                groups_per_row: *groups_per_row,
+                lanes,
+                scales,
+                rows,
+                tile_rows,
+                next: 0,
+            }),
         }
     }
 
@@ -339,6 +538,40 @@ impl KvCache {
         self.kind == kind
             && self.layers.len() == cfg.n_layers
             && self.layers.iter().all(|l| l.k.kvd() == kvd && l.v.kvd() == kvd)
+    }
+
+    /// Tile layer `layer`'s **K** planes over cached positions `0..rows`
+    /// (see [`KvTiles`]; `None` for f32 caches). `rows` may be less than
+    /// [`KvCache::len`] — attention scores a query at position `p`
+    /// against rows `0..=p` only.
+    pub fn k_tiles(&self, layer: usize, rows: usize, tile_rows: usize) -> Option<KvTiles<'_>> {
+        self.layers[layer].k.tiles(rows, tile_rows)
+    }
+
+    /// Tile layer `layer`'s **V** planes (the `PV` side of
+    /// [`KvCache::k_tiles`]).
+    pub fn v_tiles(&self, layer: usize, rows: usize, tile_rows: usize) -> Option<KvTiles<'_>> {
+        self.layers[layer].v.tiles(rows, tile_rows)
+    }
+
+    /// Append `rows` synthetic Gaussian K/V rows to every layer and
+    /// advance the position count — a fixture for long-context benches
+    /// and doctests that need a populated cache without paying an O(T²)
+    /// model prefill. Deterministic in `seed`. The rows are *not* a real
+    /// model's activations; use it only where both measured paths read
+    /// the same cache (fused-vs-replay comparisons).
+    pub fn fill_synthetic(&mut self, rows: usize, seed: u64) {
+        let mut rng = crate::tensor::Rng::seed(seed);
+        for l in &mut self.layers {
+            let kvd = l.k.kvd();
+            let k = Matrix::randn(rows, kvd, 1.0, &mut rng);
+            let v = Matrix::randn(rows, kvd, 1.0, &mut rng);
+            for r in 0..rows {
+                l.k.append_row(k.row(r));
+                l.v.append_row(v.row(r));
+            }
+        }
+        self.advance(rows);
     }
 
     pub(crate) fn advance(&mut self, n: usize) {
@@ -563,5 +796,107 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn tiles_cover_rows_in_order_with_tail() {
+        // 11 rows in 4-row tiles: 4 + 4 + 3 — every row exactly once,
+        // starts ascending, and each tile's planes are the same bytes the
+        // store holds for those rows.
+        let mut rng = Rng::seed(20);
+        for kind in QuantKind::ALL {
+            let kvd = 24usize; // padded tail group for every format
+            let rows = Matrix::randn(11, kvd, 1.0, &mut rng);
+            let mut store = KvStore::new(KvCacheType::Quant(kind), kvd);
+            for r in 0..rows.rows {
+                store.append_row(rows.row(r));
+            }
+            let gpr = kvd.div_ceil(kind.group());
+            let mut covered = 0usize;
+            let mut sizes = Vec::new();
+            for tile in store.tiles(11, 4).unwrap() {
+                assert_eq!(tile.start(), covered, "{kind}");
+                assert_eq!(tile.quant(), kind);
+                assert_eq!(tile.groups_per_row(), gpr);
+                for r in 0..tile.rows() {
+                    assert_eq!(tile.row_lanes(r).len(), gpr * kind.group());
+                    assert_eq!(tile.row_scales(r).len(), gpr);
+                }
+                covered += tile.rows();
+                sizes.push(tile.rows());
+            }
+            assert_eq!(covered, 11, "{kind}");
+            assert_eq!(sizes, vec![4, 4, 3], "{kind}");
+            // Partial visibility: tiling fewer rows than stored stops early.
+            let partial: usize = store.tiles(6, 4).unwrap().map(|t| t.rows()).sum();
+            assert_eq!(partial, 6);
+        }
+        // F32 stores have nothing to tile — the replay-fallback signal.
+        let store = KvStore::new(KvCacheType::F32, 16);
+        assert!(store.tiles(0, 4).is_none());
+    }
+
+    #[test]
+    fn decode_cols_is_bitwise_identical_to_dense() {
+        // Any column span — group-aligned, group-crossing, or inside the
+        // zero-padded tail group — must decode to exactly the bits the
+        // whole-row dense view produces for those columns.
+        let mut rng = Rng::seed(21);
+        for kind in QuantKind::ALL {
+            let kvd = 40usize;
+            let rows = Matrix::randn(9, kvd, 0.8, &mut rng);
+            let mut store = KvStore::new(KvCacheType::Quant(kind), kvd);
+            for r in 0..rows.rows {
+                store.append_row(rows.row(r));
+            }
+            let dense = store.dense(9);
+            for span in [0..kvd, 0..16, 16..32, 12..29, 33..40] {
+                let w = span.end - span.start;
+                for tile in store.tiles(9, 4).unwrap() {
+                    let mut out = vec![0f32; tile.rows() * w];
+                    tile.decode_cols(span.clone(), &mut out);
+                    for r in 0..tile.rows() {
+                        let got: Vec<u32> =
+                            out[r * w..(r + 1) * w].iter().map(|x| x.to_bits()).collect();
+                        let want: Vec<u32> = dense.row(tile.start() + r)[span.clone()]
+                            .iter()
+                            .map(|x| x.to_bits())
+                            .collect();
+                        assert_eq!(got, want, "{kind} span {span:?} row {}", tile.start() + r);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fill_synthetic_populates_every_layer_deterministically() {
+        let c = cfg();
+        let mut a = KvCache::new(&c, KvCacheType::HIF4);
+        let mut b = KvCache::new(&c, KvCacheType::HIF4);
+        a.fill_synthetic(10, 42);
+        b.fill_synthetic(10, 42);
+        assert_eq!(a.len(), 10);
+        assert_eq!(a.resident_bytes(), b.resident_bytes());
+        for layer in 0..c.n_layers {
+            let da = a.layers[layer].k.dense(10);
+            let db = b.layers[layer].k.dense(10);
+            for r in 0..10 {
+                assert_eq!(da.row(r), db.row(r), "layer {layer} row {r}");
+            }
+        }
+        // Different seeds give different contents.
+        let mut d = KvCache::new(&c, KvCacheType::HIF4);
+        d.fill_synthetic(10, 43);
+        let ra = a.layers[0].k.dense(10);
+        let rd = d.layers[0].k.dense(10);
+        assert_ne!(ra.row(0), rd.row(0));
+        // And the f32 backend works too (used by replay-side bench runs).
+        let mut f = KvCache::new(&c, KvCacheType::F32);
+        f.fill_synthetic(5, 1);
+        assert_eq!(f.len(), 5);
+        assert!(f.k_tiles(0, 5, 2).is_none());
+        assert!(a.k_tiles(0, 10, 4).is_some());
+        assert!(a.v_tiles(1, 10, 4).is_some());
     }
 }

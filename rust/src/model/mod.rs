@@ -2,6 +2,7 @@
 //! (calibration, eval, and genuine training of the stand-in LLMs), and the
 //! model zoo mirroring the paper's architecture coverage.
 
+pub mod attention;
 pub mod config;
 pub mod kv;
 pub mod train;

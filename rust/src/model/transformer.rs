@@ -27,6 +27,7 @@
 //! → RMSNorm → {SwiGLU|GELU|MoE} + residual] → RMSNorm → LM head. RoPE on
 //! q/k. All linears are `Matrix` in out×in layout (`y = x · Wᵀ`).
 
+use super::attention::{attn_path, attn_tile_rows, fused_attention_seq, AttnPath, FusedAttnCall};
 use super::config::{Attention, Ffn, LayerKind, ModelConfig};
 use super::kv::{KvCache, KvCacheType};
 use crate::dotprod::{Kernel, PackedQuantizedMatrix, QuantizedMatrix};
@@ -648,19 +649,37 @@ impl Transformer {
     /// a one-token suffix is a *decode step*; the two mix freely in one
     /// call, which is what continuous batching exploits. Per-sequence
     /// results are **bit-identical** regardless of which other sequences
-    /// share the batch, of the thread count, and — for
-    /// [`KvCacheType::F32`] caches — of whether the prefix was cached or
-    /// recomputed: linears are row-independent, attention is
-    /// per-sequence, and the score/softmax/context loops replay
-    /// [`causal_attention_fwd`]'s exact operation order. Quantized caches
-    /// are bit-identical to a full recompute under
-    /// [`QuantPolicy::kv`]`= Some(Quant(kind))` (`tests/decode_parity.rs`).
+    /// share the batch and of the thread count: linears are
+    /// row-independent and attention is per-sequence.
+    ///
+    /// Attention over quantized caches runs the process-wide
+    /// [`attn_path`] knob's schedule (default
+    /// [`AttnPath::Fused`] — the tiled integer kernel of
+    /// [`super::attention`]); f32 caches always replay. Cached-vs-
+    /// recompute equality contracts, per path (`tests/decode_parity.rs`):
+    ///
+    /// * **f32 cache** — bit-identical to the full forward (the replay
+    ///   score/softmax/context loops reproduce
+    ///   [`causal_attention_fwd`]'s exact operation order).
+    /// * **quantized cache, [`AttnPath::Replay`]** — bit-identical to a
+    ///   full recompute under [`QuantPolicy::kv`]`= Some(Quant(kind))`.
+    /// * **quantized cache, [`AttnPath::Fused`]** — logits are
+    ///   tolerance-bounded against replay (8-bit query rounding, online
+    ///   softmax; DESIGN.md §14), greedy tokens identical.
     ///
     /// Quantized serving composes: with
     /// [`Transformer::prepack_quantized_weights`] applied, every linear
     /// here runs the fixed-point QGEMM over the prepacked weight planes.
     pub fn forward_cached(&self, seqs: &mut [CachedSeq<'_>]) -> Matrix {
-        let (x, _) = self.forward_cached_hidden(seqs);
+        self.forward_cached_with(seqs, attn_path())
+    }
+
+    /// [`Transformer::forward_cached`] with the attention schedule given
+    /// explicitly instead of read from the process-wide knob — the
+    /// comparison surface the parity suites are built on (two paths in
+    /// one process, no knob mutation, no cross-test races).
+    pub fn forward_cached_with(&self, seqs: &mut [CachedSeq<'_>], attn: AttnPath) -> Matrix {
+        let (x, _) = self.forward_cached_hidden(seqs, attn);
         let (normed_f, _) = rmsnorm_fwd(&x, &self.w.norm_f);
         self.linear_fwd(&self.w.head, &normed_f)
     }
@@ -674,7 +693,13 @@ impl Transformer {
     /// [`Transformer::forward_cached`] (rmsnorm and the head linear are
     /// row-independent). Every sequence must feed ≥ 1 token.
     pub fn forward_cached_last(&self, seqs: &mut [CachedSeq<'_>]) -> Matrix {
-        let (x, new_lens) = self.forward_cached_hidden(seqs);
+        self.forward_cached_last_with(seqs, attn_path())
+    }
+
+    /// [`Transformer::forward_cached_last`] with an explicit attention
+    /// schedule (see [`Transformer::forward_cached_with`]).
+    pub fn forward_cached_last_with(&self, seqs: &mut [CachedSeq<'_>], attn: AttnPath) -> Matrix {
+        let (x, new_lens) = self.forward_cached_hidden(seqs, attn);
         let d = self.cfg.d_model;
         let mut last = Matrix::zeros(new_lens.len(), d);
         let mut base = 0usize;
@@ -691,9 +716,15 @@ impl Transformer {
     /// every layer against the caches (appending K/V), advance the
     /// caches, and return the final hidden states plus per-sequence
     /// suffix lengths.
-    fn forward_cached_hidden(&self, seqs: &mut [CachedSeq<'_>]) -> (Matrix, Vec<usize>) {
-        let new_lens: Vec<usize> = seqs.iter().map(|s| s.tokens.len()).collect();
-        let starts: Vec<usize> = seqs.iter().map(|s| s.cache.len()).collect();
+    fn forward_cached_hidden(
+        &self,
+        seqs: &mut [CachedSeq<'_>],
+        attn: AttnPath,
+    ) -> (Matrix, Vec<usize>) {
+        // Per-sequence (suffix length, cached prefix length) spans.
+        let spans: Vec<(usize, usize)> =
+            seqs.iter().map(|s| (s.tokens.len(), s.cache.len())).collect();
+        let new_lens: Vec<usize> = spans.iter().map(|&(n, _)| n).collect();
         let bt: usize = new_lens.iter().sum();
         let d = self.cfg.d_model;
         let mut x = Matrix::zeros(bt, d);
@@ -712,7 +743,7 @@ impl Transformer {
         }
         for (li, layer) in self.w.layers.iter().enumerate() {
             let (normed1, _) = rmsnorm_fwd(&x, &layer.norm1);
-            let attn_out = self.attention_cached(li, layer, &normed1, &new_lens, &starts, seqs);
+            let attn_out = self.attention_cached(li, layer, &normed1, &spans, seqs, attn);
             let x1 = add(&x, &attn_out);
             let (normed2, _) = rmsnorm_fwd(&x1, &layer.norm2);
             let ffn_out = self.ffn_fwd(li, layer, &normed2, None, None, None);
@@ -726,23 +757,29 @@ impl Transformer {
 
     /// Cached attention: project the new rows, RoPE them at their absolute
     /// positions, append K/V to each sequence's cache pages, then score
-    /// every new row against its full cached prefix. Quantized pages
-    /// decode their lane planes once per call (one multiply per element);
-    /// f32 pages borrow in place.
+    /// every new row against its full cached prefix — either through the
+    /// fused tiled kernel on the packed planes ([`AttnPath::Fused`],
+    /// quantized pages only) or by the replay loop below, which decodes
+    /// the page dense and re-runs the exact two-pass softmax. The
+    /// fallback is per sequence: an f32 page in a fused-path batch simply
+    /// replays, and `spans` carries each sequence's (suffix, prefix)
+    /// lengths.
     fn attention_cached(
         &self,
         li: usize,
         layer: &LayerWeights,
         normed: &Matrix,
-        new_lens: &[usize],
-        starts: &[usize],
+        spans: &[(usize, usize)],
         seqs: &mut [CachedSeq<'_>],
+        attn: AttnPath,
     ) -> Matrix {
         let cfg = &self.cfg;
         let (heads, hd) = (cfg.n_heads, cfg.head_dim);
         let kv_heads = cfg.kv_heads();
         let group = heads / kv_heads;
         let scale = 1.0 / (hd as f32).sqrt();
+        let new_lens: Vec<usize> = spans.iter().map(|&(n, _)| n).collect();
+        let starts: Vec<usize> = spans.iter().map(|&(_, s)| s).collect();
         let q = self.linear_fwd(&layer.wq, normed);
         let kv_in = match &layer.wdkv {
             Some(dkv) => self.linear_fwd(dkv, normed),
@@ -751,21 +788,39 @@ impl Transformer {
         let mut k = self.linear_fwd(&layer.wk, &kv_in);
         let v = self.linear_fwd(&layer.wv, &kv_in);
         let mut qr = q;
-        rope_fwd_from(&mut qr, new_lens, starts, heads, hd, cfg.rope_base);
-        rope_fwd_from(&mut k, new_lens, starts, kv_heads, hd, cfg.rope_base);
+        rope_fwd_from(&mut qr, &new_lens, &starts, heads, hd, cfg.rope_base);
+        rope_fwd_from(&mut k, &new_lens, &starts, kv_heads, hd, cfg.rope_base);
 
         let mut ctx = Matrix::zeros(qr.rows, heads * hd);
         let mut scores: Vec<f32> = Vec::new();
         let mut base = 0usize;
         for (si, s) in seqs.iter_mut().enumerate() {
-            let t_new = new_lens[si];
-            let start = starts[si];
+            let (t_new, start) = spans[si];
             let lkv = &mut s.cache.layers[li];
             for r in base..base + t_new {
                 lkv.k.append_row(k.row(r));
                 lkv.v.append_row(v.row(r));
             }
             let t_ctx = start + t_new;
+            if attn == AttnPath::Fused {
+                let call = FusedAttnCall {
+                    lkv: &*lkv,
+                    start,
+                    t_new,
+                    qr: &qr,
+                    base,
+                    heads,
+                    kv_heads,
+                    hd,
+                    scale,
+                    tile_rows: attn_tile_rows(),
+                };
+                if fused_attention_seq(&call, &mut ctx) {
+                    base += t_new;
+                    continue;
+                }
+                // No packed planes (f32 page): fall through to replay.
+            }
             let kd = lkv.k.dense(t_ctx);
             let vd = lkv.v.dense(t_ctx);
             for h in 0..heads {
@@ -811,8 +866,20 @@ impl Transformer {
     /// Greedy-generate `n_new` tokens for `prompt` with a KV cache of the
     /// given kind: one prefill, then one single-token decode step per
     /// token. Ties break to the lowest index (the serving responder's
-    /// argmax).
+    /// argmax). Attention runs the process-wide [`attn_path`] schedule.
     pub fn generate_greedy(&self, prompt: &[usize], n_new: usize, kind: KvCacheType) -> Vec<usize> {
+        self.generate_greedy_with(prompt, n_new, kind, attn_path())
+    }
+
+    /// [`Transformer::generate_greedy`] with an explicit attention
+    /// schedule (see [`Transformer::forward_cached_with`]).
+    pub fn generate_greedy_with(
+        &self,
+        prompt: &[usize],
+        n_new: usize,
+        kind: KvCacheType,
+        attn: AttnPath,
+    ) -> Vec<usize> {
         assert!(!prompt.is_empty(), "generate_greedy needs a non-empty prompt");
         let mut cache = KvCache::new(&self.cfg, kind);
         let mut out = Vec::with_capacity(n_new);
@@ -820,7 +887,7 @@ impl Transformer {
         for _ in 0..n_new {
             let logits = {
                 let mut seqs = [CachedSeq { tokens: &feed, cache: &mut cache }];
-                self.forward_cached_last(&mut seqs)
+                self.forward_cached_last_with(&mut seqs, attn)
             };
             let (next, _) = greedy_from_row(logits.row(0));
             out.push(next);
@@ -1579,6 +1646,11 @@ mod tests {
 
     #[test]
     fn hif4_cached_prefill_matches_kv_quant_reference_bitwise() {
+        // Replay path explicitly: the bitwise cached-vs-recompute
+        // contract belongs to replay attention (the fused path is
+        // tolerance-bounded instead — see tests/decode_parity.rs). The
+        // explicit `_with` call keeps this independent of the
+        // process-wide HIF4_ATTN knob.
         let m = Transformer::init(tiny_cfg(Attention::Mha, Ffn::SwiGlu), 33);
         let prompt = vec![2usize, 6, 10, 14, 3, 7];
         let policy = QuantPolicy { act: None, kv: Some(KvCacheType::HIF4) };
@@ -1586,12 +1658,41 @@ mod tests {
         let mut cache = KvCache::new(&m.cfg, KvCacheType::HIF4);
         let cached = {
             let mut seqs = [CachedSeq { tokens: &prompt, cache: &mut cache }];
-            m.forward_cached(&mut seqs)
+            m.forward_cached_with(&mut seqs, AttnPath::Replay)
         };
         assert_eq!(bits(&reference), bits(&cached));
         // And the HiF4 cache genuinely perturbs vs the clean forward.
         let clean = m.forward(&[prompt], None, None, None);
         assert!(bits(&clean) != bits(&cached), "HiF4 KV codec must be active");
+    }
+
+    #[test]
+    fn fused_prefill_matches_replay_tokens_and_bounded_logits() {
+        // The fused tiled path on the same model/cache: logits within
+        // the §14 parity tolerance of replay, argmax rows identical.
+        let m = Transformer::init(tiny_cfg(Attention::Gqa { kv_heads: 2 }, Ffn::SwiGlu), 33);
+        let prompt = vec![2usize, 6, 10, 14, 3, 7];
+        let run = |attn: AttnPath| {
+            let mut cache = KvCache::new(&m.cfg, KvCacheType::HIF4);
+            let mut seqs = [CachedSeq { tokens: &prompt, cache: &mut cache }];
+            m.forward_cached_with(&mut seqs, attn)
+        };
+        let fused = run(AttnPath::Fused);
+        let replay = run(AttnPath::Replay);
+        assert!(bits(&fused) != bits(&replay), "fused path must actually engage");
+        for r in 0..fused.rows {
+            for (a, b) in fused.row(r).iter().zip(replay.row(r)) {
+                assert!((a - b).abs() <= 5e-2 * (1.0 + b.abs()), "row {r}: {a} vs {b}");
+            }
+        }
+        // The row greedy decode reads must agree on its argmax; whole
+        // generations are pinned token-identical in tests/decode_parity.
+        let last = fused.rows - 1;
+        assert_eq!(
+            greedy_from_row(fused.row(last)).0,
+            greedy_from_row(replay.row(last)).0,
+            "final-row argmax"
+        );
     }
 
     #[test]

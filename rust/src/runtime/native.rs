@@ -22,7 +22,12 @@
 //! f32 or any block format encoded on append), and one
 //! [`DecodeEngine::step`]
 //! advances a mixed batch of prefilling and decoding sequences by one
-//! greedy token through [`Transformer::forward_cached`].
+//! greedy token through [`Transformer::forward_cached`]. Attention over
+//! quantized pages follows the process-wide
+//! [`attn_path`](crate::model::attention::attn_path) knob (`HIF4_ATTN`
+//! / `--attn`, default fused — the tiled integer kernel over the packed
+//! planes); f32 pages always replay. Greedy tokens are identical either
+//! way, so the continuous-batching invariants below hold under both.
 //!
 //! [prepack]: crate::model::transformer::Transformer::prepack_quantized_weights
 
@@ -93,6 +98,16 @@ impl DecodeEngine {
     /// admission gate validates against).
     pub fn max_prompt(&self) -> usize {
         self.max_prompt
+    }
+
+    /// Label of the attention schedule this engine's steps actually run
+    /// (`"fused"` / `"replay"`): the process-wide knob resolved against
+    /// the cache kind — an f32-cache engine reports `"replay"` whatever
+    /// the knob says, since there are no packed planes to fuse over.
+    /// Logged at server startup so a serving measurement is attributable.
+    pub fn attn_label(&self) -> &'static str {
+        crate::model::attention::effective_attn_path(crate::model::attention::attn_path(), self.kv)
+            .label()
     }
 
     /// Worst-case resident KV bytes one cached position costs across all

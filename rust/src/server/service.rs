@@ -266,6 +266,14 @@ impl Server {
         let engine = Arc::new(DecodeEngine::new(model, cfg.kv, cfg.seq.max(1)));
         let metrics = Arc::new(Metrics::new());
         metrics.set_format_tag(weight_format, cfg.kv.label(), weight_wire);
+        // One startup line naming the resolved attention schedule —
+        // serving measurements must be attributable to fused vs replay
+        // (greedy tokens are identical; throughput is not).
+        eprintln!(
+            "native server: weights {weight_format}, kv {}, attention {}",
+            cfg.kv.label(),
+            engine.attn_label()
+        );
         let stop = Arc::new(AtomicBool::new(false));
         let gate = Arc::new(AdmissionGate::new(
             cfg.resilience.max_queue,
