@@ -14,11 +14,16 @@
 //!    token-identical to the baseline;
 //! 3. **recovery** — a single guaranteed `panic_at_step`: wall time from
 //!    the injected crash (first `Crashed` frame) until the retried
-//!    request completes.
+//!    request completes;
+//! 4. **shared_prefix** — prefix cache on over small pages: every client
+//!    re-sends a common 16-token system prefix plus a unique tail, so
+//!    prefills attach refcounted shared pages instead of recomputing.
+//!    Reports hit rate, resident bytes saved, and the same latency
+//!    percentiles; survivors must stay token-identical to greedy decode.
 //!
 //! Writes `BENCH_serving.json` (offered/goodput/shed/expired/restarts/
-//! retries, p50/p99/p999, recovery ms). `HIF4_BENCH_QUICK=1` shrinks the
-//! request counts for CI.
+//! retries, p50/p99/p999, recovery ms, prefix hit rate + bytes saved).
+//! `HIF4_BENCH_QUICK=1` shrinks the request counts for CI.
 
 use hif4::model::kv::KvCacheType;
 use hif4::model::transformer::Transformer;
@@ -39,13 +44,26 @@ const MAX_PROMPT: usize = 32;
 const N_NEW: u16 = 4;
 
 fn start_server(model: Arc<Transformer>, resilience: ResilienceConfig) -> Server {
-    let cfg = NativeServerConfig {
+    start_server_tuned(model, resilience, |_| {})
+}
+
+/// `tune` adjusts the paging knobs (prefix cache, page height) on top of
+/// the env-resolved defaults — the shared_prefix phase forces them on
+/// regardless of the CI matrix leg.
+fn start_server_tuned(
+    model: Arc<Transformer>,
+    resilience: ResilienceConfig,
+    tune: impl FnOnce(&mut NativeServerConfig),
+) -> Server {
+    let mut cfg = NativeServerConfig {
         policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
         workers: 2,
         seq: MAX_PROMPT,
         kv: KvCacheType::F32,
         resilience,
+        ..Default::default()
     };
+    tune(&mut cfg);
     Server::start_native(model, cfg, "127.0.0.1:0").unwrap()
 }
 
@@ -151,10 +169,14 @@ fn percentiles(server: &Server) -> (u64, u64, u64) {
 }
 
 fn phase_json(server: &Server, st: &PhaseStats) -> Json {
+    Json::obj(phase_fields(server, st))
+}
+
+fn phase_fields(server: &Server, st: &PhaseStats) -> Vec<(&'static str, Json)> {
     let (p50, p99, p999) = percentiles(server);
     let secs = st.elapsed.as_secs_f64().max(1e-9);
     let ord = Ordering::Relaxed;
-    Json::obj(vec![
+    vec![
         ("offered", Json::num(st.offered as f64)),
         ("completed", Json::num(st.completed as f64)),
         ("expired", Json::num(st.expired as f64)),
@@ -172,7 +194,7 @@ fn phase_json(server: &Server, st: &PhaseStats) -> Json {
         ("p50_us", Json::num(p50 as f64)),
         ("p99_us", Json::num(p99 as f64)),
         ("p999_us", Json::num(p999 as f64)),
-    ])
+    ]
 }
 
 /// Recovery probe: sequential requests against a server whose fault plan
@@ -282,14 +304,67 @@ fn main() {
     // Phase 3: recovery time.
     let recovery_ms = recovery_probe(Arc::clone(&model), &reference, &prompt_set);
 
+    // Phase 4: shared-prefix workload — dedup on, 8-row pages so the
+    // 16-token system prefix is exactly two sharable chunks.
+    let shared: Vec<usize> =
+        (0..16).map(|i| 1 + (i * 13) % (model.cfg.vocab - 1)).collect();
+    let prefix_prompts: Vec<Vec<usize>> = (0..8)
+        .map(|s| {
+            let mut p = shared.clone();
+            p.extend((0..4).map(|i| 1 + (i * 7 + s * 31 + 5) % (model.cfg.vocab - 1)));
+            p
+        })
+        .collect();
+    let prefix_reference: Vec<Vec<usize>> = prefix_prompts
+        .iter()
+        .map(|p| model.generate_greedy(p, N_NEW as usize, KvCacheType::F32))
+        .collect();
+    let prefix_server =
+        start_server_tuned(Arc::clone(&model), ResilienceConfig::default(), |cfg| {
+            cfg.prefix_cache = true;
+            cfg.page_rows = 8;
+        });
+    {
+        // Warmup: one completed prefill registers the shared prefix, so
+        // every driven request below can hit it.
+        let mut c = Client::connect(prefix_server.addr).unwrap();
+        let warm = c.generate(&Request::generate(999_999, shared.clone(), 1)).unwrap();
+        assert_eq!(warm.last().map(|f| f.status), Some(Status::Ok), "warmup must complete");
+    }
+    let shared_st =
+        drive(&prefix_server, n_clients, n_requests, &prefix_reference, &prefix_prompts, false);
+    assert_eq!(shared_st.mismatches, 0, "prefix sharing must not change tokens");
+    let pm = &prefix_server.metrics;
+    assert!(
+        pm.prefix_hits.load(Ordering::Relaxed) > 0,
+        "a shared-prefix workload must hit the prefix cache"
+    );
+    assert!(pm.prefix_bytes_saved() > 0, "shared pages must show up as resident bytes saved");
+    let mut shared_fields = phase_fields(&prefix_server, &shared_st);
+    shared_fields.push(("prefix_hit_rate", Json::num(pm.prefix_hit_rate())));
+    shared_fields.push((
+        "prefix_hits",
+        Json::num(pm.prefix_hits.load(Ordering::Relaxed) as f64),
+    ));
+    shared_fields.push((
+        "prefix_misses",
+        Json::num(pm.prefix_misses.load(Ordering::Relaxed) as f64),
+    ));
+    shared_fields.push(("resident_bytes_saved", Json::num(pm.prefix_bytes_saved() as f64)));
+    shared_fields
+        .push(("shared_refcount_high_water", Json::num(pm.shared_ref_high_water() as f64)));
+    let shared_json = Json::obj(shared_fields);
+
     // Human-readable table + machine-readable artifact.
     let mut t = Table::new(
         "Serving soak: offered vs goodput",
         &["phase", "offered", "ok", "goodput r/s", "shed", "restarts", "p99 us"],
     );
-    for (label, server, st) in
-        [("baseline", &baseline_server, &base), ("chaos", &chaos_server, &chaos)]
-    {
+    for (label, server, st) in [
+        ("baseline", &baseline_server, &base),
+        ("chaos", &chaos_server, &chaos),
+        ("shared_prefix", &prefix_server, &shared_st),
+    ] {
         let secs = st.elapsed.as_secs_f64().max(1e-9);
         t.row(vec![
             label.into(),
@@ -303,12 +378,18 @@ fn main() {
     }
     t.print();
     println!("recovery after injected crash: {recovery_ms:.1} ms");
+    println!(
+        "shared prefix: hit rate {:.3}, resident bytes saved {}",
+        pm.prefix_hit_rate(),
+        pm.prefix_bytes_saved()
+    );
 
     let doc = Json::obj(vec![
         ("bench", Json::str("serving_soak")),
         ("quick", Json::Bool(quick)),
         ("baseline", base_json),
         ("chaos", chaos_json),
+        ("shared_prefix", shared_json),
         (
             "recovery",
             Json::obj(vec![

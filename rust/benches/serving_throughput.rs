@@ -85,7 +85,7 @@ fn main() {
                 workers,
                 seq: cfg.max_seq,
                 kv: KvCacheType::F32,
-                resilience: Default::default(),
+                ..Default::default()
             },
             "127.0.0.1:0",
         )

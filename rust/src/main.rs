@@ -16,8 +16,17 @@
 //!              [--max-queue 0]               # bounded admission: queue depth
 //!                                            # cap (0 = unbounded)
 //!              [--kv-budget-mb 0]            # bounded admission: reserved KV
-//!                                            # byte budget, native engine
-//!                                            # (0 = unbounded)
+//!                                            # budget, native engine (0 =
+//!                                            # unbounded; rounded to whole
+//!                                            # pages, reserved page-wise)
+//!              [--prefix-cache]              # shared-prefix dedup over the
+//!                                            # global page pool (native;
+//!                                            # HIF4_PREFIX_CACHE env default)
+//!              [--prefill-chunk 0]           # prefill tokens per decode step
+//!                                            # (native; 0 = whole prompt;
+//!                                            # HIF4_PREFILL_CHUNK env default)
+//!              [--kv-page-rows 64]           # rows per KV page (native;
+//!                                            # HIF4_KV_PAGE_ROWS env default)
 //!              [--faults seed=1,panic=5,...] # seeded fault injection (chaos
 //!                                            # drills; see server::faults)
 //! hif4 sweep   --dim 512                       # Fig 3 series
@@ -49,7 +58,10 @@ use hif4::quant::sweep;
 use hif4::runtime::artifact::{Manifest, ParamStore};
 use hif4::server::batcher::BatchPolicy;
 use hif4::server::faults::FaultPlan;
-use hif4::server::service::{NativeServerConfig, ResilienceConfig, Server, ServerConfig};
+use hif4::server::service::{
+    page_rows_from_env, prefill_chunk_from_env, prefix_cache_from_env, NativeServerConfig,
+    ResilienceConfig, Server, ServerConfig,
+};
 use hif4::util::bench::Table;
 use hif4::util::cli::Args;
 use std::path::Path;
@@ -227,7 +239,18 @@ fn serve(args: &Args) -> Result<()> {
                 .map_err(|e| anyhow::anyhow!("--kv-cache / HIF4_KV_CACHE: {e}"))?,
             None => KvCacheType::F32,
         };
-        let cfg = NativeServerConfig { policy, workers, seq: manifest.seq, kv, resilience };
+        // Paging knobs: each CLI flag beats its env default (flags are
+        // presence-only for --prefix-cache, so the env can only enable).
+        let cfg = NativeServerConfig {
+            policy,
+            workers,
+            seq: manifest.seq,
+            kv,
+            resilience,
+            prefix_cache: args.flag("prefix-cache") || prefix_cache_from_env(),
+            prefill_chunk: args.get_parse("prefill-chunk", prefill_chunk_from_env()),
+            page_rows: args.get_parse("kv-page-rows", page_rows_from_env()).max(1),
+        };
         Server::start_native(Arc::new(model), cfg, addr)?
     } else {
         let artifact = args.get_or("artifact", "fwd_bf16.hlo.txt").to_string();

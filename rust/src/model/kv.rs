@@ -17,6 +17,22 @@
 //!   ([`KvCache::wire_bytes`], `bits_per_value()` of the kind) is what a
 //!   paged or offloaded cache would persist.
 //!
+//! # Paged storage
+//!
+//! Since the paged-KV subsystem ([`crate::model::pages`]), a store is not
+//! one monolithic growable buffer but a chain of fixed-size
+//! [`KvPage`]s: frozen full pages (immutable, `Arc`-shared when prefix
+//! caching deduplicates a common prompt across sequences) plus one
+//! private tail page that appends fill. Rows never straddle pages and a
+//! quantized row is always whole plane groups, so the group-alignment
+//! invariant — no 64-element group split across a page boundary — holds
+//! for any page height. Standalone caches allocate pages privately; a
+//! server wires every cache to one global [`PagePool`]
+//! ([`KvCache::new_paged`]) for bounded, recycled, dedup-aware
+//! allocation. Encoding is per-row and independent of page geometry, so
+//! stored bytes — and therefore decode — are bit-identical for any
+//! `page_rows`.
+//!
 //! Keys are cached **post-RoPE** (their rotation depends only on the
 //! absolute position, which never changes once cached). The
 //! quantize→decode round trip here is the *same code* the full-recompute
@@ -31,8 +47,10 @@
 //! walks the planes through [`KvTiles`] — a borrowed, zero-copy tile
 //! view over a store's packed lanes and group scales — scoring `QK^T`
 //! on the integer lanes directly and decoding only the `V` column span
-//! it needs per tile. The iterator covers rows `0..rows` in order, every
-//! tile `tile_rows` long except a shorter final tail:
+//! it needs per tile. The iterator covers rows `0..rows` in order; a
+//! tile spans up to `tile_rows` rows but never crosses a page boundary
+//! (tiles clamp to the page, which is numerics-neutral: the online
+//! softmax is bitwise invariant to tile height, DESIGN.md §14):
 //!
 //! ```
 //! use hif4::model::kv::{KvCache, KvCacheType};
@@ -43,7 +61,8 @@
 //! let mut cache = KvCache::new(&cfg, KvCacheType::HIF4);
 //! cache.fill_synthetic(100, 7);
 //!
-//! // Walk layer 0's K planes in 48-row tiles: 48 + 48 + a 4-row tail.
+//! // Walk layer 0's K planes in 48-row tiles. Pages are 64 rows by
+//! // default, so the walk clamps at each boundary: 48 + 16 + 36.
 //! let mut covered = 0;
 //! for tile in cache.k_tiles(0, cache.len(), 48).expect("quantized caches tile") {
 //!     assert_eq!(tile.start(), covered);
@@ -63,10 +82,12 @@
 //! `None`), which is exactly the runtime signal the attention dispatcher
 //! uses to fall back to replay.
 
-use crate::dotprod::quant_tensor::{decode_plane, encode_row_planes};
+use crate::dotprod::quant_tensor::decode_plane;
 use crate::formats::QuantKind;
 use crate::model::config::ModelConfig;
+use crate::model::pages::{KvPage, PagePool, PageShape, PrefixHit, DEFAULT_PAGE_ROWS};
 use crate::tensor::Matrix;
+use std::sync::Arc;
 
 /// Which storage backend a [`KvCache`] uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -124,41 +145,49 @@ impl KvCacheType {
     }
 }
 
-/// Per-sequence, per-layer K/V storage for incremental decode. One cache
-/// is one sequence's "page": the continuous-batching scheduler owns one
-/// per active slot and drops it on eviction.
-#[derive(Debug, Clone)]
+/// Per-sequence, per-layer K/V storage for incremental decode. The
+/// continuous-batching scheduler owns one per active slot; its pages come
+/// from the server's global [`PagePool`] (or private allocations for
+/// standalone caches) and return there on drop/reset.
+#[derive(Debug)]
 pub struct KvCache {
     kind: KvCacheType,
     len: usize,
+    page_rows: usize,
     pub(crate) layers: Vec<LayerKv>,
 }
 
 /// One layer's K and V stores.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub(crate) struct LayerKv {
     pub k: KvStore,
     pub v: KvStore,
 }
 
-/// Append-only row store for one tensor (K or V) of one layer.
-#[derive(Debug, Clone)]
-pub(crate) enum KvStore {
-    F32 {
-        kvd: usize,
-        data: Vec<f32>,
-    },
-    Quant {
-        quant: QuantKind,
-        kvd: usize,
-        groups_per_row: usize,
-        lanes: Vec<i8>,
-        scales: Vec<f64>,
-    },
+/// Append-only row store for one tensor (K or V) of one layer: frozen
+/// full pages (possibly shared via prefix dedup) + one private tail.
+#[derive(Debug)]
+pub(crate) struct KvStore {
+    shape: PageShape,
+    pool: Option<Arc<PagePool>>,
+    /// Full pages in position order; page `p` holds rows
+    /// `p·page_rows..(p+1)·page_rows`. Shared pages (refcount > 1) are
+    /// only ever read.
+    full: Vec<Arc<KvPage>>,
+    /// The private page rows currently append into (`None` exactly when
+    /// `rows` is a page multiple).
+    tail: Option<KvPage>,
+    /// Pool-less recycling: cleared pages parked across [`clear`] so a
+    /// recycled standalone cache reuses its allocations.
+    ///
+    /// [`clear`]: KvStore::clear
+    spare: Vec<KvPage>,
+    rows: usize,
 }
 
-/// A dense f32 view of the first `rows` cached rows: f32 stores borrow in
-/// place, quantized stores decode their lane planes once per view.
+/// A dense f32 view of the first `rows` cached rows: f32 stores whose
+/// span fits one page borrow in place, everything else copies/decodes
+/// once per view.
 pub(crate) struct KvDense<'a> {
     kvd: usize,
     data: DenseData<'a>,
@@ -184,15 +213,17 @@ impl KvDense<'_> {
 /// Iterator over a quantized store's packed planes in row tiles — the
 /// fused attention path's view of the KV cache (see the module docs for
 /// a worked example). Yields [`KvTile`]s covering rows `0..rows` in
-/// ascending order; every tile spans `tile_rows` rows except a shorter
-/// final tail. Borrowed and zero-copy: no plane is decoded until a
-/// consumer asks via [`KvTile::decode_cols`].
+/// ascending order; every tile spans `tile_rows` rows except where a
+/// page boundary (or the final tail) clamps it shorter. Borrowed and
+/// zero-copy: no plane is decoded until a consumer asks via
+/// [`KvTile::decode_cols`].
 pub struct KvTiles<'a> {
     quant: QuantKind,
     kvd: usize,
     groups_per_row: usize,
-    lanes: &'a [i8],
-    scales: &'a [f64],
+    page_rows: usize,
+    full: &'a [Arc<KvPage>],
+    tail: Option<&'a KvPage>,
     rows: usize,
     tile_rows: usize,
     next: usize,
@@ -219,8 +250,18 @@ impl<'a> Iterator for KvTiles<'a> {
             return None;
         }
         let start = self.next;
-        let rows = self.tile_rows.min(self.rows - start);
+        let pi = start / self.page_rows;
+        let in_page = start % self.page_rows;
+        // Clamp to the page: a tile reads one contiguous lane slice, and
+        // pages are separate allocations. Numerics-neutral — the fused
+        // kernel's online softmax is bitwise invariant to tile height.
+        let rows = self.tile_rows.min(self.rows - start).min(self.page_rows - in_page);
         self.next += rows;
+        let page: &'a KvPage = if pi < self.full.len() {
+            &self.full[pi]
+        } else {
+            self.tail.expect("tiled rows beyond the stored pages")
+        };
         let g = self.groups_per_row;
         let row_lanes = g * self.quant.group();
         Some(KvTile {
@@ -229,15 +270,15 @@ impl<'a> Iterator for KvTiles<'a> {
             groups_per_row: g,
             start,
             rows,
-            lanes: &self.lanes[start * row_lanes..(start + rows) * row_lanes],
-            scales: &self.scales[start * g..(start + rows) * g],
+            lanes: &page.lanes()[in_page * row_lanes..(in_page + rows) * row_lanes],
+            scales: &page.scales()[in_page * g..(in_page + rows) * g],
         })
     }
 }
 
 /// One tile of packed KV planes: `rows` consecutive cached positions
 /// starting at absolute position [`KvTile::start`], borrowed straight
-/// from the store.
+/// from one page of the store.
 ///
 /// Layout contract (what the integer attention kernel scores against):
 /// each tile-local row `r` owns `groups_per_row × group` i8 lanes
@@ -264,7 +305,8 @@ impl KvTile<'_> {
         self.start
     }
 
-    /// Rows in this tile (`tile_rows`, except the shorter final tail).
+    /// Rows in this tile (`tile_rows`, except where a page boundary or
+    /// the final tail clamps shorter).
     pub fn rows(&self) -> usize {
         self.rows
     }
@@ -321,78 +363,153 @@ impl KvTile<'_> {
 
 impl KvStore {
     fn new(kind: KvCacheType, kvd: usize) -> KvStore {
-        match kind {
-            KvCacheType::F32 => KvStore::F32 { kvd, data: Vec::new() },
-            KvCacheType::Quant(quant) => KvStore::Quant {
-                quant,
-                kvd,
-                groups_per_row: kvd.div_ceil(quant.group()),
-                lanes: Vec::new(),
-                scales: Vec::new(),
-            },
+        KvStore::new_paged(PageShape::new(kind, kvd, DEFAULT_PAGE_ROWS), None)
+    }
+
+    fn new_paged(shape: PageShape, pool: Option<Arc<PagePool>>) -> KvStore {
+        KvStore { shape, pool, full: Vec::new(), tail: None, spare: Vec::new(), rows: 0 }
+    }
+
+    /// One empty page: parked spare → pool → fresh private allocation.
+    /// Pooled stores draw through [`PagePool::alloc_reserved`]: the
+    /// admission gate reserves every stream's worst-case page count up
+    /// front, so an exhausted pool here means shared-prefix pins crowded
+    /// the cap — the pool mints a bounded overflow page rather than
+    /// aborting an admitted stream mid-decode.
+    fn fresh_page(&mut self) -> KvPage {
+        if let Some(page) = self.spare.pop() {
+            return page;
+        }
+        match &self.pool {
+            Some(pool) => pool.alloc_reserved(),
+            None => KvPage::empty(&self.shape),
         }
     }
 
     /// Append one position's row. Quantized stores encode it through the
     /// format codec (zero-padded tail group — the same uniform tail
     /// handling as the quantized matrices) and keep only the decode-once
-    /// plane.
+    /// plane. A tail that fills freezes into an immutable full page
+    /// immediately, so whole-chunk pages are sharable the moment their
+    /// last row lands.
     pub(crate) fn append_row(&mut self, row: &[f32]) {
-        match self {
-            KvStore::F32 { kvd, data } => {
-                assert_eq!(row.len(), *kvd, "KV row width must match kv_heads×head_dim");
-                data.extend_from_slice(row);
-            }
-            KvStore::Quant { quant, kvd, lanes, scales, .. } => {
-                assert_eq!(row.len(), *kvd, "KV row width must match kv_heads×head_dim");
-                encode_row_planes(*quant, row, lanes, scales);
-            }
+        assert_eq!(row.len(), self.shape.kvd, "KV row width must match kv_heads×head_dim");
+        let mut tail = match self.tail.take() {
+            Some(t) => t,
+            None => self.fresh_page(),
+        };
+        tail.append_row(&self.shape, row);
+        self.rows += 1;
+        if tail.rows() == self.shape.page_rows {
+            self.full.push(Arc::new(tail));
+        } else {
+            self.tail = Some(tail);
+        }
+    }
+
+    /// Attach one shared full page (a prefix-cache hit): refcount bump,
+    /// zero bytes copied. Only legal on a page-aligned, tail-less store.
+    pub(crate) fn attach_full_page(&mut self, page: Arc<KvPage>) {
+        debug_assert!(self.tail.is_none(), "attach after private appends");
+        debug_assert_eq!(self.rows % self.shape.page_rows, 0);
+        debug_assert_eq!(page.rows(), self.shape.page_rows, "only full pages are shared");
+        self.rows += page.rows();
+        self.full.push(page);
+    }
+
+    /// Copy-on-write attach at the divergence chunk: byte-copy the first
+    /// `take` rows of the shared `src` page into a fresh private tail.
+    pub(crate) fn attach_cow_page(&mut self, src: &KvPage, take: usize) {
+        debug_assert!(self.tail.is_none(), "CoW attach after private appends");
+        debug_assert!(take > 0 && take < self.shape.page_rows, "CoW is a partial chunk");
+        let mut page = self.fresh_page();
+        page.copy_prefix_from(&self.shape, src, take);
+        self.rows += take;
+        self.tail = Some(page);
+    }
+
+    /// Full page `p` for prefix registration (shared by `Arc::clone`).
+    pub(crate) fn full_page(&self, p: usize) -> Arc<KvPage> {
+        Arc::clone(&self.full[p])
+    }
+
+    fn page(&self, pi: usize) -> &KvPage {
+        if pi < self.full.len() {
+            &self.full[pi]
+        } else {
+            self.tail.as_ref().expect("page index beyond the stored pages")
         }
     }
 
     /// Dense view of rows `0..rows` (see [`KvDense`]).
     pub(crate) fn dense(&self, rows: usize) -> KvDense<'_> {
-        match self {
-            KvStore::F32 { kvd, data } => {
-                KvDense { kvd: *kvd, data: DenseData::Borrowed(&data[..rows * *kvd]) }
+        assert!(rows <= self.rows, "cannot view rows that were never appended");
+        let kvd = self.shape.kvd;
+        match self.shape.kind {
+            KvCacheType::F32 => {
+                // Single-page spans borrow in place (the common short-
+                // sequence case); page-crossing spans copy once.
+                if rows == 0 {
+                    return KvDense { kvd, data: DenseData::Borrowed(&[]) };
+                }
+                if (rows - 1) / self.shape.page_rows == 0 {
+                    let d = &self.page(0).f32_data()[..rows * kvd];
+                    return KvDense { kvd, data: DenseData::Borrowed(d) };
+                }
+                let mut out = Vec::with_capacity(rows * kvd);
+                let mut r = 0;
+                while r < rows {
+                    let pi = r / self.shape.page_rows;
+                    let take = (rows - r).min(self.shape.page_rows);
+                    out.extend_from_slice(&self.page(pi).f32_data()[..take * kvd]);
+                    r += take;
+                }
+                KvDense { kvd, data: DenseData::Owned(out) }
             }
-            KvStore::Quant { quant, kvd, groups_per_row, lanes, scales } => {
+            KvCacheType::Quant(quant) => {
                 let group = quant.group();
-                let mut out = vec![0f32; rows * *kvd];
+                let gpr = self.shape.groups_per_row();
+                let mut out = vec![0f32; rows * kvd];
                 for r in 0..rows {
-                    let row = &mut out[r * *kvd..(r + 1) * *kvd];
-                    for u in 0..*groups_per_row {
+                    let page = self.page(r / self.shape.page_rows);
+                    let lr = r % self.shape.page_rows;
+                    let lanes = page.lanes();
+                    let scales = page.scales();
+                    let row = &mut out[r * kvd..(r + 1) * kvd];
+                    for u in 0..gpr {
                         let start = u * group;
-                        let end = (start + group).min(*kvd);
-                        let i = r * *groups_per_row + u;
+                        let end = (start + group).min(kvd);
+                        let i = lr * gpr + u;
                         decode_plane(
-                            *quant,
+                            quant,
                             &lanes[i * group..(i + 1) * group],
                             scales[i],
                             &mut row[start..end],
                         );
                     }
                 }
-                KvDense { kvd: *kvd, data: DenseData::Owned(out) }
+                KvDense { kvd, data: DenseData::Owned(out) }
             }
         }
     }
 
-    /// Tile the first `rows` stored rows into [`KvTiles`] of `tile_rows`
-    /// each (shorter tail). Quantized stores only — an f32 store has no
-    /// packed planes to walk and returns `None`, which is the attention
+    /// Tile the first `rows` stored rows into [`KvTiles`] of at most
+    /// `tile_rows` each (page boundaries and the final tail clamp
+    /// shorter). Quantized stores only — an f32 store has no packed
+    /// planes to walk and returns `None`, which is the attention
     /// dispatcher's replay-fallback signal.
     pub(crate) fn tiles(&self, rows: usize, tile_rows: usize) -> Option<KvTiles<'_>> {
         assert!(tile_rows > 0, "tile_rows must be positive");
-        assert!(rows <= self.rows(), "cannot tile rows that were never appended");
-        match self {
-            KvStore::F32 { .. } => None,
-            KvStore::Quant { quant, kvd, groups_per_row, lanes, scales } => Some(KvTiles {
-                quant: *quant,
-                kvd: *kvd,
-                groups_per_row: *groups_per_row,
-                lanes,
-                scales,
+        assert!(rows <= self.rows, "cannot tile rows that were never appended");
+        match self.shape.kind {
+            KvCacheType::F32 => None,
+            KvCacheType::Quant(quant) => Some(KvTiles {
+                quant,
+                kvd: self.shape.kvd,
+                groups_per_row: self.shape.groups_per_row(),
+                page_rows: self.shape.page_rows,
+                full: &self.full,
+                tail: self.tail.as_ref(),
                 rows,
                 tile_rows,
                 next: 0,
@@ -402,82 +519,123 @@ impl KvStore {
 
     /// Row width this store was sized for (kv_heads × head_dim).
     pub(crate) fn kvd(&self) -> usize {
-        match self {
-            KvStore::F32 { kvd, .. } | KvStore::Quant { kvd, .. } => *kvd,
-        }
+        self.shape.kvd
     }
 
-    /// Positions stored so far (rows appended since creation/[`clear`]).
+    /// Positions stored so far (rows appended/attached since
+    /// creation/[`clear`]).
     ///
     /// [`clear`]: KvStore::clear
     pub(crate) fn rows(&self) -> usize {
-        match self {
-            KvStore::F32 { kvd, data } => data.len() / (*kvd).max(1),
-            KvStore::Quant { groups_per_row, scales, .. } => {
-                scales.len() / (*groups_per_row).max(1)
-            }
-        }
+        self.rows
     }
 
-    /// Drop every stored row but keep the backing allocations — the
-    /// slot-reuse path: a recycled cache page serves its next sequence
-    /// without reallocating, while the byte accounting (stored length,
-    /// never `Vec` capacity) immediately reports the emptied store as 0.
+    /// Drop every stored row, returning pages to their owner: pooled
+    /// stores hand full pages back through [`PagePool::release`] (a
+    /// shared page recycles only when its last holder lets go) and
+    /// recycle the tail; standalone stores park cleared pages in the
+    /// spare list so a recycled cache reuses its allocations. Byte
+    /// accounting (stored length, never capacity) reports the emptied
+    /// store as 0 immediately.
     fn clear(&mut self) {
-        match self {
-            KvStore::F32 { data, .. } => data.clear(),
-            KvStore::Quant { lanes, scales, .. } => {
-                lanes.clear();
-                scales.clear();
+        match &self.pool {
+            Some(pool) => {
+                for page in self.full.drain(..) {
+                    pool.release(page);
+                }
+                if let Some(tail) = self.tail.take() {
+                    pool.recycle(tail);
+                }
+                for page in self.spare.drain(..) {
+                    pool.recycle(page);
+                }
+            }
+            None => {
+                for page in self.full.drain(..) {
+                    // A standalone store's full pages are shared only if
+                    // a prefix bundle still pins them; those drop here.
+                    if let Ok(mut page) = Arc::try_unwrap(page) {
+                        page.clear();
+                        self.spare.push(page);
+                    }
+                }
+                if let Some(mut tail) = self.tail.take() {
+                    tail.clear();
+                    self.spare.push(tail);
+                }
             }
         }
+        self.rows = 0;
     }
 
     /// Bytes of the rows actually stored (decode-once planes for
     /// quantized stores). Derived from the stored *length* — a recycled
     /// page's backing capacity, which can be much larger after
     /// reset/reuse churn, is reported by [`KvStore::capacity_bytes`]
-    /// instead and never leaks into this number.
+    /// instead and never leaks into this number. Shared pages count in
+    /// full for every holder (each sequence *reads* the whole page; the
+    /// pool-level dedup savings are reported by
+    /// [`PagePool::bytes_saved`]).
     fn resident_bytes(&self) -> usize {
-        match self {
-            KvStore::F32 { data, .. } => std::mem::size_of_val(data.as_slice()),
-            KvStore::Quant { lanes, scales, .. } => {
-                std::mem::size_of_val(lanes.as_slice()) + std::mem::size_of_val(scales.as_slice())
-            }
-        }
+        self.full.iter().map(|p| p.resident_bytes()).sum::<usize>()
+            + self.tail.as_ref().map_or(0, |t| t.resident_bytes())
     }
 
     /// Bytes the backing allocations currently hold, stored or parked
     /// (`≥ resident_bytes` by construction).
     fn capacity_bytes(&self) -> usize {
-        match self {
-            KvStore::F32 { data, .. } => data.capacity() * std::mem::size_of::<f32>(),
-            KvStore::Quant { lanes, scales, .. } => {
-                lanes.capacity() * std::mem::size_of::<i8>()
-                    + scales.capacity() * std::mem::size_of::<f64>()
-            }
-        }
+        self.full.iter().map(|p| p.capacity_bytes()).sum::<usize>()
+            + self.tail.as_ref().map_or(0, |t| t.capacity_bytes())
+            + self.spare.iter().map(|p| p.capacity_bytes()).sum::<usize>()
     }
 
     /// Serialized bytes of the stored rows (canonical packed group wire
     /// layout for quantized stores; dense f32 for F32). Like
     /// [`KvStore::resident_bytes`], derived from the stored length only.
     fn wire_bytes(&self) -> usize {
-        match self {
-            KvStore::F32 { data, .. } => std::mem::size_of_val(data.as_slice()),
-            KvStore::Quant { quant, scales, .. } => scales.len() * quant.wire_bytes_group(),
+        self.full.iter().map(|p| p.wire_bytes(&self.shape)).sum::<usize>()
+            + self.tail.as_ref().map_or(0, |t| t.wire_bytes(&self.shape))
+    }
+}
+
+impl Drop for KvStore {
+    fn drop(&mut self) {
+        // Pooled pages must flow back to the pool (free-list reuse and
+        // exact live accounting); standalone pages just deallocate.
+        if self.pool.is_some() {
+            self.clear();
         }
     }
 }
 
 impl KvCache {
-    /// Empty cache for one sequence under `cfg`'s geometry.
+    /// Empty cache for one sequence under `cfg`'s geometry, with private
+    /// page allocation at the default page height.
     pub fn new(cfg: &ModelConfig, kind: KvCacheType) -> KvCache {
+        KvCache::new_paged(cfg, kind, DEFAULT_PAGE_ROWS, None)
+    }
+
+    /// Empty cache drawing `page_rows`-row pages from `pool` (or private
+    /// allocations when `None`) — the serving path: every stream's cache
+    /// on one server shares one bounded [`PagePool`].
+    pub fn new_paged(
+        cfg: &ModelConfig,
+        kind: KvCacheType,
+        page_rows: usize,
+        pool: Option<Arc<PagePool>>,
+    ) -> KvCache {
         let kvd = cfg.kv_heads() * cfg.head_dim;
+        let shape = PageShape::new(kind, kvd, page_rows);
+        if let Some(pool) = &pool {
+            assert_eq!(*pool.shape(), shape, "cache geometry must match its pool");
+        }
         let layers = (0..cfg.n_layers)
-            .map(|_| LayerKv { k: KvStore::new(kind, kvd), v: KvStore::new(kind, kvd) })
+            .map(|_| LayerKv {
+                k: KvStore::new_paged(shape, pool.clone()),
+                v: KvStore::new_paged(shape, pool.clone()),
+            })
             .collect();
-        KvCache { kind, len: 0, layers }
+        KvCache { kind, len: 0, page_rows, layers }
     }
 
     pub fn kind(&self) -> KvCacheType {
@@ -491,6 +649,11 @@ impl KvCache {
 
     pub fn is_empty(&self) -> bool {
         self.len == 0
+    }
+
+    /// Page height (rows per fixed-size page) this cache was built with.
+    pub fn page_rows(&self) -> usize {
+        self.page_rows
     }
 
     /// Bytes the cache keeps resident (decode-once planes for quantized
@@ -517,11 +680,11 @@ impl KvCache {
         self.layers.iter().map(|l| l.k.capacity_bytes() + l.v.capacity_bytes()).sum()
     }
 
-    /// Reset for slot reuse: forget every stored row in every layer but
-    /// keep the backing allocations, so a recycled page appends its next
-    /// sequence without re-growing. The byte accounting reports the
-    /// stored content only — an emptied page is 0 bytes resident/wire
-    /// even while its capacity is still parked.
+    /// Reset for slot reuse: forget every stored row in every layer.
+    /// Pooled pages return to the global pool; standalone pages park
+    /// their allocations for the next tenant. The byte accounting
+    /// reports the stored content only — an emptied page is 0 bytes
+    /// resident/wire even while its capacity is still parked.
     pub fn reset(&mut self) {
         for l in &mut self.layers {
             l.k.clear();
@@ -538,6 +701,81 @@ impl KvCache {
         self.kind == kind
             && self.layers.len() == cfg.n_layers
             && self.layers.iter().all(|l| l.k.kvd() == kvd && l.v.kvd() == kvd)
+    }
+
+    /// Attach a prefix-cache hit to this (empty) cache: shared full
+    /// pages by refcount, plus a copy-on-write private copy of the
+    /// partial divergence chunk. The hit's covered tokens are
+    /// re-verified against `prompt` (exact compare, capped at
+    /// `prompt.len() - 1` so the final token always prefills) — a stale
+    /// or mismatched hit attaches only its verified prefix, never wrong
+    /// rows. Returns the number of positions attached; the caller
+    /// resumes prefill at that offset.
+    pub fn attach_prefix(&mut self, hit: &PrefixHit, prompt: &[usize]) -> usize {
+        assert!(self.is_empty(), "prefix attach must precede any append");
+        if hit.page_rows != self.page_rows {
+            return 0;
+        }
+        let stores = self.layers.len() * 2;
+        if hit.bundles.iter().any(|b| b.len() != stores)
+            || hit.cow.as_ref().is_some_and(|(b, _)| b.len() != stores)
+        {
+            return 0;
+        }
+        // Verified coverage: tokens the hit and the real prompt agree
+        // on, leaving at least the final prompt token uncovered.
+        let limit = prompt.len().saturating_sub(1);
+        let common = hit
+            .tokens
+            .iter()
+            .zip(prompt.iter())
+            .take(limit)
+            .take_while(|(a, b)| a == b)
+            .count();
+        let pr = self.page_rows;
+        let whole = (common / pr).min(hit.chunks());
+        for c in 0..whole {
+            for (li, l) in self.layers.iter_mut().enumerate() {
+                l.k.attach_full_page(Arc::clone(&hit.bundles[c][li * 2]));
+                l.v.attach_full_page(Arc::clone(&hit.bundles[c][li * 2 + 1]));
+            }
+        }
+        let mut attached = whole * pr;
+        // Partial remainder: seed a CoW tail from the divergence chunk —
+        // either the hit's explicit CoW bundle (when every whole chunk
+        // matched) or the first unattached whole chunk (when the prompt
+        // diverged earlier than the hit claimed).
+        let take = common - attached;
+        if take > 0 {
+            let cow_src = if whole == hit.chunks() {
+                hit.cow.as_ref().and_then(|(b, rows)| (take <= *rows).then_some(b))
+            } else {
+                Some(&hit.bundles[whole])
+            };
+            if let Some(bundle) = cow_src {
+                for (li, l) in self.layers.iter_mut().enumerate() {
+                    l.k.attach_cow_page(&bundle[li * 2], take);
+                    l.v.attach_cow_page(&bundle[li * 2 + 1], take);
+                }
+                attached += take;
+            }
+        }
+        self.len = attached;
+        attached
+    }
+
+    /// The first `chunks` whole pages of every store, bundled per chunk
+    /// for [`PagePool::register_prefix`] (bundle index = `layer·2 +
+    /// {0: K, 1: V}`, matching [`KvCache::attach_prefix`]).
+    pub fn prefix_bundles(&self, chunks: usize) -> Vec<Vec<Arc<KvPage>>> {
+        (0..chunks)
+            .map(|c| {
+                self.layers
+                    .iter()
+                    .flat_map(|l| [l.k.full_page(c), l.v.full_page(c)])
+                    .collect()
+            })
+            .collect()
     }
 
     /// Tile layer `layer`'s **K** planes over cached positions `0..rows`
@@ -591,7 +829,8 @@ impl KvCache {
 /// full-recompute forward with
 /// [`super::transformer::QuantPolicy::kv`] set is a *bit-exact*
 /// reference for quantized-cache incremental decode by construction — the
-/// two paths cannot drift apart, for any format.
+/// two paths cannot drift apart, for any format. (Row encoding is
+/// independent of page geometry, so this pins the paged stores too.)
 pub fn qdq_rows(kind: QuantKind, m: &mut Matrix) {
     let mut store = KvStore::new(KvCacheType::Quant(kind), m.cols);
     for r in 0..m.rows {
@@ -674,6 +913,34 @@ mod tests {
                 let want: Vec<u32> = reference.row(r).iter().map(|x| x.to_bits()).collect();
                 assert_eq!(got, want, "{kind} row {r}");
             }
+        }
+    }
+
+    #[test]
+    fn paged_store_is_bitwise_identical_across_page_heights() {
+        // Row encoding is per-row and page-independent: the same rows
+        // stored under 4-row pages (crossing two boundaries) and under
+        // the default single-page height must decode to identical bits —
+        // the structural half of prefix-dedup parity.
+        let c = cfg();
+        let mut rng = Rng::seed(17);
+        let rows = Matrix::randn(11, 16, 0.9, &mut rng);
+        for kind in QuantKind::ALL.map(KvCacheType::Quant).into_iter().chain([KvCacheType::F32]) {
+            let mut small = KvCache::new_paged(&c, kind, 4, None);
+            let mut wide = KvCache::new(&c, kind);
+            for cache in [&mut small, &mut wide] {
+                for r in 0..rows.rows {
+                    cache.layers[0].k.append_row(rows.row(r));
+                }
+            }
+            let (ds, dw) = (small.layers[0].k.dense(11), wide.layers[0].k.dense(11));
+            for r in 0..11 {
+                let got: Vec<u32> = ds.row(r).iter().map(|x| x.to_bits()).collect();
+                let want: Vec<u32> = dw.row(r).iter().map(|x| x.to_bits()).collect();
+                assert_eq!(got, want, "{} row {r}", kind.label());
+            }
+            assert_eq!(small.layers[0].k.resident_bytes(), wide.layers[0].k.resident_bytes());
+            assert_eq!(small.layers[0].k.wire_bytes(), wide.layers[0].k.wire_bytes());
         }
     }
 
@@ -773,7 +1040,7 @@ mod tests {
 
     #[test]
     fn resident_row_bytes_matches_store() {
-        // The admission gate budgets KV bytes with the static estimator;
+        // The admission gate budgets KV pages with the static estimator;
         // if it ever drifted from what append_row actually stores, the
         // gate would over-admit (OOM risk) or under-admit (wasted
         // capacity). Pin exact agreement for every kind and both an
@@ -800,9 +1067,9 @@ mod tests {
 
     #[test]
     fn tiles_cover_rows_in_order_with_tail() {
-        // 11 rows in 4-row tiles: 4 + 4 + 3 — every row exactly once,
-        // starts ascending, and each tile's planes are the same bytes the
-        // store holds for those rows.
+        // 11 rows in 4-row tiles (single 64-row page): 4 + 4 + 3 — every
+        // row exactly once, starts ascending, and each tile's planes are
+        // the same bytes the store holds for those rows.
         let mut rng = Rng::seed(20);
         for kind in QuantKind::ALL {
             let kvd = 24usize; // padded tail group for every format
@@ -837,6 +1104,45 @@ mod tests {
     }
 
     #[test]
+    fn tiles_clamp_at_page_boundaries_bitwise() {
+        // An 11-row store under 4-row pages, walked with tile_rows 3:
+        // tiles clamp at every page edge (3+1 | 3+1 | 3) yet decode the
+        // exact same bits as the unclamped single-page walk.
+        let mut rng = Rng::seed(22);
+        for kind in QuantKind::ALL {
+            let kvd = 24usize;
+            let rows = Matrix::randn(11, kvd, 1.0, &mut rng);
+            let shape = PageShape::new(KvCacheType::Quant(kind), kvd, 4);
+            let mut store = KvStore::new_paged(shape, None);
+            for r in 0..rows.rows {
+                store.append_row(rows.row(r));
+            }
+            let sizes: Vec<usize> = store.tiles(11, 3).unwrap().map(|t| t.rows()).collect();
+            assert_eq!(sizes, vec![3, 1, 3, 1, 3], "{kind}: clamp at rows 4 and 8");
+            // Oversized tiles degrade to whole pages.
+            let sizes: Vec<usize> = store.tiles(11, 48).unwrap().map(|t| t.rows()).collect();
+            assert_eq!(sizes, vec![4, 4, 3], "{kind}");
+            let dense = store.dense(11);
+            let mut covered = 0usize;
+            for tile in store.tiles(11, 3).unwrap() {
+                assert_eq!(tile.start(), covered);
+                let w = kvd;
+                let mut out = vec![0f32; tile.rows() * w];
+                tile.decode_cols(0..kvd, &mut out);
+                for r in 0..tile.rows() {
+                    let got: Vec<u32> =
+                        out[r * w..(r + 1) * w].iter().map(|x| x.to_bits()).collect();
+                    let want: Vec<u32> =
+                        dense.row(tile.start() + r).iter().map(|x| x.to_bits()).collect();
+                    assert_eq!(got, want, "{kind} row {}", tile.start() + r);
+                }
+                covered += tile.rows();
+            }
+            assert_eq!(covered, 11);
+        }
+    }
+
+    #[test]
     fn decode_cols_is_bitwise_identical_to_dense() {
         // Any column span — group-aligned, group-crossing, or inside the
         // zero-padded tail group — must decode to exactly the bits the
@@ -867,6 +1173,98 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn attach_prefix_shares_pages_bitwise_with_cow_isolation() {
+        // Build a donor cache, bundle its whole chunks, attach them to a
+        // fresh cache: shared rows decode to identical bits, the CoW
+        // tail is private (appends never touch the donor), and a
+        // mismatched prompt attaches only its verified prefix.
+        let c = cfg();
+        let tokens: Vec<usize> = (100..109).collect(); // 9 tokens, pr 4
+        let mut donor = KvCache::new_paged(&c, KvCacheType::HIF4, 4, None);
+        donor.fill_synthetic(9, 33); // rows 0..8 → 2 full chunks + tail
+        let hit = PrefixHit {
+            tokens: tokens[..8].to_vec(),
+            bundles: donor.prefix_bundles(2),
+            cow: None,
+            page_rows: 4,
+        };
+        assert_eq!(hit.chunks(), 2);
+        assert_eq!(hit.rows(), 8);
+
+        // Full-hit attach: all 8 shared rows (prompt[8] stays uncovered).
+        let mut taker = KvCache::new_paged(&c, KvCacheType::HIF4, 4, None);
+        assert_eq!(taker.attach_prefix(&hit, &tokens), 8);
+        assert_eq!(taker.len(), 8);
+        for li in 0..c.n_layers {
+            let (dd, dt) = (donor.layers[li].k.dense(8), taker.layers[li].k.dense(8));
+            for r in 0..8 {
+                assert_eq!(dd.row(r), dt.row(r), "layer {li} row {r}");
+            }
+        }
+        assert!(taker.resident_bytes() > 0);
+
+        // Divergence mid-chunk-2: 4 shared + 2 CoW rows; private appends
+        // after the CoW must leave the donor's pages untouched.
+        let mut fork_prompt = tokens[..6].to_vec();
+        fork_prompt.extend([7usize, 8, 9]);
+        let cow_hit = PrefixHit {
+            tokens: tokens[..6].to_vec(),
+            bundles: donor.prefix_bundles(1),
+            cow: Some((donor.prefix_bundles(2).pop().unwrap(), 2)),
+            page_rows: 4,
+        };
+        let mut forked = KvCache::new_paged(&c, KvCacheType::HIF4, 4, None);
+        assert_eq!(forked.attach_prefix(&cow_hit, &fork_prompt), 6);
+        let donor_before: Vec<u32> =
+            donor.layers[0].k.dense(8).row(6).iter().map(|x| x.to_bits()).collect();
+        let mut rng = Rng::seed(44);
+        let private = Matrix::randn(1, 16, 1.0, &mut rng);
+        for l in &mut forked.layers {
+            l.k.append_row(private.row(0));
+            l.v.append_row(private.row(0));
+        }
+        forked.advance(1);
+        assert_eq!(forked.len(), 7);
+        let donor_after: Vec<u32> =
+            donor.layers[0].k.dense(8).row(6).iter().map(|x| x.to_bits()).collect();
+        assert_eq!(donor_before, donor_after, "CoW must isolate private appends");
+        // Shared prefix rows still bit-identical.
+        let (dd, df) = (donor.layers[1].v.dense(6), forked.layers[1].v.dense(6));
+        for r in 0..6 {
+            assert_eq!(dd.row(r), df.row(r), "row {r}");
+        }
+
+        // A prompt that contradicts the hit's tokens attaches only the
+        // verified prefix (here: one whole chunk + 1 CoW row from the
+        // next bundle).
+        let mut wrong = tokens[..5].to_vec();
+        wrong.extend([1usize, 1, 1, 1]);
+        let mut partial = KvCache::new_paged(&c, KvCacheType::HIF4, 4, None);
+        assert_eq!(partial.attach_prefix(&hit, &wrong), 5);
+        // Page-height mismatch refuses outright.
+        let mut other = KvCache::new(&c, KvCacheType::HIF4);
+        assert_eq!(other.attach_prefix(&hit, &tokens), 0);
+    }
+
+    #[test]
+    fn pooled_cache_returns_pages_on_reset_and_drop() {
+        let c = cfg();
+        let shape = PageShape::new(KvCacheType::HIF4, 16, 4);
+        let pool = Arc::new(PagePool::new(shape, 0, false));
+        let mut cache = KvCache::new_paged(&c, KvCacheType::HIF4, 4, Some(Arc::clone(&pool)));
+        cache.fill_synthetic(9, 55); // per store: 2 full + 1 tail page
+        assert_eq!(pool.live_pages(), 4 * 3, "2 layers × (K+V) × 3 pages");
+        cache.reset();
+        assert_eq!(pool.live_pages(), 0, "reset returns every page");
+        assert_eq!(pool.free_pages(), 12);
+        cache.fill_synthetic(3, 56);
+        assert_eq!(pool.live_pages(), 4);
+        assert!(pool.freelist_hits() >= 4, "refill reuses recycled pages");
+        drop(cache);
+        assert_eq!(pool.live_pages(), 0, "drop returns every page");
     }
 
     #[test]

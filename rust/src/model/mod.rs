@@ -5,6 +5,7 @@
 pub mod attention;
 pub mod config;
 pub mod kv;
+pub mod pages;
 pub mod train;
 pub mod transformer;
 pub mod zoo;

@@ -1,0 +1,1034 @@
+//! Global paged-KV allocation layer: fixed-size, group-aligned KV pages
+//! ([`KvPage`]) handed out by one server-wide [`PagePool`], plus the
+//! shared-prefix index ([`PrefixTrie`]) that lets thousands of requests
+//! with a common system prompt attend against **one** resident copy of
+//! its KV pages.
+//!
+//! # Page layout and the group-alignment invariant
+//!
+//! A page holds up to `page_rows` whole KV rows of one store (one
+//! layer's K *or* V). A quantized row is `groups_per_row` whole
+//! 64-element (format-`group()`-element) plane groups — `kvd` rounded up
+//! to groups, zero-padded tail — so a page's lane plane is always a
+//! multiple of the group and **no group ever straddles a page
+//! boundary**. That holds for *any* `page_rows ≥ 1` by construction
+//! (pages split on row boundaries, rows split on group boundaries); the
+//! default of 64 rows mirrors the HiF4 unit geometry so one page of a
+//! 64-wide head is exactly a 64×64 lane tile.
+//!
+//! # Sharing protocol (dedup + copy-on-write)
+//!
+//! Only **full** pages are ever shared, and shared pages are immutable:
+//! a sequence's cache appends into its private tail page and freezes it
+//! into an `Arc<KvPage>` the moment it fills. The [`PrefixTrie`] maps
+//! hash-chained `page_rows`-token chunks of a prompt to the frozen page
+//! *bundle* (every layer's K and V page for that chunk). Admission looks
+//! the prompt up ([`PagePool::lookup_prefix`]); a hit attaches the
+//! shared `Arc`s — refcount bumps, zero bytes copied — and decode
+//! resumes at the first uncovered token. If the prompt diverges *inside*
+//! a chunk, the covered row prefix of that chunk's pages is byte-copied
+//! into fresh private pages (copy-on-write at the divergence page); the
+//! shared original is untouched. Completed prefills register their own
+//! full chunks back into the trie ([`PagePool::register_prefix`]), so
+//! the first request with a given system prompt seeds the cache for
+//! every follower.
+//!
+//! Correctness does not rest on the hash: every trie node stores its
+//! exact chunk tokens and parent link, and lookups compare them
+//! verbatim — a hash collision degrades to a miss, never a wrong
+//! attach. Bitwise decode parity with sharing off is then structural:
+//! attention always reads the quantize→decode rows from the store, and
+//! a shared page holds exactly the bytes a private prefill would have
+//! produced for the same tokens (encoding is deterministic).
+//!
+//! # Eviction
+//!
+//! The pool is bounded (`max_pages`, derived from the serving KV budget;
+//! 0 = unbounded). `alloc()` serves from the free list, then mints fresh
+//! pages up to the cap, then evicts **unreferenced** trie entries
+//! (leaf-first LRU: cached prefixes no live sequence holds) to recycle
+//! their pages, and only then reports [`PagesExhausted`] — which the
+//! admission gate surfaces as a structured `ShedKvBudget` long before a
+//! worker could hit it ([`crate::server::batcher::AdmissionGate`]
+//! reserves pages up front). The one corner reservations cannot cover —
+//! shared pages pinned by other admitted streams crowding the cap, since
+//! the gate charges prefix hits only for their uncovered suffix — is
+//! absorbed by [`PagePool::alloc_reserved`], which mints a bounded
+//! overflow page instead of failing an admitted stream mid-decode.
+
+use crate::dotprod::quant_tensor::encode_row_planes;
+use crate::formats::QuantKind;
+use crate::model::kv::KvCacheType;
+use crate::util::lock_recover;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Default page height in KV rows — mirrors the 64-element HiF4 group
+/// geometry (`--kv-page-rows` / `HIF4_KV_PAGE_ROWS` override it).
+pub const DEFAULT_PAGE_ROWS: usize = 64;
+
+/// The fixed geometry every page of one pool shares: cache kind, row
+/// width (`kv_heads × head_dim`) and page height in rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PageShape {
+    pub kind: KvCacheType,
+    pub kvd: usize,
+    pub page_rows: usize,
+}
+
+impl PageShape {
+    pub fn new(kind: KvCacheType, kvd: usize, page_rows: usize) -> PageShape {
+        assert!(page_rows > 0, "page_rows must be positive");
+        assert!(kvd > 0, "kvd must be positive");
+        PageShape { kind, kvd, page_rows }
+    }
+
+    /// Plane groups per row for quantized kinds (0 for f32): `kvd`
+    /// rounded up to whole format groups.
+    pub fn groups_per_row(&self) -> usize {
+        match self.kind {
+            KvCacheType::F32 => 0,
+            KvCacheType::Quant(q) => self.kvd.div_ceil(q.group()),
+        }
+    }
+
+    /// Packed i8 lanes one row owns (groups_per_row × group; 0 for f32).
+    pub fn row_lanes(&self) -> usize {
+        match self.kind {
+            KvCacheType::F32 => 0,
+            KvCacheType::Quant(q) => self.groups_per_row() * q.group(),
+        }
+    }
+
+    /// Resident bytes one stored row costs (same estimator the admission
+    /// gate always used — [`KvCacheType::resident_row_bytes`]).
+    pub fn row_bytes(&self) -> usize {
+        self.kind.resident_row_bytes(self.kvd)
+    }
+
+    /// Resident bytes of one full page.
+    pub fn page_bytes(&self) -> usize {
+        self.page_rows * self.row_bytes()
+    }
+}
+
+/// One fixed-size page of KV rows: up to `shape.page_rows` rows of one
+/// store, in the store's native layout (f32 values, or decode-once i8
+/// lane planes + f64 group scales). Private while filling; frozen into
+/// an immutable `Arc<KvPage>` once full (the only form that is shared).
+#[derive(Debug)]
+pub struct KvPage {
+    rows: usize,
+    data: PageData,
+}
+
+#[derive(Debug)]
+enum PageData {
+    F32(Vec<f32>),
+    Quant { lanes: Vec<i8>, scales: Vec<f64> },
+}
+
+impl KvPage {
+    /// An empty page of `shape`'s geometry.
+    pub fn empty(shape: &PageShape) -> KvPage {
+        let data = match shape.kind {
+            KvCacheType::F32 => PageData::F32(Vec::new()),
+            KvCacheType::Quant(_) => PageData::Quant { lanes: Vec::new(), scales: Vec::new() },
+        };
+        KvPage { rows: 0, data }
+    }
+
+    /// Rows currently stored (≤ `shape.page_rows`).
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Drop every row, keep the backing allocations (free-list reuse).
+    pub fn clear(&mut self) {
+        self.rows = 0;
+        match &mut self.data {
+            PageData::F32(d) => d.clear(),
+            PageData::Quant { lanes, scales } => {
+                lanes.clear();
+                scales.clear();
+            }
+        }
+    }
+
+    /// Append one row (the caller guarantees room; quantized kinds encode
+    /// through the format codec exactly like the unpaged store did).
+    pub fn append_row(&mut self, shape: &PageShape, row: &[f32]) {
+        assert_eq!(row.len(), shape.kvd, "KV row width must match kv_heads×head_dim");
+        assert!(self.rows < shape.page_rows, "append into a full page");
+        match (&mut self.data, shape.kind) {
+            (PageData::F32(d), KvCacheType::F32) => d.extend_from_slice(row),
+            (PageData::Quant { lanes, scales }, KvCacheType::Quant(q)) => {
+                encode_row_planes(q, row, lanes, scales);
+            }
+            _ => panic!("page backend does not match its pool's cache kind"),
+        }
+        self.rows += 1;
+    }
+
+    /// Copy-on-write seed: byte-copy the first `rows` rows of `src` into
+    /// this (empty) page. Pure plane/value copy — no re-encode, so the
+    /// private copy is bit-identical to the shared original's prefix.
+    pub fn copy_prefix_from(&mut self, shape: &PageShape, src: &KvPage, rows: usize) {
+        assert_eq!(self.rows, 0, "copy_prefix_from targets an empty page");
+        assert!(rows <= src.rows, "cannot copy rows the source never stored");
+        match (&mut self.data, &src.data) {
+            (PageData::F32(d), PageData::F32(s)) => {
+                d.extend_from_slice(&s[..rows * shape.kvd]);
+            }
+            (
+                PageData::Quant { lanes, scales },
+                PageData::Quant { lanes: sl, scales: ss },
+            ) => {
+                lanes.extend_from_slice(&sl[..rows * shape.row_lanes()]);
+                scales.extend_from_slice(&ss[..rows * shape.groups_per_row()]);
+            }
+            _ => panic!("copy_prefix_from across mismatched page backends"),
+        }
+        self.rows = rows;
+    }
+
+    /// Dense f32 values (f32 pages only).
+    pub fn f32_data(&self) -> &[f32] {
+        match &self.data {
+            PageData::F32(d) => d,
+            PageData::Quant { .. } => panic!("f32_data on a quantized page"),
+        }
+    }
+
+    /// Packed i8 lanes (quantized pages only).
+    pub fn lanes(&self) -> &[i8] {
+        match &self.data {
+            PageData::Quant { lanes, .. } => lanes,
+            PageData::F32(_) => panic!("lanes on an f32 page"),
+        }
+    }
+
+    /// Per-group f64 scales (quantized pages only).
+    pub fn scales(&self) -> &[f64] {
+        match &self.data {
+            PageData::Quant { scales, .. } => scales,
+            PageData::F32(_) => panic!("scales on an f32 page"),
+        }
+    }
+
+    /// Bytes of the rows actually stored (length-derived, like the
+    /// unpaged store's accounting — parked capacity never leaks in).
+    pub fn resident_bytes(&self) -> usize {
+        match &self.data {
+            PageData::F32(d) => std::mem::size_of_val(d.as_slice()),
+            PageData::Quant { lanes, scales } => {
+                std::mem::size_of_val(lanes.as_slice()) + std::mem::size_of_val(scales.as_slice())
+            }
+        }
+    }
+
+    /// Bytes the backing allocations hold (≥ resident).
+    pub fn capacity_bytes(&self) -> usize {
+        match &self.data {
+            PageData::F32(d) => d.capacity() * std::mem::size_of::<f32>(),
+            PageData::Quant { lanes, scales } => {
+                lanes.capacity() * std::mem::size_of::<i8>()
+                    + scales.capacity() * std::mem::size_of::<f64>()
+            }
+        }
+    }
+
+    /// Serialized bytes of the stored rows (canonical packed wire form
+    /// for quantized pages, dense f32 otherwise).
+    pub fn wire_bytes(&self, shape: &PageShape) -> usize {
+        match (&self.data, shape.kind) {
+            (PageData::F32(d), _) => std::mem::size_of_val(d.as_slice()),
+            (PageData::Quant { scales, .. }, KvCacheType::Quant(q)) => {
+                scales.len() * q.wire_bytes_group()
+            }
+            _ => unreachable!("quantized page under an f32 shape"),
+        }
+    }
+}
+
+/// Structured allocation failure: the pool is at `max_pages` and nothing
+/// is reclaimable. The serving tier never sees this mid-decode — the
+/// admission gate reserves a stream's worst-case page count up front and
+/// sheds with `ShedKvBudget` instead.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PagesExhausted {
+    pub live: usize,
+    pub max_pages: usize,
+}
+
+impl std::fmt::Display for PagesExhausted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "KV page pool exhausted: {} of {} pages live", self.live, self.max_pages)
+    }
+}
+
+impl std::error::Error for PagesExhausted {}
+
+/// A prefix-cache hit: the shared page bundles covering a whole-chunk
+/// token prefix, plus (optionally) a copy-on-write seed for the partial
+/// chunk at the divergence point. Carrying the `Arc`s pins the pages —
+/// between listener-side lookup and worker-side attach nothing can evict
+/// them.
+#[derive(Debug, Clone)]
+pub struct PrefixHit {
+    /// The exact tokens the hit covers (`chunks × page_rows` whole-chunk
+    /// tokens, then `cow_rows` more when a CoW seed is present). The
+    /// attach path re-verifies these against the real prompt.
+    pub tokens: Vec<usize>,
+    /// One bundle per covered chunk; bundle `s`-indexing is
+    /// `layer*2 + {0: K, 1: V}`.
+    pub bundles: Vec<Vec<Arc<KvPage>>>,
+    /// Divergence-chunk seed: the shared bundle plus how many of its
+    /// rows match the prompt (strictly less than a full chunk).
+    pub cow: Option<(Vec<Arc<KvPage>>, usize)>,
+    pub page_rows: usize,
+}
+
+impl PrefixHit {
+    /// Whole chunks covered.
+    pub fn chunks(&self) -> usize {
+        self.bundles.len()
+    }
+
+    /// Total covered rows (whole chunks + CoW seed rows).
+    pub fn rows(&self) -> usize {
+        self.bundles.len() * self.page_rows + self.cow.as_ref().map_or(0, |(_, r)| *r)
+    }
+
+    /// Highest sharing degree across the attached pages (refcount
+    /// high-water input for metrics). `strong_count` includes the trie's
+    /// own reference and this hit's pin.
+    pub fn max_refcount(&self) -> usize {
+        self.bundles
+            .iter()
+            .chain(self.cow.iter().map(|(b, _)| b))
+            .flat_map(|b| b.iter().map(Arc::strong_count))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// FNV-style chained chunk hash: each chunk key folds its parent's key,
+/// so equal keys imply (modulo collisions, which the exact-token compare
+/// catches) equal full token paths — not just equal final chunks.
+fn chunk_key(parent: u64, chunk: &[usize]) -> u64 {
+    let mut h = parent ^ 0xcbf2_9ce4_8422_2325;
+    for &t in chunk {
+        h ^= t as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+        h ^= h >> 29;
+    }
+    h
+}
+
+/// One cached prefix chunk: its exact tokens, parent linkage (collision
+/// safety + tree structure), the frozen page bundle, and an LRU stamp.
+struct TrieNode {
+    parent: Option<u64>,
+    chunk: Vec<usize>,
+    bundle: Vec<Arc<KvPage>>,
+    children: Vec<u64>,
+    last_used: u64,
+}
+
+/// Token-hash radix trie over `page_rows`-token chunks (the
+/// `PrefixIndex`): node key = chained hash of the chunk path from the
+/// root. Collisions are harmless — lookup verifies tokens and parent
+/// linkage exactly.
+struct PrefixTrie {
+    page_rows: usize,
+    nodes: HashMap<u64, TrieNode>,
+    roots: Vec<u64>,
+    clock: u64,
+    /// Cached-chunk cap: beyond it, registration evicts the LRU
+    /// unreferenced leaf first (bounds trie growth independently of the
+    /// page cap).
+    max_nodes: usize,
+}
+
+impl PrefixTrie {
+    fn new(page_rows: usize) -> PrefixTrie {
+        PrefixTrie {
+            page_rows,
+            nodes: HashMap::new(),
+            roots: Vec::new(),
+            clock: 0,
+            max_nodes: 4096,
+        }
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Walk whole chunks of `tokens[..limit]`, verifying each node's
+    /// chunk tokens and parent key; returns the matched node keys in
+    /// order plus the divergence CoW candidate (a child sharing the
+    /// longest nonzero row prefix of the next, partial chunk).
+    fn lookup(&mut self, tokens: &[usize], limit: usize) -> (Vec<u64>, Option<(u64, usize)>) {
+        let pr = self.page_rows;
+        let mut matched_keys = Vec::new();
+        let mut parent: Option<u64> = None;
+        let mut matched = 0usize;
+        while matched + pr <= limit {
+            let chunk = &tokens[matched..matched + pr];
+            let key = chunk_key(parent.unwrap_or(0), chunk);
+            match self.nodes.get(&key) {
+                Some(n) if n.parent == parent && n.chunk == chunk => {
+                    matched_keys.push(key);
+                    parent = Some(key);
+                    matched += pr;
+                }
+                _ => break,
+            }
+        }
+        let stamp = self.tick();
+        for k in &matched_keys {
+            if let Some(n) = self.nodes.get_mut(k) {
+                n.last_used = stamp;
+            }
+        }
+        // Divergence chunk: among the children of the last matched node
+        // (or the roots), the one sharing the longest row prefix with the
+        // remaining tokens seeds a copy-on-write page.
+        let rest = &tokens[matched..limit];
+        let candidates: &[u64] = match parent {
+            Some(p) => self.nodes.get(&p).map(|n| n.children.as_slice()).unwrap_or(&[]),
+            None => &self.roots,
+        };
+        let mut cow: Option<(u64, usize)> = None;
+        for &ck in candidates {
+            let Some(n) = self.nodes.get(&ck) else { continue };
+            if n.parent != parent {
+                continue;
+            }
+            let cp = n.chunk.iter().zip(rest.iter()).take_while(|(a, b)| a == b).count();
+            if cp > 0 && cp > cow.map_or(0, |(_, c)| c) {
+                cow = Some((ck, cp));
+            }
+        }
+        if let Some((ck, _)) = cow {
+            let stamp = self.tick();
+            if let Some(n) = self.nodes.get_mut(&ck) {
+                n.last_used = stamp;
+            }
+        }
+        (matched_keys, cow)
+    }
+
+    /// Insert the whole-chunk path of `tokens` with its page bundles
+    /// (one per chunk). Existing nodes are touched, not replaced — the
+    /// first registrant wins and later duplicates just refresh LRU.
+    fn register(&mut self, tokens: &[usize], bundles: Vec<Vec<Arc<KvPage>>>) {
+        let pr = self.page_rows;
+        debug_assert!(tokens.len() >= bundles.len() * pr, "register covers whole chunks only");
+        let stamp = self.tick();
+        let mut parent: Option<u64> = None;
+        for (ci, bundle) in bundles.into_iter().enumerate() {
+            let chunk = tokens[ci * pr..(ci + 1) * pr].to_vec();
+            let key = chunk_key(parent.unwrap_or(0), &chunk);
+            match self.nodes.get_mut(&key) {
+                Some(n) if n.parent == parent && n.chunk == chunk => {
+                    n.last_used = stamp;
+                }
+                Some(_) => {
+                    // Hash collision with a different path: leave the
+                    // incumbent alone (lookups for this path will miss —
+                    // correctness over coverage).
+                    return;
+                }
+                None => {
+                    if self.nodes.len() >= self.max_nodes && !self.evict_lru_leaf() {
+                        return; // every node is mid-path; stop growing
+                    }
+                    self.nodes.insert(
+                        key,
+                        TrieNode {
+                            parent,
+                            chunk,
+                            bundle,
+                            children: Vec::new(),
+                            last_used: stamp,
+                        },
+                    );
+                    match parent {
+                        Some(p) => {
+                            if let Some(pn) = self.nodes.get_mut(&p) {
+                                pn.children.push(key);
+                            }
+                        }
+                        None => self.roots.push(key),
+                    }
+                }
+            }
+            parent = Some(key);
+        }
+    }
+
+    fn unlink(&mut self, key: u64) -> Option<TrieNode> {
+        let node = self.nodes.remove(&key)?;
+        match node.parent {
+            Some(p) => {
+                if let Some(pn) = self.nodes.get_mut(&p) {
+                    pn.children.retain(|&c| c != key);
+                }
+            }
+            None => self.roots.retain(|&r| r != key),
+        }
+        Some(node)
+    }
+
+    /// A leaf is evictable when nothing outside the trie holds its pages
+    /// (every bundle Arc has `strong_count == 1`).
+    fn leaf_is_unreferenced(&self, key: u64) -> bool {
+        self.nodes.get(&key).is_some_and(|n| {
+            n.children.is_empty() && n.bundle.iter().all(|p| Arc::strong_count(p) == 1)
+        })
+    }
+
+    /// Drop the least-recently-used unreferenced leaf (trie-capacity
+    /// pressure; pages go back through the caller via the returned node).
+    fn evict_lru_leaf(&mut self) -> bool {
+        let victim = self
+            .nodes
+            .keys()
+            .copied()
+            .filter(|&k| self.leaf_is_unreferenced(k))
+            .min_by_key(|&k| self.nodes[&k].last_used);
+        match victim {
+            Some(k) => {
+                self.unlink(k);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Page-pressure eviction: cascade-drop unreferenced leaves (LRU
+    /// first) and hand their now-private pages back for recycling. Stops
+    /// as soon as `want` pages are freed.
+    fn evict_unreferenced(&mut self, want: usize) -> Vec<KvPage> {
+        let mut freed = Vec::new();
+        while freed.len() < want {
+            let victim = self
+                .nodes
+                .keys()
+                .copied()
+                .filter(|&k| self.leaf_is_unreferenced(k))
+                .min_by_key(|&k| self.nodes[&k].last_used);
+            let Some(k) = victim else { break };
+            let Some(node) = self.unlink(k) else { break };
+            for arc in node.bundle {
+                if let Ok(page) = Arc::try_unwrap(arc) {
+                    freed.push(page);
+                }
+            }
+        }
+        freed
+    }
+}
+
+/// Pool interior: the free list and the prefix trie live behind one lock
+/// so allocation can evict cached prefixes inline without lock-order
+/// hazards.
+struct PoolInner {
+    free: Vec<KvPage>,
+    trie: Option<PrefixTrie>,
+}
+
+/// The global page allocator: every KV store of every stream on one
+/// native server draws pages of one [`PageShape`] from here. Bounded by
+/// `max_pages` (0 = unbounded), recycling through a free list, with the
+/// shared-prefix index folded in when prefix caching is on.
+pub struct PagePool {
+    shape: PageShape,
+    max_pages: usize,
+    inner: Mutex<PoolInner>,
+    /// Pages currently out of the pool (allocated and not yet recycled).
+    live: AtomicUsize,
+    high_water: AtomicUsize,
+    freelist_hits: AtomicUsize,
+    /// Whole shared pages attached via prefix hits (each one is a page
+    /// of resident bytes a private prefill would have duplicated).
+    shared_pages_attached: AtomicUsize,
+    shared_ref_high_water: AtomicUsize,
+    prefix_evictions: AtomicUsize,
+    /// Pages minted beyond `max_pages` for reservation-backed streams
+    /// when every cached prefix page was pinned (see [`PagePool::alloc_reserved`]).
+    overflow_allocs: AtomicUsize,
+}
+
+impl PagePool {
+    /// `max_pages == 0` means unbounded; `prefix_cache` turns the shared
+    /// prefix index on.
+    pub fn new(shape: PageShape, max_pages: usize, prefix_cache: bool) -> PagePool {
+        let trie = prefix_cache.then(|| PrefixTrie::new(shape.page_rows));
+        PagePool {
+            shape,
+            max_pages,
+            inner: Mutex::new(PoolInner { free: Vec::new(), trie }),
+            live: AtomicUsize::new(0),
+            high_water: AtomicUsize::new(0),
+            freelist_hits: AtomicUsize::new(0),
+            shared_pages_attached: AtomicUsize::new(0),
+            shared_ref_high_water: AtomicUsize::new(0),
+            prefix_evictions: AtomicUsize::new(0),
+            overflow_allocs: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn shape(&self) -> &PageShape {
+        &self.shape
+    }
+
+    pub fn page_rows(&self) -> usize {
+        self.shape.page_rows
+    }
+
+    pub fn page_bytes(&self) -> usize {
+        self.shape.page_bytes()
+    }
+
+    pub fn max_pages(&self) -> usize {
+        self.max_pages
+    }
+
+    pub fn prefix_enabled(&self) -> bool {
+        lock_recover(&self.inner).trie.is_some()
+    }
+
+    fn note_alloc(&self) {
+        let live = self.live.fetch_add(1, Ordering::Relaxed) + 1;
+        self.high_water.fetch_max(live, Ordering::Relaxed);
+    }
+
+    /// Take one empty page: free list first, then a fresh allocation
+    /// under the cap, then eviction of unreferenced cached prefixes —
+    /// and only then [`PagesExhausted`].
+    pub fn alloc(&self) -> Result<KvPage, PagesExhausted> {
+        // All live-count transitions happen under the pool lock (the
+        // atomics are for lock-free *reads* by metrics), so the cap is
+        // exact under concurrent allocation.
+        let mut inner = lock_recover(&self.inner);
+        if let Some(mut page) = inner.free.pop() {
+            page.clear();
+            self.freelist_hits.fetch_add(1, Ordering::Relaxed);
+            self.note_alloc();
+            return Ok(page);
+        }
+        let live = self.live.load(Ordering::Relaxed);
+        if self.max_pages == 0 || live < self.max_pages {
+            self.note_alloc();
+            return Ok(KvPage::empty(&self.shape));
+        }
+        // At the cap with an empty free list: reclaim cached prefixes
+        // nothing references. Evicted pages were live (the trie held
+        // them), so recycling one does not change the live count.
+        if let Some(trie) = inner.trie.as_mut() {
+            let mut freed = trie.evict_unreferenced(1);
+            if let Some(mut page) = freed.pop() {
+                self.prefix_evictions.fetch_add(1, Ordering::Relaxed);
+                for extra in freed {
+                    self.recycle_locked(&mut inner, extra);
+                }
+                page.clear();
+                return Ok(page);
+            }
+        }
+        Err(PagesExhausted { live, max_pages: self.max_pages })
+    }
+
+    /// Infallible allocation for reservation-backed streams. The gate
+    /// reserves pages *net* of shared-prefix chunks, so shared pages
+    /// pinned by admitted hits can transiently crowd the cap out from
+    /// under a stream whose own reservation was honored. Rather than
+    /// abort that stream mid-decode, mint an overflow page beyond
+    /// `max_pages`: the overshoot is bounded by the pinned shared
+    /// overhang (itself capped by the trie's node bound) and drains back
+    /// under the cap as those streams retire. `overflow_allocs` counts
+    /// every such mint.
+    pub fn alloc_reserved(&self) -> KvPage {
+        self.alloc().unwrap_or_else(|_| {
+            self.overflow_allocs.fetch_add(1, Ordering::Relaxed);
+            self.note_alloc();
+            KvPage::empty(&self.shape)
+        })
+    }
+
+    fn recycle_locked(&self, inner: &mut PoolInner, mut page: KvPage) {
+        page.clear();
+        inner.free.push(page);
+        self.live.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Return a private page to the free list (allocation survives).
+    pub fn recycle(&self, page: KvPage) {
+        let mut inner = lock_recover(&self.inner);
+        self.recycle_locked(&mut inner, page);
+    }
+
+    /// Return a possibly-shared page: the last holder recycles it, any
+    /// earlier holder just drops its reference (the trie or another
+    /// stream still owns the bytes).
+    pub fn release(&self, page: Arc<KvPage>) {
+        match Arc::try_unwrap(page) {
+            Ok(page) => self.recycle(page),
+            Err(_still_shared) => {
+                // Another holder keeps the page live; this stream's claim
+                // on the live count transfers to them. Shared pages were
+                // counted once at their original alloc, so nothing to do.
+            }
+        }
+    }
+
+    /// Look a normalized prompt up in the prefix index. Covers at most
+    /// `tokens.len() - 1` tokens — the final prompt token must always be
+    /// fed through the model to produce the first logits row, so a
+    /// full-prompt hit still leaves one token to prefill.
+    pub fn lookup_prefix(&self, tokens: &[usize]) -> Option<PrefixHit> {
+        let mut inner = lock_recover(&self.inner);
+        let trie = inner.trie.as_mut()?;
+        let limit = tokens.len().saturating_sub(1);
+        let (keys, cow) = trie.lookup(tokens, limit);
+        if keys.is_empty() && cow.is_none() {
+            return None;
+        }
+        let pr = trie.page_rows;
+        let bundles: Vec<Vec<Arc<KvPage>>> =
+            keys.iter().map(|k| trie.nodes[k].bundle.iter().map(Arc::clone).collect()).collect();
+        let mut tokens_covered: Vec<usize> = tokens[..keys.len() * pr].to_vec();
+        let cow = cow.map(|(ck, rows)| {
+            let n = &trie.nodes[&ck];
+            tokens_covered.extend_from_slice(&n.chunk[..rows]);
+            (n.bundle.iter().map(Arc::clone).collect::<Vec<_>>(), rows)
+        });
+        Some(PrefixHit { tokens: tokens_covered, bundles, cow, page_rows: pr })
+    }
+
+    /// Register a completed prefill's whole-chunk pages under its tokens.
+    /// `bundles[c]` holds chunk `c`'s frozen pages (layer-major, K then
+    /// V). No-op when prefix caching is off or the path collides.
+    pub fn register_prefix(&self, tokens: &[usize], bundles: Vec<Vec<Arc<KvPage>>>) {
+        if bundles.is_empty() {
+            return;
+        }
+        let mut inner = lock_recover(&self.inner);
+        if let Some(trie) = inner.trie.as_mut() {
+            trie.register(tokens, bundles);
+        }
+    }
+
+    /// Account a prefix-hit attach: `shared_pages` whole pages were
+    /// reused instead of re-prefilled, at a peak sharing degree of
+    /// `max_refcount`.
+    pub fn note_attach(&self, shared_pages: usize, max_refcount: usize) {
+        self.shared_pages_attached.fetch_add(shared_pages, Ordering::Relaxed);
+        self.shared_ref_high_water.fetch_max(max_refcount, Ordering::Relaxed);
+    }
+
+    /// Pages currently allocated out of the pool.
+    pub fn live_pages(&self) -> usize {
+        self.live.load(Ordering::Relaxed)
+    }
+
+    /// Pages parked on the free list.
+    pub fn free_pages(&self) -> usize {
+        lock_recover(&self.inner).free.len()
+    }
+
+    /// Most pages ever simultaneously live.
+    pub fn high_water(&self) -> usize {
+        self.high_water.load(Ordering::Relaxed)
+    }
+
+    /// Allocations served from the free list (recycling effectiveness).
+    pub fn freelist_hits(&self) -> usize {
+        self.freelist_hits.load(Ordering::Relaxed)
+    }
+
+    /// Resident bytes prefix sharing avoided duplicating (whole shared
+    /// pages attached × page bytes).
+    pub fn bytes_saved(&self) -> usize {
+        self.shared_pages_attached.load(Ordering::Relaxed) * self.shape.page_bytes()
+    }
+
+    /// Peak `Arc::strong_count` observed across prefix-hit attaches.
+    pub fn shared_refcount_high_water(&self) -> usize {
+        self.shared_ref_high_water.load(Ordering::Relaxed)
+    }
+
+    /// Cached prefix chunks evicted under page pressure.
+    pub fn prefix_evictions(&self) -> usize {
+        self.prefix_evictions.load(Ordering::Relaxed)
+    }
+
+    /// Cached prefix chunks currently resident in the index.
+    pub fn prefix_nodes(&self) -> usize {
+        lock_recover(&self.inner).trie.as_ref().map_or(0, |t| t.nodes.len())
+    }
+
+    /// Overflow pages minted beyond `max_pages` for reserved streams
+    /// (only reachable with prefix caching on under a tight page cap).
+    pub fn overflow_allocs(&self) -> usize {
+        self.overflow_allocs.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{Matrix, Rng};
+
+    fn shape(kind: KvCacheType, page_rows: usize) -> PageShape {
+        PageShape::new(kind, 16, page_rows)
+    }
+
+    fn full_page(pool: &PagePool, rows: &Matrix) -> Arc<KvPage> {
+        let mut p = pool.alloc().unwrap();
+        for r in 0..pool.page_rows() {
+            p.append_row(pool.shape(), rows.row(r));
+        }
+        Arc::new(p)
+    }
+
+    #[test]
+    fn page_shape_is_group_aligned_for_every_kind() {
+        // The invariant the module docs promise: a page's lane plane is a
+        // whole number of groups for any page height, so no group ever
+        // straddles a page.
+        for kind in QuantKind::ALL {
+            for pr in [1usize, 3, 16, 64, 100] {
+                let s = PageShape::new(KvCacheType::Quant(kind), 24, pr);
+                assert_eq!(s.row_lanes() % kind.group(), 0, "{kind} pr={pr}");
+                assert_eq!(s.page_bytes(), pr * s.row_bytes());
+            }
+        }
+        let f = shape(KvCacheType::F32, 8);
+        assert_eq!(f.groups_per_row(), 0);
+        assert_eq!(f.page_bytes(), 8 * 16 * 4);
+    }
+
+    #[test]
+    fn alloc_recycle_reuses_the_exact_allocation() {
+        let pool = PagePool::new(shape(KvCacheType::HIF4, 4), 0, false);
+        let mut rng = Rng::seed(3);
+        let rows = Matrix::randn(4, 16, 1.0, &mut rng);
+        let mut page = pool.alloc().unwrap();
+        for r in 0..4 {
+            page.append_row(pool.shape(), rows.row(r));
+        }
+        let cap = page.capacity_bytes();
+        assert_eq!(page.resident_bytes(), 4 * pool.shape().row_bytes());
+        assert!(cap >= page.resident_bytes());
+        pool.recycle(page);
+        assert_eq!(pool.live_pages(), 0);
+        assert_eq!(pool.free_pages(), 1);
+        // The recycled allocation comes back with identical capacity and
+        // zero resident bytes — the free-list exact-byte check.
+        let page = pool.alloc().unwrap();
+        assert_eq!(pool.freelist_hits(), 1);
+        assert_eq!(page.rows(), 0);
+        assert_eq!(page.resident_bytes(), 0);
+        assert_eq!(page.capacity_bytes(), cap, "free list must hand back the same allocation");
+        assert_eq!(pool.high_water(), 1);
+    }
+
+    #[test]
+    fn exhaustion_is_a_structured_error() {
+        let pool = PagePool::new(shape(KvCacheType::F32, 2), 2, false);
+        let a = pool.alloc().unwrap();
+        let _b = pool.alloc().unwrap();
+        let err = pool.alloc().unwrap_err();
+        assert_eq!(err, PagesExhausted { live: 2, max_pages: 2 });
+        assert!(err.to_string().contains("2 of 2"));
+        // Recycling frees a slot.
+        pool.recycle(a);
+        assert!(pool.alloc().is_ok());
+    }
+
+    #[test]
+    fn reserved_alloc_overflows_the_cap_instead_of_failing() {
+        let pool = PagePool::new(shape(KvCacheType::F32, 2), 1, false);
+        let a = pool.alloc().unwrap();
+        // Fallible alloc refuses; the reservation-backed path mints an
+        // overflow page and keeps the live count honest for recycling.
+        assert!(pool.alloc().is_err());
+        let b = pool.alloc_reserved();
+        assert_eq!(pool.overflow_allocs(), 1);
+        assert_eq!(pool.live_pages(), 2);
+        assert_eq!(pool.high_water(), 2);
+        pool.recycle(a);
+        pool.recycle(b);
+        assert_eq!(pool.live_pages(), 0);
+        assert_eq!(pool.free_pages(), 2);
+        // Under the cap again the infallible path is an ordinary alloc.
+        let _c = pool.alloc_reserved();
+        assert_eq!(pool.overflow_allocs(), 1);
+    }
+
+    #[test]
+    fn release_recycles_only_the_last_holder() {
+        let pool = PagePool::new(shape(KvCacheType::HIF4, 2), 0, false);
+        let mut rng = Rng::seed(4);
+        let rows = Matrix::randn(2, 16, 1.0, &mut rng);
+        let page = full_page(&pool, &rows);
+        let other = Arc::clone(&page);
+        pool.release(page);
+        assert_eq!(pool.free_pages(), 0, "a shared page must not recycle early");
+        pool.release(other);
+        assert_eq!(pool.free_pages(), 1, "the last holder recycles");
+        assert_eq!(pool.live_pages(), 0);
+    }
+
+    #[test]
+    fn prefix_register_lookup_roundtrip_with_cow() {
+        let pool = PagePool::new(shape(KvCacheType::HIF4, 4), 0, true);
+        let mut rng = Rng::seed(5);
+        let rows = Matrix::randn(4, 16, 1.0, &mut rng);
+        // Register a 2-chunk prompt (8 tokens + 1 uncovered): bundles of
+        // one page each (1 layer × K only, for the test's purposes).
+        let tokens: Vec<usize> = (10..19).collect();
+        let b0 = full_page(&pool, &rows);
+        let b1 = full_page(&pool, &rows);
+        pool.register_prefix(&tokens, vec![vec![Arc::clone(&b0)], vec![Arc::clone(&b1)]]);
+        assert_eq!(pool.prefix_nodes(), 2);
+
+        // Exact re-lookup: both chunks hit (limit excludes the last
+        // token, which is exactly the uncovered one).
+        let hit = pool.lookup_prefix(&tokens).expect("registered prefix must hit");
+        assert_eq!(hit.chunks(), 2);
+        assert_eq!(hit.rows(), 8);
+        assert_eq!(hit.tokens, tokens[..8]);
+        assert!(hit.cow.is_none());
+        assert!(hit.max_refcount() >= 2, "trie + hit pin the pages");
+
+        // A prompt sharing one chunk then diverging mid-chunk: one whole
+        // chunk + a CoW seed of the common rows.
+        let fork: Vec<usize> = vec![10, 11, 12, 13, 14, 15, 99, 98, 97];
+        let hit = pool.lookup_prefix(&fork).expect("shared first chunk must hit");
+        assert_eq!(hit.chunks(), 1);
+        let (cow_bundle, cow_rows) = hit.cow.as_ref().expect("divergence inside chunk 2");
+        assert_eq!(*cow_rows, 2, "tokens 14,15 match before 99 diverges");
+        assert_eq!(cow_bundle.len(), 1);
+        assert_eq!(hit.rows(), 6);
+        assert_eq!(hit.tokens, fork[..6]);
+
+        // A cold prompt misses outright.
+        assert!(pool.lookup_prefix(&[1, 2, 3, 4, 5]).is_none());
+        // Too short to cover even one chunk (limit = len-1 < page_rows)
+        // and no divergence candidate → miss.
+        assert!(pool.lookup_prefix(&[7, 7, 7]).is_none());
+    }
+
+    #[test]
+    fn lookup_never_covers_the_final_token() {
+        let pool = PagePool::new(shape(KvCacheType::F32, 2), 0, true);
+        let mut rng = Rng::seed(6);
+        let rows = Matrix::randn(2, 16, 1.0, &mut rng);
+        let tokens = vec![1usize, 2, 3, 4];
+        let bundles = vec![vec![full_page(&pool, &rows)], vec![full_page(&pool, &rows)]];
+        pool.register_prefix(&tokens, bundles);
+        // The exact same 4-token prompt: only chunk 1 plus a 1-row CoW
+        // seed may be covered — row 4 (the last token) must stay
+        // uncovered so the model still produces a logits row.
+        let hit = pool.lookup_prefix(&tokens).expect("hit");
+        assert_eq!(hit.chunks(), 1);
+        assert_eq!(hit.cow.as_ref().map(|(_, r)| *r), Some(1));
+        assert_eq!(hit.rows(), 3);
+        assert!(hit.rows() < tokens.len());
+    }
+
+    #[test]
+    fn unreferenced_prefixes_evict_under_page_pressure() {
+        // Cap = 4 pages; two single-page chunks cached and released by
+        // their registrant. New allocations beyond the cap must reclaim
+        // them LRU-first instead of failing.
+        let pool = PagePool::new(shape(KvCacheType::F32, 2), 4, true);
+        let mut rng = Rng::seed(7);
+        let rows = Matrix::randn(2, 16, 1.0, &mut rng);
+        let a = full_page(&pool, &rows);
+        let b = full_page(&pool, &rows);
+        pool.register_prefix(&[1, 2], vec![vec![Arc::clone(&a)]]);
+        pool.register_prefix(&[3, 4], vec![vec![Arc::clone(&b)]]);
+        // Touch [3,4] so [1,2] is LRU.
+        let _ = pool.lookup_prefix(&[3, 4, 9]);
+        drop(a);
+        drop(b);
+        let _c = pool.alloc().unwrap();
+        let _d = pool.alloc().unwrap();
+        // Live = 4 (2 cached + 2 fresh): the next alloc evicts [1,2].
+        let _e = pool.alloc().expect("eviction must free an unreferenced cached chunk");
+        assert_eq!(pool.prefix_evictions(), 1);
+        assert_eq!(pool.prefix_nodes(), 1);
+        assert!(pool.lookup_prefix(&[1, 2, 9]).is_none(), "evicted chunk is gone");
+        assert!(pool.lookup_prefix(&[3, 4, 9]).is_some(), "recently used chunk survives");
+        // A pinned chunk never evicts: with [3,4] pinned and the pool
+        // back at its cap, allocation fails structurally instead of
+        // stealing pages a hit is still holding.
+        let pin = pool.lookup_prefix(&[3, 4, 9]).unwrap();
+        let err = pool.alloc().unwrap_err();
+        assert_eq!(err.max_pages, 4);
+        drop(pin);
+    }
+
+    #[test]
+    fn cow_copy_is_bitwise_identical_to_the_source_prefix() {
+        for kind in [KvCacheType::F32, KvCacheType::HIF4] {
+            let s = shape(kind, 4);
+            let pool = PagePool::new(s, 0, false);
+            let mut rng = Rng::seed(8);
+            let rows = Matrix::randn(4, 16, 0.9, &mut rng);
+            let src = full_page(&pool, &rows);
+            let mut dst = pool.alloc().unwrap();
+            dst.copy_prefix_from(&s, &src, 3);
+            assert_eq!(dst.rows(), 3);
+            match kind {
+                KvCacheType::F32 => {
+                    assert_eq!(dst.f32_data(), &src.f32_data()[..3 * s.kvd]);
+                }
+                _ => {
+                    assert_eq!(dst.lanes(), &src.lanes()[..3 * s.row_lanes()]);
+                    let got: Vec<u64> = dst.scales().iter().map(|x| x.to_bits()).collect();
+                    let shared = &src.scales()[..3 * s.groups_per_row()];
+                    let want: Vec<u64> = shared.iter().map(|x| x.to_bits()).collect();
+                    assert_eq!(got, want);
+                }
+            }
+            // And the copy keeps accepting appends up to the page height.
+            dst.append_row(&s, rows.row(3));
+            assert_eq!(dst.rows(), 4);
+        }
+    }
+
+    #[test]
+    fn hash_collision_degrades_to_a_miss_not_a_wrong_attach() {
+        // Force the collision arm structurally: insert a node, then
+        // register a different chunk under the same key via the trie's
+        // internals. Lookup must reject on exact-token compare.
+        let mut trie = PrefixTrie::new(2);
+        let pool = PagePool::new(shape(KvCacheType::F32, 2), 0, false);
+        let mut rng = Rng::seed(9);
+        let rows = Matrix::randn(2, 16, 1.0, &mut rng);
+        let real_key = chunk_key(0, &[5, 6]);
+        trie.nodes.insert(
+            real_key,
+            TrieNode {
+                parent: None,
+                chunk: vec![9, 9], // wrong tokens under [5,6]'s key
+                bundle: vec![full_page(&pool, &rows)],
+                children: Vec::new(),
+                last_used: 0,
+            },
+        );
+        trie.roots.push(real_key);
+        let (keys, _) = trie.lookup(&[5, 6, 7], 2);
+        assert!(keys.is_empty(), "token mismatch must read as a miss");
+    }
+}

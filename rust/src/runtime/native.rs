@@ -18,14 +18,22 @@
 //!
 //! This module also hosts the [`DecodeEngine`] — the incremental-decode
 //! executor the continuous-batching server loop drives: per-sequence
-//! [`DecodeStream`]s carry a KV-cache page each ([`KvCacheType`] knob:
-//! f32 or any block format encoded on append), and one
-//! [`DecodeEngine::step`]
-//! advances a mixed batch of prefilling and decoding sequences by one
-//! greedy token through [`Transformer::forward_cached`]. Attention over
-//! quantized pages follows the process-wide
-//! [`attn_path`](crate::model::attention::attn_path) knob (`HIF4_ATTN`
-//! / `--attn`, default fused — the tiled integer kernel over the packed
+//! [`DecodeStream`]s carry a paged KV cache each ([`KvCacheType`] knob:
+//! f32 or any block format encoded on append; pages drawn from the
+//! server's global [`PagePool`]), and one [`DecodeEngine::step`] advances
+//! a mixed batch of prefilling and decoding sequences through
+//! [`Transformer::forward_cached`]. Long prompts prefill in fixed-budget
+//! **chunks** ([`DecodeEngine::with_prefill_chunk`]) interleaved with
+//! other streams' decode steps — a step that only advanced a stream's
+//! prefill yields `None` for it (no token frame); chunking is bit-exact
+//! by the cached-forward contract (attention always reads the
+//! quantize→decode store rows, append-then-attend), so the chunk size is
+//! pure scheduling, never numerics. Prefix-cache hits attach shared pages
+//! before prefill ([`DecodeEngine::start_with_prefix`]) and completed
+//! prefills register their whole-page chunks for later sequences to
+//! share. Attention over quantized pages follows the process-wide
+//! [`attn_path`](crate::model::attention::attn_path) knob (`HIF4_ATTN` /
+//! `--attn`, default fused — the tiled integer kernel over the packed
 //! planes); f32 pages always replay. Greedy tokens are identical either
 //! way, so the continuous-batching invariants below hold under both.
 //!
@@ -33,28 +41,38 @@
 
 use crate::model::config::{Attention, Ffn, ModelConfig};
 use crate::model::kv::{KvCache, KvCacheType};
+use crate::model::pages::{PagePool, PrefixHit, DEFAULT_PAGE_ROWS};
 use crate::model::transformer::{greedy_from_row, CachedSeq, Transformer};
 use crate::runtime::artifact::{Manifest, ParamStore};
 use anyhow::{Context, Result};
 use std::sync::Arc;
 
 /// Incremental-decode executor: one shared read-only model + the KV-cache
-/// policy, driving any number of per-sequence [`DecodeStream`]s.
+/// policy (kind, page pool, prefill-chunk budget), driving any number of
+/// per-sequence [`DecodeStream`]s.
 pub struct DecodeEngine {
     model: Arc<Transformer>,
     kv: KvCacheType,
     max_prompt: usize,
+    page_rows: usize,
+    pool: Option<Arc<PagePool>>,
+    prefill_chunk: usize,
 }
 
-/// One in-flight generation: the sanitized prompt, this sequence's
-/// KV-cache page, and the next token to feed. Created by
-/// [`DecodeEngine::start`], advanced one token per [`DecodeEngine::step`],
-/// dropped (evicting the page) on completion.
+/// One in-flight generation: the sanitized prompt, this sequence's paged
+/// KV cache, the prefill frontier, and the next token to feed. Created by
+/// [`DecodeEngine::start`] / [`DecodeEngine::start_with_prefix`], advanced
+/// by [`DecodeEngine::step`], dropped (returning its pages to the pool) on
+/// completion or eviction.
 pub struct DecodeStream {
     prompt: Vec<usize>,
     cache: KvCache,
+    /// Prompt positions already in the cache (attached prefix + fed
+    /// chunks). The stream is prefilling while `fed < prompt.len()`.
+    fed: usize,
     next: usize,
     generated: usize,
+    registered: bool,
 }
 
 impl DecodeStream {
@@ -63,27 +81,64 @@ impl DecodeStream {
         self.generated
     }
 
-    /// This sequence's cache page (for memory accounting).
-    pub fn cache(&self) -> &KvCache {
-        &self.cache
+    /// Still feeding prompt chunks (no token frames yet)?
+    pub fn prefilling(&self) -> bool {
+        self.fed < self.prompt.len()
     }
 
-    /// Surrender this stream's cache page for recycling: the serving
-    /// loop parks released pages and hands them back to
-    /// [`DecodeEngine::start_reusing`], so steady-state decode admits
-    /// sequences without reallocating KV storage.
-    pub fn into_cache(self) -> KvCache {
-        self.cache
+    /// This sequence's cache (for memory accounting).
+    pub fn cache(&self) -> &KvCache {
+        &self.cache
     }
 }
 
 impl DecodeEngine {
     /// `max_prompt` bounds the prompt length (requests truncate to it, as
-    /// [`run_batch_native`][rbn] always did).
+    /// [`run_batch_native`][rbn] always did). The engine starts with
+    /// private page allocation at the default page height and whole-prompt
+    /// prefill; see [`DecodeEngine::with_pool`] and
+    /// [`DecodeEngine::with_prefill_chunk`] for the serving configuration.
     ///
     /// [rbn]: crate::server::service::run_batch_native
     pub fn new(model: Arc<Transformer>, kv: KvCacheType, max_prompt: usize) -> DecodeEngine {
-        DecodeEngine { model, kv, max_prompt: max_prompt.max(1) }
+        DecodeEngine {
+            model,
+            kv,
+            max_prompt: max_prompt.max(1),
+            page_rows: DEFAULT_PAGE_ROWS,
+            pool: None,
+            prefill_chunk: 0,
+        }
+    }
+
+    /// Draw every stream's pages from `pool` (the server's global,
+    /// bounded, dedup-aware allocator). The pool's shape must match this
+    /// engine's cache kind and geometry; the engine adopts its page
+    /// height.
+    pub fn with_pool(mut self, pool: Arc<PagePool>) -> DecodeEngine {
+        let cfg = &self.model.cfg;
+        assert_eq!(pool.shape().kind, self.kv, "pool kind must match the engine");
+        assert_eq!(pool.shape().kvd, cfg.kv_heads() * cfg.head_dim, "pool kvd must match");
+        self.page_rows = pool.page_rows();
+        self.pool = Some(pool);
+        self
+    }
+
+    /// Page height for pool-less engines (tests / standalone decode); a
+    /// pooled engine takes its height from the pool.
+    pub fn with_page_rows(mut self, page_rows: usize) -> DecodeEngine {
+        assert!(self.pool.is_none(), "a pooled engine takes its page height from the pool");
+        self.page_rows = page_rows.max(1);
+        self
+    }
+
+    /// Prefill at most `chunk` prompt tokens per step (0 = whole prompt
+    /// in one step, the pre-paging behavior). Bit-exact for any value;
+    /// smaller chunks trade prefill latency for decode fairness under
+    /// continuous batching.
+    pub fn with_prefill_chunk(mut self, chunk: usize) -> DecodeEngine {
+        self.prefill_chunk = chunk;
+        self
     }
 
     pub fn model(&self) -> &Transformer {
@@ -100,6 +155,21 @@ impl DecodeEngine {
         self.max_prompt
     }
 
+    /// The global page pool, when serving-configured.
+    pub fn pool(&self) -> Option<&Arc<PagePool>> {
+        self.pool.as_ref()
+    }
+
+    /// Rows per KV page in this engine's caches.
+    pub fn page_rows(&self) -> usize {
+        self.page_rows
+    }
+
+    /// Per-step prefill token budget (0 = unchunked).
+    pub fn prefill_chunk(&self) -> usize {
+        self.prefill_chunk
+    }
+
     /// Label of the attention schedule this engine's steps actually run
     /// (`"fused"` / `"replay"`): the process-wide knob resolved against
     /// the cache kind — an f32-cache engine reports `"replay"` whatever
@@ -111,63 +181,118 @@ impl DecodeEngine {
     }
 
     /// Worst-case resident KV bytes one cached position costs across all
-    /// layers (K + V stores) under this engine's cache kind — the
-    /// admission gate's per-token budget unit. Built on
+    /// layers (K + V stores) under this engine's cache kind. Built on
     /// [`KvCacheType::resident_row_bytes`], which is pinned against the
     /// actual store layout, so `(prompt + max_new) × kv_bytes_per_token`
-    /// is an exact upper bound on a stream's resident page size.
+    /// is an exact upper bound on a stream's resident cache size.
     pub fn kv_bytes_per_token(&self) -> usize {
         let cfg = &self.model.cfg;
         let kvd = cfg.kv_heads() * cfg.head_dim;
         cfg.n_layers * 2 * self.kv.resident_row_bytes(kvd)
     }
 
-    /// Open a stream: clamp out-of-vocab ids to the last token, truncate
-    /// to `max_prompt`, never empty — a malformed request can never panic
-    /// the engine.
-    pub fn start(&self, tokens: &[usize]) -> DecodeStream {
-        self.start_reusing(tokens, None)
+    /// Pages a stream holding `rows` cached positions needs from the
+    /// pool, net of `shared_chunks` whole chunks it would attach from the
+    /// prefix cache instead of allocating — the admission gate's
+    /// dedup-aware reservation unit (`⌈rows / page_rows⌉` pages per
+    /// store, 2 stores per layer).
+    pub fn pages_for_rows(&self, rows: usize, shared_chunks: usize) -> usize {
+        let per_store = rows.div_ceil(self.page_rows).saturating_sub(shared_chunks);
+        per_store * self.model.cfg.n_layers * 2
     }
 
-    /// [`DecodeEngine::start`] with an optional recycled cache page: the
-    /// page is reset (stored rows dropped, allocations kept) and reused,
-    /// so admission after eviction churn skips the KV reallocation. A
-    /// page from a different configuration (guarded by
-    /// [`KvCache::fits`]) is dropped and a fresh one allocated —
-    /// recycling can never change behavior, only allocation traffic;
-    /// decode output is bit-identical either way (unit-tested below).
-    pub fn start_reusing(&self, tokens: &[usize], page: Option<KvCache>) -> DecodeStream {
+    /// The exact token sequence a request's stream will feed: clamp
+    /// out-of-vocab ids to the last token, truncate to `max_prompt`,
+    /// never empty — a malformed request can never panic the engine. The
+    /// listener normalizes through this before a prefix-cache lookup so
+    /// hit verification compares what decode will actually see.
+    pub fn normalize_prompt(&self, tokens: &[usize]) -> Vec<usize> {
         let vocab = self.model.cfg.vocab;
         let mut prompt: Vec<usize> = tokens.iter().map(|&t| t.min(vocab - 1)).collect();
         prompt.truncate(self.max_prompt);
         if prompt.is_empty() {
             prompt.push(0);
         }
-        let cache = match page {
-            Some(mut page) if page.fits(&self.model.cfg, self.kv) => {
-                page.reset();
-                page
-            }
-            _ => KvCache::new(&self.model.cfg, self.kv),
-        };
-        DecodeStream { prompt, cache, next: 0, generated: 0 }
+        prompt
     }
 
-    /// One continuous-batching step over a mixed batch: fresh streams
-    /// prefill their whole prompt, in-flight streams feed their last
-    /// token; every stream advances by one greedy token, returned as
-    /// `(token, logprob)` in stream order. Per-stream results are
-    /// **bit-identical regardless of batch composition** (row-independent
-    /// linears, per-sequence attention — see
+    /// Open a stream with a fresh (or pooled) cache and no shared prefix.
+    pub fn start(&self, tokens: &[usize]) -> DecodeStream {
+        self.start_with_prefix(tokens, None)
+    }
+
+    /// Open a stream, attaching a prefix-cache hit first when one is
+    /// offered: shared whole pages by refcount plus a copy-on-write copy
+    /// of the divergence chunk, so prefill resumes at the first uncovered
+    /// position instead of position 0. The hit is re-verified
+    /// token-by-token against the normalized prompt inside
+    /// [`KvCache::attach_prefix`] — a stale hit degrades to a shorter
+    /// attach (or none), never to wrong rows, and decode output is
+    /// bit-identical with or without the hit.
+    pub fn start_with_prefix(&self, tokens: &[usize], hit: Option<&PrefixHit>) -> DecodeStream {
+        let prompt = self.normalize_prompt(tokens);
+        let mut cache =
+            KvCache::new_paged(&self.model.cfg, self.kv, self.page_rows, self.pool.clone());
+        let mut fed = 0;
+        if let Some(hit) = hit {
+            fed = cache.attach_prefix(hit, &prompt);
+            if fed > 0 {
+                if let Some(pool) = &self.pool {
+                    // Whole shared chunks only — the CoW tail is a private
+                    // copy the stream allocated itself.
+                    let shared = (fed / self.page_rows) * self.model.cfg.n_layers * 2;
+                    pool.note_attach(shared, hit.max_refcount());
+                }
+            }
+        }
+        DecodeStream { prompt, cache, fed, next: 0, generated: 0, registered: false }
+    }
+
+    /// Register a freshly prefilled prompt's whole-page chunks in the
+    /// pool's prefix index (idempotent per stream; no-op without a
+    /// prefix-enabled pool or for prompts shorter than one page).
+    fn maybe_register(&self, s: &mut DecodeStream) {
+        if s.registered {
+            return;
+        }
+        s.registered = true;
+        let Some(pool) = &self.pool else { return };
+        if !pool.prefix_enabled() {
+            return;
+        }
+        let chunks = s.prompt.len() / self.page_rows;
+        if chunks == 0 {
+            return;
+        }
+        pool.register_prefix(&s.prompt[..chunks * self.page_rows], s.cache.prefix_bundles(chunks));
+    }
+
+    /// One continuous-batching step over a mixed batch: prefilling
+    /// streams feed their next prompt chunk (all remaining tokens, or at
+    /// most `prefill_chunk`), in-flight streams feed their last generated
+    /// token. A stream whose prefill is still incomplete after this step
+    /// yields `None` (its logits row belongs to a mid-prompt position —
+    /// no token frame); every other stream advances by one greedy token,
+    /// returned as `Some((token, logprob))` in stream order. Per-stream
+    /// results are **bit-identical regardless of batch composition and
+    /// chunking** (row-independent linears, per-sequence attention — see
     /// [`Transformer::forward_cached`]), which is what makes scheduler
-    /// output independent of arrival order.
-    pub fn step(&self, streams: &mut [&mut DecodeStream]) -> Vec<(u32, f32)> {
+    /// output independent of arrival order and prefill interleaving.
+    pub fn step(&self, streams: &mut [&mut DecodeStream]) -> Vec<Option<(u32, f32)>> {
+        let mut takes = Vec::with_capacity(streams.len());
         let mut seqs: Vec<CachedSeq<'_>> = Vec::with_capacity(streams.len());
         for s in streams.iter_mut() {
             let s: &mut DecodeStream = s;
-            let feed: &[usize] = if s.cache.is_empty() {
-                &s.prompt
+            let feed: &[usize] = if s.fed < s.prompt.len() {
+                let remaining = s.prompt.len() - s.fed;
+                let take = match self.prefill_chunk {
+                    0 => remaining,
+                    chunk => chunk.min(remaining),
+                };
+                takes.push(take);
+                &s.prompt[s.fed..s.fed + take]
             } else {
+                takes.push(0);
                 std::slice::from_ref(&s.next)
             };
             seqs.push(CachedSeq { tokens: feed, cache: &mut s.cache });
@@ -177,10 +302,20 @@ impl DecodeEngine {
         drop(seqs);
         let mut out = Vec::with_capacity(streams.len());
         for (si, s) in streams.iter_mut().enumerate() {
+            if takes[si] > 0 {
+                s.fed += takes[si];
+                if s.fed < s.prompt.len() {
+                    out.push(None);
+                    continue;
+                }
+                // Prefill just completed: its whole pages are now frozen
+                // and sharable, and this logits row is the first token.
+                self.maybe_register(s);
+            }
             let (token, logprob) = greedy_from_row(logits.row(si));
             s.next = token;
             s.generated += 1;
-            out.push((token as u32, logprob));
+            out.push(Some((token as u32, logprob)));
         }
         out
     }
@@ -301,6 +436,7 @@ pub fn transformer_from_store(m: &Manifest, store: &ParamStore) -> Result<Transf
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::pages::PageShape;
     use std::path::Path;
 
     /// A complete 1-layer GQA+SwiGLU manifest (d=32, 4 heads × 8, kv 2).
@@ -322,6 +458,27 @@ mod tests {
         .unwrap();
     }
 
+    fn engine_from(dir: &Path, seed: u64, kv: KvCacheType) -> DecodeEngine {
+        write_native_manifest(dir);
+        let m = Manifest::load(dir).unwrap();
+        let store = m.init_params(seed);
+        let model = Arc::new(transformer_from_store(&m, &store).unwrap());
+        DecodeEngine::new(model, kv, 16)
+    }
+
+    /// Run `prompt` to `n` generated tokens on a solo stream, collecting
+    /// the emitted frames (prefill `None`s excluded).
+    fn decode_n(engine: &DecodeEngine, prompt: &[usize], n: usize) -> Vec<(u32, f32)> {
+        let mut s = engine.start(prompt);
+        let mut out = Vec::new();
+        while out.len() < n {
+            if let Some(frame) = engine.step(&mut [&mut s])[0] {
+                out.push(frame);
+            }
+        }
+        out
+    }
+
     #[test]
     fn config_derivation_matches_manifest() {
         let dir = std::env::temp_dir().join("hif4_native_cfg_test");
@@ -338,53 +495,146 @@ mod tests {
     }
 
     #[test]
-    fn recycled_cache_pages_decode_identically() {
+    fn pooled_pages_recycle_through_the_free_list_bit_identically() {
+        // The global allocator replaces the old per-worker spare-page
+        // pool: a completed stream's pages return to the pool's free
+        // list, the next stream reuses those exact allocations, and its
+        // decode is bit-identical to a pool-less engine's.
         let dir = std::env::temp_dir().join("hif4_native_recycle_test");
-        write_native_manifest(&dir);
+        let private = engine_from(&dir, 21, KvCacheType::HIF4).with_page_rows(4);
         let m = Manifest::load(&dir).unwrap();
         let store = m.init_params(21);
         let model = Arc::new(transformer_from_store(&m, &store).unwrap());
-        let engine = DecodeEngine::new(Arc::clone(&model), KvCacheType::HIF4, 16);
-        // First tenant: a long sequence grows the page's allocations.
-        let mut s1 = engine.start(&[1, 2, 3, 4, 5, 6, 7]);
-        for _ in 0..6 {
-            engine.step(&mut [&mut s1]);
+        let shape = PageShape::new(KvCacheType::HIF4, 16, 4);
+        let pool = Arc::new(PagePool::new(shape, 0, false));
+        let pooled =
+            DecodeEngine::new(model, KvCacheType::HIF4, 16).with_pool(Arc::clone(&pool));
+        assert_eq!(pooled.page_rows(), 4);
+        // First tenant grows the pool; dropping it returns every page.
+        let reference = decode_n(&private, &[1, 2, 3, 4, 5, 6, 7], 6);
+        let first = decode_n(&pooled, &[1, 2, 3, 4, 5, 6, 7], 6);
+        assert_eq!(first, reference, "pooled == private, bitwise");
+        assert_eq!(pool.live_pages(), 0, "completed stream returned its pages");
+        let parked = pool.free_pages();
+        assert!(parked > 0);
+        // Second tenant: same tokens, recycled allocations, free-list hits.
+        let second = decode_n(&pooled, &[1, 2, 3, 4, 5, 6, 7], 6);
+        assert_eq!(second, reference, "recycled pages decode identically");
+        assert_eq!(pool.free_pages(), parked);
+        assert!(pool.freelist_hits() > 0, "reuse went through the free list");
+        assert_eq!(pool.high_water(), parked, "no growth on the second tenant");
+    }
+
+    #[test]
+    fn chunked_prefill_is_bitwise_identical_to_whole_prompt() {
+        // Chunk size is scheduling, not numerics: every chunk budget
+        // produces the same frames, and mid-prefill steps emit None.
+        let dir = std::env::temp_dir().join("hif4_native_chunk_test");
+        for kv in [KvCacheType::F32, KvCacheType::HIF4] {
+            let whole = engine_from(&dir, 21, kv);
+            let prompt = [5usize, 9, 2, 7, 7, 3, 1];
+            let reference = decode_n(&whole, &prompt, 5);
+            for chunk in [1usize, 2, 3, 5, 64] {
+                let chunked = engine_from(&dir, 21, kv).with_prefill_chunk(chunk);
+                let mut s = chunked.start(&prompt);
+                let mut frames = Vec::new();
+                let mut silent = 0;
+                while frames.len() < 5 {
+                    match chunked.step(&mut [&mut s])[0] {
+                        Some(f) => frames.push(f),
+                        None => silent += 1,
+                    }
+                }
+                assert_eq!(frames, reference, "{} chunk={chunk}", kv.label());
+                // 7 prompt tokens at chunk c: ⌈7/c⌉ steps, all but the
+                // last silent.
+                assert_eq!(silent, 7usize.div_ceil(chunk) - 1, "{} chunk={chunk}", kv.label());
+                assert_eq!(s.generated(), 5);
+            }
         }
-        let page = s1.into_cache();
-        assert!(page.capacity_bytes() > 0);
-        // Recycled vs fresh on a shorter prompt: bit-identical decode,
-        // identical stored-length accounting, larger parked capacity.
-        let prompt = [9usize, 4, 2];
-        let mut recycled = engine.start_reusing(&prompt, Some(page));
-        let mut fresh = engine.start(&prompt);
-        assert_eq!(recycled.cache().resident_bytes(), 0, "reset page starts empty");
-        for stepi in 0..4 {
-            let a = engine.step(&mut [&mut recycled]);
-            let b = engine.step(&mut [&mut fresh]);
-            assert_eq!(a[0].0, b[0].0, "step {stepi} token");
-            assert_eq!(a[0].1.to_bits(), b[0].1.to_bits(), "step {stepi} logprob");
+    }
+
+    #[test]
+    fn prefix_hit_attaches_shared_pages_and_decodes_identically() {
+        // A prefilled prompt registers its whole-page chunks; a second
+        // stream with the same prompt attaches them (allocating only the
+        // suffix), a diverging stream forks CoW mid-chunk — and both
+        // decode bit-identically to a cold engine without any sharing.
+        let dir = std::env::temp_dir().join("hif4_native_prefix_test");
+        for kv in [KvCacheType::F32, KvCacheType::HIF4] {
+            let cold = engine_from(&dir, 21, kv).with_page_rows(4);
+            let m = Manifest::load(&dir).unwrap();
+            let store = m.init_params(21);
+            let model = Arc::new(transformer_from_store(&m, &store).unwrap());
+            let shape = PageShape::new(kv, 16, 4);
+            let pool = Arc::new(PagePool::new(shape, 0, true));
+            let warm = DecodeEngine::new(model, kv, 16).with_pool(Arc::clone(&pool));
+            let prompt: Vec<usize> = vec![5, 9, 2, 7, 7, 3, 1, 8, 4]; // 9 tokens → 2 chunks + 1
+            // Donor prefill registers chunks (and keeps them alive in the
+            // trie after the stream drops).
+            let donor_frames = decode_n(&warm, &prompt, 3);
+            assert_eq!(donor_frames, decode_n(&cold, &prompt, 3), "{}", kv.label());
+            assert!(pool.prefix_nodes() > 0, "donor registered its chunks");
+            let donor_live = pool.live_pages();
+            assert!(donor_live > 0, "registered pages stay resident");
+
+            // Same prompt again: 2 whole chunks attach shared (8 of 9
+            // positions), only the suffix allocates.
+            let hit = pool.lookup_prefix(&prompt).expect("identical prompt must hit");
+            assert_eq!(hit.rows(), 8, "{}: covers all but the final token", kv.label());
+            let mut s = warm.start_with_prefix(&prompt, Some(&hit));
+            assert_eq!(s.cache().len(), 8);
+            let mut frames = Vec::new();
+            while frames.len() < 3 {
+                if let Some(f) = warm.step(&mut [&mut s])[0] {
+                    frames.push(f);
+                }
+            }
+            assert_eq!(frames, donor_frames, "{}: shared-page decode is bitwise", kv.label());
+            assert!(pool.bytes_saved() > 0, "dedup accounting observed the attach");
+            assert!(pool.shared_refcount_high_water() >= 2);
+
+            // Divergence inside chunk 2: 1 shared chunk + CoW rows, still
+            // bit-identical to a cold run of the forked prompt.
+            let mut forked: Vec<usize> = prompt[..6].to_vec();
+            forked.extend([2usize, 2, 6]);
+            let fhit = pool.lookup_prefix(&forked).expect("shared 6-token prefix must hit");
+            assert_eq!(fhit.chunks(), 1);
+            assert!(fhit.cow.is_some(), "divergence mid-chunk forks CoW");
+            let mut f = warm.start_with_prefix(&forked, Some(&fhit));
+            assert_eq!(f.cache().len(), 6);
+            let mut fframes = Vec::new();
+            while fframes.len() < 3 {
+                if let Some(fr) = warm.step(&mut [&mut f])[0] {
+                    fframes.push(fr);
+                }
+            }
+            assert_eq!(fframes, decode_n(&cold, &forked, 3), "{}: CoW fork is bitwise", kv.label());
         }
-        assert_eq!(recycled.cache().resident_bytes(), fresh.cache().resident_bytes());
-        assert_eq!(recycled.cache().wire_bytes(), fresh.cache().wire_bytes());
-        assert!(recycled.cache().capacity_bytes() >= fresh.cache().capacity_bytes());
-        // A page from a mismatched configuration is dropped, not misused.
-        let f32_engine = DecodeEngine::new(model, KvCacheType::F32, 16);
-        let s = f32_engine.start_reusing(&prompt, Some(recycled.into_cache()));
-        assert_eq!(s.cache().kind(), KvCacheType::F32);
+    }
+
+    #[test]
+    fn pages_for_rows_is_the_gate_reservation_unit() {
+        let dir = std::env::temp_dir().join("hif4_native_pagecount_test");
+        let engine = engine_from(&dir, 13, KvCacheType::HIF4).with_page_rows(4);
+        // 1 layer → 2 stores; 9 rows → 3 pages/store.
+        assert_eq!(engine.pages_for_rows(9, 0), 6);
+        assert_eq!(engine.pages_for_rows(8, 0), 4);
+        assert_eq!(engine.pages_for_rows(1, 0), 2);
+        assert_eq!(engine.pages_for_rows(0, 0), 0);
+        // A 2-chunk prefix hit reserves only the suffix pages.
+        assert_eq!(engine.pages_for_rows(9, 2), 2);
+        assert_eq!(engine.pages_for_rows(8, 2), 0);
     }
 
     #[test]
     fn kv_bytes_per_token_matches_decoded_stream() {
-        // The admission gate multiplies this estimator by (prompt +
-        // max_new); it must equal the actual per-position resident cost
-        // of a live stream for both cache backends.
+        // The admission gate's byte accounting rides on this estimator;
+        // it must equal the actual per-position resident cost of a live
+        // stream for both cache backends.
         let dir = std::env::temp_dir().join("hif4_native_kvbytes_test");
-        write_native_manifest(&dir);
-        let m = Manifest::load(&dir).unwrap();
-        let store = m.init_params(13);
-        let model = Arc::new(transformer_from_store(&m, &store).unwrap());
         for kv in [KvCacheType::F32, KvCacheType::HIF4] {
-            let engine = DecodeEngine::new(Arc::clone(&model), kv, 16);
+            let engine = engine_from(&dir, 13, kv);
             assert_eq!(engine.max_prompt(), 16);
             let per_token = engine.kv_bytes_per_token();
             // 1 layer, kvd = 2×8 = 16: f32 → 2×64 B; HiF4 (group 64,

@@ -22,7 +22,8 @@
 //!   [`crate::model::transformer::Transformer::forward_cached`]), which
 //!   makes generation results independent of arrival order.
 
-use super::protocol::{Request, Status, MAX_NEW_CAP};
+use super::protocol::{Request, Status};
+use crate::model::pages::PrefixHit;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::time::{Duration, Instant};
@@ -89,25 +90,39 @@ impl<T> ContinuousScheduler<T> {
 }
 
 /// A request tagged with arrival time, its resolved deadline, the KV
-/// bytes the admission gate reserved for it, and a reply handle.
+/// units the admission gate reserved for it, an optional prefix-cache
+/// hit, and a reply handle.
 pub struct Pending<Reply> {
     pub request: Request,
     pub arrived: Instant,
     /// Absolute deadline resolved at admission (the request's own
     /// `deadline_ms`, else the server default TTL); `None` = no deadline.
     pub deadline: Option<Instant>,
-    /// KV bytes [`AdmissionGate::try_enqueue`] reserved for this request.
-    /// Carried with the request so whichever path finishes it (completion,
+    /// KV units (pages on the native path) that
+    /// [`AdmissionGate::try_enqueue`] reserved for this request. Carried
+    /// with the request so whichever path finishes it (completion,
     /// expiry, crash drain) releases exactly what was taken.
     pub kv_reserved: usize,
+    /// Prefix-cache hit resolved at admission. Looked up on the listener
+    /// thread so the gate can reserve only the uncovered suffix, and so
+    /// the hit's `Arc` page pins ride with the request — the shared pages
+    /// cannot be evicted between admission and worker attach.
+    pub prefix: Option<PrefixHit>,
     pub reply: Reply,
 }
 
 impl<Reply> Pending<Reply> {
     /// An untracked pending entry (tests / internal batch helpers): no
-    /// deadline, nothing reserved.
+    /// deadline, nothing reserved, no prefix hit.
     pub fn untracked(request: Request, reply: Reply) -> Pending<Reply> {
-        Pending { request, arrived: Instant::now(), deadline: None, kv_reserved: 0, reply }
+        Pending {
+            request,
+            arrived: Instant::now(),
+            deadline: None,
+            kv_reserved: 0,
+            prefix: None,
+            reply,
+        }
     }
 
     /// Whether this request's deadline has passed as of `now`.
@@ -135,37 +150,32 @@ impl Shed {
     }
 }
 
-/// Bounded-admission gate: a queue-depth cap plus a KV-byte budget, both
-/// enforced with lock-free reservation (CAS loops) so connection threads
-/// shed load without serializing on a mutex. The gate is *conservative*:
-/// KV bytes are reserved at admission for the request's worst case —
-/// `(prompt ∧ max_prompt) + clamp(max_new)` positions times
-/// `kv_per_token` — and released when the request reaches any terminal
+/// Bounded-admission gate: a queue-depth cap plus a KV capacity budget,
+/// both enforced with lock-free reservation (CAS loops) so connection
+/// threads shed load without serializing on a mutex. The gate is
+/// *conservative*: the caller computes the request's worst-case KV need
+/// in whatever unit the budget is denominated in — the native path
+/// reserves **pages** via [`DecodeEngine::pages_for_rows`][pfr], net of
+/// whole chunks a prefix-cache hit will attach instead of allocating —
+/// and the reservation is released when the request reaches any terminal
 /// outcome, so the sum of live streams' pages can never exceed the
 /// budget. Either limit set to 0 disables that check
 /// ([`AdmissionGate::unbounded`] disables both).
+///
+/// [pfr]: crate::runtime::native::DecodeEngine::pages_for_rows
 #[derive(Debug)]
 pub struct AdmissionGate {
     max_queue: usize,
     kv_budget: usize,
-    kv_per_token: usize,
-    max_prompt: usize,
     queued: AtomicUsize,
     kv_reserved: AtomicUsize,
 }
 
 impl AdmissionGate {
-    pub fn new(
-        max_queue: usize,
-        kv_budget: usize,
-        kv_per_token: usize,
-        max_prompt: usize,
-    ) -> AdmissionGate {
+    pub fn new(max_queue: usize, kv_budget: usize) -> AdmissionGate {
         AdmissionGate {
             max_queue,
             kv_budget,
-            kv_per_token,
-            max_prompt: max_prompt.max(1),
             queued: AtomicUsize::new(0),
             kv_reserved: AtomicUsize::new(0),
         }
@@ -173,24 +183,19 @@ impl AdmissionGate {
 
     /// A gate that admits everything (both limits disabled).
     pub fn unbounded() -> AdmissionGate {
-        AdmissionGate::new(0, 0, 0, usize::MAX)
+        AdmissionGate::new(0, 0)
     }
 
-    /// Worst-case KV bytes `req` can pin: every prompt position (after
-    /// truncation to `max_prompt`, floor 1 — engines never feed an empty
-    /// prompt) plus every token it may generate (after the engine's
-    /// `[1, MAX_NEW_CAP]` clamp).
-    pub fn kv_need(&self, req: &Request) -> usize {
-        let prompt_rows = req.tokens.len().min(self.max_prompt).max(1);
-        let decode_rows = req.max_new.clamp(1, MAX_NEW_CAP) as usize;
-        (prompt_rows + decode_rows) * self.kv_per_token
+    /// The KV capacity budget this gate enforces (0 = disabled).
+    pub fn kv_budget(&self) -> usize {
+        self.kv_budget
     }
 
-    /// Admit `req` into the queue, reserving its worst-case KV bytes.
-    /// Returns the reserved byte count (0 when the budget is disabled) to
-    /// carry on the `Pending`; on shed, nothing is reserved and the
-    /// caller answers with `Shed::status()`.
-    pub fn try_enqueue(&self, req: &Request) -> Result<usize, Shed> {
+    /// Admit a request into the queue, reserving `need` worst-case KV
+    /// units against the budget. Returns the reserved count (0 when the
+    /// budget is disabled) to carry on the `Pending`; on shed, nothing is
+    /// reserved and the caller answers with `Shed::status()`.
+    pub fn try_enqueue(&self, need: usize) -> Result<usize, Shed> {
         if self.max_queue > 0 {
             let admit = self
                 .queued
@@ -203,7 +208,7 @@ impl AdmissionGate {
         } else {
             self.queued.fetch_add(1, Ordering::SeqCst);
         }
-        let need = if self.kv_budget > 0 { self.kv_need(req) } else { 0 };
+        let need = if self.kv_budget > 0 { need } else { 0 };
         if need > 0 {
             let reserve = self
                 .kv_reserved
@@ -229,10 +234,10 @@ impl AdmissionGate {
     /// Release a reservation made by [`AdmissionGate::try_enqueue`] —
     /// called with the `Pending`'s `kv_reserved` on every terminal
     /// outcome. Zero (no budget / nothing reserved) is a no-op.
-    pub fn release_kv(&self, bytes: usize) {
-        if bytes > 0 {
-            let prev = self.kv_reserved.fetch_sub(bytes, Ordering::SeqCst);
-            debug_assert!(prev >= bytes, "release_kv({bytes}) exceeds outstanding reservation");
+    pub fn release_kv(&self, units: usize) {
+        if units > 0 {
+            let prev = self.kv_reserved.fetch_sub(units, Ordering::SeqCst);
+            debug_assert!(prev >= units, "release_kv({units}) exceeds outstanding reservation");
         }
     }
 
@@ -241,7 +246,8 @@ impl AdmissionGate {
         self.queued.load(Ordering::SeqCst)
     }
 
-    /// KV bytes currently reserved for admitted-but-unfinished requests.
+    /// KV units (pages on the native path) currently reserved for
+    /// admitted-but-unfinished requests.
     pub fn kv_reserved(&self) -> usize {
         self.kv_reserved.load(Ordering::SeqCst)
     }
@@ -372,8 +378,11 @@ mod tests {
     #[test]
     fn gate_unbounded_admits_everything() {
         let gate = AdmissionGate::unbounded();
-        for i in 0..100 {
-            assert_eq!(gate.try_enqueue(&Request::generate(i, vec![0; 64], 1000)), Ok(0));
+        assert_eq!(gate.kv_budget(), 0);
+        for _ in 0..100 {
+            // Whatever need the caller computes, a disabled budget
+            // reserves nothing.
+            assert_eq!(gate.try_enqueue(64), Ok(0));
         }
         assert_eq!(gate.queued(), 100);
         assert_eq!(gate.kv_reserved(), 0, "no budget → nothing reserved");
@@ -386,31 +395,28 @@ mod tests {
 
     #[test]
     fn gate_sheds_on_queue_depth_and_recovers() {
-        let gate = AdmissionGate::new(2, 0, 0, usize::MAX);
-        let r = Request::next_token(1, vec![1]);
-        assert!(gate.try_enqueue(&r).is_ok());
-        assert!(gate.try_enqueue(&r).is_ok());
-        assert_eq!(gate.try_enqueue(&r), Err(Shed::QueueFull));
+        let gate = AdmissionGate::new(2, 0);
+        assert!(gate.try_enqueue(0).is_ok());
+        assert!(gate.try_enqueue(0).is_ok());
+        assert_eq!(gate.try_enqueue(0), Err(Shed::QueueFull));
         assert_eq!(Shed::QueueFull.status(), Status::ShedQueueFull);
         // Draining one admits one again.
         gate.dequeued();
-        assert!(gate.try_enqueue(&r).is_ok());
+        assert!(gate.try_enqueue(0).is_ok());
         assert_eq!(gate.queued(), 2);
     }
 
     #[test]
     fn gate_reserves_worst_case_kv_and_rolls_back_on_shed() {
-        // 8 bytes per token, max_prompt 10: a (3-prompt, 2-new) request
-        // needs (3+2)*8 = 40 bytes.
-        let gate = AdmissionGate::new(0, 100, 8, 10);
-        let small = Request::generate(1, vec![1, 2, 3], 2);
-        assert_eq!(gate.kv_need(&small), 40);
-        let reserved = gate.try_enqueue(&small).unwrap();
+        // A 100-page budget with 40-page requests: two fit, the third
+        // sheds without leaking its queue slot or reservation.
+        let gate = AdmissionGate::new(0, 100);
+        let reserved = gate.try_enqueue(40).unwrap();
         assert_eq!(reserved, 40);
         assert_eq!(gate.kv_reserved(), 40);
-        // A second small one fits (80 ≤ 100); a third does not.
-        assert_eq!(gate.try_enqueue(&small), Ok(40));
-        assert_eq!(gate.try_enqueue(&small), Err(Shed::KvBudget));
+        // A second fits (80 ≤ 100); a third does not.
+        assert_eq!(gate.try_enqueue(40), Ok(40));
+        assert_eq!(gate.try_enqueue(40), Err(Shed::KvBudget));
         assert_eq!(Shed::KvBudget.status(), Status::ShedKvBudget);
         // The shed rolled its queue slot back too.
         assert_eq!(gate.queued(), 2, "shed request must not occupy a queue slot");
@@ -419,35 +425,24 @@ mod tests {
         gate.dequeued();
         gate.release_kv(reserved);
         assert_eq!(gate.kv_reserved(), 40);
-        assert_eq!(gate.try_enqueue(&small), Ok(40));
-    }
-
-    #[test]
-    fn gate_kv_need_clamps_like_the_engine() {
-        let gate = AdmissionGate::new(0, 1 << 30, 10, 4);
-        // Prompt truncates to max_prompt=4; max_new clamps to MAX_NEW_CAP;
-        // empty prompts floor at one row.
-        let long = Request::generate(1, vec![0; 100], u16::MAX);
-        assert_eq!(gate.kv_need(&long), (4 + MAX_NEW_CAP as usize) * 10);
-        let empty = Request::generate(2, vec![], 0);
-        assert_eq!(gate.kv_need(&empty), (1 + 1) * 10);
+        assert_eq!(gate.try_enqueue(40), Ok(40));
+        // A prefix-discounted request (smaller need) still fits where a
+        // cold one would shed — the dedup-aware admission property.
+        assert_eq!(gate.try_enqueue(40), Err(Shed::KvBudget));
+        assert_eq!(gate.try_enqueue(20), Ok(20));
     }
 
     #[test]
     fn gate_is_race_free_under_concurrent_admission() {
         use std::sync::Arc;
         // 8 threads hammer a gate with room for exactly 16 queue slots and
-        // 16 single-token reservations; the accepted total must match the
+        // 16 two-page reservations; the accepted total must match the
         // limits exactly (no overshoot, no lost slots).
-        let gate = Arc::new(AdmissionGate::new(16, 16 * 2, 1, 4));
-        let r = Request::generate(9, vec![1], 1);
+        let gate = Arc::new(AdmissionGate::new(16, 16 * 2));
         let accepted: usize = (0..8)
             .map(|_| {
                 let gate = Arc::clone(&gate);
-                let r = r.clone();
-                std::thread::spawn(move || {
-                    (0..64).filter(|_| gate.try_enqueue(&r).is_ok()).count()
-                })
+                std::thread::spawn(move || (0..64).filter(|_| gate.try_enqueue(2).is_ok()).count())
             })
             .collect::<Vec<_>>()
             .into_iter()

@@ -47,6 +47,20 @@ pub struct Metrics {
     /// Client-side retries reported back by in-process retrying clients
     /// (benches/tests); zero when only external clients are used.
     pub retries_observed: AtomicU64,
+    /// Admissions whose prefix-cache lookup attached shared pages.
+    pub prefix_hits: AtomicU64,
+    /// Admissions whose lookup found nothing sharable (including when the
+    /// prefix cache is disabled — every admission is then a miss).
+    pub prefix_misses: AtomicU64,
+    /// Page-pool occupancy gauges, sampled from the allocator by the
+    /// serving loop ([`Metrics::set_page_gauges`]): live pages, lifetime
+    /// high-water mark, free-list depth, shared-page refcount high-water
+    /// mark, and resident bytes saved by prefix dedup.
+    pages_live: AtomicU64,
+    pages_high_water: AtomicU64,
+    pages_free: AtomicU64,
+    shared_ref_high_water: AtomicU64,
+    prefix_bytes_saved: AtomicU64,
     /// buckets[i] counts latencies in [2^i, 2^(i+1)) µs.
     buckets: [AtomicU64; 25],
     total_us: AtomicU64,
@@ -116,6 +130,52 @@ impl Metrics {
         self.shed_queue_full.load(Ordering::Relaxed) + self.shed_kv_budget.load(Ordering::Relaxed)
     }
 
+    /// One prefix-cache lookup outcome at admission.
+    pub fn record_prefix_lookup(&self, hit: bool) {
+        if hit {
+            self.prefix_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.prefix_misses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Prefix-cache hit rate over lookups so far (0.0 when none).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let hits = self.prefix_hits.load(Ordering::Relaxed);
+        let total = hits + self.prefix_misses.load(Ordering::Relaxed);
+        if total == 0 {
+            return 0.0;
+        }
+        hits as f64 / total as f64
+    }
+
+    /// Sample the page allocator's occupancy gauges (the serving loop
+    /// calls this after each step; latest sample wins).
+    pub fn set_page_gauges(
+        &self,
+        live: u64,
+        high_water: u64,
+        free: u64,
+        shared_ref_high_water: u64,
+        bytes_saved: u64,
+    ) {
+        self.pages_live.store(live, Ordering::Relaxed);
+        self.pages_high_water.store(high_water, Ordering::Relaxed);
+        self.pages_free.store(free, Ordering::Relaxed);
+        self.shared_ref_high_water.store(shared_ref_high_water, Ordering::Relaxed);
+        self.prefix_bytes_saved.store(bytes_saved, Ordering::Relaxed);
+    }
+
+    /// Resident bytes prefix dedup avoided allocating (latest sample).
+    pub fn prefix_bytes_saved(&self) -> u64 {
+        self.prefix_bytes_saved.load(Ordering::Relaxed)
+    }
+
+    /// Shared-page refcount high-water mark (latest sample).
+    pub fn shared_ref_high_water(&self) -> u64 {
+        self.shared_ref_high_water.load(Ordering::Relaxed)
+    }
+
     pub fn record_batch(&self, size: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_requests.fetch_add(size as u64, Ordering::Relaxed);
@@ -172,7 +232,8 @@ impl Metrics {
         format!(
             "{}requests={} responses={} batches={} mean_batch={:.2} \
              lat(mean={:.0}us p50<{}us p99<{}us) \
-             shed(queue={} kv={}) invalid={} expired={} restarts={} retries={}",
+             shed(queue={} kv={}) invalid={} expired={} restarts={} retries={} \
+             prefix(hit={} miss={} saved={}B shared_hw={}) pages(live={} hw={} free={})",
             tag,
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
@@ -187,6 +248,13 @@ impl Metrics {
             self.deadlines_expired.load(Ordering::Relaxed),
             self.worker_restarts.load(Ordering::Relaxed),
             self.retries_observed.load(Ordering::Relaxed),
+            self.prefix_hits.load(Ordering::Relaxed),
+            self.prefix_misses.load(Ordering::Relaxed),
+            self.prefix_bytes_saved.load(Ordering::Relaxed),
+            self.shared_ref_high_water.load(Ordering::Relaxed),
+            self.pages_live.load(Ordering::Relaxed),
+            self.pages_high_water.load(Ordering::Relaxed),
+            self.pages_free.load(Ordering::Relaxed),
         )
     }
 }
@@ -244,6 +312,28 @@ mod tests {
         assert!(s.contains("expired=1"), "{s}");
         assert!(s.contains("restarts=1"), "{s}");
         assert!(s.contains("retries=3"), "{s}");
+    }
+
+    #[test]
+    fn prefix_and_page_counters_surface_in_summary() {
+        let m = Metrics::new();
+        m.record_prefix_lookup(true);
+        m.record_prefix_lookup(true);
+        m.record_prefix_lookup(false);
+        assert!((m.prefix_hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+        m.set_page_gauges(12, 20, 8, 5, 4096);
+        assert_eq!(m.prefix_bytes_saved(), 4096);
+        assert_eq!(m.shared_ref_high_water(), 5);
+        let s = m.summary();
+        assert!(s.contains("prefix(hit=2 miss=1 saved=4096B shared_hw=5)"), "{s}");
+        assert!(s.contains("pages(live=12 hw=20 free=8)"), "{s}");
+        // Latest sample wins (gauges, not counters).
+        m.set_page_gauges(3, 20, 17, 5, 4096);
+        assert!(m.summary().contains("pages(live=3 hw=20 free=17)"));
+        // Unsampled metrics read as zeroed gauges, not garbage.
+        let empty = Metrics::new();
+        assert_eq!(empty.prefix_hit_rate(), 0.0);
+        assert!(empty.summary().contains("prefix(hit=0 miss=0"));
     }
 
     #[test]

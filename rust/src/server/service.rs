@@ -37,9 +37,11 @@
 //!   answers a terminal [`Status::Invalid`] frame instead of reaching an
 //!   engine.
 //! * *Bounded admission*: an [`AdmissionGate`] caps queue depth and (on
-//!   the native path) reserved KV bytes; overload sheds with a
-//!   structured [`Status::ShedQueueFull`] / [`Status::ShedKvBudget`]
-//!   frame instead of blocking or OOMing.
+//!   the native path) reserved KV **pages** from the global
+//!   [`PagePool`] — dedup-aware: a prefix-cache hit reserves only the
+//!   uncovered suffix; overload sheds with a structured
+//!   [`Status::ShedQueueFull`] / [`Status::ShedKvBudget`] frame instead
+//!   of blocking or OOMing.
 //! * *Deadlines*: each request's TTL (its own `deadline_ms`, else the
 //!   server default) is enforced at queue pickup and between decode
 //!   steps; expired work answers [`Status::Expired`] (carrying how many
@@ -58,7 +60,8 @@ use super::batcher::{run_batcher, AdmissionGate, BatchPolicy, ContinuousSchedule
 use super::faults::{mix64, FaultPlan};
 use super::metrics::Metrics;
 use super::protocol::{Request, Response, Status, MAX_NEW_CAP};
-use crate::model::kv::{KvCache, KvCacheType};
+use crate::model::kv::KvCacheType;
+use crate::model::pages::{PagePool, PageShape, PrefixHit, DEFAULT_PAGE_ROWS};
 use crate::model::transformer::{greedy_from_row, Transformer};
 use crate::runtime::artifact::{Manifest, ParamStore};
 use crate::runtime::client::{literal_f32, tokens_literal, Executable, Runtime};
@@ -86,9 +89,12 @@ pub struct ResilienceConfig {
     /// Max requests between admission and worker pickup; 0 = unbounded.
     /// Beyond it, requests shed with [`Status::ShedQueueFull`].
     pub max_queue: usize,
-    /// Budget for worst-case KV bytes reserved by admitted-but-unfinished
-    /// requests (native engine only); 0 = unbounded. Beyond it, requests
-    /// shed with [`Status::ShedKvBudget`].
+    /// Budget for worst-case KV memory reserved by admitted-but-
+    /// unfinished requests (native engine only); 0 = unbounded. The
+    /// native path rounds it down to whole pages of the global
+    /// [`PagePool`] (floor 1) and the gate reserves **pages**, net of
+    /// whole chunks a prefix-cache hit shares. Beyond the budget,
+    /// requests shed with [`Status::ShedKvBudget`].
     pub kv_budget_bytes: usize,
     /// Deterministic fault injection (chaos tests/benches; `--faults`).
     pub faults: Option<Arc<FaultPlan>>,
@@ -124,6 +130,69 @@ pub struct NativeServerConfig {
     pub kv: KvCacheType,
     /// Deadlines/backpressure/fault-injection knobs.
     pub resilience: ResilienceConfig,
+    /// Shared-prefix dedup (`--prefix-cache` / `HIF4_PREFIX_CACHE`,
+    /// default off): completed prefills register their whole-page chunks
+    /// in the pool's prefix index; later requests sharing a prompt
+    /// prefix attach those pages by refcount instead of recomputing and
+    /// re-storing them. Greedy output is bit-identical either way.
+    pub prefix_cache: bool,
+    /// Prefill chunk budget in tokens per decode step (`--prefill-chunk`
+    /// / `HIF4_PREFILL_CHUNK`; 0 = whole prompt in one step): long
+    /// prompts prefill incrementally, interleaved with their batch
+    /// mates' decode steps, instead of starving the batch.
+    pub prefill_chunk: usize,
+    /// Rows per fixed-size KV page (`--kv-page-rows` /
+    /// `HIF4_KV_PAGE_ROWS`; default [`DEFAULT_PAGE_ROWS`]). Any value is
+    /// group-aligned by construction (pages hold whole rows, rows hold
+    /// whole plane groups).
+    pub page_rows: usize,
+}
+
+impl Default for NativeServerConfig {
+    /// Default serving configuration with the paging knobs resolved from
+    /// the process environment (`HIF4_PREFIX_CACHE`, `HIF4_PREFILL_CHUNK`,
+    /// `HIF4_KV_PAGE_ROWS`) — so tests/benches built with
+    /// `..Default::default()` honor the CI matrix legs. CLI flags resolve
+    /// in `main.rs` and override these.
+    fn default() -> Self {
+        NativeServerConfig {
+            policy: BatchPolicy::default(),
+            workers: 1,
+            seq: 16,
+            kv: KvCacheType::F32,
+            resilience: ResilienceConfig::default(),
+            prefix_cache: prefix_cache_from_env(),
+            prefill_chunk: prefill_chunk_from_env(),
+            page_rows: page_rows_from_env(),
+        }
+    }
+}
+
+/// Resolve the `HIF4_PREFIX_CACHE` env knob (`1`/`on`/`true`, case-
+/// insensitive ⇒ enabled; unset/anything else ⇒ off).
+pub fn prefix_cache_from_env() -> bool {
+    std::env::var("HIF4_PREFIX_CACHE")
+        .map(|v| {
+            let v = v.to_ascii_lowercase();
+            v == "1" || v == "on" || v == "true"
+        })
+        .unwrap_or(false)
+}
+
+/// Resolve the `HIF4_PREFILL_CHUNK` env knob (tokens per prefill step;
+/// unset/unparsable/0 ⇒ whole-prompt prefill).
+pub fn prefill_chunk_from_env() -> usize {
+    std::env::var("HIF4_PREFILL_CHUNK").ok().and_then(|v| v.parse().ok()).unwrap_or(0)
+}
+
+/// Resolve the `HIF4_KV_PAGE_ROWS` env knob (rows per KV page; default
+/// [`DEFAULT_PAGE_ROWS`], floor 1).
+pub fn page_rows_from_env() -> usize {
+    std::env::var("HIF4_KV_PAGE_ROWS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(DEFAULT_PAGE_ROWS)
+        .max(1)
 }
 
 type ReplyHandle = Arc<Mutex<TcpStream>>;
@@ -165,13 +234,21 @@ struct ActiveSeq {
     of: u16,
 }
 
+/// Per-request admission plan: how many KV units (pages on the native
+/// path) the gate must reserve, plus the prefix-cache hit (if any) whose
+/// `Arc` clones pin the shared pages against eviction until a worker
+/// attaches them. Runs on the listener thread so the reservation is
+/// dedup-aware *before* `try_enqueue`.
+type AdmissionPlan = Arc<dyn Fn(&Request) -> (usize, Option<PrefixHit>) + Send + Sync>;
+
 /// Everything the listener needs to admit (or refuse) a request before
-/// it touches the queue: the gate, the validation context, and the
-/// default TTL.
+/// it touches the queue: the gate, the validation context, the default
+/// TTL, and the engine-specific admission plan.
 struct ListenerCtx {
     gate: Arc<AdmissionGate>,
     max_prompt: usize,
     default_timeout: Option<Duration>,
+    plan: AdmissionPlan,
 }
 
 impl ListenerCtx {
@@ -232,8 +309,8 @@ impl Server {
             .map(|k| k.spelling())
             .unwrap_or("bf16");
         // No KV cache on this path: the gate only bounds queue depth
-        // (kv_per_token = 0 makes every reservation zero bytes).
-        let gate = Arc::new(AdmissionGate::new(cfg.resilience.max_queue, 0, 0, manifest.seq));
+        // (a zero budget disables KV reservations entirely).
+        let gate = Arc::new(AdmissionGate::new(cfg.resilience.max_queue, 0));
         let server =
             start_engine(policy, cfg.workers.max(1), addr, factory, gate, &cfg.resilience, seq)?;
         // "f32": the PJRT path has no quantized cache, and the tag stays
@@ -263,24 +340,61 @@ impl Server {
         // weight bytes in the canonical wire form.
         let weight_format = model.quantized_weight_kind().map(|k| k.spelling()).unwrap_or("bf16");
         let weight_wire = model.quantized_weight_wire_bytes() as u64;
-        let engine = Arc::new(DecodeEngine::new(model, cfg.kv, cfg.seq.max(1)));
+        // Every stream's cache draws fixed-size pages from one global
+        // pool; the byte budget becomes a page cap (floor 1 so a tiny
+        // budget still bounds rather than deadlocks admission).
+        let kvd = model.cfg.kv_heads() * model.cfg.head_dim;
+        let shape = PageShape::new(cfg.kv, kvd, cfg.page_rows.max(1));
+        let max_pages = match cfg.resilience.kv_budget_bytes {
+            0 => 0,
+            budget => (budget / shape.page_bytes()).max(1),
+        };
+        let pool = Arc::new(PagePool::new(shape, max_pages, cfg.prefix_cache));
+        let engine = Arc::new(
+            DecodeEngine::new(model, cfg.kv, cfg.seq.max(1))
+                .with_pool(Arc::clone(&pool))
+                .with_prefill_chunk(cfg.prefill_chunk),
+        );
         let metrics = Arc::new(Metrics::new());
         metrics.set_format_tag(weight_format, cfg.kv.label(), weight_wire);
-        // One startup line naming the resolved attention schedule —
-        // serving measurements must be attributable to fused vs replay
-        // (greedy tokens are identical; throughput is not).
+        // One startup line naming the resolved attention schedule and
+        // paging config — serving measurements must be attributable to
+        // fused vs replay and to the dedup/prefill knobs (greedy tokens
+        // are identical either way; throughput and residency are not).
+        let cap = if max_pages == 0 { "unbounded".to_string() } else { max_pages.to_string() };
+        let chunk = match cfg.prefill_chunk {
+            0 => "whole-prompt".to_string(),
+            n => format!("{n} tok"),
+        };
         eprintln!(
-            "native server: weights {weight_format}, kv {}, attention {}",
+            "native server: weights {weight_format}, kv {}, attention {}, page {}r/{}B \
+             (max {cap}), prefix cache {}, prefill chunk {chunk}",
             cfg.kv.label(),
-            engine.attn_label()
+            engine.attn_label(),
+            pool.page_rows(),
+            pool.page_bytes(),
+            if cfg.prefix_cache { "on" } else { "off" },
         );
         let stop = Arc::new(AtomicBool::new(false));
-        let gate = Arc::new(AdmissionGate::new(
-            cfg.resilience.max_queue,
-            cfg.resilience.kv_budget_bytes,
-            engine.kv_bytes_per_token(),
-            engine.max_prompt(),
-        ));
+        // The gate's KV budget is denominated in *pages*: the listener's
+        // admission plan asks the engine for the worst-case page count of
+        // each request net of prefix-shared chunks.
+        let gate = Arc::new(AdmissionGate::new(cfg.resilience.max_queue, max_pages));
+        // Dedup-aware admission plan, run on the listener thread: the
+        // prefix lookup both sizes the reservation (shared chunks are
+        // free) and pins the hit pages via the Arc clones carried on the
+        // Pending until the worker attaches them.
+        let plan_engine = Arc::clone(&engine);
+        let plan_metrics = Arc::clone(&metrics);
+        let plan: AdmissionPlan = Arc::new(move |req: &Request| {
+            let prompt = plan_engine.normalize_prompt(&req.tokens);
+            let rows = prompt.len() + req.max_new.clamp(1, MAX_NEW_CAP) as usize;
+            let pool = plan_engine.pool().expect("native engine is pooled");
+            let hit = if pool.prefix_enabled() { pool.lookup_prefix(&prompt) } else { None };
+            plan_metrics.record_prefix_lookup(hit.is_some());
+            let need = plan_engine.pages_for_rows(rows, hit.as_ref().map_or(0, |h| h.chunks()));
+            (need, hit)
+        });
         let (tx, rx) = channel::<Pending<ReplyHandle>>();
         let rx = Arc::new(Mutex::new(rx));
         let max_slots = cfg.policy.max_batch.max(1);
@@ -308,6 +422,7 @@ impl Server {
             gate: Arc::clone(&gate),
             max_prompt: engine.max_prompt(),
             default_timeout: cfg.resilience.request_timeout,
+            plan,
         });
         let listener_thread = std::thread::Builder::new()
             .name("hif4-listener".into())
@@ -417,6 +532,9 @@ fn start_engine(
         gate: Arc::clone(&gate),
         max_prompt,
         default_timeout: resilience.request_timeout,
+        // The PJRT path has no KV cache: nothing to reserve, nothing to
+        // dedup.
+        plan: Arc::new(|_| (0, None)),
     });
     let listener_thread = std::thread::Builder::new()
         .name("hif4-listener".into())
@@ -508,8 +626,13 @@ fn listener_loop(
                     send_error(&reply, req.id, Status::Invalid);
                     continue;
                 }
-                let kv_reserved = match ctx.gate.try_enqueue(&req) {
-                    Ok(bytes) => bytes,
+                // Engine-specific sizing: pages needed net of any
+                // prefix-cache hit (whose Arc clones ride on the Pending
+                // to pin the shared pages until worker attach). On a
+                // shed, dropping `prefix` releases the pins.
+                let (need, prefix) = (ctx.plan)(&req);
+                let kv_reserved = match ctx.gate.try_enqueue(need) {
+                    Ok(units) => units,
                     Err(shed) => {
                         metrics.record_shed(shed.status());
                         send_error(&reply, req.id, shed.status());
@@ -518,7 +641,8 @@ fn listener_loop(
                 };
                 let deadline = ctx.deadline_for(&req, arrived);
                 let reply = Arc::clone(&reply);
-                let pending = Pending { request: req, arrived, deadline, kv_reserved, reply };
+                let pending =
+                    Pending { request: req, arrived, deadline, kv_reserved, prefix, reply };
                 if tx.send(pending).is_err() {
                     // Server shutting down: the request never reached a
                     // worker, so roll its admission back here.
@@ -618,10 +742,12 @@ fn worker_loop(
 /// under `catch_unwind` and, when a decode step panics (injected fault or
 /// genuine bug), drains every in-flight sequence in this worker's slot
 /// map to a terminal [`Status::Crashed`] frame — releasing its admission
-/// reservation, dropping its (possibly mid-append) KV page — and restarts
-/// the loop with a clean slot map. The step counter survives restarts so
-/// a seeded fault plan's schedule (`panic_at_step`, per-step rolls) is a
-/// single deterministic timeline per worker.
+/// reservation and dropping its stream (the cache's `Drop` clears each
+/// page before returning it to the global pool, so a mid-append page
+/// recycles wiped, never inconsistent) — and restarts the loop with a
+/// clean slot map. The step counter survives restarts so a seeded fault
+/// plan's schedule (`panic_at_step`, per-step rolls) is a single
+/// deterministic timeline per worker.
 fn decode_worker_supervised(
     engine: Arc<DecodeEngine>,
     rx: Arc<Mutex<Receiver<Pending<ReplyHandle>>>>,
@@ -632,7 +758,6 @@ fn decode_worker_supervised(
     worker: usize,
 ) {
     let mut sched: ContinuousScheduler<ActiveSeq> = ContinuousScheduler::new(max_slots);
-    let mut spare_pages: Vec<KvCache> = Vec::new();
     let mut step: u64 = 0;
     let mut closed = false;
     loop {
@@ -641,7 +766,6 @@ fn decode_worker_supervised(
                 &engine,
                 &rx,
                 &mut sched,
-                &mut spare_pages,
                 &metrics,
                 &gate,
                 faults.as_deref(),
@@ -661,14 +785,8 @@ fn decode_worker_supervised(
                             &a.pending.reply,
                             &Response::error(a.pending.request.id, Status::Crashed, a.emitted),
                         );
-                        // The page may have been mid-append when the step
-                        // panicked: drop it rather than recycle a
-                        // potentially inconsistent allocation.
                     }
                 }
-                // Pages parked *before* the panic are between-steps
-                // consistent, but a restart starts maximally clean.
-                spare_pages.clear();
             }
         }
     }
@@ -682,12 +800,15 @@ fn decode_worker_supervised(
 ///            (non-blocking) into free slots (expired requests answer
 ///            Expired instead of taking a slot)
 ///   sweep  — evict slots whose deadline passed (Expired frame carrying
-///            tokens-streamed-so-far; page recycled, reservation freed)
+///            tokens-streamed-so-far; pages return to the pool, the
+///            reservation frees)
 ///   fault  — consult the fault plan (chaos: maybe stall or panic)
-///   step   — one greedy token for every active slot (fresh slots
-///            prefill, in-flight slots decode) via DecodeEngine::step
-///   emit   — stream each token to its client immediately
-///   evict  — release completed slots (page recycled, reservation freed)
+///   step   — one engine step for every active slot: fresh/chunked slots
+///            prefill (no frame — `None`), in-flight slots decode one
+///            greedy token, via DecodeEngine::step
+///   emit   — stream each produced token to its client immediately
+///   evict  — release completed slots (pages return to the pool, the
+///            reservation frees)
 /// }
 /// ```
 ///
@@ -699,7 +820,6 @@ fn decode_worker_loop(
     engine: &DecodeEngine,
     rx: &Mutex<Receiver<Pending<ReplyHandle>>>,
     sched: &mut ContinuousScheduler<ActiveSeq>,
-    spare_pages: &mut Vec<KvCache>,
     metrics: &Metrics,
     gate: &AdmissionGate,
     faults: Option<&FaultPlan>,
@@ -714,7 +834,6 @@ fn decode_worker_loop(
     // for sequential clients). Between timeouts the lock is released, so
     // busy workers get through once per step.
     const IDLE_POLL: Duration = Duration::from_millis(1);
-    let max_slots = sched.capacity();
     loop {
         if sched.is_empty() {
             if *closed {
@@ -723,7 +842,7 @@ fn decode_worker_loop(
             // Idle: poll for work with a bounded wait (see IDLE_POLL).
             let next = { lock_recover(rx).recv_timeout(IDLE_POLL) };
             match next {
-                Ok(p) => admit_or_expire(engine, sched, p, spare_pages, metrics, gate),
+                Ok(p) => admit_or_expire(engine, sched, p, metrics, gate),
                 Err(RecvTimeoutError::Timeout) => continue,
                 Err(RecvTimeoutError::Disconnected) => return,
             }
@@ -733,14 +852,14 @@ fn decode_worker_loop(
         while !*closed && sched.has_free() {
             let next = { lock_recover(rx).try_recv() };
             match next {
-                Ok(p) => admit_or_expire(engine, sched, p, spare_pages, metrics, gate),
+                Ok(p) => admit_or_expire(engine, sched, p, metrics, gate),
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => *closed = true,
             }
         }
         // Deadline sweep: evict expired streams *before* spending a
-        // decode step on them. Between steps the page is consistent, so
-        // it recycles like a completed stream's.
+        // decode step on them. Dropping the stream returns its pages to
+        // the global pool (shared prefix pages just drop a refcount).
         let now = Instant::now();
         let expired: Vec<usize> = sched
             .iter_active_mut()
@@ -755,9 +874,6 @@ fn decode_worker_loop(
                     &a.pending.reply,
                     &Response::error(a.pending.request.id, Status::Expired, a.emitted),
                 );
-                if spare_pages.len() < max_slots {
-                    spare_pages.push(a.stream.into_cache());
-                }
             }
         }
         if sched.is_empty() {
@@ -781,7 +897,10 @@ fn decode_worker_loop(
             engine.step(&mut streams)
         };
         metrics.record_batch(ids.len());
-        for (id, (token, logprob)) in ids.into_iter().zip(outs) {
+        for (id, out) in ids.into_iter().zip(outs) {
+            // `None` = the slot spent this step on a prefill chunk: no
+            // token produced, nothing to emit, the stream stays active.
+            let Some((token, logprob)) = out else { continue };
             let done = {
                 let Some(a) = sched.get_mut(id) else {
                     // Unreachable by construction (ids came from the
@@ -806,14 +925,24 @@ fn decode_worker_loop(
                 a.emitted >= a.of
             };
             if done {
+                // Dropping the released stream returns its private pages
+                // to the pool's free list and un-pins its shared ones.
                 if let Some(a) = sched.release(id) {
                     metrics.record_latency(a.pending.arrived.elapsed());
                     gate.release_kv(a.pending.kv_reserved);
-                    if spare_pages.len() < max_slots {
-                        spare_pages.push(a.stream.into_cache());
-                    }
                 }
             }
+        }
+        // Publish pool occupancy after every step so the summary line
+        // reflects live paging behavior, not just end-of-run state.
+        if let Some(pool) = engine.pool() {
+            metrics.set_page_gauges(
+                pool.live_pages() as u64,
+                pool.high_water() as u64,
+                pool.free_pages() as u64,
+                pool.shared_refcount_high_water() as u64,
+                pool.bytes_saved() as u64,
+            );
         }
     }
 }
@@ -825,7 +954,6 @@ fn admit_or_expire(
     engine: &DecodeEngine,
     sched: &mut ContinuousScheduler<ActiveSeq>,
     p: Pending<ReplyHandle>,
-    spare_pages: &mut Vec<KvCache>,
     metrics: &Metrics,
     gate: &AdmissionGate,
 ) {
@@ -836,20 +964,21 @@ fn admit_or_expire(
         send_error(&p.reply, p.request.id, Status::Expired);
         return;
     }
-    admit_seq(engine, sched, p, spare_pages);
+    admit_seq(engine, sched, p);
 }
 
-/// Open a decode stream for a request — reusing a recycled cache page
-/// when one is parked — and admit it into a free slot (the callers only
-/// admit when one exists).
+/// Open a decode stream for a request — attaching the shared prefix
+/// pages its listener-side lookup pinned, if any — and admit it into a
+/// free slot (the callers only admit when one exists). The pins on the
+/// Pending are dropped once attached: the stream now holds its own Arcs.
 fn admit_seq(
     engine: &DecodeEngine,
     sched: &mut ContinuousScheduler<ActiveSeq>,
-    p: Pending<ReplyHandle>,
-    spare_pages: &mut Vec<KvCache>,
+    mut p: Pending<ReplyHandle>,
 ) {
     let of = p.request.max_new.clamp(1, MAX_NEW_CAP);
-    let stream = engine.start_reusing(&p.request.tokens, spare_pages.pop());
+    let prefix = p.prefix.take();
+    let stream = engine.start_with_prefix(&p.request.tokens, prefix.as_ref());
     let admitted = sched.admit(ActiveSeq { pending: p, stream, emitted: 0, of });
     debug_assert!(admitted.is_some(), "admit_seq requires a free slot");
 }

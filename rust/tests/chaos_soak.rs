@@ -57,6 +57,9 @@ fn start_server(
         seq: manifest.seq,
         kv: KvCacheType::F32,
         resilience,
+        // Paging knobs from the environment: the CI chaos matrix runs
+        // this soak with HIF4_PREFIX_CACHE both off and on.
+        ..Default::default()
     };
     let server = Server::start_native(Arc::clone(&model), cfg, "127.0.0.1:0").unwrap();
     (server, model)

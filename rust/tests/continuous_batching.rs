@@ -4,6 +4,7 @@
 //! level and through the full native server (listener → slot map →
 //! streamed responses).
 
+use hif4::formats::QuantKind;
 use hif4::model::kv::KvCacheType;
 use hif4::model::transformer::Transformer;
 use hif4::model::zoo;
@@ -21,12 +22,13 @@ fn engine(kind: KvCacheType) -> DecodeEngine {
     DecodeEngine::new(model, kind, 64)
 }
 
-/// Drive `stream` alone for `n` steps, collecting tokens.
+/// Drive `stream` alone for `n` steps, collecting tokens. These engines
+/// prefill whole prompts (chunk 0), so every step yields a frame.
 fn drive_solo(eng: &DecodeEngine, stream: &mut DecodeStream, n: usize) -> Vec<u32> {
     let mut out = Vec::with_capacity(n);
     for _ in 0..n {
         let r = eng.step(&mut [&mut *stream]);
-        out.push(r[0].0);
+        out.push(r[0].expect("whole-prompt prefill frames every step").0);
     }
     out
 }
@@ -47,8 +49,8 @@ fn mid_flight_admission_matches_solo_generation() {
         let mut got_b: Vec<u32> = Vec::new();
         for _ in 0..4 {
             let r = eng.step(&mut [&mut a, &mut b]);
-            got_a.push(r[0].0);
-            got_b.push(r[1].0);
+            got_a.push(r[0].unwrap().0);
+            got_b.push(r[1].unwrap().0);
         }
         assert_eq!(a.generated(), 6);
         drop(a); // eviction: the cache page is freed with the stream
@@ -78,8 +80,8 @@ fn batch_composition_never_changes_a_streams_tokens() {
                 let mut refs: Vec<&mut DecodeStream> = streams.iter_mut().collect();
                 eng.step(&mut refs)
             };
-            for (slot, (tok, _)) in outs.into_iter().enumerate() {
-                got[order[slot]].push(tok);
+            for (slot, out) in outs.into_iter().enumerate() {
+                got[order[slot]].push(out.unwrap().0);
             }
         }
         for (i, solo_i) in solo.iter().enumerate() {
@@ -122,18 +124,32 @@ fn start_server_with(
     max_batch: usize,
     resilience: ResilienceConfig,
 ) -> (Server, Arc<Transformer>) {
+    start_server_tuned(tag, kv, max_batch, resilience, |_| {})
+}
+
+/// Full-control variant: `tune` adjusts the paging knobs
+/// (`page_rows`, `prefix_cache`, `prefill_chunk`) after the defaults.
+fn start_server_tuned(
+    tag: &str,
+    kv: KvCacheType,
+    max_batch: usize,
+    resilience: ResilienceConfig,
+    tune: impl FnOnce(&mut NativeServerConfig),
+) -> (Server, Arc<Transformer>) {
     let dir = manifest_dir(tag);
     write_manifest(&dir);
     let manifest = Manifest::load(&dir).unwrap();
     let store = manifest.init_params(23);
     let model = Arc::new(transformer_from_store(&manifest, &store).unwrap());
-    let cfg = NativeServerConfig {
+    let mut cfg = NativeServerConfig {
         policy: BatchPolicy { max_batch, max_wait: Duration::from_millis(1) },
         workers: 1,
         seq: manifest.seq,
         kv,
         resilience,
+        ..Default::default()
     };
+    tune(&mut cfg);
     let server = Server::start_native(Arc::clone(&model), cfg, "127.0.0.1:0").unwrap();
     (server, model)
 }
@@ -211,13 +227,16 @@ fn deadline_expiry_mid_decode_frees_the_slot_and_its_reservation() {
 
 #[test]
 fn kv_budget_shed_is_structured_and_survivors_are_token_identical() {
-    // Fixture KV cost: 1 layer x 2 (K+V) x kvd 16 x f32 = 128 B/token. A
-    // 2000-byte budget admits a (4-prompt, 3-new) request (896 B) but can
-    // never fit a (4-prompt, 50-new) one (6912 B): the big request sheds
-    // with a structured ShedKvBudget frame and the small one decodes
-    // token-identically — overload degrades service, never correctness.
-    let resilience = ResilienceConfig { kv_budget_bytes: 2000, ..Default::default() };
-    let (server, model) = start_server_with("kvshed", KvCacheType::F32, 2, resilience);
+    // Fixture page cost at 4 rows/page: kvd 16 x f32 = 64 B/row, 256
+    // B/page; 1 layer = 2 stores. A 2048-byte budget is 8 pages. A
+    // (4-prompt, 3-new) request needs ceil(7/4) x 2 = 4 pages, but a
+    // (4-prompt, 50-new) one needs ceil(54/4) x 2 = 28: the big request
+    // sheds with a structured ShedKvBudget frame and the small one
+    // decodes token-identically — overload degrades service, never
+    // correctness.
+    let resilience = ResilienceConfig { kv_budget_bytes: 2048, ..Default::default() };
+    let (server, model) =
+        start_server_tuned("kvshed", KvCacheType::F32, 2, resilience, |cfg| cfg.page_rows = 4);
     let prompt = vec![5usize, 9, 13, 17];
 
     let mut client = Client::connect(server.addr).unwrap();
@@ -236,6 +255,48 @@ fn kv_budget_shed_is_structured_and_survivors_are_token_identical() {
     assert!(server.metrics.shed_kv_budget.load(ord) >= 1);
     assert_eq!(server.metrics.shed_queue_full.load(ord), 0);
     assert_eq!(server.admission().kv_reserved(), 0, "shed + completion release everything");
+}
+
+#[test]
+fn prefix_dedup_is_token_identical_across_every_format() {
+    // Shared-prefix dedup on, chunked prefill on, small pages: a warm
+    // request registers the shared prefix, two follow-ups attach its
+    // pages by refcount (with a CoW tail) — and every streamed token
+    // must still equal the in-process greedy reference, i.e. exactly
+    // what sharing *off* produces, for f32 and all five block formats.
+    let shared: Vec<usize> = vec![4, 9, 2, 7, 7, 3, 1, 8];
+    let mut kinds = vec![KvCacheType::F32];
+    kinds.extend(QuantKind::ALL.iter().map(|&k| KvCacheType::Quant(k)));
+    for (fi, kind) in kinds.into_iter().enumerate() {
+        let tag = format!("dedup{fi}");
+        let (server, model) =
+            start_server_tuned(&tag, kind, 2, ResilienceConfig::default(), |cfg| {
+                cfg.prefix_cache = true;
+                cfg.prefill_chunk = 2;
+                cfg.page_rows = 4;
+            });
+        let mut client = Client::connect(server.addr).unwrap();
+        // Warm the prefix index: registration happens when this
+        // request's prefill completes, strictly before the next
+        // request's listener-side lookup (same sequential client).
+        let warm = client.generate(&Request::generate(0, shared.clone(), 2)).unwrap();
+        assert_eq!(warm.last().unwrap().status, Status::Ok, "{kind:?} warmup");
+        for (ri, suffix) in [[31usize, 5, 22], [11, 74, 3]].iter().enumerate() {
+            let mut prompt = shared.clone();
+            prompt.extend_from_slice(suffix);
+            let req = Request::generate(1 + ri as u64, prompt.clone(), 4);
+            let stream = client.generate(&req).unwrap();
+            assert_eq!(stream.last().unwrap().status, Status::Ok, "{kind:?} suffix {ri}");
+            let want = model.generate_greedy(&prompt, 4, kind);
+            let got: Vec<usize> = stream.iter().map(|r| r.token as usize).collect();
+            assert_eq!(got, want, "{kind:?} suffix {ri}: dedup must not change tokens");
+        }
+        let ord = std::sync::atomic::Ordering::Relaxed;
+        assert!(
+            server.metrics.prefix_hits.load(ord) > 0,
+            "{kind:?}: the shared prefix must actually hit"
+        );
+    }
 }
 
 #[test]

@@ -62,7 +62,7 @@ fn native_server_round_trips_and_matches_direct_execution() {
         workers: 2,
         seq: manifest.seq,
         kv: KvCacheType::F32,
-        resilience: Default::default(),
+        ..Default::default()
     };
     let mut server = Server::start_native(Arc::clone(&model), cfg, "127.0.0.1:0").unwrap();
     let mut client = Client::connect(server.addr).unwrap();
@@ -94,7 +94,7 @@ fn native_server_serves_prepacked_hif4_deterministically() {
         workers: 2,
         seq: manifest.seq,
         kv: KvCacheType::F32,
-        resilience: Default::default(),
+        ..Default::default()
     };
     let server = Server::start_native(Arc::clone(&model), cfg, "127.0.0.1:0").unwrap();
     let mut client = Client::connect(server.addr).unwrap();
@@ -137,7 +137,7 @@ fn native_server_serves_every_block_format_end_to_end() {
             workers: 1,
             seq: manifest.seq,
             kv: KvCacheType::F32,
-            resilience: Default::default(),
+            ..Default::default()
         };
         let server = Server::start_native(Arc::clone(&model), cfg, "127.0.0.1:0").unwrap();
         let tag = server.metrics.format_tag().expect("native engine must tag its metrics");
@@ -197,7 +197,7 @@ fn native_server_streams_multi_token_generation() {
         workers: 1,
         seq: manifest.seq,
         kv: KvCacheType::F32,
-        resilience: Default::default(),
+        ..Default::default()
     };
     let server = Server::start_native(Arc::clone(&model), cfg, "127.0.0.1:0").unwrap();
     let mut client = Client::connect(server.addr).unwrap();
