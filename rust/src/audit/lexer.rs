@@ -1,0 +1,268 @@
+//! Line-model lexer for the audit pass: a light, hand-rolled scan of
+//! Rust source (registry parsers like `syn` are unavailable offline)
+//! that splits every line into *code* and *comment* halves and tracks
+//! `#[cfg(test)]` regions.
+//!
+//! The split is what makes the rule patterns in [`super::rules`] honest:
+//! string/char-literal *contents* are blanked out of the code half (so a
+//! pattern constant like a quoted `".unwrap()"` in this very module can
+//! never fire a rule), block and line comments land in the comment half
+//! (where `SAFETY:` / `BOUND:` / `audit:allow` annotations live), and
+//! lines inside a `#[cfg(test)]` item are marked so panic-freedom rules
+//! skip test code.
+//!
+//! Known, deliberate coarseness: the lexer is line-oriented and does not
+//! build an AST. Lifetimes vs char literals are disambiguated by
+//! lookahead (`'a'` consumes three chars, `'a` one); nested block
+//! comments and raw strings (`r#"…"#`) are tracked across lines;
+//! everything else is a per-line pattern target.
+
+/// One source line, split for rule matching.
+#[derive(Debug, Clone)]
+pub struct Line {
+    /// 1-based line number.
+    pub number: usize,
+    /// The original text.
+    pub raw: String,
+    /// Code with comments removed and string/char contents blanked
+    /// (delimiters are kept so subscript/paren matching still pairs up).
+    pub code: String,
+    /// Comment text (line-comment tail and/or block-comment content).
+    pub comment: String,
+    /// Inside a `#[cfg(test)]` item (attribute line included).
+    pub in_test: bool,
+}
+
+/// Multi-line lexer state.
+enum State {
+    Normal,
+    /// Nested block comment depth.
+    Block(u32),
+    /// Inside a `"…"` string.
+    Str,
+    /// Inside a raw string; the payload is the `#` count.
+    RawStr(usize),
+}
+
+/// Lex `content` into the per-line model.
+pub fn lex(content: &str) -> Vec<Line> {
+    let mut out = Vec::new();
+    let mut state = State::Normal;
+    for (li, raw) in content.lines().enumerate() {
+        let chars: Vec<char> = raw.chars().collect();
+        let n = chars.len();
+        let mut code = String::new();
+        let mut comment = String::new();
+        let mut i = 0;
+        while i < n {
+            let c = chars[i];
+            let nxt = if i + 1 < n { chars[i + 1] } else { '\0' };
+            match state {
+                State::Normal => {
+                    if c == '/' && nxt == '/' {
+                        comment.extend(&chars[i + 2..]);
+                        i = n;
+                    } else if c == '/' && nxt == '*' {
+                        state = State::Block(1);
+                        i += 2;
+                    } else if c == '"' {
+                        state = State::Str;
+                        code.push('"');
+                        i += 1;
+                    } else if c == 'r' && (nxt == '"' || nxt == '#') {
+                        let mut j = i + 1;
+                        let mut hashes = 0;
+                        while j < n && chars[j] == '#' {
+                            hashes += 1;
+                            j += 1;
+                        }
+                        if j < n && chars[j] == '"' {
+                            state = State::RawStr(hashes);
+                            code.push('"');
+                            i = j + 1;
+                        } else {
+                            code.push(c);
+                            i += 1;
+                        }
+                    } else if c == 'b' && nxt == '"' {
+                        state = State::Str;
+                        code.push('"');
+                        i += 2;
+                    } else if c == '\'' {
+                        // Char literal vs lifetime: `'x'`/`'\n'` close with a
+                        // quote; a lifetime is just `'ident`.
+                        if nxt == '\\' {
+                            let mut j = i + 2;
+                            if j < n && chars[j] == '\\' {
+                                j += 1;
+                            }
+                            j += 1;
+                            if j < n && chars[j] == '\'' {
+                                j += 1;
+                            }
+                            code.push_str("' '");
+                            i = j;
+                        } else if i + 2 < n && chars[i + 2] == '\'' {
+                            code.push_str("' '");
+                            i += 3;
+                        } else {
+                            code.push('\'');
+                            i += 1;
+                        }
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                }
+                State::Block(depth) => {
+                    if c == '*' && nxt == '/' {
+                        state = if depth == 1 { State::Normal } else { State::Block(depth - 1) };
+                        i += 2;
+                    } else if c == '/' && nxt == '*' {
+                        state = State::Block(depth + 1);
+                        i += 2;
+                    } else {
+                        comment.push(c);
+                        i += 1;
+                    }
+                }
+                State::Str => {
+                    if c == '\\' {
+                        i += 2;
+                    } else if c == '"' {
+                        state = State::Normal;
+                        code.push('"');
+                        i += 1;
+                    } else {
+                        i += 1;
+                    }
+                }
+                State::RawStr(hashes) => {
+                    let closes = c == '"'
+                        && i + hashes < n
+                        && chars[i + 1..i + 1 + hashes].iter().all(|&h| h == '#');
+                    if closes {
+                        state = State::Normal;
+                        code.push('"');
+                        i += 1 + hashes;
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+        }
+        out.push(Line { number: li + 1, raw: raw.to_string(), code, comment, in_test: false });
+    }
+    mark_test_regions(&mut out);
+    out
+}
+
+/// Mark lines inside `#[cfg(test)]` items: the attribute arms a pending
+/// flag; the next `{` opens the region, which closes when brace depth
+/// returns to its opening level.
+fn mark_test_regions(lines: &mut [Line]) {
+    let mut depth: i64 = 0;
+    let mut pending = false;
+    let mut test_depth: Option<i64> = None;
+    for line in lines.iter_mut() {
+        line.in_test = test_depth.is_some() || pending;
+        for ch in line.code.chars() {
+            if ch == '{' {
+                depth += 1;
+                if pending && test_depth.is_none() {
+                    test_depth = Some(depth);
+                    pending = false;
+                }
+            } else if ch == '}' {
+                if test_depth == Some(depth) {
+                    test_depth = None;
+                }
+                depth -= 1;
+            }
+        }
+        if line.code.contains("cfg(test") {
+            pending = true;
+            line.in_test = true;
+        }
+    }
+}
+
+/// True when `word` occurs in `code` delimited by non-identifier chars.
+pub fn word_in(code: &str, word: &str) -> bool {
+    let cv: Vec<char> = code.chars().collect();
+    let wv: Vec<char> = word.chars().collect();
+    if wv.is_empty() || cv.len() < wv.len() {
+        return false;
+    }
+    let ident = |c: char| c.is_ascii_alphanumeric() || c == '_';
+    for start in 0..=cv.len() - wv.len() {
+        if cv[start..start + wv.len()] != wv[..] {
+            continue;
+        }
+        let before_ok = start == 0 || !ident(cv[start - 1]);
+        let after = start + wv.len();
+        let after_ok = after >= cv.len() || !ident(cv[after]);
+        if before_ok && after_ok {
+            return true;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_split() {
+        let src = "let x = \".unwrap()\"; // audit note\nlet y = 1; /* block */ let z = 2;";
+        let lines = lex(src);
+        assert!(!lines[0].code.contains("unwrap"));
+        assert_eq!(lines[0].comment, " audit note");
+        assert!(lines[1].code.contains("let z"));
+        assert_eq!(lines[1].comment, " block ");
+    }
+
+    #[test]
+    fn block_comments_span_lines_and_nest() {
+        let src = "/* a /* b */\nstill comment */ let x = 1;";
+        let lines = lex(src);
+        assert!(lines[0].code.is_empty());
+        assert!(lines[1].code.contains("let x"));
+        assert!(lines[1].comment.contains("still comment"));
+    }
+
+    #[test]
+    fn raw_strings_are_blanked() {
+        let src = "let p = r#\"contains .unwrap() and \"quotes\"\"#; foo();";
+        let lines = lex(src);
+        assert!(!lines[0].code.contains("unwrap"));
+        assert!(lines[0].code.contains("foo()"));
+    }
+
+    #[test]
+    fn char_literal_vs_lifetime() {
+        let src = "fn f<'a>(x: &'a str) { let c = '\"'; let d = 'z'; g(x) }";
+        let lines = lex(src);
+        // The quote char literal must not open a string state.
+        assert!(lines[0].code.contains("g(x)"));
+    }
+
+    #[test]
+    fn cfg_test_region_tracking() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() {}\n}\nfn c() {}";
+        let lines = lex(src);
+        assert!(!lines[0].in_test);
+        assert!(lines[1].in_test);
+        assert!(lines[3].in_test);
+        assert!(lines[4].in_test);
+        assert!(!lines[5].in_test);
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert!(word_in("let x: HashMap<u8, u8>", "HashMap"));
+        assert!(!word_in("let x: MyHashMapLike", "HashMap"));
+        assert!(word_in("unsafe { f() }", "unsafe"));
+    }
+}

@@ -1,0 +1,148 @@
+//! `hif4 audit` — the in-tree invariant checker.
+//!
+//! The compiler cannot see the contracts this reproduction rests on:
+//! integer dots that must never wrap (`IDOT_I32_SAFE_LANES`, DESIGN.md
+//! §11), bit-identical results for any thread/tile/page count, a serving
+//! tier that must never panic an admitted stream (§13), and process
+//! knobs as the only environment coupling. This module makes each of
+//! them a build-time failure: a hand-rolled lexer ([`lexer`]) feeds five
+//! lexical rules ([`rules`]) over `src/`, and CI fails on any finding.
+//!
+//! ```text
+//! hif4 audit [--fix-hints] [--json] [--root DIR] [--out FILE]
+//! ```
+//!
+//! Scope is the crate source tree (`src/`): integration tests and
+//! benches exercise the contracts rather than carrying them. Every rule
+//! is suppressible per-site via `audit:allow(<id>) -- <reason>`, and the
+//! tool verifies each allow is load-bearing — a stale allow is itself a
+//! finding, so suppressions cannot outlive the code they excused. The
+//! full rule catalog and allow protocol live in DESIGN.md §16; the
+//! self-audit test (`tests/audit_engine.rs`) pins the shipped tree to
+//! zero findings.
+
+pub mod lexer;
+pub mod rules;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+pub use rules::{audit_source, Finding, ALLOW_IDS, KNOB_SITES};
+
+use crate::util::bench::Table;
+use crate::util::json::Json;
+
+/// The result of auditing a source tree.
+#[derive(Debug)]
+pub struct Report {
+    /// Scanned root directory.
+    pub root: PathBuf,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+    /// All findings, in (file, line) order.
+    pub findings: Vec<Finding>,
+}
+
+impl Report {
+    /// True when the tree carries zero findings (and therefore zero
+    /// stale allows — those are findings too).
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Machine-readable report (the CI artifact).
+    pub fn to_json(&self) -> Json {
+        let findings = self.findings.iter().map(|f| {
+            Json::obj(vec![
+                ("rule", Json::str(f.rule)),
+                ("id", Json::str(f.id)),
+                ("file", Json::str(f.file.as_str())),
+                ("line", Json::num(f.line as f64)),
+                ("message", Json::str(&f.message)),
+                ("hint", Json::str(f.hint)),
+            ])
+        });
+        Json::obj(vec![
+            ("root", Json::str(self.root.display().to_string())),
+            ("files_scanned", Json::num(self.files_scanned as f64)),
+            ("findings", Json::arr(findings)),
+            ("clean", Json::Bool(self.clean())),
+        ])
+    }
+
+    /// Human-readable table; `fix_hints` appends a remediation line per
+    /// finding.
+    pub fn render(&self, fix_hints: bool) -> String {
+        let mut out = String::new();
+        if self.clean() {
+            out.push_str(&format!(
+                "audit: clean — {} files under {} pass R1–R5\n",
+                self.files_scanned,
+                self.root.display()
+            ));
+            return out;
+        }
+        let mut table = Table::new(
+            &format!("audit: {} finding(s)", self.findings.len()),
+            &["rule", "site", "id", "message"],
+        );
+        for f in &self.findings {
+            table.row(vec![
+                f.rule.to_string(),
+                format!("{}:{}", f.file, f.line),
+                f.id.to_string(),
+                f.message.clone(),
+            ]);
+        }
+        out.push_str(&table.render());
+        if fix_hints {
+            out.push('\n');
+            for f in &self.findings {
+                out.push_str(&format!("{}:{}: hint: {}\n", f.file, f.line, f.hint));
+            }
+        }
+        out
+    }
+}
+
+/// Recursively collect `.rs` files under `dir`, sorted by relative path
+/// so reports (and CI artifacts) are byte-stable across filesystems.
+fn collect_sources(root: &Path) -> Result<Vec<PathBuf>> {
+    fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+        let entries =
+            std::fs::read_dir(dir).with_context(|| format!("read_dir {}", dir.display()))?;
+        for entry in entries {
+            let path = entry?.path();
+            if path.is_dir() {
+                walk(&path, out)?;
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                out.push(path);
+            }
+        }
+        Ok(())
+    }
+    let mut files = Vec::new();
+    walk(root, &mut files)?;
+    files.sort();
+    Ok(files)
+}
+
+/// Audit every `.rs` file under `root` (the crate's `src/` tree).
+pub fn run_audit(root: &Path) -> Result<Report> {
+    anyhow::ensure!(root.is_dir(), "audit root {} is not a directory", root.display());
+    let files = collect_sources(root)?;
+    let mut findings = Vec::new();
+    for path in &files {
+        let content =
+            std::fs::read_to_string(path).with_context(|| format!("read {}", path.display()))?;
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace(std::path::MAIN_SEPARATOR, "/");
+        findings.extend(audit_source(&rel, &content));
+    }
+    findings.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok(Report { root: root.to_path_buf(), files_scanned: files.len(), findings })
+}

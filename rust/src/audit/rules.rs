@@ -1,0 +1,428 @@
+//! The audit rule set (R1–R5) and the inline-allow protocol.
+//!
+//! Every rule is a lexical pattern over the [`super::lexer`] line model,
+//! scoped to the module trees where the invariant it guards actually
+//! holds (see `DESIGN.md` §16 for the catalog and rationale):
+//!
+//! * **R1 `safety`** — every `unsafe` token carries an adjacent
+//!   `SAFETY:` (or rustdoc `# Safety`) comment.
+//! * **R2 `panic`/`index`/`lock`** — panic-freedom in `server/` and
+//!   `runtime/`: no `unwrap`/`expect`/`panic!`/`todo!`/`unimplemented!`,
+//!   no scalar slice subscripts (ranged `a[i..j]` slicing is exempt —
+//!   the repo idiom keeps it next to explicit length checks), and
+//!   `util::lock_recover` instead of raw `Mutex::lock`, all outside
+//!   `#[cfg(test)]`.
+//! * **R3 `hash-iter`/`time`/`narrowing`** — determinism in the
+//!   bit-exact modules (`dotprod/`, `model/`, `formats/`): no
+//!   `HashMap`/`HashSet` (iteration order is randomized), no
+//!   `Instant`/`SystemTime` in result paths, no visibly-f64 `as f32`
+//!   narrowing casts.
+//! * **R4 `bound`** — every widening `i32` dot-accumulation site (two
+//!   `as i32` casts multiplied on one line, or an `_mm256_madd_epi16`
+//!   call) sits in a function whose comments carry a `BOUND:` note
+//!   referencing `IDOT_I32_SAFE_LANES` or `lanes_idot_exact` (the §11
+//!   overflow audit).
+//! * **R5 `env`** — `env::var` reads only at the registered process-knob
+//!   sites in [`KNOB_SITES`], so no hidden nondeterminism enters kernels.
+//!
+//! A finding is suppressed by an inline annotation on the flagged line
+//! or a contiguous comment block directly above it, written as
+//! `audit:allow(<id>) -- <reason>` inside a comment. The reason is
+//! mandatory, and the tool verifies every allow is load-bearing: an
+//! allow that suppresses nothing is itself a finding (`stale-allow`).
+
+use super::lexer::{lex, word_in, Line};
+
+/// One audit violation (or allow-protocol error).
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Rule tag: `R1`–`R5`, or `allow` for allow-protocol errors.
+    pub rule: &'static str,
+    /// Allow id the finding can be suppressed under.
+    pub id: &'static str,
+    /// Path relative to the scanned root.
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    pub message: String,
+    /// One-line remediation suggestion (`--fix-hints`).
+    pub hint: &'static str,
+}
+
+/// Every valid `audit:allow(<id>)` id. Unknown ids are ignored outright:
+/// a typo'd allow simply fails to suppress, so the underlying finding
+/// still surfaces the problem.
+pub const ALLOW_IDS: &[&str] =
+    &["safety", "panic", "index", "lock", "hash-iter", "time", "narrowing", "bound", "env"];
+
+/// The registered process-knob sites: the only (file, variable) pairs
+/// where an `env::var` read is legitimate. Adding a knob means adding a
+/// row here — which is exactly the point: the knob inventory is code.
+pub const KNOB_SITES: &[(&str, &str)] = &[
+    ("util/threadpool.rs", "HIF4_THREADS"),
+    ("util/bench.rs", "HIF4_BENCH_QUICK"),
+    ("dotprod/mod.rs", "HIF4_KERNEL"),
+    ("model/attention.rs", "HIF4_ATTN"),
+    ("server/service.rs", "HIF4_PREFIX_CACHE"),
+    ("server/service.rs", "HIF4_PREFILL_CHUNK"),
+    ("server/service.rs", "HIF4_KV_PAGE_ROWS"),
+    ("main.rs", "HIF4_KV_CACHE"),
+];
+
+fn hint_for(id: &str) -> &'static str {
+    match id {
+        "safety" => "add an adjacent `// SAFETY: ...` (or `/// # Safety`) comment stating the invariant",
+        "panic" => "return a structured error (anyhow) or annotate why the panic is unreachable",
+        "index" => "use .get()/.first()/slice patterns, or annotate the bounds invariant",
+        "lock" => "use util::lock_recover so a poisoned mutex cannot panic the serving tier",
+        "hash-iter" => "use BTreeMap/BTreeSet: iteration order must be deterministic here",
+        "time" => "wall-clock types are banned in bit-exact result paths; use a logical clock",
+        "narrowing" => "keep the f64 accumulation, or annotate why the f64->f32 cast is exact",
+        "bound" => "add a `// BOUND:` comment referencing IDOT_I32_SAFE_LANES or lanes_idot_exact",
+        "env" => "register the knob in audit::rules::KNOB_SITES (and document it), or read it at a registered site",
+        _ => "",
+    }
+}
+
+/// A parsed `audit:allow` annotation.
+struct Allow {
+    line_idx: usize,
+    id: &'static str,
+    reason: String,
+    used: bool,
+}
+
+fn parse_allows(lines: &[Line]) -> Vec<Allow> {
+    let mut out = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        let Some(pos) = line.comment.find("audit:allow(") else { continue };
+        let rest = &line.comment[pos + "audit:allow(".len()..];
+        let Some(close) = rest.find(')') else { continue };
+        let id_text = &rest[..close];
+        let Some(&id) = ALLOW_IDS.iter().find(|&&k| k == id_text) else { continue };
+        let tail = rest[close + 1..].trim_start();
+        let reason = tail.strip_prefix("--").map(|r| r.trim().to_string()).unwrap_or_default();
+        out.push(Allow { line_idx: idx, id, reason, used: false });
+    }
+    out
+}
+
+/// Find an allow with `id` covering `idx`: on the line itself or in the
+/// contiguous run of comment-only lines directly above it.
+fn allow_covering(lines: &[Line], allows: &[Allow], idx: usize, id: &str) -> Option<usize> {
+    let mut covered = vec![idx];
+    let mut k = idx;
+    while k > 0 {
+        k -= 1;
+        let line = &lines[k];
+        if !line.comment.is_empty() && line.code.trim().is_empty() {
+            covered.push(k);
+        } else {
+            break;
+        }
+    }
+    allows.iter().position(|a| a.id == id && covered.contains(&a.line_idx))
+}
+
+/// Comment text of `idx`'s own line plus the contiguous comment/attribute
+/// block directly above it.
+fn comment_block_above(lines: &[Line], idx: usize) -> String {
+    let mut texts = Vec::new();
+    if !lines[idx].comment.is_empty() {
+        texts.push(lines[idx].comment.clone());
+    }
+    let mut k = idx;
+    while k > 0 {
+        k -= 1;
+        let line = &lines[k];
+        let code = line.code.trim();
+        let comment_only = !line.comment.is_empty() && code.is_empty();
+        let attr_only = code.starts_with("#[");
+        if comment_only || attr_only {
+            if !line.comment.is_empty() {
+                texts.push(line.comment.clone());
+            }
+        } else {
+            break;
+        }
+    }
+    texts.join("\n")
+}
+
+/// True when `code` contains a `fn` item declaration (not a call).
+fn has_fn_decl(code: &str) -> bool {
+    let chars: Vec<char> = code.chars().collect();
+    let ident = |c: char| c.is_ascii_alphanumeric() || c == '_';
+    for i in 0..chars.len().saturating_sub(2) {
+        if chars[i] != 'f' || chars[i + 1] != 'n' {
+            continue;
+        }
+        if i > 0 && ident(chars[i - 1]) {
+            continue;
+        }
+        let mut j = i + 2;
+        if j >= chars.len() || !chars[j].is_whitespace() {
+            continue;
+        }
+        while j < chars.len() && chars[j].is_whitespace() {
+            j += 1;
+        }
+        if j < chars.len() && (chars[j].is_ascii_alphabetic() || chars[j] == '_') {
+            return true;
+        }
+    }
+    false
+}
+
+fn enclosing_fn(lines: &[Line], idx: usize) -> Option<usize> {
+    (0..=idx).rev().find(|&k| has_fn_decl(&lines[k].code))
+}
+
+/// R4 satisfaction: any comment between the enclosing `fn` and the site
+/// (or in the block above the `fn`) says `BOUND:` and names the i32-safe
+/// lane cap or the exact i64 fallback.
+fn bound_comment_ok(lines: &[Line], idx: usize) -> bool {
+    let Some(fn_idx) = enclosing_fn(lines, idx) else { return false };
+    let mut texts: Vec<String> = lines[fn_idx..=idx]
+        .iter()
+        .filter(|l| !l.comment.is_empty())
+        .map(|l| l.comment.clone())
+        .collect();
+    texts.push(comment_block_above(lines, fn_idx));
+    let joined = texts.join("\n");
+    joined.contains("BOUND:")
+        && (joined.contains("IDOT_I32_SAFE_LANES") || joined.contains("lanes_idot_exact"))
+}
+
+/// True when `code` has a scalar (non-range) subscript expression: a `[`
+/// preceded by an identifier char, `)` or `]`, whose bracket contents are
+/// non-empty and contain no `..`.
+fn scalar_index(code: &str) -> bool {
+    let chars: Vec<char> = code.chars().collect();
+    let n = chars.len();
+    let ident = |c: char| c.is_ascii_alphanumeric() || c == '_';
+    for i in 0..n {
+        if chars[i] != '[' {
+            continue;
+        }
+        let prev = if i > 0 { chars[i - 1] } else { '\0' };
+        if !(ident(prev) || prev == ')' || prev == ']') {
+            continue;
+        }
+        let mut depth = 1;
+        let mut j = i + 1;
+        while j < n && depth > 0 {
+            match chars[j] {
+                '[' => depth += 1,
+                ']' => depth -= 1,
+                _ => {}
+            }
+            j += 1;
+        }
+        let inner: String = if depth == 0 {
+            chars[i + 1..j - 1].iter().collect()
+        } else {
+            chars[i + 1..].iter().collect()
+        };
+        if inner.trim().is_empty() || inner.contains("..") {
+            continue;
+        }
+        return true;
+    }
+    false
+}
+
+/// True when a digit-dot-digit float literal occurs in `text`.
+fn has_float_literal(text: &str) -> bool {
+    let chars: Vec<char> = text.chars().collect();
+    chars.windows(3).any(|w| w[0].is_ascii_digit() && w[1] == '.' && w[2].is_ascii_digit())
+}
+
+/// An ` as f32` cast whose operand is visibly f64-typed: a paren group
+/// containing a float literal / `f64`, or any operand on a line that
+/// also mentions `f64`. Purely lexical — an identifier of f64 type with
+/// no `f64` spelled on the line is out of reach, which is the documented
+/// trade-off of a parser-free audit.
+fn narrowing_cast(code: &str) -> bool {
+    let chars: Vec<char> = code.chars().collect();
+    let pat: Vec<char> = " as f32".chars().collect();
+    let n = chars.len();
+    if n < pat.len() {
+        return false;
+    }
+    for start in 0..=n - pat.len() {
+        if chars[start..start + pat.len()] != pat[..] {
+            continue;
+        }
+        let mut k = start;
+        while k > 0 && chars[k - 1] == ' ' {
+            k -= 1;
+        }
+        if k == 0 {
+            continue;
+        }
+        if chars[k - 1] == ')' {
+            let mut depth = 1;
+            let mut j = k - 1;
+            while j > 0 && depth > 0 {
+                j -= 1;
+                match chars[j] {
+                    ')' => depth += 1,
+                    '(' => depth -= 1,
+                    _ => {}
+                }
+            }
+            let group: String = chars[j..k].iter().collect();
+            if has_float_literal(&group) || word_in(&group, "f64") {
+                return true;
+            }
+        } else if word_in(code, "f64") {
+            return true;
+        }
+    }
+    false
+}
+
+/// Extract the quoted variable name after an `env::var(` call.
+fn env_var_name(raw: &str) -> Option<&str> {
+    let pos = raw.find("env::var")?;
+    let rest = &raw[pos..];
+    let open = rest.find('"')?;
+    let tail = &rest[open + 1..];
+    let close = tail.find('"')?;
+    Some(&tail[..close])
+}
+
+const PANIC_PATTERNS: &[&str] = &[".unwrap()", ".expect(", "panic!(", "todo!(", "unimplemented!("];
+
+/// Audit one source file (given as text); `rel` is the path relative to
+/// the scanned root and selects rule scopes. Findings come back in line
+/// order, allow-protocol errors (stale allows) last.
+pub fn audit_source(rel: &str, content: &str) -> Vec<Finding> {
+    let lines = lex(content);
+    let mut allows = parse_allows(&lines);
+    let mut hits: Vec<(&'static str, &'static str, usize, String)> = Vec::new();
+
+    let in_r2 = rel.starts_with("server/") || rel.starts_with("runtime/");
+    let in_r3 =
+        rel.starts_with("dotprod/") || rel.starts_with("model/") || rel.starts_with("formats/");
+
+    for (idx, line) in lines.iter().enumerate() {
+        let code = &line.code;
+        // R1 applies everywhere, tests included: unsafe is unsafe.
+        if word_in(code, "unsafe") {
+            let block = comment_block_above(&lines, idx);
+            if !block.contains("SAFETY") && !block.contains("# Safety") {
+                hits.push((
+                    "R1",
+                    "safety",
+                    idx,
+                    "unsafe without an adjacent SAFETY: comment".to_string(),
+                ));
+            }
+        }
+        if line.in_test {
+            continue;
+        }
+        if in_r2 {
+            if let Some(pat) = PANIC_PATTERNS.iter().find(|p| code.contains(*p)) {
+                let what = pat.trim_start_matches('.').trim_end_matches('(');
+                hits.push(("R2", "panic", idx, format!("{what} in the panic-free serving tier")));
+            }
+            if scalar_index(code) {
+                hits.push((
+                    "R2",
+                    "index",
+                    idx,
+                    "scalar slice index in the panic-free serving tier".to_string(),
+                ));
+            }
+            if code.contains(".lock()") {
+                hits.push((
+                    "R2",
+                    "lock",
+                    idx,
+                    "raw Mutex::lock in the serving tier (poison panics)".to_string(),
+                ));
+            }
+        }
+        if in_r3 {
+            if word_in(code, "HashMap") || word_in(code, "HashSet") {
+                hits.push((
+                    "R3",
+                    "hash-iter",
+                    idx,
+                    "HashMap/HashSet in a bit-exact module".to_string(),
+                ));
+            }
+            if word_in(code, "Instant") || word_in(code, "SystemTime") {
+                hits.push(("R3", "time", idx, "wall-clock type in a bit-exact module".to_string()));
+            }
+            if narrowing_cast(code) {
+                hits.push((
+                    "R3",
+                    "narrowing",
+                    idx,
+                    "f64→f32 narrowing cast in a bit-exact module".to_string(),
+                ));
+            }
+        }
+        let widening_dot = (code.matches("as i32").count() >= 2 && code.contains('*'))
+            || code.contains("_mm256_madd_epi16(");
+        if widening_dot && !bound_comment_ok(&lines, idx) {
+            hits.push((
+                "R4",
+                "bound",
+                idx,
+                "widening i32 dot accumulation without a BOUND: annotation".to_string(),
+            ));
+        }
+        if code.contains("env::var") {
+            let var = env_var_name(&line.raw).unwrap_or("?");
+            let registered = KNOB_SITES.iter().any(|(sfx, v)| rel.ends_with(sfx) && *v == var);
+            if !registered {
+                hits.push(("R5", "env", idx, format!("unregistered env read of {var}")));
+            }
+        }
+    }
+
+    let mut findings = Vec::new();
+    for (rule, id, idx, message) in hits {
+        match allow_covering(&lines, &allows, idx, id) {
+            Some(ai) => {
+                allows[ai].used = true;
+                if allows[ai].reason.is_empty() {
+                    findings.push(Finding {
+                        rule: "allow",
+                        id,
+                        file: rel.to_string(),
+                        line: lines[allows[ai].line_idx].number,
+                        message: format!("audit:allow({id}) without a `-- <reason>`"),
+                        hint: "every allow must state why the invariant holds anyway",
+                    });
+                }
+            }
+            None => findings.push(Finding {
+                rule,
+                id,
+                file: rel.to_string(),
+                line: lines[idx].number,
+                message,
+                hint: hint_for(id),
+            }),
+        }
+    }
+    for allow in &allows {
+        if !allow.used {
+            findings.push(Finding {
+                rule: "allow",
+                id: allow.id,
+                file: rel.to_string(),
+                line: lines[allow.line_idx].number,
+                message: format!("stale audit:allow({}) suppresses nothing", allow.id),
+                hint: "remove the allow: the pattern it excuses no longer fires here",
+            });
+        }
+    }
+    findings
+}

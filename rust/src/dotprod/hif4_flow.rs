@@ -69,6 +69,9 @@ pub fn dot_trace(a: &HiF4Unit, b: &HiF4Unit) -> (f64, HiF4DotTrace) {
     }
 
     // Stages 2-3: 64 products, integer adder tree, level-2 shifts.
+    // BOUND: GROUP-sized spans ≪ IDOT_I32_SAFE_LANES, so the widening
+    // i32 span/total accumulators cannot wrap (S2P2 products are ≤ 8 bits
+    // each; whole-row reductions go through lanes_idot_exact instead).
     let mut total: i32 = 0;
     for j in 0..GROUP / L2_SPAN {
         let mut span: i32 = 0;

@@ -100,6 +100,9 @@ pub fn dot_group(a: &Nvfp4Group, b: &Nvfp4Group) -> f64 {
     if a.scale.is_nan() || b.scale.is_nan() {
         return f64::NAN;
     }
+    // BOUND: GROUP lanes ≪ IDOT_I32_SAFE_LANES and the S10P2 partial is
+    // debug-asserted below, so the widening i32 accumulator cannot wrap
+    // (whole-row reductions go through lanes_idot_exact instead).
     let mut sum: i32 = 0;
     for i in 0..GROUP {
         sum += (a.elem(i).signed_halves() as i32) * (b.elem(i).signed_halves() as i32);

@@ -245,6 +245,8 @@ impl BlockFormat for Mxfp4Fmt {
         if a.scale.is_nan() || b.scale.is_nan() {
             return f64::NAN;
         }
+        // BOUND: GROUP lanes ≪ IDOT_I32_SAFE_LANES, so the widening i32
+        // accumulator cannot wrap (longer spans use lanes_idot_exact).
         let mut sum: i32 = 0;
         for i in 0..Self::GROUP {
             sum += (a.elem(i).signed_halves() as i32) * (b.elem(i).signed_halves() as i32);
@@ -299,6 +301,8 @@ impl BlockFormat for Mx4Fmt {
         if a.scale.is_nan() || b.scale.is_nan() {
             return f64::NAN;
         }
+        // BOUND: GROUP lanes ≪ IDOT_I32_SAFE_LANES, so the widening i32
+        // accumulator cannot wrap (longer spans use lanes_idot_exact).
         let mut sum: i32 = 0;
         for i in 0..Self::GROUP {
             sum += (Self::lane(a, i) as i32) * (Self::lane(b, i) as i32);
@@ -342,6 +346,8 @@ impl BlockFormat for BfpFmt {
         if a.scale.is_nan() || b.scale.is_nan() {
             return f64::NAN;
         }
+        // BOUND: GROUP lanes ≪ IDOT_I32_SAFE_LANES, so the widening i32
+        // accumulator cannot wrap (longer spans use lanes_idot_exact).
         let mut sum: i32 = 0;
         for i in 0..Self::GROUP {
             sum += (a.elem(i).signed_q() as i32) * (b.elem(i).signed_q() as i32);
@@ -599,6 +605,9 @@ pub const IDOT_I32_SAFE_LANES: usize = (i32::MAX / (128 * 128)) as usize;
 /// associative, so the optimizer is free to vectorize; the result is
 /// exact either way. Callers pass group-sized spans, far below the
 /// [`IDOT_I32_SAFE_LANES`] overflow bound (debug-asserted).
+///
+/// BOUND: spans ≤ [`IDOT_I32_SAFE_LANES`]; anything longer must go
+/// through [`lanes_idot_exact`].
 #[inline]
 fn lanes_idot(a: &[i8], b: &[i8]) -> i32 {
     debug_assert_eq!(a.len(), b.len());
@@ -804,6 +813,9 @@ trait LaneKernel: Send + Sync + 'static {
 /// chains merged by a balanced final reduction — exact under integer
 /// associativity, and the shape LLVM auto-vectorizes well. The SIMD
 /// backend's fallback on machines without AVX2.
+///
+/// BOUND: spans ≤ [`IDOT_I32_SAFE_LANES`] (debug-asserted); anything
+/// longer must go through [`lanes_idot_exact`].
 #[inline]
 fn idot_unrolled(a: &[i8], b: &[i8]) -> i32 {
     debug_assert_eq!(a.len(), b.len());
@@ -922,6 +934,10 @@ mod avx2 {
     /// Exact `i8` dot over one group's lanes (16-lane vector body plus a
     /// scalar tail; in-tree groups are 16/32/64, so the tail is empty).
     ///
+    /// BOUND: callers pass group-sized spans ≤ [`super::IDOT_I32_SAFE_LANES`]
+    /// (longer reductions use [`super::lanes_idot_exact`]), so neither
+    /// the madd vector accumulators nor the scalar-tail i32 can wrap.
+    ///
     /// # Safety
     /// AVX2 must be available.
     #[target_feature(enable = "avx2")]
@@ -944,6 +960,10 @@ mod avx2 {
 
     /// One A group against [`NR`] B groups: each A chunk is widened once
     /// and reused across all four B rows (the register-reuse payoff).
+    ///
+    /// BOUND: callers pass group-sized spans ≤ [`super::IDOT_I32_SAFE_LANES`]
+    /// (longer reductions use [`super::lanes_idot_exact`]), so neither
+    /// the madd vector accumulators nor the scalar-tail i32 can wrap.
     ///
     /// # Safety
     /// AVX2 must be available.
@@ -977,6 +997,10 @@ mod avx2 {
     /// [`NR`] columns, B chunks once per [`MR`] rows, eight independent
     /// vector accumulators (2 A + 1 B temp + 8 accumulators = 11 live
     /// `ymm` registers, inside the 16 AVX2 provides).
+    ///
+    /// BOUND: callers pass group-sized spans ≤ [`super::IDOT_I32_SAFE_LANES`]
+    /// (longer reductions use [`super::lanes_idot_exact`]), so neither
+    /// the madd vector accumulators nor the scalar-tail i32 can wrap.
     ///
     /// # Safety
     /// AVX2 must be available.
@@ -1618,6 +1642,7 @@ fn decode_plane_g<F: BlockFormat>(lanes: &[i8], scale: f64, out: &mut [f32]) {
     );
     let s = scale as f32;
     // 1/LANE_UNIT is a power of two: the lane scaling is exact.
+    // audit:allow(narrowing) -- 1/LANE_UNIT is an exact power of two; the f64→f32 cast is lossless.
     let recip = (1.0 / F::LANE_UNIT) as f32;
     for (o, lane) in out.iter_mut().zip(lanes) {
         *o = s * (*lane as f32 * recip);

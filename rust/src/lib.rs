@@ -51,6 +51,7 @@
 //! so the workspace builds with no registry or native XLA runtime; see
 //! `README.md` for swapping in the real bindings.
 
+pub mod audit;
 pub mod dotprod;
 pub mod eval;
 pub mod formats;

@@ -37,6 +37,8 @@
 //! hif4 hwcost                                  # §III.B area/power table
 //! hif4 dotprod                                 # Fig 4 inventory + exactness
 //! hif4 quantize --in w.bin --format hif4       # quantize a raw f32 tensor
+//! hif4 audit    [--fix-hints] [--json]         # in-tree invariant checker
+//!               [--root DIR] [--out FILE]      # (rules R1-R5; the CI gate)
 //! hif4 info                                    # formats summary
 //! ```
 //!
@@ -127,6 +129,7 @@ fn main() -> Result<()> {
             );
             Ok(())
         }
+        Some("audit") => audit(&args),
         Some("eval") => eval(&args),
         Some("quantize") => quantize(&args),
         Some("info") | None => {
@@ -165,13 +168,44 @@ fn main() -> Result<()> {
                 "attention path: {} (quantized KV caches; f32 caches always replay)",
                 hif4::model::attention::attn_path().label()
             );
-            println!("\nsubcommands: serve | sweep | eval | hwcost | dotprod | quantize | info");
+            println!(
+                "\nsubcommands: serve | sweep | eval | hwcost | dotprod | quantize | audit | info"
+            );
             Ok(())
         }
         Some(other) => {
             anyhow::bail!("unknown subcommand {other}; try `hif4 info`");
         }
     }
+}
+
+/// `hif4 audit [--fix-hints] [--json] [--root DIR] [--out FILE]` — run
+/// the in-tree invariant checker (R1–R5, see `hif4::audit`) over the
+/// crate source and exit nonzero on any finding or stale allow.
+fn audit(args: &Args) -> Result<()> {
+    let root = match args.get("root") {
+        Some(r) => Path::new(r).to_path_buf(),
+        // Work from either the workspace root or rust/.
+        None if Path::new("src/lib.rs").is_file() => Path::new("src").to_path_buf(),
+        None => Path::new("rust/src").to_path_buf(),
+    };
+    let report = hif4::audit::run_audit(&root)?;
+    let json = report.to_json().render();
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, &json)
+            .map_err(|e| anyhow::anyhow!("write audit report {out}: {e}"))?;
+    }
+    if args.flag("json") {
+        println!("{json}");
+    } else {
+        print!("{}", report.render(args.flag("fix-hints")));
+    }
+    anyhow::ensure!(
+        report.clean(),
+        "{} audit finding(s) — run `hif4 audit --fix-hints` for remediation",
+        report.findings.len()
+    );
+    Ok(())
 }
 
 fn serve(args: &Args) -> Result<()> {

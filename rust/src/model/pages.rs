@@ -60,7 +60,7 @@ use crate::dotprod::quant_tensor::encode_row_planes;
 use crate::formats::QuantKind;
 use crate::model::kv::KvCacheType;
 use crate::util::lock_recover;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -343,7 +343,7 @@ struct TrieNode {
 /// linkage exactly.
 struct PrefixTrie {
     page_rows: usize,
-    nodes: HashMap<u64, TrieNode>,
+    nodes: BTreeMap<u64, TrieNode>,
     roots: Vec<u64>,
     clock: u64,
     /// Cached-chunk cap: beyond it, registration evicts the LRU
@@ -356,7 +356,7 @@ impl PrefixTrie {
     fn new(page_rows: usize) -> PrefixTrie {
         PrefixTrie {
             page_rows,
-            nodes: HashMap::new(),
+            nodes: BTreeMap::new(),
             roots: Vec::new(),
             clock: 0,
             max_nodes: 4096,

@@ -10,15 +10,15 @@ use super::transformer::{
 };
 use crate::tensor::gemm::matmul;
 use crate::tensor::{Matrix, Rng};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// Gradients keyed the same way as the weights.
 #[derive(Debug, Default)]
 pub struct Grads {
     /// Per-linear dW, keyed by `Linear::name`.
-    pub linears: HashMap<String, Matrix>,
+    pub linears: BTreeMap<String, Matrix>,
     pub embed: Matrix,
-    pub norms: HashMap<String, Vec<f32>>,
+    pub norms: BTreeMap<String, Vec<f32>>,
 }
 
 /// Softmax cross-entropy against next-token targets. Returns (loss,
@@ -54,6 +54,7 @@ pub fn cross_entropy(logits: &Matrix, targets: &[usize]) -> (f32, Matrix) {
             drow[c] = (p - if c == t { 1.0 } else { 0.0 }) * inv_n;
         }
     }
+    // audit:allow(narrowing) -- mean loss reports at f32; the accumulation itself stays f64.
     ((loss / n.max(1) as f64) as f32, dl)
 }
 
@@ -286,8 +287,8 @@ pub struct Adam {
     pub beta2: f32,
     pub eps: f32,
     pub step: u64,
-    m: HashMap<String, Vec<f32>>,
-    v: HashMap<String, Vec<f32>>,
+    m: BTreeMap<String, Vec<f32>>,
+    v: BTreeMap<String, Vec<f32>>,
 }
 
 impl Adam {
@@ -298,8 +299,8 @@ impl Adam {
             beta2: 0.999,
             eps: 1e-8,
             step: 0,
-            m: HashMap::new(),
-            v: HashMap::new(),
+            m: BTreeMap::new(),
+            v: BTreeMap::new(),
         }
     }
 

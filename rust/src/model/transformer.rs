@@ -35,7 +35,7 @@ use crate::formats::rounding::RoundMode;
 use crate::formats::{QuantKind, QuantScheme};
 use crate::tensor::gemm::matmul_bt;
 use crate::tensor::{Matrix, Rng};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 /// Quantized weight operands a linear keeps alive across calls — one
@@ -143,12 +143,12 @@ pub struct QuantPolicy {
 #[derive(Debug, Default)]
 pub struct Calibration {
     pub max_rows: usize,
-    pub inputs: HashMap<String, Matrix>,
+    pub inputs: BTreeMap<String, Matrix>,
 }
 
 impl Calibration {
     pub fn new(max_rows: usize) -> Calibration {
-        Calibration { max_rows, inputs: HashMap::new() }
+        Calibration { max_rows, inputs: BTreeMap::new() }
     }
 
     fn record(&mut self, name: &str, x: &Matrix) {

@@ -131,7 +131,9 @@ impl Manifest {
             } else if name == "embed" {
                 rng.fill_normal(&mut data, 0.02);
             } else {
-                let sigma = (2.0 / (dims[0] + dims[dims.len() - 1]) as f32).sqrt();
+                let fan_out = dims.first().copied().unwrap_or(1);
+                let fan_in = dims.last().copied().unwrap_or(1);
+                let sigma = (2.0 / (fan_out + fan_in) as f32).sqrt();
                 rng.fill_normal(&mut data, sigma);
             }
             params.insert(name.clone(), (dims.clone(), data));
@@ -152,7 +154,8 @@ impl ParamStore {
     pub fn literals(&self) -> Result<Vec<xla::Literal>> {
         let mut out = Vec::with_capacity(self.order.len());
         for name in &self.order {
-            let (dims, data) = &self.params[name];
+            let (dims, data) =
+                self.params.get(name).with_context(|| format!("param {name} missing from store"))?;
             let dims_i64: Vec<i64> = dims.iter().map(|d| *d as i64).collect();
             out.push(xla::Literal::vec1(data).reshape(&dims_i64)?);
         }
@@ -178,10 +181,11 @@ impl ParamStore {
     /// startup inherits the parallel quantization path).
     pub fn quantize_weights(&mut self, scheme: &crate::formats::QuantScheme) {
         for (name, (dims, data)) in self.params.iter_mut() {
-            if name == "embed" || name == "head" || name.contains("norm") || dims.len() != 2 {
+            if name == "embed" || name == "head" || name.contains("norm") {
                 continue;
             }
-            *data = scheme.quant_dequant_rows(data, dims[1]);
+            let &[_, cols] = dims.as_slice() else { continue };
+            *data = scheme.quant_dequant_rows(data, cols);
         }
     }
 
@@ -191,7 +195,8 @@ impl ParamStore {
         buf.extend_from_slice(b"HIF4PARM");
         buf.extend_from_slice(&(self.order.len() as u32).to_le_bytes());
         for name in &self.order {
-            let (dims, data) = &self.params[name];
+            let (dims, data) =
+                self.params.get(name).with_context(|| format!("param {name} missing from store"))?;
             buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
             buf.extend_from_slice(name.as_bytes());
             buf.extend_from_slice(&(dims.len() as u32).to_le_bytes());
@@ -243,10 +248,10 @@ impl ParamStore {
     /// View one 2-D parameter as a Matrix (copy).
     pub fn matrix(&self, name: &str) -> Option<Matrix> {
         let (dims, data) = self.params.get(name)?;
-        if dims.len() != 2 {
+        let &[rows, cols] = dims.as_slice() else {
             return None;
-        }
-        Some(Matrix::from_vec(dims[0], dims[1], data.clone()))
+        };
+        Some(Matrix::from_vec(rows, cols, data.clone()))
     }
 }
 

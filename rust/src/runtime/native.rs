@@ -301,9 +301,9 @@ impl DecodeEngine {
         let logits = self.model.forward_cached_last(&mut seqs);
         drop(seqs);
         let mut out = Vec::with_capacity(streams.len());
-        for (si, s) in streams.iter_mut().enumerate() {
-            if takes[si] > 0 {
-                s.fed += takes[si];
+        for ((si, s), &take) in streams.iter_mut().enumerate().zip(&takes) {
+            if take > 0 {
+                s.fed += take;
                 if s.fed < s.prompt.len() {
                     out.push(None);
                     continue;
@@ -334,8 +334,9 @@ fn shape<'a>(m: &'a Manifest, name: &str) -> Result<&'a [usize]> {
 /// model from manifest shapes + geometry keys.
 pub fn config_from_manifest(m: &Manifest) -> Result<ModelConfig> {
     let embed = shape(m, "embed")?;
-    anyhow::ensure!(embed.len() == 2, "embed must be 2-D");
-    let (vocab, d_model) = (embed[0], embed[1]);
+    let &[vocab, d_model] = embed else {
+        anyhow::bail!("embed must be 2-D, got {}-D", embed.len());
+    };
     anyhow::ensure!(vocab == m.vocab, "embed rows {} != manifest vocab {}", vocab, m.vocab);
     let mut n_layers = 0;
     while m.params.iter().any(|(n, _)| *n == format!("layer{n_layers}.wq")) {
@@ -344,24 +345,27 @@ pub fn config_from_manifest(m: &Manifest) -> Result<ModelConfig> {
     anyhow::ensure!(n_layers > 0, "manifest has no layer0.wq — not a transformer manifest");
     let wq = shape(m, "layer0.wq")?;
     let wk = shape(m, "layer0.wk")?;
-    anyhow::ensure!(wq.len() == 2 && wk.len() == 2, "wq/wk must be 2-D");
+    let (&[wq_out, _], &[wk_out, _]) = (wq, wk) else {
+        anyhow::bail!("wq/wk must be 2-D, got {}-D/{}-D", wq.len(), wk.len());
+    };
     anyhow::ensure!(
-        wq[0] == m.n_heads * m.head_dim,
+        wq_out == m.n_heads * m.head_dim,
         "wq out dim {} != n_heads×head_dim {}×{}",
-        wq[0],
+        wq_out,
         m.n_heads,
         m.head_dim
     );
     anyhow::ensure!(
-        wk[0] == m.kv_heads * m.head_dim,
+        wk_out == m.kv_heads * m.head_dim,
         "wk out dim {} != kv_heads×head_dim {}×{}",
-        wk[0],
+        wk_out,
         m.kv_heads,
         m.head_dim
     );
     let w1 = shape(m, "layer0.w1")?;
-    anyhow::ensure!(w1.len() == 2, "w1 must be 2-D");
-    let d_ff = w1[0];
+    let &[d_ff, _] = w1 else {
+        anyhow::bail!("w1 must be 2-D, got {}-D", w1.len());
+    };
     let swiglu = m.params.iter().any(|(n, _)| n == "layer0.w3");
     Ok(ModelConfig {
         name: "l2-native".into(),
@@ -414,16 +418,15 @@ pub fn transformer_from_store(m: &Manifest, store: &ParamStore) -> Result<Transf
     take(&mut t.w.embed, "embed")?;
     take(&mut t.w.head.w, "head")?;
     t.w.norm_f = gain("norm_f")?;
-    for l in 0..t.cfg.n_layers {
+    for (l, layer) in t.w.layers.iter_mut().enumerate() {
         let p = |part: &str| format!("layer{l}.{part}");
-        let layer = &mut t.w.layers[l];
         layer.norm1 = gain(&p("norm1"))?;
         layer.norm2 = gain(&p("norm2"))?;
         take(&mut layer.wq.w, &p("wq"))?;
         take(&mut layer.wk.w, &p("wk"))?;
         take(&mut layer.wv.w, &p("wv"))?;
         take(&mut layer.wo.w, &p("wo"))?;
-        let ffn = &mut layer.ffn[0];
+        let ffn = layer.ffn.first_mut().context("transformer layer has no FFN block")?;
         take(&mut ffn.w1.w, &p("w1"))?;
         take(&mut ffn.w2.w, &p("w2"))?;
         if let Some(w3) = &mut ffn.w3 {

@@ -65,6 +65,7 @@ impl<T> ContinuousScheduler<T> {
     /// Admit into the lowest free slot; `None` when every slot is busy.
     pub fn admit(&mut self, item: T) -> Option<usize> {
         let slot = self.slots.iter().position(|s| s.is_none())?;
+        // audit:allow(index) -- slot comes from position() over this same vec, in bounds by construction.
         self.slots[slot] = Some(item);
         self.active += 1;
         Some(slot)

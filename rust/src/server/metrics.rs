@@ -186,6 +186,7 @@ impl Metrics {
         let us = lat.as_micros().max(1) as u64;
         self.total_us.fetch_add(us, Ordering::Relaxed);
         let bucket = (63 - us.leading_zeros() as usize).min(24);
+        // audit:allow(index) -- bucket is .min(24)-clamped into the 25-entry histogram.
         self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
     }
 

@@ -194,6 +194,7 @@ impl Request {
         };
         let tokens = body[tok_off..]
             .chunks_exact(4)
+            // audit:allow(panic) -- chunks_exact(4) yields exactly 4-byte slices; try_into cannot fail.
             .map(|c| u32::from_le_bytes(c.try_into().unwrap()) as usize)
             .collect();
         Ok(Request { id, tokens, max_new, deadline_ms })
@@ -240,6 +241,7 @@ impl Response {
         }
         let mut body = vec![0u8; len];
         r.read_exact(&mut body)?;
+        // audit:allow(index) -- len == 25 is checked above, so byte 24 exists.
         let status = if len == 25 { Status::from_u8(body[24])? } else { Status::Ok };
         Ok(Response {
             id: u64::from_le_bytes(body[0..8].try_into()?),

@@ -386,10 +386,11 @@ impl Server {
         // Pending until the worker attaches them.
         let plan_engine = Arc::clone(&engine);
         let plan_metrics = Arc::clone(&metrics);
+        let plan_pool = Arc::clone(&pool);
         let plan: AdmissionPlan = Arc::new(move |req: &Request| {
             let prompt = plan_engine.normalize_prompt(&req.tokens);
             let rows = prompt.len() + req.max_new.clamp(1, MAX_NEW_CAP) as usize;
-            let pool = plan_engine.pool().expect("native engine is pooled");
+            let pool = &plan_pool;
             let hit = if pool.prefix_enabled() { pool.lookup_prefix(&prompt) } else { None };
             plan_metrics.record_prefix_lookup(hit.is_some());
             let need = plan_engine.pages_for_rows(rows, hit.as_ref().map_or(0, |h| h.chunks()));

@@ -1,0 +1,250 @@
+//! Deterministic interleaving harness — loom-style schedule exploration
+//! without the dependency.
+//!
+//! Model: each logical "thread" is a scripted sequence of *steps*
+//! (closures over shared state). A **schedule** is one merge order of
+//! those sequences — `[0, 1, 0, 2, …]` means thread 0's next step, then
+//! thread 1's, then thread 0's again. The explorer runs the scripted
+//! steps *single-threaded* in schedule order, so every execution is
+//! perfectly reproducible: a failing schedule prints as a literal vector
+//! that replays the race forever.
+//!
+//! What this checks — and what it honestly does not: operations
+//! interleave at **API granularity** (one step = one call like
+//! `try_enqueue` or `alloc`), not at instruction granularity. That is
+//! the right level for the invariants DESIGN.md §16 cares about
+//! (reserve/rollback accounting, alloc/free/evict bookkeeping): those
+//! contracts are about *orderings of completed operations*, and the
+//! atomics inside each operation are separately exercised by the real
+//! multi-threaded chaos/soak tests. A loom-grade memory-model explorer
+//! is out of scope for an offline tree.
+//!
+//! Exploration is exhaustive when the merge-order count fits the given
+//! budget, otherwise a seeded sample (via [`crate::tensor::Rng`], so CI
+//! and local runs see the same schedules) that always includes the
+//! canonical corner schedules: round-robin and every "thread i runs
+//! first, alone" order.
+
+use crate::tensor::Rng;
+
+/// Number of distinct merge orders of sequences with the given lengths
+/// (the multinomial coefficient), saturating at `u128::MAX`.
+pub fn merge_order_count(counts: &[usize]) -> u128 {
+    // total! / prod(counts!) computed incrementally as C(n, k) products
+    // to stay in range for every realistic harness size.
+    let mut total: u128 = 1;
+    let mut placed: u128 = 0;
+    for &c in counts {
+        for i in 1..=c as u128 {
+            placed += 1;
+            total = total.saturating_mul(placed) / i;
+        }
+    }
+    total
+}
+
+/// All (or a seeded sample of) merge orders for per-thread step counts.
+///
+/// * exhaustive when [`merge_order_count`] ≤ `limit`;
+/// * otherwise `limit` seeded-random schedules plus the corner cases
+///   (round-robin, each thread sequentially first), deduplicated.
+pub fn interleavings(counts: &[usize], seed: u64, limit: usize) -> Vec<Vec<usize>> {
+    let total_steps: usize = counts.iter().sum();
+    if total_steps == 0 {
+        return vec![Vec::new()];
+    }
+    if merge_order_count(counts) <= limit as u128 {
+        let mut out = Vec::new();
+        let mut remaining = counts.to_vec();
+        let mut prefix = Vec::with_capacity(total_steps);
+        enumerate(&mut remaining, &mut prefix, total_steps, &mut out);
+        return out;
+    }
+    let mut out: Vec<Vec<usize>> = Vec::new();
+    // Corner schedules first: round-robin…
+    let mut rr = Vec::with_capacity(total_steps);
+    let mut left = counts.to_vec();
+    while rr.len() < total_steps {
+        for (t, l) in left.iter_mut().enumerate() {
+            if *l > 0 {
+                *l -= 1;
+                rr.push(t);
+            }
+        }
+    }
+    out.push(rr);
+    // …and "thread t first" sequential orders.
+    for first in 0..counts.len() {
+        let mut seq = Vec::with_capacity(total_steps);
+        seq.extend(std::iter::repeat_n(first, counts[first]));
+        for (t, &c) in counts.iter().enumerate() {
+            if t != first {
+                seq.extend(std::iter::repeat_n(t, c));
+            }
+        }
+        out.push(seq);
+    }
+    let mut rng = Rng::seed(seed);
+    while out.len() < limit + 1 + counts.len() {
+        let mut left = counts.to_vec();
+        let mut sched = Vec::with_capacity(total_steps);
+        for _ in 0..total_steps {
+            let live: Vec<usize> =
+                (0..left.len()).filter(|&t| left[t] > 0).collect();
+            let pick = live[rng.below(live.len())];
+            left[pick] -= 1;
+            sched.push(pick);
+        }
+        out.push(sched);
+    }
+    out.sort();
+    out.dedup();
+    out
+}
+
+fn enumerate(
+    remaining: &mut [usize],
+    prefix: &mut Vec<usize>,
+    total: usize,
+    out: &mut Vec<Vec<usize>>,
+) {
+    if prefix.len() == total {
+        out.push(prefix.clone());
+        return;
+    }
+    for t in 0..remaining.len() {
+        if remaining[t] == 0 {
+            continue;
+        }
+        remaining[t] -= 1;
+        prefix.push(t);
+        enumerate(remaining, prefix, total, out);
+        prefix.pop();
+        remaining[t] += 1;
+    }
+}
+
+/// A scripted thread: a named sequence of steps over shared state `S`.
+pub struct Script<S> {
+    pub name: &'static str,
+    pub steps: Vec<Box<dyn Fn(&mut S)>>,
+}
+
+impl<S> Script<S> {
+    pub fn new(name: &'static str) -> Script<S> {
+        Script { name, steps: Vec::new() }
+    }
+
+    /// Append one step. Steps must be re-runnable: the explorer replays
+    /// the whole script once per schedule against fresh state.
+    pub fn step(mut self, f: impl Fn(&mut S) + 'static) -> Script<S> {
+        self.steps.push(Box::new(f));
+        self
+    }
+}
+
+/// Run every schedule of `scripts` against fresh state, checking an
+/// invariant after **every step**. Panics (with the replayable schedule)
+/// on the first violation — the deterministic analogue of a loom model
+/// failure.
+///
+/// * `mk_state` builds the shared state once per schedule;
+/// * `invariant` returns `Err(why)` to fail the exploration;
+/// * `seed`/`limit` select the sampled schedules past the exhaustive
+///   budget (see [`interleavings`]).
+pub fn explore<S>(
+    scripts: &[Script<S>],
+    mk_state: impl Fn() -> S,
+    invariant: impl Fn(&S) -> Result<(), String>,
+    seed: u64,
+    limit: usize,
+) -> usize {
+    let counts: Vec<usize> = scripts.iter().map(|s| s.steps.len()).collect();
+    let schedules = interleavings(&counts, seed, limit);
+    let n = schedules.len();
+    for sched in &schedules {
+        let mut state = mk_state();
+        let mut cursor = vec![0usize; scripts.len()];
+        if let Err(why) = invariant(&state) {
+            panic!("interleave: invariant failed before any step: {why}");
+        }
+        for (pos, &t) in sched.iter().enumerate() {
+            let step = &scripts[t].steps[cursor[t]];
+            step(&mut state);
+            cursor[t] += 1;
+            if let Err(why) = invariant(&state) {
+                panic!(
+                    "interleave: invariant failed after step {pos} \
+                     ({} step {}) of schedule {sched:?}: {why}",
+                    scripts[t].name,
+                    cursor[t] - 1,
+                );
+            }
+        }
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_counts_are_multinomial() {
+        assert_eq!(merge_order_count(&[1, 1]), 2);
+        assert_eq!(merge_order_count(&[2, 2]), 6);
+        assert_eq!(merge_order_count(&[3, 3]), 20);
+        assert_eq!(merge_order_count(&[2, 2, 2]), 90);
+    }
+
+    #[test]
+    fn exhaustive_enumeration_is_complete_and_unique() {
+        let scheds = interleavings(&[2, 2], 1, 100);
+        assert_eq!(scheds.len(), 6);
+        let mut uniq = scheds.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 6);
+        for s in &scheds {
+            assert_eq!(s.iter().filter(|&&t| t == 0).count(), 2);
+            assert_eq!(s.iter().filter(|&&t| t == 1).count(), 2);
+        }
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_includes_corners() {
+        let a = interleavings(&[4, 4, 4], 7, 50);
+        let b = interleavings(&[4, 4, 4], 7, 50);
+        assert_eq!(a, b, "same seed must give the same schedules");
+        assert!(a.contains(&vec![0, 1, 2, 0, 1, 2, 0, 1, 2, 0, 1, 2]), "round-robin present");
+        assert!(a.contains(&vec![0, 0, 0, 0, 1, 1, 1, 1, 2, 2, 2, 2]), "sequential present");
+        assert!(a.contains(&vec![1, 1, 1, 1, 0, 0, 0, 0, 2, 2, 2, 2]), "thread-1-first present");
+    }
+
+    #[test]
+    fn explore_runs_every_step_in_schedule_order() {
+        let scripts = vec![
+            Script::<Vec<usize>>::new("a").step(|v| v.push(0)).step(|v| v.push(0)),
+            Script::<Vec<usize>>::new("b").step(|v| v.push(1)),
+        ];
+        let n = explore(&scripts, Vec::new, |_| Ok(()), 1, 100);
+        assert_eq!(n, 3, "C(3,1) merge orders of [2,1]");
+    }
+
+    #[test]
+    #[should_panic(expected = "invariant failed")]
+    fn explore_panics_with_the_failing_schedule() {
+        let scripts = vec![
+            Script::<u32>::new("inc").step(|v| *v += 1).step(|v| *v += 1),
+            Script::<u32>::new("dbl").step(|v| *v *= 2),
+        ];
+        // Fails only under some orders (e.g. dbl after both incs).
+        explore(
+            &scripts,
+            || 0,
+            |v| if *v > 3 { Err(format!("v = {v}")) } else { Ok(()) },
+            1,
+            100,
+        );
+    }
+}

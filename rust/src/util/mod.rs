@@ -1,9 +1,10 @@
 //! Offline-image substrates: CLI parsing, thread pool, mini property-test
-//! framework, JSON (the crate cache has no clap/tokio/proptest/criterion/
-//! serde).
+//! framework, JSON, deterministic interleaving exploration (the crate
+//! cache has no clap/tokio/proptest/criterion/serde/loom).
 
 pub mod bench;
 pub mod cli;
+pub mod interleave;
 pub mod json;
 pub mod proptest;
 pub mod threadpool;

@@ -1,0 +1,191 @@
+//! Fixture tests for the `hif4 audit` engine (DESIGN.md §16): every
+//! rule R1–R5 fires on a minimal positive fixture and stays silent on
+//! the remediated twin; the allow protocol round-trips (allow with a
+//! reason suppresses, allow without a reason is a finding, a stale
+//! allow is a finding, a typo'd id suppresses nothing); and the shipped
+//! source tree itself audits clean — the self-audit that keeps the tool
+//! honest.
+
+use hif4::audit::{audit_source, run_audit, Finding};
+
+fn rules(findings: &[Finding]) -> Vec<(&'static str, &'static str)> {
+    findings.iter().map(|f| (f.rule, f.id)).collect()
+}
+
+// -------------------------------------------------------------- R1 --
+
+#[test]
+fn r1_unsafe_without_safety_comment_fires() {
+    let src = "pub fn deref(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+    let f = audit_source("dotprod/x.rs", src);
+    assert_eq!(rules(&f), vec![("R1", "safety")]);
+    assert_eq!(f[0].line, 2);
+}
+
+#[test]
+fn r1_adjacent_safety_comment_satisfies() {
+    let src = "pub fn deref(p: *const u8) -> u8 {\n    \
+               // SAFETY: caller guarantees p is valid for reads.\n    \
+               unsafe { *p }\n}\n";
+    assert!(audit_source("dotprod/x.rs", src).is_empty());
+}
+
+#[test]
+fn r1_rustdoc_safety_section_satisfies() {
+    let src = "/// Reads a raw pointer.\n///\n/// # Safety\n/// `p` must be valid.\n\
+               pub unsafe fn deref(p: *const u8) -> u8 {\n    *p\n}\n";
+    assert!(audit_source("dotprod/x.rs", src).is_empty());
+}
+
+// -------------------------------------------------------------- R2 --
+
+#[test]
+fn r2_unwrap_in_serving_tier_fires() {
+    let src = "pub fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n";
+    assert_eq!(rules(&audit_source("server/x.rs", src)), vec![("R2", "panic")]);
+    // The same code outside the serving tier is not R2's business.
+    assert!(audit_source("eval/x.rs", src).is_empty());
+}
+
+#[test]
+fn r2_scalar_index_fires_but_range_slicing_is_exempt() {
+    let scalar = "pub fn f(v: &[u32]) -> u32 {\n    v[0]\n}\n";
+    assert_eq!(rules(&audit_source("runtime/x.rs", scalar)), vec![("R2", "index")]);
+    let range = "pub fn f(v: &[u32]) -> &[u32] {\n    &v[1..3]\n}\n";
+    assert!(audit_source("runtime/x.rs", range).is_empty());
+}
+
+#[test]
+fn r2_raw_lock_fires_and_lock_recover_passes() {
+    let raw = "pub fn f(m: &std::sync::Mutex<u32>) -> u32 {\n    *m.lock().unwrap()\n}\n";
+    let found = rules(&audit_source("server/x.rs", raw));
+    assert!(found.contains(&("R2", "lock")), "raw lock must fire: {found:?}");
+    assert!(found.contains(&("R2", "panic")), "the unwrap fires too: {found:?}");
+    let ok = "pub fn f(m: &std::sync::Mutex<u32>) -> u32 {\n    *crate::util::lock_recover(m)\n}\n";
+    assert!(audit_source("server/x.rs", ok).is_empty());
+}
+
+#[test]
+fn r2_is_suspended_inside_cfg_test() {
+    let src = "#[cfg(test)]\nmod tests {\n    fn f(x: Option<u32>) -> u32 {\n        \
+               x.unwrap()\n    }\n}\n";
+    assert!(audit_source("server/x.rs", src).is_empty());
+}
+
+// -------------------------------------------------------------- R3 --
+
+#[test]
+fn r3_hash_collections_fire_in_bit_exact_modules() {
+    let src = "use std::collections::HashMap;\n";
+    assert_eq!(rules(&audit_source("model/x.rs", src)), vec![("R3", "hash-iter")]);
+    // Outside the determinism scope the same import is fine.
+    assert!(audit_source("server/x.rs", src).is_empty());
+}
+
+#[test]
+fn r3_wall_clock_types_fire() {
+    let src = "pub fn f() -> std::time::Instant {\n    std::time::Instant::now()\n}\n";
+    let found = rules(&audit_source("formats/x.rs", src));
+    assert!(found.iter().all(|&r| r == ("R3", "time")), "only time findings: {found:?}");
+    assert!(!found.is_empty());
+}
+
+#[test]
+fn r3_narrowing_cast_fires_only_when_operand_is_visibly_f64() {
+    let narrowing = "pub fn f(a: f64) -> f32 {\n    (a * 0.5) as f32\n}\n";
+    assert_eq!(rules(&audit_source("dotprod/x.rs", narrowing)), vec![("R3", "narrowing")]);
+    // An integer-to-f32 cast is widening in spirit and must not fire.
+    let widening = "pub fn f(n: usize) -> f32 {\n    (n + 1) as f32\n}\n";
+    assert!(audit_source("dotprod/x.rs", widening).is_empty());
+}
+
+// -------------------------------------------------------------- R4 --
+
+#[test]
+fn r4_widening_dot_without_bound_comment_fires() {
+    let src = "pub fn dot(a: &[i8], b: &[i8]) -> i32 {\n    \
+               a.iter().zip(b).map(|(x, y)| *x as i32 * *y as i32).sum()\n}\n";
+    assert_eq!(rules(&audit_source("quant/x.rs", src)), vec![("R4", "bound")]);
+}
+
+#[test]
+fn r4_bound_comment_referencing_the_lane_cap_satisfies() {
+    let src = "// BOUND: callers cap lanes at IDOT_I32_SAFE_LANES, so the sum fits i32.\n\
+               pub fn dot(a: &[i8], b: &[i8]) -> i32 {\n    \
+               a.iter().zip(b).map(|(x, y)| *x as i32 * *y as i32).sum()\n}\n";
+    assert!(audit_source("quant/x.rs", src).is_empty());
+}
+
+// -------------------------------------------------------------- R5 --
+
+#[test]
+fn r5_env_read_fires_unless_site_is_registered() {
+    let src = "pub fn f() -> bool {\n    std::env::var(\"HIF4_THREADS\").is_ok()\n}\n";
+    // Registered (file, var) pair: the thread-count knob in its home.
+    assert!(audit_source("util/threadpool.rs", src).is_empty());
+    // Same read anywhere else is an unregistered knob.
+    let f = audit_source("model/x.rs", src);
+    assert_eq!(rules(&f), vec![("R5", "env")]);
+    assert!(f[0].message.contains("HIF4_THREADS"), "names the variable: {}", f[0].message);
+}
+
+// --------------------------------------------------- allow protocol --
+
+#[test]
+fn allow_with_reason_suppresses_the_finding() {
+    let src = "pub fn f(x: Option<u32>) -> u32 {\n    \
+               // audit:allow(panic) -- x is Some by construction at every call site.\n    \
+               x.unwrap()\n}\n";
+    assert!(audit_source("server/x.rs", src).is_empty());
+}
+
+#[test]
+fn allow_without_reason_is_itself_a_finding() {
+    let src = "pub fn f(x: Option<u32>) -> u32 {\n    // audit:allow(panic)\n    x.unwrap()\n}\n";
+    let f = audit_source("server/x.rs", src);
+    assert_eq!(rules(&f), vec![("allow", "panic")]);
+    assert!(f[0].message.contains("without a"), "demands a reason: {}", f[0].message);
+}
+
+#[test]
+fn stale_allow_is_itself_a_finding() {
+    let src = "// audit:allow(panic) -- legacy shim, since removed.\npub fn f() {}\n";
+    let f = audit_source("server/x.rs", src);
+    assert_eq!(rules(&f), vec![("allow", "panic")]);
+    assert!(f[0].message.contains("stale"), "flags the dead allow: {}", f[0].message);
+}
+
+#[test]
+fn typoed_allow_id_suppresses_nothing() {
+    let src = "pub fn f(x: Option<u32>) -> u32 {\n    \
+               // audit:allow(panics) -- typo'd id must not register.\n    x.unwrap()\n}\n";
+    // The unknown id is ignored: the real finding still fires, and no
+    // stale-allow finding appears for the typo.
+    assert_eq!(rules(&audit_source("server/x.rs", src)), vec![("R2", "panic")]);
+}
+
+#[test]
+fn allow_only_covers_its_own_id() {
+    let src = "pub fn f(m: &std::sync::Mutex<u32>) -> u32 {\n    \
+               // audit:allow(panic) -- poisoning is unreachable here.\n    \
+               *m.lock().unwrap()\n}\n";
+    // The panic allow eats the unwrap but not the raw-lock finding.
+    let found = rules(&audit_source("server/x.rs", src));
+    assert_eq!(found, vec![("R2", "lock")]);
+}
+
+// -------------------------------------------------------- self-audit --
+
+#[test]
+fn shipped_source_tree_audits_clean() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let report = run_audit(&root).expect("audit over src/ runs");
+    assert!(report.files_scanned >= 50, "expected the full tree, got {}", report.files_scanned);
+    assert!(
+        report.clean(),
+        "shipped tree must carry zero findings and zero stale allows:\n{}",
+        report.render(true)
+    );
+    let json = report.to_json().render();
+    assert!(json.contains("\"clean\""), "report JSON carries the clean flag: {json}");
+}

@@ -1,0 +1,356 @@
+//! Deterministic race exploration over the two serving-tier allocators
+//! (DESIGN.md §16): every merge order of scripted client/allocator
+//! threads runs against fresh state, with a sequential reference model
+//! checked after **every step**. A violated invariant panics with the
+//! literal schedule, which replays the race forever.
+//!
+//! Race 1 — [`AdmissionGate`] reserve/rollback: interleaved
+//! `try_enqueue`/`dequeued`/`release_kv` must keep the gate's counters
+//! equal to a step-at-a-time sequential model, including the queue-slot
+//! rollback when the KV budget sheds a request that already took a slot.
+//!
+//! Race 2 — [`PagePool`] alloc/free/evict vs prefix pins: allocation
+//! pressure at the page cap must evict only unpinned cached prefixes,
+//! keep the live-page accounting exact through freelist hits, fresh
+//! mints, evictions and shared releases, and never disturb the bytes of
+//! a page a reader has pinned.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use hif4::model::kv::KvCacheType;
+use hif4::model::pages::{KvPage, PagePool, PageShape};
+use hif4::server::batcher::{AdmissionGate, Shed};
+use hif4::util::interleave::{explore, Script};
+
+// ---------------------------------------------------------------------
+// Race 1: AdmissionGate reserve / rollback vs a sequential model.
+// ---------------------------------------------------------------------
+
+const MAX_QUEUE: usize = 2;
+const KV_BUDGET: usize = 10;
+/// Per-client worst-case KV needs: two clients big enough that both
+/// cannot hold reservations at once (6 + 6 > 10 forces a KvBudget shed
+/// with a queue-slot rollback), one small enough to squeeze in beside
+/// either (6 + 3 ≤ 10) and fill the queue for a QueueFull shed.
+const NEEDS: [usize; 3] = [6, 6, 3];
+
+struct GateWorld {
+    gate: AdmissionGate,
+    /// Sequential model of the gate's two counters.
+    m_queued: usize,
+    m_reserved: usize,
+    /// Per-client reservation while admitted-and-unreleased.
+    got: [Option<usize>; 3],
+    /// First divergence between the gate and the model, reported by the
+    /// invariant so the explorer prints the schedule that produced it.
+    mismatch: Option<String>,
+}
+
+fn gate_client(
+    t: usize,
+    sheds_queue: &'static AtomicUsize,
+    sheds_kv: &'static AtomicUsize,
+) -> Script<GateWorld> {
+    Script::new(["client-0", "client-1", "client-2"][t])
+        .step(move |w: &mut GateWorld| {
+            // Predict from the model *before* calling the gate: the gate
+            // checks the queue cap first, then the KV budget.
+            let queue_ok = w.m_queued < MAX_QUEUE;
+            let kv_ok = w.m_reserved + NEEDS[t] <= KV_BUDGET;
+            match w.gate.try_enqueue(NEEDS[t]) {
+                Ok(r) => {
+                    if !(queue_ok && kv_ok) || r != NEEDS[t] {
+                        w.mismatch = Some(format!(
+                            "client {t} admitted ({r} reserved) but model \
+                             said queue_ok={queue_ok} kv_ok={kv_ok}"
+                        ));
+                        return;
+                    }
+                    w.m_queued += 1;
+                    w.m_reserved += r;
+                    w.got[t] = Some(r);
+                }
+                Err(Shed::QueueFull) => {
+                    if queue_ok {
+                        w.mismatch =
+                            Some(format!("client {t} shed QueueFull at depth {}", w.m_queued));
+                    }
+                    sheds_queue.fetch_add(1, Ordering::SeqCst);
+                }
+                Err(Shed::KvBudget) => {
+                    if !queue_ok || kv_ok {
+                        w.mismatch = Some(format!(
+                            "client {t} shed KvBudget (reserved {}) but model \
+                             said queue_ok={queue_ok} kv_ok={kv_ok}",
+                            w.m_reserved
+                        ));
+                    }
+                    sheds_kv.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+        })
+        .step(move |w: &mut GateWorld| {
+            // A worker picked the admitted request up.
+            if w.got[t].is_some() {
+                w.gate.dequeued();
+                w.m_queued -= 1;
+            }
+        })
+        .step(move |w: &mut GateWorld| {
+            // The request reached a terminal outcome: release the pages.
+            if let Some(r) = w.got[t].take() {
+                w.gate.release_kv(r);
+                w.m_reserved -= r;
+            }
+        })
+}
+
+#[test]
+fn admission_gate_matches_sequential_model_under_all_interleavings() {
+    static SHEDS_QUEUE: AtomicUsize = AtomicUsize::new(0);
+    static SHEDS_KV: AtomicUsize = AtomicUsize::new(0);
+    let scripts = vec![
+        gate_client(0, &SHEDS_QUEUE, &SHEDS_KV),
+        gate_client(1, &SHEDS_QUEUE, &SHEDS_KV),
+        gate_client(2, &SHEDS_QUEUE, &SHEDS_KV),
+    ];
+    let explored = explore(
+        &scripts,
+        || GateWorld {
+            gate: AdmissionGate::new(MAX_QUEUE, KV_BUDGET),
+            m_queued: 0,
+            m_reserved: 0,
+            got: [None; 3],
+            mismatch: None,
+        },
+        |w| {
+            if let Some(m) = &w.mismatch {
+                return Err(m.clone());
+            }
+            if w.gate.queued() != w.m_queued {
+                return Err(format!(
+                    "gate queued {} != model {} (rollback lost?)",
+                    w.gate.queued(),
+                    w.m_queued
+                ));
+            }
+            if w.gate.kv_reserved() != w.m_reserved {
+                return Err(format!(
+                    "gate kv_reserved {} != model {}",
+                    w.gate.kv_reserved(),
+                    w.m_reserved
+                ));
+            }
+            if w.m_reserved > KV_BUDGET {
+                return Err(format!("reserved {} exceeds budget {KV_BUDGET}", w.m_reserved));
+            }
+            if w.m_queued > MAX_QUEUE {
+                return Err(format!("queued {} exceeds cap {MAX_QUEUE}", w.m_queued));
+            }
+            Ok(())
+        },
+        11,
+        2000,
+    );
+    // 3 scripts x 3 steps: the full multinomial 9!/(3!3!3!) = 1680 merge
+    // orders fit the budget, so exploration was exhaustive.
+    assert_eq!(explored, 1680, "expected exhaustive exploration");
+    // The schedule set must actually drive both shed paths — otherwise
+    // the rollback equality above was never load-bearing.
+    assert!(SHEDS_QUEUE.load(Ordering::SeqCst) > 0, "no schedule produced a QueueFull shed");
+    assert!(SHEDS_KV.load(Ordering::SeqCst) > 0, "no schedule produced a KvBudget rollback");
+}
+
+// ---------------------------------------------------------------------
+// Race 2: PagePool alloc/free/evict vs prefix-cache pins.
+// ---------------------------------------------------------------------
+
+const KVD: usize = 4;
+const PAGE_ROWS: usize = 2;
+const MAX_PAGES: usize = 4;
+/// Two whole-chunk prefixes registered in the trie, plus a trailing
+/// token so `lookup_prefix` (which covers at most `len - 1` tokens) can
+/// reach both chunks.
+const QUERY: [usize; 5] = [11, 12, 13, 14, 99];
+
+/// The known-good bytes of cached chunk `c`: rows are filled with a
+/// value unique per (chunk, row, column) so any clear-and-reuse of a
+/// pinned page is caught byte-for-byte.
+fn chunk_data(c: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(PAGE_ROWS * KVD);
+    for r in 0..PAGE_ROWS {
+        for j in 0..KVD {
+            out.push((c * 100 + r * 10 + j) as f32);
+        }
+    }
+    out
+}
+
+struct PoolWorld {
+    pool: PagePool,
+    /// Private pages the allocator script currently holds.
+    held: Vec<KvPage>,
+    /// Shared pages the reader script has pinned, tagged with the chunk
+    /// index whose bytes they must keep.
+    pinned: Vec<(usize, Arc<KvPage>)>,
+    /// Sequential model of `live_pages()`.
+    m_live: usize,
+    mismatch: Option<String>,
+}
+
+impl PoolWorld {
+    fn new() -> PoolWorld {
+        let shape = PageShape::new(KvCacheType::F32, KVD, PAGE_ROWS);
+        let pool = PagePool::new(shape, MAX_PAGES, true);
+        let mut bundles = Vec::new();
+        for c in 0..2 {
+            let mut page = pool.alloc().expect("setup alloc under cap");
+            let data = chunk_data(c);
+            for r in 0..PAGE_ROWS {
+                page.append_row(&shape, &data[r * KVD..(r + 1) * KVD]);
+            }
+            bundles.push(vec![Arc::new(page)]);
+        }
+        pool.register_prefix(&QUERY[..4], bundles);
+        let m_live = pool.live_pages();
+        PoolWorld { pool, held: Vec::new(), pinned: Vec::new(), m_live, mismatch: None }
+    }
+
+    /// One allocator step: take a page, updating the live model by what
+    /// the pool observably did (eviction reuses a live page; freelist
+    /// hits and fresh mints add one).
+    fn alloc_step(&mut self, exhausted: &AtomicUsize, evicted: &AtomicUsize) {
+        let ev0 = self.pool.prefix_evictions();
+        match self.pool.alloc() {
+            Ok(page) => {
+                if self.pool.prefix_evictions() == ev0 {
+                    self.m_live += 1;
+                } else {
+                    evicted.fetch_add(1, Ordering::SeqCst);
+                }
+                self.held.push(page);
+            }
+            Err(_) => {
+                exhausted.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+    }
+}
+
+#[test]
+fn page_pool_eviction_respects_pins_under_all_interleavings() {
+    static EXHAUSTED: AtomicUsize = AtomicUsize::new(0);
+    static EVICTED: AtomicUsize = AtomicUsize::new(0);
+    static FULL_HITS: AtomicUsize = AtomicUsize::new(0);
+    static PARTIAL_HITS: AtomicUsize = AtomicUsize::new(0);
+
+    let allocator = Script::new("allocator")
+        .step(|w: &mut PoolWorld| w.alloc_step(&EXHAUSTED, &EVICTED))
+        .step(|w: &mut PoolWorld| w.alloc_step(&EXHAUSTED, &EVICTED))
+        .step(|w: &mut PoolWorld| w.alloc_step(&EXHAUSTED, &EVICTED))
+        .step(|w: &mut PoolWorld| {
+            for page in w.held.drain(..) {
+                w.pool.recycle(page);
+                w.m_live -= 1;
+            }
+        });
+
+    let reader = Script::new("reader")
+        .step(|w: &mut PoolWorld| {
+            // Pin whatever prefix is still cached. Depending on how many
+            // allocator steps ran first, this sees both chunks or — after
+            // an eviction — only the surviving root chunk.
+            if let Some(hit) = w.pool.lookup_prefix(&QUERY) {
+                if hit.cow.is_some() {
+                    w.mismatch = Some("unexpected CoW seed for a whole-chunk query".into());
+                }
+                if hit.bundles.len() == 2 {
+                    FULL_HITS.fetch_add(1, Ordering::SeqCst);
+                } else {
+                    PARTIAL_HITS.fetch_add(1, Ordering::SeqCst);
+                }
+                for (c, bundle) in hit.bundles.into_iter().enumerate() {
+                    for arc in bundle {
+                        w.pinned.push((c, arc));
+                    }
+                }
+            } else {
+                PARTIAL_HITS.fetch_add(1, Ordering::SeqCst);
+            }
+        })
+        .step(|w: &mut PoolWorld| {
+            // A second transient lookup: raises sharing degree, then
+            // releases immediately. Shared pages must not be recycled.
+            if let Some(hit) = w.pool.lookup_prefix(&QUERY) {
+                for bundle in hit.bundles {
+                    for arc in bundle {
+                        let last = Arc::strong_count(&arc) == 1;
+                        w.pool.release(arc);
+                        if last {
+                            w.m_live -= 1;
+                        }
+                    }
+                }
+            }
+        })
+        .step(|w: &mut PoolWorld| {
+            // Drop the pins; only a last holder actually recycles.
+            for (_, arc) in w.pinned.drain(..) {
+                let last = Arc::strong_count(&arc) == 1;
+                w.pool.release(arc);
+                if last {
+                    w.m_live -= 1;
+                }
+            }
+        });
+
+    let explored = explore(
+        &[allocator, reader],
+        PoolWorld::new,
+        |w| {
+            if let Some(m) = &w.mismatch {
+                return Err(m.clone());
+            }
+            let live = w.pool.live_pages();
+            if live != w.m_live {
+                return Err(format!("pool live {live} != model {} (accounting leak)", w.m_live));
+            }
+            if live > MAX_PAGES + w.pool.overflow_allocs() {
+                return Err(format!(
+                    "live {live} exceeds cap {MAX_PAGES} + overflow {}",
+                    w.pool.overflow_allocs()
+                ));
+            }
+            // Nodes are only removed by eviction, so the two registered
+            // chunks are always split between the trie and the eviction
+            // counter.
+            if w.pool.prefix_nodes() + w.pool.prefix_evictions() != 2 {
+                return Err(format!(
+                    "trie accounting broken: {} nodes + {} evictions != 2",
+                    w.pool.prefix_nodes(),
+                    w.pool.prefix_evictions()
+                ));
+            }
+            // Pinned pages keep their bytes no matter what the allocator
+            // does — eviction must skip referenced leaves.
+            for (c, arc) in &w.pinned {
+                if arc.f32_data() != chunk_data(*c).as_slice() {
+                    return Err(format!("pinned chunk {c} page bytes were disturbed"));
+                }
+            }
+            Ok(())
+        },
+        13,
+        200,
+    );
+    // 4 + 3 steps: C(7, 3) = 35 merge orders, exhaustively explored.
+    assert_eq!(explored, 35, "expected exhaustive exploration");
+    // The matrix of outcomes proves the schedules drive the real races:
+    // allocation blocked by pins, eviction of an unpinned chunk, and a
+    // full-prefix hit before any eviction.
+    assert!(EXHAUSTED.load(Ordering::SeqCst) > 0, "no schedule hit PagesExhausted under pins");
+    assert!(EVICTED.load(Ordering::SeqCst) > 0, "no schedule evicted an unpinned prefix");
+    assert!(FULL_HITS.load(Ordering::SeqCst) > 0, "no schedule saw the full two-chunk hit");
+    assert!(PARTIAL_HITS.load(Ordering::SeqCst) > 0, "no schedule saw a post-eviction lookup");
+}
